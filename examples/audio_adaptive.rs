@@ -1,0 +1,61 @@
+//! Audio-domain example: keyword-spotting analogue (MobileNetLite on
+//! synthetic spectrograms) with the *adaptive cluster controller* under
+//! the microscope — logs the representation-quality score and every C
+//! growth event; optionally writes the Figure-2-style CSV.
+//!
+//!     cargo run --release --example audio_adaptive [out.csv]
+
+use anyhow::Result;
+
+use fedcompress::config::{FedConfig, Strategy};
+use fedcompress::coordinator::run_federated;
+use fedcompress::exp::figure2;
+use fedcompress::runtime::Engine;
+use fedcompress::util::logging;
+use fedcompress::util::stats::pearson;
+
+fn main() -> Result<()> {
+    logging::init();
+    let out = std::env::args().nth(1);
+
+    let engine = Engine::load_default()?;
+    let mut cfg = FedConfig::quick("speechcommands");
+    cfg.rounds = 10;
+    cfg.validate()?;
+
+    println!("== audio_adaptive: synthetic SpeechCommands, dynamic C ==");
+    let result = run_federated(&engine, &cfg, Strategy::FedCompress)?;
+
+    let mut last_c = 0usize;
+    println!("\nround  score E   val acc   C");
+    for r in &result.rounds {
+        let grew = if r.clusters > last_c && last_c != 0 {
+            "  <- controller grew C"
+        } else {
+            ""
+        };
+        println!(
+            "{:>5}  {:>7.3}  {:>7.4}  {:>2}{}",
+            r.round, r.score, r.accuracy, r.clusters, grew
+        );
+        last_c = r.clusters;
+    }
+
+    let scores: Vec<f64> = result.rounds.iter().map(|r| r.score).collect();
+    let accs: Vec<f64> = result.rounds.iter().map(|r| r.accuracy).collect();
+    let r = pearson(&scores, &accs);
+    println!("\nscore <-> accuracy Pearson r = {r:.3}");
+
+    if let Some(path) = out {
+        let series = figure2::Figure2Series {
+            dataset: cfg.dataset.clone(),
+            rounds: (0..result.rounds.len()).collect(),
+            score: scores,
+            accuracy: accs,
+            correlation: r,
+        };
+        figure2::write_csv(&series, std::path::Path::new(&path))?;
+        println!("wrote {path}");
+    }
+    Ok(())
+}

@@ -1,0 +1,48 @@
+//! Quickstart: the smallest end-to-end FedCompress run.
+//!
+//! Loads the AOT artifacts, builds a tiny synthetic federated
+//! environment, trains a few rounds with the full pipeline (client-side
+//! weight clustering, snapped uploads, server-side distillation,
+//! dynamic cluster count) and prints the communication ledger.
+//!
+//!     make artifacts && cargo run --release --example quickstart
+
+use anyhow::Result;
+
+use fedcompress::compression::accounting::Direction;
+use fedcompress::config::{FedConfig, Strategy};
+use fedcompress::coordinator::run_federated;
+use fedcompress::runtime::Engine;
+use fedcompress::util::logging;
+
+fn main() -> Result<()> {
+    logging::init();
+    let engine = Engine::load_default()?;
+
+    let mut cfg = FedConfig::quick("cifar10");
+    cfg.rounds = 6;
+    cfg.clients = 4;
+    cfg.validate()?;
+
+    println!("== FedCompress quickstart: {} ==", cfg.dataset);
+    let result = run_federated(&engine, &cfg, Strategy::FedCompress)?;
+
+    println!("\nround  acc     E-score  C   up(B)    down(B)");
+    for r in &result.rounds {
+        println!(
+            "{:>4}   {:.4}  {:>6.2}  {:>2}  {:>8}  {:>8}",
+            r.round, r.accuracy, r.score, r.clusters, r.up_bytes, r.down_bytes
+        );
+    }
+    println!(
+        "\nfinal accuracy     : {:.4}\nmodel compression  : {:.2}x ({} B -> {} B)\nbytes upstream     : {}\nbytes downstream   : {}\ntotal communication: {} B",
+        result.final_accuracy,
+        result.mcr(),
+        result.dense_model_bytes,
+        result.final_model_bytes,
+        result.ledger.bytes_in(Direction::Up),
+        result.ledger.bytes_in(Direction::Down),
+        result.total_bytes(),
+    );
+    Ok(())
+}

@@ -1,0 +1,188 @@
+"""AOT pipeline: lower every entry point of every dataset config to HLO
+*text* and emit the manifest + init parameters + golden vectors the rust
+runtime consumes. Run once by `make artifacts`; python never runs on the
+training path afterwards.
+
+Interchange is HLO text, NOT `.serialize()`: jax >= 0.5 emits protos
+with 64-bit instruction ids that the image's xla_extension 0.5.1
+rejects (`proto.id() <= INT_MAX`); the text parser reassigns ids and
+round-trips cleanly (see /opt/xla-example/README.md).
+
+Outputs under --out (default ../artifacts):
+  manifest.json                     — shapes, layouts, artifact index
+  <ds>.<entry>.hlo.txt              — 5 datasets x 5 entry points
+  init/<ds>.theta.bin               — seeded He-init flat params (f32 LE)
+  golden/<ds>/<entry>.{in,out}N.bin — golden vectors for runtime tests
+  golden/<ds>/goldens.json          — file index + scalar metadata
+"""
+
+import argparse
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from . import model
+
+TAU = 0.05
+BLOCK = 2048
+GOLDEN_SEED = 1234
+
+
+def to_hlo_text(fn, example_args):
+    lowered = jax.jit(fn).lower(*example_args)
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def np_dtype_name(a):
+    return {"float32": "f32", "int32": "i32"}[str(a.dtype)]
+
+
+def write_bin(path, arr):
+    np.asarray(arr).tofile(path)
+
+
+def golden_inputs(entry, sig_args, cfg, layout, rng):
+    """Deterministic concrete inputs matching an entry's signature."""
+    theta = np.asarray(layout.init_flat(GOLDEN_SEED))
+    mu = np.linspace(-0.5, 0.5, model.C_MAX, dtype=np.float32)
+    mask = np.zeros(model.C_MAX, np.float32)
+    mask[:16] = 1.0
+
+    out = []
+    for spec in sig_args:
+        shape, dtype = spec.shape, spec.dtype
+        if dtype == jnp.int32:
+            out.append(
+                rng.integers(0, cfg.num_classes, size=shape).astype(np.int32)
+            )
+        elif shape == (layout.total,):
+            # theta-like; perturb per occurrence so teacher != student
+            out.append(theta + 0.01 * len(out) * np.ones_like(theta))
+        elif shape == (model.C_MAX,):
+            # mu arrives before mask in every entry signature
+            seen_cmax = sum(
+                1 for a in out
+                if np.shape(a) == (model.C_MAX,) and np.asarray(a).dtype == np.float32
+            )
+            out.append(mu if seen_cmax == 0 else mask)
+        elif shape == ():
+            out.append(np.float32(0.05))
+        else:
+            out.append(rng.normal(size=shape).astype(np.float32))
+    return out
+
+
+def build_dataset(cfg, out_dir):
+    ep = model.build_entry_points(cfg, tau=TAU, block=BLOCK)
+    layout = ep["layout"]
+    rng = np.random.default_rng(GOLDEN_SEED)
+
+    init_dir = os.path.join(out_dir, "init")
+    gold_dir = os.path.join(out_dir, "golden", cfg.name)
+    os.makedirs(init_dir, exist_ok=True)
+    os.makedirs(gold_dir, exist_ok=True)
+
+    write_bin(
+        os.path.join(init_dir, f"{cfg.name}.theta.bin"), layout.init_flat(0)
+    )
+
+    artifacts = {}
+    signatures = {}
+    goldens = {}
+    for name, (fn, args) in ep["entries"].items():
+        hlo = to_hlo_text(fn, args)
+        fname = f"{cfg.name}.{name}.hlo.txt"
+        with open(os.path.join(out_dir, fname), "w") as f:
+            f.write(hlo)
+        artifacts[name] = fname
+
+        # golden vectors: run the jitted fn on deterministic inputs
+        concrete = golden_inputs(name, args, cfg, layout, rng)
+        results = jax.jit(fn)(*[jnp.asarray(a) for a in concrete])
+        if not isinstance(results, tuple):
+            results = (results,)
+
+        in_files, out_files = [], []
+        for i, a in enumerate(concrete):
+            f = f"{name}.in{i}.bin"
+            write_bin(os.path.join(gold_dir, f), a)
+            in_files.append(
+                {"file": f, "shape": list(np.shape(a)), "dtype": np_dtype_name(np.asarray(a))}
+            )
+        for i, a in enumerate(results):
+            a = np.asarray(a)
+            f = f"{name}.out{i}.bin"
+            write_bin(os.path.join(gold_dir, f), a)
+            out_files.append(
+                {"file": f, "shape": list(a.shape), "dtype": np_dtype_name(a)}
+            )
+        goldens[name] = {"inputs": in_files, "outputs": out_files}
+
+        signatures[name] = {
+            "inputs": [
+                {"shape": list(s.shape), "dtype": np_dtype_name(np.zeros(0, s.dtype))}
+                for s in args
+            ],
+            "outputs": [o["shape"] for o in out_files],
+        }
+        print(f"  {cfg.name}.{name}: {len(hlo)} chars hlo")
+
+    with open(os.path.join(gold_dir, "goldens.json"), "w") as f:
+        json.dump(goldens, f, indent=1)
+
+    return {
+        "domain": cfg.domain,
+        "num_classes": cfg.num_classes,
+        "input_shape": list(cfg.input_shape),
+        "emb_dim": cfg.emb_dim,
+        "param_count": layout.total,
+        "layers": layout.describe(),
+        "artifacts": artifacts,
+        "entry_signatures": signatures,
+        "init_theta": f"init/{cfg.name}.theta.bin",
+        "golden_dir": f"golden/{cfg.name}",
+    }
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="../artifacts")
+    ap.add_argument(
+        "--datasets",
+        default="",
+        help="comma-separated subset (default: all five)",
+    )
+    args = ap.parse_args()
+    os.makedirs(args.out, exist_ok=True)
+
+    wanted = set(filter(None, args.datasets.split(",")))
+    manifest = {
+        "c_max": model.C_MAX,
+        "batch": model.BATCH,
+        "eval_batch": model.EVAL_BATCH,
+        "tau": TAU,
+        "block": BLOCK,
+        "golden_seed": GOLDEN_SEED,
+        "datasets": {},
+    }
+    for cfg in model.DATASETS:
+        if wanted and cfg.name not in wanted:
+            continue
+        print(f"[aot] building {cfg.name} ({cfg.domain})")
+        manifest["datasets"][cfg.name] = build_dataset(cfg, args.out)
+
+    with open(os.path.join(args.out, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=1)
+    print(f"[aot] manifest written: {len(manifest['datasets'])} datasets")
+
+
+if __name__ == "__main__":
+    main()

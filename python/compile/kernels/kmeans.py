@@ -1,0 +1,95 @@
+"""Layer-1 Pallas kernel: hard nearest-centroid assignment ("snap").
+
+Used by the `snap` AOT entry point: quantize the flat parameter vector
+to its nearest active centroid and emit the index stream the rust codec
+bit-packs for the wire. Also emits per-cluster sums/counts so a Lloyd
+refinement step can run without re-touching the weights (exercised by
+tests and the server-side centroid refresh).
+
+Same blocking story as wc_loss.py: parameter axis tiled to VMEM-sized
+blocks, the centroid table broadcast to every block, accumulator
+outputs revisited across the grid.
+"""
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+HARD_BIG = 1e30
+DEFAULT_BLOCK = 2048
+
+
+def _pad_to(x, multiple):
+    rem = (-x.shape[0]) % multiple
+    if rem:
+        x = jnp.pad(x, (0, rem))
+    return x
+
+
+def _assign_kernel(
+    theta_ref, mu_ref, mask_ref, pvalid_ref,
+    snapped_ref, idx_ref, sums_ref, counts_ref,
+):
+    pid = pl.program_id(0)
+    block = theta_ref.shape[0]
+
+    theta = theta_ref[...]
+    mu = mu_ref[...]
+    mask = mask_ref[...]
+    p_valid = pvalid_ref[0]
+
+    diff = theta[:, None] - mu[None, :]
+    d = diff * diff + (1.0 - mask)[None, :] * HARD_BIG
+    idx = jnp.argmin(d, axis=1).astype(jnp.int32)
+    one_hot = (idx[:, None] == jax.lax.iota(jnp.int32, mu.shape[0])[None, :])
+    one_hot = one_hot.astype(jnp.float32)
+
+    snapped_ref[...] = jnp.sum(one_hot * mu[None, :], axis=1)
+    idx_ref[...] = idx
+
+    lane = pid * block + jax.lax.iota(jnp.float32, block)
+    valid = jnp.where(lane < p_valid, 1.0, 0.0)
+
+    @pl.when(pid == 0)
+    def _init():
+        sums_ref[...] = jnp.zeros_like(sums_ref)
+        counts_ref[...] = jnp.zeros_like(counts_ref)
+
+    sums_ref[...] += jnp.sum(one_hot * (theta * valid)[:, None], axis=0)
+    counts_ref[...] += jnp.sum(one_hot * valid[:, None], axis=0)
+
+
+def snap(theta, mu, mask, block=DEFAULT_BLOCK):
+    """(theta, mu, mask) -> (snapped, idx, sums, counts).
+
+    snapped[i] = mu[argmin_j d_ij] over active centroids; sums/counts
+    are the Lloyd statistics of the hard assignment (padding excluded).
+    """
+    p = theta.shape[0]
+    theta_p = _pad_to(theta, block)
+    grid = theta_p.shape[0] // block
+    pv = jnp.array([p], jnp.float32)
+    snapped_p, idx_p, sums, counts = pl.pallas_call(
+        _assign_kernel,
+        grid=(grid,),
+        in_specs=[
+            pl.BlockSpec((block,), lambda i: (i,)),
+            pl.BlockSpec(mu.shape, lambda i: (0,)),
+            pl.BlockSpec(mask.shape, lambda i: (0,)),
+            pl.BlockSpec((1,), lambda i: (0,)),
+        ],
+        out_specs=[
+            pl.BlockSpec((block,), lambda i: (i,)),
+            pl.BlockSpec((block,), lambda i: (i,)),
+            pl.BlockSpec(mu.shape, lambda i: (0,)),
+            pl.BlockSpec(mu.shape, lambda i: (0,)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct(theta_p.shape, jnp.float32),
+            jax.ShapeDtypeStruct(theta_p.shape, jnp.int32),
+            jax.ShapeDtypeStruct(mu.shape, jnp.float32),
+            jax.ShapeDtypeStruct(mu.shape, jnp.float32),
+        ],
+        interpret=True,
+    )(theta_p, mu, mask, pv)
+    return snapped_p[:p], idx_p[:p], sums, counts

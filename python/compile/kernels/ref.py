@@ -1,0 +1,89 @@
+"""Pure-jnp reference oracles for the Pallas kernels.
+
+These are the correctness ground truth: `python/tests/` sweeps shapes,
+seeds and cluster counts with hypothesis and asserts the Pallas kernels
+(interpret mode) match these to tight tolerances.
+
+Conventions shared with the kernels:
+  theta : f32[P]     flat parameter vector
+  mu    : f32[C]     centroid table (C = C_max, statically sized)
+  mask  : f32[C]     1.0 for active centroids, 0.0 for inactive
+  tau   : f32        soft-assignment temperature (>0)
+
+The weight-clustering loss is the paper's
+    L_wc = sum_i sum_j u_ij * ||theta_i - mu_j||^2
+with a soft assignment u_ij = softmax_j(-d_ij / tau) so that the loss is
+differentiable in both theta and mu, normalized by P so that beta has a
+scale-free meaning across model sizes.
+"""
+
+import jax.numpy as jnp
+
+MASK_NEG = 1e9  # additive logit penalty for inactive centroids
+HARD_BIG = 1e30  # distance penalty for inactive centroids (hard assign)
+
+
+def pairwise_sq_dists(theta, mu):
+    """d[i, j] = (theta_i - mu_j)^2 for flat weights."""
+    diff = theta[:, None] - mu[None, :]
+    return diff * diff
+
+
+def soft_assign(theta, mu, mask, tau):
+    """u[i, j] = masked softmax_j(-d_ij / tau)."""
+    d = pairwise_sq_dists(theta, mu)
+    logits = -d / tau - (1.0 - mask)[None, :] * MASK_NEG
+    logits = logits - jnp.max(logits, axis=1, keepdims=True)
+    e = jnp.exp(logits)
+    return e / jnp.sum(e, axis=1, keepdims=True)
+
+
+def wc_loss(theta, mu, mask, tau):
+    """Soft weight-clustering loss, summed over weights (paper-exact:
+    L_wc = sum_i sum_j u_ij ||theta_i - mu_j||^2, unnormalized — the
+    per-weight gradient must be O(1) regardless of model size for the
+    clustering pull to engage at any P)."""
+    d = pairwise_sq_dists(theta, mu)
+    u = soft_assign(theta, mu, mask, tau)
+    return jnp.sum(u * d)
+
+
+def wc_loss_grads(theta, mu, mask, tau):
+    """Closed-form gradients of `wc_loss` wrt (theta, mu).
+
+    With s_i = sum_j u_ij d_ij (the per-weight soft loss) and
+    g_ij = dL_i/dd_ij = u_ij * (1 - (d_ij - s_i)/tau):
+        dtheta_i = 2 * sum_j g_ij (theta_i - mu_j)
+        dmu_j    = -2 * sum_i g_ij (theta_i - mu_j)
+    """
+    d = pairwise_sq_dists(theta, mu)
+    u = soft_assign(theta, mu, mask, tau)
+    s = jnp.sum(u * d, axis=1, keepdims=True)
+    g = u * (1.0 - (d - s) / tau)
+    diff = theta[:, None] - mu[None, :]
+    dtheta = 2.0 * jnp.sum(g * diff, axis=1)
+    dmu = -2.0 * jnp.sum(g * diff, axis=0)
+    return dtheta, dmu
+
+
+def hard_assign(theta, mu, mask):
+    """idx[i] = argmin over active centroids of d_ij."""
+    d = pairwise_sq_dists(theta, mu) + (1.0 - mask)[None, :] * HARD_BIG
+    return jnp.argmin(d, axis=1).astype(jnp.int32)
+
+
+def snap(theta, mu, mask):
+    """Quantize each weight to its nearest active centroid."""
+    idx = hard_assign(theta, mu, mask)
+    return mu[idx], idx
+
+
+def cluster_stats(theta, mu, mask):
+    """One Lloyd half-step: per-cluster sums and counts under hard assign."""
+    idx = hard_assign(theta, mu, mask)
+    one_hot = (idx[:, None] == jnp.arange(mu.shape[0])[None, :]).astype(
+        jnp.float32
+    )
+    sums = jnp.sum(one_hot * theta[:, None], axis=0)
+    counts = jnp.sum(one_hot, axis=0)
+    return sums, counts

@@ -1,0 +1,200 @@
+"""Layer-1 Pallas kernels for the weight-clustering loss (paper Eq. 1/2).
+
+The hot spot of FedCompress is the weight<->centroid interaction: every
+local SGD step and every server distillation step evaluates
+
+    L_wc(theta, mu, C) = sum_i sum_j u_ij * (theta_i - mu_j)^2,
+    u_ij = softmax_j(-d_ij / tau)   (masked to the active C <= C_max)
+
+over the *entire* flat parameter vector. Forward and backward are
+written as separate Pallas kernels tied together with jax.custom_vjp
+(interpret-mode pallas_call has no autodiff rule).
+
+TPU mapping (DESIGN.md §Hardware-Adaptation): the parameter axis is
+tiled into BLOCK-sized VMEM blocks (BlockSpec over axis 0); the full
+centroid table (C_max <= 64 f32) rides along in every block. The d/u
+tiles are BLOCK x C_max elementwise work for the VPU — deliberately not
+MXU-shaped, since C_max is far below the 128x128 systolic tile.
+Per-block VMEM working set at BLOCK=2048, C_max=32:
+  weights 8 KiB + centroids 128 B + 3 tiles x 256 KiB ≈ 0.77 MiB,
+inside a 1 MiB/core budget with double-buffering headroom at BLOCK=1024.
+
+All artifacts are lowered with interpret=True: CPU PJRT cannot execute
+Mosaic custom-calls, and interpret mode lowers to plain HLO that the
+rust runtime runs unmodified.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+MASK_NEG = 1e9
+DEFAULT_BLOCK = 2048
+
+
+def _pad_to(x, multiple):
+    p = x.shape[0]
+    rem = (-p) % multiple
+    if rem:
+        x = jnp.pad(x, (0, rem))
+    return x
+
+
+def _valid_lane_mask(pid, block, p_valid):
+    """1.0 for lanes holding real weights, 0.0 for tail padding."""
+    lane = pid * block + jax.lax.iota(jnp.float32, block)
+    return jnp.where(lane < p_valid, 1.0, 0.0)
+
+
+# ---------------------------------------------------------------------------
+# forward kernel: per-block soft-assignment loss, accumulated into a scalar
+# ---------------------------------------------------------------------------
+
+
+def _fwd_kernel(theta_ref, mu_ref, mask_ref, tau_ref, pvalid_ref, loss_ref):
+    pid = pl.program_id(0)
+    block = theta_ref.shape[0]
+
+    theta = theta_ref[...]
+    mu = mu_ref[...]
+    mask = mask_ref[...]
+    tau = tau_ref[0]
+    p_valid = pvalid_ref[0]
+
+    diff = theta[:, None] - mu[None, :]
+    d = diff * diff
+    logits = -d / tau - (1.0 - mask)[None, :] * MASK_NEG
+    logits = logits - jnp.max(logits, axis=1, keepdims=True)
+    e = jnp.exp(logits)
+    u = e / jnp.sum(e, axis=1, keepdims=True)
+
+    per_weight = jnp.sum(u * d, axis=1)
+    valid = _valid_lane_mask(pid, block, p_valid)
+    partial = jnp.sum(per_weight * valid)
+
+    @pl.when(pid == 0)
+    def _init():
+        loss_ref[0] = 0.0
+
+    loss_ref[0] += partial
+
+
+def _fwd_pallas(theta, mu, mask, tau, block):
+    p = theta.shape[0]
+    theta_p = _pad_to(theta, block)
+    grid = theta_p.shape[0] // block
+    tau_v = jnp.reshape(tau.astype(jnp.float32), (1,))
+    pv = jnp.array([p], jnp.float32)
+    loss = pl.pallas_call(
+        _fwd_kernel,
+        grid=(grid,),
+        in_specs=[
+            pl.BlockSpec((block,), lambda i: (i,)),
+            pl.BlockSpec(mu.shape, lambda i: (0,)),
+            pl.BlockSpec(mask.shape, lambda i: (0,)),
+            pl.BlockSpec((1,), lambda i: (0,)),
+            pl.BlockSpec((1,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((1,), lambda i: (0,)),
+        out_shape=jax.ShapeDtypeStruct((1,), jnp.float32),
+        interpret=True,
+    )(theta_p, mu, mask, tau_v, pv)
+    return loss[0]
+
+
+# ---------------------------------------------------------------------------
+# backward kernel: closed-form grads (see kernels/ref.py for the algebra)
+# ---------------------------------------------------------------------------
+
+
+def _bwd_kernel(
+    theta_ref, mu_ref, mask_ref, tau_ref, pvalid_ref, dtheta_ref, dmu_ref
+):
+    pid = pl.program_id(0)
+    block = theta_ref.shape[0]
+
+    theta = theta_ref[...]
+    mu = mu_ref[...]
+    mask = mask_ref[...]
+    tau = tau_ref[0]
+    p_valid = pvalid_ref[0]
+
+    diff = theta[:, None] - mu[None, :]
+    d = diff * diff
+    logits = -d / tau - (1.0 - mask)[None, :] * MASK_NEG
+    logits = logits - jnp.max(logits, axis=1, keepdims=True)
+    e = jnp.exp(logits)
+    u = e / jnp.sum(e, axis=1, keepdims=True)
+
+    s = jnp.sum(u * d, axis=1, keepdims=True)
+    g = u * (1.0 - (d - s) / tau)
+
+    valid = _valid_lane_mask(pid, block, p_valid)
+    gd = g * diff * valid[:, None]
+    dtheta_ref[...] = 2.0 * jnp.sum(gd, axis=1)
+
+    @pl.when(pid == 0)
+    def _init():
+        dmu_ref[...] = jnp.zeros_like(dmu_ref)
+
+    dmu_ref[...] += -2.0 * jnp.sum(gd, axis=0)
+
+
+def _bwd_pallas(theta, mu, mask, tau, block):
+    p = theta.shape[0]
+    theta_p = _pad_to(theta, block)
+    grid = theta_p.shape[0] // block
+    tau_v = jnp.reshape(tau.astype(jnp.float32), (1,))
+    pv = jnp.array([p], jnp.float32)
+    dtheta_p, dmu = pl.pallas_call(
+        _bwd_kernel,
+        grid=(grid,),
+        in_specs=[
+            pl.BlockSpec((block,), lambda i: (i,)),
+            pl.BlockSpec(mu.shape, lambda i: (0,)),
+            pl.BlockSpec(mask.shape, lambda i: (0,)),
+            pl.BlockSpec((1,), lambda i: (0,)),
+            pl.BlockSpec((1,), lambda i: (0,)),
+        ],
+        out_specs=[
+            pl.BlockSpec((block,), lambda i: (i,)),
+            pl.BlockSpec(mu.shape, lambda i: (0,)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct(theta_p.shape, jnp.float32),
+            jax.ShapeDtypeStruct(mu.shape, jnp.float32),
+        ],
+        interpret=True,
+    )(theta_p, mu, mask, tau_v, pv)
+    return dtheta_p[:p], dmu
+
+
+# ---------------------------------------------------------------------------
+# public op: custom_vjp wiring
+# ---------------------------------------------------------------------------
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(4,))
+def wc_loss(theta, mu, mask, tau, block=DEFAULT_BLOCK):
+    """Soft weight-clustering loss over a flat parameter vector.
+
+    Differentiable in `theta` and `mu` (closed-form Pallas backward);
+    `mask` and `tau` are treated as constants of the optimization.
+    """
+    return _fwd_pallas(theta, mu, mask, jnp.asarray(tau), block)
+
+
+def _wc_fwd(theta, mu, mask, tau, block):
+    loss = _fwd_pallas(theta, mu, mask, jnp.asarray(tau), block)
+    return loss, (theta, mu, mask, jnp.asarray(tau))
+
+
+def _wc_bwd(block, res, ct):
+    theta, mu, mask, tau = res
+    dtheta, dmu = _bwd_pallas(theta, mu, mask, tau, block)
+    return ct * dtheta, ct * dmu, jnp.zeros_like(mask), jnp.zeros_like(tau)
+
+
+wc_loss.defvjp(_wc_fwd, _wc_bwd)

@@ -1,0 +1,250 @@
+"""Layer-2: dataset configs, flat-parameter layout, and the five AOT
+entry points the rust coordinator executes (train/distill/eval/embed/
+snap). Build-time only — `aot.py` lowers these once to HLO text.
+
+Interface contract with rust (runtime/artifacts.rs):
+  * parameters are a single flat f32[P] vector, laid out by ParamLayout
+    (declaration order, w-then-b per layer, C-order raveling);
+  * centroids are f32[C_MAX] plus an activity mask f32[C_MAX], so one
+    static HLO serves every dynamic cluster count C in [C_min, C_max];
+  * scalars (lr, beta, tau, temp) are f32[] operands;
+  * labels are int32[B]; inputs are NCHW f32.
+"""
+
+import dataclasses
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .kernels import kmeans as kmeans_kernel
+from .kernels import wc_loss as wc_kernel
+from .nets import audio, vision, layers as L
+
+C_MAX = 32
+BATCH = 32
+EVAL_BATCH = 64
+
+
+@dataclasses.dataclass(frozen=True)
+class DatasetConfig:
+    """One of the paper's five dataset/model pairings (synthetic analogue)."""
+
+    name: str
+    domain: str  # "vision" | "audio"
+    num_classes: int
+    input_shape: tuple  # (C, H, W)
+    emb_dim: int = 32
+    width: int = 8
+
+
+# Class counts / modality split mirror the paper's Table 1 datasets.
+DATASETS = [
+    DatasetConfig("cifar10", "vision", 10, (3, 16, 16)),
+    DatasetConfig("cifar100", "vision", 100, (3, 16, 16)),
+    DatasetConfig("pathmnist", "vision", 9, (3, 16, 16)),
+    DatasetConfig("speechcommands", "audio", 12, (1, 32, 16)),
+    DatasetConfig("voxforge", "audio", 6, (1, 32, 16)),
+]
+
+
+def net_for(cfg: DatasetConfig):
+    mod = vision if cfg.domain == "vision" else audio
+    specs = mod.specs(
+        cfg.num_classes,
+        in_ch=cfg.input_shape[0],
+        emb_dim=cfg.emb_dim,
+        width=cfg.width,
+    )
+    return specs, mod.forward
+
+
+# ---------------------------------------------------------------------------
+# flat parameter layout
+# ---------------------------------------------------------------------------
+
+
+class ParamLayout:
+    """Deterministic flat layout: per spec, w then b, C-order ravel."""
+
+    def __init__(self, specs):
+        self.specs = specs
+        self.entries = []  # (spec_idx, field, shape, offset, size)
+        off = 0
+        for i, s in enumerate(specs):
+            for field in ("w", "b"):
+                shape = s["shapes"][field]
+                size = int(np.prod(shape))
+                self.entries.append((i, field, shape, off, size))
+                off += size
+        self.total = off
+
+    def flatten(self, params):
+        parts = []
+        for i, field, _, _, _ in self.entries:
+            parts.append(jnp.ravel(params[i][field]))
+        return jnp.concatenate(parts)
+
+    def unflatten(self, flat):
+        params = [dict() for _ in self.specs]
+        for i, field, shape, off, size in self.entries:
+            params[i][field] = jnp.reshape(
+                jax.lax.dynamic_slice_in_dim(flat, off, size), shape
+            )
+        return params
+
+    def init_flat(self, seed):
+        key = jax.random.PRNGKey(seed)
+        keys = jax.random.split(key, len(self.specs))
+        params = [L.init_param(s, k) for s, k in zip(self.specs, keys)]
+        return self.flatten(params)
+
+    def describe(self):
+        """Layer inventory for the manifest (drives rust models/ + edge/)."""
+        out = []
+        for i, field, shape, off, size in self.entries:
+            s = self.specs[i]
+            out.append(
+                {
+                    "layer": s["name"],
+                    "kind": s["kind"],
+                    "field": field,
+                    "shape": list(shape),
+                    "offset": off,
+                    "size": size,
+                    "stride": s.get("stride", 1),
+                    "groups": s.get("groups", 1),
+                }
+            )
+        return out
+
+
+# ---------------------------------------------------------------------------
+# losses
+# ---------------------------------------------------------------------------
+
+
+def cross_entropy(logits, labels):
+    logp = jax.nn.log_softmax(logits)
+    nll = -jnp.take_along_axis(logp, labels[:, None], axis=1)[:, 0]
+    return jnp.mean(nll)
+
+
+def kld(teacher_logits, student_logits, temp):
+    """lambda^2 * KL(softmax(t/l) || softmax(s/l)), batch mean (Eq. 2)."""
+    pt = jax.nn.softmax(teacher_logits / temp)
+    log_pt = jax.nn.log_softmax(teacher_logits / temp)
+    log_ps = jax.nn.log_softmax(student_logits / temp)
+    kl = jnp.sum(pt * (log_pt - log_ps), axis=1)
+    return temp * temp * jnp.mean(kl)
+
+
+# ---------------------------------------------------------------------------
+# entry points (each is AOT-lowered per dataset config)
+# ---------------------------------------------------------------------------
+
+
+def build_entry_points(cfg: DatasetConfig, tau=0.05, block=2048):
+    """Returns dict name -> (fn, example_args). All fns are jit-able."""
+    specs, forward = net_for(cfg)
+    layout = ParamLayout(specs)
+    p_total = layout.total
+
+    def apply_net(flat, x):
+        params = layout.unflatten(flat)
+        return forward(specs, params, x)
+
+    # --- train_step: one SGD step of L_ce + beta * L_wc (paper Eq. 1) ---
+    def train_step(theta, mu, mask, x, y, lr, beta):
+        def loss_fn(th, m):
+            logits, _ = apply_net(th, x)
+            ce = cross_entropy(logits, y)
+            wc = wc_kernel.wc_loss(th, m, mask, tau, block)
+            return ce + beta * wc, ce
+
+        (loss, ce), (d_theta, d_mu) = jax.value_and_grad(
+            loss_fn, argnums=(0, 1), has_aux=True
+        )(theta, mu)
+        # d_mu aggregates pull from all P weights (unnormalized L_wc);
+        # dividing by P makes the centroid step a mean over members and
+        # keeps one lr stable for both theta and mu at any model size.
+        return (
+            theta - lr * d_theta,
+            mu - lr * beta * d_mu / p_total,
+            loss,
+            ce,
+        )
+
+    # --- distill_step: server-side self-compression (paper Eq. 2) ---
+    def distill_step(theta_s, theta_t, mu, mask, x, lr, beta, temp):
+        t_logits, _ = apply_net(theta_t, x)
+        t_logits = jax.lax.stop_gradient(t_logits)
+
+        def loss_fn(th, m):
+            s_logits, _ = apply_net(th, x)
+            kl = kld(t_logits, s_logits, temp)
+            wc = wc_kernel.wc_loss(th, m, mask, tau, block)
+            return kl + beta * wc, kl
+
+        (loss, kl), (d_theta, d_mu) = jax.value_and_grad(
+            loss_fn, argnums=(0, 1), has_aux=True
+        )(theta_s, mu)
+        return (
+            theta_s - lr * d_theta,
+            mu - lr * beta * d_mu / p_total,  # see train_step
+            loss,
+            kl,
+        )
+
+    # --- eval_step: correct count + summed CE over one batch ---
+    def eval_step(theta, x, y):
+        logits, _ = apply_net(theta, x)
+        pred = jnp.argmax(logits, axis=1).astype(jnp.int32)
+        correct = jnp.sum((pred == y).astype(jnp.float32))
+        logp = jax.nn.log_softmax(logits)
+        nll = -jnp.take_along_axis(logp, y[:, None], axis=1)[:, 0]
+        return correct, jnp.sum(nll)
+
+    # --- embed: penultimate embeddings for the representation score ---
+    def embed(theta, x):
+        _, emb = apply_net(theta, x)
+        return (emb,)
+
+    # --- snap: hard quantization via the Pallas assign kernel ---
+    def snap(theta, mu, mask):
+        snapped, idx, sums, counts = kmeans_kernel.snap(theta, mu, mask, block)
+        return snapped, idx, sums, counts
+
+    c, h, w = cfg.input_shape
+    f32 = jnp.float32
+    sds = jax.ShapeDtypeStruct
+    theta_s = sds((p_total,), f32)
+    mu_s = sds((C_MAX,), f32)
+    mask_s = sds((C_MAX,), f32)
+    x_s = sds((BATCH, c, h, w), f32)
+    y_s = sds((BATCH,), jnp.int32)
+    xe_s = sds((EVAL_BATCH, c, h, w), f32)
+    ye_s = sds((EVAL_BATCH,), jnp.int32)
+    scalar = sds((), f32)
+
+    return {
+        "layout": layout,
+        "specs": specs,
+        "entries": {
+            "train_step": (train_step, (theta_s, mu_s, mask_s, x_s, y_s, scalar, scalar)),
+            "distill_step": (
+                distill_step,
+                (theta_s, theta_s, mu_s, mask_s, x_s, scalar, scalar, scalar),
+            ),
+            "eval_step": (eval_step, (theta_s, xe_s, ye_s)),
+            "embed": (embed, (theta_s, xe_s)),
+            "snap": (snap, (theta_s, mu_s, mask_s)),
+        },
+    }
+
+
+@functools.lru_cache(maxsize=None)
+def _built(name):
+    cfg = next(c for c in DATASETS if c.name == name)
+    return cfg, build_entry_points(cfg)

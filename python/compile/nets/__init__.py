@@ -1,0 +1,3 @@
+"""Layer-2 network definitions (build-time only; never on the request path)."""
+
+from . import audio, layers, vision  # noqa: F401

@@ -1,0 +1,49 @@
+"""MobileNetLite — the audio backbone (paper: MobileNet, scaled).
+
+Depthwise-separable conv stacks (dw3x3 + pw1x1), exactly MobileNet's
+building block, over 1-channel spectrogram inputs; GAP, embedding FC
+(penultimate, feeds the representation-quality score), classifier head.
+~4k parameters at 12 classes.
+"""
+
+from . import layers as L
+
+
+def specs(num_classes, in_ch=1, emb_dim=32, width=8):
+    w1, w2, w3 = width, width * 2, width * 4
+    return [
+        L.conv_spec("stem", in_ch, w1, 3),
+        # dw-separable block 1 (stride 2)
+        L.conv_spec("b1.dw", w1, w1, 3, stride=2, groups=w1),
+        L.conv_spec("b1.pw", w1, w2, 1),
+        # dw-separable block 2 (stride 2)
+        L.conv_spec("b2.dw", w2, w2, 3, stride=2, groups=w2),
+        L.conv_spec("b2.pw", w2, w3, 1),
+        # dw-separable block 3 (stride 1)
+        L.conv_spec("b3.dw", w3, w3, 3, groups=w3),
+        L.conv_spec("b3.pw", w3, w3, 1),
+        # head
+        L.dense_spec("fc_embed", w3, emb_dim),
+        L.dense_spec("fc_out", emb_dim, num_classes),
+    ]
+
+
+def forward(specs_list, params, x):
+    """x: f32[B, 1, T, F] -> (logits, embeddings)."""
+    by_name = {s["name"]: (s, p) for s, p in zip(specs_list, params)}
+
+    def conv(name, h):
+        s, p = by_name[name]
+        return L.apply_conv(s, p, h)
+
+    h = L.relu(conv("stem", x))
+    for blk in ("b1", "b2", "b3"):
+        h = L.relu(conv(f"{blk}.dw", h))
+        h = L.relu(conv(f"{blk}.pw", h))
+
+    h = L.global_avg_pool(h)
+    s, p = by_name["fc_embed"]
+    emb = L.relu(L.apply_dense(s, p, h))
+    s, p = by_name["fc_out"]
+    logits = L.apply_dense(s, p, emb)
+    return logits, emb

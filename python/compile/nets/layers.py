@@ -1,0 +1,85 @@
+"""Shared layer primitives for the build-time JAX nets.
+
+Parameters are plain dicts of jnp arrays; the flat-vector layout the
+rust coordinator sees is defined by `model.ParamLayout`, which walks
+these specs in declaration order. Convolutions are bias-ful and
+norm-free (no running statistics — FL aggregation of batch-norm state
+is a known confounder the paper sidesteps by construction, and a
+stateless net keeps the flat-parameter interface exact).
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def he_scale(fan_in):
+    return np.sqrt(2.0 / fan_in)
+
+
+def conv_spec(name, cin, cout, k, stride=1, groups=1):
+    """Spec for a KxK conv with bias. groups=cin gives a depthwise conv."""
+    assert cin % groups == 0
+    return {
+        "name": name,
+        "kind": "conv",
+        "cin": cin,
+        "cout": cout,
+        "k": k,
+        "stride": stride,
+        "groups": groups,
+        "shapes": {
+            "w": (cout, cin // groups, k, k),
+            "b": (cout,),
+        },
+        "fan_in": (cin // groups) * k * k,
+    }
+
+
+def dense_spec(name, din, dout):
+    return {
+        "name": name,
+        "kind": "dense",
+        "din": din,
+        "dout": dout,
+        "shapes": {"w": (din, dout), "b": (dout,)},
+        "fan_in": din,
+    }
+
+
+def init_param(spec, key):
+    """He-normal weights, zero bias."""
+    kw, _ = jax.random.split(key)
+    w = (
+        jax.random.normal(kw, spec["shapes"]["w"], jnp.float32)
+        * he_scale(spec["fan_in"])
+    )
+    b = jnp.zeros(spec["shapes"]["b"], jnp.float32)
+    return {"w": w, "b": b}
+
+
+def apply_conv(spec, p, x):
+    """x: f32[B, C, H, W] (NCHW)."""
+    s = spec["stride"]
+    y = jax.lax.conv_general_dilated(
+        x,
+        p["w"],
+        window_strides=(s, s),
+        padding="SAME",
+        dimension_numbers=("NCHW", "OIHW", "NCHW"),
+        feature_group_count=spec["groups"],
+    )
+    return y + p["b"][None, :, None, None]
+
+
+def apply_dense(spec, p, x):
+    return x @ p["w"] + p["b"]
+
+
+def relu(x):
+    return jnp.maximum(x, 0.0)
+
+
+def global_avg_pool(x):
+    """NCHW -> NC."""
+    return jnp.mean(x, axis=(2, 3))

@@ -1,0 +1,58 @@
+"""ResNetLite — the vision backbone (paper: ResNet-20, scaled to testbed).
+
+Structure-faithful scale-down of ResNet-20: conv stem, two residual
+stages with stride-2 downsampling and 1x1 projection skips, global
+average pooling, an embedding FC (whose post-ReLU activations are the
+penultimate embeddings the representation-quality score consumes), and
+a linear classifier head. ~20k parameters at 10 classes.
+"""
+
+from . import layers as L
+
+
+def specs(num_classes, in_ch=3, emb_dim=32, width=8):
+    w1, w2, w3 = width, width * 2, width * 4
+    return [
+        L.conv_spec("stem", in_ch, w1, 3),
+        # stage 1 (stride 2)
+        L.conv_spec("s1.conv1", w1, w2, 3, stride=2),
+        L.conv_spec("s1.conv2", w2, w2, 3),
+        L.conv_spec("s1.skip", w1, w2, 1, stride=2),
+        # stage 2 (stride 2)
+        L.conv_spec("s2.conv1", w2, w3, 3, stride=2),
+        L.conv_spec("s2.conv2", w3, w3, 3),
+        L.conv_spec("s2.skip", w2, w3, 1, stride=2),
+        # head
+        L.dense_spec("fc_embed", w3, emb_dim),
+        L.dense_spec("fc_out", emb_dim, num_classes),
+    ]
+
+
+def forward(specs_list, params, x):
+    """x: f32[B, C, H, W] -> (logits, embeddings)."""
+    by_name = {s["name"]: (s, p) for s, p in zip(specs_list, params)}
+
+    def conv(name, h):
+        s, p = by_name[name]
+        return L.apply_conv(s, p, h)
+
+    h = L.relu(conv("stem", x))
+
+    # stage 1
+    r = conv("s1.skip", h)
+    h = L.relu(conv("s1.conv1", h))
+    h = conv("s1.conv2", h)
+    h = L.relu(h + r)
+
+    # stage 2
+    r = conv("s2.skip", h)
+    h = L.relu(conv("s2.conv1", h))
+    h = conv("s2.conv2", h)
+    h = L.relu(h + r)
+
+    h = L.global_avg_pool(h)
+    s, p = by_name["fc_embed"]
+    emb = L.relu(L.apply_dense(s, p, h))
+    s, p = by_name["fc_out"]
+    logits = L.apply_dense(s, p, emb)
+    return logits, emb

@@ -1,0 +1,89 @@
+"""Manifest / artifact integrity: everything the rust runtime will trust.
+
+Skipped when artifacts/ has not been built yet (run `make artifacts`).
+"""
+
+import json
+import os
+
+import numpy as np
+import pytest
+
+from compile import model
+
+ART = os.path.join(os.path.dirname(__file__), "..", "..", "artifacts")
+
+pytestmark = pytest.mark.skipif(
+    not os.path.exists(os.path.join(ART, "manifest.json")),
+    reason="artifacts not built (run `make artifacts`)",
+)
+
+
+@pytest.fixture(scope="module")
+def manifest():
+    with open(os.path.join(ART, "manifest.json")) as f:
+        return json.load(f)
+
+
+def test_manifest_lists_all_datasets(manifest):
+    assert set(manifest["datasets"]) == {c.name for c in model.DATASETS}
+    assert manifest["c_max"] == model.C_MAX
+    assert manifest["batch"] == model.BATCH
+
+
+def test_every_artifact_file_exists_and_is_hlo(manifest):
+    for name, ds in manifest["datasets"].items():
+        for entry, fname in ds["artifacts"].items():
+            path = os.path.join(ART, fname)
+            assert os.path.exists(path), path
+            head = open(path).read(200)
+            assert "HloModule" in head, f"{path} is not HLO text"
+
+
+def test_param_counts_match_layouts(manifest):
+    for cfg in model.DATASETS:
+        specs, _ = model.net_for(cfg)
+        layout = model.ParamLayout(specs)
+        ds = manifest["datasets"][cfg.name]
+        assert ds["param_count"] == layout.total
+        assert sum(e["size"] for e in ds["layers"]) == layout.total
+
+
+def test_init_theta_binary_matches(manifest):
+    for cfg in model.DATASETS:
+        ds = manifest["datasets"][cfg.name]
+        path = os.path.join(ART, ds["init_theta"])
+        raw = np.fromfile(path, dtype=np.float32)
+        assert raw.shape[0] == ds["param_count"]
+        specs, _ = model.net_for(cfg)
+        layout = model.ParamLayout(specs)
+        np.testing.assert_array_equal(raw, np.asarray(layout.init_flat(0)))
+
+
+def test_goldens_are_self_consistent(manifest):
+    """Re-execute each entry on its stored golden inputs; outputs match."""
+    for cfg in model.DATASETS[:2]:  # two configs keep the suite fast
+        ds = manifest["datasets"][cfg.name]
+        gdir = os.path.join(ART, ds["golden_dir"])
+        with open(os.path.join(gdir, "goldens.json")) as f:
+            goldens = json.load(f)
+        ep = model.build_entry_points(cfg, tau=manifest["tau"], block=manifest["block"])
+        import jax
+        import jax.numpy as jnp
+
+        for entry, record in goldens.items():
+            fn = jax.jit(ep["entries"][entry][0])
+            ins = []
+            for spec in record["inputs"]:
+                dt = np.float32 if spec["dtype"] == "f32" else np.int32
+                a = np.fromfile(os.path.join(gdir, spec["file"]), dtype=dt)
+                ins.append(jnp.asarray(a.reshape(spec["shape"])))
+            outs = fn(*ins)
+            if not isinstance(outs, tuple):
+                outs = (outs,)
+            for spec, got in zip(record["outputs"], outs):
+                dt = np.float32 if spec["dtype"] == "f32" else np.int32
+                want = np.fromfile(os.path.join(gdir, spec["file"]), dtype=dt)
+                np.testing.assert_allclose(
+                    np.asarray(got).ravel(), want, rtol=1e-5, atol=1e-6
+                )

@@ -1,0 +1,80 @@
+"""Pallas snap/assign kernel vs the pure-jnp oracle."""
+
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import kmeans as K
+from compile.kernels import ref
+
+C_MAX = 32
+
+
+def make_case(seed, p, c_active):
+    rng = np.random.default_rng(seed)
+    theta = jnp.asarray(rng.normal(size=p), jnp.float32)
+    mu = jnp.asarray(np.sort(rng.normal(size=C_MAX)), jnp.float32)
+    mask = jnp.asarray((np.arange(C_MAX) < c_active).astype(np.float32))
+    return theta, mu, mask
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    seed=st.integers(0, 2**31 - 1),
+    p=st.integers(1, 5000),
+    c_active=st.integers(1, C_MAX),
+    block=st.sampled_from([256, 1024, 2048]),
+)
+def test_snap_matches_ref(seed, p, c_active, block):
+    theta, mu, mask = make_case(seed, p, c_active)
+    snapped, idx, sums, counts = K.snap(theta, mu, mask, block)
+    want_snapped, want_idx = ref.snap(theta, mu, mask)
+    want_sums, want_counts = ref.cluster_stats(theta, mu, mask)
+    np.testing.assert_array_equal(idx, want_idx)
+    np.testing.assert_allclose(snapped, want_snapped)
+    np.testing.assert_allclose(sums, want_sums, rtol=1e-5, atol=1e-5)
+    np.testing.assert_allclose(counts, want_counts)
+
+
+@settings(max_examples=10, deadline=None)
+@given(seed=st.integers(0, 2**31 - 1), c_active=st.integers(1, C_MAX))
+def test_assignment_is_optimal(seed, c_active):
+    """Property: no other active centroid is closer than the assigned one."""
+    theta, mu, mask = make_case(seed, 800, c_active)
+    _, idx, _, _ = K.snap(theta, mu, mask, 512)
+    t = np.asarray(theta)
+    m = np.asarray(mu)
+    act = np.asarray(mask) > 0
+    assigned_d = (t - m[np.asarray(idx)]) ** 2
+    for j in np.nonzero(act)[0]:
+        assert np.all(assigned_d <= (t - m[j]) ** 2 + 1e-6)
+
+
+def test_counts_sum_to_p():
+    theta, mu, mask = make_case(3, 2049, 10)
+    _, _, _, counts = K.snap(theta, mu, mask, 2048)
+    assert float(jnp.sum(counts)) == 2049.0
+
+
+def test_inactive_centroids_never_assigned():
+    theta, mu, mask = make_case(4, 1000, 5)
+    _, idx, _, counts = K.snap(theta, mu, mask, 512)
+    assert int(np.max(np.asarray(idx))) < 5
+    np.testing.assert_allclose(np.asarray(counts)[5:], 0.0)
+
+
+def test_lloyd_step_reduces_inertia():
+    """sums/counts implement the Lloyd update; inertia must not increase."""
+    theta, mu, mask = make_case(8, 4000, 16)
+    for _ in range(3):
+        snapped, _, sums, counts = K.snap(theta, mu, mask, 1024)
+        inertia0 = float(jnp.sum((theta - snapped) ** 2))
+        new_mu = np.asarray(mu).copy()
+        c = np.asarray(counts)
+        s = np.asarray(sums)
+        nz = c > 0
+        new_mu[nz] = s[nz] / c[nz]
+        mu = jnp.asarray(new_mu)
+        snapped2, _, _, _ = K.snap(theta, mu, mask, 1024)
+        inertia1 = float(jnp.sum((theta - snapped2) ** 2))
+        assert inertia1 <= inertia0 + 1e-5

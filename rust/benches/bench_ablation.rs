@@ -1,0 +1,46 @@
+//! Ablation A1 (DESIGN.md §4): beta-warmup on/off. Shows why the paper
+//! protects the first local epochs from the clustering pull — snapping
+//! a never-free-trained model costs accuracy for the same bytes.
+
+use fedcompress::compression::accounting::ccr;
+use fedcompress::config::{FedConfig, Strategy};
+use fedcompress::coordinator::server::{build_data, run_federated_with_data};
+use fedcompress::runtime::artifacts::default_dir;
+use fedcompress::runtime::Engine;
+
+fn main() {
+    let dir = default_dir();
+    if !dir.join("manifest.json").exists() {
+        println!("SKIP bench_ablation: artifacts not built (run `make artifacts`)");
+        return;
+    }
+    let engine = Engine::load(&dir).unwrap();
+
+    let mut base = FedConfig::quick("cifar10");
+    base.rounds = 6;
+    base.clients = 4;
+    base.train_size = 384;
+    base.validate().unwrap();
+    let data = build_data(&engine, &base).unwrap();
+
+    let fedavg = run_federated_with_data(&engine, &base, Strategy::FedAvg, &data).unwrap();
+
+    for (label, warm_epochs, warm_rounds) in [
+        ("warmup_on (paper)", base.beta_warmup_epochs, base.warmup_rounds),
+        ("epoch_warmup_off", 0usize, base.warmup_rounds),
+        ("round_warmup_off", base.beta_warmup_epochs, 0usize),
+        ("all_warmup_off", 0, 0),
+    ] {
+        let mut cfg = base.clone();
+        cfg.beta_warmup_epochs = warm_epochs;
+        cfg.warmup_rounds = warm_rounds;
+        let r = run_federated_with_data(&engine, &cfg, Strategy::FedCompress, &data).unwrap();
+        println!(
+            "ROW ablation variant=\"{label}\" final_acc={:.4} dAcc={:+.2}pp CCR={:.2} MCR={:.2}",
+            r.final_accuracy,
+            (r.final_accuracy - fedavg.final_accuracy) * 100.0,
+            ccr(&fedavg.ledger, &r.ledger),
+            r.mcr()
+        );
+    }
+}

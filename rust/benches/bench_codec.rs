@@ -1,0 +1,49 @@
+//! Codec hot-path benchmarks: encode/decode of clustered model updates
+//! at realistic model sizes — the L3 coordinator pays this per client
+//! per round in both directions.
+
+use fedcompress::bench::{bench, report_throughput};
+use fedcompress::compression::codec::{decode, encode, quantize_and_encode};
+use fedcompress::compression::huffman::{huffman_decode, huffman_encode};
+use fedcompress::compression::kmeans::kmeans_1d;
+use fedcompress::util::rng::Rng;
+use std::hint::black_box;
+
+fn main() {
+    let mut rng = Rng::new(1);
+    for &(p, c) in &[(19_674usize, 16usize), (19_674, 32), (100_000, 16)] {
+        let weights: Vec<f32> = (0..p).map(|_| rng.normal() * 0.2).collect();
+        let (cb, _, _) = kmeans_1d(&weights, c, 25, &mut rng);
+
+        let r = bench(&format!("quantize_encode_p{p}_c{c}"), || {
+            let (enc, _) = quantize_and_encode(black_box(&weights), black_box(&cb));
+            black_box(enc.wire_bytes());
+        });
+        report_throughput(&r, p * 4);
+
+        let (enc, _) = quantize_and_encode(&weights, &cb);
+        let r = bench(&format!("decode_p{p}_c{c}"), || {
+            let out = decode(black_box(&enc.bytes)).unwrap();
+            black_box(out.0.len());
+        });
+        report_throughput(&r, enc.bytes.len());
+
+        // pure huffman on the index stream
+        let idx: Vec<u32> = (0..p).map(|_| rng.below(c) as u32).collect();
+        bench(&format!("huffman_encode_p{p}_c{c}"), || {
+            let e = huffman_encode(black_box(&idx), c);
+            black_box(e.payload_bits);
+        });
+        let henc = huffman_encode(&idx, c);
+        bench(&format!("huffman_decode_p{p}_c{c}"), || {
+            let d = huffman_decode(black_box(&henc)).unwrap();
+            black_box(d.len());
+        });
+
+        // flat-pack path (encode() picks it for uniform indices)
+        bench(&format!("flat_encode_p{p}_c{c}"), || {
+            let e = encode(black_box(&cb), black_box(&idx));
+            black_box(e.bytes.len());
+        });
+    }
+}

@@ -1,0 +1,58 @@
+//! Table 1 regeneration bench (reduced budget): one paired federated
+//! run of all four strategies on the cifar10 analogue, printing the
+//! paper-style row plus per-round wall time. This is the end-to-end
+//! system benchmark — it exercises every layer.
+
+use fedcompress::compression::accounting::ccr;
+use fedcompress::config::{FedConfig, Strategy};
+use fedcompress::coordinator::server::{build_data, run_federated_with_data};
+use fedcompress::runtime::artifacts::default_dir;
+use fedcompress::runtime::Engine;
+
+fn main() {
+    let dir = default_dir();
+    if !dir.join("manifest.json").exists() {
+        println!("SKIP bench_table1: artifacts not built (run `make artifacts`)");
+        return;
+    }
+    let engine = Engine::load(&dir).unwrap();
+
+    let mut cfg = FedConfig::quick("cifar10");
+    cfg.rounds = 6;
+    cfg.clients = 4;
+    cfg.train_size = 384;
+    cfg.validate().unwrap();
+
+    let data = build_data(&engine, &cfg).unwrap();
+    let t_all = std::time::Instant::now();
+    let mut results = Vec::new();
+    for strategy in Strategy::ALL {
+        let t0 = std::time::Instant::now();
+        let r = run_federated_with_data(&engine, &cfg, strategy, &data).unwrap();
+        let total_ms = t0.elapsed().as_secs_f64() * 1e3;
+        println!(
+            "BENCH table1_{} total_ms={:.0} per_round_ms={:.0} final_acc={:.4}",
+            strategy.name(),
+            total_ms,
+            total_ms / cfg.rounds as f64,
+            r.final_accuracy
+        );
+        results.push(r);
+    }
+    let fedavg = &results[0];
+    print!("ROW cifar10 fedavg_acc={:.2}", fedavg.final_accuracy * 100.0);
+    for r in &results[1..] {
+        print!(
+            " | {} dAcc={:+.2} CCR={:.2} MCR={:.2}",
+            r.strategy,
+            (r.final_accuracy - fedavg.final_accuracy) * 100.0,
+            ccr(&fedavg.ledger, &r.ledger),
+            r.mcr()
+        );
+    }
+    println!();
+    println!(
+        "BENCH table1_total wall_s={:.1}",
+        t_all.elapsed().as_secs_f64()
+    );
+}

@@ -1,0 +1,41 @@
+//! Table 2 regeneration bench: edge latency model over both
+//! architectures, all devices, all precisions, plus the model's own
+//! evaluation cost (it is pure arithmetic — microseconds).
+
+use fedcompress::bench::bench;
+use fedcompress::edge::{inference_latency, speedup, Precision, WeightFormat, EDGE_DEVICES};
+use fedcompress::runtime::artifacts::default_dir;
+use fedcompress::runtime::Engine;
+use std::hint::black_box;
+
+fn main() {
+    let dir = default_dir();
+    if !dir.join("manifest.json").exists() {
+        println!("SKIP bench_table2: artifacts not built (run `make artifacts`)");
+        return;
+    }
+    let engine = Engine::load(&dir).unwrap();
+
+    let _ = engine; // manifest presence gates the bench; specs are paper-scale
+    for spec in [
+        fedcompress::edge::paper_models::resnet20(),
+        fedcompress::edge::paper_models::mobilenet(),
+    ] {
+        let model = spec.name.clone();
+        let dataset = if spec.domain == "vision" { "cifar10" } else { "speechcommands" };
+        for d in &EDGE_DEVICES {
+            for (prec, pname) in [(Precision::F32, "f32"), (Precision::U8, "u8")] {
+                let s = speedup(&spec, d, prec, 16);
+                let dense = inference_latency(&spec, d, prec, WeightFormat::Dense);
+                println!(
+                    "ROW table2 model={model} device=\"{}\" prec={pname} speedup={s:.3} dense_us={dense:.1}",
+                    d.name
+                );
+            }
+        }
+        bench(&format!("edge_model_eval_{dataset}"), || {
+            let s = speedup(black_box(&spec), &EDGE_DEVICES[0], Precision::F32, 16);
+            black_box(s);
+        });
+    }
+}

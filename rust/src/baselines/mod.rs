@@ -1,0 +1,8 @@
+//! Wire policies per strategy: what actually crosses the (simulated)
+//! network in each direction, byte-exact. This is where FedAvg, FedZip
+//! and the two FedCompress variants differ — the aggregation rule and
+//! the round loop stay identical (the paper's compatibility claim).
+
+pub mod wire;
+
+pub use wire::{encode_download, encode_upload, WireBlob};

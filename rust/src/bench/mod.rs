@@ -1,0 +1,74 @@
+//! Micro-benchmark harness (criterion is not in the vendored crate
+//! set). `cargo bench` targets use `harness = false` and drive this.
+//!
+//! Methodology: warmup runs, then adaptive iteration count targeting a
+//! minimum measurement window, then median / p10 / p90 over samples.
+//! Results print in a stable machine-greppable format:
+//!     BENCH <name> median_ns=<n> p10_ns=<n> p90_ns=<n> iters=<n>
+
+use std::time::Instant;
+
+pub struct BenchResult {
+    pub name: String,
+    pub median_ns: f64,
+    pub p10_ns: f64,
+    pub p90_ns: f64,
+    pub iters_per_sample: usize,
+}
+
+/// Measure `f`, returning per-iteration stats. `f` is called in batches;
+/// use `std::hint::black_box` inside to defeat dead-code elimination.
+pub fn bench<F: FnMut()>(name: &str, mut f: F) -> BenchResult {
+    // warmup + calibrate iteration count for a ~20ms sample window
+    let t0 = Instant::now();
+    f();
+    let one = t0.elapsed().as_secs_f64().max(1e-9);
+    let iters = ((0.02 / one).ceil() as usize).clamp(1, 100_000);
+
+    let samples = 15usize;
+    let mut per_iter: Vec<f64> = Vec::with_capacity(samples);
+    for _ in 0..samples {
+        let t = Instant::now();
+        for _ in 0..iters {
+            f();
+        }
+        per_iter.push(t.elapsed().as_secs_f64() * 1e9 / iters as f64);
+    }
+    per_iter.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let result = BenchResult {
+        name: name.to_string(),
+        median_ns: per_iter[samples / 2],
+        p10_ns: per_iter[samples / 10],
+        p90_ns: per_iter[samples * 9 / 10],
+        iters_per_sample: iters,
+    };
+    println!(
+        "BENCH {} median_ns={:.0} p10_ns={:.0} p90_ns={:.0} iters={}",
+        result.name, result.median_ns, result.p10_ns, result.p90_ns, result.iters_per_sample
+    );
+    result
+}
+
+/// Pretty throughput helper: bytes processed per iteration -> GB/s line.
+pub fn report_throughput(r: &BenchResult, bytes_per_iter: usize) {
+    let gbps = bytes_per_iter as f64 / r.median_ns;
+    println!("  -> {:.3} GB/s ({} B/iter)", gbps, bytes_per_iter);
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_produces_sane_stats() {
+        let r = bench("noop_loop", || {
+            let mut s = 0u64;
+            for i in 0..100 {
+                s = s.wrapping_add(std::hint::black_box(i));
+            }
+            std::hint::black_box(s);
+        });
+        assert!(r.median_ns > 0.0);
+        assert!(r.p10_ns <= r.median_ns && r.median_ns <= r.p90_ns);
+    }
+}

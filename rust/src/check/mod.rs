@@ -1,0 +1,153 @@
+//! Mini property-based testing framework (proptest is not in the
+//! vendored crate set).
+//!
+//! Deterministic, seeded case generation with linear input shrinking:
+//! `forall(cases, gen, prop)` runs `prop` over `cases` generated inputs;
+//! on failure it retries progressively "smaller" inputs from the
+//! generator's shrink channel and reports the smallest failing seed so
+//! the case is reproducible.
+
+use crate::util::rng::Rng;
+
+/// A generator produces a value from an rng at a given "size" level.
+/// Smaller sizes should produce structurally smaller values.
+pub trait Gen {
+    type Value;
+    fn generate(&self, rng: &mut Rng, size: usize) -> Self::Value;
+}
+
+/// Generator from a closure.
+pub struct FnGen<F>(pub F);
+
+impl<F, V> Gen for FnGen<F>
+where
+    F: Fn(&mut Rng, usize) -> V,
+{
+    type Value = V;
+    fn generate(&self, rng: &mut Rng, size: usize) -> V {
+        (self.0)(rng, size)
+    }
+}
+
+/// Vec of f32 drawn from N(0, scale), length in [1, size.max(1)].
+pub fn vec_f32(scale: f32) -> impl Gen<Value = Vec<f32>> {
+    FnGen(move |rng: &mut Rng, size: usize| {
+        let n = 1 + rng.below(size.max(1));
+        (0..n).map(|_| rng.normal() * scale).collect()
+    })
+}
+
+/// usize in [lo, hi].
+pub fn usize_in(lo: usize, hi: usize) -> impl Gen<Value = usize> {
+    FnGen(move |rng: &mut Rng, _| lo + rng.below(hi - lo + 1))
+}
+
+/// Pair generator.
+pub fn pair<A: Gen, B: Gen>(a: A, b: B) -> impl Gen<Value = (A::Value, B::Value)> {
+    FnGen(move |rng: &mut Rng, size: usize| (a.generate(rng, size), b.generate(rng, size)))
+}
+
+/// Outcome carrying the reproducing seed on failure.
+#[derive(Debug)]
+pub struct Failure {
+    pub seed: u64,
+    pub size: usize,
+    pub message: String,
+}
+
+/// Run `prop` over `cases` generated inputs with growing size, then on
+/// failure search smaller sizes at the same seed (input shrinking).
+/// Panics with the smallest reproduction found.
+pub fn forall<G, F>(cases: usize, base_seed: u64, gen: &G, prop: F)
+where
+    G: Gen,
+    F: Fn(&G::Value) -> Result<(), String>,
+{
+    for case in 0..cases {
+        let seed = base_seed
+            .wrapping_mul(0x9e3779b97f4a7c15)
+            .wrapping_add(case as u64);
+        let size = 4 + (case * 97) % 500; // sweep sizes deterministically
+        let mut rng = Rng::new(seed);
+        let value = gen.generate(&mut rng, size);
+        if let Err(msg) = prop(&value) {
+            // shrink: retry the same seed at smaller sizes
+            let mut best = Failure {
+                seed,
+                size,
+                message: msg,
+            };
+            let mut s = size / 2;
+            while s >= 1 {
+                let mut rng = Rng::new(seed);
+                let v = gen.generate(&mut rng, s);
+                if let Err(m) = prop(&v) {
+                    best = Failure {
+                        seed,
+                        size: s,
+                        message: m,
+                    };
+                    s /= 2;
+                } else {
+                    break;
+                }
+            }
+            panic!(
+                "property failed (seed={}, size={}): {}",
+                best.seed, best.size, best.message
+            );
+        }
+    }
+}
+
+/// Assertion helpers returning Result for use inside properties.
+pub fn ensure(cond: bool, msg: impl Into<String>) -> Result<(), String> {
+    if cond {
+        Ok(())
+    } else {
+        Err(msg.into())
+    }
+}
+
+pub fn ensure_close(a: f64, b: f64, tol: f64, ctx: &str) -> Result<(), String> {
+    if (a - b).abs() <= tol * (1.0 + a.abs().max(b.abs())) {
+        Ok(())
+    } else {
+        Err(format!("{ctx}: {a} != {b} (tol {tol})"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_runs_all_cases() {
+        forall(50, 1, &vec_f32(1.0), |v| {
+            ensure(!v.is_empty(), "generated empty vec")
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "property failed")]
+    fn failing_property_reports_seed() {
+        forall(50, 2, &usize_in(0, 100), |&n| {
+            ensure(n < 40, format!("n={n} too big"))
+        });
+    }
+
+    #[test]
+    fn pair_generator_composes() {
+        forall(20, 3, &pair(vec_f32(1.0), usize_in(1, 8)), |(v, k)| {
+            ensure(*k >= 1 && !v.is_empty(), "bad pair")
+        });
+    }
+
+    #[test]
+    fn deterministic_given_seed() {
+        let g = vec_f32(1.0);
+        let a = g.generate(&mut Rng::new(7), 10);
+        let b = g.generate(&mut Rng::new(7), 10);
+        assert_eq!(a, b);
+    }
+}

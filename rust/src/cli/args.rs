@@ -1,0 +1,147 @@
+//! Argument parsing: positional command + `--flag value` pairs +
+//! repeatable `--set k=v`.
+
+use std::collections::BTreeMap;
+
+use anyhow::{bail, Result};
+
+#[derive(Clone, Debug, Default)]
+pub struct Args {
+    pub command: String,
+    pub flags: BTreeMap<String, String>,
+    pub sets: Vec<(String, String)>,
+}
+
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum ParsedCommand {
+    Train,
+    Table1,
+    Table2,
+    Figure2,
+    AblateC,
+    Inspect,
+    Help,
+}
+
+/// Flags that take no value.
+const SWITCHES: [&str; 1] = ["verbose"];
+
+impl Args {
+    pub fn parse(argv: &[String]) -> Result<Args> {
+        let mut args = Args::default();
+        if argv.is_empty() {
+            args.command = "help".into();
+            return Ok(args);
+        }
+        args.command = argv[0].clone();
+        let mut i = 1;
+        while i < argv.len() {
+            let a = &argv[i];
+            let Some(name) = a.strip_prefix("--") else {
+                bail!("unexpected positional argument '{a}'");
+            };
+            if SWITCHES.contains(&name) {
+                args.flags.insert(name.to_string(), "true".to_string());
+                i += 1;
+                continue;
+            }
+            let Some(value) = argv.get(i + 1) else {
+                bail!("flag '--{name}' needs a value");
+            };
+            if name == "set" {
+                let Some((k, v)) = value.split_once('=') else {
+                    bail!("--set expects key=value, got '{value}'");
+                };
+                args.sets.push((k.to_string(), v.to_string()));
+            } else {
+                args.flags.insert(name.to_string(), value.clone());
+            }
+            i += 2;
+        }
+        Ok(args)
+    }
+
+    pub fn command(&self) -> Result<ParsedCommand> {
+        Ok(match self.command.as_str() {
+            "train" => ParsedCommand::Train,
+            "table1" => ParsedCommand::Table1,
+            "table2" => ParsedCommand::Table2,
+            "figure2" => ParsedCommand::Figure2,
+            "ablate-c" => ParsedCommand::AblateC,
+            "inspect" => ParsedCommand::Inspect,
+            "help" | "--help" | "-h" => ParsedCommand::Help,
+            other => bail!("unknown command '{other}' (try 'help')"),
+        })
+    }
+
+    pub fn flag(&self, name: &str) -> Option<&str> {
+        self.flags.get(name).map(|s| s.as_str())
+    }
+
+    pub fn flag_or<'a>(&'a self, name: &str, default: &'a str) -> &'a str {
+        self.flag(name).unwrap_or(default)
+    }
+
+    /// Reject flags outside a command's allowed set (typo guard).
+    pub fn restrict(&self, allowed: &[&str]) -> Result<()> {
+        for k in self.flags.keys() {
+            if !allowed.contains(&k.as_str()) {
+                bail!("flag '--{k}' not valid for '{}'", self.command);
+            }
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn v(parts: &[&str]) -> Vec<String> {
+        parts.iter().map(|s| s.to_string()).collect()
+    }
+
+    #[test]
+    fn parses_command_and_flags() {
+        let a = Args::parse(&v(&[
+            "train", "--dataset", "cifar10", "--preset", "quick",
+        ]))
+        .unwrap();
+        assert_eq!(a.command().unwrap(), ParsedCommand::Train);
+        assert_eq!(a.flag("dataset"), Some("cifar10"));
+        assert_eq!(a.flag_or("missing", "x"), "x");
+    }
+
+    #[test]
+    fn parses_repeatable_sets() {
+        let a = Args::parse(&v(&[
+            "train", "--set", "rounds=3", "--set", "beta=0.5",
+        ]))
+        .unwrap();
+        assert_eq!(a.sets.len(), 2);
+        assert_eq!(a.sets[0], ("rounds".into(), "3".into()));
+    }
+
+    #[test]
+    fn rejects_malformed() {
+        assert!(Args::parse(&v(&["train", "stray"])).is_err());
+        assert!(Args::parse(&v(&["train", "--dataset"])).is_err());
+        assert!(Args::parse(&v(&["train", "--set", "noequals"])).is_err());
+        let a = Args::parse(&v(&["frobnicate"])).unwrap();
+        assert!(a.command().is_err());
+    }
+
+    #[test]
+    fn restrict_catches_typos() {
+        let a = Args::parse(&v(&["table2", "--clusterz", "16"])).unwrap();
+        assert!(a.restrict(&["dataset", "clusters"]).is_err());
+        let b = Args::parse(&v(&["table2", "--clusters", "16"])).unwrap();
+        assert!(b.restrict(&["dataset", "clusters"]).is_ok());
+    }
+
+    #[test]
+    fn empty_argv_is_help() {
+        let a = Args::parse(&[]).unwrap();
+        assert_eq!(a.command().unwrap(), ParsedCommand::Help);
+    }
+}

@@ -1,0 +1,41 @@
+//! Hand-rolled CLI layer (clap is not in the vendored crate set).
+//!
+//! Grammar: `fedcompress <command> [--flag value]... [--switch]...`
+//! Flags are collected into an ordered map; commands validate their own
+//! flag sets so typos fail loudly.
+
+pub mod args;
+
+pub use args::{Args, ParsedCommand};
+
+pub const USAGE: &str = "\
+fedcompress — FedCompress reproduction (rust + JAX + Pallas via PJRT)
+
+USAGE:
+    fedcompress <COMMAND> [OPTIONS]
+
+COMMANDS:
+    train       run one federated training experiment
+    table1      reproduce Table 1 (dAcc/CCR/MCR across strategies)
+    table2      reproduce Table 2 (edge inference speedups)
+    figure2     reproduce Figure 2 (score vs accuracy correlation)
+    ablate-c    ablation: dynamic-C controller vs fixed C
+    inspect     print manifest / model / artifact information
+    help        show this message
+
+COMMON OPTIONS:
+    --dataset <name>        cifar10|cifar100|pathmnist|speechcommands|voxforge
+    --strategy <name>       fedavg|fedzip|fedcompress-noscs|fedcompress
+    --preset <paper|quick>  parameter preset (default: quick)
+    --config <file.json>    JSON overrides on top of the preset
+    --set key=value         single override (repeatable)
+    --artifacts <dir>       artifacts directory (default: ./artifacts)
+    --out <file>            write CSV/JSON output where applicable
+    --datasets a,b,c        subset for table1
+    --clusters <n>          deployed cluster count for table2
+
+EXAMPLES:
+    fedcompress train --dataset cifar10 --strategy fedcompress --preset quick
+    fedcompress table1 --preset quick --datasets cifar10,voxforge
+    fedcompress figure2 --dataset speechcommands --out fig2.csv
+";

@@ -1,0 +1,6 @@
+//! Simulated federated client: local compression-aware training plus
+//! the representation-quality score, all through the PJRT runtime.
+
+pub mod trainer;
+
+pub use trainer::{train_local, ClientOutcome};

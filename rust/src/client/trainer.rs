@@ -1,0 +1,170 @@
+//! ClientUpdate (paper Algorithm 1, lines 11-19): E_c epochs of SGD on
+//! L_ce + beta * L_wc, with the beta=0 warmup epochs the paper uses to
+//! protect early representation learning, followed by the
+//! representation-quality score on the unlabeled shard D_u.
+
+use anyhow::Result;
+
+use crate::clustering::{representation_score, CentroidState};
+use crate::config::FedConfig;
+use crate::data::Dataset;
+use crate::runtime::literals::{literal_scalar_f32, literal_to_f32, Arg};
+use crate::runtime::Engine;
+use crate::util::rng::Rng;
+
+#[derive(Clone, Debug)]
+pub struct ClientOutcome {
+    pub theta: Vec<f32>,
+    pub mu: Vec<f32>,
+    /// representation quality score E_k on D_u
+    pub score: f64,
+    /// labeled sample count N_k (FedAvg weight)
+    pub n: usize,
+    pub mean_loss: f32,
+    pub mean_ce: f32,
+    pub steps: usize,
+}
+
+/// Run one client's local update. `use_wc` disables the clustering loss
+/// entirely (FedAvg / FedZip clients train plain CE).
+#[allow(clippy::too_many_arguments)]
+pub fn train_local(
+    engine: &Engine,
+    cfg: &FedConfig,
+    labeled: &Dataset,
+    unlabeled: &Dataset,
+    theta0: &[f32],
+    centroids: &CentroidState,
+    use_wc: bool,
+    rng: &mut Rng,
+) -> Result<ClientOutcome> {
+    let ds = &cfg.dataset;
+    let batch = engine.manifest.batch;
+    let mut theta = theta0.to_vec();
+    let mut mu = centroids.mu.clone();
+    let mask = &centroids.mask;
+
+    let mut loss_sum = 0.0f64;
+    let mut ce_sum = 0.0f64;
+    let mut steps = 0usize;
+
+    for epoch in 0..cfg.local_epochs {
+        let beta = if !use_wc || epoch < cfg.beta_warmup_epochs {
+            0.0
+        } else {
+            cfg.beta
+        };
+        for (xs, ys) in labeled.epoch_batches(batch, rng) {
+            let out = engine.run(
+                ds,
+                "train_step",
+                &[
+                    Arg::F32(&theta),
+                    Arg::F32(&mu),
+                    Arg::F32(mask),
+                    Arg::F32(&xs),
+                    Arg::I32(&ys),
+                    Arg::Scalar(cfg.lr_client),
+                    Arg::Scalar(beta),
+                ],
+            )?;
+            theta = literal_to_f32(&out[0])?;
+            mu = literal_to_f32(&out[1])?;
+            loss_sum += literal_scalar_f32(&out[2])? as f64;
+            ce_sum += literal_scalar_f32(&out[3])? as f64;
+            steps += 1;
+        }
+    }
+
+    let score = compute_score(engine, cfg, unlabeled, &theta)?;
+
+    Ok(ClientOutcome {
+        theta,
+        mu,
+        score,
+        n: labeled.len(),
+        mean_loss: (loss_sum / steps.max(1) as f64) as f32,
+        mean_ce: (ce_sum / steps.max(1) as f64) as f32,
+        steps,
+    })
+}
+
+/// Representation score E on the unlabeled shard: embed through the
+/// penultimate layer, then effective rank of the embedding spectrum.
+pub fn compute_score(
+    engine: &Engine,
+    cfg: &FedConfig,
+    unlabeled: &Dataset,
+    theta: &[f32],
+) -> Result<f64> {
+    let ds = &cfg.dataset;
+    let eval_batch = engine.manifest.eval_batch;
+    let emb_dim = engine.manifest.dataset(ds)?.spec.emb_dim;
+
+    let mut rows: Vec<f32> = Vec::new();
+    let mut n_rows = 0usize;
+    for (xs, _ys, valid) in unlabeled.eval_batches(eval_batch) {
+        let out = engine.run(ds, "embed", &[Arg::F32(theta), Arg::F32(&xs)])?;
+        let emb = literal_to_f32(&out[0])?;
+        rows.extend_from_slice(&emb[..valid * emb_dim]);
+        n_rows += valid;
+    }
+    Ok(representation_score(&rows, n_rows, emb_dim))
+}
+
+/// Evaluate a model on a dataset: (accuracy, mean CE loss).
+pub fn evaluate(
+    engine: &Engine,
+    dataset: &str,
+    data: &Dataset,
+    theta: &[f32],
+) -> Result<(f64, f64)> {
+    let eval_batch = engine.manifest.eval_batch;
+    let mut correct = 0.0f64;
+    let mut loss = 0.0f64;
+    let mut total = 0usize;
+    for (xs, ys, valid) in data.eval_batches(eval_batch) {
+        if valid == eval_batch {
+            let out = engine.run(
+                dataset,
+                "eval_step",
+                &[Arg::F32(theta), Arg::F32(&xs), Arg::I32(&ys)],
+            )?;
+            correct += literal_scalar_f32(&out[0])? as f64;
+            loss += literal_scalar_f32(&out[1])? as f64;
+        } else {
+            // padded tail: count correctness per-sample from eval on the
+            // padded batch minus the padding's contribution is not
+            // separable, so recompute via embed-free path: run eval on a
+            // batch where padding repeats sample 0 and subtract its known
+            // contribution measured on a pure-padding batch.
+            let out = engine.run(
+                dataset,
+                "eval_step",
+                &[Arg::F32(theta), Arg::F32(&xs), Arg::I32(&ys)],
+            )?;
+            let c_all = literal_scalar_f32(&out[0])? as f64;
+            let l_all = literal_scalar_f32(&out[1])? as f64;
+            // padding batch: all slots = sample 0
+            let pad_n = eval_batch - valid;
+            let x0 = &xs[..data.feature_len()];
+            let y0 = ys[0];
+            let mut xs_pad = Vec::with_capacity(xs.len());
+            for _ in 0..eval_batch {
+                xs_pad.extend_from_slice(x0);
+            }
+            let ys_pad = vec![y0; eval_batch];
+            let out_pad = engine.run(
+                dataset,
+                "eval_step",
+                &[Arg::F32(theta), Arg::F32(&xs_pad), Arg::I32(&ys_pad)],
+            )?;
+            let c0 = literal_scalar_f32(&out_pad[0])? as f64 / eval_batch as f64;
+            let l0 = literal_scalar_f32(&out_pad[1])? as f64 / eval_batch as f64;
+            correct += c_all - c0 * pad_n as f64;
+            loss += l_all - l0 * pad_n as f64;
+        }
+        total += valid;
+    }
+    Ok((correct / total as f64, loss / total as f64))
+}

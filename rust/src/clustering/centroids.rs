@@ -1,0 +1,150 @@
+//! Centroid table management around the static C_max AOT interface.
+//!
+//! The HLO artifacts take a fixed-size `mu[C_max]` plus an activity
+//! `mask[C_max]`; the dynamic cluster count C only toggles mask
+//! entries, so one compiled executable serves the whole C schedule.
+//! This module owns the (mu, mask) pair: k-means++ (re)initialization
+//! from a weight vector, mask updates when the controller grows C, and
+//! padding inactive slots harmlessly.
+
+use crate::compression::kmeans::kmeans_pp_init;
+use crate::util::rng::Rng;
+
+#[derive(Clone, Debug)]
+pub struct CentroidState {
+    pub mu: Vec<f32>,
+    pub mask: Vec<f32>,
+    pub c_max: usize,
+    pub active: usize,
+}
+
+impl CentroidState {
+    /// Initialize `active` centroids from the weight distribution via
+    /// k-means++; inactive slots park far outside the weight range so a
+    /// buggy consumer would fail loudly rather than silently.
+    pub fn init_from_weights(
+        weights: &[f32],
+        active: usize,
+        c_max: usize,
+        rng: &mut Rng,
+    ) -> Self {
+        assert!(active >= 1 && active <= c_max);
+        let mut mu = kmeans_pp_init(weights, active, rng);
+        let sentinel = 1e4;
+        mu.resize(c_max, sentinel);
+        let mut mask = vec![0.0f32; c_max];
+        for m in mask.iter_mut().take(active) {
+            *m = 1.0;
+        }
+        CentroidState {
+            mu,
+            mask,
+            c_max,
+            active,
+        }
+    }
+
+    /// Grow the active count, seeding new slots by splitting the widest
+    /// gaps in the current codebook (cheap, keeps existing structure).
+    pub fn grow_to(&mut self, new_active: usize) {
+        assert!(new_active <= self.c_max);
+        while self.active < new_active {
+            let act = &mut self.mu[..self.active];
+            act.sort_by(|a, b| a.partial_cmp(b).unwrap());
+            // widest gap
+            let mut best = (0usize, f32::MIN);
+            for i in 0..self.active - 1 {
+                let gap = act[i + 1] - act[i];
+                if gap > best.1 {
+                    best = (i, gap);
+                }
+            }
+            let new_c = if self.active == 1 {
+                act[0] + 1e-3
+            } else {
+                0.5 * (act[best.0] + act[best.0 + 1])
+            };
+            self.mu[self.active] = new_c;
+            self.mask[self.active] = 1.0;
+            self.active += 1;
+        }
+    }
+
+    /// Active slice of the codebook, sorted ascending.
+    pub fn active_codebook(&self) -> Vec<f32> {
+        let mut v = self.mu[..self.active].to_vec();
+        v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        v
+    }
+
+    /// Replace the active codebook (e.g. after a server-side k-means
+    /// refresh), preserving mask/sentinel structure.
+    pub fn set_active_codebook(&mut self, codebook: &[f32]) {
+        assert!(codebook.len() <= self.c_max);
+        self.active = codebook.len();
+        for (i, m) in self.mu.iter_mut().enumerate() {
+            *m = if i < codebook.len() { codebook[i] } else { 1e4 };
+        }
+        for (i, m) in self.mask.iter_mut().enumerate() {
+            *m = if i < codebook.len() { 1.0 } else { 0.0 };
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn weights() -> Vec<f32> {
+        let mut rng = Rng::new(1);
+        (0..2000).map(|_| rng.normal()).collect()
+    }
+
+    #[test]
+    fn init_shapes_and_mask() {
+        let mut rng = Rng::new(2);
+        let s = CentroidState::init_from_weights(&weights(), 8, 32, &mut rng);
+        assert_eq!(s.mu.len(), 32);
+        assert_eq!(s.mask.len(), 32);
+        assert_eq!(s.mask.iter().filter(|&&m| m == 1.0).count(), 8);
+        // active centroids inside the data range, sentinels way out
+        for i in 0..8 {
+            assert!(s.mu[i].abs() < 10.0);
+        }
+        for i in 8..32 {
+            assert!(s.mu[i] > 100.0);
+        }
+    }
+
+    #[test]
+    fn grow_adds_centroids_in_gaps() {
+        let mut rng = Rng::new(3);
+        let mut s = CentroidState::init_from_weights(&weights(), 8, 32, &mut rng);
+        s.grow_to(16);
+        assert_eq!(s.active, 16);
+        assert_eq!(s.mask.iter().filter(|&&m| m == 1.0).count(), 16);
+        let cb = s.active_codebook();
+        assert_eq!(cb.len(), 16);
+        // still within data range
+        assert!(cb.iter().all(|c| c.abs() < 10.0));
+    }
+
+    #[test]
+    fn set_active_codebook_roundtrip() {
+        let mut rng = Rng::new(4);
+        let mut s = CentroidState::init_from_weights(&weights(), 8, 32, &mut rng);
+        let cb = vec![-1.0f32, 0.0, 1.0];
+        s.set_active_codebook(&cb);
+        assert_eq!(s.active, 3);
+        assert_eq!(s.active_codebook(), cb);
+        assert_eq!(s.mask.iter().filter(|&&m| m == 1.0).count(), 3);
+    }
+
+    #[test]
+    fn grow_from_single() {
+        let mut rng = Rng::new(5);
+        let mut s = CentroidState::init_from_weights(&weights(), 1, 8, &mut rng);
+        s.grow_to(4);
+        assert_eq!(s.active_codebook().len(), 4);
+    }
+}

@@ -1,0 +1,184 @@
+//! Dynamic cluster-count controller (paper Algorithm 1, line 9).
+//!
+//! Start at C_min; after each round push the aggregated representation
+//! score E into a moving average (window W). When MA(E) fails to improve
+//! on the best MA of the previous P rounds, grow C (the model needs
+//! more representational headroom than the current codebook affords),
+//! clamped to [C_min, C_max]. W = P = 3 per the paper.
+
+use crate::util::stats::MovingAverage;
+
+#[derive(Clone, Debug)]
+pub struct ControllerConfig {
+    pub c_min: usize,
+    pub c_max: usize,
+    /// moving-average window W
+    pub window: usize,
+    /// patience P (rounds of no MA improvement before growing C)
+    pub patience: usize,
+    /// additive growth step when a plateau is detected
+    pub step: usize,
+}
+
+impl Default for ControllerConfig {
+    fn default() -> Self {
+        ControllerConfig {
+            // C_min=16 keeps the early clustered rounds learnable on the
+            // ~20k-param testbed models; the paper leaves C_min unstated
+            c_min: 16,
+            c_max: 32,
+            window: 3,
+            patience: 3,
+            step: 8,
+        }
+    }
+}
+
+#[derive(Clone, Debug)]
+pub struct ClusterController {
+    cfg: ControllerConfig,
+    ma: MovingAverage,
+    c: usize,
+    /// rounds since the last growth (growth resets the plateau clock)
+    since_growth: usize,
+    history: Vec<(f64, usize)>, // (score, C after update)
+}
+
+impl ClusterController {
+    pub fn new(cfg: ControllerConfig) -> Self {
+        assert!(cfg.c_min >= 1 && cfg.c_min <= cfg.c_max);
+        assert!(cfg.window >= 1 && cfg.patience >= 1 && cfg.step >= 1);
+        let c = cfg.c_min;
+        ClusterController {
+            ma: MovingAverage::new(cfg.window),
+            cfg,
+            c,
+            since_growth: 0,
+            history: Vec::new(),
+        }
+    }
+
+    pub fn current_c(&self) -> usize {
+        self.c
+    }
+
+    /// Feed the round's aggregated score; returns the C to use next round.
+    pub fn observe(&mut self, score: f64) -> usize {
+        self.ma.push(score);
+        self.since_growth += 1;
+
+        let t = self.ma.len() - 1;
+        // need at least patience+1 MA points since the last growth to judge
+        if self.since_growth > self.cfg.patience && t >= self.cfg.patience {
+            let current = self.ma.at(t).unwrap();
+            let mut best_prev = f64::NEG_INFINITY;
+            for j in 1..=self.cfg.patience {
+                if let Some(v) = self.ma.at(t - j) {
+                    best_prev = best_prev.max(v);
+                }
+            }
+            // no improvement over the recent best -> grow the codebook
+            if current <= best_prev && self.c < self.cfg.c_max {
+                self.c = (self.c + self.cfg.step).min(self.cfg.c_max);
+                self.since_growth = 0;
+            }
+        }
+        self.history.push((score, self.c));
+        self.c
+    }
+
+    pub fn history(&self) -> &[(f64, usize)] {
+        &self.history
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cfg() -> ControllerConfig {
+        ControllerConfig {
+            c_min: 8,
+            c_max: 32,
+            window: 3,
+            patience: 3,
+            step: 8,
+        }
+    }
+
+    #[test]
+    fn starts_at_c_min() {
+        let c = ClusterController::new(cfg());
+        assert_eq!(c.current_c(), 8);
+    }
+
+    #[test]
+    fn improving_scores_keep_c_fixed() {
+        let mut ctl = ClusterController::new(cfg());
+        for i in 0..12 {
+            ctl.observe(1.0 + i as f64 * 0.5);
+        }
+        assert_eq!(ctl.current_c(), 8);
+    }
+
+    #[test]
+    fn plateau_grows_c() {
+        let mut ctl = ClusterController::new(cfg());
+        for _ in 0..3 {
+            ctl.observe(5.0); // warmup
+        }
+        let mut grew_at = None;
+        for i in 0..6 {
+            let c = ctl.observe(5.0); // flat
+            if c > 8 && grew_at.is_none() {
+                grew_at = Some(i);
+            }
+        }
+        assert!(grew_at.is_some(), "plateau never triggered growth");
+        // a persistent plateau keeps growing after each patience window
+        assert!(ctl.current_c() >= 16 && ctl.current_c() <= 32);
+    }
+
+    #[test]
+    fn growth_is_clamped_at_c_max() {
+        let mut ctl = ClusterController::new(cfg());
+        for _ in 0..60 {
+            ctl.observe(3.0);
+        }
+        assert_eq!(ctl.current_c(), 32);
+    }
+
+    #[test]
+    fn growth_resets_patience_clock() {
+        let mut ctl = ClusterController::new(cfg());
+        // force one growth
+        for _ in 0..8 {
+            ctl.observe(2.0);
+        }
+        let c_after = ctl.current_c();
+        assert!(c_after > 8);
+        // the very next flat observation must NOT immediately grow again
+        let c_next = ctl.observe(2.0);
+        assert_eq!(c_next, c_after);
+    }
+
+    #[test]
+    fn noisy_but_rising_scores_do_not_grow() {
+        let mut ctl = ClusterController::new(cfg());
+        let scores = [1.0, 1.4, 1.2, 1.8, 1.6, 2.2, 2.0, 2.6, 2.4, 3.0];
+        for s in scores {
+            ctl.observe(s);
+        }
+        assert_eq!(ctl.current_c(), 8, "rising trend misread as plateau");
+    }
+
+    #[test]
+    fn history_records_everything() {
+        let mut ctl = ClusterController::new(cfg());
+        for i in 0..5 {
+            ctl.observe(i as f64);
+        }
+        assert_eq!(ctl.history().len(), 5);
+        assert_eq!(ctl.history()[2].0, 2.0);
+    }
+}

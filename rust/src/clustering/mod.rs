@@ -1,0 +1,13 @@
+//! The paper's adaptive-clustering machinery:
+//! * `score`      — representation quality score E (effective rank of
+//!                  penultimate embeddings, Roy & Vetterli 2007)
+//! * `controller` — dynamic cluster-count schedule driven by MA(E)
+//! * `centroids`  — codebook/mask management around the AOT C_max table
+
+pub mod centroids;
+pub mod controller;
+pub mod score;
+
+pub use centroids::CentroidState;
+pub use controller::{ClusterController, ControllerConfig};
+pub use score::representation_score;

@@ -1,0 +1,109 @@
+//! Representation quality score (paper §1.2, "Dynamic Weight-Clustering").
+//!
+//! E = exp(-sum_j r_j log r_j) with r_j = sigma_j / ||sigma||_1 the
+//! normalized singular values of the embedding matrix Z (N x d) — the
+//! *effective rank* of the embeddings. E in [1, min(N, d)]; higher
+//! means richer representations. Computed client-side on the unlabeled
+//! shard D_u with no labels.
+
+use crate::linalg::{singular_values, Matrix};
+
+/// Numerical-stability epsilon (the paper adds 1e-7 to r_j).
+const EPS: f64 = 1e-7;
+
+/// Score from a row-major f32 embedding buffer (n rows x d cols).
+pub fn representation_score(embeddings: &[f32], n: usize, d: usize) -> f64 {
+    assert_eq!(embeddings.len(), n * d, "embedding buffer shape mismatch");
+    if n == 0 || d == 0 {
+        return 1.0;
+    }
+    let z = Matrix::from_f32_rows(embeddings, n, d);
+    let sigma = singular_values(&z);
+    effective_rank(&sigma)
+}
+
+/// exp(entropy) of the normalized singular-value distribution.
+pub fn effective_rank(sigma: &[f64]) -> f64 {
+    let total: f64 = sigma.iter().sum();
+    if total <= 0.0 {
+        return 1.0; // all-zero embeddings: rank collapses to 1 by convention
+    }
+    let mut h = 0.0;
+    for &s in sigma {
+        let r = s / total + EPS;
+        h -= r * r.ln();
+    }
+    h.exp().max(1.0)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn identity_like_embeddings_have_full_rank() {
+        // orthogonal rows with equal norms -> E ~ d
+        let d = 8;
+        let mut buf = vec![0.0f32; d * d];
+        for i in 0..d {
+            buf[i * d + i] = 1.0;
+        }
+        let e = representation_score(&buf, d, d);
+        assert!((e - d as f64).abs() < 0.01, "{e}");
+    }
+
+    #[test]
+    fn rank_one_embeddings_score_one() {
+        // every row identical -> single singular direction
+        let d = 16;
+        let n = 32;
+        let row: Vec<f32> = (0..d).map(|j| (j as f32) * 0.1 + 1.0).collect();
+        let mut buf = Vec::with_capacity(n * d);
+        for _ in 0..n {
+            buf.extend_from_slice(&row);
+        }
+        let e = representation_score(&buf, n, d);
+        assert!(e < 1.1, "{e}");
+    }
+
+    #[test]
+    fn score_monotone_in_spectrum_spread() {
+        // flatter spectra -> higher effective rank
+        let flat = vec![1.0f64; 10];
+        let spiky = {
+            let mut v = vec![0.01f64; 10];
+            v[0] = 10.0;
+            v
+        };
+        assert!(effective_rank(&flat) > effective_rank(&spiky));
+        assert!((effective_rank(&flat) - 10.0).abs() < 0.01);
+    }
+
+    #[test]
+    fn random_embeddings_between_one_and_d() {
+        let mut rng = Rng::new(3);
+        let (n, d) = (64, 32);
+        let buf: Vec<f32> = (0..n * d).map(|_| rng.normal()).collect();
+        let e = representation_score(&buf, n, d);
+        assert!(e > 1.0 && e <= d as f64 + 1e-9, "{e}");
+        // gaussian embeddings are nearly full rank
+        assert!(e > d as f64 * 0.7, "{e}");
+    }
+
+    #[test]
+    fn zero_embeddings_convention() {
+        let buf = vec![0.0f32; 10 * 4];
+        assert_eq!(representation_score(&buf, 10, 4), 1.0);
+    }
+
+    #[test]
+    fn score_is_scale_invariant() {
+        let mut rng = Rng::new(5);
+        let buf: Vec<f32> = (0..20 * 8).map(|_| rng.normal()).collect();
+        let scaled: Vec<f32> = buf.iter().map(|x| x * 37.5).collect();
+        let a = representation_score(&buf, 20, 8);
+        let b = representation_score(&scaled, 20, 8);
+        assert!((a - b).abs() < 1e-6, "{a} vs {b}");
+    }
+}

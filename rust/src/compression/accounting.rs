@@ -1,0 +1,117 @@
+//! Byte-exact bidirectional communication ledger.
+//!
+//! CCR in Table 1 is `total_bytes(FedAvg) / total_bytes(method)` over a
+//! full training run, counting every server->client dispatch and every
+//! client->server upload. The ledger records each transfer with its
+//! direction and round so experiment drivers can reproduce both the
+//! totals and per-round traces.
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Direction {
+    /// server -> client (model dispatch)
+    Down,
+    /// client -> server (update upload)
+    Up,
+}
+
+#[derive(Clone, Debug)]
+pub struct Transfer {
+    pub round: usize,
+    pub direction: Direction,
+    pub bytes: usize,
+}
+
+#[derive(Clone, Debug, Default)]
+pub struct CommLedger {
+    transfers: Vec<Transfer>,
+}
+
+impl CommLedger {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn record(&mut self, round: usize, direction: Direction, bytes: usize) {
+        self.transfers.push(Transfer {
+            round,
+            direction,
+            bytes,
+        });
+    }
+
+    pub fn total_bytes(&self) -> usize {
+        self.transfers.iter().map(|t| t.bytes).sum()
+    }
+
+    pub fn bytes_in(&self, direction: Direction) -> usize {
+        self.transfers
+            .iter()
+            .filter(|t| t.direction == direction)
+            .map(|t| t.bytes)
+            .sum()
+    }
+
+    pub fn round_bytes(&self, round: usize) -> usize {
+        self.transfers
+            .iter()
+            .filter(|t| t.round == round)
+            .map(|t| t.bytes)
+            .sum()
+    }
+
+    pub fn transfer_count(&self) -> usize {
+        self.transfers.len()
+    }
+
+    /// Per-round byte totals as a series (for the communication trace).
+    pub fn per_round(&self, rounds: usize) -> Vec<usize> {
+        let mut v = vec![0usize; rounds];
+        for t in &self.transfers {
+            if t.round < rounds {
+                v[t.round] += t.bytes;
+            }
+        }
+        v
+    }
+}
+
+/// CCR versus a baseline ledger (paper's headline metric).
+pub fn ccr(baseline: &CommLedger, method: &CommLedger) -> f64 {
+    baseline.total_bytes() as f64 / method.total_bytes().max(1) as f64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn totals_and_directions() {
+        let mut l = CommLedger::new();
+        l.record(0, Direction::Down, 100);
+        l.record(0, Direction::Up, 40);
+        l.record(1, Direction::Down, 100);
+        l.record(1, Direction::Up, 30);
+        assert_eq!(l.total_bytes(), 270);
+        assert_eq!(l.bytes_in(Direction::Down), 200);
+        assert_eq!(l.bytes_in(Direction::Up), 70);
+        assert_eq!(l.round_bytes(1), 130);
+        assert_eq!(l.per_round(2), vec![140, 130]);
+    }
+
+    #[test]
+    fn ccr_ratio() {
+        let mut base = CommLedger::new();
+        base.record(0, Direction::Down, 1000);
+        let mut m = CommLedger::new();
+        m.record(0, Direction::Down, 250);
+        assert!((ccr(&base, &m) - 4.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn empty_method_ledger_does_not_divide_by_zero() {
+        let mut base = CommLedger::new();
+        base.record(0, Direction::Down, 10);
+        let m = CommLedger::new();
+        assert!(ccr(&base, &m).is_finite());
+    }
+}

@@ -1,0 +1,154 @@
+//! Delta transport (extension beyond the paper, DESIGN.md §4 A-series):
+//! when consecutive rounds share most cluster assignments, sending only
+//! the *changed* indices (position-delta + new index) beats re-sending
+//! the full stream. The encoder picks whichever is smaller and flags it,
+//! so the receiver is format-agnostic. This is the natural next step the
+//! paper's conclusion gestures at for the downstream channel.
+
+use anyhow::{bail, Result};
+
+use crate::util::bitio::{BitReader, BitWriter};
+
+/// Encode the difference between two assignment streams of equal length
+/// over a `c`-symbol alphabet. Returns None when delta would not beat
+/// the dense stream (caller then ships the dense encoding).
+pub fn delta_encode(prev: &[u32], cur: &[u32], c: usize) -> Option<Vec<u8>> {
+    assert_eq!(prev.len(), cur.len());
+    let idx_bits = crate::compression::codec::index_bits(c);
+    // positions are gap-coded with a fixed width chosen from the largest gap
+    let changes: Vec<(usize, u32)> = prev
+        .iter()
+        .zip(cur)
+        .enumerate()
+        .filter(|(_, (a, b))| a != b)
+        .map(|(i, (_, &b))| (i, b))
+        .collect();
+    if changes.is_empty() {
+        // header-only blob
+        let mut w = BitWriter::new();
+        w.write(0, 32);
+        return Some(w.into_bytes());
+    }
+    let mut max_gap = changes[0].0;
+    for win in changes.windows(2) {
+        max_gap = max_gap.max(win[1].0 - win[0].0);
+    }
+    let gap_bits = (usize::BITS - max_gap.max(1).leading_zeros()).max(1);
+    let total_bits =
+        32 + 8 + changes.len() * (gap_bits as usize + idx_bits as usize);
+    let dense_bits = cur.len() * idx_bits as usize;
+    if total_bits >= dense_bits {
+        return None;
+    }
+
+    let mut w = BitWriter::new();
+    w.write(changes.len() as u32, 32);
+    w.write(gap_bits, 8);
+    let mut last = 0usize;
+    for (i, (pos, val)) in changes.iter().enumerate() {
+        let gap = if i == 0 { *pos } else { pos - last };
+        w.write(gap as u32, gap_bits);
+        w.write(*val, idx_bits);
+        last = *pos;
+    }
+    Some(w.into_bytes())
+}
+
+/// Apply a delta blob on top of the previous stream.
+pub fn delta_decode(prev: &[u32], blob: &[u8], c: usize) -> Result<Vec<u32>> {
+    let idx_bits = crate::compression::codec::index_bits(c);
+    let mut r = BitReader::new(blob);
+    let n_changes = match r.read(32) {
+        Some(n) => n as usize,
+        None => bail!("truncated delta header"),
+    };
+    let mut cur = prev.to_vec();
+    if n_changes == 0 {
+        return Ok(cur);
+    }
+    let gap_bits = match r.read(8) {
+        Some(g) if (1..=32).contains(&g) => g,
+        _ => bail!("bad gap width"),
+    };
+    let mut pos = 0usize;
+    for i in 0..n_changes {
+        let gap = r.read(gap_bits).ok_or_else(|| anyhow::anyhow!("truncated gaps"))? as usize;
+        let val = r.read(idx_bits).ok_or_else(|| anyhow::anyhow!("truncated values"))?;
+        pos = if i == 0 { gap } else { pos + gap };
+        if pos >= cur.len() {
+            bail!("delta position {pos} out of range");
+        }
+        if val as usize >= c {
+            bail!("delta value out of alphabet");
+        }
+        cur[pos] = val;
+    }
+    Ok(cur)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn identical_streams_cost_header_only() {
+        let s: Vec<u32> = (0..1000).map(|i| (i % 16) as u32).collect();
+        let blob = delta_encode(&s, &s, 16).unwrap();
+        assert!(blob.len() <= 4);
+        assert_eq!(delta_decode(&s, &blob, 16).unwrap(), s);
+    }
+
+    #[test]
+    fn sparse_changes_beat_dense() {
+        let mut rng = Rng::new(1);
+        let prev: Vec<u32> = (0..20_000).map(|_| rng.below(16) as u32).collect();
+        let mut cur = prev.clone();
+        for _ in 0..200 {
+            let i = rng.below(cur.len());
+            cur[i] = rng.below(16) as u32;
+        }
+        let blob = delta_encode(&prev, &cur, 16).expect("should beat dense");
+        let dense_bytes = 20_000 * 4 / 8;
+        assert!(blob.len() < dense_bytes / 4, "{}", blob.len());
+        assert_eq!(delta_decode(&prev, &blob, 16).unwrap(), cur);
+    }
+
+    #[test]
+    fn dense_changes_fall_back() {
+        let mut rng = Rng::new(2);
+        let prev: Vec<u32> = (0..1000).map(|_| rng.below(16) as u32).collect();
+        let cur: Vec<u32> = (0..1000).map(|_| rng.below(16) as u32).collect();
+        // ~94% positions differ: delta must decline
+        assert!(delta_encode(&prev, &cur, 16).is_none());
+    }
+
+    #[test]
+    fn random_roundtrip_property() {
+        let mut rng = Rng::new(3);
+        for _ in 0..30 {
+            let n = 1 + rng.below(5000);
+            let c = 2 + rng.below(31);
+            let prev: Vec<u32> = (0..n).map(|_| rng.below(c) as u32).collect();
+            let mut cur = prev.clone();
+            let flips = rng.below(n / 4 + 1);
+            for _ in 0..flips {
+                let i = rng.below(n);
+                cur[i] = rng.below(c) as u32;
+            }
+            if let Some(blob) = delta_encode(&prev, &cur, c) {
+                assert_eq!(delta_decode(&prev, &blob, c).unwrap(), cur);
+            }
+        }
+    }
+
+    #[test]
+    fn corrupt_blob_rejected() {
+        let prev: Vec<u32> = (0..100).map(|i| (i % 8) as u32).collect();
+        let mut cur = prev.clone();
+        cur[50] = 7;
+        let mut blob = delta_encode(&prev, &cur, 8).unwrap();
+        blob.truncate(4); // header claims 1 change, body gone
+        assert!(delta_decode(&prev, &blob, 8).is_err());
+    }
+}

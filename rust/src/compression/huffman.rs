@@ -1,0 +1,305 @@
+//! Canonical Huffman coder over small alphabets (cluster indices).
+//!
+//! FedZip's entropy stage: after pruning + clustering, index streams are
+//! heavily skewed (the zero cluster dominates), so Huffman beats flat
+//! bit-packing. Canonical form keeps the serialized table tiny: one
+//! code length per symbol.
+
+use crate::util::bitio::{BitReader, BitWriter};
+use anyhow::{bail, Result};
+
+/// Build canonical code lengths for `freqs` (package-merge-free simple
+/// Huffman; alphabet <= 256 so the O(n^2) heapless build is fine).
+/// Symbols with zero frequency get length 0 (absent).
+pub fn code_lengths(freqs: &[u64]) -> Vec<u8> {
+    let n = freqs.len();
+    let present: Vec<usize> = (0..n).filter(|&i| freqs[i] > 0).collect();
+    let mut lengths = vec![0u8; n];
+    match present.len() {
+        0 => return lengths,
+        1 => {
+            lengths[present[0]] = 1;
+            return lengths;
+        }
+        _ => {}
+    }
+
+    // nodes: (weight, id); internal nodes get ids >= n
+    #[derive(Clone)]
+    struct Node {
+        weight: u64,
+        left: Option<usize>,
+        right: Option<usize>,
+        symbol: Option<usize>,
+    }
+    let mut nodes: Vec<Node> = present
+        .iter()
+        .map(|&s| Node {
+            weight: freqs[s],
+            left: None,
+            right: None,
+            symbol: Some(s),
+        })
+        .collect();
+    let mut heap: Vec<usize> = (0..nodes.len()).collect();
+
+    while heap.len() > 1 {
+        // pick two smallest (linear scan; alphabet tiny)
+        heap.sort_by_key(|&i| std::cmp::Reverse(nodes[i].weight));
+        let a = heap.pop().unwrap();
+        let b = heap.pop().unwrap();
+        let parent = Node {
+            weight: nodes[a].weight + nodes[b].weight,
+            left: Some(a),
+            right: Some(b),
+            symbol: None,
+        };
+        nodes.push(parent);
+        heap.push(nodes.len() - 1);
+    }
+
+    // DFS to get depths
+    let root = heap[0];
+    let mut stack = vec![(root, 0u8)];
+    while let Some((i, depth)) = stack.pop() {
+        if let Some(s) = nodes[i].symbol {
+            lengths[s] = depth.max(1);
+        } else {
+            stack.push((nodes[i].left.unwrap(), depth + 1));
+            stack.push((nodes[i].right.unwrap(), depth + 1));
+        }
+    }
+    lengths
+}
+
+/// Canonical codes from lengths: symbols sorted by (length, symbol).
+/// Returns (code, length) per symbol; length 0 = absent.
+pub fn canonical_codes(lengths: &[u8]) -> Vec<(u32, u8)> {
+    let mut order: Vec<usize> = (0..lengths.len()).filter(|&i| lengths[i] > 0).collect();
+    order.sort_by_key(|&i| (lengths[i], i));
+    let mut codes = vec![(0u32, 0u8); lengths.len()];
+    let mut code = 0u32;
+    let mut prev_len = 0u8;
+    for &s in &order {
+        code <<= lengths[s] - prev_len;
+        codes[s] = (code, lengths[s]);
+        prev_len = lengths[s];
+        code += 1;
+    }
+    codes
+}
+
+/// Encoded stream: canonical table (lengths) + MSB-first code bits.
+pub struct HuffmanEncoded {
+    pub lengths: Vec<u8>,
+    pub payload: Vec<u8>,
+    pub n_symbols: usize,
+    pub payload_bits: usize,
+}
+
+impl HuffmanEncoded {
+    /// Wire size in bytes: 1 length byte per alphabet symbol + payload.
+    pub fn wire_bytes(&self) -> usize {
+        self.lengths.len() + self.payload_bits.div_ceil(8) + 8 // + u64 count
+    }
+}
+
+pub fn huffman_encode(symbols: &[u32], alphabet: usize) -> HuffmanEncoded {
+    let mut freqs = vec![0u64; alphabet];
+    for &s in symbols {
+        freqs[s as usize] += 1;
+    }
+    let lengths = code_lengths(&freqs);
+    let codes = canonical_codes(&lengths);
+    // Precompute bit-reversed codes so each symbol is ONE BitWriter
+    // call: the writer is LSB-first, canonical decoding reads MSB-first,
+    // and reversing the code bridges the two (perf pass §Perf).
+    let rev: Vec<(u32, u32)> = codes
+        .iter()
+        .map(|&(code, len)| {
+            if len == 0 {
+                (0, 0)
+            } else {
+                (code.reverse_bits() >> (32 - len as u32), len as u32)
+            }
+        })
+        .collect();
+    let mut w = BitWriter::new();
+    for &s in symbols {
+        let (code, len) = rev[s as usize];
+        w.write(code, len);
+    }
+    let payload_bits = w.bit_len();
+    HuffmanEncoded {
+        lengths,
+        payload: w.into_bytes(),
+        n_symbols: symbols.len(),
+        payload_bits,
+    }
+}
+
+pub fn huffman_decode(enc: &HuffmanEncoded) -> Result<Vec<u32>> {
+    // Canonical limit/base decoding (perf pass, EXPERIMENTS.md §Perf):
+    // per code length L keep the largest canonical code (`limit[L]`) and
+    // the symbol-table offset of the first code of that length
+    // (`base[L]`); decoding a symbol is then one compare per bit and one
+    // array index at the end — O(code length), no table scan.
+    let max_len = *enc.lengths.iter().max().unwrap_or(&0) as usize;
+    if max_len == 0 {
+        if enc.n_symbols == 0 {
+            return Ok(Vec::new());
+        }
+        bail!("empty code table with nonempty stream");
+    }
+    if max_len > 32 {
+        bail!("code length overflow (corrupt table)");
+    }
+
+    // symbols ordered canonically: by (length, symbol id)
+    let mut order: Vec<usize> = (0..enc.lengths.len())
+        .filter(|&s| enc.lengths[s] > 0)
+        .collect();
+    order.sort_by_key(|&s| (enc.lengths[s], s));
+
+    // first_code[l], limit[l] (largest code of length l), base[l]
+    // (index into `order` of the first symbol of length l)
+    let mut count = vec![0u32; max_len + 1];
+    for &s in &order {
+        count[enc.lengths[s] as usize] += 1;
+    }
+    let mut first_code = vec![0u32; max_len + 2];
+    let mut base = vec![0u32; max_len + 1];
+    let mut code = 0u32;
+    let mut idx = 0u32;
+    for l in 1..=max_len {
+        first_code[l] = code;
+        base[l] = idx;
+        code = code.wrapping_add(count[l]);
+        idx += count[l];
+        code <<= 1;
+    }
+
+    let mut r = BitReader::new(&enc.payload);
+    let mut out = Vec::with_capacity(enc.n_symbols);
+    for _ in 0..enc.n_symbols {
+        let mut code = 0u32;
+        let mut len = 0usize;
+        loop {
+            let bit = match r.read_bit() {
+                Some(b) => b,
+                None => bail!("truncated huffman stream"),
+            };
+            code = (code << 1) | bit as u32;
+            len += 1;
+            if len > max_len {
+                bail!("invalid code (corrupt stream)");
+            }
+            // valid iff code falls inside this length's canonical range
+            let offset = code.wrapping_sub(first_code[len]);
+            if count[len] > 0 && offset < count[len] {
+                out.push(order[(base[len] + offset) as usize] as u32);
+                break;
+            }
+        }
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn roundtrip_skewed() {
+        let mut rng = Rng::new(1);
+        let symbols: Vec<u32> = (0..5000)
+            .map(|_| rng.categorical(&[80.0, 10.0, 5.0, 3.0, 2.0]) as u32)
+            .collect();
+        let enc = huffman_encode(&symbols, 5);
+        let dec = huffman_decode(&enc).unwrap();
+        assert_eq!(symbols, dec);
+    }
+
+    #[test]
+    fn skewed_beats_flat_packing() {
+        let mut rng = Rng::new(2);
+        let symbols: Vec<u32> = (0..20_000)
+            .map(|_| {
+                rng.categorical(&[900.0, 30.0, 20.0, 15.0, 10.0, 10.0, 10.0, 5.0]) as u32
+            })
+            .collect();
+        let enc = huffman_encode(&symbols, 8);
+        let flat_bits = symbols.len() * 3; // log2(8)
+        assert!(
+            enc.payload_bits < flat_bits / 2,
+            "{} vs {}",
+            enc.payload_bits,
+            flat_bits
+        );
+        assert_eq!(huffman_decode(&enc).unwrap(), symbols);
+    }
+
+    #[test]
+    fn uniform_close_to_flat() {
+        let mut rng = Rng::new(3);
+        let symbols: Vec<u32> = (0..8192).map(|_| rng.below(16) as u32).collect();
+        let enc = huffman_encode(&symbols, 16);
+        let flat_bits = symbols.len() * 4;
+        assert!(enc.payload_bits <= flat_bits + flat_bits / 10);
+        assert_eq!(huffman_decode(&enc).unwrap(), symbols);
+    }
+
+    #[test]
+    fn single_symbol_alphabet() {
+        let symbols = vec![3u32; 100];
+        let enc = huffman_encode(&symbols, 8);
+        assert_eq!(enc.payload_bits, 100); // 1 bit per symbol minimum
+        assert_eq!(huffman_decode(&enc).unwrap(), symbols);
+    }
+
+    #[test]
+    fn empty_stream() {
+        let enc = huffman_encode(&[], 4);
+        assert_eq!(huffman_decode(&enc).unwrap(), Vec::<u32>::new());
+    }
+
+    #[test]
+    fn kraft_inequality_holds() {
+        // property: sum(2^-len) <= 1 for every generated code
+        let mut rng = Rng::new(4);
+        for _ in 0..20 {
+            let k = 2 + rng.below(30);
+            let freqs: Vec<u64> = (0..k).map(|_| rng.below(1000) as u64).collect();
+            let lengths = code_lengths(&freqs);
+            let kraft: f64 = lengths
+                .iter()
+                .filter(|&&l| l > 0)
+                .map(|&l| 2.0f64.powi(-(l as i32)))
+                .sum();
+            assert!(kraft <= 1.0 + 1e-12, "kraft {kraft}");
+        }
+    }
+
+    #[test]
+    fn prefix_free_property() {
+        let freqs = [50u64, 20, 10, 8, 6, 4, 2];
+        let codes = canonical_codes(&code_lengths(&freqs));
+        for (i, &(ci, li)) in codes.iter().enumerate() {
+            for (j, &(cj, lj)) in codes.iter().enumerate() {
+                if i == j || li == 0 || lj == 0 || li > lj {
+                    continue;
+                }
+                assert_ne!(cj >> (lj - li), ci, "code {i} prefixes {j}");
+            }
+        }
+    }
+
+    #[test]
+    fn truncated_stream_errors() {
+        let symbols: Vec<u32> = (0..100).map(|i| (i % 4) as u32).collect();
+        let mut enc = huffman_encode(&symbols, 4);
+        enc.payload.truncate(enc.payload.len() / 2);
+        assert!(huffman_decode(&enc).is_err());
+    }
+}

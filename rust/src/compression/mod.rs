@@ -1,0 +1,21 @@
+//! Model-compression substrate: everything that turns a flat f32
+//! parameter vector into bytes on the (simulated) wire and back.
+//!
+//! * `kmeans`    — 1-D Lloyd's algorithm + k-means++ init (codebook fit)
+//! * `codec`     — clustered-weight wire format: codebook + bit-packed
+//!                 indices (FedCompress's transport)
+//! * `huffman`   — canonical Huffman coder over index streams (FedZip's
+//!                 extra entropy stage)
+//! * `sparsify`  — magnitude pruning (FedZip's first stage)
+//! * `accounting`— byte-exact bidirectional communication ledger (CCR)
+
+pub mod accounting;
+pub mod codec;
+pub mod delta;
+pub mod huffman;
+pub mod kmeans;
+pub mod sparsify;
+
+pub use accounting::CommLedger;
+pub use codec::{decode, encode, EncodedModel};
+pub use kmeans::{kmeans_1d, kmeans_pp_init};

@@ -1,0 +1,83 @@
+//! Magnitude sparsification — FedZip's first stage (Malekijoo 2021
+//! prunes with top-z magnitude selection before clustering).
+
+/// Zero out all but the top `keep_fraction` of weights by |magnitude|.
+/// Returns the number of survivors. Deterministic tie handling.
+pub fn magnitude_prune(weights: &mut [f32], keep_fraction: f64) -> usize {
+    assert!((0.0..=1.0).contains(&keep_fraction));
+    let n = weights.len();
+    let keep = ((n as f64) * keep_fraction).round() as usize;
+    if keep >= n {
+        return n;
+    }
+    if keep == 0 {
+        weights.iter_mut().for_each(|w| *w = 0.0);
+        return 0;
+    }
+    // threshold = keep-th largest |w| via select_nth on a copy
+    let mut mags: Vec<f32> = weights.iter().map(|w| w.abs()).collect();
+    let kth = n - keep;
+    mags.select_nth_unstable_by(kth, |a, b| a.partial_cmp(b).unwrap());
+    let threshold = mags[kth];
+
+    // keep strictly-above first, then fill ties deterministically
+    let mut survivors = 0usize;
+    for w in weights.iter() {
+        if w.abs() > threshold {
+            survivors += 1;
+        }
+    }
+    let mut ties_to_keep = keep.saturating_sub(survivors);
+    for w in weights.iter_mut() {
+        let m = w.abs();
+        if m > threshold {
+            continue;
+        }
+        if m == threshold && ties_to_keep > 0 {
+            ties_to_keep -= 1;
+            continue;
+        }
+        *w = 0.0;
+    }
+    weights.iter().filter(|w| **w != 0.0).count()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn keeps_exactly_the_fraction() {
+        let mut rng = Rng::new(1);
+        let mut w: Vec<f32> = (0..1000).map(|_| rng.normal()).collect();
+        let kept = magnitude_prune(&mut w, 0.3);
+        let nonzero = w.iter().filter(|x| **x != 0.0).count();
+        assert_eq!(kept, nonzero);
+        assert!((295..=305).contains(&kept), "{kept}");
+    }
+
+    #[test]
+    fn keeps_the_largest() {
+        let mut w = vec![0.1f32, -5.0, 0.2, 3.0, -0.05, 1.0];
+        magnitude_prune(&mut w, 0.5);
+        assert_eq!(w, vec![0.0, -5.0, 0.0, 3.0, 0.0, 1.0]);
+    }
+
+    #[test]
+    fn extremes() {
+        let mut w = vec![1.0f32, 2.0, 3.0];
+        assert_eq!(magnitude_prune(&mut w, 1.0), 3);
+        assert_eq!(w, vec![1.0, 2.0, 3.0]);
+        assert_eq!(magnitude_prune(&mut w, 0.0), 0);
+        assert_eq!(w, vec![0.0, 0.0, 0.0]);
+    }
+
+    #[test]
+    fn ties_handled_deterministically() {
+        let mut w = vec![1.0f32; 10];
+        let kept = magnitude_prune(&mut w, 0.5);
+        assert_eq!(kept, 5);
+        assert_eq!(w.iter().filter(|x| **x != 0.0).count(), 5);
+    }
+}

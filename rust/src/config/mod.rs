@@ -1,0 +1,273 @@
+//! Typed experiment configuration with JSON file loading, CLI override
+//! hooks, validation, and the two standard presets:
+//! * `paper`  — Table 1 parameters (R=20, M=20, E_c=10, E_s=10, σ=25%)
+//! * `quick`  — CI-sized preset exercising every code path in minutes
+
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+use crate::clustering::ControllerConfig;
+use crate::util::json::Json;
+
+/// Which training strategy to run (Table 1's four columns).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Strategy {
+    FedAvg,
+    FedZip,
+    /// FedCompress without Self-Compression on Server (ablation column)
+    FedCompressNoScs,
+    FedCompress,
+}
+
+impl Strategy {
+    pub fn parse(s: &str) -> Result<Strategy> {
+        Ok(match s.to_ascii_lowercase().as_str() {
+            "fedavg" => Strategy::FedAvg,
+            "fedzip" => Strategy::FedZip,
+            "fedcompress-noscs" | "noscs" => Strategy::FedCompressNoScs,
+            "fedcompress" => Strategy::FedCompress,
+            other => bail!("unknown strategy '{other}'"),
+        })
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            Strategy::FedAvg => "fedavg",
+            Strategy::FedZip => "fedzip",
+            Strategy::FedCompressNoScs => "fedcompress-noscs",
+            Strategy::FedCompress => "fedcompress",
+        }
+    }
+
+    pub const ALL: [Strategy; 4] = [
+        Strategy::FedAvg,
+        Strategy::FedZip,
+        Strategy::FedCompressNoScs,
+        Strategy::FedCompress,
+    ];
+}
+
+#[derive(Clone, Debug)]
+pub struct FedConfig {
+    pub dataset: String,
+    /// federated rounds R
+    pub rounds: usize,
+    /// total clients M
+    pub clients: usize,
+    /// fraction of clients participating per round
+    pub participation: f64,
+    /// local train epochs E_c
+    pub local_epochs: usize,
+    /// server self-compression epochs E_s
+    pub server_epochs: usize,
+    /// total training samples (partitioned across clients)
+    pub train_size: usize,
+    pub test_size: usize,
+    /// server OOD set size
+    pub ood_size: usize,
+    /// per-client unlabeled shard |D_u| (carved from the client's data)
+    pub unlabeled_per_client: usize,
+    /// label heterogeneity (paper's sigma, 0.25 in Table 1)
+    pub sigma: f64,
+    pub lr_client: f32,
+    pub lr_server: f32,
+    /// weight-clustering loss weight once engaged
+    pub beta: f32,
+    /// local epochs with beta=0 before engaging L_wc (paper §1.2)
+    pub beta_warmup_epochs: usize,
+    /// federated rounds of plain L_ce (dense wire, no SCS) before the
+    /// compression machinery engages. The paper "allow[s] for a few
+    /// training rounds using L_ce before introducing L_wc"; its 4.5x
+    /// CCR over R=20 back-solves to ~2-3 dense rounds (DESIGN.md §3).
+    pub warmup_rounds: usize,
+    /// distillation temperature lambda
+    pub temperature: f32,
+    pub controller: ControllerConfig,
+    /// FedZip's fixed cluster count (paper: 15)
+    pub fedzip_clusters: usize,
+    /// FedZip magnitude-prune keep fraction
+    pub fedzip_keep: f64,
+    pub seed: u64,
+}
+
+impl FedConfig {
+    /// Table 1 parameters.
+    pub fn paper(dataset: &str) -> FedConfig {
+        FedConfig {
+            dataset: dataset.to_string(),
+            rounds: 20,
+            clients: 20,
+            participation: 1.0,
+            local_epochs: 10,
+            server_epochs: 10,
+            train_size: 2000,
+            test_size: 512,
+            ood_size: 256,
+            unlabeled_per_client: 32,
+            sigma: 0.25,
+            lr_client: 0.05,
+            lr_server: 0.05,
+            beta: 0.1,
+            beta_warmup_epochs: 5,
+            warmup_rounds: 3,
+            temperature: 2.0,
+            controller: ControllerConfig::default(),
+            fedzip_clusters: 15,
+            fedzip_keep: 0.6,
+            seed: 42,
+        }
+    }
+
+    /// Small preset for CI / smoke experiments: every code path, minutes
+    /// not hours.
+    pub fn quick(dataset: &str) -> FedConfig {
+        FedConfig {
+            rounds: 8,
+            clients: 6,
+            local_epochs: 6,
+            server_epochs: 3,
+            train_size: 576,
+            test_size: 192,
+            ood_size: 96,
+            unlabeled_per_client: 32,
+            beta_warmup_epochs: 3,
+            warmup_rounds: 2,
+            ..FedConfig::paper(dataset)
+        }
+    }
+
+    pub fn validate(&self) -> Result<()> {
+        if self.rounds == 0 || self.clients == 0 {
+            bail!("rounds and clients must be positive");
+        }
+        if !(0.0..=1.0).contains(&self.participation) || self.participation == 0.0 {
+            bail!("participation must be in (0, 1]");
+        }
+        if self.train_size / self.clients < 8 {
+            bail!(
+                "too little data per client: {} samples / {} clients",
+                self.train_size,
+                self.clients
+            );
+        }
+        if !(0.0..1.0).contains(&self.sigma) {
+            bail!("sigma must be in [0, 1)");
+        }
+        if self.controller.c_min < 2 {
+            bail!("c_min must be >= 2");
+        }
+        Ok(())
+    }
+
+    /// Apply `key=value` overrides (CLI `--set`).
+    pub fn set(&mut self, key: &str, value: &str) -> Result<()> {
+        let e = || format!("invalid value '{value}' for '{key}'");
+        match key {
+            "dataset" => self.dataset = value.to_string(),
+            "rounds" => self.rounds = value.parse().with_context(e)?,
+            "clients" => self.clients = value.parse().with_context(e)?,
+            "participation" => self.participation = value.parse().with_context(e)?,
+            "local_epochs" => self.local_epochs = value.parse().with_context(e)?,
+            "server_epochs" => self.server_epochs = value.parse().with_context(e)?,
+            "train_size" => self.train_size = value.parse().with_context(e)?,
+            "test_size" => self.test_size = value.parse().with_context(e)?,
+            "ood_size" => self.ood_size = value.parse().with_context(e)?,
+            "unlabeled_per_client" => {
+                self.unlabeled_per_client = value.parse().with_context(e)?
+            }
+            "sigma" => self.sigma = value.parse().with_context(e)?,
+            "lr_client" => self.lr_client = value.parse().with_context(e)?,
+            "lr_server" => self.lr_server = value.parse().with_context(e)?,
+            "beta" => self.beta = value.parse().with_context(e)?,
+            "beta_warmup_epochs" => {
+                self.beta_warmup_epochs = value.parse().with_context(e)?
+            }
+            "warmup_rounds" => self.warmup_rounds = value.parse().with_context(e)?,
+            "temperature" => self.temperature = value.parse().with_context(e)?,
+            "c_min" => self.controller.c_min = value.parse().with_context(e)?,
+            "c_max" => self.controller.c_max = value.parse().with_context(e)?,
+            "c_step" => self.controller.step = value.parse().with_context(e)?,
+            "window" => self.controller.window = value.parse().with_context(e)?,
+            "patience" => self.controller.patience = value.parse().with_context(e)?,
+            "fedzip_clusters" => self.fedzip_clusters = value.parse().with_context(e)?,
+            "fedzip_keep" => self.fedzip_keep = value.parse().with_context(e)?,
+            "seed" => self.seed = value.parse().with_context(e)?,
+            other => bail!("unknown config key '{other}'"),
+        }
+        Ok(())
+    }
+
+    /// Load overrides from a JSON object file on top of a preset.
+    pub fn load_overrides(&mut self, path: &Path) -> Result<()> {
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("reading config {path:?}"))?;
+        let j = Json::parse(&text)?;
+        for (k, v) in j.as_obj()? {
+            let s = match v {
+                Json::Str(s) => s.clone(),
+                other => other.to_string(),
+            };
+            self.set(k, &s)?;
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn presets_validate() {
+        FedConfig::paper("cifar10").validate().unwrap();
+        FedConfig::quick("voxforge").validate().unwrap();
+    }
+
+    #[test]
+    fn set_overrides() {
+        let mut c = FedConfig::quick("cifar10");
+        c.set("rounds", "3").unwrap();
+        c.set("sigma", "0.5").unwrap();
+        c.set("c_min", "4").unwrap();
+        assert_eq!(c.rounds, 3);
+        assert_eq!(c.sigma, 0.5);
+        assert_eq!(c.controller.c_min, 4);
+        assert!(c.set("nonsense", "1").is_err());
+        assert!(c.set("rounds", "abc").is_err());
+    }
+
+    #[test]
+    fn validation_catches_bad_configs() {
+        let mut c = FedConfig::quick("cifar10");
+        c.rounds = 0;
+        assert!(c.validate().is_err());
+        let mut c = FedConfig::quick("cifar10");
+        c.train_size = 10;
+        assert!(c.validate().is_err());
+        let mut c = FedConfig::quick("cifar10");
+        c.sigma = 1.5;
+        assert!(c.validate().is_err());
+    }
+
+    #[test]
+    fn strategy_parse_roundtrip() {
+        for s in Strategy::ALL {
+            assert_eq!(Strategy::parse(s.name()).unwrap(), s);
+        }
+        assert!(Strategy::parse("sgd").is_err());
+    }
+
+    #[test]
+    fn json_overrides() {
+        let dir = std::env::temp_dir().join("fedcompress_cfg_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let p = dir.join("cfg.json");
+        std::fs::write(&p, r#"{"rounds": 4, "dataset": "voxforge", "beta": 0.5}"#).unwrap();
+        let mut c = FedConfig::quick("cifar10");
+        c.load_overrides(&p).unwrap();
+        assert_eq!(c.rounds, 4);
+        assert_eq!(c.dataset, "voxforge");
+        assert_eq!(c.beta, 0.5);
+    }
+}

@@ -1,0 +1,88 @@
+//! FedAvg aggregation (McMahan 2017): sample-count-weighted averaging of
+//! flat parameter vectors — deliberately unmodified, which is the point
+//! of FedCompress ("no modifications to the underlying aggregation").
+//! The same weighting aggregates centroid tables and representation
+//! scores (paper Algorithm 1, line 7).
+
+/// Weighted average of flat vectors. `weights[i]` is client i's sample
+/// count N_k; vectors must agree in length.
+pub fn fedavg(vectors: &[Vec<f32>], weights: &[usize]) -> Vec<f32> {
+    assert!(!vectors.is_empty());
+    assert_eq!(vectors.len(), weights.len());
+    let n = vectors[0].len();
+    let total: f64 = weights.iter().map(|&w| w as f64).sum();
+    assert!(total > 0.0, "all clients empty");
+    let mut out = vec![0.0f64; n];
+    for (v, &w) in vectors.iter().zip(weights) {
+        assert_eq!(v.len(), n, "ragged client vectors");
+        let coef = w as f64 / total;
+        for (o, &x) in out.iter_mut().zip(v) {
+            *o += coef * x as f64;
+        }
+    }
+    out.into_iter().map(|x| x as f32).collect()
+}
+
+/// Weighted scalar average (for the representation score E).
+pub fn weighted_mean(values: &[f64], weights: &[usize]) -> f64 {
+    assert_eq!(values.len(), weights.len());
+    let total: f64 = weights.iter().map(|&w| w as f64).sum();
+    values
+        .iter()
+        .zip(weights)
+        .map(|(&v, &w)| v * w as f64 / total)
+        .sum()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn equal_weights_is_plain_mean() {
+        let v = vec![vec![1.0f32, 2.0], vec![3.0, 4.0]];
+        let out = fedavg(&v, &[10, 10]);
+        assert_eq!(out, vec![2.0, 3.0]);
+    }
+
+    #[test]
+    fn weighting_respects_sample_counts() {
+        let v = vec![vec![0.0f32], vec![10.0]];
+        let out = fedavg(&v, &[30, 10]);
+        assert!((out[0] - 2.5).abs() < 1e-6);
+    }
+
+    #[test]
+    fn single_client_identity() {
+        let v = vec![vec![1.5f32, -2.5, 0.0]];
+        assert_eq!(fedavg(&v, &[7]), v[0]);
+    }
+
+    #[test]
+    fn convexity_property() {
+        // aggregate lies within [min, max] per coordinate
+        use crate::util::rng::Rng;
+        let mut rng = Rng::new(3);
+        let vs: Vec<Vec<f32>> = (0..5)
+            .map(|_| (0..40).map(|_| rng.normal()).collect())
+            .collect();
+        let ws = [3usize, 9, 1, 5, 2];
+        let agg = fedavg(&vs, &ws);
+        for j in 0..40 {
+            let lo = vs.iter().map(|v| v[j]).fold(f32::MAX, f32::min);
+            let hi = vs.iter().map(|v| v[j]).fold(f32::MIN, f32::max);
+            assert!(agg[j] >= lo - 1e-6 && agg[j] <= hi + 1e-6);
+        }
+    }
+
+    #[test]
+    fn weighted_mean_scalar() {
+        assert!((weighted_mean(&[1.0, 3.0], &[1, 3]) - 2.5).abs() < 1e-12);
+    }
+
+    #[test]
+    #[should_panic]
+    fn ragged_vectors_panic() {
+        fedavg(&[vec![1.0], vec![1.0, 2.0]], &[1, 1]);
+    }
+}

@@ -1,0 +1,210 @@
+//! Run checkpointing: persist/restore (round, theta, centroids,
+//! controller score history) so long federated runs survive restarts —
+//! a framework necessity the paper's Flower setup gets for free.
+//!
+//! Binary format (little-endian):
+//!   magic "FCCK" | u32 version | u32 round | u32 P | u32 C_max |
+//!   u32 active | f32 theta[P] | f32 mu[C_max] | u32 n_scores |
+//!   f64 scores[n] | u64 checksum (FNV-1a over all preceding bytes)
+
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+use crate::clustering::CentroidState;
+
+const MAGIC: &[u8; 4] = b"FCCK";
+const VERSION: u32 = 1;
+
+#[derive(Clone, Debug, PartialEq)]
+pub struct Checkpoint {
+    pub round: usize,
+    pub theta: Vec<f32>,
+    pub mu: Vec<f32>,
+    pub active: usize,
+    pub scores: Vec<f64>,
+}
+
+fn fnv1a(bytes: &[u8]) -> u64 {
+    let mut h = 0xcbf29ce484222325u64;
+    for &b in bytes {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x100000001b3);
+    }
+    h
+}
+
+impl Checkpoint {
+    pub fn from_state(
+        round: usize,
+        theta: &[f32],
+        centroids: &CentroidState,
+        scores: &[f64],
+    ) -> Checkpoint {
+        Checkpoint {
+            round,
+            theta: theta.to_vec(),
+            mu: centroids.mu.clone(),
+            active: centroids.active,
+            scores: scores.to_vec(),
+        }
+    }
+
+    pub fn to_bytes(&self) -> Vec<u8> {
+        let mut out = Vec::with_capacity(24 + 4 * (self.theta.len() + self.mu.len()));
+        out.extend_from_slice(MAGIC);
+        out.extend_from_slice(&VERSION.to_le_bytes());
+        out.extend_from_slice(&(self.round as u32).to_le_bytes());
+        out.extend_from_slice(&(self.theta.len() as u32).to_le_bytes());
+        out.extend_from_slice(&(self.mu.len() as u32).to_le_bytes());
+        out.extend_from_slice(&(self.active as u32).to_le_bytes());
+        for v in &self.theta {
+            out.extend_from_slice(&v.to_le_bytes());
+        }
+        for v in &self.mu {
+            out.extend_from_slice(&v.to_le_bytes());
+        }
+        out.extend_from_slice(&(self.scores.len() as u32).to_le_bytes());
+        for v in &self.scores {
+            out.extend_from_slice(&v.to_le_bytes());
+        }
+        let ck = fnv1a(&out);
+        out.extend_from_slice(&ck.to_le_bytes());
+        out
+    }
+
+    pub fn from_bytes(bytes: &[u8]) -> Result<Checkpoint> {
+        if bytes.len() < 8 + 16 + 8 {
+            bail!("checkpoint too short");
+        }
+        let (body, ck_bytes) = bytes.split_at(bytes.len() - 8);
+        let stored = u64::from_le_bytes(ck_bytes.try_into()?);
+        if fnv1a(body) != stored {
+            bail!("checkpoint checksum mismatch (corrupt file)");
+        }
+        let mut i = 0usize;
+        let take = |i: &mut usize, n: usize| -> Result<&[u8]> {
+            if *i + n > body.len() {
+                bail!("truncated checkpoint");
+            }
+            let s = &body[*i..*i + n];
+            *i += n;
+            Ok(s)
+        };
+        if take(&mut i, 4)? != MAGIC {
+            bail!("bad checkpoint magic");
+        }
+        let version = u32::from_le_bytes(take(&mut i, 4)?.try_into()?);
+        if version != VERSION {
+            bail!("unsupported checkpoint version {version}");
+        }
+        let round = u32::from_le_bytes(take(&mut i, 4)?.try_into()?) as usize;
+        let p = u32::from_le_bytes(take(&mut i, 4)?.try_into()?) as usize;
+        let c_max = u32::from_le_bytes(take(&mut i, 4)?.try_into()?) as usize;
+        let active = u32::from_le_bytes(take(&mut i, 4)?.try_into()?) as usize;
+        if active > c_max {
+            bail!("active > c_max in checkpoint");
+        }
+        let mut theta = Vec::with_capacity(p);
+        for _ in 0..p {
+            theta.push(f32::from_le_bytes(take(&mut i, 4)?.try_into()?));
+        }
+        let mut mu = Vec::with_capacity(c_max);
+        for _ in 0..c_max {
+            mu.push(f32::from_le_bytes(take(&mut i, 4)?.try_into()?));
+        }
+        let n = u32::from_le_bytes(take(&mut i, 4)?.try_into()?) as usize;
+        let mut scores = Vec::with_capacity(n);
+        for _ in 0..n {
+            scores.push(f64::from_le_bytes(take(&mut i, 8)?.try_into()?));
+        }
+        Ok(Checkpoint {
+            round,
+            theta,
+            mu,
+            active,
+            scores,
+        })
+    }
+
+    pub fn save(&self, path: &Path) -> Result<()> {
+        // atomic-ish: write sibling then rename
+        let tmp = path.with_extension("tmp");
+        std::fs::write(&tmp, self.to_bytes())
+            .with_context(|| format!("writing {tmp:?}"))?;
+        std::fs::rename(&tmp, path).with_context(|| format!("renaming to {path:?}"))?;
+        Ok(())
+    }
+
+    pub fn load(path: &Path) -> Result<Checkpoint> {
+        let bytes = std::fs::read(path).with_context(|| format!("reading {path:?}"))?;
+        Checkpoint::from_bytes(&bytes)
+    }
+
+    /// Restore a CentroidState (mask rebuilt from `active`).
+    pub fn centroid_state(&self) -> CentroidState {
+        let c_max = self.mu.len();
+        let mut mask = vec![0.0f32; c_max];
+        for m in mask.iter_mut().take(self.active) {
+            *m = 1.0;
+        }
+        CentroidState {
+            mu: self.mu.clone(),
+            mask,
+            c_max,
+            active: self.active,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn demo() -> Checkpoint {
+        let mut rng = Rng::new(1);
+        let theta: Vec<f32> = (0..500).map(|_| rng.normal()).collect();
+        let cents = CentroidState::init_from_weights(&theta, 12, 32, &mut rng);
+        Checkpoint::from_state(7, &theta, &cents, &[1.0, 2.5, 3.25])
+    }
+
+    #[test]
+    fn roundtrip_bytes() {
+        let c = demo();
+        let d = Checkpoint::from_bytes(&c.to_bytes()).unwrap();
+        assert_eq!(c, d);
+    }
+
+    #[test]
+    fn roundtrip_file() {
+        let c = demo();
+        let dir = std::env::temp_dir().join("fedcompress_ckpt_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("run.ckpt");
+        c.save(&path).unwrap();
+        let d = Checkpoint::load(&path).unwrap();
+        assert_eq!(c, d);
+    }
+
+    #[test]
+    fn corruption_is_detected() {
+        let c = demo();
+        let mut bytes = c.to_bytes();
+        let mid = bytes.len() / 2;
+        bytes[mid] ^= 0x55;
+        assert!(Checkpoint::from_bytes(&bytes).is_err());
+        let mut short = c.to_bytes();
+        short.truncate(20);
+        assert!(Checkpoint::from_bytes(&short).is_err());
+    }
+
+    #[test]
+    fn centroid_state_restores_mask() {
+        let c = demo();
+        let s = c.centroid_state();
+        assert_eq!(s.active, 12);
+        assert_eq!(s.mask.iter().filter(|&&m| m == 1.0).count(), 12);
+        assert_eq!(s.mu, c.mu);
+    }
+}

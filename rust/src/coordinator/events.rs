@@ -1,0 +1,225 @@
+//! Structured event log for federated runs — the observability layer a
+//! deployed coordinator needs: every dispatch, upload, aggregation, SCS
+//! pass and controller decision as a typed record, queryable by round
+//! and serializable to JSON lines.
+
+use crate::util::json::Json;
+
+#[derive(Clone, Debug, PartialEq)]
+pub enum Event {
+    RoundStart {
+        round: usize,
+        clusters: usize,
+    },
+    Dispatch {
+        round: usize,
+        client: usize,
+        bytes: usize,
+        compressed: bool,
+    },
+    Upload {
+        round: usize,
+        client: usize,
+        bytes: usize,
+        score: f64,
+        mean_ce: f64,
+    },
+    Aggregated {
+        round: usize,
+        clients: usize,
+        score: f64,
+    },
+    SelfCompress {
+        round: usize,
+        mean_kl: f64,
+    },
+    ControllerGrow {
+        round: usize,
+        from: usize,
+        to: usize,
+    },
+    Evaluated {
+        round: usize,
+        accuracy: f64,
+        loss: f64,
+    },
+}
+
+impl Event {
+    pub fn round(&self) -> usize {
+        match self {
+            Event::RoundStart { round, .. }
+            | Event::Dispatch { round, .. }
+            | Event::Upload { round, .. }
+            | Event::Aggregated { round, .. }
+            | Event::SelfCompress { round, .. }
+            | Event::ControllerGrow { round, .. }
+            | Event::Evaluated { round, .. } => *round,
+        }
+    }
+
+    pub fn kind(&self) -> &'static str {
+        match self {
+            Event::RoundStart { .. } => "round_start",
+            Event::Dispatch { .. } => "dispatch",
+            Event::Upload { .. } => "upload",
+            Event::Aggregated { .. } => "aggregated",
+            Event::SelfCompress { .. } => "self_compress",
+            Event::ControllerGrow { .. } => "controller_grow",
+            Event::Evaluated { .. } => "evaluated",
+        }
+    }
+
+    pub fn to_json(&self) -> Json {
+        let mut pairs: Vec<(&str, Json)> = vec![
+            ("kind", Json::str(self.kind())),
+            ("round", Json::from(self.round())),
+        ];
+        match self {
+            Event::RoundStart { clusters, .. } => {
+                pairs.push(("clusters", Json::from(*clusters)));
+            }
+            Event::Dispatch {
+                client,
+                bytes,
+                compressed,
+                ..
+            } => {
+                pairs.push(("client", Json::from(*client)));
+                pairs.push(("bytes", Json::from(*bytes)));
+                pairs.push(("compressed", Json::from(*compressed)));
+            }
+            Event::Upload {
+                client,
+                bytes,
+                score,
+                mean_ce,
+                ..
+            } => {
+                pairs.push(("client", Json::from(*client)));
+                pairs.push(("bytes", Json::from(*bytes)));
+                pairs.push(("score", Json::num(*score)));
+                pairs.push(("mean_ce", Json::num(*mean_ce)));
+            }
+            Event::Aggregated { clients, score, .. } => {
+                pairs.push(("clients", Json::from(*clients)));
+                pairs.push(("score", Json::num(*score)));
+            }
+            Event::SelfCompress { mean_kl, .. } => {
+                pairs.push(("mean_kl", Json::num(*mean_kl)));
+            }
+            Event::ControllerGrow { from, to, .. } => {
+                pairs.push(("from", Json::from(*from)));
+                pairs.push(("to", Json::from(*to)));
+            }
+            Event::Evaluated { accuracy, loss, .. } => {
+                pairs.push(("accuracy", Json::num(*accuracy)));
+                pairs.push(("loss", Json::num(*loss)));
+            }
+        }
+        Json::obj(pairs)
+    }
+}
+
+/// Append-only event log.
+#[derive(Clone, Debug, Default)]
+pub struct EventLog {
+    events: Vec<Event>,
+}
+
+impl EventLog {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn push(&mut self, e: Event) {
+        self.events.push(e);
+    }
+
+    pub fn len(&self) -> usize {
+        self.events.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.events.is_empty()
+    }
+
+    pub fn all(&self) -> &[Event] {
+        &self.events
+    }
+
+    pub fn for_round(&self, round: usize) -> impl Iterator<Item = &Event> {
+        self.events.iter().filter(move |e| e.round() == round)
+    }
+
+    pub fn of_kind<'a>(&'a self, kind: &'a str) -> impl Iterator<Item = &'a Event> {
+        self.events.iter().filter(move |e| e.kind() == kind)
+    }
+
+    /// JSON-lines serialization (one event per line).
+    pub fn to_jsonl(&self) -> String {
+        let mut s = String::new();
+        for e in &self.events {
+            s.push_str(&e.to_json().to_string());
+            s.push('\n');
+        }
+        s
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::json::Json;
+
+    fn demo_log() -> EventLog {
+        let mut log = EventLog::new();
+        log.push(Event::RoundStart { round: 0, clusters: 16 });
+        log.push(Event::Dispatch {
+            round: 0,
+            client: 2,
+            bytes: 1000,
+            compressed: false,
+        });
+        log.push(Event::Upload {
+            round: 0,
+            client: 2,
+            bytes: 200,
+            score: 4.5,
+            mean_ce: 2.1,
+        });
+        log.push(Event::ControllerGrow {
+            round: 1,
+            from: 16,
+            to: 24,
+        });
+        log
+    }
+
+    #[test]
+    fn query_by_round_and_kind() {
+        let log = demo_log();
+        assert_eq!(log.for_round(0).count(), 3);
+        assert_eq!(log.for_round(1).count(), 1);
+        assert_eq!(log.of_kind("upload").count(), 1);
+    }
+
+    #[test]
+    fn jsonl_is_parseable() {
+        let log = demo_log();
+        for line in log.to_jsonl().lines() {
+            let j = Json::parse(line).unwrap();
+            assert!(j.get("kind").is_ok());
+            assert!(j.get("round").is_ok());
+        }
+    }
+
+    #[test]
+    fn grow_event_fields() {
+        let log = demo_log();
+        let e = log.of_kind("controller_grow").next().unwrap();
+        let j = e.to_json();
+        assert_eq!(j.get("from").unwrap().as_usize().unwrap(), 16);
+        assert_eq!(j.get("to").unwrap().as_usize().unwrap(), 24);
+    }
+}

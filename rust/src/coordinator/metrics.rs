@@ -1,0 +1,88 @@
+//! Round-level metrics and the run-level result record every experiment
+//! driver consumes.
+
+use super::events::EventLog;
+use crate::clustering::CentroidState;
+use crate::compression::accounting::CommLedger;
+
+#[derive(Clone, Debug)]
+pub struct RoundMetrics {
+    pub round: usize,
+    /// test accuracy of the model the server would dispatch next round
+    pub accuracy: f64,
+    pub test_loss: f64,
+    /// aggregated representation-quality score E
+    pub score: f64,
+    /// mean client validation accuracy proxy (mean client CE)
+    pub client_mean_ce: f64,
+    /// active cluster count used this round
+    pub clusters: usize,
+    pub up_bytes: usize,
+    pub down_bytes: usize,
+    pub wall_ms: f64,
+}
+
+#[derive(Clone, Debug)]
+pub struct RunResult {
+    pub strategy: &'static str,
+    pub dataset: String,
+    pub rounds: Vec<RoundMetrics>,
+    /// final deliverable model (quantized where the strategy quantizes)
+    pub final_theta: Vec<f32>,
+    pub final_accuracy: f64,
+    /// wire bytes of the final deliverable model
+    pub final_model_bytes: usize,
+    /// dense f32 bytes of the same model (MCR denominator's numerator)
+    pub dense_model_bytes: usize,
+    pub ledger: CommLedger,
+    /// structured event log of the whole run (observability layer)
+    pub events: EventLog,
+    /// centroid table at the end of training (drives checkpoints)
+    pub final_centroids: CentroidState,
+}
+
+impl RunResult {
+    /// Model compression ratio versus dense f32 storage.
+    pub fn mcr(&self) -> f64 {
+        self.dense_model_bytes as f64 / self.final_model_bytes.max(1) as f64
+    }
+
+    pub fn total_bytes(&self) -> usize {
+        self.ledger.total_bytes()
+    }
+
+    pub fn accuracy_trace(&self) -> Vec<f64> {
+        self.rounds.iter().map(|r| r.accuracy).collect()
+    }
+
+    pub fn score_trace(&self) -> Vec<f64> {
+        self.rounds.iter().map(|r| r.score).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn mcr_computation() {
+        let r = RunResult {
+            strategy: "fedavg",
+            dataset: "cifar10".into(),
+            rounds: vec![],
+            final_theta: vec![],
+            final_accuracy: 0.9,
+            final_model_bytes: 1000,
+            dense_model_bytes: 4000,
+            ledger: CommLedger::new(),
+            events: EventLog::new(),
+            final_centroids: CentroidState {
+                mu: vec![0.0; 4],
+                mask: vec![1.0; 4],
+                c_max: 4,
+                active: 4,
+            },
+        };
+        assert!((r.mcr() - 4.0).abs() < 1e-12);
+    }
+}

@@ -1,0 +1,15 @@
+//! Layer-3 coordinator — the paper's system contribution.
+//!
+//! `server` drives Algorithm 1: dispatch, parallel-in-spirit client
+//! updates, FedAvg aggregation, server-side self-compression, dynamic
+//! cluster control, and the byte-exact communication ledger.
+
+pub mod aggregate;
+pub mod checkpoint;
+pub mod events;
+pub mod metrics;
+pub mod selection;
+pub mod server;
+
+pub use metrics::{RoundMetrics, RunResult};
+pub use server::run_federated;

@@ -1,0 +1,46 @@
+//! Per-round client selection (paper: "randomly select K clients").
+
+use crate::util::rng::Rng;
+
+/// Select ceil(participation * m) distinct clients for a round.
+pub fn select_clients(m: usize, participation: f64, rng: &mut Rng) -> Vec<usize> {
+    assert!(m > 0);
+    let k = ((m as f64 * participation).ceil() as usize).clamp(1, m);
+    rng.choose(m, k)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn full_participation_selects_everyone() {
+        let mut rng = Rng::new(1);
+        let s = select_clients(20, 1.0, &mut rng);
+        assert_eq!(s, (0..20).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn partial_participation_counts() {
+        let mut rng = Rng::new(2);
+        let s = select_clients(20, 0.25, &mut rng);
+        assert_eq!(s.len(), 5);
+        let mut d = s.clone();
+        d.dedup();
+        assert_eq!(d.len(), 5);
+    }
+
+    #[test]
+    fn at_least_one_client() {
+        let mut rng = Rng::new(3);
+        assert_eq!(select_clients(10, 0.01, &mut rng).len(), 1);
+    }
+
+    #[test]
+    fn varies_across_rounds() {
+        let mut rng = Rng::new(4);
+        let a = select_clients(50, 0.2, &mut rng);
+        let b = select_clients(50, 0.2, &mut rng);
+        assert_ne!(a, b);
+    }
+}

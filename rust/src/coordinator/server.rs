@@ -1,0 +1,358 @@
+//! The federated server (paper Algorithm 1).
+//!
+//! Per round: dispatch the current model to the selected clients
+//! (ledgered), run ClientUpdate on each, FedAvg-aggregate thetas /
+//! centroids / scores, then — FedCompress only — SelfCompress on OOD
+//! data and grow the cluster count on representation-score plateaus.
+//! Evaluation runs on the *deliverable* model (the one that would be
+//! dispatched next round), which is what Table 1's accuracy reports.
+
+use anyhow::Result;
+
+use super::aggregate::{fedavg, weighted_mean};
+use super::events::{Event, EventLog};
+use super::metrics::{RoundMetrics, RunResult};
+use super::selection::select_clients;
+use crate::baselines::{encode_download, encode_upload};
+use crate::client::trainer::{evaluate, train_local};
+use crate::clustering::{CentroidState, ClusterController};
+use crate::compression::accounting::{CommLedger, Direction};
+use crate::compression::codec::{dense_bytes, quantize_and_encode};
+use crate::compression::kmeans::kmeans_1d;
+use crate::compression::sparsify::magnitude_prune;
+use crate::config::{FedConfig, Strategy};
+use crate::data::{ood, partition::sigma_to_alpha, partition_dirichlet, synth, Dataset};
+use crate::info;
+use crate::runtime::literals::{literal_scalar_f32, literal_to_f32, Arg};
+use crate::runtime::Engine;
+use crate::util::rng::Rng;
+
+/// Everything a run needs in memory: client shards, unlabeled shards,
+/// test split, server OOD set.
+pub struct FederatedData {
+    pub labeled: Vec<Dataset>,
+    pub unlabeled: Vec<Dataset>,
+    pub test: Dataset,
+    pub ood: Dataset,
+}
+
+/// Materialize the synthetic federated environment for a config.
+pub fn build_data(engine: &Engine, cfg: &FedConfig) -> Result<FederatedData> {
+    let spec = synth::SynthSpec::for_dataset(&cfg.dataset);
+    let domain = engine.manifest.dataset(&cfg.dataset)?.spec.domain.clone();
+    let base = Rng::new(cfg.seed);
+
+    let train = synth::generate(&spec, cfg.train_size, cfg.seed, 0);
+    let test = synth::generate(&spec, cfg.test_size, cfg.seed, 1);
+    let ood = ood::generate(&domain, spec.shape, cfg.ood_size, cfg.seed);
+
+    let mut part_rng = base.fork(1);
+    let alpha = sigma_to_alpha(cfg.sigma);
+    let min_per = (cfg.unlabeled_per_client + 16).max(24);
+    let shards = partition_dirichlet(&train, cfg.clients, alpha, min_per, &mut part_rng);
+
+    let mut labeled = Vec::with_capacity(cfg.clients);
+    let mut unlabeled = Vec::with_capacity(cfg.clients);
+    for shard in shards {
+        let (du, dl) = shard.take(cfg.unlabeled_per_client.min(shard.len() / 3));
+        labeled.push(dl);
+        unlabeled.push(du);
+    }
+    Ok(FederatedData {
+        labeled,
+        unlabeled,
+        test,
+        ood,
+    })
+}
+
+/// SelfCompress (Algorithm 1, lines 20-28): distill the aggregated
+/// model (teacher) into a re-clustered student on OOD data, then snap.
+/// Returns (snapped_student, updated_mu, mean_kl).
+fn self_compress(
+    engine: &Engine,
+    cfg: &FedConfig,
+    teacher: &[f32],
+    centroids: &mut CentroidState,
+    ood_data: &Dataset,
+    rng: &mut Rng,
+) -> Result<(Vec<f32>, f64)> {
+    let ds = &cfg.dataset;
+    let batch = engine.manifest.batch;
+    let mut student = teacher.to_vec();
+    let mut mu = centroids.mu.clone();
+    let mask = centroids.mask.clone();
+    let mut kl_sum = 0.0f64;
+    let mut steps = 0usize;
+
+    for _epoch in 0..cfg.server_epochs {
+        for (xs, _ys) in ood_data.epoch_batches(batch, rng) {
+            let out = engine.run(
+                ds,
+                "distill_step",
+                &[
+                    Arg::F32(&student),
+                    Arg::F32(teacher),
+                    Arg::F32(&mu),
+                    Arg::F32(&mask),
+                    Arg::F32(&xs),
+                    Arg::Scalar(cfg.lr_server),
+                    Arg::Scalar(cfg.beta),
+                    Arg::Scalar(cfg.temperature),
+                ],
+            )?;
+            student = literal_to_f32(&out[0])?;
+            mu = literal_to_f32(&out[1])?;
+            kl_sum += literal_scalar_f32(&out[3])? as f64;
+            steps += 1;
+        }
+    }
+    centroids.mu = mu;
+
+    // hard snap to the learned codebook: the downstream wire model
+    let codebook = centroids.active_codebook();
+    let (_, snapped) = quantize_and_encode(&student, &codebook);
+    Ok((snapped, kl_sum / steps.max(1) as f64))
+}
+
+/// Run one full federated training experiment.
+pub fn run_federated(engine: &Engine, cfg: &FedConfig, strategy: Strategy) -> Result<RunResult> {
+    cfg.validate()?;
+    let data = build_data(engine, cfg)?;
+    run_federated_with_data(engine, cfg, strategy, &data)
+}
+
+/// Same, with externally supplied data (lets Table-1 drivers share one
+/// environment across the four strategies so deltas are paired).
+pub fn run_federated_with_data(
+    engine: &Engine,
+    cfg: &FedConfig,
+    strategy: Strategy,
+    data: &FederatedData,
+) -> Result<RunResult> {
+    let base = Rng::new(cfg.seed ^ 0xFEDC);
+    let p = engine.manifest.dataset(&cfg.dataset)?.spec.param_count;
+    let c_max = engine.manifest.c_max;
+
+    let mut theta = engine.init_theta(&cfg.dataset)?;
+    anyhow::ensure!(theta.len() == p, "init theta size mismatch");
+
+    // centroid table: FedZip re-fits per upload; FedCompress learns it
+    let mut cents_rng = base.fork(2);
+    let c0 = cfg.controller.c_min;
+    let mut centroids = CentroidState::init_from_weights(&theta, c0, c_max, &mut cents_rng);
+    let mut controller = ClusterController::new(cfg.controller.clone());
+
+    let mut ledger = CommLedger::new();
+    let mut events = EventLog::new();
+    let mut rounds = Vec::with_capacity(cfg.rounds);
+    let use_wc = matches!(
+        strategy,
+        Strategy::FedCompress | Strategy::FedCompressNoScs
+    );
+
+    for round in 0..cfg.rounds {
+        let t0 = std::time::Instant::now();
+        let mut round_rng = base.fork(100 + round as u64);
+        // FedCompress warmup: a few dense L_ce-only rounds before the
+        // compression machinery engages (paper §1.2; DESIGN.md §3)
+        let compressing = round >= cfg.warmup_rounds;
+        // the downstream is only clustered once SCS has run at least once
+        let down_compressed = round > cfg.warmup_rounds;
+
+        if strategy == Strategy::FedCompress && round == cfg.warmup_rounds {
+            // re-seed the codebook from the *trained* weight
+            // distribution, not the init one
+            let mut rng = base.fork(60_000 + round as u64);
+            let c = centroids.active;
+            centroids = CentroidState::init_from_weights(&theta, c, c_max, &mut rng);
+        }
+
+        // --- dispatch ---------------------------------------------------
+        events.push(Event::RoundStart {
+            round,
+            clusters: centroids.active,
+        });
+        let selected = select_clients(cfg.clients, cfg.participation, &mut round_rng);
+        let down = encode_download(strategy, down_compressed, &theta, &centroids)?;
+        for &k in &selected {
+            ledger.record(round, Direction::Down, down.bytes);
+            events.push(Event::Dispatch {
+                round,
+                client: k,
+                bytes: down.bytes,
+                compressed: down.bytes < 4 * p,
+            });
+        }
+
+        // --- client updates ----------------------------------------------
+        let mut thetas = Vec::with_capacity(selected.len());
+        let mut mus = Vec::with_capacity(selected.len());
+        let mut scores = Vec::with_capacity(selected.len());
+        let mut ns = Vec::with_capacity(selected.len());
+        let mut ce_sum = 0.0f64;
+        let mut up_bytes_round = 0usize;
+
+        for &k in &selected {
+            let mut client_rng = base.fork(10_000 + (round * cfg.clients + k) as u64);
+            let outcome = train_local(
+                engine,
+                cfg,
+                &data.labeled[k],
+                &data.unlabeled[k],
+                &down.theta,
+                &centroids,
+                use_wc && compressing,
+                &mut client_rng,
+            )?;
+            // client's learned centroids ride along for the upload snap
+            let mut client_cents = centroids.clone();
+            client_cents.mu = outcome.mu.clone();
+            let up = encode_upload(
+                strategy,
+                cfg,
+                &outcome.theta,
+                &client_cents,
+                compressing,
+                &mut client_rng,
+            )?;
+            ledger.record(round, Direction::Up, up.bytes);
+            up_bytes_round += up.bytes;
+            events.push(Event::Upload {
+                round,
+                client: k,
+                bytes: up.bytes,
+                score: outcome.score,
+                mean_ce: outcome.mean_ce as f64,
+            });
+
+            thetas.push(up.theta);
+            mus.push(outcome.mu);
+            scores.push(outcome.score);
+            ns.push(outcome.n);
+            ce_sum += outcome.mean_ce as f64;
+        }
+
+        // --- aggregate (plain FedAvg, unmodified) -------------------------
+        theta = fedavg(&thetas, &ns);
+        let score = weighted_mean(&scores, &ns);
+        events.push(Event::Aggregated {
+            round,
+            clients: selected.len(),
+            score,
+        });
+        if use_wc {
+            centroids.mu = fedavg(&mus, &ns);
+        }
+
+        // --- server-side self-compression (FedCompress only) --------------
+        if strategy == Strategy::FedCompress && compressing {
+            let mut scs_rng = base.fork(50_000 + round as u64);
+            if crate::util::logging::enabled(crate::util::logging::Level::Debug) {
+                let (pre_acc, _) = evaluate(engine, &cfg.dataset, &data.test, &theta)?;
+                crate::debug!("round {round}: pre-SCS aggregated acc={pre_acc:.4}");
+            }
+            let (snapped, kl) = self_compress(
+                engine,
+                cfg,
+                &theta.clone(),
+                &mut centroids,
+                &data.ood,
+                &mut scs_rng,
+            )?;
+            crate::debug!("round {round}: SCS mean KL={kl:.4}");
+            events.push(Event::SelfCompress {
+                round,
+                mean_kl: kl,
+            });
+            theta = snapped;
+        }
+
+        // --- dynamic cluster count ----------------------------------------
+        let clusters = centroids.active;
+        if strategy == Strategy::FedCompress && compressing {
+            let next_c = controller.observe(score);
+            if next_c > centroids.active {
+                events.push(Event::ControllerGrow {
+                    round,
+                    from: centroids.active,
+                    to: next_c,
+                });
+                centroids.grow_to(next_c);
+            }
+        }
+
+        // --- evaluate the deliverable model --------------------------------
+        let (accuracy, test_loss) = evaluate(engine, &cfg.dataset, &data.test, &theta)?;
+        events.push(Event::Evaluated {
+            round,
+            accuracy,
+            loss: test_loss,
+        });
+        let m = RoundMetrics {
+            round,
+            accuracy,
+            test_loss,
+            score,
+            client_mean_ce: ce_sum / selected.len() as f64,
+            clusters,
+            up_bytes: up_bytes_round,
+            down_bytes: down.bytes * selected.len(),
+            wall_ms: t0.elapsed().as_secs_f64() * 1e3,
+        };
+        info!(
+            "[{}] {} round {:2}: acc={:.4} loss={:.3} E={:.2} C={} up={}B down={}B ({:.0} ms)",
+            strategy.name(),
+            cfg.dataset,
+            round,
+            m.accuracy,
+            m.test_loss,
+            m.score,
+            m.clusters,
+            m.up_bytes,
+            m.down_bytes,
+            m.wall_ms
+        );
+        rounds.push(m);
+    }
+
+    // --- final deliverable + MCR ------------------------------------------
+    let (final_theta, final_model_bytes) = match strategy {
+        Strategy::FedAvg => (theta.clone(), dense_bytes(p)),
+        Strategy::FedZip => {
+            let mut rng = base.fork(9_999);
+            let mut pruned = theta.clone();
+            magnitude_prune(&mut pruned, cfg.fedzip_keep);
+            let (cb, _, _) = kmeans_1d(&pruned, cfg.fedzip_clusters, 25, &mut rng);
+            let (enc, q) = quantize_and_encode(&pruned, &cb);
+            (q, enc.wire_bytes())
+        }
+        Strategy::FedCompressNoScs => {
+            // final-model-only compression: k-means at the controller's
+            // floor C (training never grew it — no score feedback loop)
+            let mut rng = base.fork(9_998);
+            let (cb, _, _) = kmeans_1d(&theta, cfg.controller.c_min.max(8), 25, &mut rng);
+            let (enc, q) = quantize_and_encode(&theta, &cb);
+            (q, enc.wire_bytes())
+        }
+        Strategy::FedCompress => {
+            let codebook = centroids.active_codebook();
+            let (enc, q) = quantize_and_encode(&theta, &codebook);
+            (q, enc.wire_bytes())
+        }
+    };
+    let (final_accuracy, _) = evaluate(engine, &cfg.dataset, &data.test, &final_theta)?;
+
+    Ok(RunResult {
+        strategy: strategy.name(),
+        dataset: cfg.dataset.clone(),
+        rounds,
+        final_theta,
+        final_accuracy,
+        final_model_bytes,
+        dense_model_bytes: dense_bytes(p),
+        ledger,
+        events,
+        final_centroids: centroids,
+    })
+}

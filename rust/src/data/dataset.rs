@@ -1,0 +1,163 @@
+//! In-memory dataset container + batching.
+
+use crate::util::rng::Rng;
+
+/// One labeled example: flat NCHW-ordered features + class id.
+#[derive(Clone, Debug)]
+pub struct Sample {
+    pub x: Vec<f32>,
+    pub y: i32,
+}
+
+/// A materialized dataset (train or test split, or one client's shard).
+#[derive(Clone, Debug, Default)]
+pub struct Dataset {
+    pub samples: Vec<Sample>,
+    /// feature shape as (channels, height, width)
+    pub shape: (usize, usize, usize),
+    pub num_classes: usize,
+}
+
+impl Dataset {
+    pub fn len(&self) -> usize {
+        self.samples.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.samples.is_empty()
+    }
+
+    pub fn feature_len(&self) -> usize {
+        self.shape.0 * self.shape.1 * self.shape.2
+    }
+
+    /// Class histogram (length num_classes).
+    pub fn label_histogram(&self) -> Vec<usize> {
+        let mut h = vec![0usize; self.num_classes];
+        for s in &self.samples {
+            h[s.y as usize] += 1;
+        }
+        h
+    }
+
+    /// Shuffled epoch of full batches: each batch is (x-flat, y) with
+    /// exactly `batch` samples; a short tail wraps around with samples
+    /// from the epoch start so every batch is full (static HLO shapes).
+    pub fn epoch_batches(&self, batch: usize, rng: &mut Rng) -> Vec<(Vec<f32>, Vec<i32>)> {
+        assert!(batch > 0 && !self.is_empty());
+        let mut order: Vec<usize> = (0..self.len()).collect();
+        rng.shuffle(&mut order);
+        let nb = self.len().div_ceil(batch);
+        let mut out = Vec::with_capacity(nb);
+        for b in 0..nb {
+            let mut xs = Vec::with_capacity(batch * self.feature_len());
+            let mut ys = Vec::with_capacity(batch);
+            for k in 0..batch {
+                let idx = order[(b * batch + k) % self.len()];
+                xs.extend_from_slice(&self.samples[idx].x);
+                ys.push(self.samples[idx].y);
+            }
+            out.push((xs, ys));
+        }
+        out
+    }
+
+    /// Deterministic full batches for evaluation. The final short batch
+    /// is padded by repeating *its own first sample* (consumers correct
+    /// metrics by measuring that sample's contribution separately); the
+    /// returned `valid` count per batch excludes padding.
+    pub fn eval_batches(&self, batch: usize) -> Vec<(Vec<f32>, Vec<i32>, usize)> {
+        assert!(batch > 0 && !self.is_empty());
+        let nb = self.len().div_ceil(batch);
+        let mut out = Vec::with_capacity(nb);
+        for b in 0..nb {
+            let mut xs = Vec::with_capacity(batch * self.feature_len());
+            let mut ys = Vec::with_capacity(batch);
+            let mut valid = 0usize;
+            for k in 0..batch {
+                let i = b * batch + k;
+                let idx = if i < self.len() {
+                    valid += 1;
+                    i
+                } else {
+                    b * batch // pad with the batch's own first sample
+                };
+                xs.extend_from_slice(&self.samples[idx].x);
+                ys.push(self.samples[idx].y);
+            }
+            out.push((xs, ys, valid));
+        }
+        out
+    }
+
+    /// Split off the first `n` samples as a new dataset (used to carve
+    /// the small unlabeled validation shard D_u from a client's data).
+    pub fn take(&self, n: usize) -> (Dataset, Dataset) {
+        let n = n.min(self.len());
+        let head = Dataset {
+            samples: self.samples[..n].to_vec(),
+            shape: self.shape,
+            num_classes: self.num_classes,
+        };
+        let tail = Dataset {
+            samples: self.samples[n..].to_vec(),
+            shape: self.shape,
+            num_classes: self.num_classes,
+        };
+        (head, tail)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tiny(n: usize) -> Dataset {
+        Dataset {
+            samples: (0..n)
+                .map(|i| Sample {
+                    x: vec![i as f32; 4],
+                    y: (i % 3) as i32,
+                })
+                .collect(),
+            shape: (1, 2, 2),
+            num_classes: 3,
+        }
+    }
+
+    #[test]
+    fn epoch_batches_are_full_and_cover() {
+        let d = tiny(10);
+        let mut rng = Rng::new(0);
+        let batches = d.epoch_batches(4, &mut rng);
+        assert_eq!(batches.len(), 3); // ceil(10/4)
+        for (xs, ys) in &batches {
+            assert_eq!(ys.len(), 4);
+            assert_eq!(xs.len(), 16);
+        }
+    }
+
+    #[test]
+    fn eval_batches_track_valid_counts() {
+        let d = tiny(10);
+        let batches = d.eval_batches(4);
+        assert_eq!(batches.len(), 3);
+        assert_eq!(batches[0].2, 4);
+        assert_eq!(batches[1].2, 4);
+        assert_eq!(batches[2].2, 2);
+    }
+
+    #[test]
+    fn label_histogram_counts() {
+        let d = tiny(9);
+        assert_eq!(d.label_histogram(), vec![3, 3, 3]);
+    }
+
+    #[test]
+    fn take_splits() {
+        let d = tiny(10);
+        let (a, b) = d.take(3);
+        assert_eq!(a.len(), 3);
+        assert_eq!(b.len(), 7);
+    }
+}

@@ -1,0 +1,16 @@
+//! Data substrate: synthetic dataset generators standing in for the
+//! paper's five public datasets, OOD generators for server-side
+//! distillation, and the non-IID federated partitioner.
+//!
+//! Substitution rationale (DESIGN.md §3): the compression pipeline needs
+//! *learnable, heterogeneous, class-structured* client data, not the
+//! actual CIFAR pixels; the generators below preserve class counts,
+//! modality split and relative difficulty ordering.
+
+pub mod dataset;
+pub mod ood;
+pub mod partition;
+pub mod synth;
+
+pub use dataset::{Dataset, Sample};
+pub use partition::partition_dirichlet;

@@ -1,0 +1,120 @@
+//! Out-of-distribution data for server-side self-compression.
+//!
+//! The paper uses StyleGAN-Oriented noise images (vision) and
+//! Librispeech segments (audio), citing Baradad 2021 / Asano & Saeed
+//! 2023 for the claim that *noise-like* data suffices for distillation.
+//! We generate exactly that class of data procedurally:
+//!   vision  -> oriented filtered noise (random orientation fields with
+//!              band-limited spatial correlation — StyleGAN-Oriented's
+//!              statistical signature);
+//!   audio   -> smooth colored-noise spectrograms (speech-shaped 1/f
+//!              band energy, no class structure).
+
+use super::dataset::{Dataset, Sample};
+use crate::util::rng::Rng;
+
+/// Oriented band-limited noise image, channels x h x w.
+fn oriented_noise(c: usize, h: usize, w: usize, rng: &mut Rng) -> Vec<f32> {
+    // random orientation + wavelength; superpose a few oriented waves on
+    // top of white noise, then soft-clip. Cheap surrogate for oriented
+    // GAN noise: anisotropic second-order statistics, no semantics.
+    let mut x = vec![0.0f32; c * h * w];
+    let n_waves = 4 + rng.below(4);
+    for _ in 0..n_waves {
+        let angle = rng.f32() * std::f32::consts::PI;
+        let (s, co) = angle.sin_cos();
+        let freq = 0.5 + rng.f32() * 3.0;
+        let phase = rng.f32() * std::f32::consts::TAU;
+        let amp = 0.4 + rng.f32();
+        let ch = rng.below(c);
+        for i in 0..h {
+            for j in 0..w {
+                let u = (co * j as f32 + s * i as f32) / w as f32;
+                x[ch * h * w + i * w + j] +=
+                    amp * (freq * u * std::f32::consts::TAU + phase).cos();
+            }
+        }
+    }
+    for v in &mut x {
+        *v += rng.normal() * 0.5;
+        *v = v.tanh() * 2.0;
+    }
+    x
+}
+
+/// Smooth colored-noise spectrogram, 1 x t x f.
+fn noise_spectrogram(t: usize, f: usize, rng: &mut Rng) -> Vec<f32> {
+    // 1/f-ish band energy envelope, slow temporal amplitude modulation
+    let band: Vec<f32> = (0..f)
+        .map(|j| 1.5 / (1.0 + j as f32 * 0.3) + 0.2 * rng.f32())
+        .collect();
+    let mut x = vec![0.0f32; t * f];
+    let mut amp = 1.0f32;
+    for i in 0..t {
+        amp = 0.8 * amp + 0.2 * (1.0 + rng.normal() * 0.5);
+        for j in 0..f {
+            x[i * f + j] = band[j] * amp * 2.0 + rng.normal() * 0.3;
+        }
+    }
+    x
+}
+
+/// Build an OOD dataset matching a target task's input shape. Labels are
+/// dummy zeros: distillation never reads them.
+pub fn generate(domain: &str, shape: (usize, usize, usize), n: usize, seed: u64) -> Dataset {
+    let (c, h, w) = shape;
+    let mut rng = Rng::new(seed ^ 0x00D_DA7A);
+    let samples = (0..n)
+        .map(|_| Sample {
+            x: match domain {
+                "vision" => oriented_noise(c, h, w, &mut rng),
+                "audio" => noise_spectrogram(h, w, &mut rng),
+                other => panic!("unknown domain '{other}'"),
+            },
+            y: 0,
+        })
+        .collect();
+    Dataset {
+        samples,
+        shape,
+        num_classes: 1,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn shapes_and_finiteness() {
+        let d = generate("vision", (3, 16, 16), 32, 1);
+        assert_eq!(d.len(), 32);
+        for s in &d.samples {
+            assert_eq!(s.x.len(), 3 * 16 * 16);
+            assert!(s.x.iter().all(|v| v.is_finite()));
+        }
+        let a = generate("audio", (1, 32, 16), 8, 1);
+        assert_eq!(a.samples[0].x.len(), 32 * 16);
+    }
+
+    #[test]
+    fn vision_ood_is_bounded_by_soft_clip() {
+        let d = generate("vision", (3, 16, 16), 16, 3);
+        for s in &d.samples {
+            assert!(s.x.iter().all(|v| v.abs() <= 2.0 + 1e-6));
+        }
+    }
+
+    #[test]
+    fn deterministic() {
+        let a = generate("audio", (1, 32, 16), 4, 9);
+        let b = generate("audio", (1, 32, 16), 4, 9);
+        assert_eq!(a.samples[3].x, b.samples[3].x);
+    }
+
+    #[test]
+    fn ood_differs_from_seeded_duplicates() {
+        let a = generate("vision", (3, 16, 16), 2, 1);
+        assert_ne!(a.samples[0].x, a.samples[1].x);
+    }
+}

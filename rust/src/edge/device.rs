@@ -1,0 +1,74 @@
+//! Edge-device profiles (public spec-sheet numbers, batch-1 regime).
+
+#[derive(Clone, Debug)]
+pub struct DeviceProfile {
+    pub name: &'static str,
+    /// sustained f32 GFLOP/s at batch 1 (well below peak: launch-bound)
+    pub f32_gflops: f64,
+    /// sustained int8 GOP/s
+    pub int8_gops: f64,
+    /// effective DRAM bandwidth, GB/s
+    pub dram_gbps: f64,
+    /// effective weight-resident on-chip capacity, KiB — the share of
+    /// cache/scratchpad a steady-state NN workload can keep weights in
+    /// (well below the nominal cache size: activations, im2col buffers
+    /// and other processes contend for it)
+    pub cache_kib: f64,
+    /// fixed per-layer dispatch overhead, microseconds
+    pub layer_overhead_us: f64,
+    /// fraction of peak DRAM bandwidth achieved on weight fetches
+    /// (GPUs coalesce far better than mobile CPU GEMM tiles)
+    pub weight_fetch_eff: f64,
+}
+
+/// The three devices of Table 2.
+pub const EDGE_DEVICES: [DeviceProfile; 3] = [
+    // Pixel 6 (Tensor SoC, big-core CPU + TPU-lite offload; batch-1
+    // CNN inference is mostly bandwidth/dispatch bound)
+    DeviceProfile {
+        name: "Pixel 6",
+        f32_gflops: 40.0,
+        int8_gops: 160.0,
+        dram_gbps: 25.0,
+        cache_kib: 192.0,
+        layer_overhead_us: 18.0,
+        weight_fetch_eff: 0.3,
+    },
+    // Jetson Nano (Maxwell 128-core GPU)
+    DeviceProfile {
+        name: "Jetson Nano",
+        f32_gflops: 235.0,
+        int8_gops: 470.0,
+        dram_gbps: 20.0,
+        cache_kib: 256.0,
+        layer_overhead_us: 35.0,
+        weight_fetch_eff: 0.75,
+    },
+    // Coral Edge TPU (int8-native systolic array; f32 falls back to the
+    // host CPU path)
+    DeviceProfile {
+        name: "Coral TPU",
+        f32_gflops: 30.0,
+        int8_gops: 2000.0,
+        dram_gbps: 12.0,
+        cache_kib: 128.0,
+        layer_overhead_us: 25.0,
+        weight_fetch_eff: 0.5,
+    },
+];
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn profiles_are_sane() {
+        for d in &EDGE_DEVICES {
+            assert!(d.f32_gflops > 0.0);
+            assert!(d.int8_gops >= d.f32_gflops);
+            assert!(d.dram_gbps > 0.0);
+            assert!(d.layer_overhead_us > 0.0);
+        }
+        assert_eq!(EDGE_DEVICES.len(), 3);
+    }
+}

@@ -1,0 +1,203 @@
+//! Per-layer latency under dense/clustered weights and f32/uint8
+//! precision — the Table 2 substrate.
+//!
+//! Batch-1 mobile inference model (additive, no compute/DMA overlap —
+//! the regime TFLite-class runtimes sit in on these devices):
+//!
+//! ```text
+//! t_layer = flops/rate + weight_bytes/bw_weights
+//!           + activation_bytes/bw_stream + overhead
+//! ```
+//!
+//! `bw_weights` is the *effective strided-fetch* bandwidth for GEMM
+//! weight tiles (a small fraction of peak DRAM bandwidth — weights are
+//! walked in blocked order with poor locality at batch 1), except when
+//! the layer's weight image fits the device cache, where refetch is
+//! free after the first frame. Clustering shrinks the weight image to
+//! ceil(log2 C) bits/param + a codebook, and uint8 shrinks both terms —
+//! exactly the mechanisms behind the paper's 1.10-1.25x speedups.
+
+use super::device::DeviceProfile;
+use crate::compression::codec::index_bits;
+use crate::models::flops::{inference_costs, LayerCost};
+use crate::models::ModelSpec;
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Precision {
+    F32,
+    /// post-training uint8 quantization (Table 2's right column)
+    U8,
+}
+
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum WeightFormat {
+    Dense,
+    /// weight-clustered with C active centroids
+    Clustered { c: usize },
+}
+
+/// Fraction of peak achieved on streaming activation traffic.
+const STREAM_EFFICIENCY: f64 = 0.6;
+
+fn weight_image_bytes(cost: &LayerCost, prec: Precision, fmt: WeightFormat) -> f64 {
+    let params = cost.weight_bytes as f64 / 4.0;
+    match fmt {
+        WeightFormat::Dense => match prec {
+            Precision::F32 => params * 4.0,
+            Precision::U8 => params,
+        },
+        WeightFormat::Clustered { c } => {
+            // index stream + codebook (codebook entries at the precision)
+            let elem = match prec {
+                Precision::F32 => 4.0,
+                Precision::U8 => 1.0,
+            };
+            params * index_bits(c) as f64 / 8.0 + c as f64 * elem
+        }
+    }
+}
+
+fn layer_latency_us(
+    d: &DeviceProfile,
+    cost: &LayerCost,
+    prec: Precision,
+    fmt: WeightFormat,
+    weights_resident: bool,
+) -> f64 {
+    let compute_rate = match prec {
+        Precision::F32 => d.f32_gflops,
+        Precision::U8 => d.int8_gops,
+    };
+    let compute_us = cost.flops as f64 / compute_rate / 1e3;
+
+    // cache residency is a *model-level* property: all layers' weight
+    // images compete for the cache across one frame, so either the whole
+    // model stays resident between frames (steady-state refetch ~ free)
+    // or every layer streams its weights from DRAM each frame
+    let weight_us = if weights_resident {
+        0.0
+    } else {
+        weight_image_bytes(cost, prec, fmt) / (d.dram_gbps * d.weight_fetch_eff) / 1e3
+    };
+
+    let elem = match prec {
+        Precision::F32 => 1.0,
+        Precision::U8 => 0.25,
+    };
+    let act_us =
+        cost.activation_bytes as f64 * elem / (d.dram_gbps * STREAM_EFFICIENCY) / 1e3;
+
+    compute_us + weight_us + act_us + d.layer_overhead_us
+}
+
+/// Total weight image of the model in a given format/precision.
+pub fn model_weight_bytes(spec: &ModelSpec, prec: Precision, fmt: WeightFormat) -> f64 {
+    inference_costs(spec)
+        .iter()
+        .map(|c| weight_image_bytes(c, prec, fmt))
+        .sum()
+}
+
+/// End-to-end batch-1 inference latency in microseconds.
+pub fn inference_latency(
+    spec: &ModelSpec,
+    d: &DeviceProfile,
+    prec: Precision,
+    fmt: WeightFormat,
+) -> f64 {
+    let resident = model_weight_bytes(spec, prec, fmt) <= d.cache_kib * 1024.0;
+    inference_costs(spec)
+        .iter()
+        .map(|c| layer_latency_us(d, c, prec, fmt, resident))
+        .sum()
+}
+
+/// Speedup of a clustered model over the dense FedAvg model at the same
+/// precision — exactly the Table 2 quantity.
+pub fn speedup(spec: &ModelSpec, d: &DeviceProfile, prec: Precision, c: usize) -> f64 {
+    let dense = inference_latency(spec, d, prec, WeightFormat::Dense);
+    let clustered = inference_latency(spec, d, prec, WeightFormat::Clustered { c });
+    dense / clustered
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::edge::device::EDGE_DEVICES;
+    use crate::edge::paper_models::{mobilenet, resnet20};
+    use crate::models::spec::tests::demo_json;
+
+    fn demo_spec() -> ModelSpec {
+        ModelSpec::from_manifest("demo", &demo_json()).unwrap()
+    }
+
+    #[test]
+    fn clustered_is_never_slower() {
+        for spec in [demo_spec(), resnet20(), mobilenet()] {
+            for d in &EDGE_DEVICES {
+                for prec in [Precision::F32, Precision::U8] {
+                    let s = speedup(&spec, d, prec, 16);
+                    assert!(s >= 0.999, "{} {}: {s}", spec.name, d.name);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn paper_scale_speedups_land_in_band() {
+        // the Table 2 claim: clustered models accelerate inference by
+        // ~1.1-1.25x on edge devices
+        for spec in [resnet20(), mobilenet()] {
+            for d in &EDGE_DEVICES {
+                for prec in [Precision::F32, Precision::U8] {
+                    let s = speedup(&spec, d, prec, 16);
+                    assert!(
+                        (1.01..1.6).contains(&s),
+                        "{} on {} ({prec:?}): {s}",
+                        spec.name,
+                        d.name
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn more_clusters_stream_more_bits() {
+        let spec = resnet20();
+        let d = &EDGE_DEVICES[0];
+        let s8 = speedup(&spec, d, Precision::F32, 8);
+        let s32 = speedup(&spec, d, Precision::F32, 32);
+        assert!(s8 >= s32, "{s8} vs {s32}");
+    }
+
+    #[test]
+    fn u8_latency_leq_f32() {
+        for spec in [resnet20(), mobilenet()] {
+            for d in &EDGE_DEVICES {
+                let f = inference_latency(&spec, d, Precision::F32, WeightFormat::Dense);
+                let q = inference_latency(&spec, d, Precision::U8, WeightFormat::Dense);
+                assert!(q <= f, "{}: {q} vs {f}", d.name);
+            }
+        }
+    }
+
+    #[test]
+    fn latency_positive_and_overhead_bounded() {
+        let spec = demo_spec();
+        let d = &EDGE_DEVICES[1];
+        let lat = inference_latency(&spec, d, Precision::F32, WeightFormat::Dense);
+        // 2 layers x 35us overhead is a lower bound
+        assert!(lat >= 70.0);
+        assert!(lat.is_finite());
+    }
+
+    #[test]
+    fn tiny_models_see_no_speedup() {
+        // our 20k-param testbed models fit cache even dense: the edge
+        // mechanism correctly predicts ~no speedup for them
+        let spec = demo_spec();
+        let s = speedup(&spec, &EDGE_DEVICES[0], Precision::F32, 16);
+        assert!(s < 1.05, "{s}");
+    }
+}

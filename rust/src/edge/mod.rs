@@ -1,0 +1,18 @@
+//! Edge-device inference latency model — the Table 2 substrate.
+//!
+//! No Pixel 6 / Jetson Nano / Coral TPU exists in this environment, so
+//! per DESIGN.md §3 we model what the paper measured: per-layer roofline
+//! latency `max(flops/peak, bytes/bandwidth) + dispatch overhead`, where
+//! clustered models shrink the *weight-streaming* term (codebook-indexed
+//! weights: ceil(log2 C) bits/weight + a VMEM/cache-resident codebook)
+//! and uint8 quantization shrinks both terms on integer-capable units.
+//! Device constants come from public spec sheets; Table 2 reports
+//! *ratios*, which are robust to the absolute calibration.
+
+pub mod device;
+pub mod latency;
+pub mod paper_models;
+pub mod quantize;
+
+pub use device::{DeviceProfile, EDGE_DEVICES};
+pub use latency::{inference_latency, speedup, Precision, WeightFormat};

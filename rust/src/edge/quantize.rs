@@ -1,0 +1,88 @@
+//! Post-training uint8 quantization model (Table 2's right column).
+//!
+//! Symmetric per-tensor affine quantization: q = round(w / s), s =
+//! max|w| / 127. Provides the quantize/dequantize pair plus the error
+//! analysis the accuracy-impact tests use. On clustered models the
+//! codebook (not the weights) is quantized, so the two compressions
+//! compose losslessly with respect to the cluster structure.
+
+/// Per-tensor symmetric scale for int8.
+pub fn scale_for(weights: &[f32]) -> f32 {
+    let max = weights.iter().fold(0.0f32, |a, &w| a.max(w.abs()));
+    if max == 0.0 {
+        1.0
+    } else {
+        max / 127.0
+    }
+}
+
+pub fn quantize(weights: &[f32], scale: f32) -> Vec<i8> {
+    weights
+        .iter()
+        .map(|&w| (w / scale).round().clamp(-127.0, 127.0) as i8)
+        .collect()
+}
+
+pub fn dequantize(q: &[i8], scale: f32) -> Vec<f32> {
+    q.iter().map(|&v| v as f32 * scale).collect()
+}
+
+/// RMS quantization error relative to weight RMS.
+pub fn relative_rms_error(weights: &[f32]) -> f64 {
+    let s = scale_for(weights);
+    let q = quantize(weights, s);
+    let dq = dequantize(&q, s);
+    let mut err = 0.0f64;
+    let mut norm = 0.0f64;
+    for (&w, &d) in weights.iter().zip(&dq) {
+        err += ((w - d) as f64).powi(2);
+        norm += (w as f64).powi(2);
+    }
+    if norm == 0.0 {
+        0.0
+    } else {
+        (err / norm).sqrt()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn roundtrip_error_is_small() {
+        let mut rng = Rng::new(1);
+        let w: Vec<f32> = (0..5000).map(|_| rng.normal() * 0.1).collect();
+        let e = relative_rms_error(&w);
+        assert!(e < 0.01, "rms error {e}"); // 8-bit ~ 0.2-0.5% for gaussians
+    }
+
+    #[test]
+    fn quantize_clamps() {
+        let w = vec![10.0f32, -10.0, 0.0];
+        let s = scale_for(&w);
+        let q = quantize(&w, s);
+        assert_eq!(q[0], 127);
+        assert_eq!(q[1], -127);
+        assert_eq!(q[2], 0);
+    }
+
+    #[test]
+    fn zero_vector_is_stable() {
+        let w = vec![0.0f32; 10];
+        assert_eq!(scale_for(&w), 1.0);
+        assert_eq!(relative_rms_error(&w), 0.0);
+    }
+
+    #[test]
+    fn clustered_codebook_quantization_preserves_structure() {
+        // quantizing a 16-entry codebook keeps entries distinct
+        let cb: Vec<f32> = (0..16).map(|i| -0.8 + 0.1 * i as f32).collect();
+        let s = scale_for(&cb);
+        let q = quantize(&cb, s);
+        let mut uniq = q.clone();
+        uniq.dedup();
+        assert_eq!(uniq.len(), 16);
+    }
+}

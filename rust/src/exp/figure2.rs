@@ -1,0 +1,54 @@
+//! Figure 2: per-round mean representation-quality score vs mean
+//! validation accuracy across clients during FedCompress training, plus
+//! their Pearson correlation (the paper claims a strong positive one).
+
+use anyhow::Result;
+use std::io::Write;
+
+use crate::config::{FedConfig, Strategy};
+use crate::coordinator::{run_federated, RunResult};
+use crate::runtime::Engine;
+use crate::util::stats::pearson;
+
+pub struct Figure2Series {
+    pub dataset: String,
+    pub rounds: Vec<usize>,
+    pub score: Vec<f64>,
+    pub accuracy: Vec<f64>,
+    pub correlation: f64,
+}
+
+pub fn run(engine: &Engine, cfg: &FedConfig) -> Result<Figure2Series> {
+    let result: RunResult = run_federated(engine, cfg, Strategy::FedCompress)?;
+    let score: Vec<f64> = result.rounds.iter().map(|r| r.score).collect();
+    let accuracy: Vec<f64> = result.rounds.iter().map(|r| r.accuracy).collect();
+    let correlation = pearson(&score, &accuracy);
+    Ok(Figure2Series {
+        dataset: cfg.dataset.clone(),
+        rounds: (0..result.rounds.len()).collect(),
+        score,
+        accuracy,
+        correlation,
+    })
+}
+
+pub fn write_csv(series: &Figure2Series, path: &std::path::Path) -> Result<()> {
+    let mut f = std::fs::File::create(path)?;
+    writeln!(f, "round,score,accuracy")?;
+    for i in 0..series.rounds.len() {
+        writeln!(
+            f,
+            "{},{:.6},{:.6}",
+            series.rounds[i], series.score[i], series.accuracy[i]
+        )?;
+    }
+    Ok(())
+}
+
+pub fn print_series(s: &Figure2Series) {
+    println!("figure2[{}]: Pearson r = {:.3}", s.dataset, s.correlation);
+    println!("{:>5} {:>10} {:>10}", "round", "score E", "val acc");
+    for i in 0..s.rounds.len() {
+        println!("{:>5} {:>10.3} {:>10.4}", s.rounds[i], s.score[i], s.accuracy[i]);
+    }
+}

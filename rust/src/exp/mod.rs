@@ -1,0 +1,5 @@
+//! Experiment drivers: one per paper table/figure (DESIGN.md §4).
+
+pub mod figure2;
+pub mod table1;
+pub mod table2;

@@ -1,0 +1,85 @@
+//! Table 1: delta-accuracy / CCR / MCR for FedZip, FedCompress w/o SCS
+//! and FedCompress versus the FedAvg baseline, per dataset.
+//!
+//! Prints the same row layout as the paper; CCR/MCR are n-fold
+//! reductions vs FedAvg. All four strategies share one federated data
+//! environment per dataset (paired comparison, seeds fixed).
+
+use anyhow::Result;
+
+use crate::compression::accounting::ccr;
+use crate::config::{FedConfig, Strategy};
+use crate::coordinator::server::{build_data, run_federated_with_data};
+use crate::coordinator::RunResult;
+use crate::runtime::Engine;
+
+#[derive(Clone, Debug)]
+pub struct Table1Row {
+    pub dataset: String,
+    pub fedavg_acc: f64,
+    /// per strategy (FedZip, NoSCS, FedCompress): (delta_acc_pp, ccr, mcr)
+    pub entries: Vec<(&'static str, f64, f64, f64)>,
+}
+
+pub fn run_dataset(engine: &Engine, cfg: &FedConfig) -> Result<Table1Row> {
+    let data = build_data(engine, cfg)?;
+    let mut results: Vec<RunResult> = Vec::new();
+    for strategy in Strategy::ALL {
+        results.push(run_federated_with_data(engine, cfg, strategy, &data)?);
+    }
+    let fedavg = &results[0];
+    let entries = results[1..]
+        .iter()
+        .map(|r| {
+            (
+                r.strategy,
+                (r.final_accuracy - fedavg.final_accuracy) * 100.0,
+                ccr(&fedavg.ledger, &r.ledger),
+                r.mcr(),
+            )
+        })
+        .collect();
+    Ok(Table1Row {
+        dataset: cfg.dataset.clone(),
+        fedavg_acc: fedavg.final_accuracy * 100.0,
+        entries,
+    })
+}
+
+pub fn print_header() {
+    println!(
+        "{:<16} {:>8} | {:>22} | {:>22} | {:>22}",
+        "Dataset", "FedAvg", "FedZip", "FedCompress w/o SCS", "FedCompress"
+    );
+    println!(
+        "{:<16} {:>8} | {:>7} {:>6} {:>6}  | {:>7} {:>6} {:>6}  | {:>7} {:>6} {:>6}",
+        "", "Acc", "dAcc", "CCR", "MCR", "dAcc", "CCR", "MCR", "dAcc", "CCR", "MCR"
+    );
+}
+
+pub fn print_row(row: &Table1Row) {
+    print!("{:<16} {:>8.2} |", row.dataset, row.fedavg_acc);
+    for (_, dacc, c, m) in &row.entries {
+        print!(" {:>+7.2} {:>6.2} {:>6.2}  |", dacc, c, m);
+    }
+    println!();
+}
+
+/// Aggregate line the paper quotes ("average 4.5-fold CCR").
+pub fn print_summary(rows: &[Table1Row]) {
+    if rows.is_empty() {
+        return;
+    }
+    let n = rows.len() as f64;
+    for (i, name) in ["fedzip", "fedcompress-noscs", "fedcompress"]
+        .iter()
+        .enumerate()
+    {
+        let mean_ccr: f64 = rows.iter().map(|r| r.entries[i].2).sum::<f64>() / n;
+        let mean_mcr: f64 = rows.iter().map(|r| r.entries[i].3).sum::<f64>() / n;
+        let mean_dacc: f64 = rows.iter().map(|r| r.entries[i].1).sum::<f64>() / n;
+        println!(
+            "mean[{name}]: dAcc={mean_dacc:+.2}pp CCR={mean_ccr:.2} MCR={mean_mcr:.2}"
+        );
+    }
+}

@@ -1,0 +1,62 @@
+//! Table 2: inference-time acceleration of the clustered model over the
+//! dense FedAvg model on three edge-device profiles, f32 and uint8.
+//!
+//! Evaluated on the paper's deployment-scale models (ResNet-20,
+//! MobileNet — edge::paper_models), since the speedup mechanism is
+//! weight-streaming relief, which only engages at deployment scale;
+//! our 20k-param training testbed models fit edge caches even dense
+//! (the model correctly predicts ~1.0x for them, see edge tests).
+
+use anyhow::Result;
+
+use crate::edge::paper_models::{mobilenet, resnet20};
+use crate::edge::{inference_latency, speedup, Precision, WeightFormat, EDGE_DEVICES};
+
+#[derive(Clone, Debug)]
+pub struct Table2Row {
+    pub model: String,
+    pub device: &'static str,
+    pub f32_speedup: f64,
+    pub u8_speedup: f64,
+    pub dense_f32_us: f64,
+    pub clustered_f32_us: f64,
+}
+
+/// `c` is the cluster count of the deployed model (the controller's
+/// final value in a real run; Table 1 runs land at 16-32).
+pub fn run(model: &str, c: usize) -> Result<Vec<Table2Row>> {
+    let spec = match model {
+        "resnet20" => resnet20(),
+        "mobilenet" => mobilenet(),
+        other => anyhow::bail!("unknown table2 model '{other}'"),
+    };
+    Ok(EDGE_DEVICES
+        .iter()
+        .map(|d| Table2Row {
+            model: spec.name.clone(),
+            device: d.name,
+            f32_speedup: speedup(&spec, d, Precision::F32, c),
+            u8_speedup: speedup(&spec, d, Precision::U8, c),
+            dense_f32_us: inference_latency(&spec, d, Precision::F32, WeightFormat::Dense),
+            clustered_f32_us: inference_latency(
+                &spec,
+                d,
+                Precision::F32,
+                WeightFormat::Clustered { c },
+            ),
+        })
+        .collect())
+}
+
+pub fn print_rows(rows: &[Table2Row]) {
+    println!(
+        "{:<12} {:<12} {:>10} {:>16} {:>12} {:>14}",
+        "Model", "Device", "float32", "uint8(quant)", "dense(us)", "clustered(us)"
+    );
+    for r in rows {
+        println!(
+            "{:<12} {:<12} {:>9.3}x {:>15.3}x {:>12.1} {:>14.1}",
+            r.model, r.device, r.f32_speedup, r.u8_speedup, r.dense_f32_us, r.clustered_f32_us
+        );
+    }
+}

@@ -1,0 +1,32 @@
+//! FedCompress — communication-efficient federated learning via
+//! adaptive weight clustering + server-side distillation.
+//!
+//! Reproduction of Tsouvalas et al., 2024 (see DESIGN.md for the full
+//! system inventory). Three-layer architecture:
+//!
+//! * **Layer 3 (this crate)** — the federated coordinator: round loop,
+//!   aggregation, compression codecs, dynamic cluster control, metrics.
+//! * **Layer 2** — JAX model graphs (`python/compile/model.py`),
+//!   AOT-lowered once to HLO text under `artifacts/`.
+//! * **Layer 1** — Pallas kernels for the weight-clustering hot spot
+//!   (`python/compile/kernels/`), lowered inside the L2 graphs.
+//!
+//! The rust binary loads the HLO artifacts through the PJRT C API
+//! (`runtime`) and never touches python at runtime.
+
+pub mod baselines;
+pub mod bench;
+pub mod check;
+pub mod cli;
+pub mod client;
+pub mod clustering;
+pub mod compression;
+pub mod config;
+pub mod coordinator;
+pub mod data;
+pub mod edge;
+pub mod exp;
+pub mod linalg;
+pub mod models;
+pub mod runtime;
+pub mod util;

@@ -1,0 +1,143 @@
+//! Cyclic Jacobi eigenvalue iteration for symmetric matrices.
+//!
+//! Classic two-sided rotations; quadratic convergence once off-diagonal
+//! mass is small. Our matrices are Gram matrices of embeddings
+//! (d <= 64), where full sweeps cost microseconds — no need for
+//! tridiagonalization.
+
+use super::matrix::Matrix;
+
+/// Eigenvalues of a symmetric matrix (unordered).
+pub fn symmetric_eigenvalues(m: &Matrix) -> Vec<f64> {
+    assert_eq!(m.rows(), m.cols(), "matrix must be square");
+    let n = m.rows();
+    if n == 0 {
+        return Vec::new();
+    }
+    let mut a = m.clone();
+
+    let max_sweeps = 64;
+    for _ in 0..max_sweeps {
+        let mut off = 0.0;
+        for i in 0..n {
+            for j in (i + 1)..n {
+                off += a.get(i, j) * a.get(i, j);
+            }
+        }
+        let scale = a.frobenius_norm().max(1e-300);
+        if off.sqrt() <= 1e-14 * scale {
+            break;
+        }
+        for p in 0..n {
+            for q in (p + 1)..n {
+                let apq = a.get(p, q);
+                if apq.abs() <= 1e-300 {
+                    continue;
+                }
+                let app = a.get(p, p);
+                let aqq = a.get(q, q);
+                // rotation angle: tan(2θ) = 2 a_pq / (a_pp - a_qq)
+                let theta = (aqq - app) / (2.0 * apq);
+                let t = {
+                    let sign = if theta >= 0.0 { 1.0 } else { -1.0 };
+                    sign / (theta.abs() + (theta * theta + 1.0).sqrt())
+                };
+                let c = 1.0 / (t * t + 1.0).sqrt();
+                let s = t * c;
+
+                // A <- J^T A J, touching rows/cols p and q
+                for k in 0..n {
+                    let akp = a.get(k, p);
+                    let akq = a.get(k, q);
+                    a.set(k, p, c * akp - s * akq);
+                    a.set(k, q, s * akp + c * akq);
+                }
+                for k in 0..n {
+                    let apk = a.get(p, k);
+                    let aqk = a.get(q, k);
+                    a.set(p, k, c * apk - s * aqk);
+                    a.set(q, k, s * apk + c * aqk);
+                }
+            }
+        }
+    }
+    (0..n).map(|i| a.get(i, i)).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn sorted(mut v: Vec<f64>) -> Vec<f64> {
+        v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        v
+    }
+
+    #[test]
+    fn diagonal_matrix() {
+        let mut m = Matrix::zeros(3, 3);
+        m.set(0, 0, 5.0);
+        m.set(1, 1, -2.0);
+        m.set(2, 2, 0.5);
+        let e = sorted(symmetric_eigenvalues(&m));
+        assert!((e[0] + 2.0).abs() < 1e-12);
+        assert!((e[1] - 0.5).abs() < 1e-12);
+        assert!((e[2] - 5.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn known_2x2() {
+        // [[2, 1], [1, 2]] -> eigenvalues 1 and 3
+        let m = Matrix::from_rows(&[&[2.0, 1.0], &[1.0, 2.0]]);
+        let e = sorted(symmetric_eigenvalues(&m));
+        assert!((e[0] - 1.0).abs() < 1e-12);
+        assert!((e[1] - 3.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn trace_and_frobenius_invariants() {
+        // property: sum(eig) == trace, sum(eig^2) == ||A||_F^2
+        let mut rng = Rng::new(31);
+        for n in [2usize, 5, 16, 33] {
+            let mut m = Matrix::zeros(n, n);
+            for i in 0..n {
+                for j in i..n {
+                    let v = rng.normal() as f64;
+                    m.set(i, j, v);
+                    m.set(j, i, v);
+                }
+            }
+            let e = symmetric_eigenvalues(&m);
+            let trace: f64 = (0..n).map(|i| m.get(i, i)).sum();
+            let fro2: f64 = m.frobenius_norm().powi(2);
+            let es: f64 = e.iter().sum();
+            let es2: f64 = e.iter().map(|x| x * x).sum();
+            assert!((es - trace).abs() < 1e-9 * (1.0 + trace.abs()), "n={n}");
+            assert!((es2 - fro2).abs() < 1e-9 * (1.0 + fro2), "n={n}");
+        }
+    }
+
+    #[test]
+    fn psd_gram_eigenvalues_nonnegative() {
+        let mut rng = Rng::new(77);
+        let mut a = Matrix::zeros(20, 8);
+        for i in 0..20 {
+            for j in 0..8 {
+                a.set(i, j, rng.normal() as f64);
+            }
+        }
+        let e = symmetric_eigenvalues(&a.gram());
+        for &x in &e {
+            assert!(x > -1e-9, "{x}");
+        }
+    }
+
+    #[test]
+    fn empty_and_single() {
+        assert!(symmetric_eigenvalues(&Matrix::zeros(0, 0)).is_empty());
+        let mut m = Matrix::zeros(1, 1);
+        m.set(0, 0, 4.2);
+        assert_eq!(symmetric_eigenvalues(&m), vec![4.2]);
+    }
+}

@@ -1,0 +1,130 @@
+//! Row-major dense f64 matrix with just the operations the score path
+//! needs (Gram products, symmetric access). Deliberately small.
+
+#[derive(Clone, Debug, PartialEq)]
+pub struct Matrix {
+    rows: usize,
+    cols: usize,
+    data: Vec<f64>, // row-major
+}
+
+impl Matrix {
+    pub fn zeros(rows: usize, cols: usize) -> Self {
+        Matrix {
+            rows,
+            cols,
+            data: vec![0.0; rows * cols],
+        }
+    }
+
+    pub fn from_rows(rows: &[&[f64]]) -> Self {
+        let r = rows.len();
+        let c = rows.first().map(|x| x.len()).unwrap_or(0);
+        let mut m = Matrix::zeros(r, c);
+        for (i, row) in rows.iter().enumerate() {
+            assert_eq!(row.len(), c, "ragged rows");
+            m.data[i * c..(i + 1) * c].copy_from_slice(row);
+        }
+        m
+    }
+
+    /// Build from a flat row-major f32 buffer (embeddings come off the
+    /// PJRT runtime as f32).
+    pub fn from_f32_rows(data: &[f32], rows: usize, cols: usize) -> Self {
+        assert_eq!(data.len(), rows * cols);
+        Matrix {
+            rows,
+            cols,
+            data: data.iter().map(|&x| x as f64).collect(),
+        }
+    }
+
+    pub fn rows(&self) -> usize {
+        self.rows
+    }
+
+    pub fn cols(&self) -> usize {
+        self.cols
+    }
+
+    #[inline]
+    pub fn get(&self, i: usize, j: usize) -> f64 {
+        self.data[i * self.cols + j]
+    }
+
+    #[inline]
+    pub fn set(&mut self, i: usize, j: usize, v: f64) {
+        self.data[i * self.cols + j] = v;
+    }
+
+    /// A^T A (cols x cols).
+    pub fn gram(&self) -> Matrix {
+        let mut g = Matrix::zeros(self.cols, self.cols);
+        for j in 0..self.cols {
+            for k in j..self.cols {
+                let mut s = 0.0;
+                for i in 0..self.rows {
+                    s += self.get(i, j) * self.get(i, k);
+                }
+                g.set(j, k, s);
+                g.set(k, j, s);
+            }
+        }
+        g
+    }
+
+    /// A A^T (rows x rows).
+    pub fn gram_t(&self) -> Matrix {
+        let mut g = Matrix::zeros(self.rows, self.rows);
+        for i in 0..self.rows {
+            for k in i..self.rows {
+                let mut s = 0.0;
+                let a = &self.data[i * self.cols..(i + 1) * self.cols];
+                let b = &self.data[k * self.cols..(k + 1) * self.cols];
+                for (x, y) in a.iter().zip(b) {
+                    s += x * y;
+                }
+                g.set(i, k, s);
+                g.set(k, i, s);
+            }
+        }
+        g
+    }
+
+    pub fn frobenius_norm(&self) -> f64 {
+        self.data.iter().map(|x| x * x).sum::<f64>().sqrt()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn gram_is_symmetric_and_correct() {
+        let a = Matrix::from_rows(&[&[1.0, 2.0], &[3.0, 4.0]]);
+        let g = a.gram();
+        // A^T A = [[10, 14], [14, 20]]
+        assert_eq!(g.get(0, 0), 10.0);
+        assert_eq!(g.get(0, 1), 14.0);
+        assert_eq!(g.get(1, 0), 14.0);
+        assert_eq!(g.get(1, 1), 20.0);
+    }
+
+    #[test]
+    fn gram_t_correct() {
+        let a = Matrix::from_rows(&[&[1.0, 2.0], &[3.0, 4.0]]);
+        let g = a.gram_t();
+        // A A^T = [[5, 11], [11, 25]]
+        assert_eq!(g.get(0, 0), 5.0);
+        assert_eq!(g.get(0, 1), 11.0);
+        assert_eq!(g.get(1, 1), 25.0);
+    }
+
+    #[test]
+    fn from_f32_preserves_layout() {
+        let m = Matrix::from_f32_rows(&[1.0, 2.0, 3.0, 4.0, 5.0, 6.0], 2, 3);
+        assert_eq!(m.get(0, 2), 3.0);
+        assert_eq!(m.get(1, 0), 4.0);
+    }
+}

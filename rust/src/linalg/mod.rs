@@ -1,0 +1,77 @@
+//! Dense linear algebra substrate (no LAPACK in the vendored set).
+//!
+//! Provides exactly what the representation-quality score needs:
+//! a column-major dense matrix, symmetric eigenvalues via cyclic
+//! Jacobi, and singular values of a tall matrix through its Gram
+//! matrix (sigma_j = sqrt(eig_j(Z^T Z))) — embeddings are N x d with
+//! d <= 64, so the Gram route is both exact enough and fast.
+
+pub mod jacobi;
+pub mod matrix;
+
+pub use jacobi::symmetric_eigenvalues;
+pub use matrix::Matrix;
+
+/// Singular values of `a` (rows x cols, rows >= 1), descending.
+///
+/// Computed as sqrt of the eigenvalues of the Gram matrix over the
+/// smaller dimension; negative eigenvalues from roundoff clamp to 0.
+pub fn singular_values(a: &Matrix) -> Vec<f64> {
+    let gram = if a.rows() >= a.cols() {
+        a.gram() // A^T A : cols x cols
+    } else {
+        a.gram_t() // A A^T : rows x rows
+    };
+    let mut eig = symmetric_eigenvalues(&gram);
+    eig.sort_by(|x, y| y.partial_cmp(x).unwrap());
+    eig.into_iter().map(|l| l.max(0.0).sqrt()).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn singular_values_of_diagonal() {
+        // A = diag(3, 2, 1) embedded in 5x3
+        let mut a = Matrix::zeros(5, 3);
+        a.set(0, 0, 3.0);
+        a.set(1, 1, 2.0);
+        a.set(2, 2, 1.0);
+        let s = singular_values(&a);
+        assert_eq!(s.len(), 3);
+        assert!((s[0] - 3.0).abs() < 1e-10);
+        assert!((s[1] - 2.0).abs() < 1e-10);
+        assert!((s[2] - 1.0).abs() < 1e-10);
+    }
+
+    #[test]
+    fn singular_values_orthogonal_invariance() {
+        // rotating rows leaves singular values unchanged
+        let a = Matrix::from_rows(&[
+            &[1.0, 2.0],
+            &[3.0, 4.0],
+            &[5.0, 6.0],
+        ]);
+        let s = singular_values(&a);
+        // known singular values of this classic matrix
+        assert!((s[0] - 9.52551809).abs() < 1e-6);
+        assert!((s[1] - 0.51430058).abs() < 1e-6);
+    }
+
+    #[test]
+    fn wide_matrix_uses_small_gram() {
+        let a = Matrix::from_rows(&[&[1.0, 0.0, 0.0, 2.0], &[0.0, 3.0, 0.0, 0.0]]);
+        let s = singular_values(&a);
+        assert_eq!(s.len(), 2);
+        assert!((s[0] - 3.0).abs() < 1e-10);
+        assert!((s[1] - 5.0f64.sqrt()).abs() < 1e-10);
+    }
+
+    #[test]
+    fn rank_deficient_has_zero_sigma() {
+        let a = Matrix::from_rows(&[&[1.0, 2.0], &[2.0, 4.0], &[3.0, 6.0]]);
+        let s = singular_values(&a);
+        assert!(s[1].abs() < 1e-9, "{s:?}");
+    }
+}

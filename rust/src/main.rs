@@ -1,0 +1,214 @@
+//! fedcompress — leader binary: CLI over the experiment drivers.
+
+use std::path::{Path, PathBuf};
+
+use anyhow::Result;
+
+use fedcompress::cli::{Args, ParsedCommand, USAGE};
+use fedcompress::clustering::ControllerConfig;
+use fedcompress::compression::accounting::ccr;
+use fedcompress::config::{FedConfig, Strategy};
+use fedcompress::coordinator::run_federated;
+use fedcompress::coordinator::server::{build_data, run_federated_with_data};
+use fedcompress::exp::{figure2, table1, table2};
+use fedcompress::models::flops;
+use fedcompress::runtime::Engine;
+use fedcompress::util::logging;
+
+fn build_config(args: &Args) -> Result<FedConfig> {
+    let dataset = args.flag_or("dataset", "cifar10");
+    let mut cfg = match args.flag_or("preset", "quick") {
+        "paper" => FedConfig::paper(dataset),
+        _ => FedConfig::quick(dataset),
+    };
+    if let Some(path) = args.flag("config") {
+        cfg.load_overrides(Path::new(path))?;
+    }
+    // --dataset wins over a dataset inside --config
+    if let Some(ds) = args.flag("dataset") {
+        cfg.dataset = ds.to_string();
+    }
+    for (k, v) in &args.sets {
+        cfg.set(k, v)?;
+    }
+    cfg.validate()?;
+    Ok(cfg)
+}
+
+fn engine_for(args: &Args) -> Result<Engine> {
+    let dir = args
+        .flag("artifacts")
+        .map(PathBuf::from)
+        .unwrap_or_else(fedcompress::runtime::artifacts::default_dir);
+    Engine::load(&dir)
+}
+
+fn cmd_train(args: &Args) -> Result<()> {
+    let cfg = build_config(args)?;
+    let strategy = Strategy::parse(args.flag_or("strategy", "fedcompress"))?;
+    let engine = engine_for(args)?;
+    let result = run_federated(&engine, &cfg, strategy)?;
+    println!(
+        "\n[{}] {}: final acc={:.4} total_comm={} B mcr={:.2} (dense model {} B, wire {} B)",
+        result.strategy,
+        result.dataset,
+        result.final_accuracy,
+        result.total_bytes(),
+        result.mcr(),
+        result.dense_model_bytes,
+        result.final_model_bytes,
+    );
+    // persist the final model + codebook as a resumable checkpoint
+    if let Some(path) = args.flag("checkpoint") {
+        let scores: Vec<f64> = result.rounds.iter().map(|r| r.score).collect();
+        let ckpt = fedcompress::coordinator::checkpoint::Checkpoint::from_state(
+            cfg.rounds,
+            &result.final_theta,
+            &result.final_centroids,
+            &scores,
+        );
+        ckpt.save(Path::new(path))?;
+        println!("checkpoint written to {path}");
+    }
+    // structured event log (JSON lines) for observability tooling
+    if let Some(path) = args.flag("events") {
+        std::fs::write(path, result.events.to_jsonl())?;
+        println!("event log ({} events) written to {path}", result.events.len());
+    }
+    Ok(())
+}
+
+fn cmd_table1(args: &Args) -> Result<()> {
+    let engine = engine_for(args)?;
+    let list = args.flag_or(
+        "datasets",
+        "cifar10,cifar100,pathmnist,speechcommands,voxforge",
+    );
+    table1::print_header();
+    let mut rows = Vec::new();
+    for ds in list.split(',').filter(|s| !s.is_empty()) {
+        let mut sub = args.clone();
+        sub.flags.insert("dataset".into(), ds.to_string());
+        let cfg = build_config(&sub)?;
+        let row = table1::run_dataset(&engine, &cfg)?;
+        table1::print_row(&row);
+        rows.push(row);
+    }
+    println!();
+    table1::print_summary(&rows);
+    Ok(())
+}
+
+fn cmd_table2(args: &Args) -> Result<()> {
+    let c: usize = args.flag_or("clusters", "16").parse()?;
+    for model in ["resnet20", "mobilenet"] {
+        let rows = table2::run(model, c)?;
+        table2::print_rows(&rows);
+        println!();
+    }
+    Ok(())
+}
+
+fn cmd_figure2(args: &Args) -> Result<()> {
+    let engine = engine_for(args)?;
+    let cfg = build_config(args)?;
+    let series = figure2::run(&engine, &cfg)?;
+    figure2::print_series(&series);
+    if let Some(out) = args.flag("out") {
+        figure2::write_csv(&series, Path::new(out))?;
+        println!("wrote {out}");
+    }
+    Ok(())
+}
+
+/// Ablation A2: dynamic controller vs fixed C — accuracy/CCR trade.
+fn cmd_ablate_c(args: &Args) -> Result<()> {
+    let engine = engine_for(args)?;
+    let base_cfg = build_config(args)?;
+
+    println!(
+        "{:<22} {:>9} {:>8} {:>8} {:>8}",
+        "variant", "final_acc", "CCR", "MCR", "final_C"
+    );
+    let data = build_data(&engine, &base_cfg)?;
+    let fedavg = run_federated_with_data(&engine, &base_cfg, Strategy::FedAvg, &data)?;
+
+    // dynamic (the paper's controller)
+    let dynamic = run_federated_with_data(&engine, &base_cfg, Strategy::FedCompress, &data)?;
+    println!(
+        "{:<22} {:>9.4} {:>8.2} {:>8.2} {:>8}",
+        "dynamic [Cmin,Cmax]",
+        dynamic.final_accuracy,
+        ccr(&fedavg.ledger, &dynamic.ledger),
+        dynamic.mcr(),
+        dynamic.rounds.last().map(|r| r.clusters).unwrap_or(0)
+    );
+
+    // fixed C variants: controller pinned (c_min == c_max)
+    for c in [8usize, 16, 32] {
+        let mut cfg = base_cfg.clone();
+        cfg.controller = ControllerConfig {
+            c_min: c,
+            c_max: c,
+            ..base_cfg.controller.clone()
+        };
+        let r = run_federated_with_data(&engine, &cfg, Strategy::FedCompress, &data)?;
+        println!(
+            "{:<22} {:>9.4} {:>8.2} {:>8.2} {:>8}",
+            format!("fixed C={c}"),
+            r.final_accuracy,
+            ccr(&fedavg.ledger, &r.ledger),
+            r.mcr(),
+            c
+        );
+    }
+    Ok(())
+}
+
+fn cmd_inspect(args: &Args) -> Result<()> {
+    let engine = engine_for(args)?;
+    println!(
+        "artifacts: {} datasets, C_max={}, batch={}, tau={}",
+        engine.manifest.datasets.len(),
+        engine.manifest.c_max,
+        engine.manifest.batch,
+        engine.manifest.tau
+    );
+    for (name, ds) in &engine.manifest.datasets {
+        let spec = &ds.spec;
+        println!(
+            "  {name:<16} {:>7} params  {} classes  {:?}  {:.1} MFLOPs/inference",
+            spec.param_count,
+            spec.num_classes,
+            spec.input_shape,
+            flops::total_flops(spec) as f64 / 1e6,
+        );
+        for entry in ds.artifacts.keys() {
+            let sig = &ds.signatures[entry];
+            println!(
+                "      {entry:<14} {} inputs -> {} outputs",
+                sig.inputs.len(),
+                sig.output_shapes.len()
+            );
+        }
+    }
+    Ok(())
+}
+
+fn main() -> Result<()> {
+    logging::init();
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    let args = Args::parse(&argv)?;
+    match args.command()? {
+        ParsedCommand::Help => {
+            println!("{USAGE}");
+            Ok(())
+        }
+        ParsedCommand::Train => cmd_train(&args),
+        ParsedCommand::Table1 => cmd_table1(&args),
+        ParsedCommand::Table2 => cmd_table2(&args),
+        ParsedCommand::Figure2 => cmd_figure2(&args),
+        ParsedCommand::AblateC => cmd_ablate_c(&args),
+        ParsedCommand::Inspect => cmd_inspect(&args),
+    }
+}

@@ -1,0 +1,85 @@
+//! Per-layer FLOP and byte analysis, feeding the edge latency model.
+//!
+//! Spatial dims are propagated through the conv stack from the input
+//! shape (SAME padding, the only mode the nets use); dense layers run
+//! on pooled features. Counts are MACs*2 (the usual convention).
+
+use super::spec::{LayerKind, ModelSpec};
+
+#[derive(Clone, Debug)]
+pub struct LayerCost {
+    pub layer: String,
+    pub flops: u64,
+    /// bytes of weights streamed from memory (dense f32)
+    pub weight_bytes: u64,
+    /// activation bytes written
+    pub activation_bytes: u64,
+}
+
+/// Batch-1 inference cost per weight-bearing layer.
+pub fn inference_costs(spec: &ModelSpec) -> Vec<LayerCost> {
+    let (_, mut h, mut w) = spec.input_shape;
+    let mut costs = Vec::new();
+    for l in spec.weight_entries() {
+        match l.kind {
+            LayerKind::Conv => {
+                // shape = [cout, cin/groups, k, k]
+                let (cout, cin_g, k) = (l.shape[0], l.shape[1], l.shape[2]);
+                // ".skip" convs are parallel branches: they produce the
+                // same output dims the main path already reached, so the
+                // running dims must not be strided a second time
+                let is_branch = l.layer.ends_with(".skip");
+                if !is_branch {
+                    h = h.div_ceil(l.stride);
+                    w = w.div_ceil(l.stride);
+                }
+                let macs = (cout * cin_g * k * k * h * w) as u64;
+                costs.push(LayerCost {
+                    layer: l.layer.clone(),
+                    flops: 2 * macs,
+                    weight_bytes: (l.size * 4) as u64,
+                    activation_bytes: (cout * h * w * 4) as u64,
+                });
+            }
+            LayerKind::Dense => {
+                let (din, dout) = (l.shape[0], l.shape[1]);
+                costs.push(LayerCost {
+                    layer: l.layer.clone(),
+                    flops: 2 * (din * dout) as u64,
+                    weight_bytes: (l.size * 4) as u64,
+                    activation_bytes: (dout * 4) as u64,
+                });
+            }
+        }
+    }
+    costs
+}
+
+pub fn total_flops(spec: &ModelSpec) -> u64 {
+    inference_costs(spec).iter().map(|c| c.flops).sum()
+}
+
+pub fn total_weight_bytes(spec: &ModelSpec) -> u64 {
+    inference_costs(spec).iter().map(|c| c.weight_bytes).sum()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::models::spec::tests::demo_json;
+    use crate::models::ModelSpec;
+
+    #[test]
+    fn demo_costs() {
+        let spec = ModelSpec::from_manifest("demo", &demo_json()).unwrap();
+        let costs = inference_costs(&spec);
+        assert_eq!(costs.len(), 2);
+        // conv: cout=2, cin=3, k=2, 16x16 SAME stride 1
+        assert_eq!(costs[0].flops, 2 * (2 * 3 * 2 * 2) as u64 * 256);
+        assert_eq!(costs[0].weight_bytes, 24 * 4);
+        // dense 2x2
+        assert_eq!(costs[1].flops, 8);
+        assert!(total_flops(&spec) > 0);
+        assert_eq!(total_weight_bytes(&spec), (24 + 4) * 4);
+    }
+}

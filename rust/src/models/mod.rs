@@ -1,0 +1,10 @@
+//! Model *specifications* mirrored from the python build side via the
+//! AOT manifest: flat-parameter layout, per-layer shapes, and FLOP /
+//! byte counts. The rust side never re-implements the networks — it
+//! reads their structure to drive aggregation, codecs and the edge
+//! latency model.
+
+pub mod flops;
+pub mod spec;
+
+pub use spec::{LayerEntry, LayerKind, ModelSpec};

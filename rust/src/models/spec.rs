@@ -1,0 +1,146 @@
+//! Parsed model structure from `artifacts/manifest.json`.
+
+use crate::util::json::Json;
+use anyhow::{bail, Result};
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum LayerKind {
+    Conv,
+    Dense,
+}
+
+/// One flat-layout entry (a weight or bias tensor of one layer).
+#[derive(Clone, Debug)]
+pub struct LayerEntry {
+    pub layer: String,
+    pub kind: LayerKind,
+    pub field: String, // "w" | "b"
+    pub shape: Vec<usize>,
+    pub offset: usize,
+    pub size: usize,
+    pub stride: usize,
+    pub groups: usize,
+}
+
+/// A model's full structural description for one dataset config.
+#[derive(Clone, Debug)]
+pub struct ModelSpec {
+    pub name: String,
+    pub domain: String,
+    pub num_classes: usize,
+    pub input_shape: (usize, usize, usize),
+    pub emb_dim: usize,
+    pub param_count: usize,
+    pub layers: Vec<LayerEntry>,
+}
+
+impl ModelSpec {
+    pub fn from_manifest(name: &str, ds: &Json) -> Result<ModelSpec> {
+        let shape = ds.get("input_shape")?.usize_array()?;
+        if shape.len() != 3 {
+            bail!("input_shape must be rank 3");
+        }
+        let layers = ds
+            .get("layers")?
+            .as_arr()?
+            .iter()
+            .map(|l| {
+                let kind = match l.get("kind")?.as_str()? {
+                    "conv" => LayerKind::Conv,
+                    "dense" => LayerKind::Dense,
+                    other => bail!("unknown layer kind '{other}'"),
+                };
+                Ok(LayerEntry {
+                    layer: l.get("layer")?.as_str()?.to_string(),
+                    kind,
+                    field: l.get("field")?.as_str()?.to_string(),
+                    shape: l.get("shape")?.usize_array()?,
+                    offset: l.get("offset")?.as_usize()?,
+                    size: l.get("size")?.as_usize()?,
+                    stride: l.get("stride")?.as_usize()?,
+                    groups: l.get("groups")?.as_usize()?,
+                })
+            })
+            .collect::<Result<Vec<_>>>()?;
+
+        let spec = ModelSpec {
+            name: name.to_string(),
+            domain: ds.get("domain")?.as_str()?.to_string(),
+            num_classes: ds.get("num_classes")?.as_usize()?,
+            input_shape: (shape[0], shape[1], shape[2]),
+            emb_dim: ds.get("emb_dim")?.as_usize()?,
+            param_count: ds.get("param_count")?.as_usize()?,
+            layers,
+        };
+        spec.validate()?;
+        Ok(spec)
+    }
+
+    pub fn validate(&self) -> Result<()> {
+        let mut off = 0usize;
+        for l in &self.layers {
+            if l.offset != off {
+                bail!("layout hole at '{}': offset {} != {}", l.layer, l.offset, off);
+            }
+            let expect: usize = l.shape.iter().product();
+            if expect != l.size {
+                bail!("size mismatch at '{}'", l.layer);
+            }
+            off += l.size;
+        }
+        if off != self.param_count {
+            bail!("param_count {} != layout total {}", self.param_count, off);
+        }
+        Ok(())
+    }
+
+    /// Weight-tensor entries only (biases excluded), e.g. for layer-wise
+    /// statistics.
+    pub fn weight_entries(&self) -> impl Iterator<Item = &LayerEntry> {
+        self.layers.iter().filter(|l| l.field == "w")
+    }
+}
+
+#[cfg(test)]
+pub(crate) mod tests {
+    use super::*;
+
+    pub(crate) fn demo_json() -> Json {
+        Json::parse(
+            r#"{
+              "domain": "vision", "num_classes": 10,
+              "input_shape": [3, 16, 16], "emb_dim": 32, "param_count": 30,
+              "layers": [
+                {"layer": "stem", "kind": "conv", "field": "w",
+                 "shape": [2, 3, 2, 2], "offset": 0, "size": 24,
+                 "stride": 1, "groups": 1},
+                {"layer": "stem", "kind": "conv", "field": "b",
+                 "shape": [2], "offset": 24, "size": 2,
+                 "stride": 1, "groups": 1},
+                {"layer": "fc", "kind": "dense", "field": "w",
+                 "shape": [2, 2], "offset": 26, "size": 4,
+                 "stride": 1, "groups": 1}
+              ]
+            }"#,
+        )
+        .unwrap()
+    }
+
+    #[test]
+    fn parses_demo() {
+        let spec = ModelSpec::from_manifest("demo", &demo_json()).unwrap();
+        assert_eq!(spec.param_count, 30);
+        assert_eq!(spec.layers.len(), 3);
+        assert_eq!(spec.layers[0].kind, LayerKind::Conv);
+        assert_eq!(spec.weight_entries().count(), 2);
+    }
+
+    #[test]
+    fn rejects_layout_holes() {
+        let mut j = demo_json();
+        if let Json::Obj(m) = &mut j {
+            m.insert("param_count".into(), Json::Num(31.0));
+        }
+        assert!(ModelSpec::from_manifest("demo", &j).is_err());
+    }
+}

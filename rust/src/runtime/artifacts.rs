@@ -1,0 +1,209 @@
+//! Manifest loader: the contract between `python/compile/aot.py` and
+//! the rust runtime.
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+use anyhow::{bail, Context, Result};
+
+use crate::models::ModelSpec;
+use crate::util::json::Json;
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum DType {
+    F32,
+    I32,
+}
+
+#[derive(Clone, Debug)]
+pub struct TensorSpec {
+    pub shape: Vec<usize>,
+    pub dtype: DType,
+}
+
+impl TensorSpec {
+    pub fn elements(&self) -> usize {
+        self.shape.iter().product()
+    }
+
+    fn from_json(j: &Json) -> Result<TensorSpec> {
+        let dtype = match j.get("dtype")?.as_str()? {
+            "f32" => DType::F32,
+            "i32" => DType::I32,
+            other => bail!("unknown dtype '{other}'"),
+        };
+        Ok(TensorSpec {
+            shape: j.get("shape")?.usize_array()?,
+            dtype,
+        })
+    }
+}
+
+#[derive(Clone, Debug)]
+pub struct EntrySignature {
+    pub inputs: Vec<TensorSpec>,
+    pub output_shapes: Vec<Vec<usize>>,
+}
+
+#[derive(Clone, Debug)]
+pub struct DatasetManifest {
+    pub spec: ModelSpec,
+    /// entry name -> artifact filename
+    pub artifacts: BTreeMap<String, String>,
+    pub signatures: BTreeMap<String, EntrySignature>,
+    pub init_theta: String,
+    pub golden_dir: String,
+}
+
+#[derive(Clone, Debug)]
+pub struct Manifest {
+    pub dir: PathBuf,
+    pub c_max: usize,
+    pub batch: usize,
+    pub eval_batch: usize,
+    pub tau: f64,
+    pub block: usize,
+    pub datasets: BTreeMap<String, DatasetManifest>,
+}
+
+impl Manifest {
+    pub fn load(dir: &Path) -> Result<Manifest> {
+        let path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading {path:?} (run `make artifacts` first)"))?;
+        let j = Json::parse(&text).context("parsing manifest.json")?;
+
+        let mut datasets = BTreeMap::new();
+        for (name, ds) in j.get("datasets")?.as_obj()? {
+            let spec = ModelSpec::from_manifest(name, ds)?;
+            let artifacts = ds
+                .get("artifacts")?
+                .as_obj()?
+                .iter()
+                .map(|(k, v)| Ok((k.clone(), v.as_str()?.to_string())))
+                .collect::<Result<BTreeMap<_, _>>>()?;
+            let signatures = ds
+                .get("entry_signatures")?
+                .as_obj()?
+                .iter()
+                .map(|(k, v)| {
+                    let inputs = v
+                        .get("inputs")?
+                        .as_arr()?
+                        .iter()
+                        .map(TensorSpec::from_json)
+                        .collect::<Result<Vec<_>>>()?;
+                    let output_shapes = v
+                        .get("outputs")?
+                        .as_arr()?
+                        .iter()
+                        .map(|o| o.usize_array())
+                        .collect::<Result<Vec<_>>>()?;
+                    Ok((
+                        k.clone(),
+                        EntrySignature {
+                            inputs,
+                            output_shapes,
+                        },
+                    ))
+                })
+                .collect::<Result<BTreeMap<_, _>>>()?;
+            datasets.insert(
+                name.clone(),
+                DatasetManifest {
+                    spec,
+                    artifacts,
+                    signatures,
+                    init_theta: ds.get("init_theta")?.as_str()?.to_string(),
+                    golden_dir: ds.get("golden_dir")?.as_str()?.to_string(),
+                },
+            );
+        }
+
+        Ok(Manifest {
+            dir: dir.to_path_buf(),
+            c_max: j.get("c_max")?.as_usize()?,
+            batch: j.get("batch")?.as_usize()?,
+            eval_batch: j.get("eval_batch")?.as_usize()?,
+            tau: j.get("tau")?.as_f64()?,
+            block: j.get("block")?.as_usize()?,
+            datasets,
+        })
+    }
+
+    pub fn dataset(&self, name: &str) -> Result<&DatasetManifest> {
+        self.datasets
+            .get(name)
+            .with_context(|| format!("dataset '{name}' not in manifest"))
+    }
+
+    /// Read a raw little-endian f32 binary (init params, goldens).
+    pub fn read_f32_bin(&self, rel: &str) -> Result<Vec<f32>> {
+        let path = self.dir.join(rel);
+        let bytes =
+            std::fs::read(&path).with_context(|| format!("reading {path:?}"))?;
+        if bytes.len() % 4 != 0 {
+            bail!("{path:?}: length not a multiple of 4");
+        }
+        Ok(bytes
+            .chunks_exact(4)
+            .map(|c| f32::from_le_bytes(c.try_into().unwrap()))
+            .collect())
+    }
+
+    pub fn read_i32_bin(&self, rel: &str) -> Result<Vec<i32>> {
+        let path = self.dir.join(rel);
+        let bytes =
+            std::fs::read(&path).with_context(|| format!("reading {path:?}"))?;
+        if bytes.len() % 4 != 0 {
+            bail!("{path:?}: length not a multiple of 4");
+        }
+        Ok(bytes
+            .chunks_exact(4)
+            .map(|c| i32::from_le_bytes(c.try_into().unwrap()))
+            .collect())
+    }
+}
+
+/// Default artifacts directory: $FEDCOMPRESS_ARTIFACTS or ./artifacts.
+pub fn default_dir() -> PathBuf {
+    std::env::var("FEDCOMPRESS_ARTIFACTS")
+        .map(PathBuf::from)
+        .unwrap_or_else(|_| PathBuf::from("artifacts"))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn artifacts_available() -> bool {
+        default_dir().join("manifest.json").exists()
+    }
+
+    #[test]
+    fn loads_real_manifest() {
+        if !artifacts_available() {
+            eprintln!("skipping: artifacts not built");
+            return;
+        }
+        let m = Manifest::load(&default_dir()).unwrap();
+        assert_eq!(m.datasets.len(), 5);
+        assert_eq!(m.c_max, 32);
+        let ds = m.dataset("cifar10").unwrap();
+        assert_eq!(ds.spec.num_classes, 10);
+        assert!(ds.artifacts.contains_key("train_step"));
+        assert_eq!(ds.signatures["train_step"].inputs.len(), 7);
+        // init theta matches the declared param count
+        let theta = m.read_f32_bin(&ds.init_theta).unwrap();
+        assert_eq!(theta.len(), ds.spec.param_count);
+    }
+
+    #[test]
+    fn missing_dataset_errors() {
+        if !artifacts_available() {
+            return;
+        }
+        let m = Manifest::load(&default_dir()).unwrap();
+        assert!(m.dataset("imagenet").is_err());
+    }
+}

@@ -1,0 +1,126 @@
+//! The PJRT execution engine: artifact loading, executable caching, and
+//! the typed `run` entry the coordinator/client layers call.
+
+use std::cell::RefCell;
+use std::collections::HashMap;
+use std::path::Path;
+use std::rc::Rc;
+
+use anyhow::{Context, Result};
+use xla::{HloModuleProto, Literal, PjRtClient, PjRtLoadedExecutable, XlaComputation};
+
+use super::artifacts::{default_dir, Manifest};
+use super::literals::{to_literal, Arg};
+use crate::info;
+
+pub struct Engine {
+    client: PjRtClient,
+    pub manifest: Manifest,
+    cache: RefCell<HashMap<(String, String), Rc<PjRtLoadedExecutable>>>,
+    /// executions performed (for perf accounting)
+    exec_count: RefCell<u64>,
+}
+
+impl Engine {
+    /// Load the manifest and stand up the CPU PJRT client.
+    pub fn load(dir: &Path) -> Result<Engine> {
+        let manifest = Manifest::load(dir)?;
+        let client = PjRtClient::cpu().context("creating PJRT CPU client")?;
+        info!(
+            "runtime: platform={} devices={} datasets={}",
+            client.platform_name(),
+            client.device_count(),
+            manifest.datasets.len()
+        );
+        Ok(Engine {
+            client,
+            manifest,
+            cache: RefCell::new(HashMap::new()),
+            exec_count: RefCell::new(0),
+        })
+    }
+
+    pub fn load_default() -> Result<Engine> {
+        Engine::load(&default_dir())
+    }
+
+    /// Compile (or fetch from cache) the executable for an entry point.
+    pub fn executable(&self, dataset: &str, entry: &str) -> Result<Rc<PjRtLoadedExecutable>> {
+        let key = (dataset.to_string(), entry.to_string());
+        if let Some(exe) = self.cache.borrow().get(&key) {
+            return Ok(Rc::clone(exe));
+        }
+        let ds = self.manifest.dataset(dataset)?;
+        let fname = ds
+            .artifacts
+            .get(entry)
+            .with_context(|| format!("no artifact for entry '{entry}'"))?;
+        let path = self.manifest.dir.join(fname);
+        let t0 = std::time::Instant::now();
+        let proto = HloModuleProto::from_text_file(path.to_str().unwrap())
+            .with_context(|| format!("parsing HLO text {path:?}"))?;
+        let comp = XlaComputation::from_proto(&proto);
+        let exe = Rc::new(self.client.compile(&comp)?);
+        info!(
+            "runtime: compiled {dataset}.{entry} in {:.0} ms",
+            t0.elapsed().as_secs_f64() * 1e3
+        );
+        self.cache.borrow_mut().insert(key, Rc::clone(&exe));
+        Ok(exe)
+    }
+
+    /// Execute an entry point with typed args; returns the un-tupled
+    /// output literals. Arg count and shapes are validated against the
+    /// manifest signature before touching PJRT.
+    pub fn run(&self, dataset: &str, entry: &str, args: &[Arg<'_>]) -> Result<Vec<Literal>> {
+        let ds = self.manifest.dataset(dataset)?;
+        let sig = ds
+            .signatures
+            .get(entry)
+            .with_context(|| format!("no signature for entry '{entry}'"))?;
+        anyhow::ensure!(
+            args.len() == sig.inputs.len(),
+            "{dataset}.{entry}: expected {} args, got {}",
+            sig.inputs.len(),
+            args.len()
+        );
+        let literals: Vec<Literal> = args
+            .iter()
+            .zip(&sig.inputs)
+            .map(|(a, s)| to_literal(a, s))
+            .collect::<Result<_>>()?;
+
+        let exe = self.executable(dataset, entry)?;
+        let result = exe.execute::<Literal>(&literals)?;
+        *self.exec_count.borrow_mut() += 1;
+        // lowered with return_tuple=True: single tuple output
+        let mut tuple = result[0][0].to_literal_sync()?;
+        Ok(tuple.decompose_tuple()?)
+    }
+
+    /// Initial (He-init, seed 0) flat parameters for a dataset's model.
+    pub fn init_theta(&self, dataset: &str) -> Result<Vec<f32>> {
+        let ds = self.manifest.dataset(dataset)?;
+        self.manifest.read_f32_bin(&ds.init_theta)
+    }
+
+    pub fn exec_count(&self) -> u64 {
+        *self.exec_count.borrow()
+    }
+
+    /// Pre-compile every entry point for a dataset (startup warm-up so
+    /// the first federated round doesn't pay compile latency).
+    pub fn warmup(&self, dataset: &str) -> Result<()> {
+        let entries: Vec<String> = self
+            .manifest
+            .dataset(dataset)?
+            .artifacts
+            .keys()
+            .cloned()
+            .collect();
+        for e in entries {
+            self.executable(dataset, &e)?;
+        }
+        Ok(())
+    }
+}

@@ -1,0 +1,68 @@
+//! Conversions between rust buffers and XLA literals.
+
+use anyhow::{bail, Result};
+use xla::Literal;
+
+use super::artifacts::{DType, TensorSpec};
+
+/// Build a literal matching a tensor spec from a flat buffer.
+pub fn f32_literal(data: &[f32], shape: &[usize]) -> Result<Literal> {
+    let n: usize = shape.iter().product();
+    if data.len() != n {
+        bail!("literal shape mismatch: {} elems vs shape {shape:?}", data.len());
+    }
+    if shape.is_empty() {
+        return Ok(Literal::scalar(data[0]));
+    }
+    let dims: Vec<i64> = shape.iter().map(|&d| d as i64).collect();
+    Ok(Literal::vec1(data).reshape(&dims)?)
+}
+
+pub fn i32_literal(data: &[i32], shape: &[usize]) -> Result<Literal> {
+    let n: usize = shape.iter().product();
+    if data.len() != n {
+        bail!("literal shape mismatch: {} elems vs shape {shape:?}", data.len());
+    }
+    if shape.is_empty() {
+        return Ok(Literal::scalar(data[0]));
+    }
+    let dims: Vec<i64> = shape.iter().map(|&d| d as i64).collect();
+    Ok(Literal::vec1(data).reshape(&dims)?)
+}
+
+/// Typed dispatch against a signature entry.
+pub enum Arg<'a> {
+    F32(&'a [f32]),
+    I32(&'a [i32]),
+    Scalar(f32),
+}
+
+pub fn to_literal(arg: &Arg<'_>, spec: &TensorSpec) -> Result<Literal> {
+    match (arg, spec.dtype) {
+        (Arg::F32(d), DType::F32) => f32_literal(d, &spec.shape),
+        (Arg::I32(d), DType::I32) => i32_literal(d, &spec.shape),
+        (Arg::Scalar(v), DType::F32) => {
+            if !spec.shape.is_empty() {
+                bail!("scalar arg for non-scalar spec {:?}", spec.shape);
+            }
+            Ok(Literal::scalar(*v))
+        }
+        _ => bail!("dtype mismatch between arg and spec"),
+    }
+}
+
+pub fn literal_to_f32(l: &Literal) -> Result<Vec<f32>> {
+    Ok(l.to_vec::<f32>()?)
+}
+
+pub fn literal_to_i32(l: &Literal) -> Result<Vec<i32>> {
+    Ok(l.to_vec::<i32>()?)
+}
+
+pub fn literal_scalar_f32(l: &Literal) -> Result<f32> {
+    let v = l.to_vec::<f32>()?;
+    if v.len() != 1 {
+        bail!("expected scalar, got {} elements", v.len());
+    }
+    Ok(v[0])
+}

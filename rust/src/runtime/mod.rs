@@ -1,0 +1,20 @@
+//! PJRT runtime: loads the AOT HLO-text artifacts and executes them on
+//! the CPU PJRT client from the rust hot path.
+//!
+//! Interchange is HLO *text* (see python/compile/aot.py and
+//! /opt/xla-example/README.md): `HloModuleProto::from_text_file` ->
+//! `XlaComputation::from_proto` -> `client.compile` -> `execute`.
+//! Executables are compiled once per (dataset, entry) and cached.
+//!
+//! The `xla` crate's PjRtClient wraps `Rc` (not Send), so the engine is
+//! thread-confined: the coordinator owns it on the main thread and
+//! simulated clients execute through it sequentially — faithful to a
+//! single shared accelerator, and XLA's own intra-op thread pool keeps
+//! the cores busy.
+
+pub mod artifacts;
+pub mod engine;
+pub mod literals;
+
+pub use artifacts::{DatasetManifest, EntrySignature, Manifest, TensorSpec};
+pub use engine::Engine;

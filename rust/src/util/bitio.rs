@@ -1,0 +1,186 @@
+//! Bit-level I/O: the wire substrate for the clustered-weight codec
+//! (ceil(log2 C) bits per index) and the Huffman coder (FedZip).
+//! LSB-first within each byte; writer and reader are exact inverses.
+
+/// Append-only bit writer.
+#[derive(Default)]
+pub struct BitWriter {
+    buf: Vec<u8>,
+    /// bits used in the last byte (0 => last byte full / empty buf)
+    used: u32,
+}
+
+impl BitWriter {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Write the low `n` bits of `v` (n <= 32), LSB first.
+    pub fn write(&mut self, v: u32, n: u32) {
+        debug_assert!(n <= 32);
+        debug_assert!(n == 32 || v < (1u64 << n) as u32);
+        let mut v = v as u64;
+        let mut n = n;
+        while n > 0 {
+            if self.used == 0 {
+                self.buf.push(0);
+                self.used = 0;
+            }
+            let free = 8 - self.used;
+            let take = free.min(n);
+            let last = self.buf.last_mut().unwrap();
+            *last |= ((v & ((1u64 << take) - 1)) as u8) << self.used;
+            // used == 0 again <=> the byte is full; the next iteration
+            // (or the next call) pushes a fresh byte at the loop top.
+            self.used = (self.used + take) % 8;
+            v >>= take;
+            n -= take;
+        }
+    }
+
+    /// Write a single bit.
+    pub fn write_bit(&mut self, b: bool) {
+        self.write(b as u32, 1);
+    }
+
+    pub fn bit_len(&self) -> usize {
+        if self.buf.is_empty() {
+            0
+        } else {
+            (self.buf.len() - 1) * 8 + if self.used == 0 { 8 } else { self.used as usize }
+        }
+    }
+
+    pub fn into_bytes(self) -> Vec<u8> {
+        self.buf
+    }
+
+    pub fn as_bytes(&self) -> &[u8] {
+        &self.buf
+    }
+}
+
+/// Sequential bit reader over a byte slice.
+pub struct BitReader<'a> {
+    buf: &'a [u8],
+    pos: usize, // absolute bit position
+}
+
+impl<'a> BitReader<'a> {
+    pub fn new(buf: &'a [u8]) -> Self {
+        BitReader { buf, pos: 0 }
+    }
+
+    /// Read `n` bits (n <= 32), LSB first. Returns None past the end.
+    pub fn read(&mut self, n: u32) -> Option<u32> {
+        if self.pos + n as usize > self.buf.len() * 8 {
+            return None;
+        }
+        let mut v: u64 = 0;
+        let mut got = 0;
+        while got < n {
+            let byte = self.buf[self.pos / 8];
+            let off = (self.pos % 8) as u32;
+            let avail = 8 - off;
+            let take = avail.min(n - got);
+            let bits = ((byte >> off) as u64) & ((1u64 << take) - 1);
+            v |= bits << got;
+            got += take;
+            self.pos += take as usize;
+        }
+        Some(v as u32)
+    }
+
+    pub fn read_bit(&mut self) -> Option<bool> {
+        self.read(1).map(|b| b != 0)
+    }
+
+    pub fn remaining_bits(&self) -> usize {
+        self.buf.len() * 8 - self.pos
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn single_bits_roundtrip() {
+        let mut w = BitWriter::new();
+        let pattern = [true, false, true, true, false, false, true, false, true];
+        for &b in &pattern {
+            w.write_bit(b);
+        }
+        let bytes = w.into_bytes();
+        let mut r = BitReader::new(&bytes);
+        for &b in &pattern {
+            assert_eq!(r.read_bit(), Some(b));
+        }
+    }
+
+    #[test]
+    fn mixed_widths_roundtrip() {
+        let mut w = BitWriter::new();
+        let vals: Vec<(u32, u32)> = vec![
+            (5, 3),
+            (0, 1),
+            (1023, 10),
+            (0xdeadbeef, 32),
+            (7, 7),
+            (1, 1),
+            (65535, 16),
+        ];
+        for &(v, n) in &vals {
+            w.write(v, n);
+        }
+        let total_bits: u32 = vals.iter().map(|&(_, n)| n).sum();
+        assert_eq!(w.bit_len(), total_bits as usize);
+        let bytes = w.into_bytes();
+        let mut r = BitReader::new(&bytes);
+        for &(v, n) in &vals {
+            assert_eq!(r.read(n), Some(v), "width {n}");
+        }
+    }
+
+    #[test]
+    fn random_roundtrip_property() {
+        let mut rng = Rng::new(99);
+        for _ in 0..50 {
+            let mut w = BitWriter::new();
+            let mut vals = Vec::new();
+            for _ in 0..200 {
+                let n = 1 + rng.below(32) as u32;
+                let v = if n == 32 {
+                    rng.next_u64() as u32
+                } else {
+                    (rng.next_u64() as u32) & ((1u32 << n) - 1)
+                };
+                w.write(v, n);
+                vals.push((v, n));
+            }
+            let bytes = w.into_bytes();
+            let mut r = BitReader::new(&bytes);
+            for (v, n) in vals {
+                assert_eq!(r.read(n), Some(v));
+            }
+        }
+    }
+
+    #[test]
+    fn read_past_end_is_none() {
+        let mut w = BitWriter::new();
+        w.write(3, 2);
+        let bytes = w.into_bytes();
+        let mut r = BitReader::new(&bytes);
+        assert_eq!(r.read(2), Some(3));
+        assert_eq!(r.read(8), None); // only 6 padding bits remain
+    }
+
+    #[test]
+    fn byte_len_is_minimal() {
+        let mut w = BitWriter::new();
+        w.write(0x1ff, 9);
+        assert_eq!(w.as_bytes().len(), 2);
+    }
+}

@@ -1,0 +1,118 @@
+//! Minimal CSV writer/reader (RFC 4180 quoting) for experiment series
+//! (figure CSVs, result dumps). Reader handles quoted fields, embedded
+//! commas/quotes/newlines.
+
+use anyhow::{bail, Result};
+
+pub fn escape_field(s: &str) -> String {
+    if s.contains([',', '"', '\n', '\r']) {
+        format!("\"{}\"", s.replace('"', "\"\""))
+    } else {
+        s.to_string()
+    }
+}
+
+pub fn write_row(out: &mut String, fields: &[&str]) {
+    for (i, f) in fields.iter().enumerate() {
+        if i > 0 {
+            out.push(',');
+        }
+        out.push_str(&escape_field(f));
+    }
+    out.push('\n');
+}
+
+/// Parse CSV text into rows of fields.
+pub fn parse(text: &str) -> Result<Vec<Vec<String>>> {
+    let mut rows = Vec::new();
+    let mut row: Vec<String> = Vec::new();
+    let mut field = String::new();
+    let mut chars = text.chars().peekable();
+    let mut in_quotes = false;
+    let mut any = false;
+
+    while let Some(c) = chars.next() {
+        any = true;
+        if in_quotes {
+            match c {
+                '"' => {
+                    if chars.peek() == Some(&'"') {
+                        chars.next();
+                        field.push('"');
+                    } else {
+                        in_quotes = false;
+                    }
+                }
+                c => field.push(c),
+            }
+        } else {
+            match c {
+                '"' => {
+                    if !field.is_empty() {
+                        bail!("quote inside unquoted field");
+                    }
+                    in_quotes = true;
+                }
+                ',' => {
+                    row.push(std::mem::take(&mut field));
+                }
+                '\n' => {
+                    row.push(std::mem::take(&mut field));
+                    rows.push(std::mem::take(&mut row));
+                }
+                '\r' => {} // tolerate CRLF
+                c => field.push(c),
+            }
+        }
+    }
+    if in_quotes {
+        bail!("unterminated quoted field");
+    }
+    if any && (!field.is_empty() || !row.is_empty()) {
+        row.push(field);
+        rows.push(row);
+    }
+    Ok(rows)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roundtrip_simple() {
+        let mut s = String::new();
+        write_row(&mut s, &["round", "score", "acc"]);
+        write_row(&mut s, &["0", "4.5", "0.31"]);
+        let rows = parse(&s).unwrap();
+        assert_eq!(rows.len(), 2);
+        assert_eq!(rows[1], vec!["0", "4.5", "0.31"]);
+    }
+
+    #[test]
+    fn quoting_round_trip() {
+        let mut s = String::new();
+        write_row(&mut s, &["a,b", "he said \"hi\"", "multi\nline"]);
+        let rows = parse(&s).unwrap();
+        assert_eq!(rows[0][0], "a,b");
+        assert_eq!(rows[0][1], "he said \"hi\"");
+        assert_eq!(rows[0][2], "multi\nline");
+    }
+
+    #[test]
+    fn crlf_tolerated() {
+        let rows = parse("a,b\r\nc,d\r\n").unwrap();
+        assert_eq!(rows, vec![vec!["a", "b"], vec!["c", "d"]]);
+    }
+
+    #[test]
+    fn malformed_rejected() {
+        assert!(parse("a\"b,c\n").is_err());
+        assert!(parse("\"unterminated").is_err());
+    }
+
+    #[test]
+    fn empty_input() {
+        assert!(parse("").unwrap().is_empty());
+    }
+}

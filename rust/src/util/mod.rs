@@ -1,0 +1,10 @@
+//! Foundation substrates built in-repo (the offline registry vendors
+//! only the `xla` dependency tree — no serde/tokio/clap/etc.).
+
+pub mod bitio;
+pub mod csv;
+pub mod json;
+pub mod logging;
+pub mod rng;
+pub mod stats;
+pub mod threadpool;

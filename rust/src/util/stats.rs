@@ -1,0 +1,174 @@
+//! Streaming statistics + small analytic helpers shared by the metrics
+//! pipeline, the dynamic-C controller and the experiment drivers.
+
+/// Welford online mean/variance.
+#[derive(Clone, Debug, Default)]
+pub struct Welford {
+    n: u64,
+    mean: f64,
+    m2: f64,
+}
+
+impl Welford {
+    pub fn push(&mut self, x: f64) {
+        self.n += 1;
+        let d = x - self.mean;
+        self.mean += d / self.n as f64;
+        self.m2 += d * (x - self.mean);
+    }
+
+    pub fn count(&self) -> u64 {
+        self.n
+    }
+
+    pub fn mean(&self) -> f64 {
+        self.mean
+    }
+
+    pub fn variance(&self) -> f64 {
+        if self.n < 2 {
+            0.0
+        } else {
+            self.m2 / (self.n - 1) as f64
+        }
+    }
+
+    pub fn std(&self) -> f64 {
+        self.variance().sqrt()
+    }
+}
+
+/// Fixed-window moving average (the paper's MA over window W for the
+/// representation-quality score).
+#[derive(Clone, Debug)]
+pub struct MovingAverage {
+    window: usize,
+    buf: Vec<f64>,
+}
+
+impl MovingAverage {
+    pub fn new(window: usize) -> Self {
+        assert!(window > 0);
+        MovingAverage {
+            window,
+            buf: Vec::new(),
+        }
+    }
+
+    pub fn push(&mut self, x: f64) {
+        self.buf.push(x);
+    }
+
+    /// MA at the latest point (mean of up to `window` trailing values);
+    /// None until at least one value has been pushed.
+    pub fn current(&self) -> Option<f64> {
+        self.at(self.buf.len().checked_sub(1)?)
+    }
+
+    /// MA ending at index i (inclusive).
+    pub fn at(&self, i: usize) -> Option<f64> {
+        if i >= self.buf.len() {
+            return None;
+        }
+        let start = (i + 1).saturating_sub(self.window);
+        let slice = &self.buf[start..=i];
+        Some(slice.iter().sum::<f64>() / slice.len() as f64)
+    }
+
+    pub fn len(&self) -> usize {
+        self.buf.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.buf.is_empty()
+    }
+}
+
+/// Pearson correlation coefficient (used to reproduce Figure 2's
+/// score<->accuracy correlation claim).
+pub fn pearson(xs: &[f64], ys: &[f64]) -> f64 {
+    assert_eq!(xs.len(), ys.len());
+    let n = xs.len() as f64;
+    if n < 2.0 {
+        return 0.0;
+    }
+    let mx = xs.iter().sum::<f64>() / n;
+    let my = ys.iter().sum::<f64>() / n;
+    let mut sxy = 0.0;
+    let mut sxx = 0.0;
+    let mut syy = 0.0;
+    for (&x, &y) in xs.iter().zip(ys) {
+        sxy += (x - mx) * (y - my);
+        sxx += (x - mx) * (x - mx);
+        syy += (y - my) * (y - my);
+    }
+    if sxx == 0.0 || syy == 0.0 {
+        return 0.0;
+    }
+    sxy / (sxx * syy).sqrt()
+}
+
+/// Percentile of a sample (linear interpolation, p in [0, 100]).
+pub fn percentile(xs: &[f64], p: f64) -> f64 {
+    assert!(!xs.is_empty());
+    let mut v = xs.to_vec();
+    v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let rank = (p / 100.0) * (v.len() - 1) as f64;
+    let lo = rank.floor() as usize;
+    let hi = rank.ceil() as usize;
+    if lo == hi {
+        v[lo]
+    } else {
+        v[lo] + (rank - lo as f64) * (v[hi] - v[lo])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn welford_matches_two_pass() {
+        let xs = [1.0, 2.0, 4.0, 8.0, 16.0];
+        let mut w = Welford::default();
+        for &x in &xs {
+            w.push(x);
+        }
+        let mean = xs.iter().sum::<f64>() / xs.len() as f64;
+        let var = xs.iter().map(|x| (x - mean).powi(2)).sum::<f64>()
+            / (xs.len() - 1) as f64;
+        assert!((w.mean() - mean).abs() < 1e-12);
+        assert!((w.variance() - var).abs() < 1e-12);
+    }
+
+    #[test]
+    fn moving_average_window() {
+        let mut ma = MovingAverage::new(3);
+        for x in [1.0, 2.0, 3.0, 4.0, 5.0] {
+            ma.push(x);
+        }
+        assert_eq!(ma.current(), Some(4.0)); // (3+4+5)/3
+        assert_eq!(ma.at(0), Some(1.0));
+        assert_eq!(ma.at(1), Some(1.5));
+        assert_eq!(ma.at(2), Some(2.0));
+        assert_eq!(ma.at(9), None);
+    }
+
+    #[test]
+    fn pearson_perfect_and_anti() {
+        let xs = [1.0, 2.0, 3.0, 4.0];
+        let ys: Vec<f64> = xs.iter().map(|x| 2.0 * x + 1.0).collect();
+        assert!((pearson(&xs, &ys) - 1.0).abs() < 1e-12);
+        let zs: Vec<f64> = xs.iter().map(|x| -x).collect();
+        assert!((pearson(&xs, &zs) + 1.0).abs() < 1e-12);
+        assert_eq!(pearson(&xs, &[5.0, 5.0, 5.0, 5.0]), 0.0);
+    }
+
+    #[test]
+    fn percentile_interpolates() {
+        let xs = [10.0, 20.0, 30.0, 40.0];
+        assert_eq!(percentile(&xs, 0.0), 10.0);
+        assert_eq!(percentile(&xs, 100.0), 40.0);
+        assert_eq!(percentile(&xs, 50.0), 25.0);
+    }
+}

@@ -1,0 +1,116 @@
+//! Fixed-size thread pool with a scoped parallel-map — the execution
+//! substrate for simulated clients (tokio is not in the vendored set).
+//!
+//! `scope_map` runs a closure over a slice of work items on N worker
+//! threads and returns results in input order; panics in workers are
+//! propagated to the caller.
+
+use std::sync::mpsc;
+use std::sync::{Arc, Mutex};
+use std::thread;
+
+/// Run `f` over `0..n` on up to `workers` threads; results in index order.
+///
+/// `f` must be Sync (shared by reference across workers). This is a
+/// scoped-parallelism helper rather than a persistent pool: client-round
+/// granularity is coarse (each item runs many PJRT executions), so
+/// thread spawn cost is noise, and scoping keeps lifetimes simple.
+pub fn parallel_map<T, F>(n: usize, workers: usize, f: F) -> Vec<T>
+where
+    T: Send,
+    F: Fn(usize) -> T + Sync,
+{
+    assert!(workers > 0);
+    if n == 0 {
+        return Vec::new();
+    }
+    let workers = workers.min(n);
+    let next = Arc::new(Mutex::new(0usize));
+    let (tx, rx) = mpsc::channel::<(usize, T)>();
+
+    thread::scope(|s| {
+        for _ in 0..workers {
+            let next = Arc::clone(&next);
+            let tx = tx.clone();
+            let f = &f;
+            s.spawn(move || loop {
+                let i = {
+                    let mut g = next.lock().unwrap();
+                    if *g >= n {
+                        return;
+                    }
+                    let i = *g;
+                    *g += 1;
+                    i
+                };
+                let out = f(i);
+                if tx.send((i, out)).is_err() {
+                    return;
+                }
+            });
+        }
+        drop(tx);
+        let mut slots: Vec<Option<T>> = (0..n).map(|_| None).collect();
+        for (i, v) in rx {
+            slots[i] = Some(v);
+        }
+        slots
+            .into_iter()
+            .map(|s| s.expect("worker panicked before producing a result"))
+            .collect()
+    })
+}
+
+/// Number of workers to use by default: physical parallelism, capped.
+pub fn default_workers() -> usize {
+    thread::available_parallelism()
+        .map(|n| n.get())
+        .unwrap_or(4)
+        .min(16)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::{AtomicUsize, Ordering};
+
+    #[test]
+    fn results_in_order() {
+        let out = parallel_map(100, 8, |i| i * i);
+        assert_eq!(out, (0..100).map(|i| i * i).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn all_items_run_exactly_once() {
+        let counter = AtomicUsize::new(0);
+        let out = parallel_map(500, 7, |_| {
+            counter.fetch_add(1, Ordering::SeqCst);
+            1usize
+        });
+        assert_eq!(counter.load(Ordering::SeqCst), 500);
+        assert_eq!(out.iter().sum::<usize>(), 500);
+    }
+
+    #[test]
+    fn single_worker_degrades_to_sequential() {
+        let out = parallel_map(10, 1, |i| i);
+        assert_eq!(out, (0..10).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn empty_input() {
+        let out: Vec<usize> = parallel_map(0, 4, |i| i);
+        assert!(out.is_empty());
+    }
+
+    #[test]
+    #[should_panic]
+    fn worker_panic_propagates() {
+        parallel_map(8, 4, |i| {
+            if i == 3 {
+                panic!("boom");
+            }
+            i
+        });
+    }
+}

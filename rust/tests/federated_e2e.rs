@@ -1,0 +1,122 @@
+//! End-to-end federated smoke tests: tiny runs of every strategy
+//! through the full stack (PJRT execution included). Skipped when
+//! artifacts are absent.
+
+use fedcompress::compression::accounting::{ccr, Direction};
+use fedcompress::config::{FedConfig, Strategy};
+use fedcompress::coordinator::server::{build_data, run_federated_with_data};
+use fedcompress::runtime::artifacts::default_dir;
+use fedcompress::runtime::Engine;
+
+fn engine() -> Option<Engine> {
+    let d = default_dir();
+    if !d.join("manifest.json").exists() {
+        eprintln!("skipping: artifacts not built");
+        return None;
+    }
+    Some(Engine::load(&d).unwrap())
+}
+
+fn tiny_cfg(dataset: &str) -> FedConfig {
+    let mut cfg = FedConfig::quick(dataset);
+    cfg.rounds = 4;
+    cfg.clients = 3;
+    cfg.local_epochs = 2;
+    cfg.server_epochs = 1;
+    cfg.train_size = 192;
+    cfg.test_size = 96;
+    cfg.ood_size = 64;
+    cfg.unlabeled_per_client = 16;
+    cfg.warmup_rounds = 1;
+    cfg.validate().unwrap();
+    cfg
+}
+
+#[test]
+fn all_strategies_complete_and_account_bytes() {
+    let Some(engine) = engine() else { return };
+    let cfg = tiny_cfg("cifar10");
+    let data = build_data(&engine, &cfg).unwrap();
+
+    let mut results = Vec::new();
+    for strategy in Strategy::ALL {
+        let r = run_federated_with_data(&engine, &cfg, strategy, &data).unwrap();
+        assert_eq!(r.rounds.len(), cfg.rounds, "{}", strategy.name());
+        // every round moved bytes in both directions
+        for m in &r.rounds {
+            assert!(m.up_bytes > 0 && m.down_bytes > 0);
+            assert!(m.accuracy.is_finite() && m.score >= 1.0);
+        }
+        assert!(r.ledger.bytes_in(Direction::Up) > 0);
+        assert!(r.ledger.bytes_in(Direction::Down) > 0);
+        assert!(r.final_accuracy.is_finite());
+        assert!(r.mcr() >= 0.99, "{}: mcr {}", strategy.name(), r.mcr());
+        results.push(r);
+    }
+
+    // wire-format claims, paired on identical data:
+    let fedavg = &results[0];
+    let fedzip = &results[1];
+    let noscs = &results[2];
+    let fedcmp = &results[3];
+
+    // FedZip compresses only upstream
+    assert!(fedzip.ledger.bytes_in(Direction::Up) < fedavg.ledger.bytes_in(Direction::Up));
+    assert_eq!(
+        fedzip.ledger.bytes_in(Direction::Down),
+        fedavg.ledger.bytes_in(Direction::Down)
+    );
+    // w/o SCS the wire is dense (CCR ~ 1)
+    let r = ccr(&fedavg.ledger, &noscs.ledger);
+    assert!((0.95..=1.05).contains(&r), "noscs CCR {r}");
+    // FedCompress beats FedZip on total communication
+    assert!(
+        fedcmp.total_bytes() < fedzip.total_bytes(),
+        "{} vs {}",
+        fedcmp.total_bytes(),
+        fedzip.total_bytes()
+    );
+    // and its model ships smaller than FedAvg's
+    assert!(fedcmp.final_model_bytes < fedavg.final_model_bytes / 3);
+}
+
+#[test]
+fn audio_domain_runs_end_to_end() {
+    let Some(engine) = engine() else { return };
+    let cfg = tiny_cfg("voxforge");
+    let data = build_data(&engine, &cfg).unwrap();
+    let r = run_federated_with_data(&engine, &cfg, Strategy::FedCompress, &data).unwrap();
+    assert_eq!(r.rounds.len(), cfg.rounds);
+    assert!(r.final_accuracy > 0.05); // above random-ish floor (6 classes)
+}
+
+#[test]
+fn deterministic_given_seed() {
+    let Some(engine) = engine() else { return };
+    let cfg = tiny_cfg("cifar10");
+    let d1 = build_data(&engine, &cfg).unwrap();
+    let r1 = run_federated_with_data(&engine, &cfg, Strategy::FedCompress, &d1).unwrap();
+    let d2 = build_data(&engine, &cfg).unwrap();
+    let r2 = run_federated_with_data(&engine, &cfg, Strategy::FedCompress, &d2).unwrap();
+    assert_eq!(r1.final_theta, r2.final_theta);
+    assert_eq!(r1.total_bytes(), r2.total_bytes());
+    let mut cfg3 = cfg.clone();
+    cfg3.seed = 43;
+    let d3 = build_data(&engine, &cfg3).unwrap();
+    let r3 = run_federated_with_data(&engine, &cfg3, Strategy::FedCompress, &d3).unwrap();
+    assert_ne!(r1.final_theta, r3.final_theta);
+}
+
+#[test]
+fn partial_participation_works() {
+    let Some(engine) = engine() else { return };
+    let mut cfg = tiny_cfg("pathmnist");
+    cfg.clients = 6;
+    cfg.participation = 0.5;
+    cfg.train_size = 384;
+    let data = build_data(&engine, &cfg).unwrap();
+    let r = run_federated_with_data(&engine, &cfg, Strategy::FedAvg, &data).unwrap();
+    // 3 of 6 clients per round -> downstream counts 3 dispatches
+    let p = engine.manifest.dataset("pathmnist").unwrap().spec.param_count;
+    assert_eq!(r.rounds[0].down_bytes, 3 * 4 * p);
+}

@@ -1,0 +1,192 @@
+//! Cross-module integration tests that do not need the PJRT runtime:
+//! codec pipelines over realistic weight vectors, the controller+
+//! centroid interplay, partition->batch flows, and the mini property
+//! framework driving multi-module invariants.
+
+use fedcompress::check::{ensure, forall, pair, usize_in, vec_f32};
+use fedcompress::clustering::{CentroidState, ClusterController, ControllerConfig};
+use fedcompress::compression::codec::{decode, dense_bytes, quantize_and_encode};
+use fedcompress::compression::huffman::{huffman_decode, huffman_encode};
+use fedcompress::compression::kmeans::kmeans_1d;
+use fedcompress::data::partition::{partition_dirichlet, sigma_to_alpha};
+use fedcompress::data::synth::{generate, SynthSpec};
+use fedcompress::util::rng::Rng;
+
+#[test]
+fn codec_roundtrip_property_over_random_weights() {
+    forall(
+        40,
+        0xC0DEC,
+        &pair(vec_f32(0.5), usize_in(2, 32)),
+        |(weights, c)| {
+            let mut rng = Rng::new(7);
+            let (cb, _, _) = kmeans_1d(weights, *c, 20, &mut rng);
+            let (enc, quantized) = quantize_and_encode(weights, &cb);
+            let (dec, idx, cb2) = decode(&enc.bytes).map_err(|e| e.to_string())?;
+            ensure(dec == quantized, "decode != quantized")?;
+            ensure(cb2 == cb, "codebook mismatch")?;
+            ensure(idx.len() == weights.len(), "index count")?;
+            ensure(
+                enc.wire_bytes() <= dense_bytes(weights.len()) + 64 + 4 * cb.len(),
+                "encoded larger than dense + headers",
+            )
+        },
+    );
+}
+
+#[test]
+fn quantization_error_shrinks_with_more_clusters() {
+    let mut rng = Rng::new(11);
+    let weights: Vec<f32> = (0..8000).map(|_| rng.normal() * 0.3).collect();
+    let mut last_err = f64::MAX;
+    for c in [4usize, 8, 16, 32] {
+        let (cb, _, _) = kmeans_1d(&weights, c, 30, &mut rng);
+        let (_, q) = quantize_and_encode(&weights, &cb);
+        let err: f64 = weights
+            .iter()
+            .zip(&q)
+            .map(|(&a, &b)| ((a - b) as f64).powi(2))
+            .sum();
+        assert!(err < last_err, "c={c}");
+        last_err = err;
+    }
+}
+
+#[test]
+fn huffman_tracks_assignment_entropy() {
+    // clustered weights from a bimodal distribution compress better than
+    // uniform ones at the same C
+    let mut rng = Rng::new(13);
+    let bimodal: Vec<f32> = (0..10_000)
+        .map(|i| {
+            if i % 10 == 0 {
+                rng.normal()
+            } else {
+                0.01 * rng.normal()
+            }
+        })
+        .collect();
+    let uniformish: Vec<f32> = (0..10_000).map(|_| rng.normal()).collect();
+    let (cb_b, _, _) = kmeans_1d(&bimodal, 16, 25, &mut rng);
+    let (cb_u, _, _) = kmeans_1d(&uniformish, 16, 25, &mut rng);
+    let (enc_b, _) = quantize_and_encode(&bimodal, &cb_b);
+    let (enc_u, _) = quantize_and_encode(&uniformish, &cb_u);
+    assert!(
+        enc_b.wire_bytes() < enc_u.wire_bytes(),
+        "{} vs {}",
+        enc_b.wire_bytes(),
+        enc_u.wire_bytes()
+    );
+}
+
+#[test]
+fn huffman_roundtrip_property() {
+    forall(50, 0x0FF, &pair(usize_in(2, 64), usize_in(1, 4000)), |(alpha, n)| {
+        let mut rng = Rng::new((*alpha * 31 + *n) as u64);
+        // skewed symbol distribution
+        let weights: Vec<f64> = (0..*alpha).map(|i| 1.0 / (1.0 + i as f64)).collect();
+        let symbols: Vec<u32> = (0..*n).map(|_| rng.categorical(&weights) as u32).collect();
+        let enc = huffman_encode(&symbols, *alpha);
+        let dec = huffman_decode(&enc).map_err(|e| e.to_string())?;
+        ensure(dec == symbols, "huffman roundtrip")
+    });
+}
+
+#[test]
+fn controller_with_centroids_grows_consistently() {
+    let mut rng = Rng::new(17);
+    let weights: Vec<f32> = (0..4000).map(|_| rng.normal() * 0.2).collect();
+    let cfg = ControllerConfig {
+        c_min: 8,
+        c_max: 32,
+        window: 3,
+        patience: 3,
+        step: 8,
+    };
+    let mut cents = CentroidState::init_from_weights(&weights, cfg.c_min, 32, &mut rng);
+    let mut ctl = ClusterController::new(cfg);
+    // plateaued scores force growth; centroid state must track
+    for _ in 0..30 {
+        let c = ctl.observe(2.0);
+        if c > cents.active {
+            cents.grow_to(c);
+        }
+        assert_eq!(cents.active, ctl.current_c());
+        assert_eq!(
+            cents.mask.iter().filter(|&&m| m == 1.0).count(),
+            cents.active
+        );
+    }
+    assert_eq!(cents.active, 32);
+    // codebook still sorted & within data range after repeated growth
+    let cb = cents.active_codebook();
+    for w in cb.windows(2) {
+        assert!(w[0] <= w[1]);
+    }
+    assert!(cb.iter().all(|c| c.abs() < 10.0));
+}
+
+#[test]
+fn partition_to_batches_flow() {
+    let spec = SynthSpec::for_dataset("pathmnist");
+    let data = generate(&spec, 600, 5, 0);
+    let mut rng = Rng::new(23);
+    let shards = partition_dirichlet(&data, 6, sigma_to_alpha(0.25), 40, &mut rng);
+    assert_eq!(shards.len(), 6);
+    for shard in &shards {
+        let (du, dl) = shard.take(16);
+        assert_eq!(du.len(), 16);
+        // every client can form full train batches
+        let batches = dl.epoch_batches(32, &mut rng);
+        assert!(!batches.is_empty());
+        for (xs, ys) in &batches {
+            assert_eq!(ys.len(), 32);
+            assert_eq!(xs.len(), 32 * dl.feature_len());
+            assert!(ys.iter().all(|&y| (y as usize) < 9));
+        }
+    }
+}
+
+#[test]
+fn sigma_controls_observable_heterogeneity() {
+    let spec = SynthSpec::for_dataset("cifar10");
+    let data = generate(&spec, 2000, 9, 0);
+
+    let dominance = |sigma: f64, seed: u64| -> f64 {
+        let mut rng = Rng::new(seed);
+        let shards = partition_dirichlet(&data, 10, sigma_to_alpha(sigma), 20, &mut rng);
+        shards
+            .iter()
+            .map(|s| {
+                *s.label_histogram().iter().max().unwrap() as f64 / s.len() as f64
+            })
+            .sum::<f64>()
+            / shards.len() as f64
+    };
+    // average over seeds to de-noise
+    let lo: f64 = (0..5).map(|s| dominance(0.05, s)).sum::<f64>() / 5.0;
+    let hi: f64 = (0..5).map(|s| dominance(0.8, s)).sum::<f64>() / 5.0;
+    assert!(hi > lo + 0.1, "sigma=0.8 dominance {hi} vs sigma=0.05 {lo}");
+}
+
+#[test]
+fn fedavg_of_quantized_models_stays_in_codebook_hull() {
+    use fedcompress::coordinator::aggregate::fedavg;
+    let mut rng = Rng::new(29);
+    let weights: Vec<f32> = (0..2000).map(|_| rng.normal() * 0.25).collect();
+    let (cb, _, _) = kmeans_1d(&weights, 16, 25, &mut rng);
+    let clients: Vec<Vec<f32>> = (0..5)
+        .map(|_| {
+            let noisy: Vec<f32> =
+                weights.iter().map(|w| w + 0.01 * rng.normal()).collect();
+            let (_, q) = quantize_and_encode(&noisy, &cb);
+            q
+        })
+        .collect();
+    let agg = fedavg(&clients, &[1, 2, 3, 4, 5]);
+    let lo = cb.first().unwrap();
+    let hi = cb.last().unwrap();
+    for v in &agg {
+        assert!(*v >= *lo - 1e-6 && *v <= *hi + 1e-6);
+    }
+}

@@ -1,0 +1,170 @@
+//! Runtime golden tests: execute every AOT artifact through the PJRT
+//! runtime on the inputs `aot.py` recorded, and compare against the
+//! outputs the *python* jitted functions produced. This is the
+//! cross-language numerical contract — if it holds, the rust hot path
+//! computes exactly what the L2/L1 stack defines.
+
+use std::path::PathBuf;
+
+use fedcompress::runtime::artifacts::{default_dir, DType};
+use fedcompress::runtime::literals::{literal_to_f32, literal_to_i32, Arg};
+use fedcompress::runtime::Engine;
+use fedcompress::util::json::Json;
+
+fn artifacts_dir() -> Option<PathBuf> {
+    let d = default_dir();
+    d.join("manifest.json").exists().then_some(d)
+}
+
+enum Owned {
+    F32(Vec<f32>),
+    I32(Vec<i32>),
+}
+
+fn load_goldens(engine: &Engine, dataset: &str) -> Vec<(String, Vec<Owned>, Vec<Owned>)> {
+    let ds = engine.manifest.dataset(dataset).unwrap();
+    let gdir = engine.manifest.dir.join(&ds.golden_dir);
+    let text = std::fs::read_to_string(gdir.join("goldens.json")).unwrap();
+    let j = Json::parse(&text).unwrap();
+    let mut cases = Vec::new();
+    for (entry, rec) in j.as_obj().unwrap() {
+        let read = |spec: &Json| -> Owned {
+            let file = spec.get("file").unwrap().as_str().unwrap();
+            let rel = format!("{}/{}", ds.golden_dir, file);
+            match spec.get("dtype").unwrap().as_str().unwrap() {
+                "i32" => Owned::I32(engine.manifest.read_i32_bin(&rel).unwrap()),
+                _ => Owned::F32(engine.manifest.read_f32_bin(&rel).unwrap()),
+            }
+        };
+        let ins: Vec<Owned> = rec.get("inputs").unwrap().as_arr().unwrap().iter().map(read).collect();
+        let outs: Vec<Owned> = rec.get("outputs").unwrap().as_arr().unwrap().iter().map(read).collect();
+        cases.push((entry.clone(), ins, outs));
+    }
+    cases
+}
+
+fn run_dataset_goldens(dataset: &str) {
+    let Some(dir) = artifacts_dir() else {
+        eprintln!("skipping: artifacts not built");
+        return;
+    };
+    let engine = Engine::load(&dir).unwrap();
+    let sig_owner = engine.manifest.dataset(dataset).unwrap().clone();
+
+    for (entry, ins, outs) in load_goldens(&engine, dataset) {
+        let sig = &sig_owner.signatures[&entry];
+        let args: Vec<Arg<'_>> = ins
+            .iter()
+            .zip(&sig.inputs)
+            .map(|(o, spec)| match (o, spec.dtype) {
+                (Owned::F32(v), DType::F32) => {
+                    if spec.shape.is_empty() {
+                        Arg::Scalar(v[0])
+                    } else {
+                        Arg::F32(v)
+                    }
+                }
+                (Owned::I32(v), DType::I32) => Arg::I32(v),
+                _ => panic!("{dataset}.{entry}: golden dtype mismatch"),
+            })
+            .collect();
+
+        let results = engine.run(dataset, &entry, &args).unwrap();
+        assert_eq!(
+            results.len(),
+            outs.len(),
+            "{dataset}.{entry}: output arity"
+        );
+        for (i, (got, want)) in results.iter().zip(&outs).enumerate() {
+            match want {
+                Owned::F32(w) => {
+                    let g = literal_to_f32(got).unwrap();
+                    assert_eq!(g.len(), w.len(), "{dataset}.{entry} out{i} len");
+                    for (k, (a, b)) in g.iter().zip(w).enumerate() {
+                        let tol = 1e-5f32 * (1.0 + b.abs());
+                        assert!(
+                            (a - b).abs() <= tol,
+                            "{dataset}.{entry} out{i}[{k}]: {a} vs {b}"
+                        );
+                    }
+                }
+                Owned::I32(w) => {
+                    let g = literal_to_i32(got).unwrap();
+                    assert_eq!(&g, w, "{dataset}.{entry} out{i}");
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn goldens_cifar10() {
+    run_dataset_goldens("cifar10");
+}
+
+#[test]
+fn goldens_cifar100() {
+    run_dataset_goldens("cifar100");
+}
+
+#[test]
+fn goldens_pathmnist() {
+    run_dataset_goldens("pathmnist");
+}
+
+#[test]
+fn goldens_speechcommands() {
+    run_dataset_goldens("speechcommands");
+}
+
+#[test]
+fn goldens_voxforge() {
+    run_dataset_goldens("voxforge");
+}
+
+/// The rust codec's snap and the HLO snap kernel agree exactly.
+#[test]
+fn rust_snap_matches_hlo_snap() {
+    let Some(dir) = artifacts_dir() else {
+        return;
+    };
+    let engine = Engine::load(&dir).unwrap();
+    let dataset = "cifar10";
+    let theta = engine.init_theta(dataset).unwrap();
+    let c_max = engine.manifest.c_max;
+
+    // active sorted codebook + sentinel padding, exactly like the runtime
+    let mut rng = fedcompress::util::rng::Rng::new(3);
+    let cents = fedcompress::clustering::CentroidState::init_from_weights(
+        &theta, 16, c_max, &mut rng,
+    );
+    let out = engine
+        .run(
+            dataset,
+            "snap",
+            &[
+                Arg::F32(&theta),
+                Arg::F32(&cents.mu),
+                Arg::F32(&cents.mask),
+            ],
+        )
+        .unwrap();
+    let hlo_snapped = literal_to_f32(&out[0]).unwrap();
+
+    let codebook = cents.active_codebook();
+    let mut rust_snapped = theta.clone();
+    fedcompress::compression::kmeans::snap(&mut rust_snapped, &codebook);
+
+    let mut mismatches = 0;
+    for (a, b) in hlo_snapped.iter().zip(&rust_snapped) {
+        // boundary ties may fall either way; values must still be close
+        if a != b {
+            mismatches += 1;
+            assert!((a - b).abs() < 0.25, "snap diverges beyond one centroid");
+        }
+    }
+    assert!(
+        (mismatches as f64) < 0.001 * theta.len() as f64,
+        "{mismatches} snap mismatches"
+    );
+}
