@@ -7,7 +7,7 @@
 
 use anyhow::Result;
 
-use fedcompress::config::{FedConfig, Strategy};
+use fedcompress::config::FedConfig;
 use fedcompress::coordinator::run_federated;
 use fedcompress::exp::figure2;
 use fedcompress::runtime::Engine;
@@ -24,7 +24,7 @@ fn main() -> Result<()> {
     cfg.validate()?;
 
     println!("== audio_adaptive: synthetic SpeechCommands, dynamic C ==");
-    let result = run_federated(&engine, &cfg, Strategy::FedCompress)?;
+    let result = run_federated(&engine, &cfg, "fedcompress")?;
 
     let mut last_c = 0usize;
     println!("\nround  score E   val acc   C");

@@ -10,7 +10,7 @@
 use anyhow::Result;
 
 use fedcompress::compression::accounting::Direction;
-use fedcompress::config::{FedConfig, Strategy};
+use fedcompress::config::FedConfig;
 use fedcompress::coordinator::run_federated;
 use fedcompress::runtime::Engine;
 use fedcompress::util::logging;
@@ -25,7 +25,7 @@ fn main() -> Result<()> {
     cfg.validate()?;
 
     println!("== FedCompress quickstart: {} ==", cfg.dataset);
-    let result = run_federated(&engine, &cfg, Strategy::FedCompress)?;
+    let result = run_federated(&engine, &cfg, "fedcompress")?;
 
     println!("\nround  acc     E-score  C   up(B)    down(B)");
     for r in &result.rounds {

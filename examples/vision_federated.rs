@@ -12,7 +12,7 @@
 use anyhow::Result;
 
 use fedcompress::compression::accounting::ccr;
-use fedcompress::config::{FedConfig, Strategy};
+use fedcompress::config::FedConfig;
 use fedcompress::coordinator::server::{build_data, run_federated_with_data};
 use fedcompress::runtime::Engine;
 use fedcompress::util::logging;
@@ -42,8 +42,8 @@ fn main() -> Result<()> {
     );
     let data = build_data(&engine, &cfg)?;
 
-    let fedavg = run_federated_with_data(&engine, &cfg, Strategy::FedAvg, &data)?;
-    let fedcmp = run_federated_with_data(&engine, &cfg, Strategy::FedCompress, &data)?;
+    let fedavg = run_federated_with_data(&engine, &cfg, "fedavg", &data)?;
+    let fedcmp = run_federated_with_data(&engine, &cfg, "fedcompress", &data)?;
 
     println!("\nround | fedavg acc / loss | fedcompress acc / loss | C | round bytes (fc)");
     for (a, b) in fedavg.rounds.iter().zip(&fedcmp.rounds) {

@@ -3,7 +3,7 @@
 //! a never-free-trained model costs accuracy for the same bytes.
 
 use fedcompress::compression::accounting::ccr;
-use fedcompress::config::{FedConfig, Strategy};
+use fedcompress::config::FedConfig;
 use fedcompress::coordinator::server::{build_data, run_federated_with_data};
 use fedcompress::runtime::artifacts::default_dir;
 use fedcompress::runtime::Engine;
@@ -23,7 +23,7 @@ fn main() {
     base.validate().unwrap();
     let data = build_data(&engine, &base).unwrap();
 
-    let fedavg = run_federated_with_data(&engine, &base, Strategy::FedAvg, &data).unwrap();
+    let fedavg = run_federated_with_data(&engine, &base, "fedavg", &data).unwrap();
 
     for (label, warm_epochs, warm_rounds) in [
         ("warmup_on (paper)", base.beta_warmup_epochs, base.warmup_rounds),
@@ -34,7 +34,7 @@ fn main() {
         let mut cfg = base.clone();
         cfg.beta_warmup_epochs = warm_epochs;
         cfg.warmup_rounds = warm_rounds;
-        let r = run_federated_with_data(&engine, &cfg, Strategy::FedCompress, &data).unwrap();
+        let r = run_federated_with_data(&engine, &cfg, "fedcompress", &data).unwrap();
         println!(
             "ROW ablation variant=\"{label}\" final_acc={:.4} dAcc={:+.2}pp CCR={:.2} MCR={:.2}",
             r.final_accuracy,

@@ -4,7 +4,7 @@
 //! system benchmark — it exercises every layer.
 
 use fedcompress::compression::accounting::ccr;
-use fedcompress::config::{FedConfig, Strategy};
+use fedcompress::config::FedConfig;
 use fedcompress::coordinator::server::{build_data, run_federated_with_data};
 use fedcompress::runtime::artifacts::default_dir;
 use fedcompress::runtime::Engine;
@@ -26,13 +26,13 @@ fn main() {
     let data = build_data(&engine, &cfg).unwrap();
     let t_all = std::time::Instant::now();
     let mut results = Vec::new();
-    for strategy in Strategy::ALL {
+    for strategy in fedcompress::exp::table1::COLUMNS {
         let t0 = std::time::Instant::now();
         let r = run_federated_with_data(&engine, &cfg, strategy, &data).unwrap();
         let total_ms = t0.elapsed().as_secs_f64() * 1e3;
         println!(
             "BENCH table1_{} total_ms={:.0} per_round_ms={:.0} final_acc={:.4}",
-            strategy.name(),
+            strategy,
             total_ms,
             total_ms / cfg.rounds as f64,
             r.final_accuracy

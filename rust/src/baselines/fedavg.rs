@@ -1,0 +1,40 @@
+//! FedAvg (McMahan 2017) as a strategy plugin: dense f32 both
+//! directions, plain CE training, unmodified sample-count aggregation.
+//! The baseline every Table-1 ratio is measured against.
+
+use anyhow::Result;
+
+use super::wire::WireBlob;
+use crate::compression::codec::dense_bytes;
+use crate::coordinator::strategy::{
+    FedStrategy, FinalModel, RoundContext, ServerEnv, ServerModel, UploadInput,
+};
+use crate::util::rng::Rng;
+
+pub struct FedAvg;
+
+impl FedStrategy for FedAvg {
+    fn name(&self) -> &'static str {
+        "fedavg"
+    }
+
+    fn encode_download(&self, _ctx: &RoundContext<'_>, model: &ServerModel) -> Result<WireBlob> {
+        Ok(WireBlob::dense(&model.theta))
+    }
+
+    fn encode_upload(
+        &self,
+        _ctx: &RoundContext<'_>,
+        input: &UploadInput<'_>,
+        _rng: &mut Rng,
+    ) -> Result<WireBlob> {
+        Ok(WireBlob::dense(input.theta))
+    }
+
+    fn finalize(&self, _env: &ServerEnv<'_>, model: &ServerModel) -> Result<FinalModel> {
+        Ok(FinalModel {
+            theta: model.theta.clone(),
+            wire_bytes: dense_bytes(model.theta.len()),
+        })
+    }
+}

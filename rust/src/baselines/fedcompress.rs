@@ -1,0 +1,257 @@
+//! The paper's method as strategy plugins: FedCompress (adaptive weight
+//! clustering + server-side distillation) and its ablation without
+//! Self-Compression on Server.
+//!
+//! * `FedCompress` — clients train with L_wc once warmup ends; uploads
+//!   hard-snap to the client's learned centroids; SCS re-distills the
+//!   aggregate on OOD data and the plateau controller grows the cluster
+//!   count; downstream re-encodes the SCS output (both directions
+//!   compressed — the paper's headline).
+//! * `FedCompressNoScs` — clients train with L_wc but the server never
+//!   re-clusters, so assignments drift and the wire stays dense during
+//!   training (CCR ~ 1, Table 1); only the *final* model is snapped
+//!   (MCR ~ 1.6-1.8). See DESIGN.md §3.
+
+use anyhow::Result;
+
+use super::wire::{codebook_blob, WireBlob};
+use crate::client::trainer::evaluate;
+use crate::clustering::{CentroidState, ClusterController};
+use crate::compression::codec::quantize_and_encode;
+use crate::compression::kmeans::kmeans_1d;
+use crate::config::FedConfig;
+use crate::coordinator::events::{Event, EventLog};
+use crate::coordinator::strategy::{
+    aggregate_centroid_mu, aggregate_fedavg, ClientTrainOpts, ClientUpdate, FedStrategy,
+    FinalModel, RoundContext, ServerEnv, ServerModel, UploadInput,
+};
+use crate::data::Dataset;
+use crate::runtime::literals::{literal_scalar_f32, literal_to_f32, Arg};
+use crate::runtime::Engine;
+use crate::util::rng::Rng;
+
+/// SelfCompress (Algorithm 1, lines 20-28): distill the aggregated
+/// model (teacher) into a re-clustered student on OOD data, then snap.
+/// Returns (snapped_student, mean_kl).
+fn self_compress(
+    engine: &Engine,
+    cfg: &FedConfig,
+    teacher: &[f32],
+    centroids: &mut CentroidState,
+    ood_data: &Dataset,
+    rng: &mut Rng,
+) -> Result<(Vec<f32>, f64)> {
+    let ds = &cfg.dataset;
+    let batch = engine.manifest.batch;
+    let mut student = teacher.to_vec();
+    let mut mu = centroids.mu.clone();
+    let mask = centroids.mask.clone();
+    let mut kl_sum = 0.0f64;
+    let mut steps = 0usize;
+
+    for _epoch in 0..cfg.server_epochs {
+        for (xs, _ys) in ood_data.epoch_batches(batch, rng) {
+            let out = engine.run(
+                ds,
+                "distill_step",
+                &[
+                    Arg::F32(&student),
+                    Arg::F32(teacher),
+                    Arg::F32(&mu),
+                    Arg::F32(&mask),
+                    Arg::F32(&xs),
+                    Arg::Scalar(cfg.lr_server),
+                    Arg::Scalar(cfg.beta),
+                    Arg::Scalar(cfg.temperature),
+                ],
+            )?;
+            student = literal_to_f32(&out[0])?;
+            mu = literal_to_f32(&out[1])?;
+            kl_sum += literal_scalar_f32(&out[3])? as f64;
+            steps += 1;
+        }
+    }
+    centroids.mu = mu;
+
+    // hard snap to the learned codebook: the downstream wire model
+    let codebook = centroids.active_codebook();
+    let (_, snapped) = quantize_and_encode(&student, &codebook);
+    Ok((snapped, kl_sum / steps.max(1) as f64))
+}
+
+/// Full FedCompress: weight-clustered training, snapped wire both
+/// directions, SCS, dynamic cluster count.
+pub struct FedCompress {
+    controller: ClusterController,
+}
+
+impl FedCompress {
+    pub fn new(cfg: &FedConfig) -> FedCompress {
+        FedCompress {
+            controller: ClusterController::new(cfg.controller.clone()),
+        }
+    }
+}
+
+impl FedStrategy for FedCompress {
+    fn name(&self) -> &'static str {
+        "fedcompress"
+    }
+
+    fn round_start(&mut self, ctx: &RoundContext<'_>, model: &mut ServerModel) -> Result<()> {
+        // warmup boundary: re-seed the codebook from the *trained*
+        // weight distribution, not the init one
+        if ctx.round == ctx.cfg.warmup_rounds {
+            let mut rng = ctx.base.fork(60_000 + ctx.round as u64);
+            let c = model.centroids.active;
+            let c_max = model.centroids.c_max;
+            model.centroids = CentroidState::init_from_weights(&model.theta, c, c_max, &mut rng);
+        }
+        Ok(())
+    }
+
+    fn client_train_opts(&self, ctx: &RoundContext<'_>) -> ClientTrainOpts {
+        ClientTrainOpts {
+            weight_clustering: ctx.compressing,
+        }
+    }
+
+    fn encode_download(&self, ctx: &RoundContext<'_>, model: &ServerModel) -> Result<WireBlob> {
+        // dense until the first SCS has produced a clustered model
+        if !ctx.down_compressed {
+            return Ok(WireBlob::dense(&model.theta));
+        }
+        codebook_blob(&model.theta, &model.centroids)
+    }
+
+    fn encode_upload(
+        &self,
+        ctx: &RoundContext<'_>,
+        input: &UploadInput<'_>,
+        _rng: &mut Rng,
+    ) -> Result<WireBlob> {
+        // dense during warmup; snapped to the client's learned
+        // centroids afterwards
+        if !ctx.compressing {
+            return Ok(WireBlob::dense(input.theta));
+        }
+        codebook_blob(input.theta, input.centroids)
+    }
+
+    fn aggregate(
+        &mut self,
+        _ctx: &RoundContext<'_>,
+        model: &mut ServerModel,
+        uploads: &[ClientUpdate],
+    ) -> Result<f64> {
+        let score = aggregate_fedavg(model, uploads);
+        aggregate_centroid_mu(model, uploads);
+        Ok(score)
+    }
+
+    fn post_aggregate(
+        &mut self,
+        ctx: &RoundContext<'_>,
+        env: &ServerEnv<'_>,
+        model: &mut ServerModel,
+        score: f64,
+        events: &mut EventLog,
+    ) -> Result<()> {
+        if !ctx.compressing {
+            return Ok(());
+        }
+        // --- server-side self-compression ---------------------------------
+        let mut scs_rng = env.base.fork(50_000 + ctx.round as u64);
+        if crate::util::logging::enabled(crate::util::logging::Level::Debug) {
+            let (pre_acc, _) = evaluate(env.engine, &env.cfg.dataset, &env.data.test, &model.theta)?;
+            crate::debug!("round {}: pre-SCS aggregated acc={pre_acc:.4}", ctx.round);
+        }
+        let teacher = model.theta.clone();
+        let (snapped, kl) = self_compress(
+            env.engine,
+            env.cfg,
+            &teacher,
+            &mut model.centroids,
+            &env.data.ood,
+            &mut scs_rng,
+        )?;
+        crate::debug!("round {}: SCS mean KL={kl:.4}", ctx.round);
+        events.push(Event::SelfCompress {
+            round: ctx.round,
+            mean_kl: kl,
+        });
+        model.theta = snapped;
+
+        // --- dynamic cluster count ----------------------------------------
+        let next_c = self.controller.observe(score);
+        if next_c > model.centroids.active {
+            events.push(Event::ControllerGrow {
+                round: ctx.round,
+                from: model.centroids.active,
+                to: next_c,
+            });
+            model.centroids.grow_to(next_c);
+        }
+        Ok(())
+    }
+
+    fn finalize(&self, _env: &ServerEnv<'_>, model: &ServerModel) -> Result<FinalModel> {
+        let codebook = model.centroids.active_codebook();
+        let (enc, theta) = quantize_and_encode(&model.theta, &codebook);
+        Ok(FinalModel {
+            theta,
+            wire_bytes: enc.wire_bytes(),
+        })
+    }
+}
+
+/// Ablation: weight-clustered training without server re-clustering.
+pub struct FedCompressNoScs;
+
+impl FedStrategy for FedCompressNoScs {
+    fn name(&self) -> &'static str {
+        "fedcompress-noscs"
+    }
+
+    fn client_train_opts(&self, ctx: &RoundContext<'_>) -> ClientTrainOpts {
+        ClientTrainOpts {
+            weight_clustering: ctx.compressing,
+        }
+    }
+
+    fn encode_download(&self, _ctx: &RoundContext<'_>, model: &ServerModel) -> Result<WireBlob> {
+        Ok(WireBlob::dense(&model.theta))
+    }
+
+    fn encode_upload(
+        &self,
+        _ctx: &RoundContext<'_>,
+        input: &UploadInput<'_>,
+        _rng: &mut Rng,
+    ) -> Result<WireBlob> {
+        Ok(WireBlob::dense(input.theta))
+    }
+
+    fn aggregate(
+        &mut self,
+        _ctx: &RoundContext<'_>,
+        model: &mut ServerModel,
+        uploads: &[ClientUpdate],
+    ) -> Result<f64> {
+        let score = aggregate_fedavg(model, uploads);
+        aggregate_centroid_mu(model, uploads);
+        Ok(score)
+    }
+
+    fn finalize(&self, env: &ServerEnv<'_>, model: &ServerModel) -> Result<FinalModel> {
+        // final-model-only compression: k-means at the controller's
+        // floor C (training never grew it — no score feedback loop)
+        let mut rng = env.base.fork(9_998);
+        let (cb, _, _) = kmeans_1d(&model.theta, env.cfg.controller.c_min.max(8), 25, &mut rng);
+        let (enc, theta) = quantize_and_encode(&model.theta, &cb);
+        Ok(FinalModel {
+            theta,
+            wire_bytes: enc.wire_bytes(),
+        })
+    }
+}

@@ -1,0 +1,52 @@
+//! FedZip (Malekijoo 2021) as a strategy plugin: upstream magnitude
+//! prune -> per-upload k-means (fixed cluster count, 15 in the paper)
+//! -> Huffman; downstream stays dense (FedZip only optimizes the
+//! client->server direction). Clients train plain CE.
+
+use anyhow::Result;
+
+use super::wire::{kmeans_blob, WireBlob};
+use crate::coordinator::strategy::{
+    FedStrategy, FinalModel, RoundContext, ServerEnv, ServerModel, UploadInput,
+};
+use crate::util::rng::Rng;
+
+pub struct FedZip;
+
+impl FedStrategy for FedZip {
+    fn name(&self) -> &'static str {
+        "fedzip"
+    }
+
+    fn encode_download(&self, _ctx: &RoundContext<'_>, model: &ServerModel) -> Result<WireBlob> {
+        Ok(WireBlob::dense(&model.theta))
+    }
+
+    fn encode_upload(
+        &self,
+        ctx: &RoundContext<'_>,
+        input: &UploadInput<'_>,
+        rng: &mut Rng,
+    ) -> Result<WireBlob> {
+        kmeans_blob(
+            input.theta,
+            ctx.cfg.fedzip_clusters,
+            ctx.cfg.fedzip_keep,
+            rng,
+        )
+    }
+
+    fn finalize(&self, env: &ServerEnv<'_>, model: &ServerModel) -> Result<FinalModel> {
+        let mut rng = env.base.fork(9_999);
+        let blob = kmeans_blob(
+            &model.theta,
+            env.cfg.fedzip_clusters,
+            env.cfg.fedzip_keep,
+            &mut rng,
+        )?;
+        Ok(FinalModel {
+            theta: blob.theta,
+            wire_bytes: blob.bytes,
+        })
+    }
+}

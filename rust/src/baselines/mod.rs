@@ -1,8 +1,23 @@
-//! Wire policies per strategy: what actually crosses the (simulated)
-//! network in each direction, byte-exact. This is where FedAvg, FedZip
-//! and the two FedCompress variants differ — the aggregation rule and
-//! the round loop stay identical (the paper's compatibility claim).
+//! Strategy plugins and their wire policies.
+//!
+//! Each baseline is a [`crate::coordinator::strategy::FedStrategy`]
+//! implementation resolved by name through [`registry::StrategyRegistry`];
+//! the round loop (`coordinator::server`) never branches on which one
+//! is running — the paper's compatibility claim (the aggregation rule
+//! and round loop stay identical) is now a structural property.
+//!
+//! * [`fedavg`]      — dense FedAvg baseline.
+//! * [`fedzip`]      — pruned + clustered + Huffman uploads (Malekijoo 2021).
+//! * [`fedcompress`] — the paper's method and its no-SCS ablation.
+//! * [`topk`]        — top-k sparsification uploads (API-openness proof).
+//! * [`wire`]        — shared byte-exact wire-blob building blocks.
 
+pub mod fedavg;
+pub mod fedcompress;
+pub mod fedzip;
+pub mod registry;
+pub mod topk;
 pub mod wire;
 
-pub use wire::{encode_download, encode_upload, WireBlob};
+pub use registry::{StrategyInfo, StrategyRegistry};
+pub use wire::{WireBlob, WireSizeMismatch};

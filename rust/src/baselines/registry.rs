@@ -1,0 +1,239 @@
+//! Strategy registry: the open end of the plugin API. The CLI/config
+//! layer resolves strategy *names* against this table, so adding a
+//! baseline is one `StrategyInfo` entry plus a `FedStrategy` impl — no
+//! coordinator edits (see ARCHITECTURE.md for a <20-line walkthrough).
+
+use anyhow::{bail, Result};
+
+use super::fedavg::FedAvg;
+use super::fedcompress::{FedCompress, FedCompressNoScs};
+use super::fedzip::FedZip;
+use super::topk::TopK;
+use crate::config::FedConfig;
+use crate::coordinator::strategy::FedStrategy;
+
+/// Constructor: a fresh, single-run strategy instance for a config.
+pub type StrategyCtor = fn(&FedConfig) -> Box<dyn FedStrategy>;
+
+pub struct StrategyInfo {
+    pub name: &'static str,
+    pub aliases: &'static [&'static str],
+    /// one-line description shown by `--strategy list`
+    pub description: &'static str,
+    pub ctor: StrategyCtor,
+}
+
+pub struct StrategyRegistry {
+    entries: Vec<StrategyInfo>,
+}
+
+impl StrategyRegistry {
+    /// Empty registry (for embedding custom strategy sets).
+    pub fn empty() -> StrategyRegistry {
+        StrategyRegistry {
+            entries: Vec::new(),
+        }
+    }
+
+    /// The built-in strategies: Table 1's four columns plus `topk`.
+    pub fn builtin() -> StrategyRegistry {
+        let mut r = StrategyRegistry::empty();
+        r.register(StrategyInfo {
+            name: "fedavg",
+            aliases: &[],
+            description: "dense FedAvg baseline (f32 both directions)",
+            ctor: |_cfg| Box::new(FedAvg),
+        })
+        .unwrap();
+        r.register(StrategyInfo {
+            name: "fedzip",
+            aliases: &[],
+            description: "magnitude prune + k-means + Huffman uploads, dense downstream",
+            ctor: |_cfg| Box::new(FedZip),
+        })
+        .unwrap();
+        r.register(StrategyInfo {
+            name: "fedcompress-noscs",
+            aliases: &["noscs"],
+            description: "weight-clustered training without server self-compression (ablation)",
+            ctor: |_cfg| Box::new(FedCompressNoScs),
+        })
+        .unwrap();
+        r.register(StrategyInfo {
+            name: "fedcompress",
+            aliases: &[],
+            description: "adaptive weight clustering + server-side distillation (the paper)",
+            ctor: |cfg| Box::new(FedCompress::new(cfg)),
+        })
+        .unwrap();
+        r.register(StrategyInfo {
+            name: "topk",
+            aliases: &["top-k"],
+            description: "top-k magnitude sparsification uploads, dense downstream",
+            ctor: |_cfg| Box::new(TopK),
+        })
+        .unwrap();
+        r
+    }
+
+    /// Add an entry; fails on a name/alias collision or a name `build`
+    /// could never resolve (lookup is lowercase, so names must be too).
+    pub fn register(&mut self, info: StrategyInfo) -> Result<()> {
+        let mut new_names = vec![info.name];
+        new_names.extend_from_slice(info.aliases);
+        for n in &new_names {
+            if n.is_empty() || n.chars().any(|c| c.is_ascii_uppercase()) {
+                bail!("strategy name '{n}' must be non-empty lowercase");
+            }
+        }
+        for e in &self.entries {
+            let mut taken = vec![e.name];
+            taken.extend_from_slice(e.aliases);
+            if let Some(dup) = new_names.iter().find(|n| taken.contains(n)) {
+                bail!("strategy name '{dup}' already registered");
+            }
+        }
+        self.entries.push(info);
+        Ok(())
+    }
+
+    pub fn entries(&self) -> &[StrategyInfo] {
+        &self.entries
+    }
+
+    /// Canonical names, registration order.
+    pub fn names(&self) -> Vec<&'static str> {
+        self.entries.iter().map(|e| e.name).collect()
+    }
+
+    /// Build a fresh strategy instance by name or alias
+    /// (case-insensitive). Unknown names fail with the closest
+    /// registered name suggested.
+    pub fn build(&self, name: &str, cfg: &FedConfig) -> Result<Box<dyn FedStrategy>> {
+        let want = name.to_ascii_lowercase();
+        for e in &self.entries {
+            if e.name == want || e.aliases.contains(&want.as_str()) {
+                return Ok((e.ctor)(cfg));
+            }
+        }
+        let known = self.names().join(", ");
+        match self.suggest(&want) {
+            Some(s) => bail!("unknown strategy '{name}' — did you mean '{s}'? (registered: {known})"),
+            None => bail!("unknown strategy '{name}' (registered: {known})"),
+        }
+    }
+
+    /// Closest registered name/alias by edit distance, if plausibly a
+    /// typo (distance <= half the query length, minimum 1).
+    pub fn suggest(&self, name: &str) -> Option<&'static str> {
+        let mut best: Option<(usize, &'static str)> = None;
+        for e in &self.entries {
+            for &cand in std::iter::once(&e.name).chain(e.aliases.iter()) {
+                let d = levenshtein(name, cand);
+                let better = match best {
+                    None => true,
+                    Some((bd, _)) => d < bd,
+                };
+                if better {
+                    best = Some((d, cand));
+                }
+            }
+        }
+        let (d, cand) = best?;
+        (d <= (name.len() / 2).max(1)).then_some(cand)
+    }
+
+    /// Render the `--strategy list` table.
+    pub fn render_list(&self) -> String {
+        let mut s = String::from("registered strategies:\n");
+        for e in &self.entries {
+            let alias = if e.aliases.is_empty() {
+                String::new()
+            } else {
+                format!(" (alias: {})", e.aliases.join(", "))
+            };
+            s.push_str(&format!("  {:<18} {}{}\n", e.name, e.description, alias));
+        }
+        s
+    }
+}
+
+/// Plain O(nm) Levenshtein edit distance (names are short).
+fn levenshtein(a: &str, b: &str) -> usize {
+    let a: Vec<char> = a.chars().collect();
+    let b: Vec<char> = b.chars().collect();
+    let mut prev: Vec<usize> = (0..=b.len()).collect();
+    let mut cur = vec![0usize; b.len() + 1];
+    for (i, &ca) in a.iter().enumerate() {
+        cur[0] = i + 1;
+        for (j, &cb) in b.iter().enumerate() {
+            let sub = prev[j] + usize::from(ca != cb);
+            cur[j + 1] = sub.min(prev[j + 1] + 1).min(cur[j] + 1);
+        }
+        std::mem::swap(&mut prev, &mut cur);
+    }
+    prev[b.len()]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn every_builtin_name_builds() {
+        let reg = StrategyRegistry::builtin();
+        let cfg = FedConfig::quick("cifar10");
+        for name in reg.names() {
+            let s = reg.build(name, &cfg).unwrap();
+            assert_eq!(s.name(), name);
+        }
+    }
+
+    #[test]
+    fn aliases_resolve_to_canonical_plugins() {
+        let reg = StrategyRegistry::builtin();
+        let cfg = FedConfig::quick("cifar10");
+        assert_eq!(reg.build("noscs", &cfg).unwrap().name(), "fedcompress-noscs");
+        assert_eq!(reg.build("FedAvg", &cfg).unwrap().name(), "fedavg");
+        assert_eq!(reg.build("top-k", &cfg).unwrap().name(), "topk");
+    }
+
+    #[test]
+    fn unknown_name_suggests_closest() {
+        let reg = StrategyRegistry::builtin();
+        let cfg = FedConfig::quick("cifar10");
+        let err = reg.build("fedcompres", &cfg).unwrap_err().to_string();
+        assert!(err.contains("did you mean 'fedcompress'"), "{err}");
+        let err = reg.build("sgd", &cfg).unwrap_err().to_string();
+        assert!(err.contains("unknown strategy"), "{err}");
+    }
+
+    #[test]
+    fn duplicate_registration_rejected() {
+        let mut reg = StrategyRegistry::builtin();
+        let dup = StrategyInfo {
+            name: "fedavg",
+            aliases: &[],
+            description: "dup",
+            ctor: |_| Box::new(FedAvg),
+        };
+        assert!(reg.register(dup).is_err());
+    }
+
+    #[test]
+    fn levenshtein_basics() {
+        assert_eq!(levenshtein("", "abc"), 3);
+        assert_eq!(levenshtein("abc", "abc"), 0);
+        assert_eq!(levenshtein("fedzip", "fedavg"), 3);
+        assert_eq!(levenshtein("topk", "top-k"), 1);
+    }
+
+    #[test]
+    fn list_mentions_every_name() {
+        let reg = StrategyRegistry::builtin();
+        let list = reg.render_list();
+        for name in reg.names() {
+            assert!(list.contains(name), "{name} missing from list");
+        }
+    }
+}

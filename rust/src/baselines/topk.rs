@@ -1,0 +1,180 @@
+//! Top-k sparsification baseline — the "prove the API is open" plugin:
+//! a genuinely new strategy built on the existing `sparsify` + `bitio`
+//! machinery without touching the coordinator.
+//!
+//! Upstream, each client keeps only the top `topk_keep` fraction of
+//! weights by magnitude and ships (position, value) pairs: positions
+//! bit-packed at ceil(log2 n) bits, values as raw f32. Downstream stays
+//! dense (like FedZip). The final deliverable is the sparse-encoded
+//! aggregate. Clients train plain CE.
+//!
+//! Wire layout (little-endian):
+//!   u32 magic 'FCS1' | u32 n | u32 k | u8 bits |
+//!   bit-packed positions (k * bits, LSB-first) | f32 values[k]
+
+use anyhow::{bail, Result};
+
+use super::wire::WireBlob;
+use crate::compression::codec::index_bits;
+use crate::compression::sparsify::magnitude_prune;
+use crate::coordinator::strategy::{
+    FedStrategy, FinalModel, RoundContext, ServerEnv, ServerModel, UploadInput,
+};
+use crate::util::bitio::{BitReader, BitWriter};
+use crate::util::rng::Rng;
+
+const MAGIC: u32 = 0x4643_5331; // "FCS1"
+
+/// Sparse-encode a weight vector: magnitude-prune to `keep`, then pack
+/// survivors as (position, value). Returns the exact wire bytes and the
+/// pruned vector the receiver reconstructs.
+pub fn encode_topk(theta: &[f32], keep: f64) -> (Vec<u8>, Vec<f32>) {
+    let mut pruned = theta.to_vec();
+    magnitude_prune(&mut pruned, keep);
+    let survivors: Vec<(usize, f32)> = pruned
+        .iter()
+        .enumerate()
+        .filter(|(_, w)| **w != 0.0)
+        .map(|(i, w)| (i, *w))
+        .collect();
+
+    let n = theta.len();
+    let bits = index_bits(n.max(2));
+    let mut out = Vec::new();
+    out.extend_from_slice(&MAGIC.to_le_bytes());
+    out.extend_from_slice(&(n as u32).to_le_bytes());
+    out.extend_from_slice(&(survivors.len() as u32).to_le_bytes());
+    out.push(bits as u8);
+    let mut w = BitWriter::new();
+    for (pos, _) in &survivors {
+        w.write(*pos as u32, bits);
+    }
+    out.extend_from_slice(w.as_bytes());
+    for (_, v) in &survivors {
+        out.extend_from_slice(&v.to_le_bytes());
+    }
+    (out, pruned)
+}
+
+fn take(bytes: &[u8], i: usize, n: usize) -> Result<&[u8]> {
+    if i + n > bytes.len() {
+        bail!("truncated topk blob");
+    }
+    Ok(&bytes[i..i + n])
+}
+
+/// Decode a sparse blob back to the dense (pruned) weight vector.
+pub fn decode_topk(bytes: &[u8]) -> Result<Vec<f32>> {
+    let take = |i: usize, n: usize| take(bytes, i, n);
+    if u32::from_le_bytes(take(0, 4)?.try_into()?) != MAGIC {
+        bail!("bad topk magic");
+    }
+    let n = u32::from_le_bytes(take(4, 4)?.try_into()?) as usize;
+    let k = u32::from_le_bytes(take(8, 4)?.try_into()?) as usize;
+    let bits = take(12, 1)?[0] as u32;
+    if k > n {
+        bail!("topk blob claims {k} survivors of {n} params");
+    }
+    if bits != index_bits(n.max(2)) {
+        bail!("topk blob bit width {bits} does not match {n} params");
+    }
+    let pos_bytes = (k * bits as usize).div_ceil(8);
+    let mut r = BitReader::new(take(13, pos_bytes)?);
+    let mut positions = Vec::with_capacity(k);
+    for _ in 0..k {
+        match r.read(bits) {
+            Some(p) if (p as usize) < n => positions.push(p as usize),
+            Some(p) => bail!("position {p} out of range {n}"),
+            None => bail!("truncated position stream"),
+        }
+    }
+    let mut theta = vec![0.0f32; n];
+    let vals = take(13 + pos_bytes, 4 * k)?;
+    for (j, &pos) in positions.iter().enumerate() {
+        theta[pos] = f32::from_le_bytes(vals[4 * j..4 * j + 4].try_into()?);
+    }
+    Ok(theta)
+}
+
+/// The plugin: top-k sparsified uploads, dense downstream.
+pub struct TopK;
+
+impl FedStrategy for TopK {
+    fn name(&self) -> &'static str {
+        "topk"
+    }
+
+    fn encode_download(&self, _ctx: &RoundContext<'_>, model: &ServerModel) -> Result<WireBlob> {
+        Ok(WireBlob::dense(&model.theta))
+    }
+
+    fn encode_upload(
+        &self,
+        ctx: &RoundContext<'_>,
+        input: &UploadInput<'_>,
+        _rng: &mut Rng,
+    ) -> Result<WireBlob> {
+        let (bytes, theta) = encode_topk(input.theta, ctx.cfg.topk_keep);
+        Ok(WireBlob {
+            bytes: bytes.len(),
+            theta,
+        })
+    }
+
+    fn finalize(&self, env: &ServerEnv<'_>, model: &ServerModel) -> Result<FinalModel> {
+        let (bytes, theta) = encode_topk(&model.theta, env.cfg.topk_keep);
+        Ok(FinalModel {
+            theta,
+            wire_bytes: bytes.len(),
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::compression::codec::dense_bytes;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn roundtrip_is_exact_on_the_pruned_vector() {
+        let mut rng = Rng::new(1);
+        let theta: Vec<f32> = (0..10_000).map(|_| rng.normal() * 0.2).collect();
+        let (bytes, pruned) = encode_topk(&theta, 0.1);
+        let decoded = decode_topk(&bytes).unwrap();
+        assert_eq!(decoded, pruned);
+        let kept = pruned.iter().filter(|w| **w != 0.0).count();
+        assert!((995..=1005).contains(&kept), "{kept}");
+    }
+
+    #[test]
+    fn wire_beats_dense_substantially_at_10_percent() {
+        let mut rng = Rng::new(2);
+        let theta: Vec<f32> = (0..20_000).map(|_| rng.normal()).collect();
+        let (bytes, _) = encode_topk(&theta, 0.1);
+        let ratio = dense_bytes(theta.len()) as f64 / bytes.len() as f64;
+        // ~ (32 bits) / (0.1 * (32 + log2 n) bits) ~ 6-7x at n=20k
+        assert!(ratio > 5.0, "ratio {ratio}");
+    }
+
+    #[test]
+    fn decode_rejects_corruption() {
+        let mut rng = Rng::new(3);
+        let theta: Vec<f32> = (0..500).map(|_| rng.normal()).collect();
+        let (bytes, _) = encode_topk(&theta, 0.2);
+        let mut bad = bytes.clone();
+        bad[0] ^= 0xff;
+        assert!(decode_topk(&bad).is_err());
+        let mut short = bytes.clone();
+        short.truncate(bytes.len() / 2);
+        assert!(decode_topk(&short).is_err());
+    }
+
+    #[test]
+    fn keep_one_keeps_everything() {
+        let theta = vec![1.0f32, -2.0, 3.0, 0.5];
+        let (bytes, pruned) = encode_topk(&theta, 1.0);
+        assert_eq!(pruned, theta);
+        assert_eq!(decode_topk(&bytes).unwrap(), theta);
+    }
+}

@@ -1,16 +1,21 @@
-//! Upload/download encoding per strategy.
+//! Wire-blob building blocks shared by the strategy plugins.
 //!
-//! * FedAvg            — dense f32 both directions.
-//! * FedZip (Malekijoo 2021) — upstream: magnitude prune -> k-means with
-//!   a fixed cluster count (15 in the paper) -> Huffman; downstream
-//!   stays dense (FedZip only optimizes client->server).
-//! * FedCompress w/o SCS — clients train with L_wc but without server
-//!   re-clustering the received model is dense and assignments drift,
-//!   so the wire stays dense during training (CCR ~ 1, Table 1); only
-//!   the *final* model is snapped (MCR ~ 1.6-1.8). See DESIGN.md §3.
-//! * FedCompress       — upstream: hard-snap to the client's learned
-//!   centroids + codebook codec; downstream: the SCS output re-encoded
-//!   the same way (both directions compressed — the paper's headline).
+//! A `WireBlob` is what actually crossed the (simulated) network in one
+//! direction: the exact byte count plus the model the receiver
+//! reconstructs — quantization is part of the transport, so sender and
+//! receiver agree on the decoded weights. The helpers here are pure
+//! codec policy; *which* helper a strategy uses per direction/round
+//! lives in the plugin implementations (`baselines::fedavg` etc.), not
+//! in any central `match`.
+//!
+//! * [`WireBlob::dense`]    — raw f32 both ways (FedAvg, warmup rounds,
+//!   every compressed strategy's dense direction).
+//! * [`kmeans_blob`]        — magnitude prune -> per-upload k-means ->
+//!   Huffman/flat codec (FedZip upstream, Malekijoo 2021).
+//! * [`codebook_blob`]      — hard-snap to a learned centroid table +
+//!   codebook codec (FedCompress both directions once SCS has run).
+
+use std::fmt;
 
 use anyhow::Result;
 
@@ -18,173 +23,164 @@ use crate::clustering::CentroidState;
 use crate::compression::codec::{dense_bytes, quantize_and_encode};
 use crate::compression::kmeans::kmeans_1d;
 use crate::compression::sparsify::magnitude_prune;
-use crate::config::{FedConfig, Strategy};
 use crate::util::rng::Rng;
 
 /// What crossed the wire: exact byte count plus the model the receiver
-/// reconstructs (quantization is part of the transport, so sender and
-/// receiver agree on the decoded weights).
+/// reconstructs.
 pub struct WireBlob {
     pub bytes: usize,
     pub theta: Vec<f32>,
 }
 
-/// Encode a client upload. Returns the blob the server decodes.
-/// `compressing` is false during FedCompress's dense warmup rounds.
-pub fn encode_upload(
-    strategy: Strategy,
-    cfg: &FedConfig,
-    theta: &[f32],
-    client_centroids: &CentroidState,
-    compressing: bool,
-    rng: &mut Rng,
-) -> Result<WireBlob> {
-    if !compressing && strategy == Strategy::FedCompress {
-        return Ok(WireBlob {
-            bytes: dense_bytes(theta.len()),
-            theta: theta.to_vec(),
-        });
-    }
-    match strategy {
-        Strategy::FedAvg | Strategy::FedCompressNoScs => Ok(WireBlob {
-            bytes: dense_bytes(theta.len()),
-            theta: theta.to_vec(),
-        }),
-        Strategy::FedZip => {
-            let mut pruned = theta.to_vec();
-            magnitude_prune(&mut pruned, cfg.fedzip_keep);
-            let (codebook, _, _) = kmeans_1d(&pruned, cfg.fedzip_clusters, 25, rng);
-            let (enc, quantized) = quantize_and_encode(&pruned, &codebook);
-            Ok(WireBlob {
-                bytes: enc.wire_bytes(),
-                theta: quantized,
-            })
-        }
-        Strategy::FedCompress => {
-            let codebook = client_centroids.active_codebook();
-            let (enc, quantized) = quantize_and_encode(theta, &codebook);
-            if crate::util::logging::enabled(crate::util::logging::Level::Debug) {
-                let mse: f64 = theta
-                    .iter()
-                    .zip(&quantized)
-                    .map(|(&a, &b)| ((a - b) as f64).powi(2))
-                    .sum::<f64>()
-                    / theta.len() as f64;
-                let span = codebook.last().unwrap() - codebook.first().unwrap();
-                crate::debug!(
-                    "upload snap: C={} span={:.4} mse={:.6} cb[0..4]={:?}",
-                    codebook.len(),
-                    span,
-                    mse,
-                    &codebook[..4.min(codebook.len())]
-                );
-            }
-            Ok(WireBlob {
-                bytes: enc.wire_bytes(),
-                theta: quantized,
-            })
-        }
+/// Typed decode-invariant violation: the reconstructed model does not
+/// match the manifest's parameter count. Returned (never silently
+/// tolerated) by [`WireBlob::ensure_param_count`].
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct WireSizeMismatch {
+    pub expected: usize,
+    pub got: usize,
+}
+
+impl fmt::Display for WireSizeMismatch {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(
+            f,
+            "wire blob param count mismatch: manifest expects {} params, decoded {}",
+            self.expected, self.got
+        )
     }
 }
 
-/// Encode the server dispatch for the next round. For FedCompress the
-/// model is already centroid-structured post-SCS, so the codec is
-/// lossless on it; round 0 (fresh init, no structure yet) goes dense.
-pub fn encode_download(
-    strategy: Strategy,
-    compressing: bool,
-    theta: &[f32],
-    server_centroids: &CentroidState,
-) -> Result<WireBlob> {
-    match strategy {
-        Strategy::FedAvg | Strategy::FedZip | Strategy::FedCompressNoScs => Ok(WireBlob {
+impl std::error::Error for WireSizeMismatch {}
+
+impl WireBlob {
+    /// Dense f32 transport: lossless, 4 bytes per parameter.
+    pub fn dense(theta: &[f32]) -> WireBlob {
+        WireBlob {
             bytes: dense_bytes(theta.len()),
             theta: theta.to_vec(),
-        }),
-        Strategy::FedCompress => {
-            // dense until the first SCS has produced a clustered model
-            if !compressing {
-                return Ok(WireBlob {
-                    bytes: dense_bytes(theta.len()),
-                    theta: theta.to_vec(),
-                });
-            }
-            let codebook = server_centroids.active_codebook();
-            let (enc, quantized) = quantize_and_encode(theta, &codebook);
-            Ok(WireBlob {
-                bytes: enc.wire_bytes(),
-                theta: quantized,
-            })
         }
     }
+
+    /// Check the decoded model against the manifest parameter count.
+    /// Debug builds assert; release builds surface the typed error so a
+    /// size mismatch can never silently corrupt aggregation.
+    pub fn ensure_param_count(&self, expected: usize) -> Result<(), WireSizeMismatch> {
+        debug_assert_eq!(
+            self.theta.len(),
+            expected,
+            "wire blob param count mismatch"
+        );
+        if self.theta.len() != expected {
+            return Err(WireSizeMismatch {
+                expected,
+                got: self.theta.len(),
+            });
+        }
+        Ok(())
+    }
+}
+
+/// FedZip upstream policy: magnitude prune to `keep`, fit a fresh
+/// `clusters`-entry k-means codebook on the pruned vector, encode.
+pub fn kmeans_blob(theta: &[f32], clusters: usize, keep: f64, rng: &mut Rng) -> Result<WireBlob> {
+    let mut pruned = theta.to_vec();
+    magnitude_prune(&mut pruned, keep);
+    let (codebook, _, _) = kmeans_1d(&pruned, clusters, 25, rng);
+    let (enc, quantized) = quantize_and_encode(&pruned, &codebook);
+    Ok(WireBlob {
+        bytes: enc.wire_bytes(),
+        theta: quantized,
+    })
+}
+
+/// FedCompress policy: hard-snap to the active centroid codebook and
+/// encode; lossless when the model is already centroid-structured
+/// (post-SCS downstream).
+pub fn codebook_blob(theta: &[f32], centroids: &CentroidState) -> Result<WireBlob> {
+    let codebook = centroids.active_codebook();
+    let (enc, quantized) = quantize_and_encode(theta, &codebook);
+    if crate::util::logging::enabled(crate::util::logging::Level::Debug) {
+        let mse: f64 = theta
+            .iter()
+            .zip(&quantized)
+            .map(|(&a, &b)| ((a - b) as f64).powi(2))
+            .sum::<f64>()
+            / theta.len().max(1) as f64;
+        let span = codebook.last().unwrap() - codebook.first().unwrap();
+        crate::debug!(
+            "codebook snap: C={} span={:.4} mse={:.6} cb[0..4]={:?}",
+            codebook.len(),
+            span,
+            mse,
+            &codebook[..4.min(codebook.len())]
+        );
+    }
+    Ok(WireBlob {
+        bytes: enc.wire_bytes(),
+        theta: quantized,
+    })
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::compression::codec::dense_bytes;
     use crate::util::rng::Rng;
 
-    fn setup() -> (FedConfig, Vec<f32>, CentroidState, Rng) {
-        let cfg = FedConfig::quick("cifar10");
+    fn setup() -> (Vec<f32>, CentroidState, Rng) {
         let mut rng = Rng::new(1);
         let theta: Vec<f32> = (0..5000).map(|_| rng.normal() * 0.2).collect();
         let cents = CentroidState::init_from_weights(&theta, 16, 32, &mut rng);
-        (cfg, theta, cents, rng)
+        (theta, cents, rng)
     }
 
     #[test]
-    fn fedavg_is_dense_and_lossless() {
-        let (cfg, theta, cents, mut rng) = setup();
-        let up = encode_upload(Strategy::FedAvg, &cfg, &theta, &cents, true, &mut rng).unwrap();
-        assert_eq!(up.bytes, 4 * theta.len());
-        assert_eq!(up.theta, theta);
+    fn dense_is_lossless_and_4_bytes_per_param() {
+        let (theta, _, _) = setup();
+        let blob = WireBlob::dense(&theta);
+        assert_eq!(blob.bytes, 4 * theta.len());
+        assert_eq!(blob.theta, theta);
+        assert!(blob.ensure_param_count(theta.len()).is_ok());
     }
 
     #[test]
-    fn fedzip_upload_compresses_but_download_dense() {
-        let (cfg, theta, cents, mut rng) = setup();
-        let up = encode_upload(Strategy::FedZip, &cfg, &theta, &cents, true, &mut rng).unwrap();
-        assert!(up.bytes < 4 * theta.len() / 3, "{}", up.bytes);
-        let down = encode_download(Strategy::FedZip, true, &theta, &cents).unwrap();
-        assert_eq!(down.bytes, 4 * theta.len());
+    fn kmeans_blob_compresses_and_sparsifies() {
+        let (theta, _, mut rng) = setup();
+        let blob = kmeans_blob(&theta, 15, 0.6, &mut rng).unwrap();
+        assert!(blob.bytes < dense_bytes(theta.len()) / 3, "{}", blob.bytes);
+        // the zero cluster exists and dominates at keep=0.6
+        let zeros = blob.theta.iter().filter(|w| w.abs() < 1e-3).count();
+        assert!(zeros as f64 > 0.3 * theta.len() as f64, "{zeros}");
     }
 
     #[test]
-    fn fedcompress_compresses_both_directions_after_round0() {
-        let (cfg, theta, cents, mut rng) = setup();
-        let up =
-            encode_upload(Strategy::FedCompress, &cfg, &theta, &cents, true, &mut rng).unwrap();
-        assert!(up.bytes < 4 * theta.len() / 4);
-        // decoded model only contains codebook values
+    fn codebook_blob_snaps_into_codebook_and_is_idempotent() {
+        let (theta, cents, _) = setup();
+        let blob = codebook_blob(&theta, &cents).unwrap();
+        assert!(blob.bytes < dense_bytes(theta.len()) / 4);
         let cb = cents.active_codebook();
-        for w in &up.theta {
+        for w in &blob.theta {
             assert!(cb.iter().any(|c| c == w));
         }
-        // not compressing yet (warmup) -> dense
-        let d0 = encode_download(Strategy::FedCompress, false, &theta, &cents).unwrap();
-        assert_eq!(d0.bytes, 4 * theta.len());
-        let d1 = encode_download(Strategy::FedCompress, true, &up.theta, &cents).unwrap();
-        assert!(d1.bytes < 4 * theta.len() / 4);
-        // already-snapped model encodes losslessly
-        assert_eq!(d1.theta, up.theta);
+        // already-snapped model re-encodes losslessly
+        let again = codebook_blob(&blob.theta, &cents).unwrap();
+        assert_eq!(again.theta, blob.theta);
     }
 
     #[test]
-    fn noscs_stays_dense_on_the_wire() {
-        let (cfg, theta, cents, mut rng) = setup();
-        let up = encode_upload(Strategy::FedCompressNoScs, &cfg, &theta, &cents, true, &mut rng)
-            .unwrap();
-        assert_eq!(up.bytes, 4 * theta.len());
-        let down = encode_download(Strategy::FedCompressNoScs, true, &theta, &cents).unwrap();
-        assert_eq!(down.bytes, 4 * theta.len());
-    }
-
-    #[test]
-    fn fedzip_prunes_to_sparse_quantized() {
-        let (cfg, theta, cents, mut rng) = setup();
-        let up = encode_upload(Strategy::FedZip, &cfg, &theta, &cents, true, &mut rng).unwrap();
-        // the zero cluster exists and dominates at keep=0.6
-        let zeros = up.theta.iter().filter(|w| w.abs() < 1e-3).count();
-        assert!(zeros as f64 > 0.3 * theta.len() as f64, "{zeros}");
+    fn param_count_mismatch_is_caught() {
+        let blob = WireBlob::dense(&[1.0, 2.0]);
+        if cfg!(debug_assertions) {
+            // debug builds assert loudly
+            let r = std::panic::catch_unwind(|| blob.ensure_param_count(3));
+            assert!(r.is_err(), "debug_assert should fire on mismatch");
+        } else {
+            // release builds surface the typed error
+            let e = blob.ensure_param_count(3).unwrap_err();
+            assert_eq!(e.expected, 3);
+            assert_eq!(e.got, 2);
+            assert!(e.to_string().contains("param count mismatch"));
+        }
     }
 }

@@ -25,7 +25,9 @@ COMMANDS:
 
 COMMON OPTIONS:
     --dataset <name>        cifar10|cifar100|pathmnist|speechcommands|voxforge
-    --strategy <name>       fedavg|fedzip|fedcompress-noscs|fedcompress
+    --strategy <name>       a registered strategy (fedavg|fedzip|
+                            fedcompress-noscs|fedcompress|topk|...), or
+                            'list' to print the registry
     --preset <paper|quick>  parameter preset (default: quick)
     --config <file.json>    JSON overrides on top of the preset
     --set key=value         single override (repeatable)
@@ -36,6 +38,7 @@ COMMON OPTIONS:
 
 EXAMPLES:
     fedcompress train --dataset cifar10 --strategy fedcompress --preset quick
+    fedcompress train --strategy list
     fedcompress table1 --preset quick --datasets cifar10,voxforge
     fedcompress figure2 --dataset speechcommands --out fig2.csv
 ";

@@ -10,44 +10,6 @@ use anyhow::{bail, Context, Result};
 use crate::clustering::ControllerConfig;
 use crate::util::json::Json;
 
-/// Which training strategy to run (Table 1's four columns).
-#[derive(Clone, Copy, Debug, PartialEq, Eq)]
-pub enum Strategy {
-    FedAvg,
-    FedZip,
-    /// FedCompress without Self-Compression on Server (ablation column)
-    FedCompressNoScs,
-    FedCompress,
-}
-
-impl Strategy {
-    pub fn parse(s: &str) -> Result<Strategy> {
-        Ok(match s.to_ascii_lowercase().as_str() {
-            "fedavg" => Strategy::FedAvg,
-            "fedzip" => Strategy::FedZip,
-            "fedcompress-noscs" | "noscs" => Strategy::FedCompressNoScs,
-            "fedcompress" => Strategy::FedCompress,
-            other => bail!("unknown strategy '{other}'"),
-        })
-    }
-
-    pub fn name(&self) -> &'static str {
-        match self {
-            Strategy::FedAvg => "fedavg",
-            Strategy::FedZip => "fedzip",
-            Strategy::FedCompressNoScs => "fedcompress-noscs",
-            Strategy::FedCompress => "fedcompress",
-        }
-    }
-
-    pub const ALL: [Strategy; 4] = [
-        Strategy::FedAvg,
-        Strategy::FedZip,
-        Strategy::FedCompressNoScs,
-        Strategy::FedCompress,
-    ];
-}
-
 #[derive(Clone, Debug)]
 pub struct FedConfig {
     pub dataset: String,
@@ -88,6 +50,10 @@ pub struct FedConfig {
     pub fedzip_clusters: usize,
     /// FedZip magnitude-prune keep fraction
     pub fedzip_keep: f64,
+    /// top-k sparsification keep fraction (the `topk` strategy)
+    pub topk_keep: f64,
+    /// worker threads for the parallel client encode step (0 = auto)
+    pub upload_workers: usize,
     pub seed: u64,
 }
 
@@ -115,6 +81,8 @@ impl FedConfig {
             controller: ControllerConfig::default(),
             fedzip_clusters: 15,
             fedzip_keep: 0.6,
+            topk_keep: 0.1,
+            upload_workers: 0,
             seed: 42,
         }
     }
@@ -157,6 +125,9 @@ impl FedConfig {
         if self.controller.c_min < 2 {
             bail!("c_min must be >= 2");
         }
+        if !(self.topk_keep > 0.0 && self.topk_keep <= 1.0) {
+            bail!("topk_keep must be in (0, 1]");
+        }
         Ok(())
     }
 
@@ -192,6 +163,10 @@ impl FedConfig {
             "patience" => self.controller.patience = value.parse().with_context(e)?,
             "fedzip_clusters" => self.fedzip_clusters = value.parse().with_context(e)?,
             "fedzip_keep" => self.fedzip_keep = value.parse().with_context(e)?,
+            "topk_keep" => self.topk_keep = value.parse().with_context(e)?,
+            "workers" | "upload_workers" => {
+                self.upload_workers = value.parse().with_context(e)?
+            }
             "seed" => self.seed = value.parse().with_context(e)?,
             other => bail!("unknown config key '{other}'"),
         }
@@ -251,11 +226,16 @@ mod tests {
     }
 
     #[test]
-    fn strategy_parse_roundtrip() {
-        for s in Strategy::ALL {
-            assert_eq!(Strategy::parse(s.name()).unwrap(), s);
-        }
-        assert!(Strategy::parse("sgd").is_err());
+    fn topk_keep_validation_and_override() {
+        let mut c = FedConfig::quick("cifar10");
+        c.set("topk_keep", "0.25").unwrap();
+        assert_eq!(c.topk_keep, 0.25);
+        c.set("workers", "2").unwrap();
+        assert_eq!(c.upload_workers, 2);
+        c.topk_keep = 0.0;
+        assert!(c.validate().is_err());
+        c.topk_keep = 1.5;
+        assert!(c.validate().is_err());
     }
 
     #[test]

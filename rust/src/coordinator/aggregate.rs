@@ -7,6 +7,13 @@
 /// Weighted average of flat vectors. `weights[i]` is client i's sample
 /// count N_k; vectors must agree in length.
 pub fn fedavg(vectors: &[Vec<f32>], weights: &[usize]) -> Vec<f32> {
+    let refs: Vec<&[f32]> = vectors.iter().map(|v| v.as_slice()).collect();
+    fedavg_slices(&refs, weights)
+}
+
+/// Borrow-friendly form of [`fedavg`] (strategy plugins aggregate
+/// uploads without cloning each client vector).
+pub fn fedavg_slices(vectors: &[&[f32]], weights: &[usize]) -> Vec<f32> {
     assert!(!vectors.is_empty());
     assert_eq!(vectors.len(), weights.len());
     let n = vectors[0].len();
@@ -16,7 +23,7 @@ pub fn fedavg(vectors: &[Vec<f32>], weights: &[usize]) -> Vec<f32> {
     for (v, &w) in vectors.iter().zip(weights) {
         assert_eq!(v.len(), n, "ragged client vectors");
         let coef = w as f64 / total;
-        for (o, &x) in out.iter_mut().zip(v) {
+        for (o, &x) in out.iter_mut().zip(v.iter()) {
             *o += coef * x as f64;
         }
     }

@@ -1,8 +1,11 @@
 //! Layer-3 coordinator — the paper's system contribution.
 //!
-//! `server` drives Algorithm 1: dispatch, parallel-in-spirit client
-//! updates, FedAvg aggregation, server-side self-compression, dynamic
-//! cluster control, and the byte-exact communication ledger.
+//! `server` drives Algorithm 1 as a strategy-agnostic round loop:
+//! dispatch, client updates (upload encoding fanned out over the worker
+//! pool), aggregation, strategy server-side hooks, and the byte-exact
+//! communication ledger. Per-strategy behavior lives behind the
+//! `strategy::FedStrategy` plugin trait, resolved by name through
+//! `baselines::registry::StrategyRegistry`.
 
 pub mod aggregate;
 pub mod checkpoint;
@@ -10,6 +13,11 @@ pub mod events;
 pub mod metrics;
 pub mod selection;
 pub mod server;
+pub mod strategy;
 
 pub use metrics::{RoundMetrics, RunResult};
-pub use server::run_federated;
+pub use server::{run_federated, run_federated_with_data, run_with_strategy};
+pub use strategy::{
+    ClientTrainOpts, ClientUpdate, FedStrategy, FinalModel, RoundContext, ServerEnv, ServerModel,
+    UploadInput,
+};

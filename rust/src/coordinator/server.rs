@@ -1,31 +1,42 @@
-//! The federated server (paper Algorithm 1).
+//! The federated server (paper Algorithm 1) as a strategy-agnostic
+//! driver.
 //!
-//! Per round: dispatch the current model to the selected clients
-//! (ledgered), run ClientUpdate on each, FedAvg-aggregate thetas /
-//! centroids / scores, then — FedCompress only — SelfCompress on OOD
-//! data and grow the cluster count on representation-score plateaus.
-//! Evaluation runs on the *deliverable* model (the one that would be
-//! dispatched next round), which is what Table 1's accuracy reports.
+//! Per round: `round_start` hook, dispatch the encoded model to the
+//! selected clients (ledgered), run ClientUpdate on each, fan the
+//! per-client upload encode out over `util::threadpool::parallel_map`,
+//! `aggregate`, `post_aggregate` (where FedCompress's SelfCompress +
+//! cluster growth live), then evaluate the *deliverable* model (the one
+//! that would be dispatched next round) — which is what Table 1's
+//! accuracy reports. Every per-strategy decision flows through the
+//! [`FedStrategy`](super::strategy::FedStrategy) hooks; this file
+//! contains no strategy branches.
+//!
+//! Parallelism: the PJRT engine wraps `Rc` and is thread-confined, so
+//! the engine-bound *train* phase runs serially on the coordinator
+//! thread (faithful to a single shared accelerator — XLA's intra-op
+//! pool keeps the cores busy), while the pure-CPU *encode* phase
+//! (k-means + Huffman, the dominant rust-side cost) runs on the worker
+//! pool. Each client owns a deterministic RNG fork, so results are
+//! independent of worker count and bit-identical to serial execution.
 
 use anyhow::Result;
 
-use super::aggregate::{fedavg, weighted_mean};
 use super::events::{Event, EventLog};
 use super::metrics::{RoundMetrics, RunResult};
 use super::selection::select_clients;
-use crate::baselines::{encode_download, encode_upload};
-use crate::client::trainer::{evaluate, train_local};
-use crate::clustering::{CentroidState, ClusterController};
+use super::strategy::{ClientUpdate, FedStrategy, RoundContext, ServerEnv, ServerModel, UploadInput};
+use crate::baselines::registry::StrategyRegistry;
+use crate::baselines::wire::WireBlob;
+use crate::client::trainer::{evaluate, train_local, ClientOutcome};
+use crate::clustering::CentroidState;
 use crate::compression::accounting::{CommLedger, Direction};
-use crate::compression::codec::{dense_bytes, quantize_and_encode};
-use crate::compression::kmeans::kmeans_1d;
-use crate::compression::sparsify::magnitude_prune;
-use crate::config::{FedConfig, Strategy};
+use crate::compression::codec::dense_bytes;
+use crate::config::FedConfig;
 use crate::data::{ood, partition::sigma_to_alpha, partition_dirichlet, synth, Dataset};
 use crate::info;
-use crate::runtime::literals::{literal_scalar_f32, literal_to_f32, Arg};
 use crate::runtime::Engine;
 use crate::util::rng::Rng;
+use crate::util::threadpool::{default_workers, parallel_map};
 
 /// Everything a run needs in memory: client shards, unlabeled shards,
 /// test split, server OOD set.
@@ -66,115 +77,88 @@ pub fn build_data(engine: &Engine, cfg: &FedConfig) -> Result<FederatedData> {
     })
 }
 
-/// SelfCompress (Algorithm 1, lines 20-28): distill the aggregated
-/// model (teacher) into a re-clustered student on OOD data, then snap.
-/// Returns (snapped_student, updated_mu, mean_kl).
-fn self_compress(
-    engine: &Engine,
-    cfg: &FedConfig,
-    teacher: &[f32],
-    centroids: &mut CentroidState,
-    ood_data: &Dataset,
-    rng: &mut Rng,
-) -> Result<(Vec<f32>, f64)> {
-    let ds = &cfg.dataset;
-    let batch = engine.manifest.batch;
-    let mut student = teacher.to_vec();
-    let mut mu = centroids.mu.clone();
-    let mask = centroids.mask.clone();
-    let mut kl_sum = 0.0f64;
-    let mut steps = 0usize;
-
-    for _epoch in 0..cfg.server_epochs {
-        for (xs, _ys) in ood_data.epoch_batches(batch, rng) {
-            let out = engine.run(
-                ds,
-                "distill_step",
-                &[
-                    Arg::F32(&student),
-                    Arg::F32(teacher),
-                    Arg::F32(&mu),
-                    Arg::F32(&mask),
-                    Arg::F32(&xs),
-                    Arg::Scalar(cfg.lr_server),
-                    Arg::Scalar(cfg.beta),
-                    Arg::Scalar(cfg.temperature),
-                ],
-            )?;
-            student = literal_to_f32(&out[0])?;
-            mu = literal_to_f32(&out[1])?;
-            kl_sum += literal_scalar_f32(&out[3])? as f64;
-            steps += 1;
-        }
-    }
-    centroids.mu = mu;
-
-    // hard snap to the learned codebook: the downstream wire model
-    let codebook = centroids.active_codebook();
-    let (_, snapped) = quantize_and_encode(&student, &codebook);
-    Ok((snapped, kl_sum / steps.max(1) as f64))
+/// One trained client awaiting upload encoding: the training outcome
+/// plus the client's RNG positioned exactly where training left it.
+struct TrainedClient {
+    client: usize,
+    outcome: ClientOutcome,
+    rng: Rng,
 }
 
-/// Run one full federated training experiment.
-pub fn run_federated(engine: &Engine, cfg: &FedConfig, strategy: Strategy) -> Result<RunResult> {
+/// Run one full federated training experiment for a registered
+/// strategy name.
+pub fn run_federated(engine: &Engine, cfg: &FedConfig, strategy: &str) -> Result<RunResult> {
     cfg.validate()?;
     let data = build_data(engine, cfg)?;
     run_federated_with_data(engine, cfg, strategy, &data)
 }
 
 /// Same, with externally supplied data (lets Table-1 drivers share one
-/// environment across the four strategies so deltas are paired).
+/// environment across strategies so deltas are paired). Resolves
+/// `strategy` against the built-in registry.
 pub fn run_federated_with_data(
     engine: &Engine,
     cfg: &FedConfig,
-    strategy: Strategy,
+    strategy: &str,
+    data: &FederatedData,
+) -> Result<RunResult> {
+    let mut plugin = StrategyRegistry::builtin().build(strategy, cfg)?;
+    run_with_strategy(engine, cfg, plugin.as_mut(), data)
+}
+
+/// The strategy-agnostic round loop. `strategy` must be a fresh
+/// instance (stateful strategies assume one run per instance).
+pub fn run_with_strategy(
+    engine: &Engine,
+    cfg: &FedConfig,
+    strategy: &mut dyn FedStrategy,
     data: &FederatedData,
 ) -> Result<RunResult> {
     let base = Rng::new(cfg.seed ^ 0xFEDC);
     let p = engine.manifest.dataset(&cfg.dataset)?.spec.param_count;
     let c_max = engine.manifest.c_max;
+    let sname = strategy.name();
 
-    let mut theta = engine.init_theta(&cfg.dataset)?;
+    let theta = engine.init_theta(&cfg.dataset)?;
     anyhow::ensure!(theta.len() == p, "init theta size mismatch");
 
-    // centroid table: FedZip re-fits per upload; FedCompress learns it
+    // centroid table: strategies re-fit, learn, or ignore it per round
     let mut cents_rng = base.fork(2);
-    let c0 = cfg.controller.c_min;
-    let mut centroids = CentroidState::init_from_weights(&theta, c0, c_max, &mut cents_rng);
-    let mut controller = ClusterController::new(cfg.controller.clone());
+    let centroids =
+        CentroidState::init_from_weights(&theta, cfg.controller.c_min, c_max, &mut cents_rng);
+    let mut model = ServerModel { theta, centroids };
 
     let mut ledger = CommLedger::new();
     let mut events = EventLog::new();
     let mut rounds = Vec::with_capacity(cfg.rounds);
-    let use_wc = matches!(
-        strategy,
-        Strategy::FedCompress | Strategy::FedCompressNoScs
-    );
+    let workers = match cfg.upload_workers {
+        0 => default_workers().max(1),
+        w => w,
+    };
 
     for round in 0..cfg.rounds {
         let t0 = std::time::Instant::now();
         let mut round_rng = base.fork(100 + round as u64);
-        // FedCompress warmup: a few dense L_ce-only rounds before the
-        // compression machinery engages (paper §1.2; DESIGN.md §3)
-        let compressing = round >= cfg.warmup_rounds;
-        // the downstream is only clustered once SCS has run at least once
-        let down_compressed = round > cfg.warmup_rounds;
-
-        if strategy == Strategy::FedCompress && round == cfg.warmup_rounds {
-            // re-seed the codebook from the *trained* weight
-            // distribution, not the init one
-            let mut rng = base.fork(60_000 + round as u64);
-            let c = centroids.active;
-            centroids = CentroidState::init_from_weights(&theta, c, c_max, &mut rng);
-        }
+        let ctx = RoundContext {
+            round,
+            cfg,
+            base: &base,
+            // warmup: a few dense L_ce-only rounds before the
+            // compression machinery engages (paper §1.2; DESIGN.md §3)
+            compressing: round >= cfg.warmup_rounds,
+            // the downstream is only clustered once SCS has run at least once
+            down_compressed: round > cfg.warmup_rounds,
+        };
+        strategy.round_start(&ctx, &mut model)?;
 
         // --- dispatch ---------------------------------------------------
         events.push(Event::RoundStart {
             round,
-            clusters: centroids.active,
+            clusters: model.centroids.active,
         });
         let selected = select_clients(cfg.clients, cfg.participation, &mut round_rng);
-        let down = encode_download(strategy, down_compressed, &theta, &centroids)?;
+        let down = strategy.encode_download(&ctx, &model)?;
+        down.ensure_param_count(p)?;
         for &k in &selected {
             ledger.record(round, Direction::Down, down.bytes);
             events.push(Event::Dispatch {
@@ -185,14 +169,9 @@ pub fn run_federated_with_data(
             });
         }
 
-        // --- client updates ----------------------------------------------
-        let mut thetas = Vec::with_capacity(selected.len());
-        let mut mus = Vec::with_capacity(selected.len());
-        let mut scores = Vec::with_capacity(selected.len());
-        let mut ns = Vec::with_capacity(selected.len());
-        let mut ce_sum = 0.0f64;
-        let mut up_bytes_round = 0usize;
-
+        // --- client updates (engine-bound, coordinator thread) ------------
+        let opts = strategy.client_train_opts(&ctx);
+        let mut trained = Vec::with_capacity(selected.len());
         for &k in &selected {
             let mut client_rng = base.fork(10_000 + (round * cfg.clients + k) as u64);
             let outcome = train_local(
@@ -201,89 +180,86 @@ pub fn run_federated_with_data(
                 &data.labeled[k],
                 &data.unlabeled[k],
                 &down.theta,
-                &centroids,
-                use_wc && compressing,
+                &model.centroids,
+                opts.weight_clustering,
                 &mut client_rng,
             )?;
-            // client's learned centroids ride along for the upload snap
-            let mut client_cents = centroids.clone();
-            client_cents.mu = outcome.mu.clone();
-            let up = encode_upload(
-                strategy,
-                cfg,
-                &outcome.theta,
-                &client_cents,
-                compressing,
-                &mut client_rng,
-            )?;
+            trained.push(TrainedClient {
+                client: k,
+                outcome,
+                rng: client_rng,
+            });
+        }
+
+        // --- upload encoding (pure CPU, worker pool) ----------------------
+        let blobs: Vec<Result<WireBlob>> = {
+            let strat: &dyn FedStrategy = &*strategy;
+            let centroids = &model.centroids;
+            let ctx = &ctx;
+            parallel_map(trained.len(), workers, |i| {
+                let t = &trained[i];
+                // the client's learned centroids ride along for the snap
+                let mut client_cents = centroids.clone();
+                client_cents.mu.clone_from(&t.outcome.mu);
+                let mut rng = t.rng.clone();
+                strat.encode_upload(
+                    ctx,
+                    &UploadInput {
+                        client: t.client,
+                        theta: &t.outcome.theta,
+                        centroids: &client_cents,
+                    },
+                    &mut rng,
+                )
+            })
+        };
+
+        let mut uploads = Vec::with_capacity(trained.len());
+        let mut ce_sum = 0.0f64;
+        let mut up_bytes_round = 0usize;
+        for (t, blob) in trained.iter().zip(blobs) {
+            let up = blob?;
+            up.ensure_param_count(p)?;
             ledger.record(round, Direction::Up, up.bytes);
             up_bytes_round += up.bytes;
             events.push(Event::Upload {
                 round,
-                client: k,
+                client: t.client,
                 bytes: up.bytes,
-                score: outcome.score,
-                mean_ce: outcome.mean_ce as f64,
+                score: t.outcome.score,
+                mean_ce: t.outcome.mean_ce as f64,
             });
-
-            thetas.push(up.theta);
-            mus.push(outcome.mu);
-            scores.push(outcome.score);
-            ns.push(outcome.n);
-            ce_sum += outcome.mean_ce as f64;
+            ce_sum += t.outcome.mean_ce as f64;
+            uploads.push(ClientUpdate {
+                client: t.client,
+                theta: up.theta,
+                mu: t.outcome.mu.clone(),
+                score: t.outcome.score,
+                n: t.outcome.n,
+            });
         }
 
-        // --- aggregate (plain FedAvg, unmodified) -------------------------
-        theta = fedavg(&thetas, &ns);
-        let score = weighted_mean(&scores, &ns);
+        // --- aggregate ----------------------------------------------------
+        let score = strategy.aggregate(&ctx, &mut model, &uploads)?;
         events.push(Event::Aggregated {
             round,
             clients: selected.len(),
             score,
         });
-        if use_wc {
-            centroids.mu = fedavg(&mus, &ns);
-        }
+        // active count reported for the round (before any growth below)
+        let clusters = model.centroids.active;
 
-        // --- server-side self-compression (FedCompress only) --------------
-        if strategy == Strategy::FedCompress && compressing {
-            let mut scs_rng = base.fork(50_000 + round as u64);
-            if crate::util::logging::enabled(crate::util::logging::Level::Debug) {
-                let (pre_acc, _) = evaluate(engine, &cfg.dataset, &data.test, &theta)?;
-                crate::debug!("round {round}: pre-SCS aggregated acc={pre_acc:.4}");
-            }
-            let (snapped, kl) = self_compress(
-                engine,
-                cfg,
-                &theta.clone(),
-                &mut centroids,
-                &data.ood,
-                &mut scs_rng,
-            )?;
-            crate::debug!("round {round}: SCS mean KL={kl:.4}");
-            events.push(Event::SelfCompress {
-                round,
-                mean_kl: kl,
-            });
-            theta = snapped;
-        }
-
-        // --- dynamic cluster count ----------------------------------------
-        let clusters = centroids.active;
-        if strategy == Strategy::FedCompress && compressing {
-            let next_c = controller.observe(score);
-            if next_c > centroids.active {
-                events.push(Event::ControllerGrow {
-                    round,
-                    from: centroids.active,
-                    to: next_c,
-                });
-                centroids.grow_to(next_c);
-            }
-        }
+        // --- strategy server-side work (SCS, controller, ...) -------------
+        let env = ServerEnv {
+            engine,
+            cfg,
+            data,
+            base: &base,
+        };
+        strategy.post_aggregate(&ctx, &env, &mut model, score, &mut events)?;
 
         // --- evaluate the deliverable model --------------------------------
-        let (accuracy, test_loss) = evaluate(engine, &cfg.dataset, &data.test, &theta)?;
+        let (accuracy, test_loss) = evaluate(engine, &cfg.dataset, &data.test, &model.theta)?;
         events.push(Event::Evaluated {
             round,
             accuracy,
@@ -302,7 +278,7 @@ pub fn run_federated_with_data(
         };
         info!(
             "[{}] {} round {:2}: acc={:.4} loss={:.3} E={:.2} C={} up={}B down={}B ({:.0} ms)",
-            strategy.name(),
+            sname,
             cfg.dataset,
             round,
             m.accuracy,
@@ -317,42 +293,25 @@ pub fn run_federated_with_data(
     }
 
     // --- final deliverable + MCR ------------------------------------------
-    let (final_theta, final_model_bytes) = match strategy {
-        Strategy::FedAvg => (theta.clone(), dense_bytes(p)),
-        Strategy::FedZip => {
-            let mut rng = base.fork(9_999);
-            let mut pruned = theta.clone();
-            magnitude_prune(&mut pruned, cfg.fedzip_keep);
-            let (cb, _, _) = kmeans_1d(&pruned, cfg.fedzip_clusters, 25, &mut rng);
-            let (enc, q) = quantize_and_encode(&pruned, &cb);
-            (q, enc.wire_bytes())
-        }
-        Strategy::FedCompressNoScs => {
-            // final-model-only compression: k-means at the controller's
-            // floor C (training never grew it — no score feedback loop)
-            let mut rng = base.fork(9_998);
-            let (cb, _, _) = kmeans_1d(&theta, cfg.controller.c_min.max(8), 25, &mut rng);
-            let (enc, q) = quantize_and_encode(&theta, &cb);
-            (q, enc.wire_bytes())
-        }
-        Strategy::FedCompress => {
-            let codebook = centroids.active_codebook();
-            let (enc, q) = quantize_and_encode(&theta, &codebook);
-            (q, enc.wire_bytes())
-        }
+    let env = ServerEnv {
+        engine,
+        cfg,
+        data,
+        base: &base,
     };
-    let (final_accuracy, _) = evaluate(engine, &cfg.dataset, &data.test, &final_theta)?;
+    let final_model = strategy.finalize(&env, &model)?;
+    let (final_accuracy, _) = evaluate(engine, &cfg.dataset, &data.test, &final_model.theta)?;
 
     Ok(RunResult {
-        strategy: strategy.name(),
+        strategy: sname,
         dataset: cfg.dataset.clone(),
         rounds,
-        final_theta,
+        final_theta: final_model.theta,
         final_accuracy,
-        final_model_bytes,
+        final_model_bytes: final_model.wire_bytes,
         dense_model_bytes: dense_bytes(p),
         ledger,
         events,
-        final_centroids: centroids,
+        final_centroids: model.centroids,
     })
 }

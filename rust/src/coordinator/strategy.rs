@@ -1,0 +1,234 @@
+//! The open strategy plugin API: a `FedStrategy` trait with
+//! round-lifecycle hooks, plus the context/state records the hooks see.
+//!
+//! Hook order per round (driven by `server::run_with_strategy`):
+//!
+//! 1. [`FedStrategy::round_start`]       — mutate server state before
+//!    dispatch (e.g. FedCompress re-seeds its codebook at the warmup
+//!    boundary).
+//! 2. [`FedStrategy::encode_download`]   — one blob dispatched to every
+//!    selected client.
+//! 3. [`FedStrategy::client_train_opts`] — options for the local train
+//!    step (today: whether the weight-clustering loss is engaged).
+//! 4. [`FedStrategy::encode_upload`]     — per client; pure CPU and
+//!    `&self`, so the driver fans it out through
+//!    `util::threadpool::parallel_map`. MUST NOT touch the engine.
+//! 5. [`FedStrategy::aggregate`]         — fold decoded uploads into
+//!    the server model; default is byte-identical FedAvg.
+//! 6. [`FedStrategy::post_aggregate`]    — server-side work on the
+//!    aggregated model (FedCompress: SelfCompress + cluster growth).
+//! 7. After the last round, [`FedStrategy::finalize`] produces the
+//!    deliverable model + its exact wire size (MCR denominator).
+//!
+//! Hooks are stateless-by-default: everything a strategy needs per
+//! round arrives in [`RoundContext`] (round index, config, the root RNG
+//! for deterministic forking, warmup flags) or [`ServerModel`] (theta +
+//! centroid table). Strategies that *do* carry state (FedCompress's
+//! plateau controller) own it as struct fields; a strategy instance is
+//! therefore single-run — build a fresh one per experiment via the
+//! `baselines::registry::StrategyRegistry`.
+//!
+//! Thread-safety contract: `FedStrategy: Send + Sync` so
+//! `encode_upload` can run on pool workers. The engine-bearing hooks
+//! (`post_aggregate`, `finalize`) receive [`ServerEnv`] instead, which
+//! only ever exists on the coordinator thread (the PJRT client is
+//! thread-confined by construction).
+
+use anyhow::Result;
+
+use super::aggregate::{fedavg_slices, weighted_mean};
+use super::events::EventLog;
+use super::server::FederatedData;
+use crate::baselines::wire::WireBlob;
+use crate::clustering::CentroidState;
+use crate::config::FedConfig;
+use crate::runtime::Engine;
+use crate::util::rng::Rng;
+
+/// Immutable per-round facts shared by every hook. Contains no engine
+/// handle so it stays `Sync` and can cross into the encode worker pool.
+pub struct RoundContext<'a> {
+    pub round: usize,
+    pub cfg: &'a FedConfig,
+    /// Root RNG of the run; hooks derive deterministic streams via
+    /// `base.fork(...)` (never mutate it).
+    pub base: &'a Rng,
+    /// True once the warmup rounds are over and compression machinery
+    /// may engage (`round >= cfg.warmup_rounds`).
+    pub compressing: bool,
+    /// True once the downstream can be centroid-structured, i.e. SCS
+    /// has had a chance to run (`round > cfg.warmup_rounds`).
+    pub down_compressed: bool,
+}
+
+/// The mutable server-side model state threaded through the run.
+pub struct ServerModel {
+    pub theta: Vec<f32>,
+    pub centroids: CentroidState,
+}
+
+/// Engine-bearing environment for coordinator-thread hooks only
+/// (`post_aggregate`, `finalize`). Deliberately NOT passed to
+/// `encode_upload`: the PJRT client is `!Sync`.
+pub struct ServerEnv<'a> {
+    pub engine: &'a Engine,
+    pub cfg: &'a FedConfig,
+    pub data: &'a FederatedData,
+    pub base: &'a Rng,
+}
+
+/// Options for the client-local training step.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct ClientTrainOpts {
+    /// Train with L_ce + beta * L_wc (the weight-clustering pull).
+    pub weight_clustering: bool,
+}
+
+/// One client's contribution as the server sees it after decoding the
+/// upload: wire-decoded theta plus the sidecar values that ride along.
+pub struct ClientUpdate {
+    pub client: usize,
+    /// decoded upload (post-wire, i.e. quantized where the wire is)
+    pub theta: Vec<f32>,
+    /// client-learned centroid table (aggregated by WC strategies)
+    pub mu: Vec<f32>,
+    /// representation-quality score E_k on the client's unlabeled shard
+    pub score: f64,
+    /// labeled sample count N_k (FedAvg weight)
+    pub n: usize,
+}
+
+/// Borrowed view of one trained client handed to `encode_upload`.
+pub struct UploadInput<'a> {
+    pub client: usize,
+    /// locally trained dense parameters
+    pub theta: &'a [f32],
+    /// server centroid table with the client's learned mu swapped in
+    pub centroids: &'a CentroidState,
+}
+
+/// The deliverable model a strategy ships after training.
+pub struct FinalModel {
+    pub theta: Vec<f32>,
+    /// exact wire size of the shipped model (MCR denominator)
+    pub wire_bytes: usize,
+}
+
+/// A federated training strategy as a plugin: the round loop is fixed
+/// and strategy-agnostic; everything strategy-specific flows through
+/// these hooks. See the module docs for the per-round hook order.
+pub trait FedStrategy: Send + Sync {
+    /// Registry name; also the label on `RunResult` rows.
+    fn name(&self) -> &'static str;
+
+    /// Mutate server state before dispatch (codebook re-seeds, ...).
+    fn round_start(&mut self, _ctx: &RoundContext<'_>, _model: &mut ServerModel) -> Result<()> {
+        Ok(())
+    }
+
+    /// Client-side training options for this round.
+    fn client_train_opts(&self, _ctx: &RoundContext<'_>) -> ClientTrainOpts {
+        ClientTrainOpts::default()
+    }
+
+    /// Encode the server dispatch (one blob, sent to every selected
+    /// client).
+    fn encode_download(&self, ctx: &RoundContext<'_>, model: &ServerModel) -> Result<WireBlob>;
+
+    /// Encode one client's upload. Runs on pool workers (`&self`, no
+    /// engine); `rng` is the client's deterministic stream, positioned
+    /// exactly where local training left it.
+    fn encode_upload(
+        &self,
+        ctx: &RoundContext<'_>,
+        input: &UploadInput<'_>,
+        rng: &mut Rng,
+    ) -> Result<WireBlob>;
+
+    /// Fold the decoded uploads into the server model; returns the
+    /// aggregated representation score E. Default: plain sample-count
+    /// FedAvg on theta (the paper's unmodified aggregation).
+    fn aggregate(
+        &mut self,
+        _ctx: &RoundContext<'_>,
+        model: &mut ServerModel,
+        uploads: &[ClientUpdate],
+    ) -> Result<f64> {
+        Ok(aggregate_fedavg(model, uploads))
+    }
+
+    /// Server-side work on the aggregated model (SelfCompress, cluster
+    /// controller, ...). Runs on the coordinator thread with engine
+    /// access; may push events.
+    fn post_aggregate(
+        &mut self,
+        _ctx: &RoundContext<'_>,
+        _env: &ServerEnv<'_>,
+        _model: &mut ServerModel,
+        _score: f64,
+        _events: &mut EventLog,
+    ) -> Result<()> {
+        Ok(())
+    }
+
+    /// Produce the final deliverable model and its exact wire size.
+    fn finalize(&self, env: &ServerEnv<'_>, model: &ServerModel) -> Result<FinalModel>;
+}
+
+/// Sample-count-weighted FedAvg of the uploads into `model.theta`;
+/// returns the same weighting applied to the representation scores.
+pub fn aggregate_fedavg(model: &mut ServerModel, uploads: &[ClientUpdate]) -> f64 {
+    let thetas: Vec<&[f32]> = uploads.iter().map(|u| u.theta.as_slice()).collect();
+    let ns: Vec<usize> = uploads.iter().map(|u| u.n).collect();
+    let scores: Vec<f64> = uploads.iter().map(|u| u.score).collect();
+    model.theta = fedavg_slices(&thetas, &ns);
+    weighted_mean(&scores, &ns)
+}
+
+/// FedAvg the client-learned centroid tables into the server table
+/// (weight-clustering strategies only).
+pub fn aggregate_centroid_mu(model: &mut ServerModel, uploads: &[ClientUpdate]) {
+    let mus: Vec<&[f32]> = uploads.iter().map(|u| u.mu.as_slice()).collect();
+    let ns: Vec<usize> = uploads.iter().map(|u| u.n).collect();
+    model.centroids.mu = fedavg_slices(&mus, &ns);
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn model() -> ServerModel {
+        let mut rng = Rng::new(1);
+        let theta: Vec<f32> = (0..64).map(|_| rng.normal()).collect();
+        let centroids = CentroidState::init_from_weights(&theta, 4, 8, &mut rng);
+        ServerModel { theta, centroids }
+    }
+
+    fn update(client: usize, v: f32, n: usize) -> ClientUpdate {
+        ClientUpdate {
+            client,
+            theta: vec![v; 64],
+            mu: vec![v; 8],
+            score: v as f64,
+            n,
+        }
+    }
+
+    #[test]
+    fn default_aggregation_is_weighted_fedavg() {
+        let mut m = model();
+        let ups = vec![update(0, 0.0, 30), update(1, 10.0, 10)];
+        let score = aggregate_fedavg(&mut m, &ups);
+        assert!((m.theta[0] - 2.5).abs() < 1e-6);
+        assert!((score - 2.5).abs() < 1e-9);
+    }
+
+    #[test]
+    fn centroid_aggregation_tracks_weights() {
+        let mut m = model();
+        let ups = vec![update(0, 1.0, 1), update(1, 3.0, 3)];
+        aggregate_centroid_mu(&mut m, &ups);
+        assert!((m.centroids.mu[0] - 2.5).abs() < 1e-6);
+    }
+}

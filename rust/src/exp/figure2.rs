@@ -5,7 +5,7 @@
 use anyhow::Result;
 use std::io::Write;
 
-use crate::config::{FedConfig, Strategy};
+use crate::config::FedConfig;
 use crate::coordinator::{run_federated, RunResult};
 use crate::runtime::Engine;
 use crate::util::stats::pearson;
@@ -19,7 +19,7 @@ pub struct Figure2Series {
 }
 
 pub fn run(engine: &Engine, cfg: &FedConfig) -> Result<Figure2Series> {
-    let result: RunResult = run_federated(engine, cfg, Strategy::FedCompress)?;
+    let result: RunResult = run_federated(engine, cfg, "fedcompress")?;
     let score: Vec<f64> = result.rounds.iter().map(|r| r.score).collect();
     let accuracy: Vec<f64> = result.rounds.iter().map(|r| r.accuracy).collect();
     let correlation = pearson(&score, &accuracy);

@@ -4,8 +4,9 @@
 //! Reproduction of Tsouvalas et al., 2024 (see DESIGN.md for the full
 //! system inventory). Three-layer architecture:
 //!
-//! * **Layer 3 (this crate)** — the federated coordinator: round loop,
-//!   aggregation, compression codecs, dynamic cluster control, metrics.
+//! * **Layer 3 (this crate)** — the federated coordinator: a
+//!   strategy-agnostic round loop, strategy plugins, compression
+//!   codecs, dynamic cluster control, metrics.
 //! * **Layer 2** — JAX model graphs (`python/compile/model.py`),
 //!   AOT-lowered once to HLO text under `artifacts/`.
 //! * **Layer 1** — Pallas kernels for the weight-clustering hot spot
@@ -13,6 +14,27 @@
 //!
 //! The rust binary loads the HLO artifacts through the PJRT C API
 //! (`runtime`) and never touches python at runtime.
+//!
+//! # Strategy plugin architecture
+//!
+//! Training strategies (FedAvg, FedZip, FedCompress, top-k, ...) are
+//! *plugins*: implementations of [`coordinator::strategy::FedStrategy`],
+//! a trait of round-lifecycle hooks — `round_start`, `encode_download`,
+//! `client_train_opts`, `encode_upload`, `aggregate`, `post_aggregate`,
+//! `finalize`. The driver ([`coordinator::server::run_with_strategy`])
+//! owns the loop — selection, dispatch, client training, ledger,
+//! events, evaluation — and contains no per-strategy branches; the
+//! CLI/config layer resolves strategy *names* through
+//! [`baselines::registry::StrategyRegistry`]. Adding a baseline is one
+//! trait impl plus one registry entry (see ARCHITECTURE.md for a
+//! <20-line walkthrough).
+//!
+//! Per-client upload encoding (k-means + Huffman, the dominant pure-
+//! rust cost) fans out over [`util::threadpool::parallel_map`]; each
+//! client owns a deterministic RNG fork, so results are bit-identical
+//! regardless of worker count. The engine-bound training phase stays on
+//! the coordinator thread — the PJRT client is thread-confined,
+//! faithful to a single shared accelerator.
 
 pub mod baselines;
 pub mod bench;

@@ -4,10 +4,11 @@ use std::path::{Path, PathBuf};
 
 use anyhow::Result;
 
+use fedcompress::baselines::StrategyRegistry;
 use fedcompress::cli::{Args, ParsedCommand, USAGE};
 use fedcompress::clustering::ControllerConfig;
 use fedcompress::compression::accounting::ccr;
-use fedcompress::config::{FedConfig, Strategy};
+use fedcompress::config::FedConfig;
 use fedcompress::coordinator::run_federated;
 use fedcompress::coordinator::server::{build_data, run_federated_with_data};
 use fedcompress::exp::{figure2, table1, table2};
@@ -44,8 +45,16 @@ fn engine_for(args: &Args) -> Result<Engine> {
 }
 
 fn cmd_train(args: &Args) -> Result<()> {
+    let strategy = args.flag_or("strategy", "fedcompress");
+    // `--strategy list` prints the registry without needing artifacts
+    if strategy == "list" {
+        print!("{}", StrategyRegistry::builtin().render_list());
+        return Ok(());
+    }
     let cfg = build_config(args)?;
-    let strategy = Strategy::parse(args.flag_or("strategy", "fedcompress"))?;
+    // resolve early so a typo fails with a suggestion before the
+    // engine spins up
+    StrategyRegistry::builtin().build(strategy, &cfg)?;
     let engine = engine_for(args)?;
     let result = run_federated(&engine, &cfg, strategy)?;
     println!(
@@ -131,10 +140,10 @@ fn cmd_ablate_c(args: &Args) -> Result<()> {
         "variant", "final_acc", "CCR", "MCR", "final_C"
     );
     let data = build_data(&engine, &base_cfg)?;
-    let fedavg = run_federated_with_data(&engine, &base_cfg, Strategy::FedAvg, &data)?;
+    let fedavg = run_federated_with_data(&engine, &base_cfg, "fedavg", &data)?;
 
     // dynamic (the paper's controller)
-    let dynamic = run_federated_with_data(&engine, &base_cfg, Strategy::FedCompress, &data)?;
+    let dynamic = run_federated_with_data(&engine, &base_cfg, "fedcompress", &data)?;
     println!(
         "{:<22} {:>9.4} {:>8.2} {:>8.2} {:>8}",
         "dynamic [Cmin,Cmax]",
@@ -152,7 +161,7 @@ fn cmd_ablate_c(args: &Args) -> Result<()> {
             c_max: c,
             ..base_cfg.controller.clone()
         };
-        let r = run_federated_with_data(&engine, &cfg, Strategy::FedCompress, &data)?;
+        let r = run_federated_with_data(&engine, &cfg, "fedcompress", &data)?;
         println!(
             "{:<22} {:>9.4} {:>8.2} {:>8.2} {:>8}",
             format!("fixed C={c}"),

@@ -3,8 +3,9 @@
 //! artifacts are absent.
 
 use fedcompress::compression::accounting::{ccr, Direction};
-use fedcompress::config::{FedConfig, Strategy};
+use fedcompress::config::FedConfig;
 use fedcompress::coordinator::server::{build_data, run_federated_with_data};
+use fedcompress::exp::table1::COLUMNS as TABLE1;
 use fedcompress::runtime::artifacts::default_dir;
 use fedcompress::runtime::Engine;
 
@@ -39,9 +40,9 @@ fn all_strategies_complete_and_account_bytes() {
     let data = build_data(&engine, &cfg).unwrap();
 
     let mut results = Vec::new();
-    for strategy in Strategy::ALL {
+    for strategy in TABLE1 {
         let r = run_federated_with_data(&engine, &cfg, strategy, &data).unwrap();
-        assert_eq!(r.rounds.len(), cfg.rounds, "{}", strategy.name());
+        assert_eq!(r.rounds.len(), cfg.rounds, "{strategy}");
         // every round moved bytes in both directions
         for m in &r.rounds {
             assert!(m.up_bytes > 0 && m.down_bytes > 0);
@@ -50,7 +51,7 @@ fn all_strategies_complete_and_account_bytes() {
         assert!(r.ledger.bytes_in(Direction::Up) > 0);
         assert!(r.ledger.bytes_in(Direction::Down) > 0);
         assert!(r.final_accuracy.is_finite());
-        assert!(r.mcr() >= 0.99, "{}: mcr {}", strategy.name(), r.mcr());
+        assert!(r.mcr() >= 0.99, "{strategy}: mcr {}", r.mcr());
         results.push(r);
     }
 
@@ -81,11 +82,32 @@ fn all_strategies_complete_and_account_bytes() {
 }
 
 #[test]
+fn topk_plugin_runs_end_to_end() {
+    // the openness proof: a strategy registered outside the original
+    // four runs through the untouched coordinator
+    let Some(engine) = engine() else { return };
+    let cfg = tiny_cfg("cifar10");
+    let data = build_data(&engine, &cfg).unwrap();
+    let fedavg = run_federated_with_data(&engine, &cfg, "fedavg", &data).unwrap();
+    let topk = run_federated_with_data(&engine, &cfg, "topk", &data).unwrap();
+    assert_eq!(topk.rounds.len(), cfg.rounds);
+    assert_eq!(topk.strategy, "topk");
+    // top-k compresses upstream only
+    assert!(topk.ledger.bytes_in(Direction::Up) < fedavg.ledger.bytes_in(Direction::Up) / 3);
+    assert_eq!(
+        topk.ledger.bytes_in(Direction::Down),
+        fedavg.ledger.bytes_in(Direction::Down)
+    );
+    assert!(topk.mcr() > 2.0, "mcr {}", topk.mcr());
+    assert!(topk.final_accuracy.is_finite());
+}
+
+#[test]
 fn audio_domain_runs_end_to_end() {
     let Some(engine) = engine() else { return };
     let cfg = tiny_cfg("voxforge");
     let data = build_data(&engine, &cfg).unwrap();
-    let r = run_federated_with_data(&engine, &cfg, Strategy::FedCompress, &data).unwrap();
+    let r = run_federated_with_data(&engine, &cfg, "fedcompress", &data).unwrap();
     assert_eq!(r.rounds.len(), cfg.rounds);
     assert!(r.final_accuracy > 0.05); // above random-ish floor (6 classes)
 }
@@ -95,15 +117,15 @@ fn deterministic_given_seed() {
     let Some(engine) = engine() else { return };
     let cfg = tiny_cfg("cifar10");
     let d1 = build_data(&engine, &cfg).unwrap();
-    let r1 = run_federated_with_data(&engine, &cfg, Strategy::FedCompress, &d1).unwrap();
+    let r1 = run_federated_with_data(&engine, &cfg, "fedcompress", &d1).unwrap();
     let d2 = build_data(&engine, &cfg).unwrap();
-    let r2 = run_federated_with_data(&engine, &cfg, Strategy::FedCompress, &d2).unwrap();
+    let r2 = run_federated_with_data(&engine, &cfg, "fedcompress", &d2).unwrap();
     assert_eq!(r1.final_theta, r2.final_theta);
     assert_eq!(r1.total_bytes(), r2.total_bytes());
     let mut cfg3 = cfg.clone();
     cfg3.seed = 43;
     let d3 = build_data(&engine, &cfg3).unwrap();
-    let r3 = run_federated_with_data(&engine, &cfg3, Strategy::FedCompress, &d3).unwrap();
+    let r3 = run_federated_with_data(&engine, &cfg3, "fedcompress", &d3).unwrap();
     assert_ne!(r1.final_theta, r3.final_theta);
 }
 
@@ -115,7 +137,7 @@ fn partial_participation_works() {
     cfg.participation = 0.5;
     cfg.train_size = 384;
     let data = build_data(&engine, &cfg).unwrap();
-    let r = run_federated_with_data(&engine, &cfg, Strategy::FedAvg, &data).unwrap();
+    let r = run_federated_with_data(&engine, &cfg, "fedavg", &data).unwrap();
     // 3 of 6 clients per round -> downstream counts 3 dispatches
     let p = engine.manifest.dataset("pathmnist").unwrap().spec.param_count;
     assert_eq!(r.rounds[0].down_bytes, 3 * 4 * p);

@@ -1,0 +1,422 @@
+//! Strategy plugin API tests: registry round-trips, parallel-vs-serial
+//! encode determinism, and paired-seed equivalence of the plugin
+//! strategies against straight-line reference implementations of the
+//! pre-refactor round loop (same RNG fork constants, no plugin
+//! indirection). Engine-dependent tests skip when artifacts are absent.
+
+use fedcompress::baselines::registry::StrategyRegistry;
+use fedcompress::baselines::topk::{decode_topk, encode_topk};
+use fedcompress::clustering::CentroidState;
+use fedcompress::compression::codec::quantize_and_encode;
+use fedcompress::compression::kmeans::kmeans_1d;
+use fedcompress::compression::sparsify::magnitude_prune;
+use fedcompress::config::FedConfig;
+use fedcompress::coordinator::aggregate::{fedavg, weighted_mean};
+use fedcompress::coordinator::selection::select_clients;
+use fedcompress::coordinator::server::{build_data, run_federated_with_data, FederatedData};
+use fedcompress::coordinator::strategy::{RoundContext, UploadInput};
+use fedcompress::runtime::artifacts::default_dir;
+use fedcompress::runtime::Engine;
+use fedcompress::util::rng::Rng;
+use fedcompress::util::threadpool::parallel_map;
+
+fn engine() -> Option<Engine> {
+    let d = default_dir();
+    if !d.join("manifest.json").exists() {
+        eprintln!("skipping: artifacts not built");
+        return None;
+    }
+    Some(Engine::load(&d).unwrap())
+}
+
+fn tiny_cfg(dataset: &str) -> FedConfig {
+    let mut cfg = FedConfig::quick(dataset);
+    cfg.rounds = 3;
+    cfg.clients = 3;
+    cfg.local_epochs = 2;
+    cfg.server_epochs = 1;
+    cfg.train_size = 192;
+    cfg.test_size = 96;
+    cfg.ood_size = 64;
+    cfg.unlabeled_per_client = 16;
+    cfg.warmup_rounds = 1;
+    cfg.validate().unwrap();
+    cfg
+}
+
+// ---------------------------------------------------------------------------
+// registry round-trip (no engine needed)
+// ---------------------------------------------------------------------------
+
+#[test]
+fn every_registered_name_parses_and_constructs() {
+    let reg = StrategyRegistry::builtin();
+    let cfg = FedConfig::quick("cifar10");
+    let names = reg.names();
+    assert!(names.len() >= 5, "expected at least 5 builtins: {names:?}");
+    for name in names {
+        let strategy = reg.build(name, &cfg).unwrap();
+        assert_eq!(strategy.name(), name, "name round-trip");
+        // a second build is an independent instance (single-run contract)
+        let again = reg.build(name, &cfg).unwrap();
+        assert_eq!(again.name(), name);
+    }
+    // table-1 columns and the openness-proof plugin are all present
+    for required in ["fedavg", "fedzip", "fedcompress-noscs", "fedcompress", "topk"] {
+        assert!(reg.names().contains(&required), "{required} missing");
+    }
+}
+
+#[test]
+fn unknown_strategy_suggests_closest_registered_name() {
+    let reg = StrategyRegistry::builtin();
+    let cfg = FedConfig::quick("cifar10");
+    for (typo, want) in [
+        ("fedcompres", "fedcompress"),
+        ("fedzipp", "fedzip"),
+        ("topkk", "topk"),
+    ] {
+        let err = reg.build(typo, &cfg).unwrap_err().to_string();
+        assert!(
+            err.contains(&format!("did you mean '{want}'")),
+            "typo {typo}: {err}"
+        );
+    }
+}
+
+// ---------------------------------------------------------------------------
+// per-strategy wire-direction policy (no engine needed)
+// ---------------------------------------------------------------------------
+
+/// Table 1's byte accounting rests on which direction each strategy
+/// compresses and when; assert that policy directly on the plugin
+/// hooks so CI catches a flipped branch without built artifacts.
+#[test]
+fn wire_direction_policy_per_strategy() {
+    use fedcompress::coordinator::strategy::ServerModel;
+
+    let cfg = FedConfig::quick("cifar10");
+    let base = Rng::new(cfg.seed ^ 0xFEDC);
+    let reg = StrategyRegistry::builtin();
+    let mut rng = Rng::new(1);
+    let theta: Vec<f32> = (0..5000).map(|_| rng.normal() * 0.2).collect();
+    let dense = 4 * theta.len();
+    let centroids = CentroidState::init_from_weights(&theta, 16, 32, &mut rng);
+    let model = ServerModel {
+        theta: theta.clone(),
+        centroids: centroids.clone(),
+    };
+    let ctx_at = |round: usize| RoundContext {
+        round,
+        cfg: &cfg,
+        base: &base,
+        compressing: round >= cfg.warmup_rounds,
+        down_compressed: round > cfg.warmup_rounds,
+    };
+    let warmup = ctx_at(0);
+    let late = ctx_at(cfg.warmup_rounds + 2);
+    let up = |s: &dyn fedcompress::coordinator::strategy::FedStrategy,
+              ctx: &RoundContext<'_>| {
+        let mut r = base.fork(42);
+        s.encode_upload(
+            ctx,
+            &UploadInput {
+                client: 0,
+                theta: &theta,
+                centroids: &centroids,
+            },
+            &mut r,
+        )
+        .unwrap()
+        .bytes
+    };
+
+    // FedAvg: dense both directions, always
+    let s = reg.build("fedavg", &cfg).unwrap();
+    assert_eq!(s.encode_download(&late, &model).unwrap().bytes, dense);
+    assert_eq!(up(&*s, &late), dense);
+
+    // FedZip: compressed upstream only; downstream stays dense
+    let s = reg.build("fedzip", &cfg).unwrap();
+    assert_eq!(s.encode_download(&late, &model).unwrap().bytes, dense);
+    assert!(up(&*s, &late) < dense / 3);
+
+    // NoScs: dense on the wire even once compressing (CCR ~ 1)
+    let s = reg.build("fedcompress-noscs", &cfg).unwrap();
+    assert_eq!(s.encode_download(&late, &model).unwrap().bytes, dense);
+    assert_eq!(up(&*s, &late), dense);
+
+    // FedCompress: dense during warmup, compressed both ways after
+    let s = reg.build("fedcompress", &cfg).unwrap();
+    assert_eq!(s.encode_download(&warmup, &model).unwrap().bytes, dense);
+    assert_eq!(up(&*s, &warmup), dense);
+    assert!(s.encode_download(&late, &model).unwrap().bytes < dense / 4);
+    assert!(up(&*s, &late) < dense / 4);
+
+    // TopK: compressed upstream only
+    let s = reg.build("topk", &cfg).unwrap();
+    assert_eq!(s.encode_download(&late, &model).unwrap().bytes, dense);
+    assert!(up(&*s, &late) < dense / 3);
+}
+
+// ---------------------------------------------------------------------------
+// parallel_map-driven encode == serial encode (no engine needed)
+// ---------------------------------------------------------------------------
+
+/// Drive the heaviest `encode_upload` (FedZip: prune + k-means +
+/// Huffman, RNG-consuming) for 8 synthetic clients serially and through
+/// `parallel_map`, and require bit-identical blobs. This is the pure
+/// core of the serial==parallel guarantee: per-client RNG forks make
+/// the encode order-independent.
+#[test]
+fn parallel_encode_is_bit_identical_to_serial() {
+    let cfg = FedConfig::quick("cifar10");
+    let base = Rng::new(cfg.seed ^ 0xFEDC);
+    let reg = StrategyRegistry::builtin();
+
+    for name in ["fedzip", "topk", "fedcompress"] {
+        let strategy = reg.build(name, &cfg).unwrap();
+        let ctx = RoundContext {
+            round: 3,
+            cfg: &cfg,
+            base: &base,
+            compressing: true,
+            down_compressed: true,
+        };
+        // synthetic trained clients: distinct thetas + forked rngs
+        let clients: Vec<(Vec<f32>, CentroidState, Rng)> = (0..8)
+            .map(|k| {
+                let mut rng = base.fork(10_000 + k as u64);
+                let theta: Vec<f32> = (0..4000).map(|_| rng.normal() * 0.2).collect();
+                let cents = CentroidState::init_from_weights(&theta, 16, 32, &mut rng);
+                (theta, cents, rng)
+            })
+            .collect();
+
+        let encode_one = |i: usize| {
+            let (theta, cents, rng) = &clients[i];
+            let mut rng = rng.clone();
+            strategy
+                .encode_upload(
+                    &ctx,
+                    &UploadInput {
+                        client: i,
+                        theta,
+                        centroids: cents,
+                    },
+                    &mut rng,
+                )
+                .unwrap()
+        };
+
+        let serial: Vec<_> = (0..clients.len()).map(encode_one).collect();
+        for workers in [1, 2, 7] {
+            let parallel = parallel_map(clients.len(), workers, encode_one);
+            assert_eq!(serial.len(), parallel.len());
+            for (s, p) in serial.iter().zip(&parallel) {
+                assert_eq!(s.bytes, p.bytes, "{name} bytes diverged at {workers} workers");
+                assert_eq!(s.theta, p.theta, "{name} theta diverged at {workers} workers");
+            }
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// engine-gated: whole-run serial == parallel
+// ---------------------------------------------------------------------------
+
+#[test]
+fn parallel_rounds_equal_serial_rounds() {
+    let Some(engine) = engine() else { return };
+    let cfg = tiny_cfg("cifar10");
+    let data = build_data(&engine, &cfg).unwrap();
+
+    for strategy in ["fedzip", "fedcompress", "topk"] {
+        let mut serial_cfg = cfg.clone();
+        serial_cfg.upload_workers = 1;
+        let serial = run_federated_with_data(&engine, &serial_cfg, strategy, &data).unwrap();
+
+        let mut par_cfg = cfg.clone();
+        par_cfg.upload_workers = 8;
+        let parallel = run_federated_with_data(&engine, &par_cfg, strategy, &data).unwrap();
+
+        assert_eq!(serial.final_theta, parallel.final_theta, "{strategy}");
+        assert_eq!(serial.total_bytes(), parallel.total_bytes(), "{strategy}");
+        for (a, b) in serial.rounds.iter().zip(&parallel.rounds) {
+            assert_eq!(a.accuracy, b.accuracy, "{strategy} round {}", a.round);
+            assert_eq!(a.up_bytes, b.up_bytes, "{strategy} round {}", a.round);
+            assert_eq!(a.down_bytes, b.down_bytes, "{strategy} round {}", a.round);
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// engine-gated: plugin runs reproduce the pre-refactor loop
+// ---------------------------------------------------------------------------
+
+/// Straight-line FedAvg exactly as the pre-refactor monolithic loop
+/// computed it: same RNG fork constants, dense wire, plain aggregation.
+fn reference_fedavg(engine: &Engine, cfg: &FedConfig, data: &FederatedData) -> (Vec<f64>, Vec<f32>) {
+    use fedcompress::client::trainer::{evaluate, train_local};
+    let base = Rng::new(cfg.seed ^ 0xFEDC);
+    let c_max = engine.manifest.c_max;
+    let mut theta = engine.init_theta(&cfg.dataset).unwrap();
+    let mut cents_rng = base.fork(2);
+    let centroids =
+        CentroidState::init_from_weights(&theta, cfg.controller.c_min, c_max, &mut cents_rng);
+
+    let mut accs = Vec::new();
+    for round in 0..cfg.rounds {
+        let mut round_rng = base.fork(100 + round as u64);
+        let selected = select_clients(cfg.clients, cfg.participation, &mut round_rng);
+        let mut thetas = Vec::new();
+        let mut ns = Vec::new();
+        for &k in &selected {
+            let mut client_rng = base.fork(10_000 + (round * cfg.clients + k) as u64);
+            let outcome = train_local(
+                engine,
+                cfg,
+                &data.labeled[k],
+                &data.unlabeled[k],
+                &theta,
+                &centroids,
+                false,
+                &mut client_rng,
+            )
+            .unwrap();
+            ns.push(outcome.n);
+            thetas.push(outcome.theta);
+        }
+        theta = fedavg(&thetas, &ns);
+        let (acc, _) = evaluate(engine, &cfg.dataset, &data.test, &theta).unwrap();
+        accs.push(acc);
+    }
+    (accs, theta)
+}
+
+#[test]
+fn plugin_fedavg_matches_reference_loop() {
+    let Some(engine) = engine() else { return };
+    let cfg = tiny_cfg("cifar10");
+    let data = build_data(&engine, &cfg).unwrap();
+
+    let (ref_accs, ref_theta) = reference_fedavg(&engine, &cfg, &data);
+    let r = run_federated_with_data(&engine, &cfg, "fedavg", &data).unwrap();
+
+    assert_eq!(r.final_theta, ref_theta, "final model diverged");
+    let accs: Vec<f64> = r.rounds.iter().map(|m| m.accuracy).collect();
+    assert_eq!(accs, ref_accs, "per-round accuracy diverged");
+    // dense both directions, byte-exact
+    let p = ref_theta.len();
+    for m in &r.rounds {
+        assert_eq!(m.down_bytes, 4 * p * cfg.clients);
+        assert_eq!(m.up_bytes, 4 * p * cfg.clients);
+    }
+    assert_eq!(r.final_model_bytes, 4 * p);
+}
+
+/// Straight-line FedZip: dense down, prune+kmeans+codec up (the RNG
+/// continues from training into the k-means fit, as before the
+/// refactor), FedAvg of the *decoded* uploads, fork(9_999) final fit.
+fn reference_fedzip(
+    engine: &Engine,
+    cfg: &FedConfig,
+    data: &FederatedData,
+) -> (Vec<f64>, Vec<usize>, Vec<f32>, usize) {
+    use fedcompress::client::trainer::{evaluate, train_local};
+    let base = Rng::new(cfg.seed ^ 0xFEDC);
+    let c_max = engine.manifest.c_max;
+    let mut theta = engine.init_theta(&cfg.dataset).unwrap();
+    let mut cents_rng = base.fork(2);
+    let centroids =
+        CentroidState::init_from_weights(&theta, cfg.controller.c_min, c_max, &mut cents_rng);
+
+    let mut accs = Vec::new();
+    let mut up_bytes = Vec::new();
+    for round in 0..cfg.rounds {
+        let mut round_rng = base.fork(100 + round as u64);
+        let selected = select_clients(cfg.clients, cfg.participation, &mut round_rng);
+        let mut thetas = Vec::new();
+        let mut ns = Vec::new();
+        let mut scores = Vec::new();
+        let mut round_up = 0usize;
+        for &k in &selected {
+            let mut client_rng = base.fork(10_000 + (round * cfg.clients + k) as u64);
+            let outcome = train_local(
+                engine,
+                cfg,
+                &data.labeled[k],
+                &data.unlabeled[k],
+                &theta,
+                &centroids,
+                false,
+                &mut client_rng,
+            )
+            .unwrap();
+            let mut pruned = outcome.theta.clone();
+            magnitude_prune(&mut pruned, cfg.fedzip_keep);
+            let (cb, _, _) = kmeans_1d(&pruned, cfg.fedzip_clusters, 25, &mut client_rng);
+            let (enc, quantized) = quantize_and_encode(&pruned, &cb);
+            round_up += enc.wire_bytes();
+            ns.push(outcome.n);
+            scores.push(outcome.score);
+            thetas.push(quantized);
+        }
+        let _ = weighted_mean(&scores, &ns);
+        theta = fedavg(&thetas, &ns);
+        up_bytes.push(round_up);
+        let (acc, _) = evaluate(engine, &cfg.dataset, &data.test, &theta).unwrap();
+        accs.push(acc);
+    }
+    // final deliverable: fresh prune + k-means fit at fork(9_999)
+    let mut rng = base.fork(9_999);
+    let mut pruned = theta.clone();
+    magnitude_prune(&mut pruned, cfg.fedzip_keep);
+    let (cb, _, _) = kmeans_1d(&pruned, cfg.fedzip_clusters, 25, &mut rng);
+    let (enc, final_theta) = quantize_and_encode(&pruned, &cb);
+    (accs, up_bytes, final_theta, enc.wire_bytes())
+}
+
+#[test]
+fn plugin_fedzip_matches_reference_loop() {
+    let Some(engine) = engine() else { return };
+    let cfg = tiny_cfg("cifar10");
+    let data = build_data(&engine, &cfg).unwrap();
+
+    let (ref_accs, ref_up, ref_theta, ref_bytes) = reference_fedzip(&engine, &cfg, &data);
+    let r = run_federated_with_data(&engine, &cfg, "fedzip", &data).unwrap();
+
+    let accs: Vec<f64> = r.rounds.iter().map(|m| m.accuracy).collect();
+    assert_eq!(accs, ref_accs, "per-round accuracy diverged");
+    let ups: Vec<usize> = r.rounds.iter().map(|m| m.up_bytes).collect();
+    assert_eq!(ups, ref_up, "per-round upload bytes diverged");
+    assert_eq!(r.final_theta, ref_theta, "final model diverged");
+    assert_eq!(r.final_model_bytes, ref_bytes, "final wire size diverged");
+}
+
+// ---------------------------------------------------------------------------
+// topk wire format (no engine needed)
+// ---------------------------------------------------------------------------
+
+#[test]
+fn topk_blob_decodes_to_what_the_driver_aggregates() {
+    let mut rng = Rng::new(77);
+    let theta: Vec<f32> = (0..6000).map(|_| rng.normal() * 0.3).collect();
+    let (bytes, pruned) = encode_topk(&theta, 0.15);
+    assert_eq!(decode_topk(&bytes).unwrap(), pruned);
+    // survivors are exactly the top-|w| fraction
+    let kept = pruned.iter().filter(|w| **w != 0.0).count();
+    assert!((890..=910).contains(&kept), "{kept}");
+    let min_kept = pruned
+        .iter()
+        .filter(|w| **w != 0.0)
+        .map(|w| w.abs())
+        .fold(f32::MAX, f32::min);
+    let max_dropped = theta
+        .iter()
+        .zip(&pruned)
+        .filter(|(_, p)| **p == 0.0)
+        .map(|(t, _)| t.abs())
+        .fold(0.0f32, f32::max);
+    assert!(min_kept >= max_dropped);
+}

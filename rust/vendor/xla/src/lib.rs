@@ -1,0 +1,239 @@
+//! API-compatible stand-in for the `xla` PJRT binding crate.
+//!
+//! The fedcompress coordinator talks to XLA through a narrow surface:
+//! literal construction/conversion, HLO-text loading, compilation, and
+//! execution. This crate implements the *literal* half functionally in
+//! pure rust (so conversion code and its tests run everywhere) and
+//! stubs the *runtime* half: `PjRtClient::cpu()` reports that no native
+//! PJRT runtime is linked. Since every engine-dependent test and driver
+//! first checks that the AOT artifacts exist, the stub keeps the whole
+//! workspace building and testable on machines without an XLA
+//! toolchain. Deployments with the real binding replace the `vendor/`
+//! path dependency in `Cargo.toml`.
+
+use std::fmt;
+
+const STUB_MSG: &str = "xla vendor stub: no native PJRT runtime is linked into this build \
+     (replace the vendor/xla path dependency with the real xla binding)";
+
+#[derive(Debug)]
+pub enum Error {
+    /// The native runtime is not available in this build.
+    Unavailable(&'static str),
+    /// Literal shape/dtype misuse.
+    Literal(String),
+    /// I/O while loading an HLO artifact.
+    Io(std::io::Error),
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            Error::Unavailable(m) => write!(f, "{m}"),
+            Error::Literal(m) => write!(f, "literal error: {m}"),
+            Error::Io(e) => write!(f, "hlo artifact io error: {e}"),
+        }
+    }
+}
+
+impl std::error::Error for Error {}
+
+pub type Result<T> = std::result::Result<T, Error>;
+
+#[derive(Clone, Debug)]
+enum Data {
+    F32(Vec<f32>),
+    I32(Vec<i32>),
+    Tuple(Vec<Literal>),
+}
+
+/// Element types a literal can carry. Sealed to the two dtypes the
+/// fedcompress artifacts use.
+pub trait Element: Copy + 'static {
+    fn wrap(v: Vec<Self>) -> Data;
+    fn unwrap(d: &Data) -> Option<Vec<Self>>;
+}
+
+impl Element for f32 {
+    fn wrap(v: Vec<Self>) -> Data {
+        Data::F32(v)
+    }
+    fn unwrap(d: &Data) -> Option<Vec<Self>> {
+        match d {
+            Data::F32(v) => Some(v.clone()),
+            _ => None,
+        }
+    }
+}
+
+impl Element for i32 {
+    fn wrap(v: Vec<Self>) -> Data {
+        Data::I32(v)
+    }
+    fn unwrap(d: &Data) -> Option<Vec<Self>> {
+        match d {
+            Data::I32(v) => Some(v.clone()),
+            _ => None,
+        }
+    }
+}
+
+/// A host-side tensor value: element buffer + dimensions.
+#[derive(Clone, Debug)]
+pub struct Literal {
+    data: Data,
+    dims: Vec<i64>,
+}
+
+impl Literal {
+    pub fn scalar<T: Element>(v: T) -> Literal {
+        Literal {
+            data: T::wrap(vec![v]),
+            dims: Vec::new(),
+        }
+    }
+
+    pub fn vec1<T: Element>(v: &[T]) -> Literal {
+        Literal {
+            data: T::wrap(v.to_vec()),
+            dims: vec![v.len() as i64],
+        }
+    }
+
+    fn element_count(&self) -> usize {
+        match &self.data {
+            Data::F32(v) => v.len(),
+            Data::I32(v) => v.len(),
+            Data::Tuple(_) => 0,
+        }
+    }
+
+    pub fn reshape(&self, dims: &[i64]) -> Result<Literal> {
+        let n: i64 = dims.iter().product();
+        if n as usize != self.element_count() {
+            return Err(Error::Literal(format!(
+                "cannot reshape {} elements to {dims:?}",
+                self.element_count()
+            )));
+        }
+        Ok(Literal {
+            data: self.data.clone(),
+            dims: dims.to_vec(),
+        })
+    }
+
+    pub fn to_vec<T: Element>(&self) -> Result<Vec<T>> {
+        T::unwrap(&self.data)
+            .ok_or_else(|| Error::Literal("dtype mismatch in to_vec".to_string()))
+    }
+
+    pub fn dims(&self) -> &[i64] {
+        &self.dims
+    }
+
+    /// Split a tuple literal into its components.
+    pub fn decompose_tuple(&mut self) -> Result<Vec<Literal>> {
+        match &mut self.data {
+            Data::Tuple(v) => Ok(std::mem::take(v)),
+            _ => Err(Error::Literal("not a tuple literal".to_string())),
+        }
+    }
+}
+
+/// Parsed HLO module (text is retained verbatim; the stub never
+/// compiles it).
+pub struct HloModuleProto {
+    _text: String,
+}
+
+impl HloModuleProto {
+    pub fn from_text_file(path: &str) -> Result<HloModuleProto> {
+        let text = std::fs::read_to_string(path).map_err(Error::Io)?;
+        Ok(HloModuleProto { _text: text })
+    }
+}
+
+pub struct XlaComputation {
+    _priv: (),
+}
+
+impl XlaComputation {
+    pub fn from_proto(_proto: &HloModuleProto) -> XlaComputation {
+        XlaComputation { _priv: () }
+    }
+}
+
+pub struct PjRtClient {
+    _priv: (),
+}
+
+impl PjRtClient {
+    /// Stand up the CPU PJRT client. Always fails in the stub build.
+    pub fn cpu() -> Result<PjRtClient> {
+        Err(Error::Unavailable(STUB_MSG))
+    }
+
+    pub fn platform_name(&self) -> String {
+        "stub".to_string()
+    }
+
+    pub fn device_count(&self) -> usize {
+        0
+    }
+
+    pub fn compile(&self, _comp: &XlaComputation) -> Result<PjRtLoadedExecutable> {
+        Err(Error::Unavailable(STUB_MSG))
+    }
+}
+
+pub struct PjRtLoadedExecutable {
+    _priv: (),
+}
+
+impl PjRtLoadedExecutable {
+    pub fn execute<L>(&self, _args: &[Literal]) -> Result<Vec<Vec<PjRtBuffer>>> {
+        Err(Error::Unavailable(STUB_MSG))
+    }
+}
+
+pub struct PjRtBuffer {
+    _priv: (),
+}
+
+impl PjRtBuffer {
+    pub fn to_literal_sync(&self) -> Result<Literal> {
+        Err(Error::Unavailable(STUB_MSG))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn literal_roundtrip_f32() {
+        let l = Literal::vec1(&[1.0f32, 2.0, 3.0, 4.0]);
+        let r = l.reshape(&[2, 2]).unwrap();
+        assert_eq!(r.dims(), &[2, 2]);
+        assert_eq!(r.to_vec::<f32>().unwrap(), vec![1.0, 2.0, 3.0, 4.0]);
+        assert!(r.to_vec::<i32>().is_err());
+    }
+
+    #[test]
+    fn scalar_has_no_dims() {
+        let l = Literal::scalar(7i32);
+        assert!(l.dims().is_empty());
+        assert_eq!(l.to_vec::<i32>().unwrap(), vec![7]);
+    }
+
+    #[test]
+    fn reshape_checks_element_count() {
+        let l = Literal::vec1(&[1.0f32, 2.0, 3.0]);
+        assert!(l.reshape(&[2, 2]).is_err());
+    }
+
+    #[test]
+    fn runtime_is_unavailable() {
+        assert!(PjRtClient::cpu().is_err());
+    }
+}
