@@ -163,7 +163,8 @@ impl FedStrategy for FedCompress {
         // --- server-side self-compression ---------------------------------
         let mut scs_rng = env.base.fork(50_000 + ctx.round as u64);
         if crate::util::logging::enabled(crate::util::logging::Level::Debug) {
-            let (pre_acc, _) = evaluate(env.engine, &env.cfg.dataset, &env.data.test, &model.theta)?;
+            let (pre_acc, _) =
+                evaluate(env.engine, &env.cfg.dataset, &env.data.test, &model.theta)?;
             crate::debug!("round {}: pre-SCS aggregated acc={pre_acc:.4}", ctx.round);
         }
         let teacher = model.theta.clone();

@@ -118,7 +118,9 @@ impl StrategyRegistry {
         }
         let known = self.names().join(", ");
         match self.suggest(&want) {
-            Some(s) => bail!("unknown strategy '{name}' — did you mean '{s}'? (registered: {known})"),
+            Some(s) => {
+                bail!("unknown strategy '{name}' — did you mean '{s}'? (registered: {known})")
+            }
             None => bail!("unknown strategy '{name}' (registered: {known})"),
         }
     }

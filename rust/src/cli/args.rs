@@ -18,6 +18,7 @@ pub enum ParsedCommand {
     Table1,
     Table2,
     Figure2,
+    Fleet,
     AblateC,
     Inspect,
     Help,
@@ -67,6 +68,7 @@ impl Args {
             "table1" => ParsedCommand::Table1,
             "table2" => ParsedCommand::Table2,
             "figure2" => ParsedCommand::Figure2,
+            "fleet" => ParsedCommand::Fleet,
             "ablate-c" => ParsedCommand::AblateC,
             "inspect" => ParsedCommand::Inspect,
             "help" | "--help" | "-h" => ParsedCommand::Help,
@@ -129,6 +131,18 @@ mod tests {
         assert!(Args::parse(&v(&["train", "--set", "noequals"])).is_err());
         let a = Args::parse(&v(&["frobnicate"])).unwrap();
         assert!(a.command().is_err());
+    }
+
+    #[test]
+    fn fleet_command_and_flags_parse() {
+        let a = Args::parse(&v(&[
+            "fleet", "--fleet", "mobile", "--dropout", "0.1", "--deadline-s", "30",
+        ]))
+        .unwrap();
+        assert_eq!(a.command().unwrap(), ParsedCommand::Fleet);
+        assert_eq!(a.flag("fleet"), Some("mobile"));
+        assert_eq!(a.flag("dropout"), Some("0.1"));
+        assert_eq!(a.flag("deadline-s"), Some("30"));
     }
 
     #[test]

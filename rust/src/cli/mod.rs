@@ -19,6 +19,8 @@ COMMANDS:
     table1      reproduce Table 1 (dAcc/CCR/MCR across strategies)
     table2      reproduce Table 2 (edge inference speedups)
     figure2     reproduce Figure 2 (score vs accuracy correlation)
+    fleet       strategy x fleet scenario table: rounds- and simulated
+                time-to-accuracy under ideal/mobile/hostile fleets
     ablate-c    ablation: dynamic-C controller vs fixed C
     inspect     print manifest / model / artifact information
     help        show this message
@@ -36,9 +38,18 @@ COMMON OPTIONS:
     --datasets a,b,c        subset for table1
     --clusters <n>          deployed cluster count for table2
 
+FLEET SIMULATION (train, fleet, figure2, ablate-c):
+    --fleet <name>          fleet preset: ideal|mobile|hostile
+                            (default ideal; `fleet` runs all three)
+    --dropout <p>           extra per-round client dropout prob in [0,1)
+    --deadline-s <s>        simulated round reporting deadline, seconds
+                            (0 = none; late clients are cut)
+
 EXAMPLES:
     fedcompress train --dataset cifar10 --strategy fedcompress --preset quick
     fedcompress train --strategy list
+    fedcompress train --fleet mobile --dropout 0.1 --deadline-s 60
     fedcompress table1 --preset quick --datasets cifar10,voxforge
+    fedcompress fleet --dataset cifar10 --preset quick --dropout 0.1
     fedcompress figure2 --dataset speechcommands --out fig2.csv
 ";

@@ -72,8 +72,12 @@ pub fn delta_decode(prev: &[u32], blob: &[u8], c: usize) -> Result<Vec<u32>> {
     };
     let mut pos = 0usize;
     for i in 0..n_changes {
-        let gap = r.read(gap_bits).ok_or_else(|| anyhow::anyhow!("truncated gaps"))? as usize;
-        let val = r.read(idx_bits).ok_or_else(|| anyhow::anyhow!("truncated values"))?;
+        let gap = r
+            .read(gap_bits)
+            .ok_or_else(|| anyhow::anyhow!("truncated gaps"))? as usize;
+        let val = r
+            .read(idx_bits)
+            .ok_or_else(|| anyhow::anyhow!("truncated values"))?;
         pos = if i == 0 { gap } else { pos + gap };
         if pos >= cur.len() {
             bail!("delta position {pos} out of range");

@@ -8,6 +8,7 @@ use std::path::Path;
 use anyhow::{bail, Context, Result};
 
 use crate::clustering::ControllerConfig;
+use crate::sim::{FleetConfig, FleetPreset};
 use crate::util::json::Json;
 
 #[derive(Clone, Debug)]
@@ -54,6 +55,9 @@ pub struct FedConfig {
     pub topk_keep: f64,
     /// worker threads for the parallel client encode step (0 = auto)
     pub upload_workers: usize,
+    /// fleet simulation knobs: preset, extra dropout, round deadline.
+    /// The default is the ideal fleet — byte-identical to pre-sim runs.
+    pub fleet: FleetConfig,
     pub seed: u64,
 }
 
@@ -83,6 +87,7 @@ impl FedConfig {
             fedzip_keep: 0.6,
             topk_keep: 0.1,
             upload_workers: 0,
+            fleet: FleetConfig::default(),
             seed: 42,
         }
     }
@@ -128,6 +133,12 @@ impl FedConfig {
         if !(self.topk_keep > 0.0 && self.topk_keep <= 1.0) {
             bail!("topk_keep must be in (0, 1]");
         }
+        if !(0.0..1.0).contains(&self.fleet.dropout) {
+            bail!("fleet dropout must be in [0, 1)");
+        }
+        if !(self.fleet.deadline_s >= 0.0 && self.fleet.deadline_s.is_finite()) {
+            bail!("fleet deadline_s must be finite and >= 0");
+        }
         Ok(())
     }
 
@@ -167,6 +178,9 @@ impl FedConfig {
             "workers" | "upload_workers" => {
                 self.upload_workers = value.parse().with_context(e)?
             }
+            "fleet" => self.fleet.preset = FleetPreset::from_name(value)?,
+            "dropout" => self.fleet.dropout = value.parse().with_context(e)?,
+            "deadline_s" => self.fleet.deadline_s = value.parse().with_context(e)?,
             "seed" => self.seed = value.parse().with_context(e)?,
             other => bail!("unknown config key '{other}'"),
         }
@@ -235,6 +249,26 @@ mod tests {
         c.topk_keep = 0.0;
         assert!(c.validate().is_err());
         c.topk_keep = 1.5;
+        assert!(c.validate().is_err());
+    }
+
+    #[test]
+    fn fleet_overrides_and_validation() {
+        let mut c = FedConfig::quick("cifar10");
+        assert!(c.fleet.is_ideal(), "default fleet must be the ideal one");
+        c.set("fleet", "mobile").unwrap();
+        c.set("dropout", "0.1").unwrap();
+        c.set("deadline_s", "30").unwrap();
+        assert_eq!(c.fleet.preset, FleetPreset::Mobile);
+        assert_eq!(c.fleet.dropout, 0.1);
+        assert_eq!(c.fleet.deadline_s, 30.0);
+        c.validate().unwrap();
+        let err = c.set("fleet", "marsnet").unwrap_err().to_string();
+        assert!(err.contains("marsnet"), "{err}");
+        c.fleet.dropout = 1.0;
+        assert!(c.validate().is_err());
+        c.fleet.dropout = 0.1;
+        c.fleet.deadline_s = -1.0;
         assert!(c.validate().is_err());
     }
 

@@ -207,4 +207,61 @@ mod tests {
         assert_eq!(s.mask.iter().filter(|&&m| m == 1.0).count(), 12);
         assert_eq!(s.mu, c.mu);
     }
+
+    /// The resume contract end-to-end: everything a restarted run needs
+    /// — round cursor, theta, the full centroid state (mu, mask,
+    /// active), controller score history — survives save -> load
+    /// bit-exactly, so resuming from the file is equivalent to never
+    /// having stopped.
+    #[test]
+    fn save_load_resume_equivalence() {
+        let mut rng = Rng::new(9);
+        let theta: Vec<f32> = (0..800).map(|_| rng.normal() * 0.3).collect();
+        let mut cents = CentroidState::init_from_weights(&theta, 6, 24, &mut rng);
+        cents.grow_to(10); // a mid-run controller growth, mask half-set
+        let scores = vec![1.5, 2.25, 2.25, 3.0];
+
+        let dir = std::env::temp_dir().join("fedcompress_ckpt_resume_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("resume.ckpt");
+        Checkpoint::from_state(4, &theta, &cents, &scores).save(&path).unwrap();
+
+        let resumed = Checkpoint::load(&path).unwrap();
+        assert_eq!(resumed.round, 4);
+        assert_eq!(resumed.theta, theta);
+        assert_eq!(resumed.scores, scores);
+        let rc = resumed.centroid_state();
+        assert_eq!(rc.mu, cents.mu);
+        assert_eq!(rc.mask, cents.mask);
+        assert_eq!(rc.active, cents.active);
+        assert_eq!(rc.c_max, cents.c_max);
+
+        // saving the resumed state reproduces the file byte-for-byte
+        let again = Checkpoint::from_state(4, &theta, &cents, &scores);
+        assert_eq!(resumed.to_bytes(), again.to_bytes());
+    }
+
+    #[test]
+    fn unsupported_version_is_rejected() {
+        let c = demo();
+        let mut bytes = c.to_bytes();
+        // bump the version field (bytes 4..8) and re-stamp the checksum
+        bytes[4] = 99;
+        let body_len = bytes.len() - 8;
+        let ck = fnv1a(&bytes[..body_len]);
+        bytes[body_len..].copy_from_slice(&ck.to_le_bytes());
+        let err = Checkpoint::from_bytes(&bytes).unwrap_err().to_string();
+        assert!(err.contains("version"), "{err}");
+    }
+
+    #[test]
+    fn empty_scores_and_zero_round_round_trip() {
+        let mut rng = Rng::new(2);
+        let theta: Vec<f32> = (0..32).map(|_| rng.normal()).collect();
+        let cents = CentroidState::init_from_weights(&theta, 4, 8, &mut rng);
+        let c = Checkpoint::from_state(0, &theta, &cents, &[]);
+        let d = Checkpoint::from_bytes(&c.to_bytes()).unwrap();
+        assert_eq!(c, d);
+        assert!(d.scores.is_empty());
+    }
 }

@@ -1,9 +1,42 @@
 //! Structured event log for federated runs — the observability layer a
 //! deployed coordinator needs: every dispatch, upload, aggregation, SCS
-//! pass and controller decision as a typed record, queryable by round
-//! and serializable to JSON lines.
+//! pass, controller decision, dropout and deadline cut as a typed
+//! record, queryable by round and serializable to/from JSON lines.
+
+use anyhow::{bail, Result};
 
 use crate::util::json::Json;
+
+/// Where in the round a client was lost (see `sim::ClientFate`).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum DropPhase {
+    /// Lost before local training started.
+    BeforeTrain,
+    /// Lost between training and upload — the client's local work never
+    /// reached the server (and is elided by the simulation).
+    BeforeUpload,
+}
+
+impl DropPhase {
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            DropPhase::BeforeTrain => "train",
+            DropPhase::BeforeUpload => "upload",
+        }
+    }
+}
+
+impl std::str::FromStr for DropPhase {
+    type Err = anyhow::Error;
+
+    fn from_str(s: &str) -> Result<DropPhase> {
+        match s {
+            "train" => Ok(DropPhase::BeforeTrain),
+            "upload" => Ok(DropPhase::BeforeUpload),
+            other => bail!("unknown drop phase '{other}'"),
+        }
+    }
+}
 
 #[derive(Clone, Debug, PartialEq)]
 pub enum Event {
@@ -43,6 +76,19 @@ pub enum Event {
         accuracy: f64,
         loss: f64,
     },
+    /// A selected client was lost to a fleet fault this round.
+    Dropout {
+        round: usize,
+        client: usize,
+        phase: DropPhase,
+    },
+    /// A client missed the reporting deadline; `sim_s` is the simulated
+    /// completion time it would have needed.
+    Deadline {
+        round: usize,
+        client: usize,
+        sim_s: f64,
+    },
 }
 
 impl Event {
@@ -54,7 +100,9 @@ impl Event {
             | Event::Aggregated { round, .. }
             | Event::SelfCompress { round, .. }
             | Event::ControllerGrow { round, .. }
-            | Event::Evaluated { round, .. } => *round,
+            | Event::Evaluated { round, .. }
+            | Event::Dropout { round, .. }
+            | Event::Deadline { round, .. } => *round,
         }
     }
 
@@ -67,6 +115,8 @@ impl Event {
             Event::SelfCompress { .. } => "self_compress",
             Event::ControllerGrow { .. } => "controller_grow",
             Event::Evaluated { .. } => "evaluated",
+            Event::Dropout { .. } => "dropout",
+            Event::Deadline { .. } => "deadline",
         }
     }
 
@@ -116,8 +166,72 @@ impl Event {
                 pairs.push(("accuracy", Json::num(*accuracy)));
                 pairs.push(("loss", Json::num(*loss)));
             }
+            Event::Dropout { client, phase, .. } => {
+                pairs.push(("client", Json::from(*client)));
+                pairs.push(("phase", Json::str(phase.as_str())));
+            }
+            Event::Deadline { client, sim_s, .. } => {
+                pairs.push(("client", Json::from(*client)));
+                pairs.push(("sim_s", Json::num(*sim_s)));
+            }
         }
         Json::obj(pairs)
+    }
+
+    /// Inverse of [`Event::to_json`]: rebuild the typed event from its
+    /// JSON record (the observability consumers' ingestion path).
+    pub fn from_json(j: &Json) -> Result<Event> {
+        let kind = j.get("kind")?.as_str()?;
+        let round = j.get("round")?.as_usize()?;
+        Ok(match kind {
+            "round_start" => Event::RoundStart {
+                round,
+                clusters: j.get("clusters")?.as_usize()?,
+            },
+            "dispatch" => Event::Dispatch {
+                round,
+                client: j.get("client")?.as_usize()?,
+                bytes: j.get("bytes")?.as_usize()?,
+                compressed: j.get("compressed")?.as_bool()?,
+            },
+            "upload" => Event::Upload {
+                round,
+                client: j.get("client")?.as_usize()?,
+                bytes: j.get("bytes")?.as_usize()?,
+                score: j.get("score")?.as_f64()?,
+                mean_ce: j.get("mean_ce")?.as_f64()?,
+            },
+            "aggregated" => Event::Aggregated {
+                round,
+                clients: j.get("clients")?.as_usize()?,
+                score: j.get("score")?.as_f64()?,
+            },
+            "self_compress" => Event::SelfCompress {
+                round,
+                mean_kl: j.get("mean_kl")?.as_f64()?,
+            },
+            "controller_grow" => Event::ControllerGrow {
+                round,
+                from: j.get("from")?.as_usize()?,
+                to: j.get("to")?.as_usize()?,
+            },
+            "evaluated" => Event::Evaluated {
+                round,
+                accuracy: j.get("accuracy")?.as_f64()?,
+                loss: j.get("loss")?.as_f64()?,
+            },
+            "dropout" => Event::Dropout {
+                round,
+                client: j.get("client")?.as_usize()?,
+                phase: j.get("phase")?.as_str()?.parse()?,
+            },
+            "deadline" => Event::Deadline {
+                round,
+                client: j.get("client")?.as_usize()?,
+                sim_s: j.get("sim_s")?.as_f64()?,
+            },
+            other => bail!("unknown event kind '{other}'"),
+        })
     }
 }
 
@@ -165,6 +279,16 @@ impl EventLog {
         }
         s
     }
+
+    /// Parse a JSON-lines dump back into a typed log (inverse of
+    /// [`EventLog::to_jsonl`]; blank lines are skipped).
+    pub fn from_jsonl(text: &str) -> Result<EventLog> {
+        let mut log = EventLog::new();
+        for line in text.lines().filter(|l| !l.trim().is_empty()) {
+            log.push(Event::from_json(&Json::parse(line)?)?);
+        }
+        Ok(log)
+    }
 }
 
 #[cfg(test)]
@@ -174,7 +298,10 @@ mod tests {
 
     fn demo_log() -> EventLog {
         let mut log = EventLog::new();
-        log.push(Event::RoundStart { round: 0, clusters: 16 });
+        log.push(Event::RoundStart {
+            round: 0,
+            clusters: 16,
+        });
         log.push(Event::Dispatch {
             round: 0,
             client: 2,
@@ -221,5 +348,74 @@ mod tests {
         let j = e.to_json();
         assert_eq!(j.get("from").unwrap().as_usize().unwrap(), 16);
         assert_eq!(j.get("to").unwrap().as_usize().unwrap(), 24);
+    }
+
+    /// One event of every variant, with awkward float payloads.
+    fn full_log() -> EventLog {
+        let mut log = demo_log();
+        log.push(Event::Aggregated {
+            round: 1,
+            clients: 3,
+            score: 4.062499999999999,
+        });
+        log.push(Event::SelfCompress {
+            round: 1,
+            mean_kl: 0.001953125,
+        });
+        log.push(Event::Evaluated {
+            round: 1,
+            accuracy: 0.7182818284590452,
+            loss: 1.25e-3,
+        });
+        log.push(Event::Dropout {
+            round: 2,
+            client: 5,
+            phase: DropPhase::BeforeTrain,
+        });
+        log.push(Event::Dropout {
+            round: 2,
+            client: 6,
+            phase: DropPhase::BeforeUpload,
+        });
+        log.push(Event::Deadline {
+            round: 2,
+            client: 7,
+            sim_s: 31.4159,
+        });
+        log
+    }
+
+    #[test]
+    fn jsonl_round_trips_every_variant() {
+        let log = full_log();
+        let restored = EventLog::from_jsonl(&log.to_jsonl()).unwrap();
+        assert_eq!(restored.all(), log.all());
+        // and once more through text, to prove the fixpoint
+        assert_eq!(restored.to_jsonl(), log.to_jsonl());
+    }
+
+    #[test]
+    fn dropout_and_deadline_serialize_their_fields() {
+        let log = full_log();
+        assert_eq!(log.of_kind("dropout").count(), 2);
+        let j = log.of_kind("dropout").next().unwrap().to_json();
+        assert_eq!(j.get("phase").unwrap().as_str().unwrap(), "train");
+        assert_eq!(j.get("client").unwrap().as_usize().unwrap(), 5);
+        let j = log.of_kind("deadline").next().unwrap().to_json();
+        assert!((j.get("sim_s").unwrap().as_f64().unwrap() - 31.4159).abs() < 1e-12);
+        // phase strings parse back, garbage does not
+        assert_eq!("upload".parse::<DropPhase>().unwrap(), DropPhase::BeforeUpload);
+        assert!("sideways".parse::<DropPhase>().is_err());
+    }
+
+    #[test]
+    fn malformed_jsonl_is_rejected() {
+        assert!(EventLog::from_jsonl("{\"kind\":\"upload\",\"round\":0}").is_err());
+        assert!(EventLog::from_jsonl("{\"kind\":\"martian\",\"round\":0}").is_err());
+        assert!(EventLog::from_jsonl("not json at all").is_err());
+        // blank lines are fine
+        let log = demo_log();
+        let padded = format!("\n{}\n\n", log.to_jsonl());
+        assert_eq!(EventLog::from_jsonl(&padded).unwrap().len(), log.len());
     }
 }

@@ -20,6 +20,12 @@ pub struct RoundMetrics {
     pub up_bytes: usize,
     pub down_bytes: usize,
     pub wall_ms: f64,
+    /// simulated round wall-clock under the configured fleet, ms
+    pub round_sim_ms: f64,
+    /// selected clients that ran with a straggler slowdown
+    pub stragglers: usize,
+    /// selected clients lost this round (faults + deadline cuts)
+    pub dropped: usize,
 }
 
 #[derive(Clone, Debug)]
@@ -58,6 +64,24 @@ impl RunResult {
     pub fn score_trace(&self) -> Vec<f64> {
         self.rounds.iter().map(|r| r.score).collect()
     }
+
+    /// Total simulated training time under the configured fleet, ms.
+    pub fn total_sim_ms(&self) -> f64 {
+        self.rounds.iter().map(|r| r.round_sim_ms).sum()
+    }
+
+    /// First round whose evaluated accuracy reached `target`, with the
+    /// cumulative simulated ms spent up to and including it.
+    pub fn time_to_accuracy(&self, target: f64) -> Option<(usize, f64)> {
+        let mut sim_ms = 0.0;
+        for r in &self.rounds {
+            sim_ms += r.round_sim_ms;
+            if r.accuracy >= target {
+                return Some((r.round, sim_ms));
+            }
+        }
+        None
+    }
 }
 
 #[cfg(test)]
@@ -84,5 +108,54 @@ mod tests {
             },
         };
         assert!((r.mcr() - 4.0).abs() < 1e-12);
+    }
+
+    fn round(round: usize, accuracy: f64, round_sim_ms: f64) -> RoundMetrics {
+        RoundMetrics {
+            round,
+            accuracy,
+            test_loss: 1.0,
+            score: 1.0,
+            client_mean_ce: 1.0,
+            clusters: 8,
+            up_bytes: 100,
+            down_bytes: 100,
+            wall_ms: 1.0,
+            round_sim_ms,
+            stragglers: 0,
+            dropped: 0,
+        }
+    }
+
+    #[test]
+    fn sim_time_to_accuracy() {
+        let rounds = vec![
+            round(0, 0.3, 1000.0),
+            round(1, 0.55, 2000.0),
+            round(2, 0.5, 500.0),
+            round(3, 0.8, 750.0),
+        ];
+        let r = RunResult {
+            strategy: "fedavg",
+            dataset: "cifar10".into(),
+            rounds,
+            final_theta: vec![],
+            final_accuracy: 0.8,
+            final_model_bytes: 1,
+            dense_model_bytes: 4,
+            ledger: CommLedger::new(),
+            events: EventLog::new(),
+            final_centroids: CentroidState {
+                mu: vec![0.0; 4],
+                mask: vec![1.0; 4],
+                c_max: 4,
+                active: 4,
+            },
+        };
+        assert_eq!(r.total_sim_ms(), 4250.0);
+        // first crossing wins, even if accuracy later dips
+        assert_eq!(r.time_to_accuracy(0.5), Some((1, 3000.0)));
+        assert_eq!(r.time_to_accuracy(0.8), Some((3, 4250.0)));
+        assert_eq!(r.time_to_accuracy(0.9), None);
     }
 }

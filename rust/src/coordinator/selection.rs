@@ -1,12 +1,35 @@
 //! Per-round client selection (paper: "randomly select K clients").
 
+use std::fmt;
+
 use crate::util::rng::Rng;
 
+/// Typed invariant violation: a round cannot select from an empty
+/// client pool. Debug builds assert; release builds surface the typed
+/// error (the same contract as `WireBlob::ensure_param_count`).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct EmptyClientPool;
+
+impl fmt::Display for EmptyClientPool {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "cannot select clients from an empty pool (m = 0)")
+    }
+}
+
+impl std::error::Error for EmptyClientPool {}
+
 /// Select ceil(participation * m) distinct clients for a round.
-pub fn select_clients(m: usize, participation: f64, rng: &mut Rng) -> Vec<usize> {
-    assert!(m > 0);
+pub fn select_clients(
+    m: usize,
+    participation: f64,
+    rng: &mut Rng,
+) -> Result<Vec<usize>, EmptyClientPool> {
+    debug_assert!(m > 0, "cannot select clients from an empty pool");
+    if m == 0 {
+        return Err(EmptyClientPool);
+    }
     let k = ((m as f64 * participation).ceil() as usize).clamp(1, m);
-    rng.choose(m, k)
+    Ok(rng.choose(m, k))
 }
 
 #[cfg(test)]
@@ -16,31 +39,51 @@ mod tests {
     #[test]
     fn full_participation_selects_everyone() {
         let mut rng = Rng::new(1);
-        let s = select_clients(20, 1.0, &mut rng);
+        let s = select_clients(20, 1.0, &mut rng).unwrap();
         assert_eq!(s, (0..20).collect::<Vec<_>>());
     }
 
     #[test]
     fn partial_participation_counts() {
         let mut rng = Rng::new(2);
-        let s = select_clients(20, 0.25, &mut rng);
+        let s = select_clients(20, 0.25, &mut rng).unwrap();
         assert_eq!(s.len(), 5);
+        // distinctness: sort first — dedup alone only removes *adjacent*
+        // duplicates, which an unsorted selection could hide
         let mut d = s.clone();
+        d.sort_unstable();
         d.dedup();
         assert_eq!(d.len(), 5);
+        // and every pick is a valid client id
+        assert!(s.iter().all(|&k| k < 20));
     }
 
     #[test]
     fn at_least_one_client() {
         let mut rng = Rng::new(3);
-        assert_eq!(select_clients(10, 0.01, &mut rng).len(), 1);
+        assert_eq!(select_clients(10, 0.01, &mut rng).unwrap().len(), 1);
     }
 
     #[test]
     fn varies_across_rounds() {
         let mut rng = Rng::new(4);
-        let a = select_clients(50, 0.2, &mut rng);
-        let b = select_clients(50, 0.2, &mut rng);
+        let a = select_clients(50, 0.2, &mut rng).unwrap();
+        let b = select_clients(50, 0.2, &mut rng).unwrap();
         assert_ne!(a, b);
+    }
+
+    #[test]
+    fn empty_pool_is_a_typed_error() {
+        let mut rng = Rng::new(5);
+        if cfg!(debug_assertions) {
+            // debug builds assert loudly
+            let r = std::panic::catch_unwind(move || select_clients(0, 1.0, &mut rng));
+            assert!(r.is_err(), "debug_assert should fire on m = 0");
+        } else {
+            // release builds surface the typed error
+            let e = select_clients(0, 1.0, &mut rng).unwrap_err();
+            assert_eq!(e, EmptyClientPool);
+            assert!(e.to_string().contains("empty pool"));
+        }
     }
 }

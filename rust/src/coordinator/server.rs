@@ -21,10 +21,12 @@
 
 use anyhow::Result;
 
-use super::events::{Event, EventLog};
+use super::events::{DropPhase, Event, EventLog};
 use super::metrics::{RoundMetrics, RunResult};
 use super::selection::select_clients;
-use super::strategy::{ClientUpdate, FedStrategy, RoundContext, ServerEnv, ServerModel, UploadInput};
+use super::strategy::{
+    ClientUpdate, FedStrategy, RoundContext, ServerEnv, ServerModel, UploadInput,
+};
 use crate::baselines::registry::StrategyRegistry;
 use crate::baselines::wire::WireBlob;
 use crate::client::trainer::{evaluate, train_local, ClientOutcome};
@@ -34,7 +36,9 @@ use crate::compression::codec::dense_bytes;
 use crate::config::FedConfig;
 use crate::data::{ood, partition::sigma_to_alpha, partition_dirichlet, synth, Dataset};
 use crate::info;
+use crate::models::flops::total_flops;
 use crate::runtime::Engine;
+use crate::sim::{ClientFate, FleetSim};
 use crate::util::rng::Rng;
 use crate::util::threadpool::{default_workers, parallel_map};
 
@@ -77,13 +81,19 @@ pub fn build_data(engine: &Engine, cfg: &FedConfig) -> Result<FederatedData> {
     })
 }
 
-/// One trained client awaiting upload encoding: the training outcome
-/// plus the client's RNG positioned exactly where training left it.
+/// One trained client awaiting upload encoding: the training outcome,
+/// the client's RNG positioned exactly where training left it, and the
+/// straggler slowdown the fault schedule assigned for this round.
 struct TrainedClient {
     client: usize,
     outcome: ClientOutcome,
     rng: Rng,
+    slowdown: f64,
 }
+
+/// Training FLOPs per sample per epoch: forward + backward is ~3x the
+/// forward pass (the standard estimate the fleet clock runs on).
+const TRAIN_FLOPS_FACTOR: f64 = 3.0;
 
 /// Run one full federated training experiment for a registered
 /// strategy name.
@@ -115,9 +125,19 @@ pub fn run_with_strategy(
     data: &FederatedData,
 ) -> Result<RunResult> {
     let base = Rng::new(cfg.seed ^ 0xFEDC);
-    let p = engine.manifest.dataset(&cfg.dataset)?.spec.param_count;
+    let spec = &engine.manifest.dataset(&cfg.dataset)?.spec;
+    let p = spec.param_count;
     let c_max = engine.manifest.c_max;
     let sname = strategy.name();
+
+    // fleet simulation: draws only from its own RNG streams, so the
+    // default (ideal) fleet leaves every run byte-identical
+    let sim = FleetSim::new(
+        &cfg.fleet,
+        cfg.clients,
+        cfg.seed,
+        TRAIN_FLOPS_FACTOR * total_flops(spec) as f64,
+    );
 
     let theta = engine.init_theta(&cfg.dataset)?;
     anyhow::ensure!(theta.len() == p, "init theta size mismatch");
@@ -156,10 +176,13 @@ pub fn run_with_strategy(
             round,
             clusters: model.centroids.active,
         });
-        let selected = select_clients(cfg.clients, cfg.participation, &mut round_rng);
+        let selected = select_clients(cfg.clients, cfg.participation, &mut round_rng)?;
+        let fates = sim.round_fates(round, &selected);
         let down = strategy.encode_download(&ctx, &model)?;
         down.ensure_param_count(p)?;
         for &k in &selected {
+            // the server pushes the dispatch before it can know which
+            // clients will fault, so every selected client is ledgered
             ledger.record(round, Direction::Down, down.bytes);
             events.push(Event::Dispatch {
                 round,
@@ -170,9 +193,27 @@ pub fn run_with_strategy(
         }
 
         // --- client updates (engine-bound, coordinator thread) ------------
+        // Faulted clients never reach the server: their training (if
+        // any) is discarded, so the engine work is skipped outright —
+        // harmless, since every client owns an independent RNG fork.
         let opts = strategy.client_train_opts(&ctx);
         let mut trained = Vec::with_capacity(selected.len());
-        for &k in &selected {
+        let mut fault_drops = 0usize;
+        for (&k, fate) in selected.iter().zip(&fates) {
+            let phase = match fate {
+                ClientFate::Healthy { .. } => None,
+                ClientFate::DropBeforeTrain => Some(DropPhase::BeforeTrain),
+                ClientFate::DropBeforeUpload => Some(DropPhase::BeforeUpload),
+            };
+            if let Some(phase) = phase {
+                fault_drops += 1;
+                events.push(Event::Dropout {
+                    round,
+                    client: k,
+                    phase,
+                });
+                continue;
+            }
             let mut client_rng = base.fork(10_000 + (round * cfg.clients + k) as u64);
             let outcome = train_local(
                 engine,
@@ -188,6 +229,7 @@ pub fn run_with_strategy(
                 client: k,
                 outcome,
                 rng: client_rng,
+                slowdown: fate.slowdown(),
             });
         }
 
@@ -214,12 +256,33 @@ pub fn run_with_strategy(
             })
         };
 
+        // --- deadline + receive (simulated round clock) -------------------
         let mut uploads = Vec::with_capacity(trained.len());
         let mut ce_sum = 0.0f64;
         let mut up_bytes_round = 0usize;
+        let mut max_reporting_s = 0.0f64;
+        let mut deadline_drops = 0usize;
         for (t, blob) in trained.iter().zip(blobs) {
             let up = blob?;
             up.ensure_param_count(p)?;
+            let sim_s = sim.client_time_s(
+                t.client,
+                down.bytes,
+                up.bytes,
+                data.labeled[t.client].len(),
+                cfg.local_epochs,
+                t.slowdown,
+            );
+            if sim.clock().over_deadline(sim_s) {
+                deadline_drops += 1;
+                events.push(Event::Deadline {
+                    round,
+                    client: t.client,
+                    sim_s,
+                });
+                continue;
+            }
+            max_reporting_s = max_reporting_s.max(sim_s);
             ledger.record(round, Direction::Up, up.bytes);
             up_bytes_round += up.bytes;
             events.push(Event::Upload {
@@ -238,12 +301,20 @@ pub fn run_with_strategy(
                 n: t.outcome.n,
             });
         }
+        let dropped = fault_drops + deadline_drops;
+        let stragglers = fates.iter().filter(|f| f.is_straggler()).count();
+        let round_sim_ms = 1e3 * sim.clock().round_time_s(max_reporting_s, dropped > 0);
 
         // --- aggregate ----------------------------------------------------
-        let score = strategy.aggregate(&ctx, &mut model, &uploads)?;
+        // survivors only; a fully lost round leaves the model untouched
+        let score = if uploads.is_empty() {
+            0.0
+        } else {
+            strategy.aggregate(&ctx, &mut model, &uploads)?
+        };
         events.push(Event::Aggregated {
             round,
-            clients: selected.len(),
+            clients: uploads.len(),
             score,
         });
         // active count reported for the round (before any growth below)
@@ -256,7 +327,9 @@ pub fn run_with_strategy(
             data,
             base: &base,
         };
-        strategy.post_aggregate(&ctx, &env, &mut model, score, &mut events)?;
+        if !uploads.is_empty() {
+            strategy.post_aggregate(&ctx, &env, &mut model, score, &mut events)?;
+        }
 
         // --- evaluate the deliverable model --------------------------------
         let (accuracy, test_loss) = evaluate(engine, &cfg.dataset, &data.test, &model.theta)?;
@@ -270,14 +343,19 @@ pub fn run_with_strategy(
             accuracy,
             test_loss,
             score,
-            client_mean_ce: ce_sum / selected.len() as f64,
+            // mean over the *survivors* the server actually heard from
+            client_mean_ce: ce_sum / uploads.len().max(1) as f64,
             clusters,
             up_bytes: up_bytes_round,
             down_bytes: down.bytes * selected.len(),
             wall_ms: t0.elapsed().as_secs_f64() * 1e3,
+            round_sim_ms,
+            stragglers,
+            dropped,
         };
         info!(
-            "[{}] {} round {:2}: acc={:.4} loss={:.3} E={:.2} C={} up={}B down={}B ({:.0} ms)",
+            "[{}] {} round {:2}: acc={:.4} loss={:.3} E={:.2} C={} up={}B down={}B \
+             sim={:.1}s drop={} strag={} ({:.0} ms)",
             sname,
             cfg.dataset,
             round,
@@ -287,6 +365,9 @@ pub fn run_with_strategy(
             m.clusters,
             m.up_bytes,
             m.down_bytes,
+            m.round_sim_ms / 1e3,
+            m.dropped,
+            m.stragglers,
             m.wall_ms
         );
         rounds.push(m);

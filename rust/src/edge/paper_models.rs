@@ -9,7 +9,15 @@
 
 use crate::models::{LayerEntry, LayerKind, ModelSpec};
 
-fn conv(name: &str, cin: usize, cout: usize, k: usize, stride: usize, groups: usize, off: &mut usize) -> Vec<LayerEntry> {
+fn conv(
+    name: &str,
+    cin: usize,
+    cout: usize,
+    k: usize,
+    stride: usize,
+    groups: usize,
+    off: &mut usize,
+) -> Vec<LayerEntry> {
     let wsize = cout * (cin / groups) * k * k;
     let w = LayerEntry {
         layer: name.to_string(),

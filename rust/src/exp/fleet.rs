@@ -1,0 +1,123 @@
+//! Fleet scenario table: every registered strategy under named fleet
+//! presets, compared on rounds-to-accuracy and *simulated*
+//! time-to-accuracy — the question the paper's bytes-only evaluation
+//! cannot answer ("what does compression buy in round wall-clock when
+//! clients sit on 5 Mbps uplinks and 10% of them drop?").
+//!
+//! All runs share one federated data environment (paired comparison,
+//! seeds fixed); the accuracy target is derived post-hoc as 90% of the
+//! best *final* accuracy over the whole table. Rows that never reach it
+//! during training print "-" (possible when a strategy's finalize-time
+//! fit beats every per-round accuracy, or under heavy faults).
+
+use anyhow::Result;
+
+use crate::baselines::registry::StrategyRegistry;
+use crate::config::FedConfig;
+use crate::coordinator::server::{build_data, run_federated_with_data};
+use crate::runtime::Engine;
+use crate::sim::FleetPreset;
+
+#[derive(Clone, Debug)]
+pub struct FleetRow {
+    pub fleet: &'static str,
+    pub strategy: &'static str,
+    pub final_acc: f64,
+    /// first round reaching the table's accuracy target (None = never)
+    pub rounds_to_target: Option<usize>,
+    /// cumulative simulated seconds to that round
+    pub sim_s_to_target: Option<f64>,
+    /// total simulated run time, seconds
+    pub total_sim_s: f64,
+    pub total_mb: f64,
+    pub dropped: usize,
+    pub stragglers: usize,
+}
+
+#[derive(Clone, Debug)]
+pub struct FleetTable {
+    pub target_acc: f64,
+    pub rows: Vec<FleetRow>,
+}
+
+/// Fraction of the table's best final accuracy used as the
+/// time-to-accuracy target.
+const TARGET_FRACTION: f64 = 0.9;
+
+/// Run every registered strategy under each preset. `cfg.fleet.dropout`
+/// and `cfg.fleet.deadline_s` apply to all presets; `cfg.fleet.preset`
+/// is overridden per table row.
+pub fn run(engine: &Engine, cfg: &FedConfig, presets: &[FleetPreset]) -> Result<FleetTable> {
+    let data = build_data(engine, cfg)?;
+    let reg = StrategyRegistry::builtin();
+
+    let mut runs = Vec::new();
+    for &preset in presets {
+        let mut fleet_cfg = cfg.clone();
+        fleet_cfg.fleet.preset = preset;
+        for name in reg.names() {
+            let r = run_federated_with_data(engine, &fleet_cfg, name, &data)?;
+            runs.push((preset, r));
+        }
+    }
+
+    let best = runs
+        .iter()
+        .map(|(_, r)| r.final_accuracy)
+        .fold(f64::MIN, f64::max);
+    let target_acc = TARGET_FRACTION * best;
+
+    let rows = runs
+        .into_iter()
+        .map(|(preset, r)| {
+            let hit = r.time_to_accuracy(target_acc);
+            FleetRow {
+                fleet: preset.name(),
+                strategy: r.strategy,
+                final_acc: r.final_accuracy,
+                rounds_to_target: hit.map(|(round, _)| round + 1),
+                sim_s_to_target: hit.map(|(_, ms)| ms / 1e3),
+                total_sim_s: r.total_sim_ms() / 1e3,
+                total_mb: r.total_bytes() as f64 / 1e6,
+                dropped: r.rounds.iter().map(|m| m.dropped).sum(),
+                stragglers: r.rounds.iter().map(|m| m.stragglers).sum(),
+            }
+        })
+        .collect();
+    Ok(FleetTable { target_acc, rows })
+}
+
+pub fn print_table(t: &FleetTable) {
+    println!(
+        "{:<9} {:<18} {:>9} {:>8} {:>10} {:>10} {:>8} {:>6} {:>6}",
+        "fleet", "strategy", "final_acc", "r@tgt", "sim_s@tgt", "sim_s_tot", "comm_MB", "drop",
+        "strag"
+    );
+    for r in &t.rows {
+        let r_tgt = r
+            .rounds_to_target
+            .map(|n| n.to_string())
+            .unwrap_or_else(|| "-".into());
+        let s_tgt = r
+            .sim_s_to_target
+            .map(|s| format!("{s:.1}"))
+            .unwrap_or_else(|| "-".into());
+        println!(
+            "{:<9} {:<18} {:>9.4} {:>8} {:>10} {:>10.1} {:>8.2} {:>6} {:>6}",
+            r.fleet,
+            r.strategy,
+            r.final_acc,
+            r_tgt,
+            s_tgt,
+            r.total_sim_s,
+            r.total_mb,
+            r.dropped,
+            r.stragglers
+        );
+    }
+    println!(
+        "target accuracy: {:.4} ({:.0}% of best final)",
+        t.target_acc,
+        TARGET_FRACTION * 100.0
+    );
+}

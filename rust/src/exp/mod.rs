@@ -1,5 +1,7 @@
-//! Experiment drivers: one per paper table/figure (DESIGN.md §4).
+//! Experiment drivers: one per paper table/figure (DESIGN.md §4), plus
+//! the fleet scenario table (`fleet`, beyond the paper).
 
 pub mod figure2;
+pub mod fleet;
 pub mod table1;
 pub mod table2;

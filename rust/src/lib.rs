@@ -35,6 +35,37 @@
 //! regardless of worker count. The engine-bound training phase stays on
 //! the coordinator thread — the PJRT client is thread-confined,
 //! faithful to a single shared accelerator.
+//!
+//! # Fleet simulation
+//!
+//! Real FL fleets are dominated by client heterogeneity — stragglers,
+//! dropouts, thin uplinks — which the paper's lock-step evaluation
+//! ignores. The [`sim`] layer models it: [`sim::FleetProfile`] draws
+//! per-client device tiers (from [`edge::DeviceProfile`]), link
+//! bandwidths and availability for a named preset (`ideal`, `mobile`,
+//! `hostile`); [`sim::FaultSchedule`] assigns seed-deterministic
+//! per-round fates (dropout before train/upload, straggler slowdowns);
+//! and [`sim::RoundClock`] converts the ledgered bytes plus train FLOPs
+//! into simulated round wall-clock under an optional reporting
+//! deadline. The coordinator aggregates survivors only, emits
+//! `Event::Dropout` / `Event::Deadline`, and records `round_sim_ms`,
+//! `stragglers` and `dropped` in [`coordinator::RoundMetrics`]. The
+//! default [`sim::FleetConfig`] is the ideal fleet, under which every
+//! run is byte-identical to the pre-sim coordinator.
+//!
+//! CLI surface:
+//!
+//! * `--fleet <ideal|mobile|hostile>` — named fleet preset
+//!   (equivalently `--set fleet=<name>`);
+//! * `--dropout <p>` — extra i.i.d. per-round client dropout
+//!   probability in `[0, 1)` (`--set dropout=<p>`);
+//! * `--deadline-s <s>` — simulated round reporting deadline in
+//!   seconds; clients that cannot report in time are cut
+//!   (`--set deadline_s=<s>`; 0 disables);
+//! * `fedcompress fleet [--fleet <name>] [--dropout p] [--deadline-s s]`
+//!   — the scenario table: every registered strategy under the fleet
+//!   presets, comparing rounds-to-accuracy and simulated
+//!   time-to-accuracy (`exp::fleet`).
 
 pub mod baselines;
 pub mod bench;
@@ -51,4 +82,5 @@ pub mod exp;
 pub mod linalg;
 pub mod models;
 pub mod runtime;
+pub mod sim;
 pub mod util;

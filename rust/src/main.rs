@@ -11,9 +11,10 @@ use fedcompress::compression::accounting::ccr;
 use fedcompress::config::FedConfig;
 use fedcompress::coordinator::run_federated;
 use fedcompress::coordinator::server::{build_data, run_federated_with_data};
-use fedcompress::exp::{figure2, table1, table2};
+use fedcompress::exp::{figure2, fleet, table1, table2};
 use fedcompress::models::flops;
 use fedcompress::runtime::Engine;
+use fedcompress::sim::FleetPreset;
 use fedcompress::util::logging;
 
 fn build_config(args: &Args) -> Result<FedConfig> {
@@ -31,6 +32,16 @@ fn build_config(args: &Args) -> Result<FedConfig> {
     }
     for (k, v) in &args.sets {
         cfg.set(k, v)?;
+    }
+    // fleet simulation flags (sugar over --set fleet=/dropout=/deadline_s=)
+    if let Some(name) = args.flag("fleet") {
+        cfg.set("fleet", name)?;
+    }
+    if let Some(p) = args.flag("dropout") {
+        cfg.set("dropout", p)?;
+    }
+    if let Some(s) = args.flag("deadline-s") {
+        cfg.set("deadline_s", s)?;
     }
     cfg.validate()?;
     Ok(cfg)
@@ -115,6 +126,20 @@ fn cmd_table2(args: &Args) -> Result<()> {
         table2::print_rows(&rows);
         println!();
     }
+    Ok(())
+}
+
+/// Fleet scenario table: every registered strategy under the named
+/// fleet presets (all three by default, or just `--fleet <name>`).
+fn cmd_fleet(args: &Args) -> Result<()> {
+    let engine = engine_for(args)?;
+    let cfg = build_config(args)?;
+    let presets: Vec<FleetPreset> = match args.flag("fleet") {
+        Some(name) => vec![FleetPreset::from_name(name)?],
+        None => FleetPreset::ALL.to_vec(),
+    };
+    let table = fleet::run(&engine, &cfg, &presets)?;
+    fleet::print_table(&table);
     Ok(())
 }
 
@@ -217,6 +242,7 @@ fn main() -> Result<()> {
         ParsedCommand::Table1 => cmd_table1(&args),
         ParsedCommand::Table2 => cmd_table2(&args),
         ParsedCommand::Figure2 => cmd_figure2(&args),
+        ParsedCommand::Fleet => cmd_fleet(&args),
         ParsedCommand::AblateC => cmd_ablate_c(&args),
         ParsedCommand::Inspect => cmd_inspect(&args),
     }

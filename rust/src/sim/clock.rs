@@ -1,0 +1,147 @@
+//! Simulated round wall-clock: bytes + FLOPs -> seconds.
+//!
+//! Converts the quantities the coordinator already accounts exactly —
+//! `CommLedger` byte counts per direction and the model's train FLOPs —
+//! into per-client round completion times under a fleet profile:
+//!
+//! ```text
+//! t_client = down_bytes / down_bw
+//!          + slowdown * epochs * samples * train_flops_per_sample / device_rate
+//!          + up_bytes / up_bw
+//! ```
+//!
+//! The round ends when the slowest *reporting* client finishes; if a
+//! reporting deadline is set, the server cuts the round there instead
+//! and clients that could not make it are dropped. Without a deadline,
+//! dropped clients are assumed detected out-of-band (the idealized
+//! pre-sim behavior), so they do not hold the round open.
+
+use super::fleet::ClientProfile;
+
+/// Converts per-client byte counts and train work into simulated time.
+#[derive(Clone, Copy, Debug)]
+pub struct RoundClock {
+    /// FLOPs per training sample per epoch (forward + backward).
+    pub train_flops_per_sample: f64,
+    /// Reporting deadline in seconds; 0 disables deadline enforcement.
+    pub deadline_s: f64,
+}
+
+impl RoundClock {
+    /// Simulated seconds for one client to receive the dispatch, run
+    /// local training, and push its upload.
+    pub fn client_time_s(
+        &self,
+        p: &ClientProfile,
+        down_bytes: usize,
+        up_bytes: usize,
+        samples: usize,
+        epochs: usize,
+        slowdown: f64,
+    ) -> f64 {
+        let down_s = down_bytes as f64 * 8.0 / (p.down_mbps * 1e6);
+        let up_s = up_bytes as f64 * 8.0 / (p.up_mbps * 1e6);
+        let train_flops = self.train_flops_per_sample * samples as f64 * epochs as f64;
+        let train_s = slowdown * train_flops / (p.device.f32_gflops * 1e9);
+        down_s + train_s + up_s
+    }
+
+    /// Would a client finishing at `t` seconds miss the deadline?
+    pub fn over_deadline(&self, t: f64) -> bool {
+        self.deadline_s > 0.0 && t > self.deadline_s
+    }
+
+    /// Round wall-clock given the slowest reporting client and whether
+    /// any selected client was lost (fault or deadline). With a
+    /// deadline, any loss means the server waited the full deadline.
+    pub fn round_time_s(&self, max_reporting_s: f64, any_lost: bool) -> f64 {
+        if self.deadline_s > 0.0 && any_lost {
+            self.deadline_s
+        } else {
+            max_reporting_s
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sim::fleet::{FleetConfig, FleetPreset, FleetProfile};
+
+    fn client(preset: FleetPreset) -> ClientProfile {
+        let cfg = FleetConfig {
+            preset,
+            ..FleetConfig::default()
+        };
+        FleetProfile::build(&cfg, 1, 9).clients[0].clone()
+    }
+
+    fn clock(deadline_s: f64) -> RoundClock {
+        RoundClock {
+            train_flops_per_sample: 3.0e6,
+            deadline_s,
+        }
+    }
+
+    #[test]
+    fn more_bytes_take_longer() {
+        let p = client(FleetPreset::Mobile);
+        let c = clock(0.0);
+        let small = c.client_time_s(&p, 10_000, 10_000, 64, 2, 1.0);
+        let big = c.client_time_s(&p, 100_000, 100_000, 64, 2, 1.0);
+        assert!(big > small);
+        assert!(small > 0.0 && small.is_finite());
+    }
+
+    #[test]
+    fn slowdown_scales_only_the_train_term() {
+        let p = client(FleetPreset::Mobile);
+        let c = clock(0.0);
+        let base = c.client_time_s(&p, 0, 0, 64, 2, 1.0);
+        let slow = c.client_time_s(&p, 0, 0, 64, 2, 3.0);
+        assert!((slow - 3.0 * base).abs() < 1e-12);
+        // with wire bytes, the comm terms are unaffected by slowdown
+        let base_w = c.client_time_s(&p, 80_000, 20_000, 64, 2, 1.0);
+        let slow_w = c.client_time_s(&p, 80_000, 20_000, 64, 2, 3.0);
+        assert!((slow_w - base_w - 2.0 * base).abs() < 1e-12);
+    }
+
+    #[test]
+    fn compression_buys_wall_clock_on_thin_uplinks() {
+        // the question the sim exists to answer: fewer upload bytes ->
+        // faster rounds on a bandwidth-bound fleet
+        let p = client(FleetPreset::Hostile);
+        let c = clock(0.0);
+        let dense = c.client_time_s(&p, 80_000, 80_000, 64, 2, 1.0);
+        let compressed = c.client_time_s(&p, 80_000, 10_000, 64, 2, 1.0);
+        assert!(dense > compressed * 1.5, "{dense} vs {compressed}");
+    }
+
+    #[test]
+    fn deadline_classification() {
+        let c = clock(2.0);
+        assert!(!c.over_deadline(1.99));
+        assert!(c.over_deadline(2.01));
+        let off = clock(0.0);
+        assert!(!off.over_deadline(1e12));
+    }
+
+    #[test]
+    fn round_time_waits_deadline_only_on_loss() {
+        let c = clock(5.0);
+        assert_eq!(c.round_time_s(1.25, false), 1.25);
+        assert_eq!(c.round_time_s(1.25, true), 5.0);
+        let off = clock(0.0);
+        assert_eq!(off.round_time_s(1.25, true), 1.25);
+    }
+
+    #[test]
+    fn ideal_fleet_rounds_are_fast() {
+        let p = client(FleetPreset::Ideal);
+        let h = client(FleetPreset::Hostile);
+        let c = clock(0.0);
+        let t_ideal = c.client_time_s(&p, 80_000, 80_000, 96, 6, 1.0);
+        let t_hostile = c.client_time_s(&h, 80_000, 80_000, 96, 6, 1.0);
+        assert!(t_ideal < t_hostile);
+    }
+}

@@ -1,0 +1,201 @@
+//! Seed-deterministic fault schedule: who drops, who straggles, when.
+//!
+//! Every (round, client) pair gets its fate from an independent RNG
+//! fork of a dedicated fault stream, so fates are bit-reproducible,
+//! independent of evaluation order, and — crucially — drawing them
+//! consumes nothing from the selection/training RNG streams. An ideal
+//! fleet therefore produces byte-identical runs whether or not the
+//! schedule is consulted.
+
+use crate::util::rng::Rng;
+
+use super::fleet::{uniform_in, FleetProfile};
+
+/// What happens to one selected client in one round.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum ClientFate {
+    /// Client completes the round; local train time is multiplied by
+    /// `slowdown` (1.0 = on time, >1.0 = straggler).
+    Healthy { slowdown: f64 },
+    /// Client is unreachable before training starts (never receives or
+    /// never acts on the dispatch).
+    DropBeforeTrain,
+    /// Client would train but its upload is lost (battery, network,
+    /// kill). The server observes the same nothing as `DropBeforeTrain`
+    /// — the coordinator therefore elides the client's (discarded)
+    /// training work; only the logged drop phase differs. A sim
+    /// extension that costs client energy/compute would spend the
+    /// train term for this variant.
+    DropBeforeUpload,
+}
+
+impl ClientFate {
+    pub fn is_drop(&self) -> bool {
+        !matches!(self, ClientFate::Healthy { .. })
+    }
+
+    /// Straggler slowdown factor (1.0 for drops and on-time clients).
+    pub fn slowdown(&self) -> f64 {
+        match self {
+            ClientFate::Healthy { slowdown } => *slowdown,
+            _ => 1.0,
+        }
+    }
+
+    pub fn is_straggler(&self) -> bool {
+        matches!(self, ClientFate::Healthy { slowdown } if *slowdown > 1.0)
+    }
+}
+
+/// Per-run fault schedule derived from the fleet profile plus the
+/// config's extra dropout rate.
+#[derive(Clone, Debug)]
+pub struct FaultSchedule {
+    base: Rng,
+    /// Effective per-round drop probability per client:
+    /// `1 - availability_k * (1 - dropout)`.
+    drop_prob: Vec<f64>,
+    straggler_prob: Vec<f64>,
+    slowdown: (f64, f64),
+}
+
+impl FaultSchedule {
+    pub fn new(profile: &FleetProfile, dropout: f64, seed: u64) -> FaultSchedule {
+        FaultSchedule {
+            base: Rng::new(seed ^ 0xFA17),
+            drop_prob: profile
+                .clients
+                .iter()
+                .map(|c| 1.0 - c.availability * (1.0 - dropout))
+                .collect(),
+            straggler_prob: profile.clients.iter().map(|c| c.straggler_prob).collect(),
+            slowdown: profile.straggler_slowdown,
+        }
+    }
+
+    /// The fate of `client` in `round`. Pure given (round, client):
+    /// repeated calls agree, and no shared RNG state is consumed.
+    pub fn fate(&self, round: usize, client: usize) -> ClientFate {
+        let mut rng = self.base.fork(round as u64 * 1_000_003 + client as u64);
+        let p_drop = self.drop_prob.get(client).copied().unwrap_or(0.0);
+        if p_drop > 0.0 && rng.f64() < p_drop {
+            // split drops evenly between the two phases
+            return if rng.f64() < 0.5 {
+                ClientFate::DropBeforeTrain
+            } else {
+                ClientFate::DropBeforeUpload
+            };
+        }
+        let p_strag = self.straggler_prob.get(client).copied().unwrap_or(0.0);
+        if p_strag > 0.0 && rng.f64() < p_strag {
+            return ClientFate::Healthy {
+                slowdown: uniform_in(&mut rng, self.slowdown),
+            };
+        }
+        ClientFate::Healthy { slowdown: 1.0 }
+    }
+
+    /// Fates for a round's selected set, in selection order.
+    pub fn round_fates(&self, round: usize, selected: &[usize]) -> Vec<ClientFate> {
+        selected.iter().map(|&k| self.fate(round, k)).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sim::fleet::{FleetConfig, FleetPreset, FleetProfile};
+
+    fn profile(preset: FleetPreset) -> FleetProfile {
+        let cfg = FleetConfig {
+            preset,
+            ..FleetConfig::default()
+        };
+        FleetProfile::build(&cfg, 16, 11)
+    }
+
+    #[test]
+    fn ideal_fleet_never_faults() {
+        let sched = FaultSchedule::new(&profile(FleetPreset::Ideal), 0.0, 11);
+        for round in 0..50 {
+            for client in 0..16 {
+                assert_eq!(
+                    sched.fate(round, client),
+                    ClientFate::Healthy { slowdown: 1.0 }
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn fates_are_deterministic_and_order_independent() {
+        let sched = FaultSchedule::new(&profile(FleetPreset::Hostile), 0.2, 11);
+        let forward: Vec<ClientFate> = (0..16).map(|k| sched.fate(3, k)).collect();
+        let mut backward: Vec<ClientFate> = (0..16).rev().map(|k| sched.fate(3, k)).collect();
+        backward.reverse();
+        assert_eq!(forward, backward);
+        // a fresh schedule from the same inputs agrees exactly
+        let again = FaultSchedule::new(&profile(FleetPreset::Hostile), 0.2, 11);
+        assert_eq!(again.round_fates(3, &(0..16).collect::<Vec<_>>()), forward);
+    }
+
+    #[test]
+    fn full_dropout_drops_everyone() {
+        let sched = FaultSchedule::new(&profile(FleetPreset::Ideal), 1.0, 5);
+        let mut before_train = 0;
+        let mut before_upload = 0;
+        for round in 0..20 {
+            for client in 0..16 {
+                match sched.fate(round, client) {
+                    ClientFate::DropBeforeTrain => before_train += 1,
+                    ClientFate::DropBeforeUpload => before_upload += 1,
+                    f => panic!("expected a drop, got {f:?}"),
+                }
+            }
+        }
+        // both phases occur (split is ~50/50)
+        assert!(before_train > 50 && before_upload > 50);
+    }
+
+    #[test]
+    fn dropout_rate_lands_near_requested() {
+        let sched = FaultSchedule::new(&profile(FleetPreset::Ideal), 0.25, 5);
+        let n = 400 * 16;
+        let drops: usize = (0..400)
+            .flat_map(|r| (0..16).map(move |k| (r, k)))
+            .filter(|&(r, k)| sched.fate(r, k).is_drop())
+            .count();
+        let rate = drops as f64 / n as f64;
+        assert!((rate - 0.25).abs() < 0.02, "observed drop rate {rate}");
+    }
+
+    #[test]
+    fn hostile_fleet_straggles_more_than_mobile() {
+        let count = |preset| {
+            let sched = FaultSchedule::new(&profile(preset), 0.0, 11);
+            (0..200)
+                .flat_map(|r| (0..16).map(move |k| (r, k)))
+                .filter(|&(r, k)| sched.fate(r, k).is_straggler())
+                .count()
+        };
+        let mobile = count(FleetPreset::Mobile);
+        let hostile = count(FleetPreset::Hostile);
+        assert!(mobile > 0, "mobile fleet should straggle sometimes");
+        assert!(hostile > mobile, "hostile {hostile} vs mobile {mobile}");
+    }
+
+    #[test]
+    fn straggler_slowdowns_stay_in_preset_band() {
+        let p = profile(FleetPreset::Hostile);
+        let sched = FaultSchedule::new(&p, 0.0, 11);
+        let (lo, hi) = p.straggler_slowdown;
+        for round in 0..100 {
+            for client in 0..16 {
+                let f = sched.fate(round, client);
+                if f.is_straggler() {
+                    assert!(f.slowdown() >= lo && f.slowdown() <= hi);
+                }
+            }
+        }
+    }
+}

@@ -1,0 +1,293 @@
+//! Fleet profiles: who the clients *are*, physically.
+//!
+//! The paper's evaluation (like most FL reproductions) assumes an ideal
+//! fleet — every selected client has infinite bandwidth, identical
+//! compute, and always reports. Real fleets are dominated by
+//! heterogeneity (arXiv 2107.10996), so this module assigns every
+//! client a [`ClientProfile`]: a compute tier drawn from the Table-2
+//! [`DeviceProfile`]s, up/down link bandwidth, an availability rate,
+//! and a straggler propensity. Profiles are drawn seed-deterministically
+//! from a named [`FleetPreset`], so fleet runs are bit-reproducible and
+//! paired across strategies.
+
+use std::fmt;
+
+use crate::edge::device::{DeviceProfile, EDGE_DEVICES};
+use crate::util::rng::Rng;
+
+/// The three named fleet scenarios of `exp/fleet.rs`.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum FleetPreset {
+    /// The pre-sim world: one fast device class, gigabit symmetric
+    /// links, perfect availability, no stragglers. Runs under `Ideal`
+    /// are byte-identical to runs without any fleet machinery.
+    #[default]
+    Ideal,
+    /// Phones on LTE/Wi-Fi: mixed device tiers, 5-20 Mbps uplinks,
+    /// occasional unavailability and mild stragglers.
+    Mobile,
+    /// The stress scenario: slow devices over 1-5 Mbps uplinks, flaky
+    /// availability, frequent heavy stragglers.
+    Hostile,
+}
+
+impl FleetPreset {
+    pub const ALL: [FleetPreset; 3] =
+        [FleetPreset::Ideal, FleetPreset::Mobile, FleetPreset::Hostile];
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            FleetPreset::Ideal => "ideal",
+            FleetPreset::Mobile => "mobile",
+            FleetPreset::Hostile => "hostile",
+        }
+    }
+
+    pub fn from_name(name: &str) -> Result<FleetPreset, UnknownFleetPreset> {
+        match name.to_ascii_lowercase().as_str() {
+            "ideal" => Ok(FleetPreset::Ideal),
+            "mobile" => Ok(FleetPreset::Mobile),
+            "hostile" => Ok(FleetPreset::Hostile),
+            _ => Err(UnknownFleetPreset {
+                name: name.to_string(),
+            }),
+        }
+    }
+
+    /// Sampling parameters the preset draws client profiles from.
+    fn params(&self) -> PresetParams {
+        match self {
+            FleetPreset::Ideal => PresetParams {
+                // every client is the fastest device tier on a fat pipe
+                device_weights: [0.0, 1.0, 0.0],
+                up_mbps: (1000.0, 1000.0),
+                down_mbps: (1000.0, 1000.0),
+                availability: (1.0, 1.0),
+                straggler_prob: 0.0,
+                straggler_slowdown: (1.0, 1.0),
+            },
+            FleetPreset::Mobile => PresetParams {
+                device_weights: [0.6, 0.25, 0.15],
+                up_mbps: (5.0, 20.0),
+                down_mbps: (20.0, 50.0),
+                availability: (0.92, 1.0),
+                straggler_prob: 0.1,
+                straggler_slowdown: (1.5, 3.0),
+            },
+            FleetPreset::Hostile => PresetParams {
+                device_weights: [0.5, 0.1, 0.4],
+                up_mbps: (1.0, 5.0),
+                down_mbps: (5.0, 20.0),
+                availability: (0.7, 0.95),
+                straggler_prob: 0.25,
+                straggler_slowdown: (2.0, 6.0),
+            },
+        }
+    }
+}
+
+/// Typed parse failure for `--fleet` / `set("fleet", ...)`, in the
+/// style of `WireBlob::ensure_param_count`.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct UnknownFleetPreset {
+    pub name: String,
+}
+
+impl fmt::Display for UnknownFleetPreset {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(
+            f,
+            "unknown fleet preset '{}' (known: ideal, mobile, hostile)",
+            self.name
+        )
+    }
+}
+
+impl std::error::Error for UnknownFleetPreset {}
+
+/// The fleet knob block inside `FedConfig`. The derived default is the
+/// ideal fleet with no extra dropout and no reporting deadline —
+/// exactly the pre-sim semantics, so existing runs stay byte-identical.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct FleetConfig {
+    pub preset: FleetPreset,
+    /// Extra i.i.d. per-selected-client per-round dropout probability,
+    /// layered on top of each client's availability (`--dropout`).
+    pub dropout: f64,
+    /// Round reporting deadline in simulated seconds; clients that
+    /// cannot report in time are cut (`--deadline-s`). 0 disables it.
+    pub deadline_s: f64,
+}
+
+impl FleetConfig {
+    /// True when the config cannot perturb a run: ideal fleet, no extra
+    /// dropout. (A deadline on an ideal gigabit fleet can still cut
+    /// clients, so it keeps the config non-trivial.)
+    pub fn is_ideal(&self) -> bool {
+        self.preset == FleetPreset::Ideal && self.dropout == 0.0 && self.deadline_s == 0.0
+    }
+}
+
+/// Per-preset sampling ranges (uniform unless noted).
+struct PresetParams {
+    device_weights: [f64; 3],
+    up_mbps: (f64, f64),
+    down_mbps: (f64, f64),
+    availability: (f64, f64),
+    straggler_prob: f64,
+    straggler_slowdown: (f64, f64),
+}
+
+/// One client's physical situation for a whole run.
+#[derive(Clone, Debug)]
+pub struct ClientProfile {
+    /// Compute tier (a Table-2 edge device spec).
+    pub device: DeviceProfile,
+    pub up_mbps: f64,
+    pub down_mbps: f64,
+    /// Per-round probability the client is reachable at all.
+    pub availability: f64,
+    /// Per-round probability of a straggler slowdown when healthy.
+    pub straggler_prob: f64,
+}
+
+/// The materialized fleet: one profile per client plus the preset-level
+/// straggler slowdown range the fault schedule draws from.
+#[derive(Clone, Debug)]
+pub struct FleetProfile {
+    pub preset: FleetPreset,
+    pub clients: Vec<ClientProfile>,
+    /// Straggler slowdown factor range (multiplies local train time).
+    pub straggler_slowdown: (f64, f64),
+}
+
+/// Uniform draw in `[lo, hi)` (shared with the fault schedule's
+/// straggler slowdown draws so the two can never diverge).
+pub(crate) fn uniform_in(rng: &mut Rng, (lo, hi): (f64, f64)) -> f64 {
+    lo + rng.f64() * (hi - lo)
+}
+
+impl FleetProfile {
+    /// Draw `clients` profiles for a preset, seed-deterministically.
+    /// Each client's draws come from an independent RNG fork, so the
+    /// profile of client k does not depend on the fleet size.
+    pub fn build(cfg: &FleetConfig, clients: usize, seed: u64) -> FleetProfile {
+        let params = cfg.preset.params();
+        let base = Rng::new(seed ^ 0xF1EE7);
+        let profiles = (0..clients)
+            .map(|k| {
+                let mut rng = base.fork(k as u64);
+                let tier = rng.categorical(&params.device_weights);
+                ClientProfile {
+                    device: EDGE_DEVICES[tier].clone(),
+                    up_mbps: uniform_in(&mut rng, params.up_mbps),
+                    down_mbps: uniform_in(&mut rng, params.down_mbps),
+                    availability: uniform_in(&mut rng, params.availability),
+                    straggler_prob: params.straggler_prob,
+                }
+            })
+            .collect();
+        FleetProfile {
+            preset: cfg.preset,
+            clients: profiles,
+            straggler_slowdown: params.straggler_slowdown,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn preset_names_round_trip() {
+        for p in FleetPreset::ALL {
+            assert_eq!(FleetPreset::from_name(p.name()).unwrap(), p);
+        }
+        assert_eq!(FleetPreset::from_name("MOBILE").unwrap(), FleetPreset::Mobile);
+        let e = FleetPreset::from_name("cosmic").unwrap_err();
+        assert!(e.to_string().contains("cosmic"));
+        assert!(e.to_string().contains("ideal"));
+    }
+
+    #[test]
+    fn default_fleet_is_ideal_and_trivial() {
+        let f = FleetConfig::default();
+        assert_eq!(f.preset, FleetPreset::Ideal);
+        assert!(f.is_ideal());
+        let perturbed = FleetConfig {
+            dropout: 0.1,
+            ..FleetConfig::default()
+        };
+        assert!(!perturbed.is_ideal());
+    }
+
+    #[test]
+    fn build_is_seed_deterministic() {
+        let cfg = FleetConfig {
+            preset: FleetPreset::Mobile,
+            ..FleetConfig::default()
+        };
+        let a = FleetProfile::build(&cfg, 12, 7);
+        let b = FleetProfile::build(&cfg, 12, 7);
+        for (x, y) in a.clients.iter().zip(&b.clients) {
+            assert_eq!(x.up_mbps, y.up_mbps);
+            assert_eq!(x.down_mbps, y.down_mbps);
+            assert_eq!(x.availability, y.availability);
+            assert_eq!(x.device.name, y.device.name);
+        }
+        let c = FleetProfile::build(&cfg, 12, 8);
+        let ups = |p: &FleetProfile| p.clients.iter().map(|x| x.up_mbps).collect::<Vec<_>>();
+        assert_ne!(ups(&a), ups(&c), "a different seed must redraw the fleet");
+    }
+
+    #[test]
+    fn client_profile_independent_of_fleet_size() {
+        let cfg = FleetConfig {
+            preset: FleetPreset::Hostile,
+            ..FleetConfig::default()
+        };
+        let small = FleetProfile::build(&cfg, 4, 42);
+        let large = FleetProfile::build(&cfg, 40, 42);
+        for k in 0..4 {
+            assert_eq!(small.clients[k].up_mbps, large.clients[k].up_mbps);
+            assert_eq!(small.clients[k].availability, large.clients[k].availability);
+        }
+    }
+
+    #[test]
+    fn ideal_profiles_are_perfect() {
+        let p = FleetProfile::build(&FleetConfig::default(), 8, 1);
+        for c in &p.clients {
+            assert_eq!(c.availability, 1.0);
+            assert_eq!(c.straggler_prob, 0.0);
+            assert_eq!(c.up_mbps, 1000.0);
+        }
+        assert_eq!(p.straggler_slowdown, (1.0, 1.0));
+    }
+
+    #[test]
+    fn presets_are_ordered_by_hostility() {
+        let mk = |preset| {
+            let cfg = FleetConfig {
+                preset,
+                ..FleetConfig::default()
+            };
+            FleetProfile::build(&cfg, 32, 3)
+        };
+        let mean_up = |p: &FleetProfile| {
+            p.clients.iter().map(|c| c.up_mbps).sum::<f64>() / p.clients.len() as f64
+        };
+        let mean_avail = |p: &FleetProfile| {
+            p.clients.iter().map(|c| c.availability).sum::<f64>() / p.clients.len() as f64
+        };
+        let (ideal, mobile, hostile) = (
+            mk(FleetPreset::Ideal),
+            mk(FleetPreset::Mobile),
+            mk(FleetPreset::Hostile),
+        );
+        assert!(mean_up(&ideal) > mean_up(&mobile));
+        assert!(mean_up(&mobile) > mean_up(&hostile));
+        assert!(mean_avail(&mobile) > mean_avail(&hostile));
+    }
+}

@@ -1,0 +1,126 @@
+//! Fleet simulation layer: heterogeneous clients, fault injection, and
+//! simulated round clocks.
+//!
+//! Data flow (see ARCHITECTURE.md):
+//!
+//! ```text
+//! FleetConfig (preset + dropout + deadline, part of FedConfig)
+//!   -> FleetProfile::build       per-client device / bandwidth /
+//!                                availability draws  (fleet.rs)
+//!   -> FaultSchedule             seed-deterministic per-(round, client)
+//!                                fates: drops + straggler slowdowns
+//!                                (faults.rs)
+//!   -> RoundClock                ledgered bytes + train FLOPs ->
+//!                                simulated seconds, deadline cuts
+//!                                (clock.rs)
+//! ```
+//!
+//! The coordinator consults the layer through [`FleetSim`], one handle
+//! per run. All randomness comes from dedicated streams
+//! (`seed ^ 0xF1EE7`, `seed ^ 0xFA17`), never from the selection or
+//! training streams — with the default (ideal) fleet every existing run
+//! is byte-identical to the pre-sim coordinator.
+
+pub mod clock;
+pub mod faults;
+pub mod fleet;
+
+pub use clock::RoundClock;
+pub use faults::{ClientFate, FaultSchedule};
+pub use fleet::{ClientProfile, FleetConfig, FleetPreset, FleetProfile, UnknownFleetPreset};
+
+/// Per-run simulation handle: the materialized fleet, its fault
+/// schedule, and the round clock, built once from a `FleetConfig`.
+#[derive(Clone, Debug)]
+pub struct FleetSim {
+    profile: FleetProfile,
+    faults: FaultSchedule,
+    clock: RoundClock,
+}
+
+impl FleetSim {
+    /// `train_flops_per_sample` is the per-sample per-epoch training
+    /// cost (forward + backward) of the run's model.
+    pub fn new(
+        cfg: &FleetConfig,
+        clients: usize,
+        seed: u64,
+        train_flops_per_sample: f64,
+    ) -> FleetSim {
+        let profile = FleetProfile::build(cfg, clients, seed);
+        let faults = FaultSchedule::new(&profile, cfg.dropout, seed);
+        FleetSim {
+            profile,
+            faults,
+            clock: RoundClock {
+                train_flops_per_sample,
+                deadline_s: cfg.deadline_s,
+            },
+        }
+    }
+
+    pub fn profile(&self) -> &FleetProfile {
+        &self.profile
+    }
+
+    pub fn clock(&self) -> &RoundClock {
+        &self.clock
+    }
+
+    /// Fate of a selected client in a round (pure; see `FaultSchedule`).
+    pub fn fate(&self, round: usize, client: usize) -> ClientFate {
+        self.faults.fate(round, client)
+    }
+
+    /// Fates for a round's selected set, in selection order.
+    pub fn round_fates(&self, round: usize, selected: &[usize]) -> Vec<ClientFate> {
+        self.faults.round_fates(round, selected)
+    }
+
+    /// Simulated completion time for one client's round.
+    pub fn client_time_s(
+        &self,
+        client: usize,
+        down_bytes: usize,
+        up_bytes: usize,
+        samples: usize,
+        epochs: usize,
+        slowdown: f64,
+    ) -> f64 {
+        self.clock.client_time_s(
+            &self.profile.clients[client],
+            down_bytes,
+            up_bytes,
+            samples,
+            epochs,
+            slowdown,
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn sim_handle_wires_the_parts_together() {
+        let cfg = FleetConfig {
+            preset: FleetPreset::Mobile,
+            dropout: 0.1,
+            deadline_s: 30.0,
+        };
+        let sim = FleetSim::new(&cfg, 8, 42, 3.0e6);
+        assert_eq!(sim.profile().clients.len(), 8);
+        assert_eq!(sim.clock().deadline_s, 30.0);
+        // deterministic across handles
+        let again = FleetSim::new(&cfg, 8, 42, 3.0e6);
+        for round in 0..10 {
+            for k in 0..8 {
+                assert_eq!(sim.fate(round, k), again.fate(round, k));
+                let t = sim.client_time_s(k, 50_000, 10_000, 64, 2, 1.0);
+                assert_eq!(t, again.client_time_s(k, 50_000, 10_000, 64, 2, 1.0));
+                assert!(t > 0.0);
+            }
+        }
+    }
+}

@@ -1,0 +1,248 @@
+//! Fleet simulation layer tests.
+//!
+//! No-engine tests cover the config surface and the sim invariants the
+//! coordinator depends on; engine-gated tests (skipped without built
+//! artifacts, like every other e2e suite here) cover the two headline
+//! guarantees: the default fleet is zero-cost (byte-identical runs) and
+//! fault injection is bit-reproducible for a fixed seed.
+
+use fedcompress::compression::accounting::Direction;
+use fedcompress::config::FedConfig;
+use fedcompress::coordinator::selection::select_clients;
+use fedcompress::coordinator::server::{build_data, run_federated_with_data};
+use fedcompress::runtime::artifacts::default_dir;
+use fedcompress::runtime::Engine;
+use fedcompress::sim::{ClientFate, FleetConfig, FleetPreset, FleetSim};
+use fedcompress::util::rng::Rng;
+
+fn engine() -> Option<Engine> {
+    let d = default_dir();
+    if !d.join("manifest.json").exists() {
+        eprintln!("skipping: artifacts not built");
+        return None;
+    }
+    Some(Engine::load(&d).unwrap())
+}
+
+fn tiny_cfg(dataset: &str) -> FedConfig {
+    let mut cfg = FedConfig::quick(dataset);
+    cfg.rounds = 4;
+    cfg.clients = 3;
+    cfg.local_epochs = 2;
+    cfg.server_epochs = 1;
+    cfg.train_size = 192;
+    cfg.test_size = 96;
+    cfg.ood_size = 64;
+    cfg.unlabeled_per_client = 16;
+    cfg.warmup_rounds = 1;
+    cfg.validate().unwrap();
+    cfg
+}
+
+// ---------------------------------------------------------------------------
+// config surface (no engine needed)
+// ---------------------------------------------------------------------------
+
+#[test]
+fn default_config_carries_the_ideal_fleet() {
+    assert!(FedConfig::quick("cifar10").fleet.is_ideal());
+    assert!(FedConfig::paper("cifar10").fleet.is_ideal());
+    assert_eq!(FedConfig::quick("cifar10").fleet, FleetConfig::default());
+}
+
+#[test]
+fn fleet_flags_flow_through_config_sets() {
+    let mut cfg = FedConfig::quick("cifar10");
+    cfg.set("fleet", "hostile").unwrap();
+    cfg.set("dropout", "0.25").unwrap();
+    cfg.set("deadline_s", "45.5").unwrap();
+    cfg.validate().unwrap();
+    assert_eq!(cfg.fleet.preset, FleetPreset::Hostile);
+    assert_eq!(cfg.fleet.dropout, 0.25);
+    assert_eq!(cfg.fleet.deadline_s, 45.5);
+    assert!(!cfg.fleet.is_ideal());
+    assert!(cfg.set("fleet", "galactic").is_err());
+}
+
+/// The coordinator's core assumption: sim randomness comes from
+/// dedicated streams, so consulting the schedule perturbs nothing.
+#[test]
+fn ideal_sim_never_perturbs_and_faulty_sim_is_reproducible() {
+    let ideal = FleetSim::new(&FleetConfig::default(), 6, 42, 1.0);
+    for round in 0..30 {
+        for k in 0..6 {
+            assert_eq!(ideal.fate(round, k), ClientFate::Healthy { slowdown: 1.0 });
+        }
+    }
+
+    let faulty_cfg = FleetConfig {
+        preset: FleetPreset::Mobile,
+        dropout: 0.3,
+        deadline_s: 0.0,
+    };
+    let a = FleetSim::new(&faulty_cfg, 6, 42, 1.0);
+    let b = FleetSim::new(&faulty_cfg, 6, 42, 1.0);
+    let mut drops = 0;
+    for round in 0..30 {
+        for k in 0..6 {
+            assert_eq!(a.fate(round, k), b.fate(round, k));
+            drops += usize::from(a.fate(round, k).is_drop());
+        }
+    }
+    assert!(drops > 0, "a 30% dropout fleet must drop someone in 180 draws");
+}
+
+// ---------------------------------------------------------------------------
+// engine-gated: the zero-cost-default invariant
+// ---------------------------------------------------------------------------
+
+/// A run with the default (untouched) fleet config must be
+/// byte-identical to a run whose fleet was explicitly set to the ideal
+/// preset — and must carry no fault events. (Equality with the *pre-PR*
+/// loop is separately pinned by the reference-loop tests in
+/// `strategy_api.rs`, which run through the sim-threaded coordinator.)
+#[test]
+fn ideal_fleet_runs_are_byte_identical_to_default_runs() {
+    let Some(engine) = engine() else { return };
+    let cfg = tiny_cfg("cifar10");
+    assert!(cfg.fleet.is_ideal());
+
+    let mut explicit = cfg.clone();
+    explicit.set("fleet", "ideal").unwrap();
+    explicit.set("dropout", "0").unwrap();
+    explicit.set("deadline_s", "0").unwrap();
+
+    for strategy in ["fedavg", "fedcompress"] {
+        let d1 = build_data(&engine, &cfg).unwrap();
+        let r1 = run_federated_with_data(&engine, &cfg, strategy, &d1).unwrap();
+        let d2 = build_data(&engine, &explicit).unwrap();
+        let r2 = run_federated_with_data(&engine, &explicit, strategy, &d2).unwrap();
+
+        assert_eq!(r1.final_theta, r2.final_theta, "{strategy}");
+        assert_eq!(r1.final_accuracy, r2.final_accuracy, "{strategy}");
+        assert_eq!(r1.total_bytes(), r2.total_bytes(), "{strategy}");
+        assert_eq!(r1.events.to_jsonl(), r2.events.to_jsonl(), "{strategy}");
+        for (a, b) in r1.rounds.iter().zip(&r2.rounds) {
+            assert_eq!(a.accuracy, b.accuracy, "{strategy}");
+            assert_eq!(a.client_mean_ce, b.client_mean_ce, "{strategy}");
+            assert_eq!(a.up_bytes, b.up_bytes, "{strategy}");
+            assert_eq!(a.down_bytes, b.down_bytes, "{strategy}");
+            assert_eq!(a.round_sim_ms, b.round_sim_ms, "{strategy}");
+        }
+
+        // an ideal fleet never faults, straggles, or misses deadlines,
+        // and every selected client survives to aggregation
+        assert_eq!(r1.events.of_kind("dropout").count(), 0, "{strategy}");
+        assert_eq!(r1.events.of_kind("deadline").count(), 0, "{strategy}");
+        for m in &r1.rounds {
+            assert_eq!(m.dropped, 0, "{strategy}");
+            assert_eq!(m.stragglers, 0, "{strategy}");
+            assert!(m.round_sim_ms > 0.0, "{strategy}: sim clock must tick");
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// engine-gated: fault injection
+// ---------------------------------------------------------------------------
+
+/// Dropout runs are bit-reproducible for a fixed seed, and the emitted
+/// dropout events agree exactly with an independently rebuilt schedule.
+#[test]
+fn dropout_runs_are_bit_reproducible_and_match_the_schedule() {
+    let Some(engine) = engine() else { return };
+    let mut cfg = tiny_cfg("cifar10");
+    cfg.set("fleet", "mobile").unwrap();
+    cfg.set("dropout", "0.3").unwrap();
+
+    let d1 = build_data(&engine, &cfg).unwrap();
+    let r1 = run_federated_with_data(&engine, &cfg, "fedcompress", &d1).unwrap();
+    let d2 = build_data(&engine, &cfg).unwrap();
+    let r2 = run_federated_with_data(&engine, &cfg, "fedcompress", &d2).unwrap();
+
+    assert_eq!(r1.final_theta, r2.final_theta);
+    assert_eq!(r1.total_bytes(), r2.total_bytes());
+    assert_eq!(r1.events.to_jsonl(), r2.events.to_jsonl());
+
+    // replay selection + schedule offline and predict the drops
+    let sim = FleetSim::new(&cfg.fleet, cfg.clients, cfg.seed, 1.0);
+    let base = Rng::new(cfg.seed ^ 0xFEDC);
+    let mut predicted: Vec<(usize, usize)> = Vec::new();
+    for round in 0..cfg.rounds {
+        let mut round_rng = base.fork(100 + round as u64);
+        let selected = select_clients(cfg.clients, cfg.participation, &mut round_rng).unwrap();
+        for &k in &selected {
+            if sim.fate(round, k).is_drop() {
+                predicted.push((round, k));
+            }
+        }
+    }
+    let observed: Vec<(usize, usize)> = r1
+        .events
+        .of_kind("dropout")
+        .map(|e| {
+            let j = e.to_json();
+            (
+                j.get("round").unwrap().as_usize().unwrap(),
+                j.get("client").unwrap().as_usize().unwrap(),
+            )
+        })
+        .collect();
+    assert_eq!(observed, predicted, "dropout events must match the schedule");
+    assert!(!predicted.is_empty(), "a 30% dropout run should drop someone");
+
+    // survivors-only accounting: dropped uploads never hit the ledger
+    // (participation is 1.0, so every round selects all clients)
+    let dropped_total: usize = r1.rounds.iter().map(|m| m.dropped).sum();
+    let survivors = cfg.rounds * cfg.clients - dropped_total;
+    assert_eq!(r1.events.of_kind("upload").count(), survivors);
+    assert!(r1.ledger.bytes_in(Direction::Up) > 0);
+}
+
+/// An impossible deadline cuts every client: no uploads, the model
+/// never moves, and the round clock reports exactly the deadline.
+#[test]
+fn impossible_deadline_stalls_training() {
+    let Some(engine) = engine() else { return };
+    let mut cfg = tiny_cfg("cifar10");
+    cfg.set("fleet", "mobile").unwrap();
+    cfg.set("deadline_s", "0.000001").unwrap();
+
+    let data = build_data(&engine, &cfg).unwrap();
+    let r = run_federated_with_data(&engine, &cfg, "fedavg", &data).unwrap();
+
+    assert_eq!(r.ledger.bytes_in(Direction::Up), 0, "no upload can make it");
+    assert!(r.events.of_kind("deadline").count() > 0);
+    for m in &r.rounds {
+        assert_eq!(m.up_bytes, 0);
+        assert_eq!(m.dropped, cfg.clients, "every selected client is lost");
+        assert!((m.round_sim_ms - 1e3 * cfg.fleet.deadline_s).abs() < 1e-9);
+        // the model the server evaluates never changes
+        assert_eq!(m.accuracy, r.rounds[0].accuracy);
+    }
+}
+
+/// The question the sim exists to answer: on a bandwidth-bound fleet,
+/// compression must buy simulated wall-clock against dense FedAvg.
+#[test]
+fn compression_buys_simulated_time_on_mobile_fleets() {
+    let Some(engine) = engine() else { return };
+    let mut cfg = tiny_cfg("cifar10");
+    cfg.set("fleet", "mobile").unwrap();
+
+    let data = build_data(&engine, &cfg).unwrap();
+    let fedavg = run_federated_with_data(&engine, &cfg, "fedavg", &data).unwrap();
+    let fedcmp = run_federated_with_data(&engine, &cfg, "fedcompress", &data).unwrap();
+
+    // fates are strategy-independent, so the comparison is paired:
+    // fewer bytes through the same pipes must not be slower
+    assert!(
+        fedcmp.total_sim_ms() < fedavg.total_sim_ms(),
+        "{} vs {}",
+        fedcmp.total_sim_ms(),
+        fedavg.total_sim_ms()
+    );
+    for m in &fedavg.rounds {
+        assert!(m.round_sim_ms > 0.0);
+    }
+}

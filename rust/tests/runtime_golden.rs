@@ -36,8 +36,10 @@ fn load_goldens(engine: &Engine, dataset: &str) -> Vec<(String, Vec<Owned>, Vec<
                 _ => Owned::F32(engine.manifest.read_f32_bin(&rel).unwrap()),
             }
         };
-        let ins: Vec<Owned> = rec.get("inputs").unwrap().as_arr().unwrap().iter().map(read).collect();
-        let outs: Vec<Owned> = rec.get("outputs").unwrap().as_arr().unwrap().iter().map(read).collect();
+        let in_arr = rec.get("inputs").unwrap().as_arr().unwrap();
+        let ins: Vec<Owned> = in_arr.iter().map(read).collect();
+        let out_arr = rec.get("outputs").unwrap().as_arr().unwrap();
+        let outs: Vec<Owned> = out_arr.iter().map(read).collect();
         cases.push((entry.clone(), ins, outs));
     }
     cases

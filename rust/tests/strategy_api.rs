@@ -256,7 +256,11 @@ fn parallel_rounds_equal_serial_rounds() {
 
 /// Straight-line FedAvg exactly as the pre-refactor monolithic loop
 /// computed it: same RNG fork constants, dense wire, plain aggregation.
-fn reference_fedavg(engine: &Engine, cfg: &FedConfig, data: &FederatedData) -> (Vec<f64>, Vec<f32>) {
+fn reference_fedavg(
+    engine: &Engine,
+    cfg: &FedConfig,
+    data: &FederatedData,
+) -> (Vec<f64>, Vec<f32>) {
     use fedcompress::client::trainer::{evaluate, train_local};
     let base = Rng::new(cfg.seed ^ 0xFEDC);
     let c_max = engine.manifest.c_max;
@@ -268,7 +272,7 @@ fn reference_fedavg(engine: &Engine, cfg: &FedConfig, data: &FederatedData) -> (
     let mut accs = Vec::new();
     for round in 0..cfg.rounds {
         let mut round_rng = base.fork(100 + round as u64);
-        let selected = select_clients(cfg.clients, cfg.participation, &mut round_rng);
+        let selected = select_clients(cfg.clients, cfg.participation, &mut round_rng).unwrap();
         let mut thetas = Vec::new();
         let mut ns = Vec::new();
         for &k in &selected {
@@ -335,7 +339,7 @@ fn reference_fedzip(
     let mut up_bytes = Vec::new();
     for round in 0..cfg.rounds {
         let mut round_rng = base.fork(100 + round as u64);
-        let selected = select_clients(cfg.clients, cfg.participation, &mut round_rng);
+        let selected = select_clients(cfg.clients, cfg.participation, &mut round_rng).unwrap();
         let mut thetas = Vec::new();
         let mut ns = Vec::new();
         let mut scores = Vec::new();

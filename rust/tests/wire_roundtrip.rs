@@ -1,0 +1,168 @@
+//! Seeded property tests over the wire layer: for every strategy in
+//! `StrategyRegistry::builtin()`, random theta sizes/values must
+//! round-trip through `encode_upload` / `encode_download` with the
+//! decode invariant (`ensure_param_count`) holding, decoded values
+//! finite, and wire bytes never above dense — strictly below it for the
+//! compressing strategies. No external property-test crates: cases are
+//! driven by the repo's own deterministic `Rng`.
+
+use fedcompress::baselines::registry::StrategyRegistry;
+use fedcompress::clustering::CentroidState;
+use fedcompress::compression::codec::dense_bytes;
+use fedcompress::config::FedConfig;
+use fedcompress::coordinator::strategy::{RoundContext, ServerModel, UploadInput};
+use fedcompress::util::rng::Rng;
+
+/// Strategies whose *upload* is compressed once compression engages.
+/// (Strategies outside this list must still never exceed dense.)
+const COMPRESSING_UPLOADS: [&str; 3] = ["fedzip", "fedcompress", "topk"];
+
+/// Strategies whose *download* is compressed once SCS has run.
+const COMPRESSING_DOWNLOADS: [&str; 1] = ["fedcompress"];
+
+fn ctx_at<'a>(round: usize, cfg: &'a FedConfig, base: &'a Rng) -> RoundContext<'a> {
+    RoundContext {
+        round,
+        cfg,
+        base,
+        compressing: round >= cfg.warmup_rounds,
+        down_compressed: round > cfg.warmup_rounds,
+    }
+}
+
+/// Random model state: theta from a scaled normal (occasionally with
+/// heavy outliers, the k-means stressor) plus an initialized codebook.
+fn random_state(n: usize, rng: &mut Rng) -> (Vec<f32>, CentroidState) {
+    let scale = 0.05 + rng.f32() * 0.5;
+    let heavy_tail = rng.f32() < 0.3;
+    let theta: Vec<f32> = (0..n)
+        .map(|_| {
+            let w = rng.normal() * scale;
+            if heavy_tail && rng.f32() < 0.01 {
+                w * 50.0
+            } else {
+                w
+            }
+        })
+        .collect();
+    let cents = CentroidState::init_from_weights(&theta, 16, 32, rng);
+    (theta, cents)
+}
+
+#[test]
+fn every_strategy_upload_round_trips_at_random_sizes() {
+    let cfg = FedConfig::quick("cifar10");
+    let base = Rng::new(cfg.seed ^ 0xFEDC);
+    let reg = StrategyRegistry::builtin();
+
+    for name in reg.names() {
+        let strategy = reg.build(name, &cfg).unwrap();
+        let mut case_rng = Rng::new(0xC0FFEE ^ name.len() as u64);
+        for case in 0..12 {
+            // random size in [256, 8447]; both warmup and late rounds
+            let n = 256 + case_rng.below(8192);
+            let (theta, cents) = random_state(n, &mut case_rng);
+            let dense = dense_bytes(n);
+            for round in [0, cfg.warmup_rounds + 2] {
+                let ctx = ctx_at(round, &cfg, &base);
+                let mut enc_rng = base.fork(7_000 + case as u64);
+                let blob = strategy
+                    .encode_upload(
+                        &ctx,
+                        &UploadInput {
+                            client: case,
+                            theta: &theta,
+                            centroids: &cents,
+                        },
+                        &mut enc_rng,
+                    )
+                    .unwrap();
+                // decode invariant: the receiver reconstructs exactly n
+                // params, all finite
+                assert!(
+                    blob.ensure_param_count(n).is_ok(),
+                    "{name} n={n} round={round}: decoded {} params",
+                    blob.theta.len()
+                );
+                assert!(
+                    blob.theta.iter().all(|w| w.is_finite()),
+                    "{name} n={n} round={round}: non-finite decode"
+                );
+                // byte bound: never above dense...
+                assert!(
+                    blob.bytes <= dense,
+                    "{name} n={n} round={round}: {} > dense {dense}",
+                    blob.bytes
+                );
+                // ...and strictly below it for compressing strategies
+                // once compression engages
+                if ctx.compressing && COMPRESSING_UPLOADS.contains(&name) {
+                    assert!(
+                        blob.bytes < dense,
+                        "{name} n={n} round={round}: not compressed ({} vs {dense})",
+                        blob.bytes
+                    );
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn every_strategy_download_round_trips() {
+    let cfg = FedConfig::quick("cifar10");
+    let base = Rng::new(cfg.seed ^ 0xFEDC);
+    let reg = StrategyRegistry::builtin();
+
+    for name in reg.names() {
+        let strategy = reg.build(name, &cfg).unwrap();
+        let mut case_rng = Rng::new(0xD00D ^ name.len() as u64);
+        for _case in 0..8 {
+            let n = 256 + case_rng.below(4096);
+            let (theta, centroids) = random_state(n, &mut case_rng);
+            let model = ServerModel { theta, centroids };
+            let dense = dense_bytes(n);
+            for round in [0, cfg.warmup_rounds + 2] {
+                let ctx = ctx_at(round, &cfg, &base);
+                let blob = strategy.encode_download(&ctx, &model).unwrap();
+                assert!(
+                    blob.ensure_param_count(n).is_ok(),
+                    "{name} n={n} round={round}: decoded {} params",
+                    blob.theta.len()
+                );
+                assert!(blob.theta.iter().all(|w| w.is_finite()));
+                assert!(blob.bytes <= dense, "{name}: {} > {dense}", blob.bytes);
+                if ctx.down_compressed && COMPRESSING_DOWNLOADS.contains(&name) {
+                    assert!(blob.bytes < dense, "{name} n={n}: downstream not compressed");
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn upload_encode_is_deterministic_given_the_rng_fork() {
+    // the serial==parallel guarantee rests on this: same input + same
+    // RNG position => bit-identical blob
+    let cfg = FedConfig::quick("cifar10");
+    let base = Rng::new(cfg.seed ^ 0xFEDC);
+    let reg = StrategyRegistry::builtin();
+    let ctx = ctx_at(cfg.warmup_rounds + 1, &cfg, &base);
+
+    for name in reg.names() {
+        let strategy = reg.build(name, &cfg).unwrap();
+        let mut rng = Rng::new(99);
+        let (theta, cents) = random_state(2048, &mut rng);
+        let input = UploadInput {
+            client: 0,
+            theta: &theta,
+            centroids: &cents,
+        };
+        let mut r1 = base.fork(42);
+        let mut r2 = base.fork(42);
+        let a = strategy.encode_upload(&ctx, &input, &mut r1).unwrap();
+        let b = strategy.encode_upload(&ctx, &input, &mut r2).unwrap();
+        assert_eq!(a.bytes, b.bytes, "{name}");
+        assert_eq!(a.theta, b.theta, "{name}");
+    }
+}
