@@ -1,0 +1,101 @@
+//! Transport hot-path benchmarks: frame encode/decode, full protocol
+//! message round-trips, and loopback TCP frame throughput — the
+//! per-client per-round cost a networked coordinator pays on top of
+//! the codec work `bench_codec` measures. Prints a MiB/s table.
+
+use std::net::{TcpListener, TcpStream};
+use std::thread;
+
+use fedcompress::baselines::wire::WireCodec;
+use fedcompress::bench::bench;
+use fedcompress::net::frame::{encode_frame, framed_len, read_frame, write_frame};
+use fedcompress::net::proto::{Msg, Upload};
+use fedcompress::util::rng::Rng;
+use std::hint::black_box;
+
+fn mib_s(bytes_per_iter: usize, median_ns: f64) -> f64 {
+    (bytes_per_iter as f64 / (1 << 20) as f64) / (median_ns * 1e-9)
+}
+
+fn main() {
+    let mut rng = Rng::new(1);
+    println!(
+        "{:<34} {:>12} {:>10}",
+        "case", "median_ns", "MiB/s"
+    );
+
+    // --- frame codec ------------------------------------------------------
+    for &size in &[1_000usize, 78_696, 1_000_000] {
+        let payload: Vec<u8> = (0..size).map(|_| rng.below(256) as u8).collect();
+        let r = bench(&format!("frame_encode_{size}B"), || {
+            let f = encode_frame(4, black_box(&payload));
+            black_box(f.len());
+        });
+        println!("{:<34} {:>12.0} {:>10.1}", r.name, r.median_ns, mib_s(size, r.median_ns));
+
+        let frame = encode_frame(4, &payload);
+        let r = bench(&format!("frame_decode_{size}B"), || {
+            let (ty, body) = read_frame(&mut black_box(&frame[..])).unwrap();
+            black_box((ty, body.len()));
+        });
+        println!("{:<34} {:>12.0} {:>10.1}", r.name, r.median_ns, mib_s(size, r.median_ns));
+    }
+
+    // --- full Upload message (the per-client per-round unit) --------------
+    let payload: Vec<u8> = (0..20_000).map(|_| rng.below(256) as u8).collect();
+    let upload = Msg::Upload(Upload {
+        round: 3,
+        client: 7,
+        score: 4.5,
+        n: 96,
+        mean_ce: 1.25,
+        mu: (0..32).map(|_| rng.normal()).collect(),
+        codec: WireCodec::Clustered,
+        payload: payload.clone(),
+    });
+    let encoded = {
+        let mut buf = Vec::new();
+        upload.write_to(&mut buf).unwrap();
+        buf
+    };
+    let r = bench("upload_msg_encode_20kB", || {
+        let mut buf = Vec::with_capacity(encoded.len());
+        upload.write_to(&mut buf).unwrap();
+        black_box(buf.len());
+    });
+    println!("{:<34} {:>12.0} {:>10.1}", r.name, r.median_ns, mib_s(encoded.len(), r.median_ns));
+    let r = bench("upload_msg_decode_20kB", || {
+        let m = Msg::read_from(&mut black_box(&encoded[..])).unwrap();
+        black_box(m.kind());
+    });
+    println!("{:<34} {:>12.0} {:>10.1}", r.name, r.median_ns, mib_s(encoded.len(), r.median_ns));
+
+    // --- loopback TCP round-trip ------------------------------------------
+    // an echo peer: every received frame comes straight back
+    let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+    let addr = listener.local_addr().unwrap();
+    let echo = thread::spawn(move || {
+        let (stream, _) = listener.accept().unwrap();
+        stream.set_nodelay(true).ok();
+        while let Ok((ty, payload)) = read_frame(&mut &stream) {
+            if write_frame(&mut &stream, ty, &payload).is_err() {
+                break;
+            }
+        }
+    });
+    let stream = TcpStream::connect(addr).unwrap();
+    stream.set_nodelay(true).ok();
+    for &size in &[1_000usize, 78_696, 1_000_000] {
+        let payload: Vec<u8> = (0..size).map(|_| rng.below(256) as u8).collect();
+        let r = bench(&format!("loopback_roundtrip_{size}B"), || {
+            write_frame(&mut &stream, 4, black_box(&payload)).unwrap();
+            let (_, body) = read_frame(&mut &stream).unwrap();
+            black_box(body.len());
+        });
+        // a round trip moves the frame both ways
+        let moved = 2 * framed_len(size);
+        println!("{:<34} {:>12.0} {:>10.1}", r.name, r.median_ns, mib_s(moved, r.median_ns));
+    }
+    drop(stream);
+    echo.join().unwrap();
+}

@@ -98,6 +98,20 @@ impl FedStrategy for FedCompress {
         "fedcompress"
     }
 
+    fn resume(&mut self, cfg: &FedConfig, scores: &[f64]) -> Result<()> {
+        // replay exactly the observations the original run's controller
+        // saw: `post_aggregate` observes once compression engages and
+        // only for rounds with survivors (a fully-lost round records
+        // score 0.0 and skips the hook), so a resumed run's plateau
+        // window/patience state matches the uninterrupted run's.
+        for (round, &score) in scores.iter().enumerate() {
+            if round >= cfg.warmup_rounds && score != 0.0 {
+                let _ = self.controller.observe(score);
+            }
+        }
+        Ok(())
+    }
+
     fn round_start(&mut self, ctx: &RoundContext<'_>, model: &mut ServerModel) -> Result<()> {
         // warmup boundary: re-seed the codebook from the *trained*
         // weight distribution, not the init one

@@ -20,4 +20,4 @@ pub mod topk;
 pub mod wire;
 
 pub use registry::{StrategyInfo, StrategyRegistry};
-pub use wire::{WireBlob, WireSizeMismatch};
+pub use wire::{WireBlob, WireCodec, WirePayloadMismatch, WireSizeMismatch};

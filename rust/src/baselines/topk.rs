@@ -14,7 +14,7 @@
 
 use anyhow::{bail, Result};
 
-use super::wire::WireBlob;
+use super::wire::{WireBlob, WireCodec};
 use crate::compression::codec::index_bits;
 use crate::compression::sparsify::magnitude_prune;
 use crate::coordinator::strategy::{
@@ -118,6 +118,8 @@ impl FedStrategy for TopK {
         Ok(WireBlob {
             bytes: bytes.len(),
             theta,
+            codec: WireCodec::Sparse,
+            payload: bytes,
         })
     }
 

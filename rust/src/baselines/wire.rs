@@ -25,11 +25,55 @@ use crate::compression::kmeans::kmeans_1d;
 use crate::compression::sparsify::magnitude_prune;
 use crate::util::rng::Rng;
 
+/// Which self-describing payload format a [`WireBlob`] carries — the
+/// tag the networked transport (`net`) uses to decode the payload back
+/// into the exact `theta` the sender holds.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum WireCodec {
+    /// Raw little-endian f32s, 4 bytes per parameter.
+    Dense,
+    /// `compression::codec` format (codebook + packed/Huffman indices).
+    Clustered,
+    /// `baselines::topk` sparse format (positions + values).
+    Sparse,
+    /// Not decodable by the built-in transport. In-process runs carry
+    /// it fine (the decoded `theta` travels by reference); the TCP
+    /// transport rejects it with a typed error.
+    Opaque,
+}
+
+impl WireCodec {
+    pub fn tag(self) -> u8 {
+        match self {
+            WireCodec::Dense => 0,
+            WireCodec::Clustered => 1,
+            WireCodec::Sparse => 2,
+            WireCodec::Opaque => 3,
+        }
+    }
+
+    pub fn from_tag(tag: u8) -> Option<WireCodec> {
+        Some(match tag {
+            0 => WireCodec::Dense,
+            1 => WireCodec::Clustered,
+            2 => WireCodec::Sparse,
+            3 => WireCodec::Opaque,
+            _ => return None,
+        })
+    }
+}
+
 /// What crossed the wire: exact byte count plus the model the receiver
-/// reconstructs.
+/// reconstructs. `payload` is the actual encoded byte stream (what a
+/// networked transport puts on the socket) and `codec` tags its format;
+/// the invariant `payload.len() == bytes` (checked by
+/// [`WireBlob::ensure_payload`]) is what makes the ledger's ideal byte
+/// counts honest on a real wire.
 pub struct WireBlob {
     pub bytes: usize,
     pub theta: Vec<f32>,
+    pub codec: WireCodec,
+    pub payload: Vec<u8>,
 }
 
 /// Typed decode-invariant violation: the reconstructed model does not
@@ -53,13 +97,59 @@ impl fmt::Display for WireSizeMismatch {
 
 impl std::error::Error for WireSizeMismatch {}
 
+/// The payload length does not match the claimed wire byte count — the
+/// blob would lie to the framed-byte ledger. Typed like
+/// [`WireSizeMismatch`].
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct WirePayloadMismatch {
+    pub bytes: usize,
+    pub payload_len: usize,
+}
+
+impl fmt::Display for WirePayloadMismatch {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(
+            f,
+            "wire blob payload length mismatch: claims {} wire bytes, payload is {}",
+            self.bytes, self.payload_len
+        )
+    }
+}
+
+impl std::error::Error for WirePayloadMismatch {}
+
+/// Serialize a weight vector as raw little-endian f32s (the `Dense`
+/// codec payload).
+pub fn dense_payload(theta: &[f32]) -> Vec<u8> {
+    let mut out = Vec::with_capacity(4 * theta.len());
+    for w in theta {
+        out.extend_from_slice(&w.to_le_bytes());
+    }
+    out
+}
+
 impl WireBlob {
     /// Dense f32 transport: lossless, 4 bytes per parameter.
     pub fn dense(theta: &[f32]) -> WireBlob {
         WireBlob {
             bytes: dense_bytes(theta.len()),
             theta: theta.to_vec(),
+            codec: WireCodec::Dense,
+            payload: dense_payload(theta),
         }
+    }
+
+    /// Check the payload-length invariant the framed ledger and the TCP
+    /// transport rely on. `Opaque` blobs are exempt (they never reach a
+    /// socket).
+    pub fn ensure_payload(&self) -> Result<(), WirePayloadMismatch> {
+        if self.codec != WireCodec::Opaque && self.payload.len() != self.bytes {
+            return Err(WirePayloadMismatch {
+                bytes: self.bytes,
+                payload_len: self.payload.len(),
+            });
+        }
+        Ok(())
     }
 
     /// Check the decoded model against the manifest parameter count.
@@ -91,6 +181,8 @@ pub fn kmeans_blob(theta: &[f32], clusters: usize, keep: f64, rng: &mut Rng) -> 
     Ok(WireBlob {
         bytes: enc.wire_bytes(),
         theta: quantized,
+        codec: WireCodec::Clustered,
+        payload: enc.bytes,
     })
 }
 
@@ -119,6 +211,8 @@ pub fn codebook_blob(theta: &[f32], centroids: &CentroidState) -> Result<WireBlo
     Ok(WireBlob {
         bytes: enc.wire_bytes(),
         theta: quantized,
+        codec: WireCodec::Clustered,
+        payload: enc.bytes,
     })
 }
 
@@ -142,6 +236,49 @@ mod tests {
         assert_eq!(blob.bytes, 4 * theta.len());
         assert_eq!(blob.theta, theta);
         assert!(blob.ensure_param_count(theta.len()).is_ok());
+        // the payload is the exact little-endian image of theta
+        assert_eq!(blob.codec, WireCodec::Dense);
+        assert!(blob.ensure_payload().is_ok());
+        let decoded: Vec<f32> = blob
+            .payload
+            .chunks_exact(4)
+            .map(|c| f32::from_le_bytes(c.try_into().unwrap()))
+            .collect();
+        assert_eq!(decoded, theta);
+    }
+
+    /// Every built-in blob helper must satisfy `payload.len() == bytes`
+    /// — the invariant that keeps the framed ledger honest.
+    #[test]
+    fn payload_length_matches_claimed_bytes() {
+        let (theta, cents, mut rng) = setup();
+        for blob in [
+            WireBlob::dense(&theta),
+            kmeans_blob(&theta, 15, 0.6, &mut rng).unwrap(),
+            codebook_blob(&theta, &cents).unwrap(),
+        ] {
+            assert!(blob.ensure_payload().is_ok(), "{:?}", blob.codec);
+            assert_eq!(blob.payload.len(), blob.bytes);
+        }
+        // a lying blob is caught with the typed error
+        let bad = WireBlob {
+            bytes: 10,
+            theta: vec![0.0; 4],
+            codec: WireCodec::Dense,
+            payload: vec![0u8; 16],
+        };
+        let e = bad.ensure_payload().unwrap_err();
+        assert_eq!(e.bytes, 10);
+        assert_eq!(e.payload_len, 16);
+        assert!(e.to_string().contains("payload length mismatch"));
+        // opaque blobs are exempt (in-process only)
+        let opaque = WireBlob {
+            bytes: 10,
+            theta: vec![0.0; 4],
+            codec: WireCodec::Opaque,
+            payload: Vec::new(),
+        };
+        assert!(opaque.ensure_payload().is_ok());
     }
 
     #[test]

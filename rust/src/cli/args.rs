@@ -15,6 +15,8 @@ pub struct Args {
 #[derive(Clone, Debug, PartialEq, Eq)]
 pub enum ParsedCommand {
     Train,
+    Serve,
+    Worker,
     Table1,
     Table2,
     Figure2,
@@ -65,6 +67,8 @@ impl Args {
     pub fn command(&self) -> Result<ParsedCommand> {
         Ok(match self.command.as_str() {
             "train" => ParsedCommand::Train,
+            "serve" => ParsedCommand::Serve,
+            "worker" => ParsedCommand::Worker,
             "table1" => ParsedCommand::Table1,
             "table2" => ParsedCommand::Table2,
             "figure2" => ParsedCommand::Figure2,
@@ -151,6 +155,21 @@ mod tests {
         assert!(a.restrict(&["dataset", "clusters"]).is_err());
         let b = Args::parse(&v(&["table2", "--clusters", "16"])).unwrap();
         assert!(b.restrict(&["dataset", "clusters"]).is_ok());
+    }
+
+    #[test]
+    fn serve_and_worker_commands_parse() {
+        let a = Args::parse(&v(&[
+            "serve", "--bind", "0.0.0.0:7878", "--workers", "4", "--timeout-s", "30",
+        ]))
+        .unwrap();
+        assert_eq!(a.command().unwrap(), ParsedCommand::Serve);
+        assert_eq!(a.flag("bind"), Some("0.0.0.0:7878"));
+        assert_eq!(a.flag("workers"), Some("4"));
+        assert_eq!(a.flag("timeout-s"), Some("30"));
+        let b = Args::parse(&v(&["worker", "--connect", "10.0.0.1:7878"])).unwrap();
+        assert_eq!(b.command().unwrap(), ParsedCommand::Worker);
+        assert_eq!(b.flag("connect"), Some("10.0.0.1:7878"));
     }
 
     #[test]

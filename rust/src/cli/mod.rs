@@ -15,7 +15,11 @@ USAGE:
     fedcompress <COMMAND> [OPTIONS]
 
 COMMANDS:
-    train       run one federated training experiment
+    train       run one federated training experiment (in-process)
+    serve       run the coordinator over TCP: wait for N workers, then
+                train — same seed, same metrics as an in-process run
+    worker      run one worker process against a coordinator; strategy,
+                config and client ids arrive at handshake
     table1      reproduce Table 1 (dAcc/CCR/MCR across strategies)
     table2      reproduce Table 2 (edge inference speedups)
     figure2     reproduce Figure 2 (score vs accuracy correlation)
@@ -38,7 +42,21 @@ COMMON OPTIONS:
     --datasets a,b,c        subset for table1
     --clusters <n>          deployed cluster count for table2
 
-FLEET SIMULATION (train, fleet, figure2, ablate-c):
+NETWORKED TRANSPORT (serve, worker):
+    --bind <addr>           serve: listen address (default 127.0.0.1:7878)
+    --workers <n>           serve: worker connections to wait for (default 1)
+    --timeout-s <s>         serve: per-client upload timeout in real
+                            seconds; late workers are cut like deadline
+                            stragglers (0 = wait forever)
+    --connect <addr>        worker: coordinator address
+
+CHECKPOINTING (train, serve):
+    --checkpoint <file>     write the final model + codebook, stamped
+                            with the transport kind and fleet preset
+    --resume <file>         continue from a checkpoint; a mismatched
+                            transport/fleet logs Event::ResumeMismatch
+
+FLEET SIMULATION (train, serve, fleet, figure2, ablate-c):
     --fleet <name>          fleet preset: ideal|mobile|hostile
                             (default ideal; `fleet` runs all three)
     --dropout <p>           extra per-round client dropout prob in [0,1)
@@ -48,6 +66,8 @@ FLEET SIMULATION (train, fleet, figure2, ablate-c):
 EXAMPLES:
     fedcompress train --dataset cifar10 --strategy fedcompress --preset quick
     fedcompress train --strategy list
+    fedcompress serve --bind 127.0.0.1:7878 --workers 2 --strategy fedcompress
+    fedcompress worker --connect 127.0.0.1:7878
     fedcompress train --fleet mobile --dropout 0.1 --deadline-s 60
     fedcompress table1 --preset quick --datasets cifar10,voxforge
     fedcompress fleet --dataset cifar10 --preset quick --dropout 0.1

@@ -5,6 +5,18 @@
 //! client->server upload. The ledger records each transfer with its
 //! direction and round so experiment drivers can reproduce both the
 //! totals and per-round traces.
+//!
+//! Each transfer carries two byte counts:
+//!
+//! * `bytes` — the *ideal* payload size (what the paper's accounting
+//!   counts, and what CCR/MCR are computed from);
+//! * `framed_bytes` — what the framed TCP protocol (`net`) actually
+//!   puts on the socket for that transfer: payload plus the per-message
+//!   protocol overhead (frame header + message header + fixed
+//!   sidecars). The in-process transport records the same number, so
+//!   ledgers are backend-independent; round-control and centroid-table
+//!   traffic is tracked separately by the TCP transport
+//!   (`net::TcpTransport::control_bytes`).
 
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum Direction {
@@ -18,7 +30,10 @@ pub enum Direction {
 pub struct Transfer {
     pub round: usize,
     pub direction: Direction,
+    /// ideal payload bytes (CCR numerator/denominator material)
     pub bytes: usize,
+    /// payload + protocol overhead on the framed wire
+    pub framed_bytes: usize,
 }
 
 #[derive(Clone, Debug, Default)]
@@ -31,16 +46,27 @@ impl CommLedger {
         Self::default()
     }
 
-    pub fn record(&mut self, round: usize, direction: Direction, bytes: usize) {
+    pub fn record(&mut self, round: usize, direction: Direction, bytes: usize, framed: usize) {
+        debug_assert!(framed >= bytes, "framed bytes cannot undercut the payload");
         self.transfers.push(Transfer {
             round,
             direction,
             bytes,
+            framed_bytes: framed,
         });
+    }
+
+    pub fn transfers(&self) -> &[Transfer] {
+        &self.transfers
     }
 
     pub fn total_bytes(&self) -> usize {
         self.transfers.iter().map(|t| t.bytes).sum()
+    }
+
+    /// Total bytes on the framed wire (payload + protocol overhead).
+    pub fn total_framed_bytes(&self) -> usize {
+        self.transfers.iter().map(|t| t.framed_bytes).sum()
     }
 
     pub fn bytes_in(&self, direction: Direction) -> usize {
@@ -48,6 +74,14 @@ impl CommLedger {
             .iter()
             .filter(|t| t.direction == direction)
             .map(|t| t.bytes)
+            .sum()
+    }
+
+    pub fn framed_in(&self, direction: Direction) -> usize {
+        self.transfers
+            .iter()
+            .filter(|t| t.direction == direction)
+            .map(|t| t.framed_bytes)
             .sum()
     }
 
@@ -87,10 +121,10 @@ mod tests {
     #[test]
     fn totals_and_directions() {
         let mut l = CommLedger::new();
-        l.record(0, Direction::Down, 100);
-        l.record(0, Direction::Up, 40);
-        l.record(1, Direction::Down, 100);
-        l.record(1, Direction::Up, 30);
+        l.record(0, Direction::Down, 100, 124);
+        l.record(0, Direction::Up, 40, 80);
+        l.record(1, Direction::Down, 100, 124);
+        l.record(1, Direction::Up, 30, 70);
         assert_eq!(l.total_bytes(), 270);
         assert_eq!(l.bytes_in(Direction::Down), 200);
         assert_eq!(l.bytes_in(Direction::Up), 70);
@@ -99,18 +133,35 @@ mod tests {
     }
 
     #[test]
+    fn framed_totals_ride_alongside_ideal_bytes() {
+        let mut l = CommLedger::new();
+        l.record(0, Direction::Down, 1000, 1024);
+        l.record(0, Direction::Up, 250, 290);
+        assert_eq!(l.total_framed_bytes(), 1314);
+        assert_eq!(l.framed_in(Direction::Down), 1024);
+        assert_eq!(l.framed_in(Direction::Up), 290);
+        // framed >= ideal on every entry, and the overhead is visible
+        for t in l.transfers() {
+            assert!(t.framed_bytes >= t.bytes);
+            assert!(t.framed_bytes - t.bytes <= 64);
+        }
+        // the ideal totals are untouched by framing
+        assert_eq!(l.total_bytes(), 1250);
+    }
+
+    #[test]
     fn ccr_ratio() {
         let mut base = CommLedger::new();
-        base.record(0, Direction::Down, 1000);
+        base.record(0, Direction::Down, 1000, 1000);
         let mut m = CommLedger::new();
-        m.record(0, Direction::Down, 250);
+        m.record(0, Direction::Down, 250, 250);
         assert!((ccr(&base, &m) - 4.0).abs() < 1e-12);
     }
 
     #[test]
     fn empty_method_ledger_does_not_divide_by_zero() {
         let mut base = CommLedger::new();
-        base.record(0, Direction::Down, 10);
+        base.record(0, Direction::Down, 10, 10);
         let m = CommLedger::new();
         assert!(ccr(&base, &m).is_finite());
     }

@@ -2,10 +2,15 @@
 //! controller score history) so long federated runs survive restarts —
 //! a framework necessity the paper's Flower setup gets for free.
 //!
-//! Binary format (little-endian):
+//! Binary format v2 (little-endian):
 //!   magic "FCCK" | u32 version | u32 round | u32 P | u32 C_max |
 //!   u32 active | f32 theta[P] | f32 mu[C_max] | u32 n_scores |
-//!   f64 scores[n] | u64 checksum (FNV-1a over all preceding bytes)
+//!   f64 scores[n] | str transport | str fleet |
+//!   u64 checksum (FNV-1a over all preceding bytes)
+//! where `str` is u16 length + utf-8 bytes. The transport kind
+//! (`inproc`/`tcp`) and fleet preset record the environment the run
+//! was produced under; resuming under a different one emits
+//! `Event::ResumeMismatch`.
 
 use std::path::Path;
 
@@ -14,7 +19,7 @@ use anyhow::{bail, Context, Result};
 use crate::clustering::CentroidState;
 
 const MAGIC: &[u8; 4] = b"FCCK";
-const VERSION: u32 = 1;
+const VERSION: u32 = 2;
 
 #[derive(Clone, Debug, PartialEq)]
 pub struct Checkpoint {
@@ -23,6 +28,10 @@ pub struct Checkpoint {
     pub mu: Vec<f32>,
     pub active: usize,
     pub scores: Vec<f64>,
+    /// transport kind the run used (`TransportKind::name()`)
+    pub transport: String,
+    /// fleet preset the run used (`FleetPreset::name()`)
+    pub fleet: String,
 }
 
 fn fnv1a(bytes: &[u8]) -> u64 {
@@ -40,6 +49,8 @@ impl Checkpoint {
         theta: &[f32],
         centroids: &CentroidState,
         scores: &[f64],
+        transport: &str,
+        fleet: &str,
     ) -> Checkpoint {
         Checkpoint {
             round,
@@ -47,6 +58,8 @@ impl Checkpoint {
             mu: centroids.mu.clone(),
             active: centroids.active,
             scores: scores.to_vec(),
+            transport: transport.to_string(),
+            fleet: fleet.to_string(),
         }
     }
 
@@ -67,6 +80,10 @@ impl Checkpoint {
         out.extend_from_slice(&(self.scores.len() as u32).to_le_bytes());
         for v in &self.scores {
             out.extend_from_slice(&v.to_le_bytes());
+        }
+        for s in [&self.transport, &self.fleet] {
+            out.extend_from_slice(&(s.len() as u16).to_le_bytes());
+            out.extend_from_slice(s.as_bytes());
         }
         let ck = fnv1a(&out);
         out.extend_from_slice(&ck.to_le_bytes());
@@ -118,12 +135,20 @@ impl Checkpoint {
         for _ in 0..n {
             scores.push(f64::from_le_bytes(take(&mut i, 8)?.try_into()?));
         }
+        let mut read_str = |i: &mut usize| -> Result<String> {
+            let len = u16::from_le_bytes(take(i, 2)?.try_into()?) as usize;
+            Ok(String::from_utf8(take(i, len)?.to_vec())?)
+        };
+        let transport = read_str(&mut i)?;
+        let fleet = read_str(&mut i)?;
         Ok(Checkpoint {
             round,
             theta,
             mu,
             active,
             scores,
+            transport,
+            fleet,
         })
     }
 
@@ -166,7 +191,7 @@ mod tests {
         let mut rng = Rng::new(1);
         let theta: Vec<f32> = (0..500).map(|_| rng.normal()).collect();
         let cents = CentroidState::init_from_weights(&theta, 12, 32, &mut rng);
-        Checkpoint::from_state(7, &theta, &cents, &[1.0, 2.5, 3.25])
+        Checkpoint::from_state(7, &theta, &cents, &[1.0, 2.5, 3.25], "inproc", "ideal")
     }
 
     #[test]
@@ -224,12 +249,17 @@ mod tests {
         let dir = std::env::temp_dir().join("fedcompress_ckpt_resume_test");
         std::fs::create_dir_all(&dir).unwrap();
         let path = dir.join("resume.ckpt");
-        Checkpoint::from_state(4, &theta, &cents, &scores).save(&path).unwrap();
+        Checkpoint::from_state(4, &theta, &cents, &scores, "tcp", "mobile")
+            .save(&path)
+            .unwrap();
 
         let resumed = Checkpoint::load(&path).unwrap();
         assert_eq!(resumed.round, 4);
         assert_eq!(resumed.theta, theta);
         assert_eq!(resumed.scores, scores);
+        // the environment the run was produced under survives the file
+        assert_eq!(resumed.transport, "tcp");
+        assert_eq!(resumed.fleet, "mobile");
         let rc = resumed.centroid_state();
         assert_eq!(rc.mu, cents.mu);
         assert_eq!(rc.mask, cents.mask);
@@ -237,7 +267,7 @@ mod tests {
         assert_eq!(rc.c_max, cents.c_max);
 
         // saving the resumed state reproduces the file byte-for-byte
-        let again = Checkpoint::from_state(4, &theta, &cents, &scores);
+        let again = Checkpoint::from_state(4, &theta, &cents, &scores, "tcp", "mobile");
         assert_eq!(resumed.to_bytes(), again.to_bytes());
     }
 
@@ -259,9 +289,24 @@ mod tests {
         let mut rng = Rng::new(2);
         let theta: Vec<f32> = (0..32).map(|_| rng.normal()).collect();
         let cents = CentroidState::init_from_weights(&theta, 4, 8, &mut rng);
-        let c = Checkpoint::from_state(0, &theta, &cents, &[]);
+        let c = Checkpoint::from_state(0, &theta, &cents, &[], "inproc", "ideal");
         let d = Checkpoint::from_bytes(&c.to_bytes()).unwrap();
         assert_eq!(c, d);
         assert!(d.scores.is_empty());
+    }
+
+    /// v1 files (no environment metadata) are refused loudly rather
+    /// than silently defaulted — the resume contract depends on the
+    /// recorded transport/fleet being real.
+    #[test]
+    fn version_one_files_are_rejected() {
+        let c = demo();
+        let mut bytes = c.to_bytes();
+        bytes[4] = 1;
+        let body_len = bytes.len() - 8;
+        let ck = fnv1a(&bytes[..body_len]);
+        bytes[body_len..].copy_from_slice(&ck.to_le_bytes());
+        let err = Checkpoint::from_bytes(&bytes).unwrap_err().to_string();
+        assert!(err.contains("version 1"), "{err}");
     }
 }

@@ -89,6 +89,17 @@ pub enum Event {
         client: usize,
         sim_s: f64,
     },
+    /// A checkpoint was resumed under a different transport kind or
+    /// fleet preset than it was produced under. The run proceeds, but
+    /// comparability with the original is no longer guaranteed.
+    ResumeMismatch {
+        /// round the resumed run starts at
+        round: usize,
+        ckpt_transport: String,
+        ckpt_fleet: String,
+        run_transport: String,
+        run_fleet: String,
+    },
 }
 
 impl Event {
@@ -102,7 +113,8 @@ impl Event {
             | Event::ControllerGrow { round, .. }
             | Event::Evaluated { round, .. }
             | Event::Dropout { round, .. }
-            | Event::Deadline { round, .. } => *round,
+            | Event::Deadline { round, .. }
+            | Event::ResumeMismatch { round, .. } => *round,
         }
     }
 
@@ -117,6 +129,7 @@ impl Event {
             Event::Evaluated { .. } => "evaluated",
             Event::Dropout { .. } => "dropout",
             Event::Deadline { .. } => "deadline",
+            Event::ResumeMismatch { .. } => "resume_mismatch",
         }
     }
 
@@ -174,6 +187,18 @@ impl Event {
                 pairs.push(("client", Json::from(*client)));
                 pairs.push(("sim_s", Json::num(*sim_s)));
             }
+            Event::ResumeMismatch {
+                ckpt_transport,
+                ckpt_fleet,
+                run_transport,
+                run_fleet,
+                ..
+            } => {
+                pairs.push(("ckpt_transport", Json::str(ckpt_transport)));
+                pairs.push(("ckpt_fleet", Json::str(ckpt_fleet)));
+                pairs.push(("run_transport", Json::str(run_transport)));
+                pairs.push(("run_fleet", Json::str(run_fleet)));
+            }
         }
         Json::obj(pairs)
     }
@@ -229,6 +254,13 @@ impl Event {
                 round,
                 client: j.get("client")?.as_usize()?,
                 sim_s: j.get("sim_s")?.as_f64()?,
+            },
+            "resume_mismatch" => Event::ResumeMismatch {
+                round,
+                ckpt_transport: j.get("ckpt_transport")?.as_str()?.to_string(),
+                ckpt_fleet: j.get("ckpt_fleet")?.as_str()?.to_string(),
+                run_transport: j.get("run_transport")?.as_str()?.to_string(),
+                run_fleet: j.get("run_fleet")?.as_str()?.to_string(),
             },
             other => bail!("unknown event kind '{other}'"),
         })
@@ -382,6 +414,13 @@ mod tests {
             client: 7,
             sim_s: 31.4159,
         });
+        log.push(Event::ResumeMismatch {
+            round: 3,
+            ckpt_transport: "inproc".into(),
+            ckpt_fleet: "ideal".into(),
+            run_transport: "tcp".into(),
+            run_fleet: "mobile".into(),
+        });
         log
     }
 
@@ -403,6 +442,10 @@ mod tests {
         assert_eq!(j.get("client").unwrap().as_usize().unwrap(), 5);
         let j = log.of_kind("deadline").next().unwrap().to_json();
         assert!((j.get("sim_s").unwrap().as_f64().unwrap() - 31.4159).abs() < 1e-12);
+        let j = log.of_kind("resume_mismatch").next().unwrap().to_json();
+        assert_eq!(j.get("ckpt_transport").unwrap().as_str().unwrap(), "inproc");
+        assert_eq!(j.get("run_transport").unwrap().as_str().unwrap(), "tcp");
+        assert_eq!(j.get("run_fleet").unwrap().as_str().unwrap(), "mobile");
         // phase strings parse back, garbage does not
         assert_eq!("upload".parse::<DropPhase>().unwrap(), DropPhase::BeforeUpload);
         assert!("sideways".parse::<DropPhase>().is_err());

@@ -57,6 +57,14 @@ impl RunResult {
         self.ledger.total_bytes()
     }
 
+    /// Total bytes the framed wire carries for this run's ledgered
+    /// transfers (payload + per-message protocol overhead). Identical
+    /// across transport backends: the in-process transport records the
+    /// framing the TCP protocol would have paid.
+    pub fn total_framed_bytes(&self) -> usize {
+        self.ledger.total_framed_bytes()
+    }
+
     pub fn accuracy_trace(&self) -> Vec<f64> {
         self.rounds.iter().map(|r| r.accuracy).collect()
     }

@@ -16,7 +16,9 @@ pub mod server;
 pub mod strategy;
 
 pub use metrics::{RoundMetrics, RunResult};
-pub use server::{run_federated, run_federated_with_data, run_with_strategy};
+pub use server::{
+    run_federated, run_federated_with_data, run_with_strategy, run_with_strategy_opts,
+};
 pub use strategy::{
     ClientTrainOpts, ClientUpdate, FedStrategy, FinalModel, RoundContext, ServerEnv, ServerModel,
     UploadInput,

@@ -1,35 +1,35 @@
-//! The federated server (paper Algorithm 1) as a strategy-agnostic
-//! driver.
+//! The federated server (paper Algorithm 1) as a strategy-agnostic,
+//! transport-agnostic driver.
 //!
 //! Per round: `round_start` hook, dispatch the encoded model to the
-//! selected clients (ledgered), run ClientUpdate on each, fan the
-//! per-client upload encode out over `util::threadpool::parallel_map`,
+//! selected clients (ledgered, with both ideal and framed byte
+//! counts), hand the round to the configured [`Transport`] — which
+//! trains and encodes either in this process (`net::InProcess`, the
+//! default) or on remote worker processes over framed TCP
+//! (`net::TcpTransport`) — then fold the collected uploads through
 //! `aggregate`, `post_aggregate` (where FedCompress's SelfCompress +
-//! cluster growth live), then evaluate the *deliverable* model (the one
+//! cluster growth live), and evaluate the *deliverable* model (the one
 //! that would be dispatched next round) — which is what Table 1's
 //! accuracy reports. Every per-strategy decision flows through the
-//! [`FedStrategy`](super::strategy::FedStrategy) hooks; this file
-//! contains no strategy branches.
+//! [`FedStrategy`](super::strategy::FedStrategy) hooks; every
+//! per-backend decision flows through the
+//! [`Transport`](crate::net::Transport) trait; this file contains no
+//! strategy and no transport branches.
 //!
-//! Parallelism: the PJRT engine wraps `Rc` and is thread-confined, so
-//! the engine-bound *train* phase runs serially on the coordinator
-//! thread (faithful to a single shared accelerator — XLA's intra-op
-//! pool keeps the cores busy), while the pure-CPU *encode* phase
-//! (k-means + Huffman, the dominant rust-side cost) runs on the worker
-//! pool. Each client owns a deterministic RNG fork, so results are
-//! independent of worker count and bit-identical to serial execution.
+//! Losses from any source — sim-scheduled faults, sim deadline cuts,
+//! and (TCP only) dead workers or real per-client timeouts — land in
+//! the same `Event::Dropout`/`Event::Deadline` machinery, so a real
+//! straggler is indistinguishable from a simulated one downstream.
 
 use anyhow::Result;
 
-use super::events::{DropPhase, Event, EventLog};
+use super::checkpoint::Checkpoint;
+use super::events::{Event, EventLog};
 use super::metrics::{RoundMetrics, RunResult};
 use super::selection::select_clients;
-use super::strategy::{
-    ClientUpdate, FedStrategy, RoundContext, ServerEnv, ServerModel, UploadInput,
-};
+use super::strategy::{ClientUpdate, FedStrategy, RoundContext, ServerEnv, ServerModel};
 use crate::baselines::registry::StrategyRegistry;
-use crate::baselines::wire::WireBlob;
-use crate::client::trainer::{evaluate, train_local, ClientOutcome};
+use crate::client::trainer::evaluate;
 use crate::clustering::CentroidState;
 use crate::compression::accounting::{CommLedger, Direction};
 use crate::compression::codec::dense_bytes;
@@ -37,10 +37,12 @@ use crate::config::FedConfig;
 use crate::data::{ood, partition::sigma_to_alpha, partition_dirichlet, synth, Dataset};
 use crate::info;
 use crate::models::flops::total_flops;
+use crate::net::proto::{framed_down, framed_up};
+use crate::net::{ClientResult, InProcess, Participant, RoundEnv, RoundSpec, Transport};
 use crate::runtime::Engine;
-use crate::sim::{ClientFate, FleetSim};
+use crate::sim::FleetSim;
 use crate::util::rng::Rng;
-use crate::util::threadpool::{default_workers, parallel_map};
+use crate::util::threadpool::default_workers;
 
 /// Everything a run needs in memory: client shards, unlabeled shards,
 /// test split, server OOD set.
@@ -49,6 +51,18 @@ pub struct FederatedData {
     pub unlabeled: Vec<Dataset>,
     pub test: Dataset,
     pub ood: Dataset,
+}
+
+/// Root RNG of a run. Part of the wire protocol's determinism
+/// contract: TCP workers derive the same root from the config image.
+pub fn run_rng(cfg: &FedConfig) -> Rng {
+    Rng::new(cfg.seed ^ 0xFEDC)
+}
+
+/// RNG stream id for client `k`'s local update in `round` — the other
+/// half of the determinism contract (`net` module docs).
+pub fn client_stream(round: usize, clients: usize, k: usize) -> u64 {
+    10_000 + (round * clients + k) as u64
 }
 
 /// Materialize the synthetic federated environment for a config.
@@ -81,16 +95,6 @@ pub fn build_data(engine: &Engine, cfg: &FedConfig) -> Result<FederatedData> {
     })
 }
 
-/// One trained client awaiting upload encoding: the training outcome,
-/// the client's RNG positioned exactly where training left it, and the
-/// straggler slowdown the fault schedule assigned for this round.
-struct TrainedClient {
-    client: usize,
-    outcome: ClientOutcome,
-    rng: Rng,
-    slowdown: f64,
-}
-
 /// Training FLOPs per sample per epoch: forward + backward is ~3x the
 /// forward pass (the standard estimate the fleet clock runs on).
 const TRAIN_FLOPS_FACTOR: f64 = 3.0;
@@ -116,15 +120,34 @@ pub fn run_federated_with_data(
     run_with_strategy(engine, cfg, plugin.as_mut(), data)
 }
 
-/// The strategy-agnostic round loop. `strategy` must be a fresh
-/// instance (stateful strategies assume one run per instance).
+/// The strategy-agnostic round loop on the default in-process
+/// transport. `strategy` must be a fresh instance (stateful strategies
+/// assume one run per instance).
 pub fn run_with_strategy(
     engine: &Engine,
     cfg: &FedConfig,
     strategy: &mut dyn FedStrategy,
     data: &FederatedData,
 ) -> Result<RunResult> {
-    let base = Rng::new(cfg.seed ^ 0xFEDC);
+    let mut transport = InProcess;
+    run_with_strategy_opts(engine, cfg, strategy, data, &mut transport, None)
+}
+
+/// The full-control entry point: any [`Transport`] backend, optional
+/// resume from a [`Checkpoint`]. A resumed run continues from the
+/// checkpoint's round cursor with its theta/centroids; a checkpoint
+/// produced under a different transport kind or fleet preset still
+/// runs, but emits [`Event::ResumeMismatch`] so the divergence is on
+/// the record.
+pub fn run_with_strategy_opts(
+    engine: &Engine,
+    cfg: &FedConfig,
+    strategy: &mut dyn FedStrategy,
+    data: &FederatedData,
+    transport: &mut dyn Transport,
+    resume: Option<&Checkpoint>,
+) -> Result<RunResult> {
+    let base = run_rng(cfg);
     let spec = &engine.manifest.dataset(&cfg.dataset)?.spec;
     let p = spec.param_count;
     let c_max = engine.manifest.c_max;
@@ -150,13 +173,50 @@ pub fn run_with_strategy(
 
     let mut ledger = CommLedger::new();
     let mut events = EventLog::new();
-    let mut rounds = Vec::with_capacity(cfg.rounds);
+    let mut start_round = 0usize;
+    if let Some(ckpt) = resume {
+        anyhow::ensure!(
+            ckpt.theta.len() == p,
+            "checkpoint carries {} params, the {} model has {p}",
+            ckpt.theta.len(),
+            cfg.dataset
+        );
+        anyhow::ensure!(
+            ckpt.round < cfg.rounds,
+            "checkpoint is already at round {} of {}; raise `--set rounds=N` to continue",
+            ckpt.round,
+            cfg.rounds
+        );
+        model.theta = ckpt.theta.clone();
+        model.centroids = ckpt.centroid_state();
+        start_round = ckpt.round;
+        // stateful strategies (FedCompress's plateau controller) replay
+        // the recorded score history so continuation is exact
+        strategy.resume(cfg, &ckpt.scores)?;
+        let run_transport = transport.kind().name();
+        let run_fleet = cfg.fleet.preset.name();
+        if ckpt.transport != run_transport || ckpt.fleet != run_fleet {
+            info!(
+                "resume mismatch: checkpoint from transport={}/fleet={}, run is {}/{}",
+                ckpt.transport, ckpt.fleet, run_transport, run_fleet
+            );
+            events.push(Event::ResumeMismatch {
+                round: start_round,
+                ckpt_transport: ckpt.transport.clone(),
+                ckpt_fleet: ckpt.fleet.clone(),
+                run_transport: run_transport.to_string(),
+                run_fleet: run_fleet.to_string(),
+            });
+        }
+    }
+
+    let mut rounds = Vec::with_capacity(cfg.rounds - start_round);
     let workers = match cfg.upload_workers {
         0 => default_workers().max(1),
         w => w,
     };
 
-    for round in 0..cfg.rounds {
+    for round in start_round..cfg.rounds {
         let t0 = std::time::Instant::now();
         let mut round_rng = base.fork(100 + round as u64);
         let ctx = RoundContext {
@@ -180,10 +240,11 @@ pub fn run_with_strategy(
         let fates = sim.round_fates(round, &selected);
         let down = strategy.encode_download(&ctx, &model)?;
         down.ensure_param_count(p)?;
+        let down_framed = framed_down(down.bytes);
         for &k in &selected {
             // the server pushes the dispatch before it can know which
             // clients will fault, so every selected client is ledgered
-            ledger.record(round, Direction::Down, down.bytes);
+            ledger.record(round, Direction::Down, down.bytes, down_framed);
             events.push(Event::Dispatch {
                 round,
                 client: k,
@@ -192,113 +253,107 @@ pub fn run_with_strategy(
             });
         }
 
-        // --- client updates (engine-bound, coordinator thread) ------------
-        // Faulted clients never reach the server: their training (if
-        // any) is discarded, so the engine work is skipped outright —
-        // harmless, since every client owns an independent RNG fork.
+        // --- client updates via the transport -----------------------------
+        let participants: Vec<Participant> = selected
+            .iter()
+            .zip(&fates)
+            .map(|(&client, &fate)| Participant { client, fate })
+            .collect();
         let opts = strategy.client_train_opts(&ctx);
-        let mut trained = Vec::with_capacity(selected.len());
+        let round_spec = RoundSpec {
+            round,
+            down: &down,
+            centroids: &model.centroids,
+            opts,
+            compressing: ctx.compressing,
+            down_compressed: ctx.down_compressed,
+            participants: &participants,
+        };
+        let env = RoundEnv {
+            engine,
+            cfg,
+            data,
+            base: &base,
+            encode_workers: workers,
+        };
+        let results = transport.run_round(&env, &*strategy, &round_spec)?;
+        anyhow::ensure!(
+            results.len() == participants.len(),
+            "transport returned {} results for {} participants",
+            results.len(),
+            participants.len()
+        );
+
+        // --- losses (sim faults + transport faults) -----------------------
         let mut fault_drops = 0usize;
-        for (&k, fate) in selected.iter().zip(&fates) {
-            let phase = match fate {
-                ClientFate::Healthy { .. } => None,
-                ClientFate::DropBeforeTrain => Some(DropPhase::BeforeTrain),
-                ClientFate::DropBeforeUpload => Some(DropPhase::BeforeUpload),
-            };
-            if let Some(phase) = phase {
+        for (part, res) in participants.iter().zip(&results) {
+            if let ClientResult::Dropped(phase) = res {
                 fault_drops += 1;
                 events.push(Event::Dropout {
                     round,
-                    client: k,
-                    phase,
+                    client: part.client,
+                    phase: *phase,
                 });
-                continue;
             }
-            let mut client_rng = base.fork(10_000 + (round * cfg.clients + k) as u64);
-            let outcome = train_local(
-                engine,
-                cfg,
-                &data.labeled[k],
-                &data.unlabeled[k],
-                &down.theta,
-                &model.centroids,
-                opts.weight_clustering,
-                &mut client_rng,
-            )?;
-            trained.push(TrainedClient {
-                client: k,
-                outcome,
-                rng: client_rng,
-                slowdown: fate.slowdown(),
-            });
         }
 
-        // --- upload encoding (pure CPU, worker pool) ----------------------
-        let blobs: Vec<Result<WireBlob>> = {
-            let strat: &dyn FedStrategy = &*strategy;
-            let centroids = &model.centroids;
-            let ctx = &ctx;
-            parallel_map(trained.len(), workers, |i| {
-                let t = &trained[i];
-                // the client's learned centroids ride along for the snap
-                let mut client_cents = centroids.clone();
-                client_cents.mu.clone_from(&t.outcome.mu);
-                let mut rng = t.rng.clone();
-                strat.encode_upload(
-                    ctx,
-                    &UploadInput {
-                        client: t.client,
-                        theta: &t.outcome.theta,
-                        centroids: &client_cents,
-                    },
-                    &mut rng,
-                )
-            })
-        };
-
         // --- deadline + receive (simulated round clock) -------------------
-        let mut uploads = Vec::with_capacity(trained.len());
+        let mut uploads = Vec::with_capacity(participants.len());
         let mut ce_sum = 0.0f64;
         let mut up_bytes_round = 0usize;
         let mut max_reporting_s = 0.0f64;
         let mut deadline_drops = 0usize;
-        for (t, blob) in trained.iter().zip(blobs) {
-            let up = blob?;
-            up.ensure_param_count(p)?;
+        for (part, res) in participants.iter().zip(results) {
+            let up = match res {
+                ClientResult::Dropped(_) => continue,
+                ClientResult::TimedOut { elapsed_s } => {
+                    // a *real* straggler cut by the transport's timeout
+                    deadline_drops += 1;
+                    events.push(Event::Deadline {
+                        round,
+                        client: part.client,
+                        sim_s: elapsed_s,
+                    });
+                    continue;
+                }
+                ClientResult::Upload(up) => up,
+            };
+            up.blob.ensure_param_count(p)?;
             let sim_s = sim.client_time_s(
-                t.client,
+                part.client,
                 down.bytes,
-                up.bytes,
-                data.labeled[t.client].len(),
+                up.blob.bytes,
+                data.labeled[part.client].len(),
                 cfg.local_epochs,
-                t.slowdown,
+                part.fate.slowdown(),
             );
             if sim.clock().over_deadline(sim_s) {
                 deadline_drops += 1;
                 events.push(Event::Deadline {
                     round,
-                    client: t.client,
+                    client: part.client,
                     sim_s,
                 });
                 continue;
             }
             max_reporting_s = max_reporting_s.max(sim_s);
-            ledger.record(round, Direction::Up, up.bytes);
-            up_bytes_round += up.bytes;
+            let up_framed = framed_up(up.blob.bytes);
+            ledger.record(round, Direction::Up, up.blob.bytes, up_framed);
+            up_bytes_round += up.blob.bytes;
             events.push(Event::Upload {
                 round,
-                client: t.client,
-                bytes: up.bytes,
-                score: t.outcome.score,
-                mean_ce: t.outcome.mean_ce as f64,
+                client: part.client,
+                bytes: up.blob.bytes,
+                score: up.score,
+                mean_ce: up.mean_ce as f64,
             });
-            ce_sum += t.outcome.mean_ce as f64;
+            ce_sum += up.mean_ce as f64;
             uploads.push(ClientUpdate {
-                client: t.client,
-                theta: up.theta,
-                mu: t.outcome.mu.clone(),
-                score: t.outcome.score,
-                n: t.outcome.n,
+                client: part.client,
+                theta: up.blob.theta,
+                mu: up.mu,
+                score: up.score,
+                n: up.n,
             });
         }
         let dropped = fault_drops + deadline_drops;

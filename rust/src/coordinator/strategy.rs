@@ -121,6 +121,16 @@ pub trait FedStrategy: Send + Sync {
     /// Registry name; also the label on `RunResult` rows.
     fn name(&self) -> &'static str;
 
+    /// Rehydrate plateau/controller state when a run continues from a
+    /// checkpoint: `scores` are the original run's per-round aggregated
+    /// scores (index = round, exactly `Checkpoint::scores`). Stateless
+    /// strategies ignore it; FedCompress replays its cluster
+    /// controller so a resumed run continues the uninterrupted one
+    /// bit-for-bit.
+    fn resume(&mut self, _cfg: &FedConfig, _scores: &[f64]) -> Result<()> {
+        Ok(())
+    }
+
     /// Mutate server state before dispatch (codebook re-seeds, ...).
     fn round_start(&mut self, _ctx: &RoundContext<'_>, _model: &mut ServerModel) -> Result<()> {
         Ok(())

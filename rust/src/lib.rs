@@ -66,6 +66,36 @@
 //!   — the scenario table: every registered strategy under the fleet
 //!   presets, comparing rounds-to-accuracy and simulated
 //!   time-to-accuracy (`exp::fleet`).
+//!
+//! # Networked transport
+//!
+//! The round loop drives a [`net::Transport`]: the default
+//! [`net::InProcess`] backend trains and encodes in this process
+//! (byte-identical to the historical coordinator), while
+//! [`net::TcpTransport`] speaks a framed binary protocol
+//! (magic + version + type + length + CRC32; see [`net::frame`]) to
+//! worker processes. Workers rebuild the whole experiment — data
+//! shards, RNG streams, strategy plugin — from the config image in the
+//! `HelloAck` handshake, so only (encoded) models cross the wire and a
+//! loopback run reproduces the in-process run bit-exactly. The ledger
+//! records `framed_bytes` (payload + protocol overhead, ≤ 64 bytes per
+//! message) alongside the ideal `bytes`; round control and centroid
+//! sidecars are tracked as `TcpTransport::control_bytes`.
+//!
+//! CLI surface:
+//!
+//! * `fedcompress serve --bind ADDR --workers N [--timeout-s s]
+//!   [train options...]` — run the coordinator: wait for `N` workers,
+//!   then train over TCP. `--timeout-s` bounds each per-client upload
+//!   wait; late workers surface as `Event::Deadline`, dead ones as
+//!   `Event::Dropout` — the same fault machinery the simulator feeds.
+//! * `fedcompress worker --connect ADDR [--artifacts dir]` — run one
+//!   worker process. Everything else (strategy, config, client ids)
+//!   arrives at handshake.
+//! * `fedcompress train --resume ckpt [...]` / `serve --resume ckpt` —
+//!   continue a checkpointed run; the checkpoint records the transport
+//!   kind + fleet preset it was produced under and the run emits
+//!   `Event::ResumeMismatch` when they differ.
 
 pub mod baselines;
 pub mod bench;
@@ -81,6 +111,7 @@ pub mod edge;
 pub mod exp;
 pub mod linalg;
 pub mod models;
+pub mod net;
 pub mod runtime;
 pub mod sim;
 pub mod util;

@@ -70,7 +70,7 @@ mod tests {
     use crate::util::rng::Rng;
 
     fn sorted(mut v: Vec<f64>) -> Vec<f64> {
-        v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        v.sort_by(f64::total_cmp);
         v
     }
 

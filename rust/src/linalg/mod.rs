@@ -23,7 +23,9 @@ pub fn singular_values(a: &Matrix) -> Vec<f64> {
         a.gram_t() // A A^T : rows x rows
     };
     let mut eig = symmetric_eigenvalues(&gram);
-    eig.sort_by(|x, y| y.partial_cmp(x).unwrap());
+    // total_cmp: a NaN eigenvalue (degenerate embedding batch) must not
+    // panic the coordinator mid-run
+    eig.sort_by(|x, y| y.total_cmp(x));
     eig.into_iter().map(|l| l.max(0.0).sqrt()).collect()
 }
 

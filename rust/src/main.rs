@@ -1,18 +1,21 @@
 //! fedcompress — leader binary: CLI over the experiment drivers.
 
 use std::path::{Path, PathBuf};
+use std::time::Duration;
 
-use anyhow::Result;
+use anyhow::{Context, Result};
 
 use fedcompress::baselines::StrategyRegistry;
 use fedcompress::cli::{Args, ParsedCommand, USAGE};
 use fedcompress::clustering::ControllerConfig;
 use fedcompress::compression::accounting::ccr;
 use fedcompress::config::FedConfig;
-use fedcompress::coordinator::run_federated;
+use fedcompress::coordinator::checkpoint::Checkpoint;
 use fedcompress::coordinator::server::{build_data, run_federated_with_data};
+use fedcompress::coordinator::{run_with_strategy_opts, RunResult};
 use fedcompress::exp::{figure2, fleet, table1, table2};
 use fedcompress::models::flops;
+use fedcompress::net::{worker, InProcess, TcpServer, Transport};
 use fedcompress::runtime::Engine;
 use fedcompress::sim::FleetPreset;
 use fedcompress::util::logging;
@@ -55,6 +58,51 @@ fn engine_for(args: &Args) -> Result<Engine> {
     Engine::load(&dir)
 }
 
+/// `--resume ckpt`: load the checkpoint a run continues from.
+fn load_resume(args: &Args) -> Result<Option<Checkpoint>> {
+    match args.flag("resume") {
+        Some(path) => Ok(Some(Checkpoint::load(Path::new(path))?)),
+        None => Ok(None),
+    }
+}
+
+/// Shared tail of `train`/`serve`: summary line, checkpoint stamped
+/// with the run environment, event log.
+fn finish_run(args: &Args, cfg: &FedConfig, result: &RunResult, transport: &str) -> Result<()> {
+    println!(
+        "\n[{}] {}: final acc={:.4} total_comm={} B (framed {} B) mcr={:.2} \
+         (dense model {} B, wire {} B)",
+        result.strategy,
+        result.dataset,
+        result.final_accuracy,
+        result.total_bytes(),
+        result.total_framed_bytes(),
+        result.mcr(),
+        result.dense_model_bytes,
+        result.final_model_bytes,
+    );
+    // persist the final model + codebook as a resumable checkpoint
+    if let Some(path) = args.flag("checkpoint") {
+        let scores: Vec<f64> = result.rounds.iter().map(|r| r.score).collect();
+        let ckpt = Checkpoint::from_state(
+            cfg.rounds,
+            &result.final_theta,
+            &result.final_centroids,
+            &scores,
+            transport,
+            cfg.fleet.preset.name(),
+        );
+        ckpt.save(Path::new(path))?;
+        println!("checkpoint written to {path}");
+    }
+    // structured event log (JSON lines) for observability tooling
+    if let Some(path) = args.flag("events") {
+        std::fs::write(path, result.events.to_jsonl())?;
+        println!("event log ({} events) written to {path}", result.events.len());
+    }
+    Ok(())
+}
+
 fn cmd_train(args: &Args) -> Result<()> {
     let strategy = args.flag_or("strategy", "fedcompress");
     // `--strategy list` prints the registry without needing artifacts
@@ -65,36 +113,77 @@ fn cmd_train(args: &Args) -> Result<()> {
     let cfg = build_config(args)?;
     // resolve early so a typo fails with a suggestion before the
     // engine spins up
-    StrategyRegistry::builtin().build(strategy, &cfg)?;
+    let mut plugin = StrategyRegistry::builtin().build(strategy, &cfg)?;
     let engine = engine_for(args)?;
-    let result = run_federated(&engine, &cfg, strategy)?;
+    let data = build_data(&engine, &cfg)?;
+    let resume = load_resume(args)?;
+    let mut transport = InProcess;
+    let result = run_with_strategy_opts(
+        &engine,
+        &cfg,
+        plugin.as_mut(),
+        &data,
+        &mut transport,
+        resume.as_ref(),
+    )?;
+    finish_run(args, &cfg, &result, transport.kind().name())
+}
+
+/// The networked coordinator: wait for N workers, then run the same
+/// round loop over framed TCP.
+fn cmd_serve(args: &Args) -> Result<()> {
+    let strategy = args.flag_or("strategy", "fedcompress");
+    let cfg = build_config(args)?;
+    let mut plugin = StrategyRegistry::builtin().build(strategy, &cfg)?;
+    // fail on missing artifacts *before* holding a port open
+    let engine = engine_for(args)?;
+    let data = build_data(&engine, &cfg)?;
+    let resume = load_resume(args)?;
+
+    let bind = args.flag_or("bind", "127.0.0.1:7878");
+    let workers: usize = args.flag_or("workers", "1").parse()?;
+    let timeout_s: f64 = args.flag_or("timeout-s", "0").parse()?;
+    anyhow::ensure!(timeout_s >= 0.0, "--timeout-s must be >= 0");
+    let timeout = (timeout_s > 0.0).then(|| Duration::from_secs_f64(timeout_s));
+
+    let server = TcpServer::bind(bind, workers, &cfg, strategy, timeout)?;
     println!(
-        "\n[{}] {}: final acc={:.4} total_comm={} B mcr={:.2} (dense model {} B, wire {} B)",
-        result.strategy,
-        result.dataset,
-        result.final_accuracy,
-        result.total_bytes(),
-        result.mcr(),
-        result.dense_model_bytes,
-        result.final_model_bytes,
+        "coordinator listening on {} — waiting for {workers} worker(s) \
+         (fedcompress worker --connect <addr>)",
+        server.local_addr()?
     );
-    // persist the final model + codebook as a resumable checkpoint
-    if let Some(path) = args.flag("checkpoint") {
-        let scores: Vec<f64> = result.rounds.iter().map(|r| r.score).collect();
-        let ckpt = fedcompress::coordinator::checkpoint::Checkpoint::from_state(
-            cfg.rounds,
-            &result.final_theta,
-            &result.final_centroids,
-            &scores,
-        );
-        ckpt.save(Path::new(path))?;
-        println!("checkpoint written to {path}");
-    }
-    // structured event log (JSON lines) for observability tooling
-    if let Some(path) = args.flag("events") {
-        std::fs::write(path, result.events.to_jsonl())?;
-        println!("event log ({} events) written to {path}", result.events.len());
-    }
+    let mut transport = server.accept_workers()?;
+    let result = run_with_strategy_opts(
+        &engine,
+        &cfg,
+        plugin.as_mut(),
+        &data,
+        &mut transport,
+        resume.as_ref(),
+    )?;
+    transport.shutdown()?;
+    println!(
+        "control-plane traffic: {} B across handshake + round control \
+         ({} of {} workers still alive)",
+        transport.control_bytes(),
+        transport.alive_workers(),
+        workers
+    );
+    finish_run(args, &cfg, &result, "tcp")
+}
+
+/// One worker process; everything but the address and artifacts dir
+/// arrives at handshake.
+fn cmd_worker(args: &Args) -> Result<()> {
+    let addr = args
+        .flag("connect")
+        .context("worker needs --connect <addr>")?;
+    let dir = args
+        .flag("artifacts")
+        .map(PathBuf::from)
+        .unwrap_or_else(fedcompress::runtime::artifacts::default_dir);
+    let uploads = worker::run_worker(addr, &dir)?;
+    println!("worker finished cleanly after {uploads} uploads");
     Ok(())
 }
 
@@ -239,6 +328,8 @@ fn main() -> Result<()> {
             Ok(())
         }
         ParsedCommand::Train => cmd_train(&args),
+        ParsedCommand::Serve => cmd_serve(&args),
+        ParsedCommand::Worker => cmd_worker(&args),
         ParsedCommand::Table1 => cmd_table1(&args),
         ParsedCommand::Table2 => cmd_table2(&args),
         ParsedCommand::Figure2 => cmd_figure2(&args),

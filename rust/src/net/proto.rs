@@ -1,0 +1,747 @@
+//! The coordinator/worker message vocabulary with explicit
+//! little-endian serialization — no external serde, every byte
+//! accounted for.
+//!
+//! ```text
+//! worker                     coordinator
+//!   │── Hello{version} ────────▶│   (one per connection)
+//!   │◀─ HelloAck{ids, cfg} ─────│   deterministic client-id grant
+//!   │                           │
+//!   │◀─ RoundOpen{r, μ, flags} ─│   per round, per worker
+//!   │◀─ Download{r, k, blob} ───│   per selected healthy client
+//!   │── Upload{r, k, blob, …} ─▶│   training result + sidecars
+//!   │◀─ RoundClose{r} ──────────│
+//!   │        ⋮                  │
+//!   │◀─ Shutdown ───────────────│   end of run
+//! ```
+//!
+//! Byte accounting: the ledgered `framed_bytes` of a dispatch is
+//! `bytes + DOWNLOAD_OVERHEAD` and of an upload `bytes +
+//! UPLOAD_OVERHEAD` — both fixed constants (≤ 64 bytes, asserted in
+//! tests) since the model payload crosses the wire in its *encoded*
+//! form (`WireBlob::payload`), not as dense f32s. The per-round
+//! centroid table (`RoundOpen.mu` down, `Upload.mu` up) is
+//! control-plane traffic, tracked by `TcpTransport::control_bytes`
+//! rather than the per-client ledger.
+
+use crate::baselines::topk::decode_topk;
+use crate::baselines::wire::{WireBlob, WireCodec};
+use crate::clustering::ControllerConfig;
+use crate::compression::codec;
+use crate::config::FedConfig;
+use crate::sim::{FleetConfig, FleetPreset};
+
+use super::frame::FRAME_OVERHEAD;
+use super::ProtoError;
+
+/// Ledgered framing cost of one `Download`: frame overhead + round(4)
+/// + client(4) + codec(1).
+pub const DOWNLOAD_OVERHEAD: usize = FRAME_OVERHEAD + 9;
+
+/// Ledgered framing cost of one `Upload`, excluding the centroid-table
+/// sidecar: frame overhead + round(4) + client(4) + score(8) + n(4) +
+/// mean_ce(4) + codec(1).
+pub const UPLOAD_OVERHEAD: usize = FRAME_OVERHEAD + 25;
+
+/// Framed wire size of a dispatch carrying `bytes` payload bytes.
+pub fn framed_down(bytes: usize) -> usize {
+    bytes + DOWNLOAD_OVERHEAD
+}
+
+/// Ledgered framed wire size of an upload carrying `bytes` payload
+/// bytes (centroid sidecar accounted separately as control traffic).
+pub fn framed_up(bytes: usize) -> usize {
+    bytes + UPLOAD_OVERHEAD
+}
+
+// --- message structs -------------------------------------------------------
+
+#[derive(Clone, Debug, PartialEq)]
+pub struct Hello {
+    pub proto_version: u16,
+}
+
+/// Handshake grant: which worker this connection is, the deterministic
+/// client ids it hosts, and the full experiment image (strategy name +
+/// config) it needs to rebuild data, model, and RNG streams locally.
+/// The config is boxed so the `Msg` enum stays small.
+#[derive(Clone, Debug)]
+pub struct HelloAck {
+    pub worker: u32,
+    pub workers: u32,
+    pub clients: Vec<u32>,
+    pub strategy: String,
+    pub cfg: Box<FedConfig>,
+}
+
+/// Per-round broadcast to one worker: the server centroid table and
+/// the round's training flags, followed by `n_downloads` `Download`s.
+#[derive(Clone, Debug, PartialEq)]
+pub struct RoundOpen {
+    pub round: u32,
+    pub n_downloads: u32,
+    pub weight_clustering: bool,
+    pub compressing: bool,
+    pub down_compressed: bool,
+    pub active: u32,
+    pub mu: Vec<f32>,
+}
+
+#[derive(Clone, Debug, PartialEq)]
+pub struct Download {
+    pub round: u32,
+    pub client: u32,
+    pub codec: WireCodec,
+    pub payload: Vec<u8>,
+}
+
+#[derive(Clone, Debug, PartialEq)]
+pub struct Upload {
+    pub round: u32,
+    pub client: u32,
+    pub score: f64,
+    pub n: u32,
+    pub mean_ce: f32,
+    pub mu: Vec<f32>,
+    pub codec: WireCodec,
+    pub payload: Vec<u8>,
+}
+
+#[derive(Clone, Debug)]
+pub enum Msg {
+    Hello(Hello),
+    HelloAck(HelloAck),
+    RoundOpen(RoundOpen),
+    Download(Download),
+    Upload(Upload),
+    RoundClose { round: u32 },
+    Shutdown,
+}
+
+impl Msg {
+    pub fn msg_type(&self) -> u8 {
+        match self {
+            Msg::Hello(_) => 1,
+            Msg::HelloAck(_) => 2,
+            Msg::RoundOpen(_) => 3,
+            Msg::Download(_) => 4,
+            Msg::Upload(_) => 5,
+            Msg::RoundClose { .. } => 6,
+            Msg::Shutdown => 7,
+        }
+    }
+
+    pub fn kind(&self) -> &'static str {
+        match self {
+            Msg::Hello(_) => "Hello",
+            Msg::HelloAck(_) => "HelloAck",
+            Msg::RoundOpen(_) => "RoundOpen",
+            Msg::Download(_) => "Download",
+            Msg::Upload(_) => "Upload",
+            Msg::RoundClose { .. } => "RoundClose",
+            Msg::Shutdown => "Shutdown",
+        }
+    }
+
+    /// Serialize the message payload (frame not included).
+    pub fn encode_payload(&self) -> Vec<u8> {
+        let mut out = Vec::new();
+        match self {
+            Msg::Hello(h) => put_u16(&mut out, h.proto_version),
+            Msg::HelloAck(a) => {
+                put_u32(&mut out, a.worker);
+                put_u32(&mut out, a.workers);
+                put_u32(&mut out, a.clients.len() as u32);
+                for &c in &a.clients {
+                    put_u32(&mut out, c);
+                }
+                put_str(&mut out, &a.strategy);
+                put_cfg(&mut out, &a.cfg);
+            }
+            Msg::RoundOpen(r) => {
+                put_u32(&mut out, r.round);
+                put_u32(&mut out, r.n_downloads);
+                let flags = u8::from(r.weight_clustering)
+                    | (u8::from(r.compressing) << 1)
+                    | (u8::from(r.down_compressed) << 2);
+                out.push(flags);
+                put_u32(&mut out, r.active);
+                put_f32s(&mut out, &r.mu);
+            }
+            Msg::Download(d) => {
+                put_u32(&mut out, d.round);
+                put_u32(&mut out, d.client);
+                out.push(d.codec.tag());
+                out.extend_from_slice(&d.payload);
+            }
+            Msg::Upload(u) => {
+                put_u32(&mut out, u.round);
+                put_u32(&mut out, u.client);
+                put_f64(&mut out, u.score);
+                put_u32(&mut out, u.n);
+                put_f32(&mut out, u.mean_ce);
+                put_f32s(&mut out, &u.mu);
+                out.push(u.codec.tag());
+                out.extend_from_slice(&u.payload);
+            }
+            Msg::RoundClose { round } => put_u32(&mut out, *round),
+            Msg::Shutdown => {}
+        }
+        out
+    }
+
+    /// Decode a frame body (`msg_type` from the frame header).
+    pub fn decode(msg_type: u8, payload: &[u8]) -> Result<Msg, ProtoError> {
+        let mut c = Cur { b: payload, i: 0 };
+        let msg = match msg_type {
+            1 => Msg::Hello(Hello {
+                proto_version: c.u16("hello version")?,
+            }),
+            2 => {
+                let worker = c.u32("ack worker")?;
+                let workers = c.u32("ack workers")?;
+                let n = c.u32("ack client count")? as usize;
+                if n > 1_000_000 {
+                    return Err(malformed(format!("handshake grants {n} clients")));
+                }
+                let mut clients = Vec::with_capacity(n);
+                for _ in 0..n {
+                    clients.push(c.u32("ack client id")?);
+                }
+                let strategy = c.str("ack strategy")?;
+                let cfg = Box::new(read_cfg(&mut c)?);
+                Msg::HelloAck(HelloAck {
+                    worker,
+                    workers,
+                    clients,
+                    strategy,
+                    cfg,
+                })
+            }
+            3 => {
+                let round = c.u32("open round")?;
+                let n_downloads = c.u32("open download count")?;
+                let flags = c.u8("open flags")?;
+                let active = c.u32("open active")?;
+                let mu = c.f32s("open centroids")?;
+                if active as usize > mu.len() {
+                    return Err(malformed(format!(
+                        "round open claims {active} active of {} centroids",
+                        mu.len()
+                    )));
+                }
+                Msg::RoundOpen(RoundOpen {
+                    round,
+                    n_downloads,
+                    weight_clustering: flags & 1 != 0,
+                    compressing: flags & 2 != 0,
+                    down_compressed: flags & 4 != 0,
+                    active,
+                    mu,
+                })
+            }
+            4 => Msg::Download(Download {
+                round: c.u32("download round")?,
+                client: c.u32("download client")?,
+                codec: c.codec("download codec")?,
+                payload: c.rest(),
+            }),
+            5 => Msg::Upload(Upload {
+                round: c.u32("upload round")?,
+                client: c.u32("upload client")?,
+                score: c.f64("upload score")?,
+                n: c.u32("upload n")?,
+                mean_ce: c.f32("upload mean_ce")?,
+                mu: c.f32s("upload centroids")?,
+                codec: c.codec("upload codec")?,
+                payload: c.rest(),
+            }),
+            6 => Msg::RoundClose {
+                round: c.u32("close round")?,
+            },
+            7 => Msg::Shutdown,
+            got => return Err(ProtoError::UnknownMsgType { got }),
+        };
+        if !c.done() {
+            return Err(malformed(format!(
+                "{} bytes of trailing garbage after {}",
+                c.remaining(),
+                msg.kind()
+            )));
+        }
+        Ok(msg)
+    }
+
+    /// Write as one frame; returns the frame's wire size.
+    pub fn write_to(&self, w: &mut impl std::io::Write) -> Result<usize, ProtoError> {
+        super::frame::write_frame(w, self.msg_type(), &self.encode_payload())
+    }
+
+    /// Read one frame and decode it.
+    pub fn read_from(r: &mut impl std::io::Read) -> Result<Msg, ProtoError> {
+        let (ty, payload) = super::frame::read_frame(r)?;
+        Msg::decode(ty, &payload)
+    }
+
+    /// Total wire size of this message as one frame.
+    pub fn framed_len(&self) -> usize {
+        super::frame::framed_len(self.encode_payload().len())
+    }
+}
+
+/// Zero-copy download dispatch: stream the round's shared model
+/// payload under a per-client header without cloning it into a `Msg`.
+/// Byte-identical on the wire to `Msg::Download(..).write_to(w)`.
+pub fn write_download(
+    w: &mut impl std::io::Write,
+    round: u32,
+    client: u32,
+    codec: WireCodec,
+    payload: &[u8],
+) -> Result<usize, ProtoError> {
+    let mut head = [0u8; 9];
+    head[0..4].copy_from_slice(&round.to_le_bytes());
+    head[4..8].copy_from_slice(&client.to_le_bytes());
+    head[8] = codec.tag();
+    super::frame::write_frame_parts(w, 4, &head, payload)
+}
+
+/// Zero-copy upload send: the sidecars form the head, the encoded blob
+/// streams as the tail. Byte-identical to `Msg::Upload(..).write_to`.
+pub fn write_upload(w: &mut impl std::io::Write, up: &Upload) -> Result<usize, ProtoError> {
+    let mut head = Vec::with_capacity(25 + 4 + 4 * up.mu.len());
+    put_u32(&mut head, up.round);
+    put_u32(&mut head, up.client);
+    put_f64(&mut head, up.score);
+    put_u32(&mut head, up.n);
+    put_f32(&mut head, up.mean_ce);
+    put_f32s(&mut head, &up.mu);
+    head.push(up.codec.tag());
+    super::frame::write_frame_parts(w, 5, &head, &up.payload)
+}
+
+/// Decode a blob payload back into the weight vector the sender holds
+/// (bit-exact: every built-in codec round-trips its quantized model).
+pub fn decode_blob(codec: WireCodec, payload: &[u8]) -> Result<Vec<f32>, ProtoError> {
+    match codec {
+        WireCodec::Dense => {
+            if payload.len() % 4 != 0 {
+                return Err(malformed(format!(
+                    "dense payload of {} bytes is not a whole number of f32s",
+                    payload.len()
+                )));
+            }
+            Ok(payload
+                .chunks_exact(4)
+                .map(|b| f32::from_le_bytes(b.try_into().unwrap()))
+                .collect())
+        }
+        WireCodec::Clustered => codec::decode(payload)
+            .map(|(weights, _, _)| weights)
+            .map_err(|e| malformed(format!("clustered payload: {e}"))),
+        WireCodec::Sparse => {
+            decode_topk(payload).map_err(|e| malformed(format!("sparse payload: {e}")))
+        }
+        WireCodec::Opaque => Err(malformed(
+            "opaque wire codec cannot cross the networked transport".to_string(),
+        )),
+    }
+}
+
+/// Rebuild a [`WireBlob`] from a received (codec, payload) pair.
+pub fn blob_from_payload(codec: WireCodec, payload: Vec<u8>) -> Result<WireBlob, ProtoError> {
+    let theta = decode_blob(codec, &payload)?;
+    Ok(WireBlob {
+        bytes: payload.len(),
+        theta,
+        codec,
+        payload,
+    })
+}
+
+fn malformed(what: String) -> ProtoError {
+    ProtoError::Malformed { what }
+}
+
+// --- primitive little-endian writers ---------------------------------------
+
+fn put_u16(v: &mut Vec<u8>, x: u16) {
+    v.extend_from_slice(&x.to_le_bytes());
+}
+fn put_u32(v: &mut Vec<u8>, x: u32) {
+    v.extend_from_slice(&x.to_le_bytes());
+}
+fn put_u64(v: &mut Vec<u8>, x: u64) {
+    v.extend_from_slice(&x.to_le_bytes());
+}
+fn put_f32(v: &mut Vec<u8>, x: f32) {
+    v.extend_from_slice(&x.to_le_bytes());
+}
+fn put_f64(v: &mut Vec<u8>, x: f64) {
+    v.extend_from_slice(&x.to_le_bytes());
+}
+fn put_f32s(v: &mut Vec<u8>, xs: &[f32]) {
+    put_u32(v, xs.len() as u32);
+    for &x in xs {
+        put_f32(v, x);
+    }
+}
+fn put_str(v: &mut Vec<u8>, s: &str) {
+    assert!(s.len() <= u16::MAX as usize);
+    put_u16(v, s.len() as u16);
+    v.extend_from_slice(s.as_bytes());
+}
+
+// --- cursor reader with typed truncation errors ----------------------------
+
+struct Cur<'a> {
+    b: &'a [u8],
+    i: usize,
+}
+
+impl<'a> Cur<'a> {
+    fn take(&mut self, n: usize, what: &'static str) -> Result<&'a [u8], ProtoError> {
+        if self.i + n > self.b.len() {
+            return Err(ProtoError::Truncated { what });
+        }
+        let s = &self.b[self.i..self.i + n];
+        self.i += n;
+        Ok(s)
+    }
+    fn u8(&mut self, what: &'static str) -> Result<u8, ProtoError> {
+        Ok(self.take(1, what)?[0])
+    }
+    fn u16(&mut self, what: &'static str) -> Result<u16, ProtoError> {
+        Ok(u16::from_le_bytes(self.take(2, what)?.try_into().unwrap()))
+    }
+    fn u32(&mut self, what: &'static str) -> Result<u32, ProtoError> {
+        Ok(u32::from_le_bytes(self.take(4, what)?.try_into().unwrap()))
+    }
+    fn u64(&mut self, what: &'static str) -> Result<u64, ProtoError> {
+        Ok(u64::from_le_bytes(self.take(8, what)?.try_into().unwrap()))
+    }
+    fn f32(&mut self, what: &'static str) -> Result<f32, ProtoError> {
+        Ok(f32::from_le_bytes(self.take(4, what)?.try_into().unwrap()))
+    }
+    fn f64(&mut self, what: &'static str) -> Result<f64, ProtoError> {
+        Ok(f64::from_le_bytes(self.take(8, what)?.try_into().unwrap()))
+    }
+    fn f32s(&mut self, what: &'static str) -> Result<Vec<f32>, ProtoError> {
+        let n = self.u32(what)? as usize;
+        if n > 16_000_000 {
+            return Err(malformed(format!("{what}: {n} floats is over the cap")));
+        }
+        let mut out = Vec::with_capacity(n);
+        for _ in 0..n {
+            out.push(self.f32(what)?);
+        }
+        Ok(out)
+    }
+    fn str(&mut self, what: &'static str) -> Result<String, ProtoError> {
+        let n = self.u16(what)? as usize;
+        let bytes = self.take(n, what)?;
+        String::from_utf8(bytes.to_vec()).map_err(|_| malformed(format!("{what}: not utf-8")))
+    }
+    fn codec(&mut self, what: &'static str) -> Result<WireCodec, ProtoError> {
+        let tag = self.u8(what)?;
+        WireCodec::from_tag(tag)
+            .ok_or_else(|| malformed(format!("{what}: unknown codec tag {tag}")))
+    }
+    fn rest(&mut self) -> Vec<u8> {
+        let out = self.b[self.i..].to_vec();
+        self.i = self.b.len();
+        out
+    }
+    fn done(&self) -> bool {
+        self.i == self.b.len()
+    }
+    fn remaining(&self) -> usize {
+        self.b.len() - self.i
+    }
+}
+
+// --- FedConfig image --------------------------------------------------------
+
+/// Serialize the full experiment config: the worker must reconstruct
+/// the *exact* `FedConfig` (floats bit-for-bit) or data partitioning
+/// and RNG streams diverge.
+fn put_cfg(v: &mut Vec<u8>, cfg: &FedConfig) {
+    put_str(v, &cfg.dataset);
+    put_u64(v, cfg.rounds as u64);
+    put_u64(v, cfg.clients as u64);
+    put_f64(v, cfg.participation);
+    put_u64(v, cfg.local_epochs as u64);
+    put_u64(v, cfg.server_epochs as u64);
+    put_u64(v, cfg.train_size as u64);
+    put_u64(v, cfg.test_size as u64);
+    put_u64(v, cfg.ood_size as u64);
+    put_u64(v, cfg.unlabeled_per_client as u64);
+    put_f64(v, cfg.sigma);
+    put_f32(v, cfg.lr_client);
+    put_f32(v, cfg.lr_server);
+    put_f32(v, cfg.beta);
+    put_u64(v, cfg.beta_warmup_epochs as u64);
+    put_u64(v, cfg.warmup_rounds as u64);
+    put_f32(v, cfg.temperature);
+    put_u64(v, cfg.controller.c_min as u64);
+    put_u64(v, cfg.controller.c_max as u64);
+    put_u64(v, cfg.controller.window as u64);
+    put_u64(v, cfg.controller.patience as u64);
+    put_u64(v, cfg.controller.step as u64);
+    put_u64(v, cfg.fedzip_clusters as u64);
+    put_f64(v, cfg.fedzip_keep);
+    put_f64(v, cfg.topk_keep);
+    put_u64(v, cfg.upload_workers as u64);
+    put_str(v, cfg.fleet.preset.name());
+    put_f64(v, cfg.fleet.dropout);
+    put_f64(v, cfg.fleet.deadline_s);
+    put_u64(v, cfg.seed);
+}
+
+fn read_cfg(c: &mut Cur<'_>) -> Result<FedConfig, ProtoError> {
+    let w = "config";
+    Ok(FedConfig {
+        dataset: c.str(w)?,
+        rounds: c.u64(w)? as usize,
+        clients: c.u64(w)? as usize,
+        participation: c.f64(w)?,
+        local_epochs: c.u64(w)? as usize,
+        server_epochs: c.u64(w)? as usize,
+        train_size: c.u64(w)? as usize,
+        test_size: c.u64(w)? as usize,
+        ood_size: c.u64(w)? as usize,
+        unlabeled_per_client: c.u64(w)? as usize,
+        sigma: c.f64(w)?,
+        lr_client: c.f32(w)?,
+        lr_server: c.f32(w)?,
+        beta: c.f32(w)?,
+        beta_warmup_epochs: c.u64(w)? as usize,
+        warmup_rounds: c.u64(w)? as usize,
+        temperature: c.f32(w)?,
+        controller: ControllerConfig {
+            c_min: c.u64(w)? as usize,
+            c_max: c.u64(w)? as usize,
+            window: c.u64(w)? as usize,
+            patience: c.u64(w)? as usize,
+            step: c.u64(w)? as usize,
+        },
+        fedzip_clusters: c.u64(w)? as usize,
+        fedzip_keep: c.f64(w)?,
+        topk_keep: c.f64(w)?,
+        upload_workers: c.u64(w)? as usize,
+        fleet: FleetConfig {
+            preset: FleetPreset::from_name(&c.str(w)?)
+                .map_err(|e| malformed(e.to_string()))?,
+            dropout: c.f64(w)?,
+            deadline_s: c.f64(w)?,
+        },
+        seed: c.u64(w)?,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn roundtrip(msg: &Msg) -> Msg {
+        let mut buf = Vec::new();
+        let wrote = msg.write_to(&mut buf).unwrap();
+        assert_eq!(wrote, buf.len());
+        assert_eq!(wrote, msg.framed_len());
+        Msg::read_from(&mut &buf[..]).unwrap()
+    }
+
+    fn cfg_eq(a: &FedConfig, b: &FedConfig) {
+        // FedConfig has no PartialEq; the debug image covers every field
+        assert_eq!(format!("{a:?}"), format!("{b:?}"));
+    }
+
+    #[test]
+    fn every_message_round_trips() {
+        let mut rng = Rng::new(1);
+        let mu: Vec<f32> = (0..32).map(|_| rng.normal()).collect();
+
+        match roundtrip(&Msg::Hello(Hello { proto_version: 1 })) {
+            Msg::Hello(h) => assert_eq!(h.proto_version, 1),
+            other => panic!("{}", other.kind()),
+        }
+
+        let cfg = FedConfig::quick("speechcommands");
+        let ack = HelloAck {
+            worker: 1,
+            workers: 2,
+            clients: vec![1, 3, 5],
+            strategy: "fedcompress".into(),
+            cfg: Box::new(cfg.clone()),
+        };
+        match roundtrip(&Msg::HelloAck(ack)) {
+            Msg::HelloAck(a) => {
+                assert_eq!(a.worker, 1);
+                assert_eq!(a.workers, 2);
+                assert_eq!(a.clients, vec![1, 3, 5]);
+                assert_eq!(a.strategy, "fedcompress");
+                cfg_eq(&a.cfg, &cfg);
+            }
+            other => panic!("{}", other.kind()),
+        }
+
+        let open = RoundOpen {
+            round: 4,
+            n_downloads: 3,
+            weight_clustering: true,
+            compressing: true,
+            down_compressed: false,
+            active: 16,
+            mu: mu.clone(),
+        };
+        match roundtrip(&Msg::RoundOpen(open.clone())) {
+            Msg::RoundOpen(r) => assert_eq!(r, open),
+            other => panic!("{}", other.kind()),
+        }
+
+        let dl = Download {
+            round: 4,
+            client: 5,
+            codec: WireCodec::Clustered,
+            payload: vec![9u8; 777],
+        };
+        match roundtrip(&Msg::Download(dl.clone())) {
+            Msg::Download(d) => assert_eq!(d, dl),
+            other => panic!("{}", other.kind()),
+        }
+
+        let up = Upload {
+            round: 4,
+            client: 5,
+            score: 3.25,
+            n: 96,
+            mean_ce: 1.5,
+            mu,
+            codec: WireCodec::Sparse,
+            payload: vec![1, 2, 3],
+        };
+        match roundtrip(&Msg::Upload(up.clone())) {
+            Msg::Upload(u) => assert_eq!(u, up),
+            other => panic!("{}", other.kind()),
+        }
+
+        match roundtrip(&Msg::RoundClose { round: 9 }) {
+            Msg::RoundClose { round } => assert_eq!(round, 9),
+            other => panic!("{}", other.kind()),
+        }
+        assert!(matches!(roundtrip(&Msg::Shutdown), Msg::Shutdown));
+    }
+
+    /// The paper-facing config must survive the wire bit-for-bit —
+    /// a single differing float silently desynchronizes worker RNG
+    /// streams from the coordinator's.
+    #[test]
+    fn config_image_is_bit_exact() {
+        let mut cfg = FedConfig::paper("voxforge");
+        cfg.sigma = 0.24999999999999997; // awkward float on purpose
+        cfg.lr_client = 0.049999997;
+        cfg.set("fleet", "hostile").unwrap();
+        cfg.set("dropout", "0.125").unwrap();
+        let mut buf = Vec::new();
+        put_cfg(&mut buf, &cfg);
+        let mut cur = Cur { b: &buf, i: 0 };
+        let back = read_cfg(&mut cur).unwrap();
+        assert!(cur.done());
+        cfg_eq(&back, &cfg);
+        assert_eq!(back.sigma.to_bits(), cfg.sigma.to_bits());
+        assert_eq!(back.lr_client.to_bits(), cfg.lr_client.to_bits());
+    }
+
+    /// Acceptance bound: the per-message framing overhead the ledger
+    /// records is a constant and stays under 64 bytes each way.
+    #[test]
+    fn ledgered_overheads_are_constant_and_small() {
+        assert!(DOWNLOAD_OVERHEAD <= 64, "{DOWNLOAD_OVERHEAD}");
+        assert!(UPLOAD_OVERHEAD <= 64, "{UPLOAD_OVERHEAD}");
+        // ...and they match the real encoders: a Download frame is
+        // exactly framed_down(payload), an Upload frame is exactly
+        // framed_up(payload) plus its centroid sidecar.
+        let dl = Msg::Download(Download {
+            round: 0,
+            client: 0,
+            codec: WireCodec::Dense,
+            payload: vec![0u8; 1000],
+        });
+        assert_eq!(dl.framed_len(), framed_down(1000));
+        let mu = vec![0.0f32; 32];
+        let up = Msg::Upload(Upload {
+            round: 0,
+            client: 0,
+            score: 0.0,
+            n: 1,
+            mean_ce: 0.0,
+            mu: mu.clone(),
+            codec: WireCodec::Dense,
+            payload: vec![0u8; 500],
+        });
+        assert_eq!(up.framed_len(), framed_up(500) + 4 + 4 * mu.len());
+    }
+
+    /// The zero-copy writers must put the exact same bytes on the wire
+    /// as the owning `Msg` encoders they bypass.
+    #[test]
+    fn zero_copy_writers_match_msg_encoders() {
+        let mut rng = Rng::new(3);
+        let payload: Vec<u8> = (0..5000).map(|_| rng.below(256) as u8).collect();
+
+        let mut via_helper = Vec::new();
+        let n = write_download(&mut via_helper, 6, 2, WireCodec::Clustered, &payload).unwrap();
+        let mut via_msg = Vec::new();
+        Msg::Download(Download {
+            round: 6,
+            client: 2,
+            codec: WireCodec::Clustered,
+            payload: payload.clone(),
+        })
+        .write_to(&mut via_msg)
+        .unwrap();
+        assert_eq!(via_helper, via_msg);
+        assert_eq!(n, via_msg.len());
+
+        let up = Upload {
+            round: 6,
+            client: 2,
+            score: -1.25,
+            n: 64,
+            mean_ce: 0.5,
+            mu: (0..32).map(|_| rng.normal()).collect(),
+            codec: WireCodec::Sparse,
+            payload,
+        };
+        let mut via_helper = Vec::new();
+        let n = write_upload(&mut via_helper, &up).unwrap();
+        let mut via_msg = Vec::new();
+        Msg::Upload(up.clone()).write_to(&mut via_msg).unwrap();
+        assert_eq!(via_helper, via_msg);
+        assert_eq!(n, via_msg.len());
+    }
+
+    #[test]
+    fn blob_payloads_decode_bit_exactly() {
+        use crate::baselines::wire::{codebook_blob, kmeans_blob};
+        use crate::clustering::CentroidState;
+
+        let mut rng = Rng::new(7);
+        let theta: Vec<f32> = (0..4000).map(|_| rng.normal() * 0.2).collect();
+        let cents = CentroidState::init_from_weights(&theta, 16, 32, &mut rng);
+
+        let blobs = [
+            WireBlob::dense(&theta),
+            kmeans_blob(&theta, 15, 0.6, &mut rng).unwrap(),
+            codebook_blob(&theta, &cents).unwrap(),
+        ];
+        for blob in blobs {
+            let back = blob_from_payload(blob.codec, blob.payload.clone()).unwrap();
+            assert_eq!(back.theta, blob.theta, "{:?}", blob.codec);
+            assert_eq!(back.bytes, blob.bytes);
+        }
+        // opaque is rejected, not mis-decoded
+        assert!(decode_blob(WireCodec::Opaque, &[1, 2, 3]).is_err());
+    }
+}

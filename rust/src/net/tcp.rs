@@ -1,0 +1,423 @@
+//! Coordinator-side TCP transport: accept worker connections, grant
+//! deterministic client ids at handshake, dispatch each round's
+//! downloads concurrently, and collect uploads under per-client
+//! timeouts.
+//!
+//! Client ownership: worker `j` (by arrival order) of `W` hosts every
+//! client `k` with `k % W == j`. The grant travels in `HelloAck`
+//! together with the strategy name and the full config image, so a
+//! worker rebuilds the exact experiment (data shards, RNG streams,
+//! strategy plugin) locally — only models cross the wire.
+//!
+//! Fault surface: a sim-fated drop is never dispatched (mirroring the
+//! in-process backend bit-for-bit); a dead or protocol-violating
+//! worker turns its remaining clients into `Dropped(BeforeUpload)` and
+//! is evicted for the rest of the run; a read timeout turns the
+//! worker's outstanding clients into `TimedOut` (the driver logs
+//! `Event::Deadline`) and also evicts it — a stream abandoned
+//! mid-frame cannot be resynchronized. Real stragglers therefore feed
+//! exactly the fault machinery the simulator models.
+
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::time::Duration;
+
+use anyhow::{Context, Result};
+
+use crate::config::FedConfig;
+use crate::coordinator::events::DropPhase;
+use crate::coordinator::strategy::FedStrategy;
+use crate::sim::ClientFate;
+use crate::util::threadpool::parallel_map;
+
+use super::proto::{self, HelloAck, Msg, RoundOpen, Upload};
+use super::transport::{
+    ClientResult, Participant, ReceivedUpload, RoundEnv, RoundSpec, Transport, TransportKind,
+};
+
+/// A bound listener that has not yet completed its handshakes. Split
+/// from [`TcpTransport`] so callers (and the loopback tests) can learn
+/// the actual address — e.g. after binding port 0 — before any worker
+/// connects.
+pub struct TcpServer {
+    listener: TcpListener,
+    expected_workers: usize,
+    cfg: FedConfig,
+    strategy: String,
+    timeout: Option<Duration>,
+}
+
+impl TcpServer {
+    /// Bind the coordinator socket. `timeout` bounds each per-client
+    /// upload wait (`None` = wait forever; real deployments want a
+    /// bound).
+    pub fn bind(
+        addr: &str,
+        expected_workers: usize,
+        cfg: &FedConfig,
+        strategy: &str,
+        timeout: Option<Duration>,
+    ) -> Result<TcpServer> {
+        anyhow::ensure!(expected_workers > 0, "need at least one worker");
+        let listener =
+            TcpListener::bind(addr).with_context(|| format!("binding coordinator on {addr}"))?;
+        Ok(TcpServer {
+            listener,
+            expected_workers,
+            cfg: cfg.clone(),
+            strategy: strategy.to_string(),
+            timeout,
+        })
+    }
+
+    /// The bound address (the port is real even when bound as `:0`).
+    pub fn local_addr(&self) -> Result<SocketAddr> {
+        Ok(self.listener.local_addr()?)
+    }
+
+    /// Accept `expected_workers` connections, handshake each, and
+    /// return the ready transport. Worker `j` by arrival order hosts
+    /// clients `{k : k % W == j}`.
+    pub fn accept_workers(self) -> Result<TcpTransport> {
+        let w = self.expected_workers;
+        let mut conns = Vec::with_capacity(w);
+        let mut control_bytes = 0usize;
+        for j in 0..w {
+            let (stream, peer) = self
+                .listener
+                .accept()
+                .with_context(|| format!("accepting worker {j}/{w}"))?;
+            stream.set_nodelay(true).ok();
+            // a connection that sends nothing (port scanner, stalled
+            // peer) must not wedge startup forever
+            stream.set_read_timeout(Some(Duration::from_secs(30))).ok();
+            let hello = Msg::read_from(&mut &stream)
+                .map_err(|e| anyhow::anyhow!("handshake with {peer}: {e}"))?;
+            stream.set_read_timeout(None).ok();
+            let h = match hello {
+                Msg::Hello(h) => h,
+                other => {
+                    anyhow::bail!("worker {peer} opened with {} instead of Hello", other.kind())
+                }
+            };
+            control_bytes += Msg::Hello(h.clone()).framed_len();
+            let clients: Vec<u32> = (0..self.cfg.clients)
+                .filter(|k| k % w == j)
+                .map(|k| k as u32)
+                .collect();
+            let ack = Msg::HelloAck(HelloAck {
+                worker: j as u32,
+                workers: w as u32,
+                clients: clients.clone(),
+                strategy: self.strategy.clone(),
+                cfg: Box::new(self.cfg.clone()),
+            });
+            control_bytes += ack.write_to(&mut &stream)?;
+            crate::info!(
+                "worker {j}/{w} connected from {peer} (proto v{}, {} clients)",
+                h.proto_version,
+                clients.len()
+            );
+            conns.push(WorkerConn {
+                stream,
+                alive: true,
+            });
+        }
+        Ok(TcpTransport {
+            conns,
+            workers: w,
+            timeout: self.timeout,
+            control_bytes,
+        })
+    }
+}
+
+struct WorkerConn {
+    stream: TcpStream,
+    alive: bool,
+}
+
+/// The networked backend: one live connection per worker process.
+pub struct TcpTransport {
+    conns: Vec<WorkerConn>,
+    workers: usize,
+    timeout: Option<Duration>,
+    /// Handshake, round-control, and centroid-sidecar bytes — the wire
+    /// traffic the per-client ledger does not attribute.
+    control_bytes: usize,
+}
+
+/// What one worker's collection loop produced, per slot.
+enum SlotOutcome {
+    Upload(Box<ReceivedUpload>),
+    TimedOut(f64),
+    Dead,
+}
+
+/// One worker's whole-round result: per-slot outcomes, control bytes
+/// spent, and whether the connection is still usable.
+type WorkerRound = (Vec<(usize, SlotOutcome)>, usize, bool);
+
+impl TcpTransport {
+    /// Total control-plane bytes so far (both directions).
+    pub fn control_bytes(&self) -> usize {
+        self.control_bytes
+    }
+
+    /// Workers still answering.
+    pub fn alive_workers(&self) -> usize {
+        self.conns.iter().filter(|c| c.alive).count()
+    }
+
+    /// Dispatch + collect against one worker. Returns the per-slot
+    /// outcomes plus the control bytes this exchange cost.
+    fn round_with_worker(
+        &self,
+        conn: &WorkerConn,
+        spec: &RoundSpec<'_>,
+        expected_p: usize,
+        owned: &[(usize, Participant)],
+    ) -> (Vec<(usize, SlotOutcome)>, usize) {
+        let mut control = 0usize;
+        let mut out: Vec<(usize, SlotOutcome)> = Vec::with_capacity(owned.len());
+        let stream = &conn.stream;
+
+        // --- dispatch / collect, stop-and-wait ----------------------------
+        // Strictly alternate: send one Download, then block for its
+        // Upload. At any instant only one direction of the socket is
+        // transferring (each side fully drains its read before it
+        // writes), so neither peer can wedge on a full socket buffer no
+        // matter how large the model is. Overlap comes from run_round's
+        // one-thread-per-worker fan-out, not from pipelining one stream.
+        let open = Msg::RoundOpen(RoundOpen {
+            round: spec.round as u32,
+            n_downloads: owned.len() as u32,
+            weight_clustering: spec.opts.weight_clustering,
+            compressing: spec.compressing,
+            down_compressed: spec.down_compressed,
+            active: spec.centroids.active as u32,
+            mu: spec.centroids.mu.clone(),
+        });
+        // RoundOpen is control traffic; Downloads are the ledgered data
+        // plane (the driver records framed_down per dispatch)
+        match open.write_to(&mut &*stream) {
+            Ok(n) => control += n,
+            Err(e) => {
+                crate::info!("worker send failed, evicting: {e}");
+                let dead = owned.iter().map(|&(s, _)| (s, SlotOutcome::Dead)).collect();
+                return (dead, control);
+            }
+        }
+
+        let timeout_s = self.timeout.map(|d| d.as_secs_f64()).unwrap_or(0.0);
+        let mut pending: Vec<(usize, Participant)> = owned.to_vec();
+        for (_, part) in owned {
+            // zero-copy dispatch: the shared round payload streams out
+            // under this client's 9-byte header
+            let sent = proto::write_download(
+                &mut &*stream,
+                spec.round as u32,
+                part.client as u32,
+                spec.down.codec,
+                &spec.down.payload,
+            );
+            if let Err(e) = sent {
+                crate::info!("worker send failed, evicting: {e}");
+                for &(slot, _) in &pending {
+                    out.push((slot, SlotOutcome::Dead));
+                }
+                return (out, control);
+            }
+            let msg = match Msg::read_from(&mut &*stream) {
+                Ok(m) => m,
+                Err(e) if e.is_timeout() => {
+                    // deadline fired: everything still outstanding is a
+                    // straggler cut. The stream may be mid-frame now, so
+                    // the worker is evicted (slots report TimedOut, the
+                    // driver logs Event::Deadline).
+                    crate::info!("worker timed out with {} uploads pending", pending.len());
+                    for &(slot, _) in &pending {
+                        out.push((slot, SlotOutcome::TimedOut(timeout_s)));
+                    }
+                    return (out, control);
+                }
+                Err(e) => {
+                    crate::info!("worker read failed, evicting: {e}");
+                    for &(slot, _) in &pending {
+                        out.push((slot, SlotOutcome::Dead));
+                    }
+                    return (out, control);
+                }
+            };
+            let up = match msg {
+                Msg::Upload(u) => u,
+                other => {
+                    crate::info!("expected Upload, got {}; evicting worker", other.kind());
+                    for &(slot, _) in &pending {
+                        out.push((slot, SlotOutcome::Dead));
+                    }
+                    return (out, control);
+                }
+            };
+            match self.receive_upload(up, spec.round, expected_p, &mut pending) {
+                Ok((slot, received, sidecar)) => {
+                    control += sidecar;
+                    out.push((slot, SlotOutcome::Upload(received)));
+                }
+                Err(e) => {
+                    crate::info!("rejecting upload: {e}; evicting worker");
+                    for &(slot, _) in &pending {
+                        out.push((slot, SlotOutcome::Dead));
+                    }
+                    return (out, control);
+                }
+            }
+        }
+        (out, control)
+    }
+
+    /// Validate one `Upload` against the round's outstanding set and
+    /// decode it. Returns the slot, the decoded upload, and the
+    /// control-plane size of its centroid sidecar.
+    fn receive_upload(
+        &self,
+        up: Upload,
+        round: usize,
+        expected_p: usize,
+        pending: &mut Vec<(usize, Participant)>,
+    ) -> Result<(usize, Box<ReceivedUpload>, usize)> {
+        anyhow::ensure!(
+            up.round as usize == round,
+            "upload for round {} during round {round}",
+            up.round
+        );
+        let client = up.client as usize;
+        let pos = pending
+            .iter()
+            .position(|(_, p)| p.client == client)
+            .with_context(|| format!("unexpected upload from client {client}"))?;
+        let (slot, _) = pending.swap_remove(pos);
+        let blob = proto::blob_from_payload(up.codec, up.payload)?;
+        blob.ensure_param_count(expected_p)?;
+        let sidecar = 4 + 4 * up.mu.len();
+        Ok((
+            slot,
+            Box::new(ReceivedUpload {
+                client,
+                blob,
+                mu: up.mu,
+                score: up.score,
+                n: up.n as usize,
+                mean_ce: up.mean_ce,
+            }),
+            sidecar,
+        ))
+    }
+}
+
+impl Transport for TcpTransport {
+    fn kind(&self) -> TransportKind {
+        TransportKind::Tcp
+    }
+
+    fn run_round(
+        &mut self,
+        _env: &RoundEnv<'_>,
+        _strategy: &dyn FedStrategy,
+        spec: &RoundSpec<'_>,
+    ) -> Result<Vec<ClientResult>> {
+        let expected_p = spec.down.theta.len();
+        // the wire carries the encoded payload; a blob whose payload
+        // lies about its size would desynchronize the framed ledger
+        spec.down.ensure_payload()?;
+        anyhow::ensure!(
+            spec.down.codec != crate::baselines::wire::WireCodec::Opaque,
+            "strategy produced an opaque wire blob; the TCP transport cannot ship it"
+        );
+
+        let mut results: Vec<Option<ClientResult>> =
+            spec.participants.iter().map(|_| None).collect();
+
+        // sim-fated drops never dispatch — identical to InProcess
+        let mut per_worker: Vec<Vec<(usize, Participant)>> = vec![Vec::new(); self.workers];
+        for (slot, part) in spec.participants.iter().enumerate() {
+            match part.fate {
+                ClientFate::DropBeforeTrain => {
+                    results[slot] = Some(ClientResult::Dropped(DropPhase::BeforeTrain));
+                }
+                ClientFate::DropBeforeUpload => {
+                    results[slot] = Some(ClientResult::Dropped(DropPhase::BeforeUpload));
+                }
+                ClientFate::Healthy { .. } => {
+                    per_worker[part.client % self.workers].push((slot, *part));
+                }
+            }
+        }
+
+        if let Some(d) = self.timeout {
+            for conn in &self.conns {
+                // collect-phase read timeout; dispatch writes block
+                conn.stream.set_read_timeout(Some(d)).ok();
+            }
+        }
+
+        // one collection thread per worker connection: downloads go out
+        // concurrently and slow workers do not serialize fast ones
+        let per_worker_out: Vec<WorkerRound> =
+            parallel_map(self.workers, self.workers, |j| {
+                let conn = &self.conns[j];
+                if per_worker[j].is_empty() {
+                    return (Vec::new(), 0, conn.alive);
+                }
+                if !conn.alive {
+                    let dead = per_worker[j]
+                        .iter()
+                        .map(|&(slot, _)| (slot, SlotOutcome::Dead))
+                        .collect();
+                    return (dead, 0, false);
+                }
+                let owned = &per_worker[j];
+                let (out, control) = self.round_with_worker(conn, spec, expected_p, owned);
+                let lost = out
+                    .iter()
+                    .any(|(_, o)| matches!(o, SlotOutcome::Dead | SlotOutcome::TimedOut(_)));
+                (out, control, !lost)
+            });
+
+        let round_close = Msg::RoundClose {
+            round: spec.round as u32,
+        };
+        for (j, (slots, control, still_alive)) in per_worker_out.into_iter().enumerate() {
+            self.control_bytes += control;
+            self.conns[j].alive = still_alive;
+            if still_alive && !per_worker[j].is_empty() {
+                match round_close.write_to(&mut &self.conns[j].stream) {
+                    Ok(n) => self.control_bytes += n,
+                    Err(_) => self.conns[j].alive = false,
+                }
+            }
+            for (slot, outcome) in slots {
+                results[slot] = Some(match outcome {
+                    SlotOutcome::Upload(u) => ClientResult::Upload(u),
+                    SlotOutcome::TimedOut(s) => ClientResult::TimedOut { elapsed_s: s },
+                    SlotOutcome::Dead => ClientResult::Dropped(DropPhase::BeforeUpload),
+                });
+            }
+        }
+        Ok(results
+            .into_iter()
+            .map(|r| r.expect("every participant resolved"))
+            .collect())
+    }
+
+    fn shutdown(&mut self) -> Result<()> {
+        for conn in &mut self.conns {
+            if conn.alive {
+                if let Ok(n) = Msg::Shutdown.write_to(&mut &conn.stream) {
+                    self.control_bytes += n;
+                }
+                conn.alive = false;
+            }
+        }
+        Ok(())
+    }
+}

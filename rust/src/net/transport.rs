@@ -1,0 +1,244 @@
+//! The [`Transport`] abstraction: how a round's dispatch reaches the
+//! selected clients and how their uploads come back.
+//!
+//! The round loop (`coordinator::server::run_with_strategy_opts`)
+//! stays the owner of selection, fault fates, the ledger, the sim
+//! deadline clock, events, and aggregation; a transport only answers
+//! one question per round — *given this dispatch, what did each
+//! participant send back?* Two backends:
+//!
+//! * [`InProcess`] (default) — trains and encodes in this process,
+//!   exactly as the pre-transport coordinator did: engine-bound
+//!   training serially on the coordinator thread, pure-CPU upload
+//!   encoding fanned out over `util::threadpool::parallel_map` with
+//!   per-client RNG forks. Byte-identical to the historical loop.
+//! * [`TcpTransport`](super::tcp::TcpTransport) — ships the same
+//!   dispatch over framed TCP to worker processes and collects their
+//!   uploads under per-client timeouts.
+//!
+//! Both backends report sim-scheduled faults the same way (a
+//! fault-dropped participant never trains), so ledgers, events, and
+//! metrics are backend-independent; the TCP backend can additionally
+//! report *real* losses ([`ClientResult::TimedOut`] and transport-level
+//! drops), which the driver folds into the existing
+//! `Event::Dropout`/`Event::Deadline` machinery.
+
+use anyhow::Result;
+
+use crate::baselines::wire::WireBlob;
+use crate::client::trainer::{train_local, ClientOutcome};
+use crate::clustering::CentroidState;
+use crate::config::FedConfig;
+use crate::coordinator::events::DropPhase;
+use crate::coordinator::server::{client_stream, FederatedData};
+use crate::coordinator::strategy::{ClientTrainOpts, FedStrategy, RoundContext, UploadInput};
+use crate::runtime::Engine;
+use crate::sim::ClientFate;
+use crate::util::rng::Rng;
+use crate::util::threadpool::parallel_map;
+
+/// Which transport a run used — recorded in checkpoints so a resume
+/// under a different backend can warn (`Event::ResumeMismatch`).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum TransportKind {
+    InProcess,
+    Tcp,
+}
+
+impl TransportKind {
+    pub fn name(&self) -> &'static str {
+        match self {
+            TransportKind::InProcess => "inproc",
+            TransportKind::Tcp => "tcp",
+        }
+    }
+}
+
+/// Coordinator-side resources a transport may use to fulfill a round.
+/// The TCP backend ignores the engine/data (workers own their own);
+/// the in-process backend is exactly the old train/encode path.
+pub struct RoundEnv<'a> {
+    pub engine: &'a Engine,
+    pub cfg: &'a FedConfig,
+    pub data: &'a FederatedData,
+    /// Root RNG of the run (`seed ^ 0xFEDC`); client streams fork from
+    /// it with the protocol-fixed ids (`10_000 + round*clients + k`).
+    pub base: &'a Rng,
+    /// Worker threads for the in-process encode fan-out.
+    pub encode_workers: usize,
+}
+
+/// One selected client and its sim-scheduled fate, in selection order.
+#[derive(Clone, Copy, Debug)]
+pub struct Participant {
+    pub client: usize,
+    pub fate: ClientFate,
+}
+
+/// Everything one round dispatches, independent of backend.
+pub struct RoundSpec<'a> {
+    pub round: usize,
+    pub down: &'a WireBlob,
+    /// Server centroid table *after* `round_start` (what clients train
+    /// against this round).
+    pub centroids: &'a CentroidState,
+    pub opts: ClientTrainOpts,
+    pub compressing: bool,
+    pub down_compressed: bool,
+    pub participants: &'a [Participant],
+}
+
+/// One client's upload as the server receives it: the decoded wire
+/// blob plus the sidecar values that ride along.
+pub struct ReceivedUpload {
+    pub client: usize,
+    pub blob: WireBlob,
+    /// client-learned centroid table (control-plane sidecar)
+    pub mu: Vec<f32>,
+    pub score: f64,
+    pub n: usize,
+    pub mean_ce: f32,
+}
+
+/// Outcome for one participant, aligned with `RoundSpec::participants`.
+pub enum ClientResult {
+    Upload(Box<ReceivedUpload>),
+    /// Lost to a sim-scheduled fault (both backends) or a transport
+    /// fault — dead socket, protocol violation (TCP only).
+    Dropped(DropPhase),
+    /// The upload did not arrive within the transport's per-client
+    /// timeout (TCP only); `elapsed_s` is the deadline that fired.
+    TimedOut { elapsed_s: f64 },
+}
+
+/// A backend for the round loop's dispatch/collect path.
+pub trait Transport {
+    fn kind(&self) -> TransportKind;
+
+    /// Execute one round: deliver the dispatch to every healthy
+    /// participant, run their local updates, and return one result per
+    /// participant in the same order. Sim-fated drops must be returned
+    /// as `Dropped` without training (their work would be discarded;
+    /// every client owns an independent RNG fork, so skipping perturbs
+    /// nothing).
+    fn run_round(
+        &mut self,
+        env: &RoundEnv<'_>,
+        strategy: &dyn FedStrategy,
+        spec: &RoundSpec<'_>,
+    ) -> Result<Vec<ClientResult>>;
+
+    /// Release transport resources (TCP: send `Shutdown` to workers).
+    fn shutdown(&mut self) -> Result<()> {
+        Ok(())
+    }
+}
+
+/// The default backend: the pre-transport coordinator's train/encode
+/// path, verbatim — engine-bound training serially on the coordinator
+/// thread, upload encoding on the worker pool.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct InProcess;
+
+/// One trained client awaiting upload encoding: the training outcome,
+/// the client's RNG positioned exactly where training left it, and its
+/// slot in the participant list.
+struct TrainedClient {
+    slot: usize,
+    client: usize,
+    outcome: ClientOutcome,
+    rng: Rng,
+}
+
+impl Transport for InProcess {
+    fn kind(&self) -> TransportKind {
+        TransportKind::InProcess
+    }
+
+    fn run_round(
+        &mut self,
+        env: &RoundEnv<'_>,
+        strategy: &dyn FedStrategy,
+        spec: &RoundSpec<'_>,
+    ) -> Result<Vec<ClientResult>> {
+        let cfg = env.cfg;
+        let ctx = RoundContext {
+            round: spec.round,
+            cfg,
+            base: env.base,
+            compressing: spec.compressing,
+            down_compressed: spec.down_compressed,
+        };
+
+        // --- client updates (engine-bound, coordinator thread) ------------
+        let mut results: Vec<Option<ClientResult>> =
+            spec.participants.iter().map(|_| None).collect();
+        let mut trained = Vec::with_capacity(spec.participants.len());
+        for (slot, part) in spec.participants.iter().enumerate() {
+            let phase = match part.fate {
+                ClientFate::Healthy { .. } => None,
+                ClientFate::DropBeforeTrain => Some(DropPhase::BeforeTrain),
+                ClientFate::DropBeforeUpload => Some(DropPhase::BeforeUpload),
+            };
+            if let Some(phase) = phase {
+                results[slot] = Some(ClientResult::Dropped(phase));
+                continue;
+            }
+            let k = part.client;
+            let mut client_rng = env.base.fork(client_stream(spec.round, cfg.clients, k));
+            let outcome = train_local(
+                env.engine,
+                cfg,
+                &env.data.labeled[k],
+                &env.data.unlabeled[k],
+                &spec.down.theta,
+                spec.centroids,
+                spec.opts.weight_clustering,
+                &mut client_rng,
+            )?;
+            trained.push(TrainedClient {
+                slot,
+                client: k,
+                outcome,
+                rng: client_rng,
+            });
+        }
+
+        // --- upload encoding (pure CPU, worker pool) ----------------------
+        let blobs: Vec<Result<WireBlob>> = {
+            let centroids = spec.centroids;
+            let ctx = &ctx;
+            parallel_map(trained.len(), env.encode_workers.max(1), |i| {
+                let t = &trained[i];
+                // the client's learned centroids ride along for the snap
+                let mut client_cents = centroids.clone();
+                client_cents.mu.clone_from(&t.outcome.mu);
+                let mut rng = t.rng.clone();
+                strategy.encode_upload(
+                    ctx,
+                    &UploadInput {
+                        client: t.client,
+                        theta: &t.outcome.theta,
+                        centroids: &client_cents,
+                    },
+                    &mut rng,
+                )
+            })
+        };
+
+        for (t, blob) in trained.into_iter().zip(blobs) {
+            results[t.slot] = Some(ClientResult::Upload(Box::new(ReceivedUpload {
+                client: t.client,
+                blob: blob?,
+                mu: t.outcome.mu,
+                score: t.outcome.score,
+                n: t.outcome.n,
+                mean_ce: t.outcome.mean_ce,
+            })));
+        }
+        Ok(results
+            .into_iter()
+            .map(|r| r.expect("every participant resolved"))
+            .collect())
+    }
+}

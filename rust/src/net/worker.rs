@@ -1,0 +1,207 @@
+//! The worker runtime behind `fedcompress worker --connect ADDR`.
+//!
+//! A worker is a client host: it connects to the coordinator, learns
+//! at handshake which client ids it owns plus the full experiment
+//! image (strategy name + config), and rebuilds everything else
+//! locally — engine, data shards, strategy plugin, RNG streams — from
+//! that image. Only models cross the wire, so a loopback run's bytes
+//! and metrics match the in-process run exactly.
+//!
+//! Round loop: `RoundOpen` (centroid table + train flags), then one
+//! `Download` per owned selected client — each answered with an
+//! `Upload` before the next `Download` is read — then `RoundClose`.
+//! `Shutdown` (or a clean EOF in its place) ends the process.
+
+use std::net::TcpStream;
+use std::path::Path;
+use std::time::{Duration, Instant};
+
+use anyhow::{bail, Context, Result};
+
+use crate::baselines::registry::StrategyRegistry;
+use crate::baselines::wire::WireCodec;
+use crate::client::trainer::train_local;
+use crate::clustering::CentroidState;
+use crate::config::FedConfig;
+use crate::coordinator::server::{build_data, client_stream, run_rng, FederatedData};
+use crate::coordinator::strategy::{FedStrategy, RoundContext, UploadInput};
+use crate::info;
+use crate::runtime::Engine;
+use crate::util::rng::Rng;
+
+use super::proto::{Download, Hello, Msg, RoundOpen, Upload};
+use super::{ProtoError, PROTO_VERSION};
+
+/// Connect with retry so `worker` can be launched before `serve`.
+fn connect(addr: &str, patience: Duration) -> Result<TcpStream> {
+    let t0 = Instant::now();
+    loop {
+        match TcpStream::connect(addr) {
+            Ok(s) => return Ok(s),
+            Err(_) if t0.elapsed() < patience => {
+                std::thread::sleep(Duration::from_millis(200));
+            }
+            Err(e) => {
+                return Err(e).with_context(|| format!("connecting to coordinator at {addr}"))
+            }
+        }
+    }
+}
+
+/// Run one worker process to completion: handshake, serve rounds until
+/// `Shutdown`. Returns the number of uploads produced.
+pub fn run_worker(addr: &str, artifacts: &Path) -> Result<usize> {
+    let stream = connect(addr, Duration::from_secs(10))?;
+    stream.set_nodelay(true).ok();
+    Msg::Hello(Hello {
+        proto_version: PROTO_VERSION,
+    })
+    .write_to(&mut &stream)?;
+    let ack = match Msg::read_from(&mut &stream)? {
+        Msg::HelloAck(a) => a,
+        other => bail!("expected HelloAck, coordinator sent {}", other.kind()),
+    };
+    let cfg = *ack.cfg;
+    cfg.validate().context("coordinator sent an invalid config")?;
+    let owned: Vec<usize> = ack.clients.iter().map(|&c| c as usize).collect();
+    info!(
+        "worker {}/{}: strategy={} dataset={} clients={owned:?}",
+        ack.worker, ack.workers, ack.strategy, cfg.dataset
+    );
+
+    // rebuild the experiment locally from the config image
+    let strategy = StrategyRegistry::builtin().build(&ack.strategy, &cfg)?;
+    let engine = Engine::load(artifacts)?;
+    let data = build_data(&engine, &cfg)?;
+    let base = run_rng(&cfg);
+
+    let mut uploads = 0usize;
+    loop {
+        match Msg::read_from(&mut &stream) {
+            Ok(Msg::RoundOpen(open)) => {
+                uploads += serve_round(
+                    &stream,
+                    &open,
+                    &engine,
+                    &cfg,
+                    &data,
+                    strategy.as_ref(),
+                    &base,
+                    &owned,
+                )?;
+            }
+            Ok(Msg::RoundClose { .. }) => continue,
+            Ok(Msg::Shutdown) => break,
+            // EOF exactly at a frame boundary is a coordinator that hung
+            // up cleanly-enough (ctrl-C between rounds); EOF *inside* a
+            // frame is a mid-write crash and stays an error
+            Err(ProtoError::Truncated {
+                what: "frame header",
+            }) => break,
+            Ok(other) => bail!("unexpected {} outside a round", other.kind()),
+            Err(e) => return Err(e.into()),
+        }
+    }
+    info!("worker {}: done after {uploads} uploads", ack.worker);
+    Ok(uploads)
+}
+
+/// Handle one `RoundOpen`: `n_downloads` train/encode/upload cycles.
+#[allow(clippy::too_many_arguments)]
+fn serve_round(
+    stream: &TcpStream,
+    open: &RoundOpen,
+    engine: &Engine,
+    cfg: &FedConfig,
+    data: &FederatedData,
+    strategy: &dyn FedStrategy,
+    base: &Rng,
+    owned: &[usize],
+) -> Result<usize> {
+    let round = open.round as usize;
+    // the server centroid table: mask rebuilt from the active count
+    // (the prefix invariant the checkpoint format also relies on)
+    let c_max = open.mu.len();
+    let mut mask = vec![0.0f32; c_max];
+    for m in mask.iter_mut().take(open.active as usize) {
+        *m = 1.0;
+    }
+    let centroids = CentroidState {
+        mu: open.mu.clone(),
+        mask,
+        c_max,
+        active: open.active as usize,
+    };
+    let ctx = RoundContext {
+        round,
+        cfg,
+        base,
+        compressing: open.compressing,
+        down_compressed: open.down_compressed,
+    };
+
+    for _ in 0..open.n_downloads {
+        let dl: Download = match Msg::read_from(&mut &*stream)? {
+            Msg::Download(d) => d,
+            other => bail!("expected Download in round {round}, got {}", other.kind()),
+        };
+        anyhow::ensure!(
+            dl.round as usize == round,
+            "download for round {} inside round {round}",
+            dl.round
+        );
+        let k = dl.client as usize;
+        anyhow::ensure!(
+            owned.contains(&k),
+            "download for client {k} this worker does not own"
+        );
+        let theta = super::proto::decode_blob(dl.codec, &dl.payload)?;
+
+        let mut client_rng = base.fork(client_stream(round, cfg.clients, k));
+        let outcome = train_local(
+            engine,
+            cfg,
+            &data.labeled[k],
+            &data.unlabeled[k],
+            &theta,
+            &centroids,
+            open.weight_clustering,
+            &mut client_rng,
+        )?;
+        // the client's learned centroids ride along for the snap
+        let mut client_cents = centroids.clone();
+        client_cents.mu.clone_from(&outcome.mu);
+        let blob = strategy.encode_upload(
+            &ctx,
+            &UploadInput {
+                client: k,
+                theta: &outcome.theta,
+                centroids: &client_cents,
+            },
+            &mut client_rng,
+        )?;
+        blob.ensure_payload()?;
+        anyhow::ensure!(
+            blob.codec != WireCodec::Opaque,
+            "strategy {} produces opaque blobs; it cannot run over TCP",
+            strategy.name()
+        );
+        // zero-copy send: sidecars as the head, the encoded blob as the
+        // streamed tail
+        super::proto::write_upload(
+            &mut &*stream,
+            &Upload {
+                round: round as u32,
+                client: k as u32,
+                score: outcome.score,
+                n: outcome.n as u32,
+                mean_ce: outcome.mean_ce,
+                mu: outcome.mu,
+                codec: blob.codec,
+                payload: blob.payload,
+            },
+        )?;
+    }
+    info!("worker: round {round} served {} clients", open.n_downloads);
+    Ok(open.n_downloads as usize)
+}

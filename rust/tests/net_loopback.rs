@@ -1,0 +1,374 @@
+//! Loopback equivalence: `serve` + in-thread workers on `127.0.0.1:0`
+//! must reproduce the in-process run bit-for-bit — `RoundMetrics`,
+//! events, and the (framed) ledger — for every registered strategy.
+//! Engine-gated like every other e2e suite (skips without built
+//! artifacts). Also covers the real-fault surface (silent workers →
+//! deadline cuts) and checkpoint resume mismatch warnings.
+
+use std::net::TcpStream;
+use std::thread;
+use std::time::Duration;
+
+use fedcompress::baselines::registry::StrategyRegistry;
+use fedcompress::compression::accounting::Direction;
+use fedcompress::config::FedConfig;
+use fedcompress::coordinator::checkpoint::Checkpoint;
+use fedcompress::coordinator::server::{build_data, run_federated_with_data};
+use fedcompress::coordinator::{run_with_strategy_opts, RunResult};
+use fedcompress::net::proto::{Hello, Msg};
+use fedcompress::net::{worker, InProcess, TcpServer, Transport, PROTO_VERSION};
+use fedcompress::runtime::artifacts::default_dir;
+use fedcompress::runtime::Engine;
+
+fn engine() -> Option<Engine> {
+    let d = default_dir();
+    if !d.join("manifest.json").exists() {
+        eprintln!("skipping: artifacts not built");
+        return None;
+    }
+    Some(Engine::load(&d).unwrap())
+}
+
+fn tiny_cfg(dataset: &str) -> FedConfig {
+    let mut cfg = FedConfig::quick(dataset);
+    cfg.rounds = 3;
+    cfg.clients = 3;
+    cfg.local_epochs = 2;
+    cfg.server_epochs = 1;
+    cfg.train_size = 192;
+    cfg.test_size = 96;
+    cfg.ood_size = 64;
+    cfg.unlabeled_per_client = 16;
+    cfg.warmup_rounds = 1;
+    cfg.validate().unwrap();
+    cfg
+}
+
+/// Run `strategy` over a real loopback socket with `n_workers`
+/// in-thread worker runtimes (each loading its own engine).
+fn loopback_run(cfg: &FedConfig, strategy: &str, n_workers: usize) -> RunResult {
+    let engine = Engine::load(&default_dir()).unwrap();
+    let data = build_data(&engine, cfg).unwrap();
+    let server = TcpServer::bind("127.0.0.1:0", n_workers, cfg, strategy, None).unwrap();
+    let addr = server.local_addr().unwrap().to_string();
+
+    let handles: Vec<_> = (0..n_workers)
+        .map(|_| {
+            let addr = addr.clone();
+            thread::spawn(move || worker::run_worker(&addr, &default_dir()))
+        })
+        .collect();
+
+    let mut transport = server.accept_workers().unwrap();
+    let mut plugin = StrategyRegistry::builtin().build(strategy, cfg).unwrap();
+    let result = run_with_strategy_opts(
+        &engine,
+        cfg,
+        plugin.as_mut(),
+        &data,
+        &mut transport,
+        None,
+    )
+    .unwrap();
+    transport.shutdown().unwrap();
+    for h in handles {
+        h.join().unwrap().unwrap();
+    }
+    result
+}
+
+fn assert_equivalent(strategy: &str, inproc: &RunResult, loopback: &RunResult) {
+    assert_eq!(inproc.final_theta, loopback.final_theta, "{strategy}: final model");
+    assert_eq!(
+        inproc.final_accuracy, loopback.final_accuracy,
+        "{strategy}: final accuracy"
+    );
+    assert_eq!(
+        inproc.final_model_bytes, loopback.final_model_bytes,
+        "{strategy}: final wire size"
+    );
+    // RoundMetrics byte-identical (wall_ms is real time, everything
+    // else must match bit-for-bit)
+    assert_eq!(inproc.rounds.len(), loopback.rounds.len(), "{strategy}");
+    for (a, b) in inproc.rounds.iter().zip(&loopback.rounds) {
+        assert_eq!(a.round, b.round, "{strategy}");
+        assert_eq!(a.accuracy, b.accuracy, "{strategy} round {}", a.round);
+        assert_eq!(a.test_loss, b.test_loss, "{strategy} round {}", a.round);
+        assert_eq!(a.score, b.score, "{strategy} round {}", a.round);
+        assert_eq!(a.client_mean_ce, b.client_mean_ce, "{strategy} round {}", a.round);
+        assert_eq!(a.clusters, b.clusters, "{strategy} round {}", a.round);
+        assert_eq!(a.up_bytes, b.up_bytes, "{strategy} round {}", a.round);
+        assert_eq!(a.down_bytes, b.down_bytes, "{strategy} round {}", a.round);
+        assert_eq!(a.round_sim_ms, b.round_sim_ms, "{strategy} round {}", a.round);
+        assert_eq!(a.stragglers, b.stragglers, "{strategy} round {}", a.round);
+        assert_eq!(a.dropped, b.dropped, "{strategy} round {}", a.round);
+    }
+    // the structured event log agrees exactly
+    assert_eq!(
+        inproc.events.to_jsonl(),
+        loopback.events.to_jsonl(),
+        "{strategy}: event log diverged"
+    );
+    // the ledger agrees transfer-by-transfer, framed bytes included
+    let (a, b) = (inproc.ledger.transfers(), loopback.ledger.transfers());
+    assert_eq!(a.len(), b.len(), "{strategy}: transfer count");
+    for (x, y) in a.iter().zip(b) {
+        assert_eq!(x.round, y.round, "{strategy}");
+        assert_eq!(x.direction, y.direction, "{strategy}");
+        assert_eq!(x.bytes, y.bytes, "{strategy}");
+        assert_eq!(x.framed_bytes, y.framed_bytes, "{strategy}");
+    }
+}
+
+// ---------------------------------------------------------------------------
+// the headline guarantee
+// ---------------------------------------------------------------------------
+
+/// serve + 2 workers on loopback == in-process, for every registered
+/// strategy, with `framed_bytes >= bytes` and overhead <= 64 B on
+/// every ledger entry.
+#[test]
+fn loopback_equals_in_process_for_every_strategy() {
+    let Some(engine) = engine() else { return };
+    let cfg = tiny_cfg("cifar10");
+    let data = build_data(&engine, &cfg).unwrap();
+
+    for strategy in StrategyRegistry::builtin().names() {
+        let inproc = run_federated_with_data(&engine, &cfg, strategy, &data).unwrap();
+        let loopback = loopback_run(&cfg, strategy, 2);
+        assert_equivalent(strategy, &inproc, &loopback);
+
+        // acceptance bound on the framed ledger
+        assert!(loopback.ledger.transfer_count() > 0, "{strategy}");
+        for t in loopback.ledger.transfers() {
+            assert!(t.framed_bytes >= t.bytes, "{strategy}: framed < ideal");
+            assert!(
+                t.framed_bytes - t.bytes <= 64,
+                "{strategy}: {} B overhead on a {:?} transfer",
+                t.framed_bytes - t.bytes,
+                t.direction
+            );
+        }
+        assert!(loopback.total_framed_bytes() > loopback.total_bytes(), "{strategy}");
+    }
+}
+
+/// The worker count is a deployment detail, not a semantic one: 1 and
+/// 3 workers produce the same run as 2 (client ids, not sockets,
+/// drive behavior).
+#[test]
+fn worker_count_does_not_change_the_run() {
+    let Some(engine) = engine() else { return };
+    let cfg = tiny_cfg("cifar10");
+    let data = build_data(&engine, &cfg).unwrap();
+    let inproc = run_federated_with_data(&engine, &cfg, "fedcompress", &data).unwrap();
+    for n_workers in [1, 3] {
+        let loopback = loopback_run(&cfg, "fedcompress", n_workers);
+        assert_equivalent("fedcompress", &inproc, &loopback);
+    }
+}
+
+// ---------------------------------------------------------------------------
+// real transport faults feed the existing fault machinery
+// ---------------------------------------------------------------------------
+
+/// A worker that handshakes and then never uploads is cut by the
+/// per-client timeout: its clients surface as `Event::Deadline`, the
+/// round completes with zero survivors, and the model never moves.
+#[test]
+fn silent_worker_is_cut_by_the_timeout() {
+    let Some(engine) = engine() else { return };
+    let mut cfg = tiny_cfg("cifar10");
+    cfg.rounds = 2;
+    let data = build_data(&engine, &cfg).unwrap();
+
+    let server = TcpServer::bind(
+        "127.0.0.1:0",
+        1,
+        &cfg,
+        "fedavg",
+        Some(Duration::from_millis(300)),
+    )
+    .unwrap();
+    let addr = server.local_addr().unwrap();
+    // a worker-shaped peer that accepts every download and never replies
+    let h = thread::spawn(move || {
+        let stream = TcpStream::connect(addr).unwrap();
+        Msg::Hello(Hello {
+            proto_version: PROTO_VERSION,
+        })
+        .write_to(&mut &stream)
+        .unwrap();
+        let Msg::HelloAck(_) = Msg::read_from(&mut &stream).unwrap() else {
+            panic!("no ack")
+        };
+        // read whatever arrives until the coordinator hangs up
+        while Msg::read_from(&mut &stream).is_ok() {}
+    });
+
+    let mut transport = server.accept_workers().unwrap();
+    let mut plugin = StrategyRegistry::builtin().build("fedavg", &cfg).unwrap();
+    let result = run_with_strategy_opts(
+        &engine,
+        &cfg,
+        plugin.as_mut(),
+        &data,
+        &mut transport,
+        None,
+    )
+    .unwrap();
+    transport.shutdown().unwrap();
+    assert_eq!(transport.alive_workers(), 0, "the silent worker was evicted");
+    // closing the sockets unblocks the fake worker's read loop
+    drop(transport);
+    h.join().unwrap();
+
+    // round 0: every client cut by the timeout (Event::Deadline); the
+    // stream is unsynchronized after that, so the worker is evicted
+    // and round 1's clients are transport dropouts (Event::Dropout)
+    assert_eq!(result.events.of_kind("deadline").count(), cfg.clients);
+    assert_eq!(result.events.of_kind("dropout").count(), cfg.clients);
+    assert_eq!(result.ledger.bytes_in(Direction::Up), 0);
+    for m in &result.rounds {
+        assert_eq!(m.dropped, cfg.clients);
+        assert_eq!(m.up_bytes, 0);
+        // no survivors -> the evaluated model never changes
+        assert_eq!(m.accuracy, result.rounds[0].accuracy);
+    }
+}
+
+// ---------------------------------------------------------------------------
+// checkpoint resume: environment stamping + mismatch warning
+// ---------------------------------------------------------------------------
+
+/// The resume contract, end to end: checkpointing a fedcompress run
+/// after R rounds and resuming to R+2 must reproduce the uninterrupted
+/// (R+2)-round run bit-for-bit — model, metrics, and controller
+/// decisions (the score history is replayed into the plateau
+/// controller via `FedStrategy::resume`).
+#[test]
+fn resume_is_bit_exact_continuation_for_fedcompress() {
+    let Some(engine) = engine() else { return };
+    let cfg = tiny_cfg("cifar10");
+    let data = build_data(&engine, &cfg).unwrap();
+
+    let mut longer = cfg.clone();
+    longer.rounds = cfg.rounds + 2;
+    let uninterrupted = run_federated_with_data(&engine, &longer, "fedcompress", &data).unwrap();
+
+    let first = run_federated_with_data(&engine, &cfg, "fedcompress", &data).unwrap();
+    let scores: Vec<f64> = first.rounds.iter().map(|r| r.score).collect();
+    let ckpt = Checkpoint::from_state(
+        cfg.rounds,
+        &first.final_theta,
+        &first.final_centroids,
+        &scores,
+        "inproc",
+        cfg.fleet.preset.name(),
+    );
+    let mut plugin = StrategyRegistry::builtin()
+        .build("fedcompress", &longer)
+        .unwrap();
+    let mut transport = InProcess;
+    let resumed = run_with_strategy_opts(
+        &engine,
+        &longer,
+        plugin.as_mut(),
+        &data,
+        &mut transport,
+        Some(&ckpt),
+    )
+    .unwrap();
+
+    assert_eq!(resumed.final_theta, uninterrupted.final_theta);
+    assert_eq!(resumed.final_accuracy, uninterrupted.final_accuracy);
+    assert_eq!(resumed.final_model_bytes, uninterrupted.final_model_bytes);
+    // the continuation rounds match the tail of the uninterrupted run,
+    // cluster-controller decisions included
+    let tail = &uninterrupted.rounds[cfg.rounds..];
+    assert_eq!(resumed.rounds.len(), tail.len());
+    for (a, b) in resumed.rounds.iter().zip(tail) {
+        assert_eq!(a.round, b.round);
+        assert_eq!(a.accuracy, b.accuracy, "round {}", a.round);
+        assert_eq!(a.score, b.score, "round {}", a.round);
+        assert_eq!(a.clusters, b.clusters, "round {}", a.round);
+        assert_eq!(a.up_bytes, b.up_bytes, "round {}", a.round);
+        assert_eq!(a.down_bytes, b.down_bytes, "round {}", a.round);
+    }
+}
+
+#[test]
+fn resume_continues_and_mismatched_environment_warns() {
+    let Some(engine) = engine() else { return };
+    let cfg = tiny_cfg("cifar10");
+    let data = build_data(&engine, &cfg).unwrap();
+    let first = run_federated_with_data(&engine, &cfg, "fedavg", &data).unwrap();
+    let scores: Vec<f64> = first.rounds.iter().map(|r| r.score).collect();
+
+    // continue the run for two more rounds from its checkpoint
+    let ckpt = Checkpoint::from_state(
+        cfg.rounds,
+        &first.final_theta,
+        &first.final_centroids,
+        &scores,
+        "inproc",
+        cfg.fleet.preset.name(),
+    );
+    let mut longer = cfg.clone();
+    longer.rounds = cfg.rounds + 2;
+    let mut plugin = StrategyRegistry::builtin().build("fedavg", &longer).unwrap();
+    let mut transport = InProcess;
+    let resumed = run_with_strategy_opts(
+        &engine,
+        &longer,
+        plugin.as_mut(),
+        &data,
+        &mut transport,
+        Some(&ckpt),
+    )
+    .unwrap();
+    // same environment: no warning, and only the new rounds ran
+    assert_eq!(resumed.events.of_kind("resume_mismatch").count(), 0);
+    assert_eq!(resumed.rounds.len(), 2);
+    assert_eq!(resumed.rounds[0].round, cfg.rounds);
+
+    // a checkpoint stamped with a different transport/fleet warns
+    let foreign = Checkpoint {
+        transport: "tcp".to_string(),
+        fleet: "mobile".to_string(),
+        ..ckpt.clone()
+    };
+    let mut plugin = StrategyRegistry::builtin().build("fedavg", &longer).unwrap();
+    let warned = run_with_strategy_opts(
+        &engine,
+        &longer,
+        plugin.as_mut(),
+        &data,
+        &mut transport,
+        Some(&foreign),
+    )
+    .unwrap();
+    let mismatches: Vec<_> = warned.events.of_kind("resume_mismatch").collect();
+    assert_eq!(mismatches.len(), 1);
+    let j = mismatches[0].to_json();
+    assert_eq!(j.get("ckpt_transport").unwrap().as_str().unwrap(), "tcp");
+    assert_eq!(j.get("run_transport").unwrap().as_str().unwrap(), "inproc");
+    assert_eq!(j.get("ckpt_fleet").unwrap().as_str().unwrap(), "mobile");
+    assert_eq!(j.get("run_fleet").unwrap().as_str().unwrap(), "ideal");
+    // the warning does not change the training itself
+    assert_eq!(warned.final_theta, resumed.final_theta);
+
+    // resuming a finished run is a loud error, not a silent no-op
+    let mut plugin = StrategyRegistry::builtin().build("fedavg", &cfg).unwrap();
+    let err = run_with_strategy_opts(
+        &engine,
+        &cfg,
+        plugin.as_mut(),
+        &data,
+        &mut transport,
+        Some(&ckpt),
+    )
+    .unwrap_err()
+    .to_string();
+    assert!(err.contains("already at round"), "{err}");
+}

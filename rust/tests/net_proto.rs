@@ -1,0 +1,249 @@
+//! Protocol robustness: corrupt, truncated, and hostile input against
+//! the frame/message codecs must surface as typed `net::ProtoError`s —
+//! never a panic, never a hang, never a giant allocation. Plus a
+//! no-engine handshake test over a real localhost socket.
+
+use std::io::{Read, Write};
+use std::net::TcpStream;
+use std::thread;
+use std::time::Duration;
+
+use fedcompress::config::FedConfig;
+use fedcompress::net::frame::{self, MAX_PAYLOAD};
+use fedcompress::net::proto::{Hello, Msg};
+use fedcompress::net::{read_frame, write_frame, ProtoError, TcpServer, Transport, PROTO_VERSION};
+
+fn ok_frame() -> Vec<u8> {
+    frame::encode_frame(6, &42u32.to_le_bytes()) // RoundClose{42}
+}
+
+// ---------------------------------------------------------------------------
+// frame codec corruption
+// ---------------------------------------------------------------------------
+
+#[test]
+fn truncated_frames_error_at_every_cut_point() {
+    let good = ok_frame();
+    // every possible truncation: header, payload, checksum
+    for cut in 0..good.len() {
+        let err = read_frame(&mut &good[..cut]).unwrap_err();
+        assert!(
+            matches!(err, ProtoError::Truncated { .. }),
+            "cut at {cut}: {err}"
+        );
+    }
+    // the full frame still parses (the loop above really was the cut)
+    assert!(read_frame(&mut &good[..]).is_ok());
+}
+
+#[test]
+fn bad_magic_is_rejected() {
+    let mut bad = ok_frame();
+    bad[0] ^= 0xFF;
+    match read_frame(&mut &bad[..]).unwrap_err() {
+        ProtoError::BadMagic { got } => {
+            assert_ne!(got, frame::MAGIC);
+        }
+        other => panic!("expected BadMagic, got {other}"),
+    }
+}
+
+#[test]
+fn wrong_version_is_rejected_with_the_peer_version() {
+    let mut bad = ok_frame();
+    bad[4] = 99; // version low byte
+    match read_frame(&mut &bad[..]).unwrap_err() {
+        ProtoError::BadVersion { got } => assert_eq!(got, 99),
+        other => panic!("expected BadVersion, got {other}"),
+    }
+    assert_ne!(PROTO_VERSION, 99);
+}
+
+#[test]
+fn crc_mismatch_is_detected_on_any_payload_flip() {
+    let good = frame::encode_frame(5, b"some payload worth protecting");
+    let payload_start = 11;
+    let payload_end = good.len() - 4;
+    for i in payload_start..payload_end {
+        let mut bad = good.clone();
+        bad[i] ^= 0x40;
+        match read_frame(&mut &bad[..]).unwrap_err() {
+            ProtoError::CrcMismatch { stored, computed } => assert_ne!(stored, computed),
+            other => panic!("flip at {i}: expected CrcMismatch, got {other}"),
+        }
+    }
+}
+
+/// A hostile length prefix must be refused before allocation — this
+/// test would OOM or hang if the cap were missing.
+#[test]
+fn oversized_length_is_refused_without_allocating() {
+    let mut bad = Vec::new();
+    bad.extend_from_slice(&frame::MAGIC.to_le_bytes());
+    bad.extend_from_slice(&PROTO_VERSION.to_le_bytes());
+    bad.push(4);
+    bad.extend_from_slice(&u32::MAX.to_le_bytes()); // 4 GiB claim
+    match read_frame(&mut &bad[..]).unwrap_err() {
+        ProtoError::Oversized { len, max } => {
+            assert_eq!(len, u32::MAX);
+            assert_eq!(max, MAX_PAYLOAD);
+        }
+        other => panic!("expected Oversized, got {other}"),
+    }
+}
+
+#[test]
+fn unknown_message_type_is_typed() {
+    let bad = frame::encode_frame(200, b"");
+    let (ty, payload) = read_frame(&mut &bad[..]).unwrap();
+    match Msg::decode(ty, &payload).unwrap_err() {
+        ProtoError::UnknownMsgType { got } => assert_eq!(got, 200),
+        other => panic!("expected UnknownMsgType, got {other}"),
+    }
+}
+
+#[test]
+fn malformed_message_bodies_are_typed_not_panics() {
+    // truncated body for every message type in the vocabulary
+    for ty in 1u8..=6 {
+        let err = Msg::decode(ty, &[0x01]).unwrap_err();
+        assert!(
+            matches!(err, ProtoError::Truncated { .. } | ProtoError::Malformed { .. }),
+            "type {ty}: {err}"
+        );
+    }
+    // trailing garbage after a well-formed body
+    let mut body = 7u32.to_le_bytes().to_vec();
+    body.push(0xEE);
+    let err = Msg::decode(6, &body).unwrap_err();
+    assert!(matches!(err, ProtoError::Malformed { .. }), "{err}");
+    // random bytes across all types: anything but a panic
+    let mut x = 0x2545F4914F6CDD1Du64;
+    for _ in 0..2000 {
+        x ^= x << 13;
+        x ^= x >> 7;
+        x ^= x << 17;
+        let len = (x % 64) as usize;
+        let bytes: Vec<u8> = (0..len).map(|i| (x >> (i % 8)) as u8).collect();
+        let ty = (x >> 8) as u8;
+        let _ = Msg::decode(ty, &bytes); // must return, not panic
+    }
+}
+
+#[test]
+fn proto_errors_format_usefully() {
+    let e = ProtoError::CrcMismatch {
+        stored: 0xDEAD,
+        computed: 0xBEEF,
+    };
+    assert!(e.to_string().contains("0x0000dead"), "{e}");
+    assert!(ProtoError::BadVersion { got: 3 }.to_string().contains("v3"));
+    assert!(ProtoError::Truncated { what: "frame header" }
+        .to_string()
+        .contains("frame header"));
+    // timeouts are distinguishable from dead peers
+    let timeout = ProtoError::Io(std::io::Error::from(std::io::ErrorKind::WouldBlock));
+    assert!(timeout.is_timeout());
+    let eof = ProtoError::Io(std::io::Error::from(std::io::ErrorKind::UnexpectedEof));
+    assert!(!eof.is_timeout());
+}
+
+// ---------------------------------------------------------------------------
+// handshake over a real localhost socket (no engine needed)
+// ---------------------------------------------------------------------------
+
+/// Bind on port 0, connect a hand-rolled peer speaking the raw
+/// protocol, and check the handshake grant: deterministic client ids,
+/// a bit-exact config image, and a clean Shutdown.
+#[test]
+fn handshake_grants_ids_and_config_over_tcp() {
+    let mut cfg = FedConfig::quick("cifar10");
+    cfg.set("clients", "5").unwrap();
+    cfg.set("seed", "1234").unwrap();
+    let server = TcpServer::bind("127.0.0.1:0", 2, &cfg, "topk", None).unwrap();
+    let addr = server.local_addr().unwrap();
+
+    let fake_worker = |expect_ids: Vec<u32>| {
+        thread::spawn(move || {
+            let stream = TcpStream::connect(addr).unwrap();
+            Msg::Hello(Hello {
+                proto_version: PROTO_VERSION,
+            })
+            .write_to(&mut &stream)
+            .unwrap();
+            let ack = match Msg::read_from(&mut &stream).unwrap() {
+                Msg::HelloAck(a) => a,
+                other => panic!("expected HelloAck, got {}", other.kind()),
+            };
+            assert_eq!(ack.workers, 2);
+            assert_eq!(ack.clients, expect_ids);
+            assert_eq!(ack.strategy, "topk");
+            assert_eq!(ack.cfg.clients, 5);
+            assert_eq!(ack.cfg.seed, 1234);
+            assert_eq!(format!("{:?}", ack.cfg), format!("{:?}", make_cfg()));
+            // wait for the shutdown frame
+            match Msg::read_from(&mut &stream).unwrap() {
+                Msg::Shutdown => {}
+                other => panic!("expected Shutdown, got {}", other.kind()),
+            }
+        })
+    };
+    fn make_cfg() -> FedConfig {
+        let mut cfg = FedConfig::quick("cifar10");
+        cfg.set("clients", "5").unwrap();
+        cfg.set("seed", "1234").unwrap();
+        cfg
+    }
+
+    // worker 0 hosts {0, 2, 4}, worker 1 hosts {1, 3} — arrival order
+    let h0 = fake_worker(vec![0, 2, 4]);
+    thread::sleep(Duration::from_millis(100)); // pin arrival order
+    let h1 = fake_worker(vec![1, 3]);
+
+    let mut transport = server.accept_workers().unwrap();
+    assert_eq!(transport.alive_workers(), 2);
+    assert!(transport.control_bytes() > 0, "handshake traffic is control-plane");
+    transport.shutdown().unwrap();
+    h0.join().unwrap();
+    h1.join().unwrap();
+}
+
+/// A peer that is not speaking the protocol at all cannot wedge the
+/// handshake: garbage bytes produce a typed failure.
+#[test]
+fn garbage_handshake_fails_loudly() {
+    let cfg = FedConfig::quick("cifar10");
+    let server = TcpServer::bind("127.0.0.1:0", 1, &cfg, "fedavg", None).unwrap();
+    let addr = server.local_addr().unwrap();
+    let h = thread::spawn(move || {
+        let mut stream = TcpStream::connect(addr).unwrap();
+        stream.write_all(b"GET / HTTP/1.1\r\n\r\n").unwrap();
+        // server hangs up on us; drain until EOF
+        let mut sink = Vec::new();
+        let _ = stream.read_to_end(&mut sink);
+    });
+    let err = server.accept_workers().unwrap_err().to_string();
+    assert!(err.contains("handshake"), "{err}");
+    h.join().unwrap();
+}
+
+/// `write_frame`/`read_frame` are inverse over a socket, not just a
+/// buffer (exactly what the worker loop relies on).
+#[test]
+fn frames_survive_a_real_socket() {
+    let listener = std::net::TcpListener::bind("127.0.0.1:0").unwrap();
+    let addr = listener.local_addr().unwrap();
+    let h = thread::spawn(move || {
+        let (stream, _) = listener.accept().unwrap();
+        let (ty, payload) = read_frame(&mut &stream).unwrap();
+        write_frame(&mut &stream, ty, &payload).unwrap(); // echo
+    });
+    let stream = TcpStream::connect(addr).unwrap();
+    let payload: Vec<u8> = (0..100_000u32).map(|i| i as u8).collect();
+    let wrote = write_frame(&mut &stream, 4, &payload).unwrap();
+    assert_eq!(wrote, frame::framed_len(payload.len()));
+    let (ty, echoed) = read_frame(&mut &stream).unwrap();
+    assert_eq!(ty, 4);
+    assert_eq!(echoed, payload);
+    h.join().unwrap();
+}
