@@ -1,5 +1,6 @@
 //! Argument parsing: positional command + `--flag value` pairs +
-//! repeatable `--set k=v`.
+//! repeatable `--set k=v` / `--axis k=v1,v2`, plus one subcommand
+//! positional for command families (`runs list`, `runs diff`, ...).
 
 use std::collections::BTreeMap;
 
@@ -8,8 +9,12 @@ use anyhow::{bail, Result};
 #[derive(Clone, Debug, Default)]
 pub struct Args {
     pub command: String,
+    /// subcommand positional (only the `runs` family takes one)
+    pub sub: Option<String>,
     pub flags: BTreeMap<String, String>,
     pub sets: Vec<(String, String)>,
+    /// repeatable `--axis key=v1,v2` sweep-grid axes
+    pub axes: Vec<(String, String)>,
 }
 
 #[derive(Clone, Debug, PartialEq, Eq)]
@@ -21,13 +26,18 @@ pub enum ParsedCommand {
     Table2,
     Figure2,
     Fleet,
+    Sweep,
+    Runs,
     AblateC,
     Inspect,
     Help,
 }
 
 /// Flags that take no value.
-const SWITCHES: [&str; 1] = ["verbose"];
+const SWITCHES: [&str; 4] = ["verbose", "csv", "smoke", "force"];
+
+/// Commands that take a subcommand positional (`runs list`, ...).
+const SUBCOMMAND_FAMILIES: [&str; 1] = ["runs"];
 
 impl Args {
     pub fn parse(argv: &[String]) -> Result<Args> {
@@ -38,6 +48,12 @@ impl Args {
         }
         args.command = argv[0].clone();
         let mut i = 1;
+        if SUBCOMMAND_FAMILIES.contains(&args.command.as_str()) {
+            if let Some(sub) = argv.get(1).filter(|a| !a.starts_with("--")) {
+                args.sub = Some(sub.clone());
+                i = 2;
+            }
+        }
         while i < argv.len() {
             let a = &argv[i];
             let Some(name) = a.strip_prefix("--") else {
@@ -51,11 +67,15 @@ impl Args {
             let Some(value) = argv.get(i + 1) else {
                 bail!("flag '--{name}' needs a value");
             };
-            if name == "set" {
+            if name == "set" || name == "axis" {
                 let Some((k, v)) = value.split_once('=') else {
-                    bail!("--set expects key=value, got '{value}'");
+                    bail!("--{name} expects key=value, got '{value}'");
                 };
-                args.sets.push((k.to_string(), v.to_string()));
+                if name == "set" {
+                    args.sets.push((k.to_string(), v.to_string()));
+                } else {
+                    args.axes.push((k.to_string(), v.to_string()));
+                }
             } else {
                 args.flags.insert(name.to_string(), value.clone());
             }
@@ -73,6 +93,8 @@ impl Args {
             "table2" => ParsedCommand::Table2,
             "figure2" => ParsedCommand::Figure2,
             "fleet" => ParsedCommand::Fleet,
+            "sweep" => ParsedCommand::Sweep,
+            "runs" => ParsedCommand::Runs,
             "ablate-c" => ParsedCommand::AblateC,
             "inspect" => ParsedCommand::Inspect,
             "help" | "--help" | "-h" => ParsedCommand::Help,
@@ -176,5 +198,33 @@ mod tests {
     fn empty_argv_is_help() {
         let a = Args::parse(&[]).unwrap();
         assert_eq!(a.command().unwrap(), ParsedCommand::Help);
+    }
+
+    #[test]
+    fn runs_family_takes_a_subcommand() {
+        let a = Args::parse(&v(&["runs", "list", "--store", "out"])).unwrap();
+        assert_eq!(a.command().unwrap(), ParsedCommand::Runs);
+        assert_eq!(a.sub.as_deref(), Some("list"));
+        assert_eq!(a.flag("store"), Some("out"));
+        // no subcommand is fine (the command handler decides)
+        let b = Args::parse(&v(&["runs", "--store", "out"])).unwrap();
+        assert_eq!(b.sub, None);
+        // other commands still reject positionals
+        assert!(Args::parse(&v(&["train", "list"])).is_err());
+    }
+
+    #[test]
+    fn sweep_flags_and_axes_parse() {
+        let a = Args::parse(&v(&[
+            "sweep", "--strategies", "fedavg,topk", "--seeds", "1,2", "--axis",
+            "c_max=8,16", "--axis", "topk_keep=0.1,0.2", "--smoke", "--force",
+        ]))
+        .unwrap();
+        assert_eq!(a.command().unwrap(), ParsedCommand::Sweep);
+        assert_eq!(a.axes.len(), 2);
+        assert_eq!(a.axes[0], ("c_max".into(), "8,16".into()));
+        assert_eq!(a.flag("smoke"), Some("true"));
+        assert_eq!(a.flag("force"), Some("true"));
+        assert!(Args::parse(&v(&["sweep", "--axis", "noequals"])).is_err());
     }
 }

@@ -25,6 +25,16 @@ COMMANDS:
     figure2     reproduce Figure 2 (score vs accuracy correlation)
     fleet       strategy x fleet scenario table: rounds- and simulated
                 time-to-accuracy under ideal/mobile/hostile fleets
+    sweep       expand a strategy x fleet x seed x knob grid, run the
+                jobs in parallel, and persist every run in a run store;
+                jobs whose config hash already has a record are skipped
+    runs        query the run store:
+                  runs list      one line per stored run
+                  runs show      per-round metrics of one record
+                  runs diff      bit-exact drift check of two records
+                                 (or two whole stores via --other)
+                  runs compare   grouped comparison table
+                  runs export-bench  write BENCH_sweep.json
     ablate-c    ablation: dynamic-C controller vs fixed C
     inspect     print manifest / model / artifact information
     help        show this message
@@ -63,6 +73,32 @@ FLEET SIMULATION (train, serve, fleet, figure2, ablate-c):
     --deadline-s <s>        simulated round reporting deadline, seconds
                             (0 = none; late clients are cut)
 
+RUN STORE (sweep, runs, table1, fleet, table2):
+    --store <dir>           run store directory. sweep/runs/table2
+                            default to ./runs; table1 and fleet only
+                            touch a store when the flag is given
+    --strategies a,b        sweep: strategy axis (default: all registered)
+    --fleets a,b            sweep: fleet preset axis ('all' = all three)
+    --seeds 1,2,3           sweep: seed axis
+    --axis key=v1,v2        sweep: extra config-knob axis (repeatable,
+                            any --set key: c_max, topk_keep, rounds, ...)
+    --spec <file>           sweep: grid spec file (key = value lines:
+                            strategies/fleets/seeds/grid.<key>)
+    --jobs <n>              sweep: parallel worker threads (default auto)
+    --smoke                 sweep: deterministic synthetic runner — no
+                            artifacts needed; exercises grid, store,
+                            cache, and export end to end
+    --force                 sweep: re-run jobs even when cached
+    --key <hex>             runs show: record key (unique prefix ok)
+    --a / --b <hex>         runs diff: the two records to compare
+    --other <dir>           runs diff: compare all shared keys against
+                            a second store
+    --csv                   runs list/show/compare: CSV to stdout/--out
+    --out <file>            output path (export-bench default:
+                            BENCH_sweep.json)
+    --from-run <hex>        table2: read the deployed cluster count from
+                            a stored run instead of --clusters
+
 EXAMPLES:
     fedcompress train --dataset cifar10 --strategy fedcompress --preset quick
     fedcompress train --strategy list
@@ -72,4 +108,11 @@ EXAMPLES:
     fedcompress table1 --preset quick --datasets cifar10,voxforge
     fedcompress fleet --dataset cifar10 --preset quick --dropout 0.1
     fedcompress figure2 --dataset speechcommands --out fig2.csv
+    fedcompress sweep --preset quick --seeds 41,42 --fleets ideal,mobile
+    fedcompress sweep --spec grids/budget.sweep --store runs --jobs 8
+    fedcompress runs list --store runs
+    fedcompress runs show --key 3fa9 --csv --out run.csv
+    fedcompress runs diff --a 3fa9 --b 81c2
+    fedcompress runs export-bench --store runs --out BENCH_sweep.json
+    fedcompress table1 --store runs          # cache-hits prior runs
 ";

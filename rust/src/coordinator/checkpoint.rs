@@ -17,6 +17,7 @@ use std::path::Path;
 use anyhow::{bail, Context, Result};
 
 use crate::clustering::CentroidState;
+use crate::util::hash::fnv1a64;
 
 const MAGIC: &[u8; 4] = b"FCCK";
 const VERSION: u32 = 2;
@@ -32,15 +33,6 @@ pub struct Checkpoint {
     pub transport: String,
     /// fleet preset the run used (`FleetPreset::name()`)
     pub fleet: String,
-}
-
-fn fnv1a(bytes: &[u8]) -> u64 {
-    let mut h = 0xcbf29ce484222325u64;
-    for &b in bytes {
-        h ^= b as u64;
-        h = h.wrapping_mul(0x100000001b3);
-    }
-    h
 }
 
 impl Checkpoint {
@@ -85,7 +77,7 @@ impl Checkpoint {
             out.extend_from_slice(&(s.len() as u16).to_le_bytes());
             out.extend_from_slice(s.as_bytes());
         }
-        let ck = fnv1a(&out);
+        let ck = fnv1a64(&out);
         out.extend_from_slice(&ck.to_le_bytes());
         out
     }
@@ -96,7 +88,7 @@ impl Checkpoint {
         }
         let (body, ck_bytes) = bytes.split_at(bytes.len() - 8);
         let stored = u64::from_le_bytes(ck_bytes.try_into()?);
-        if fnv1a(body) != stored {
+        if fnv1a64(body) != stored {
             bail!("checkpoint checksum mismatch (corrupt file)");
         }
         let mut i = 0usize;
@@ -153,6 +145,14 @@ impl Checkpoint {
     }
 
     pub fn save(&self, path: &Path) -> Result<()> {
+        // a checkpoint path like runs/exp7/final.ckpt should not force
+        // callers to pre-create the directory tree
+        if let Some(parent) = path.parent() {
+            if !parent.as_os_str().is_empty() {
+                std::fs::create_dir_all(parent)
+                    .with_context(|| format!("creating checkpoint dir {parent:?}"))?;
+            }
+        }
         // atomic-ish: write sibling then rename
         let tmp = path.with_extension("tmp");
         std::fs::write(&tmp, self.to_bytes())
@@ -210,6 +210,27 @@ mod tests {
         c.save(&path).unwrap();
         let d = Checkpoint::load(&path).unwrap();
         assert_eq!(c, d);
+    }
+
+    /// `save` must create missing parent directories instead of
+    /// erroring — long runs checkpoint into per-experiment subtrees
+    /// that usually do not exist yet.
+    #[test]
+    fn save_creates_missing_parent_directories() {
+        let c = demo();
+        let root = std::env::temp_dir().join("fedcompress_ckpt_mkdir_test");
+        let _ = std::fs::remove_dir_all(&root);
+        let path = root.join("deep/nested/dirs/run.ckpt");
+        assert!(!path.parent().unwrap().exists());
+        c.save(&path).unwrap();
+        let d = Checkpoint::load(&path).unwrap();
+        assert_eq!(c, d);
+        // a bare filename (no parent component) still saves fine
+        let cwd_file = Path::new("fedcompress_ckpt_bare_test.ckpt");
+        c.save(cwd_file).unwrap();
+        assert_eq!(Checkpoint::load(cwd_file).unwrap(), c);
+        let _ = std::fs::remove_file(cwd_file);
+        let _ = std::fs::remove_dir_all(&root);
     }
 
     #[test]
@@ -278,7 +299,7 @@ mod tests {
         // bump the version field (bytes 4..8) and re-stamp the checksum
         bytes[4] = 99;
         let body_len = bytes.len() - 8;
-        let ck = fnv1a(&bytes[..body_len]);
+        let ck = fnv1a64(&bytes[..body_len]);
         bytes[body_len..].copy_from_slice(&ck.to_le_bytes());
         let err = Checkpoint::from_bytes(&bytes).unwrap_err().to_string();
         assert!(err.contains("version"), "{err}");
@@ -304,7 +325,7 @@ mod tests {
         let mut bytes = c.to_bytes();
         bytes[4] = 1;
         let body_len = bytes.len() - 8;
-        let ck = fnv1a(&bytes[..body_len]);
+        let ck = fnv1a64(&bytes[..body_len]);
         bytes[body_len..].copy_from_slice(&ck.to_le_bytes());
         let err = Checkpoint::from_bytes(&bytes).unwrap_err().to_string();
         assert!(err.contains("version 1"), "{err}");

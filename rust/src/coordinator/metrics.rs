@@ -5,7 +5,7 @@ use super::events::EventLog;
 use crate::clustering::CentroidState;
 use crate::compression::accounting::CommLedger;
 
-#[derive(Clone, Debug)]
+#[derive(Clone, Debug, PartialEq)]
 pub struct RoundMetrics {
     pub round: usize,
     /// test accuracy of the model the server would dispatch next round
@@ -26,6 +26,85 @@ pub struct RoundMetrics {
     pub stragglers: usize,
     /// selected clients lost this round (faults + deadline cuts)
     pub dropped: usize,
+}
+
+/// Exact wire size of one [`RoundMetrics`] in a run record.
+pub const ROUND_METRICS_BYTES: usize = 80;
+
+impl RoundMetrics {
+    /// Fixed-size little-endian image — the per-round unit the run
+    /// store persists. Float fields are stored as raw bits, so the
+    /// round trip is exact for every value including NaN payloads.
+    pub fn to_le_bytes(&self) -> [u8; ROUND_METRICS_BYTES] {
+        let mut out = [0u8; ROUND_METRICS_BYTES];
+        let mut i = 0;
+        let mut put = |bytes: &[u8]| {
+            out[i..i + bytes.len()].copy_from_slice(bytes);
+            i += bytes.len();
+        };
+        put(&(self.round as u32).to_le_bytes());
+        put(&self.accuracy.to_le_bytes());
+        put(&self.test_loss.to_le_bytes());
+        put(&self.score.to_le_bytes());
+        put(&self.client_mean_ce.to_le_bytes());
+        put(&(self.clusters as u32).to_le_bytes());
+        put(&(self.up_bytes as u64).to_le_bytes());
+        put(&(self.down_bytes as u64).to_le_bytes());
+        put(&self.wall_ms.to_le_bytes());
+        put(&self.round_sim_ms.to_le_bytes());
+        put(&(self.stragglers as u32).to_le_bytes());
+        put(&(self.dropped as u32).to_le_bytes());
+        debug_assert_eq!(i, ROUND_METRICS_BYTES);
+        out
+    }
+
+    /// Inverse of [`RoundMetrics::to_le_bytes`]. Infallible: every
+    /// 80-byte image decodes (validation against the surrounding
+    /// record is the store's job).
+    pub fn from_le_bytes(b: &[u8; ROUND_METRICS_BYTES]) -> RoundMetrics {
+        let mut i = 0;
+        let mut take = |n: usize| {
+            let s = &b[i..i + n];
+            i += n;
+            s
+        };
+        let u32_of = |s: &[u8]| u32::from_le_bytes(s.try_into().unwrap()) as usize;
+        let u64_of = |s: &[u8]| u64::from_le_bytes(s.try_into().unwrap()) as usize;
+        let f64_of = |s: &[u8]| f64::from_le_bytes(s.try_into().unwrap());
+        RoundMetrics {
+            round: u32_of(take(4)),
+            accuracy: f64_of(take(8)),
+            test_loss: f64_of(take(8)),
+            score: f64_of(take(8)),
+            client_mean_ce: f64_of(take(8)),
+            clusters: u32_of(take(4)),
+            up_bytes: u64_of(take(8)),
+            down_bytes: u64_of(take(8)),
+            wall_ms: f64_of(take(8)),
+            round_sim_ms: f64_of(take(8)),
+            stragglers: u32_of(take(4)),
+            dropped: u32_of(take(4)),
+        }
+    }
+}
+
+/// Total simulated training time of a round sequence, ms. Shared by
+/// [`RunResult`] and the store's record views.
+pub fn total_sim_ms(rounds: &[RoundMetrics]) -> f64 {
+    rounds.iter().map(|r| r.round_sim_ms).sum()
+}
+
+/// First round whose evaluated accuracy reached `target`, with the
+/// cumulative simulated ms spent up to and including it.
+pub fn time_to_accuracy(rounds: &[RoundMetrics], target: f64) -> Option<(usize, f64)> {
+    let mut sim_ms = 0.0;
+    for r in rounds {
+        sim_ms += r.round_sim_ms;
+        if r.accuracy >= target {
+            return Some((r.round, sim_ms));
+        }
+    }
+    None
 }
 
 #[derive(Clone, Debug)]
@@ -75,20 +154,13 @@ impl RunResult {
 
     /// Total simulated training time under the configured fleet, ms.
     pub fn total_sim_ms(&self) -> f64 {
-        self.rounds.iter().map(|r| r.round_sim_ms).sum()
+        total_sim_ms(&self.rounds)
     }
 
     /// First round whose evaluated accuracy reached `target`, with the
     /// cumulative simulated ms spent up to and including it.
     pub fn time_to_accuracy(&self, target: f64) -> Option<(usize, f64)> {
-        let mut sim_ms = 0.0;
-        for r in &self.rounds {
-            sim_ms += r.round_sim_ms;
-            if r.accuracy >= target {
-                return Some((r.round, sim_ms));
-            }
-        }
-        None
+        time_to_accuracy(&self.rounds, target)
     }
 }
 
@@ -165,5 +237,43 @@ mod tests {
         assert_eq!(r.time_to_accuracy(0.5), Some((1, 3000.0)));
         assert_eq!(r.time_to_accuracy(0.8), Some((3, 4250.0)));
         assert_eq!(r.time_to_accuracy(0.9), None);
+    }
+
+    /// The store's per-round unit must survive the byte image exactly,
+    /// including awkward float payloads.
+    #[test]
+    fn round_metrics_byte_image_is_bit_exact() {
+        let m = RoundMetrics {
+            round: 17,
+            accuracy: 0.7182818284590452,
+            test_loss: 1.25e-3,
+            score: 4.062499999999999,
+            client_mean_ce: f64::NAN,
+            clusters: 24,
+            up_bytes: usize::MAX >> 1,
+            down_bytes: 123_456_789,
+            wall_ms: 0.049999999999999996,
+            round_sim_ms: 31.4159,
+            stragglers: 3,
+            dropped: 2,
+        };
+        let img = m.to_le_bytes();
+        assert_eq!(img.len(), ROUND_METRICS_BYTES);
+        let back = RoundMetrics::from_le_bytes(&img);
+        // PartialEq would reject the NaN; compare bitwise instead
+        assert_eq!(back.round, m.round);
+        assert_eq!(back.accuracy.to_bits(), m.accuracy.to_bits());
+        assert_eq!(back.test_loss.to_bits(), m.test_loss.to_bits());
+        assert_eq!(back.score.to_bits(), m.score.to_bits());
+        assert_eq!(back.client_mean_ce.to_bits(), m.client_mean_ce.to_bits());
+        assert_eq!(back.clusters, m.clusters);
+        assert_eq!(back.up_bytes, m.up_bytes);
+        assert_eq!(back.down_bytes, m.down_bytes);
+        assert_eq!(back.wall_ms.to_bits(), m.wall_ms.to_bits());
+        assert_eq!(back.round_sim_ms.to_bits(), m.round_sim_ms.to_bits());
+        assert_eq!(back.stragglers, m.stragglers);
+        assert_eq!(back.dropped, m.dropped);
+        // and the image itself is a fixpoint
+        assert_eq!(back.to_le_bytes(), img);
     }
 }

@@ -3,11 +3,11 @@
 //! their Pearson correlation (the paper claims a strong positive one).
 
 use anyhow::Result;
-use std::io::Write;
 
 use crate::config::FedConfig;
 use crate::coordinator::{run_federated, RunResult};
 use crate::runtime::Engine;
+use crate::util::csv;
 use crate::util::stats::pearson;
 
 pub struct Figure2Series {
@@ -33,16 +33,16 @@ pub fn run(engine: &Engine, cfg: &FedConfig) -> Result<Figure2Series> {
 }
 
 pub fn write_csv(series: &Figure2Series, path: &std::path::Path) -> Result<()> {
-    let mut f = std::fs::File::create(path)?;
-    writeln!(f, "round,score,accuracy")?;
-    for i in 0..series.rounds.len() {
-        writeln!(
-            f,
-            "{},{:.6},{:.6}",
-            series.rounds[i], series.score[i], series.accuracy[i]
-        )?;
-    }
-    Ok(())
+    let rows: Vec<Vec<String>> = (0..series.rounds.len())
+        .map(|i| {
+            vec![
+                series.rounds[i].to_string(),
+                format!("{:.6}", series.score[i]),
+                format!("{:.6}", series.accuracy[i]),
+            ]
+        })
+        .collect();
+    csv::write_file(path, &["round", "score", "accuracy"], &rows)
 }
 
 pub fn print_series(s: &Figure2Series) {

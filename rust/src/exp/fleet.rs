@@ -9,16 +9,23 @@
 //! best *final* accuracy over the whole table. Rows that never reach it
 //! during training print "-" (possible when a strategy's finalize-time
 //! fit beats every per-round accuracy, or under heavy faults).
+//!
+//! Like `table1`, the driver computes from [`RunRecord`]s: attach a
+//! [`RunStore`] (`fleet --store <dir>`) and completed strategy x
+//! preset runs load by content key instead of re-executing — the same
+//! seed + preset always reproduces the identical table.
 
 use anyhow::Result;
 
 use crate::baselines::registry::StrategyRegistry;
 use crate::config::FedConfig;
-use crate::coordinator::server::{build_data, run_federated_with_data};
+use crate::coordinator::server::build_data;
 use crate::runtime::Engine;
 use crate::sim::FleetPreset;
+use crate::store::{run_key, RunStore};
+use crate::sweep::{run_or_cached, verify_cached, CacheStats};
 
-#[derive(Clone, Debug)]
+#[derive(Clone, Debug, PartialEq)]
 pub struct FleetRow {
     pub fleet: &'static str,
     pub strategy: &'static str,
@@ -34,7 +41,7 @@ pub struct FleetRow {
     pub stragglers: usize,
 }
 
-#[derive(Clone, Debug)]
+#[derive(Clone, Debug, PartialEq)]
 pub struct FleetTable {
     pub target_acc: f64,
     pub rows: Vec<FleetRow>,
@@ -48,43 +55,80 @@ const TARGET_FRACTION: f64 = 0.9;
 /// and `cfg.fleet.deadline_s` apply to all presets; `cfg.fleet.preset`
 /// is overridden per table row.
 pub fn run(engine: &Engine, cfg: &FedConfig, presets: &[FleetPreset]) -> Result<FleetTable> {
-    let data = build_data(engine, cfg)?;
-    let reg = StrategyRegistry::builtin();
+    run_cached(engine, cfg, presets, None).map(|(t, _)| t)
+}
 
-    let mut runs = Vec::new();
+/// Store-backed variant: every strategy x preset run is loaded from
+/// `store` on a content-key hit and appended on a miss.
+pub fn run_cached(
+    engine: &Engine,
+    cfg: &FedConfig,
+    presets: &[FleetPreset],
+    mut store: Option<&mut RunStore>,
+) -> Result<(FleetTable, CacheStats)> {
+    let reg = StrategyRegistry::builtin();
+    let mut stats = CacheStats::default();
+
+    // the full strategy x preset plan, each with its resolved config
+    let mut plan: Vec<(FleetPreset, &'static str, FedConfig)> = Vec::new();
     for &preset in presets {
         let mut fleet_cfg = cfg.clone();
         fleet_cfg.fleet.preset = preset;
         for name in reg.names() {
-            let r = run_federated_with_data(engine, &fleet_cfg, name, &data)?;
-            runs.push((preset, r));
+            plan.push((preset, name, fleet_cfg.clone()));
+        }
+    }
+
+    // cache-only fast path: a fully stored table never materializes
+    // the dataset or touches the engine
+    let all_cached = store
+        .as_deref()
+        .is_some_and(|s| plan.iter().all(|(_, n, c)| s.contains(run_key(n, c))));
+    let mut runs = Vec::new();
+    if all_cached {
+        let store = store.as_deref_mut().expect("all_cached implies a store");
+        for (preset, name, c) in &plan {
+            let rec = store.get(run_key(name, c))?.expect("contains-checked");
+            verify_cached(&rec, name, c)?;
+            stats.note(true);
+            runs.push((*preset, *name, rec));
+        }
+    } else {
+        let data = build_data(engine, cfg)?;
+        for (preset, name, c) in &plan {
+            let (rec, hit) = run_or_cached(engine, c, name, &data, store.as_deref_mut())?;
+            stats.note(hit);
+            runs.push((*preset, *name, rec));
+        }
+        if let Some(store) = store.as_deref() {
+            store.flush_sidecar()?;
         }
     }
 
     let best = runs
         .iter()
-        .map(|(_, r)| r.final_accuracy)
+        .map(|(_, _, r)| r.final_accuracy)
         .fold(f64::MIN, f64::max);
     let target_acc = TARGET_FRACTION * best;
 
     let rows = runs
         .into_iter()
-        .map(|(preset, r)| {
+        .map(|(preset, name, r)| {
             let hit = r.time_to_accuracy(target_acc);
             FleetRow {
                 fleet: preset.name(),
-                strategy: r.strategy,
+                strategy: name,
                 final_acc: r.final_accuracy,
                 rounds_to_target: hit.map(|(round, _)| round + 1),
                 sim_s_to_target: hit.map(|(_, ms)| ms / 1e3),
                 total_sim_s: r.total_sim_ms() / 1e3,
                 total_mb: r.total_bytes() as f64 / 1e6,
-                dropped: r.rounds.iter().map(|m| m.dropped).sum(),
-                stragglers: r.rounds.iter().map(|m| m.stragglers).sum(),
+                dropped: r.total_dropped(),
+                stragglers: r.total_stragglers(),
             }
         })
         .collect();
-    Ok(FleetTable { target_acc, rows })
+    Ok((FleetTable { target_acc, rows }, stats))
 }
 
 pub fn print_table(t: &FleetTable) {

@@ -8,9 +8,11 @@
 //! (the model correctly predicts ~1.0x for them, see edge tests).
 
 use anyhow::Result;
+use std::path::Path;
 
 use crate::edge::paper_models::{mobilenet, resnet20};
 use crate::edge::{inference_latency, speedup, Precision, WeightFormat, EDGE_DEVICES};
+use crate::util::csv;
 
 #[derive(Clone, Debug)]
 pub struct Table2Row {
@@ -46,6 +48,33 @@ pub fn run(model: &str, c: usize) -> Result<Vec<Table2Row>> {
             ),
         })
         .collect())
+}
+
+/// CSV dump through the shared `util::csv` writer (same column
+/// vocabulary as `print_rows`).
+pub fn write_csv(rows: &[Table2Row], path: &Path) -> Result<()> {
+    let header = [
+        "model",
+        "device",
+        "f32_speedup",
+        "u8_speedup",
+        "dense_us",
+        "clustered_us",
+    ];
+    let out: Vec<Vec<String>> = rows
+        .iter()
+        .map(|r| {
+            vec![
+                r.model.clone(),
+                r.device.to_string(),
+                format!("{:.4}", r.f32_speedup),
+                format!("{:.4}", r.u8_speedup),
+                format!("{:.2}", r.dense_f32_us),
+                format!("{:.2}", r.clustered_f32_us),
+            ]
+        })
+        .collect();
+    csv::write_file(path, &header, &out)
 }
 
 pub fn print_rows(rows: &[Table2Row]) {

@@ -96,6 +96,39 @@
 //!   continue a checkpointed run; the checkpoint records the transport
 //!   kind + fleet preset it was produced under and the run emits
 //!   `Event::ResumeMismatch` when they differ.
+//!
+//! # Run store + sweep orchestrator
+//!
+//! Runs persist: the [`store`] layer records every completed run as a
+//! content-addressed [`store::RunRecord`] — per-round metrics, the
+//! event JSONL, the comm ledger, final scores — in an append-only
+//! record file keyed by `FNV-1a64(strategy ‖ config_image)`, where the
+//! config image is the bit-exact serialization the TCP handshake
+//! already ships (`net::proto::config_image`). Corrupt or truncated
+//! stores surface typed [`store::StoreError`]s, never panics. The
+//! [`sweep`] layer expands a declarative grid (strategies x fleet
+//! presets x seeds x any `--set`able knob) into jobs, executes them on
+//! the thread pool with engine-per-worker isolation, and skips every
+//! job whose key already has a record (resume-by-cache).
+//!
+//! CLI surface:
+//!
+//! * `fedcompress sweep [--strategies a,b] [--fleets x,y] [--seeds
+//!   1,2] [--axis key=v1,v2]... [--spec file] [--store dir] [--jobs n]
+//!   [--smoke] [--force]` — expand and run a grid; `--smoke` uses a
+//!   deterministic synthetic runner (no artifacts) that still
+//!   exercises hashing, parallel execution, persistence, and cache.
+//! * `fedcompress runs list|show|diff|compare|export-bench` — query
+//!   the store: `show --key <hex>` prints one record (unique key
+//!   prefixes accepted), `diff --a <hex> --b <hex>` asserts bit-exact
+//!   equality (exit code reports drift; `--other <dir>` diffs every
+//!   shared key of two stores), `export-bench` writes the
+//!   `BENCH_sweep.json` perf summary. `--csv`/`--out` route any table
+//!   through the shared `util::csv` writer.
+//! * `fedcompress table1 --store runs` / `fleet --store runs` —
+//!   experiment drivers read prior runs from the store by content key
+//!   instead of re-executing; `table2 --from-run <hex>` deploys the
+//!   cluster count a stored run actually landed on.
 
 pub mod baselines;
 pub mod bench;
@@ -114,4 +147,6 @@ pub mod models;
 pub mod net;
 pub mod runtime;
 pub mod sim;
+pub mod store;
+pub mod sweep;
 pub mod util;

@@ -18,7 +18,11 @@ use fedcompress::models::flops;
 use fedcompress::net::{worker, InProcess, TcpServer, Transport};
 use fedcompress::runtime::Engine;
 use fedcompress::sim::FleetPreset;
+use fedcompress::store::{diff_records, export, key_hex, RunStore};
+use fedcompress::sweep::{run_sweep, EngineRunner, JobRunner, SmokeRunner, SweepEvent, SweepSpec};
+use fedcompress::util::csv;
 use fedcompress::util::logging;
+use fedcompress::util::threadpool::default_workers;
 
 fn build_config(args: &Args) -> Result<FedConfig> {
     let dataset = args.flag_or("dataset", "cifar10");
@@ -50,12 +54,60 @@ fn build_config(args: &Args) -> Result<FedConfig> {
     Ok(cfg)
 }
 
-fn engine_for(args: &Args) -> Result<Engine> {
-    let dir = args
-        .flag("artifacts")
+fn artifacts_dir(args: &Args) -> PathBuf {
+    args.flag("artifacts")
         .map(PathBuf::from)
-        .unwrap_or_else(fedcompress::runtime::artifacts::default_dir);
-    Engine::load(&dir)
+        .unwrap_or_else(fedcompress::runtime::artifacts::default_dir)
+}
+
+fn engine_for(args: &Args) -> Result<Engine> {
+    Engine::load(&artifacts_dir(args))
+}
+
+/// `--store <dir>`: open the run store when the flag is present.
+fn store_for(args: &Args) -> Result<Option<RunStore>> {
+    match args.flag("store") {
+        Some(dir) => Ok(Some(RunStore::open(Path::new(dir))?)),
+        None => Ok(None),
+    }
+}
+
+/// Print a header + rows as an aligned terminal table.
+fn print_aligned(header: &[&str], rows: &[Vec<String>]) {
+    let mut widths: Vec<usize> = header.iter().map(|h| h.len()).collect();
+    for row in rows {
+        for (w, cell) in widths.iter_mut().zip(row) {
+            *w = (*w).max(cell.len());
+        }
+    }
+    let line = |cells: Vec<&str>| {
+        let mut s = String::new();
+        for (i, (cell, &w)) in cells.iter().zip(&widths).enumerate() {
+            if i > 0 {
+                s.push_str("  ");
+            }
+            s.push_str(&format!("{cell:>w$}"));
+        }
+        println!("{s}");
+    };
+    line(header.to_vec());
+    for row in rows {
+        line(row.iter().map(|s| s.as_str()).collect());
+    }
+}
+
+/// Shared `--csv` / `--out` tail of the `runs` table subcommands.
+fn emit_table(args: &Args, header: &[&str], rows: &[Vec<String>]) -> Result<()> {
+    let as_csv = args.flag("csv").is_some();
+    match (args.flag("out"), as_csv) {
+        (Some(path), _) => {
+            csv::write_file(Path::new(path), header, rows)?;
+            println!("wrote {path}");
+        }
+        (None, true) => print!("{}", csv::render(header, rows)),
+        (None, false) => print_aligned(header, rows),
+    }
+    Ok(())
 }
 
 /// `--resume ckpt`: load the checkpoint a run continues from.
@@ -178,42 +230,77 @@ fn cmd_worker(args: &Args) -> Result<()> {
     let addr = args
         .flag("connect")
         .context("worker needs --connect <addr>")?;
-    let dir = args
-        .flag("artifacts")
-        .map(PathBuf::from)
-        .unwrap_or_else(fedcompress::runtime::artifacts::default_dir);
-    let uploads = worker::run_worker(addr, &dir)?;
+    let uploads = worker::run_worker(addr, &artifacts_dir(args))?;
     println!("worker finished cleanly after {uploads} uploads");
     Ok(())
 }
 
 fn cmd_table1(args: &Args) -> Result<()> {
     let engine = engine_for(args)?;
+    let mut store = store_for(args)?;
     let list = args.flag_or(
         "datasets",
         "cifar10,cifar100,pathmnist,speechcommands,voxforge",
     );
     table1::print_header();
     let mut rows = Vec::new();
+    let mut stats = fedcompress::sweep::CacheStats::default();
     for ds in list.split(',').filter(|s| !s.is_empty()) {
         let mut sub = args.clone();
         sub.flags.insert("dataset".into(), ds.to_string());
         let cfg = build_config(&sub)?;
-        let row = table1::run_dataset(&engine, &cfg)?;
+        let (row, ds_stats) = table1::run_dataset_cached(&engine, &cfg, store.as_mut())?;
+        stats.hits += ds_stats.hits;
+        stats.misses += ds_stats.misses;
         table1::print_row(&row);
         rows.push(row);
     }
     println!();
     table1::print_summary(&rows);
+    if store.is_some() {
+        println!(
+            "run store: {} cache hit(s), {} executed",
+            stats.hits, stats.misses
+        );
+    }
+    if let Some(out) = args.flag("out") {
+        table1::write_csv(&rows, Path::new(out))?;
+        println!("wrote {out}");
+    }
     Ok(())
 }
 
 fn cmd_table2(args: &Args) -> Result<()> {
-    let c: usize = args.flag_or("clusters", "16").parse()?;
+    // the deployed cluster count: either a flag, or read from a stored
+    // run's final round (the controller's real landing point)
+    let c: usize = match args.flag("from-run") {
+        Some(hex) => {
+            let store = RunStore::open(Path::new(args.flag_or("store", "runs")))?;
+            let key = store.resolve(hex)?;
+            let rec = store.get(key)?.expect("resolved key exists");
+            let c = rec
+                .final_clusters()
+                .context("stored run has no rounds to read a cluster count from")?;
+            println!(
+                "deployed C={c} from run {} ({} on {})\n",
+                key_hex(key),
+                rec.strategy,
+                rec.cfg().map(|c| c.dataset).unwrap_or_default()
+            );
+            c
+        }
+        None => args.flag_or("clusters", "16").parse()?,
+    };
+    let mut all_rows = Vec::new();
     for model in ["resnet20", "mobilenet"] {
         let rows = table2::run(model, c)?;
         table2::print_rows(&rows);
         println!();
+        all_rows.extend(rows);
+    }
+    if let Some(out) = args.flag("out") {
+        table2::write_csv(&all_rows, Path::new(out))?;
+        println!("wrote {out}");
     }
     Ok(())
 }
@@ -222,14 +309,220 @@ fn cmd_table2(args: &Args) -> Result<()> {
 /// fleet presets (all three by default, or just `--fleet <name>`).
 fn cmd_fleet(args: &Args) -> Result<()> {
     let engine = engine_for(args)?;
+    let mut store = store_for(args)?;
     let cfg = build_config(args)?;
     let presets: Vec<FleetPreset> = match args.flag("fleet") {
         Some(name) => vec![FleetPreset::from_name(name)?],
         None => FleetPreset::ALL.to_vec(),
     };
-    let table = fleet::run(&engine, &cfg, &presets)?;
+    let (table, stats) = fleet::run_cached(&engine, &cfg, &presets, store.as_mut())?;
     fleet::print_table(&table);
+    if store.is_some() {
+        println!(
+            "run store: {} cache hit(s), {} executed",
+            stats.hits, stats.misses
+        );
+    }
     Ok(())
+}
+
+/// Expand the sweep grid and run it against the store.
+fn cmd_sweep(args: &Args) -> Result<()> {
+    let cfg = build_config(args)?;
+    let mut spec = match args.flag("spec") {
+        Some(path) => SweepSpec::from_file(Path::new(path))?,
+        None => SweepSpec::default(),
+    };
+    if let Some(list) = args.flag("strategies") {
+        spec.strategies
+            .extend(list.split(',').filter(|s| !s.is_empty()).map(String::from));
+    }
+    if let Some(list) = args.flag("fleets") {
+        spec.fleets.extend(FleetPreset::parse_list(list)?);
+    }
+    if let Some(list) = args.flag("seeds") {
+        for s in list.split(',').filter(|s| !s.is_empty()) {
+            spec.seeds
+                .push(s.parse().with_context(|| format!("--seeds value '{s}'"))?);
+        }
+    }
+    for (k, v) in &args.axes {
+        spec.push_axis(k, v)?;
+    }
+
+    let registry = StrategyRegistry::builtin();
+    let jobs = spec.expand(&cfg, &registry)?;
+    let mut store = RunStore::open(Path::new(args.flag_or("store", "runs")))?;
+    let workers: usize = match args.flag("jobs") {
+        Some(j) => j.parse()?,
+        None => default_workers(),
+    };
+
+    let engine_runner;
+    let runner: &dyn JobRunner = if args.flag("smoke").is_some() {
+        &SmokeRunner
+    } else {
+        // fail on missing artifacts up front (cheap existence probe —
+        // the workers each load their own engine anyway)
+        let dir = artifacts_dir(args);
+        anyhow::ensure!(
+            dir.join("manifest.json").exists(),
+            "no AOT artifacts at {dir:?} — build them with python/compile/aot.py, \
+             or use --smoke for the synthetic runner"
+        );
+        engine_runner = EngineRunner { artifacts_dir: dir };
+        &engine_runner
+    };
+
+    let total = jobs.len();
+    let progress = move |e: SweepEvent| match e {
+        SweepEvent::Planned { total, cached } => println!(
+            "sweep: {total} job(s), {cached} already in the store, {workers} worker(s)"
+        ),
+        SweepEvent::JobStart { idx, label } => {
+            println!("[{:>3}/{total}] run    {label}", idx + 1)
+        }
+        SweepEvent::JobDone {
+            idx,
+            key,
+            label,
+            cached,
+            final_accuracy,
+            wall_s,
+        } => {
+            if cached {
+                println!(
+                    "[{:>3}/{total}] cached {label} acc={final_accuracy:.4} key={}",
+                    idx + 1,
+                    key_hex(key)
+                );
+            } else {
+                println!(
+                    "[{:>3}/{total}] done   {label} acc={final_accuracy:.4} \
+                     ({wall_s:.1}s) key={}",
+                    idx + 1,
+                    key_hex(key)
+                );
+            }
+        }
+        SweepEvent::JobFailed { idx, label, error } => {
+            println!("[{:>3}/{total}] FAILED {label}: {error}", idx + 1)
+        }
+    };
+    let force = args.flag("force").is_some();
+    let outcome = run_sweep(&jobs, &mut store, runner, workers, force, &progress)?;
+    println!("{}", outcome.summary());
+    println!("store: {} record(s) at {:?}", store.len(), store.dir());
+    anyhow::ensure!(outcome.failed == 0, "{} sweep job(s) failed", outcome.failed);
+    Ok(())
+}
+
+/// `runs <sub>` — query the store.
+fn cmd_runs(args: &Args) -> Result<()> {
+    let store = RunStore::open(Path::new(args.flag_or("store", "runs")))?;
+    match args.sub.as_deref().unwrap_or("list") {
+        "list" => {
+            let latest = store.latest();
+            emit_table(args, &export::LIST_HEADER, &export::list_rows(&latest))?;
+            println!(
+                "{} record(s), {} entr(ies) on disk at {:?}",
+                store.len(),
+                store.metas().len(),
+                store.dir()
+            );
+        }
+        "show" => {
+            let hex = args.flag("key").context("runs show needs --key <hex>")?;
+            let key = store.resolve(hex)?;
+            let rec = store.get(key)?.expect("resolved key exists");
+            let cfg = rec.cfg()?;
+            println!(
+                "run {}: {} on {} (fleet={}, seed={})",
+                key_hex(key),
+                rec.strategy,
+                cfg.dataset,
+                cfg.fleet.preset.name(),
+                cfg.seed
+            );
+            println!(
+                "final acc={:.4} model={} B (dense {} B, mcr={:.2}) comm={} B \
+                 (framed {} B) sim={:.1}s events={}",
+                rec.final_accuracy,
+                rec.final_model_bytes,
+                rec.dense_model_bytes,
+                rec.mcr(),
+                rec.total_bytes(),
+                rec.total_framed_bytes(),
+                rec.total_sim_ms() / 1e3,
+                rec.events()?.len()
+            );
+            emit_table(args, &export::ROUNDS_HEADER, &export::rounds_rows(&rec))?;
+        }
+        "diff" => return cmd_runs_diff(args, &store),
+        "compare" => {
+            let latest = store.latest();
+            emit_table(args, &export::COMPARE_HEADER, &export::compare_rows(&latest))?;
+        }
+        "export-bench" => {
+            let out = args.flag_or("out", "BENCH_sweep.json");
+            export::write_bench_json(&store, Path::new(out))?;
+            println!("wrote {out} ({} record(s))", store.len());
+        }
+        other => anyhow::bail!(
+            "unknown runs subcommand '{other}' (list|show|diff|compare|export-bench)"
+        ),
+    }
+    Ok(())
+}
+
+/// `runs diff`: bit-exact drift check — two records (`--a`/`--b`) or
+/// every shared key of two stores (`--other <dir>`). Exits non-zero on
+/// any drift, so scripts can assert reproducibility.
+fn cmd_runs_diff(args: &Args, store: &RunStore) -> Result<()> {
+    if let Some(other_dir) = args.flag("other") {
+        let other = RunStore::open(Path::new(other_dir))?;
+        let mut shared = 0usize;
+        let mut drifted = 0usize;
+        for key in store.keys() {
+            let Some(theirs) = other.get(key)? else {
+                continue;
+            };
+            shared += 1;
+            let ours = store.get(key)?.expect("listed key exists");
+            let d = diff_records(&ours, &theirs);
+            if !d.is_identical() {
+                drifted += 1;
+                println!("{}: drift in {}", key_hex(key), d.fields.join(", "));
+            }
+        }
+        let only_ours = store.keys().iter().filter(|k| !other.contains(**k)).count();
+        let only_theirs = other.keys().iter().filter(|k| !store.contains(**k)).count();
+        println!(
+            "compared {shared} shared key(s): {drifted} drifted \
+             ({only_ours} only here, {only_theirs} only in {other_dir})"
+        );
+        anyhow::ensure!(drifted == 0, "{drifted} record(s) drifted");
+        return Ok(());
+    }
+    let need = "runs diff needs --a <hex> --b <hex> or --other <dir>";
+    let a_hex = args.flag("a").context(need)?;
+    let b_hex = args.flag("b").context(need)?;
+    let a = store.get(store.resolve(a_hex)?)?.expect("resolved key exists");
+    let b = store.get(store.resolve(b_hex)?)?.expect("resolved key exists");
+    let d = diff_records(&a, &b);
+    if d.is_identical() {
+        println!(
+            "records {} and {} are bit-identical (metrics, ledger, events)",
+            key_hex(a.key),
+            key_hex(b.key)
+        );
+        Ok(())
+    } else {
+        for f in &d.fields {
+            println!("drift: {f}");
+        }
+        anyhow::bail!("{} field(s) drifted", d.fields.len())
+    }
 }
 
 fn cmd_figure2(args: &Args) -> Result<()> {
@@ -334,6 +627,8 @@ fn main() -> Result<()> {
         ParsedCommand::Table2 => cmd_table2(&args),
         ParsedCommand::Figure2 => cmd_figure2(&args),
         ParsedCommand::Fleet => cmd_fleet(&args),
+        ParsedCommand::Sweep => cmd_sweep(&args),
+        ParsedCommand::Runs => cmd_runs(&args),
         ParsedCommand::AblateC => cmd_ablate_c(&args),
         ParsedCommand::Inspect => cmd_inspect(&args),
     }

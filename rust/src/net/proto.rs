@@ -462,6 +462,31 @@ impl<'a> Cur<'a> {
 
 // --- FedConfig image --------------------------------------------------------
 
+/// The bit-exact serialized image of a [`FedConfig`] — the same bytes
+/// the `HelloAck` handshake ships to workers. Because two configs
+/// produce the same image iff every field (floats bit-for-bit) is
+/// identical, this image is also the content-address material for the
+/// run store's record keys (`store::run_key`).
+pub fn config_image(cfg: &FedConfig) -> Vec<u8> {
+    let mut out = Vec::new();
+    put_cfg(&mut out, cfg);
+    out
+}
+
+/// Inverse of [`config_image`]: rebuild the exact `FedConfig`.
+/// Trailing garbage after the image is rejected.
+pub fn parse_config_image(bytes: &[u8]) -> Result<FedConfig, ProtoError> {
+    let mut c = Cur { b: bytes, i: 0 };
+    let cfg = read_cfg(&mut c)?;
+    if !c.done() {
+        return Err(malformed(format!(
+            "{} bytes of trailing garbage after config image",
+            c.remaining()
+        )));
+    }
+    Ok(cfg)
+}
+
 /// Serialize the full experiment config: the worker must reconstruct
 /// the *exact* `FedConfig` (floats bit-for-bit) or data partitioning
 /// and RNG streams diverge.
@@ -651,6 +676,23 @@ mod tests {
         cfg_eq(&back, &cfg);
         assert_eq!(back.sigma.to_bits(), cfg.sigma.to_bits());
         assert_eq!(back.lr_client.to_bits(), cfg.lr_client.to_bits());
+    }
+
+    /// The public image helpers are the exact handshake bytes, and the
+    /// parser rejects trailing garbage (a config image is a complete
+    /// value, not a stream prefix).
+    #[test]
+    fn config_image_helpers_round_trip() {
+        let cfg = FedConfig::quick("pathmnist");
+        let img = config_image(&cfg);
+        let mut handshake = Vec::new();
+        put_cfg(&mut handshake, &cfg);
+        assert_eq!(img, handshake);
+        cfg_eq(&parse_config_image(&img).unwrap(), &cfg);
+        let mut padded = img.clone();
+        padded.push(0);
+        assert!(parse_config_image(&padded).is_err());
+        assert!(parse_config_image(&img[..img.len() - 1]).is_err());
     }
 
     /// Acceptance bound: the per-message framing overhead the ledger

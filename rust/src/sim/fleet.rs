@@ -54,6 +54,21 @@ impl FleetPreset {
         }
     }
 
+    /// Parse a comma-separated preset list (`--fleets a,b` / sweep
+    /// spec `fleets = a,b`); `all` expands to every preset. Blank
+    /// segments are skipped, so trailing commas are harmless.
+    pub fn parse_list(list: &str) -> Result<Vec<FleetPreset>, UnknownFleetPreset> {
+        let mut out = Vec::new();
+        for name in list.split(',').map(str::trim).filter(|s| !s.is_empty()) {
+            if name.eq_ignore_ascii_case("all") {
+                out.extend(FleetPreset::ALL);
+            } else {
+                out.push(FleetPreset::from_name(name)?);
+            }
+        }
+        Ok(out)
+    }
+
     /// Sampling parameters the preset draws client profiles from.
     fn params(&self) -> PresetParams {
         match self {
@@ -208,6 +223,21 @@ mod tests {
         let e = FleetPreset::from_name("cosmic").unwrap_err();
         assert!(e.to_string().contains("cosmic"));
         assert!(e.to_string().contains("ideal"));
+    }
+
+    #[test]
+    fn preset_lists_parse_with_all_sugar() {
+        assert_eq!(
+            FleetPreset::parse_list("ideal, hostile,").unwrap(),
+            vec![FleetPreset::Ideal, FleetPreset::Hostile]
+        );
+        assert_eq!(FleetPreset::parse_list("all").unwrap(), FleetPreset::ALL.to_vec());
+        assert_eq!(
+            FleetPreset::parse_list("mobile,ALL").unwrap().len(),
+            1 + FleetPreset::ALL.len()
+        );
+        assert!(FleetPreset::parse_list("ideal,marsnet").is_err());
+        assert!(FleetPreset::parse_list("").unwrap().is_empty());
     }
 
     #[test]

@@ -1,0 +1,256 @@
+//! Store reporting: the `runs list` / `runs compare` / `runs show`
+//! table builders (one row vocabulary shared by the terminal printer
+//! and the CSV writer) and the `runs export-bench` summary that feeds
+//! the repo's machine-readable perf trajectory (`BENCH_sweep.json`).
+
+use std::path::Path;
+
+use crate::util::json::Json;
+
+use super::index::{RunMeta, RunStore};
+use super::record::{key_hex, RunRecord};
+use super::StoreError;
+
+/// `runs list` columns.
+pub const LIST_HEADER: [&str; 10] = [
+    "key",
+    "strategy",
+    "dataset",
+    "fleet",
+    "seed",
+    "rounds",
+    "final_acc",
+    "comm_mb",
+    "framed_mb",
+    "created_unix",
+];
+
+pub fn list_rows(metas: &[&RunMeta]) -> Vec<Vec<String>> {
+    metas
+        .iter()
+        .map(|m| {
+            vec![
+                key_hex(m.key),
+                m.strategy.clone(),
+                m.dataset.clone(),
+                m.fleet.clone(),
+                m.seed.to_string(),
+                m.rounds.to_string(),
+                format!("{:.4}", m.final_accuracy),
+                format!("{:.3}", m.total_bytes as f64 / 1e6),
+                format!("{:.3}", m.total_framed_bytes as f64 / 1e6),
+                m.created_unix.to_string(),
+            ]
+        })
+        .collect()
+}
+
+/// `runs compare` columns — one row per record, grouped for paired
+/// reading (strategy / dataset / fleet / seed sort).
+pub const COMPARE_HEADER: [&str; 10] = [
+    "strategy",
+    "dataset",
+    "fleet",
+    "seed",
+    "final_acc",
+    "mcr",
+    "comm_mb",
+    "sim_s",
+    "dropped",
+    "key",
+];
+
+pub fn compare_rows(metas: &[&RunMeta]) -> Vec<Vec<String>> {
+    let mut sorted: Vec<&RunMeta> = metas.to_vec();
+    sorted.sort_by(|a, b| {
+        (&a.strategy, &a.dataset, &a.fleet, a.seed)
+            .cmp(&(&b.strategy, &b.dataset, &b.fleet, b.seed))
+    });
+    sorted
+        .iter()
+        .map(|m| {
+            vec![
+                m.strategy.clone(),
+                m.dataset.clone(),
+                m.fleet.clone(),
+                m.seed.to_string(),
+                format!("{:.4}", m.final_accuracy),
+                format!("{:.2}", m.mcr),
+                format!("{:.3}", m.total_bytes as f64 / 1e6),
+                format!("{:.1}", m.total_sim_ms / 1e3),
+                m.dropped.to_string(),
+                key_hex(m.key),
+            ]
+        })
+        .collect()
+}
+
+/// `runs show` per-round columns (a superset of the training log
+/// line, machine-readable).
+pub const ROUNDS_HEADER: [&str; 11] = [
+    "round",
+    "accuracy",
+    "test_loss",
+    "score",
+    "client_mean_ce",
+    "clusters",
+    "up_bytes",
+    "down_bytes",
+    "sim_ms",
+    "stragglers",
+    "dropped",
+];
+
+pub fn rounds_rows(rec: &RunRecord) -> Vec<Vec<String>> {
+    rec.rounds
+        .iter()
+        .map(|r| {
+            vec![
+                r.round.to_string(),
+                format!("{:.6}", r.accuracy),
+                format!("{:.6}", r.test_loss),
+                format!("{:.6}", r.score),
+                format!("{:.6}", r.client_mean_ce),
+                r.clusters.to_string(),
+                r.up_bytes.to_string(),
+                r.down_bytes.to_string(),
+                format!("{:.3}", r.round_sim_ms),
+                r.stragglers.to_string(),
+                r.dropped.to_string(),
+            ]
+        })
+        .collect()
+}
+
+/// The `BENCH_sweep.json` document: every (latest) record as one run
+/// entry plus per-strategy aggregates — the machine-readable summary
+/// the perf trajectory tracks across commits.
+pub fn bench_summary(store: &RunStore) -> Json {
+    let latest = store.latest();
+    let runs: Vec<Json> = latest
+        .iter()
+        .map(|m| {
+            Json::obj(vec![
+                ("key", Json::str(&key_hex(m.key))),
+                ("strategy", Json::str(&m.strategy)),
+                ("dataset", Json::str(&m.dataset)),
+                ("fleet", Json::str(&m.fleet)),
+                ("seed", Json::str(&m.seed.to_string())),
+                ("rounds", Json::from(m.rounds)),
+                ("final_accuracy", Json::num(m.final_accuracy)),
+                ("total_bytes", Json::from(m.total_bytes)),
+                ("total_framed_bytes", Json::from(m.total_framed_bytes)),
+                ("mcr", Json::num(m.mcr)),
+                ("total_sim_ms", Json::num(m.total_sim_ms)),
+                ("total_wall_ms", Json::num(m.total_wall_ms)),
+                ("dropped", Json::from(m.dropped)),
+                ("stragglers", Json::from(m.stragglers)),
+            ])
+        })
+        .collect();
+
+    let mut strategies: Vec<&str> = latest.iter().map(|m| m.strategy.as_str()).collect();
+    strategies.sort_unstable();
+    strategies.dedup();
+    let by_strategy: Vec<(&str, Json)> = strategies
+        .iter()
+        .map(|&name| {
+            let group: Vec<&RunMeta> =
+                latest.iter().copied().filter(|m| m.strategy == name).collect();
+            let n = group.len() as f64;
+            let mean = |f: &dyn Fn(&RunMeta) -> f64| {
+                group.iter().map(|m| f(m)).sum::<f64>() / n
+            };
+            (
+                name,
+                Json::obj(vec![
+                    ("runs", Json::from(group.len())),
+                    (
+                        "mean_final_accuracy",
+                        Json::num(mean(&|m: &RunMeta| m.final_accuracy)),
+                    ),
+                    ("mean_mcr", Json::num(mean(&|m: &RunMeta| m.mcr))),
+                    (
+                        "total_bytes",
+                        Json::from(group.iter().map(|m| m.total_bytes).sum::<usize>()),
+                    ),
+                    (
+                        "mean_total_sim_ms",
+                        Json::num(mean(&|m: &RunMeta| m.total_sim_ms)),
+                    ),
+                ]),
+            )
+        })
+        .collect();
+
+    Json::obj(vec![
+        ("bench", Json::str("sweep")),
+        ("format", Json::from(1usize)),
+        ("records", Json::from(latest.len())),
+        ("runs", Json::Arr(runs)),
+        ("by_strategy", Json::obj(by_strategy)),
+    ])
+}
+
+/// Write the bench summary to `path` (`runs export-bench`).
+pub fn write_bench_json(store: &RunStore, path: &Path) -> Result<(), StoreError> {
+    if let Some(parent) = path.parent() {
+        if !parent.as_os_str().is_empty() {
+            std::fs::create_dir_all(parent)?;
+        }
+    }
+    std::fs::write(path, format!("{}\n", bench_summary(store)))?;
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::store::record::tests::demo_record;
+
+    #[test]
+    fn bench_summary_counts_and_groups() {
+        let dir = std::env::temp_dir().join("fedcompress_store_unit/export");
+        let _ = std::fs::remove_dir_all(&dir);
+        let mut store = RunStore::open(&dir).unwrap();
+        store.append(&demo_record(1, "fedavg")).unwrap();
+        store.append(&demo_record(2, "fedavg")).unwrap();
+        store.append(&demo_record(1, "fedcompress")).unwrap();
+        let doc = bench_summary(&store);
+        assert_eq!(doc.get("records").unwrap().as_usize().unwrap(), 3);
+        assert_eq!(doc.get("runs").unwrap().as_arr().unwrap().len(), 3);
+        let by = doc.get("by_strategy").unwrap();
+        assert_eq!(by.get("fedavg").unwrap().get("runs").unwrap().as_usize().unwrap(), 2);
+        assert_eq!(
+            by.get("fedcompress").unwrap().get("runs").unwrap().as_usize().unwrap(),
+            1
+        );
+        // document round-trips through the JSON substrate
+        let text = doc.to_string();
+        assert_eq!(Json::parse(&text).unwrap(), doc);
+
+        let out = dir.join("BENCH_sweep.json");
+        write_bench_json(&store, &out).unwrap();
+        let parsed = Json::parse(std::fs::read_to_string(&out).unwrap().trim()).unwrap();
+        assert_eq!(parsed.get("bench").unwrap().as_str().unwrap(), "sweep");
+    }
+
+    #[test]
+    fn table_builders_shape() {
+        let dir = std::env::temp_dir().join("fedcompress_store_unit/tables");
+        let _ = std::fs::remove_dir_all(&dir);
+        let mut store = RunStore::open(&dir).unwrap();
+        let rec = demo_record(3, "topk");
+        store.append(&rec).unwrap();
+        let latest = store.latest();
+        let rows = list_rows(&latest);
+        assert_eq!(rows.len(), 1);
+        assert_eq!(rows[0].len(), LIST_HEADER.len());
+        assert_eq!(rows[0][0], key_hex(rec.key));
+        let rows = compare_rows(&latest);
+        assert_eq!(rows[0].len(), COMPARE_HEADER.len());
+        let rows = rounds_rows(&rec);
+        assert_eq!(rows.len(), rec.rounds.len());
+        assert_eq!(rows[0].len(), ROUNDS_HEADER.len());
+    }
+}

@@ -1,0 +1,433 @@
+//! [`RunStore`]: the append-only record file and its rebuildable
+//! index.
+//!
+//! On-disk layout (`<dir>/runs.fcr`, little-endian):
+//!
+//! ```text
+//! file header: u32 magic "FCST" | u32 format version
+//! entry*:      u32 magic "FCRE" | u32 body_len | body |
+//!              u64 fnv1a64(body)
+//! ```
+//!
+//! The in-memory index (key -> entry offset + summary meta) is
+//! rebuilt on every `open` by a full checksum-verifying scan — the
+//! file is the single source of truth, so a truncated or bit-flipped
+//! store surfaces a typed [`StoreError`] the moment it is opened,
+//! never a panic and never stale listings. A derived `index.json`
+//! sidecar is written for external tooling (dashboards, `jq`); it is
+//! never read back, so deleting or corrupting it costs nothing.
+//!
+//! Appends go through one writer (`&mut self`); re-running an
+//! experiment appends a fresh record and the index resolves a key to
+//! its *latest* entry. The store is single-process: concurrent
+//! appends from two processes are not defended against.
+
+use std::collections::BTreeMap;
+use std::io::{Read, Seek, SeekFrom, Write};
+use std::path::{Path, PathBuf};
+
+use crate::util::hash::fnv1a64;
+use crate::util::json::Json;
+
+use super::record::{key_hex, parse_key_hex, RunRecord};
+use super::StoreError;
+
+const FILE_MAGIC: u32 = u32::from_le_bytes(*b"FCST");
+const ENTRY_MAGIC: u32 = u32::from_le_bytes(*b"FCRE");
+const FORMAT_VERSION: u32 = 1;
+const FILE_HEADER_LEN: u64 = 8;
+/// Per-entry framing: magic(4) + body_len(4) + checksum(8).
+const ENTRY_OVERHEAD: usize = 16;
+/// Refuse record bodies above this size (a corrupt length prefix must
+/// not become a multi-gigabyte allocation).
+const MAX_BODY: u32 = 256 << 20;
+
+/// Summary of one stored record — everything listings, comparisons,
+/// and bench exports need without re-reading the file.
+#[derive(Clone, Debug)]
+pub struct RunMeta {
+    pub key: u64,
+    pub strategy: String,
+    pub dataset: String,
+    pub fleet: String,
+    pub seed: u64,
+    pub rounds: usize,
+    pub final_accuracy: f64,
+    pub total_bytes: usize,
+    pub total_framed_bytes: usize,
+    pub mcr: f64,
+    pub total_sim_ms: f64,
+    pub total_wall_ms: f64,
+    pub dropped: usize,
+    pub stragglers: usize,
+    pub created_unix: u64,
+    /// byte offset of the entry (its magic) in `runs.fcr`
+    pub offset: u64,
+    /// whole entry length including framing
+    pub entry_len: usize,
+}
+
+impl RunMeta {
+    fn of(rec: &RunRecord, offset: u64, entry_len: usize) -> Result<RunMeta, StoreError> {
+        let cfg = rec.cfg()?;
+        Ok(RunMeta {
+            key: rec.key,
+            strategy: rec.strategy.clone(),
+            dataset: cfg.dataset.clone(),
+            fleet: cfg.fleet.preset.name().to_string(),
+            seed: cfg.seed,
+            rounds: rec.rounds.len(),
+            final_accuracy: rec.final_accuracy,
+            total_bytes: rec.total_bytes(),
+            total_framed_bytes: rec.total_framed_bytes(),
+            mcr: rec.mcr(),
+            total_sim_ms: rec.total_sim_ms(),
+            total_wall_ms: rec.total_wall_ms(),
+            dropped: rec.total_dropped(),
+            stragglers: rec.total_stragglers(),
+            created_unix: rec.created_unix,
+            offset,
+            entry_len,
+        })
+    }
+}
+
+pub struct RunStore {
+    dir: PathBuf,
+    records_path: PathBuf,
+    file_len: u64,
+    /// every entry, file order (re-runs of a key appear once each)
+    metas: Vec<RunMeta>,
+    /// key -> index into `metas` of the latest entry for that key
+    by_key: BTreeMap<u64, usize>,
+}
+
+impl RunStore {
+    /// Open (or create) the store under `dir`, rebuilding the index by
+    /// a full checksum-verifying scan of the record file.
+    pub fn open(dir: &Path) -> Result<RunStore, StoreError> {
+        std::fs::create_dir_all(dir)?;
+        let records_path = dir.join("runs.fcr");
+        if !records_path.exists() {
+            let mut header = Vec::with_capacity(FILE_HEADER_LEN as usize);
+            header.extend_from_slice(&FILE_MAGIC.to_le_bytes());
+            header.extend_from_slice(&FORMAT_VERSION.to_le_bytes());
+            std::fs::write(&records_path, header)?;
+        }
+        let bytes = std::fs::read(&records_path)?;
+        let mut store = RunStore {
+            dir: dir.to_path_buf(),
+            records_path,
+            file_len: bytes.len() as u64,
+            metas: Vec::new(),
+            by_key: BTreeMap::new(),
+        };
+        store.scan(&bytes)?;
+        store.write_sidecar()?;
+        Ok(store)
+    }
+
+    fn scan(&mut self, bytes: &[u8]) -> Result<(), StoreError> {
+        if bytes.len() < FILE_HEADER_LEN as usize {
+            return Err(StoreError::Truncated {
+                what: "store file header",
+            });
+        }
+        let magic = u32::from_le_bytes(bytes[0..4].try_into().unwrap());
+        if magic != FILE_MAGIC {
+            return Err(StoreError::BadMagic {
+                what: "store file",
+                got: magic,
+            });
+        }
+        let version = u32::from_le_bytes(bytes[4..8].try_into().unwrap());
+        if version != FORMAT_VERSION {
+            return Err(StoreError::UnsupportedVersion { got: version });
+        }
+        let mut off = FILE_HEADER_LEN as usize;
+        while off < bytes.len() {
+            let (rec, entry_len) = decode_entry(&bytes[off..])?;
+            let meta = RunMeta::of(&rec, off as u64, entry_len)?;
+            self.by_key.insert(meta.key, self.metas.len());
+            self.metas.push(meta);
+            off += entry_len;
+        }
+        Ok(())
+    }
+
+    /// Append a record; the in-memory index updates in the same call.
+    /// The `index.json` sidecar is *not* rewritten here — it is O(all
+    /// entries) and purely derived, so per-append refresh would turn
+    /// an N-job sweep into O(N²) serialization inside the store lock.
+    /// Call [`RunStore::flush_sidecar`] once after a batch (the sweep
+    /// orchestrator and the store-backed drivers do); a crash before
+    /// that costs nothing, the next open rescans and rewrites it.
+    pub fn append(&mut self, rec: &RunRecord) -> Result<(), StoreError> {
+        let entry = encode_entry(rec);
+        let mut f = std::fs::OpenOptions::new()
+            .append(true)
+            .open(&self.records_path)?;
+        let offset = f.seek(SeekFrom::End(0))?;
+        f.write_all(&entry)?;
+        f.flush()?;
+        let meta = RunMeta::of(rec, offset, entry.len())?;
+        self.file_len = offset + entry.len() as u64;
+        self.by_key.insert(meta.key, self.metas.len());
+        self.metas.push(meta);
+        Ok(())
+    }
+
+    /// Rewrite the derived `index.json` sidecar to match the current
+    /// index (cheap relative to a batch of appends; see `append`).
+    pub fn flush_sidecar(&self) -> Result<(), StoreError> {
+        self.write_sidecar()
+    }
+
+    /// True when a completed record exists for `key` (the sweep
+    /// orchestrator's cache probe).
+    pub fn contains(&self, key: u64) -> bool {
+        self.by_key.contains_key(&key)
+    }
+
+    /// Load the latest record for `key`, re-verifying the entry
+    /// checksum on the way in.
+    pub fn get(&self, key: u64) -> Result<Option<RunRecord>, StoreError> {
+        let Some(&idx) = self.by_key.get(&key) else {
+            return Ok(None);
+        };
+        let meta = &self.metas[idx];
+        let mut f = std::fs::File::open(&self.records_path)?;
+        f.seek(SeekFrom::Start(meta.offset))?;
+        let mut entry = vec![0u8; meta.entry_len];
+        f.read_exact(&mut entry).map_err(|e| {
+            if e.kind() == std::io::ErrorKind::UnexpectedEof {
+                StoreError::Truncated {
+                    what: "record entry (file shrank since open)",
+                }
+            } else {
+                StoreError::Io(e)
+            }
+        })?;
+        let (rec, _) = decode_entry(&entry)?;
+        Ok(Some(rec))
+    }
+
+    /// Resolve a CLI key argument: a full 16-hex key, or a unique hex
+    /// prefix of a stored key.
+    pub fn resolve(&self, hex: &str) -> Result<u64, StoreError> {
+        let t = hex.trim();
+        if t.len() == 16 {
+            if let Ok(k) = parse_key_hex(t) {
+                if self.contains(k) {
+                    return Ok(k);
+                }
+                return Err(StoreError::Malformed {
+                    what: format!("no record with key {t}"),
+                });
+            }
+        }
+        let matches: Vec<u64> = self
+            .by_key
+            .keys()
+            .copied()
+            .filter(|k| key_hex(*k).starts_with(&t.to_ascii_lowercase()))
+            .collect();
+        match matches.as_slice() {
+            [k] => Ok(*k),
+            [] => Err(StoreError::Malformed {
+                what: format!("no record with key prefix '{t}'"),
+            }),
+            many => Err(StoreError::Malformed {
+                what: format!("key prefix '{t}' is ambiguous ({} matches)", many.len()),
+            }),
+        }
+    }
+
+    /// Every stored entry, file order (including superseded re-runs).
+    pub fn metas(&self) -> &[RunMeta] {
+        &self.metas
+    }
+
+    /// The latest entry per key, file order.
+    pub fn latest(&self) -> Vec<&RunMeta> {
+        self.metas
+            .iter()
+            .enumerate()
+            .filter(|(i, m)| self.by_key.get(&m.key) == Some(i))
+            .map(|(_, m)| m)
+            .collect()
+    }
+
+    /// Distinct keys with a completed record.
+    pub fn keys(&self) -> Vec<u64> {
+        self.by_key.keys().copied().collect()
+    }
+
+    pub fn len(&self) -> usize {
+        self.by_key.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.by_key.is_empty()
+    }
+
+    pub fn dir(&self) -> &Path {
+        &self.dir
+    }
+
+    /// Derived sidecar for external tooling; never read back.
+    fn write_sidecar(&self) -> Result<(), StoreError> {
+        let entries: Vec<Json> = self
+            .metas
+            .iter()
+            .map(|m| {
+                Json::obj(vec![
+                    ("key", Json::str(&key_hex(m.key))),
+                    ("strategy", Json::str(&m.strategy)),
+                    ("dataset", Json::str(&m.dataset)),
+                    ("fleet", Json::str(&m.fleet)),
+                    ("seed", Json::str(&m.seed.to_string())),
+                    ("rounds", Json::from(m.rounds)),
+                    ("final_accuracy", Json::num(m.final_accuracy)),
+                    ("total_bytes", Json::from(m.total_bytes)),
+                    ("created_unix", Json::from(m.created_unix as usize)),
+                    ("offset", Json::from(m.offset as usize)),
+                    ("entry_len", Json::from(m.entry_len)),
+                ])
+            })
+            .collect();
+        let doc = Json::obj(vec![
+            ("format", Json::from(FORMAT_VERSION as usize)),
+            ("file_len", Json::from(self.file_len as usize)),
+            ("records", Json::Arr(entries)),
+        ]);
+        std::fs::write(self.dir.join("index.json"), doc.to_string())?;
+        Ok(())
+    }
+}
+
+fn encode_entry(rec: &RunRecord) -> Vec<u8> {
+    let body = rec.to_body_bytes();
+    assert!(
+        body.len() as u64 <= MAX_BODY as u64,
+        "record body over the {MAX_BODY}-byte cap"
+    );
+    let mut out = Vec::with_capacity(ENTRY_OVERHEAD + body.len());
+    out.extend_from_slice(&ENTRY_MAGIC.to_le_bytes());
+    out.extend_from_slice(&(body.len() as u32).to_le_bytes());
+    out.extend_from_slice(&body);
+    out.extend_from_slice(&fnv1a64(&body).to_le_bytes());
+    out
+}
+
+/// Decode one entry from the head of `bytes`; returns the record and
+/// the entry's total length.
+fn decode_entry(bytes: &[u8]) -> Result<(RunRecord, usize), StoreError> {
+    if bytes.len() < 8 {
+        return Err(StoreError::Truncated {
+            what: "entry header",
+        });
+    }
+    let magic = u32::from_le_bytes(bytes[0..4].try_into().unwrap());
+    if magic != ENTRY_MAGIC {
+        return Err(StoreError::BadMagic {
+            what: "record entry",
+            got: magic,
+        });
+    }
+    let body_len = u32::from_le_bytes(bytes[4..8].try_into().unwrap());
+    if body_len > MAX_BODY {
+        return Err(StoreError::Oversized {
+            len: body_len as u64,
+            max: MAX_BODY as u64,
+        });
+    }
+    let entry_len = ENTRY_OVERHEAD + body_len as usize;
+    if bytes.len() < entry_len {
+        return Err(StoreError::Truncated {
+            what: "record body",
+        });
+    }
+    let body = &bytes[8..8 + body_len as usize];
+    let stored = u64::from_le_bytes(
+        bytes[8 + body_len as usize..entry_len].try_into().unwrap(),
+    );
+    let computed = fnv1a64(body);
+    if stored != computed {
+        return Err(StoreError::ChecksumMismatch { stored, computed });
+    }
+    let rec = RunRecord::from_body_bytes(body)?;
+    Ok((rec, entry_len))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::store::record::tests::demo_record;
+
+    fn tmp_store(name: &str) -> PathBuf {
+        let dir = std::env::temp_dir().join("fedcompress_store_unit").join(name);
+        let _ = std::fs::remove_dir_all(&dir);
+        dir
+    }
+
+    #[test]
+    fn open_append_get_list() {
+        let dir = tmp_store("basic");
+        let mut store = RunStore::open(&dir).unwrap();
+        assert!(store.is_empty());
+        let a = demo_record(1, "fedavg");
+        let b = demo_record(2, "fedcompress");
+        store.append(&a).unwrap();
+        store.append(&b).unwrap();
+        assert_eq!(store.len(), 2);
+        assert!(store.contains(a.key) && store.contains(b.key));
+        let back = store.get(a.key).unwrap().unwrap();
+        assert!(crate::store::diff_records(&a, &back).is_identical());
+        assert!(store.get(0xDEAD_BEEF).unwrap().is_none());
+
+        // a fresh open rebuilds the identical index from the file alone
+        let again = RunStore::open(&dir).unwrap();
+        assert_eq!(again.len(), 2);
+        assert_eq!(again.keys(), store.keys());
+        let back = again.get(b.key).unwrap().unwrap();
+        assert!(crate::store::diff_records(&b, &back).is_identical());
+        // sidecar exists and is derived
+        assert!(dir.join("index.json").exists());
+        std::fs::remove_file(dir.join("index.json")).unwrap();
+        assert_eq!(RunStore::open(&dir).unwrap().len(), 2);
+    }
+
+    #[test]
+    fn rerun_supersedes_but_keeps_history() {
+        let dir = tmp_store("rerun");
+        let mut store = RunStore::open(&dir).unwrap();
+        let a1 = demo_record(1, "fedavg");
+        let mut a2 = a1.clone();
+        a2.created_unix += 60;
+        store.append(&a1).unwrap();
+        store.append(&a2).unwrap();
+        assert_eq!(store.len(), 1, "one key");
+        assert_eq!(store.metas().len(), 2, "two entries");
+        assert_eq!(store.latest().len(), 1);
+        let got = store.get(a1.key).unwrap().unwrap();
+        assert_eq!(got.created_unix, a2.created_unix, "latest wins");
+    }
+
+    #[test]
+    fn prefix_resolution() {
+        let dir = tmp_store("prefix");
+        let mut store = RunStore::open(&dir).unwrap();
+        let a = demo_record(1, "fedavg");
+        store.append(&a).unwrap();
+        let hex = key_hex(a.key);
+        assert_eq!(store.resolve(&hex).unwrap(), a.key);
+        assert_eq!(store.resolve(&hex[..6]).unwrap(), a.key);
+        assert!(store.resolve("zz").is_err(), "no such prefix");
+        let b = demo_record(2, "fedavg");
+        store.append(&b).unwrap();
+        // the empty prefix now matches both keys -> ambiguous
+        let err = store.resolve("").unwrap_err().to_string();
+        assert!(err.contains("ambiguous"), "{err}");
+    }
+}

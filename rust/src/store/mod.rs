@@ -1,0 +1,109 @@
+//! The run store: persistent, content-addressed experiment records.
+//!
+//! Every federated run this repo executes used to evaporate on process
+//! exit — `RunResult`, events, and the comm ledger lived only in the
+//! printing process. The store turns each run into a durable
+//! [`RunRecord`] addressed by a content key:
+//!
+//! ```text
+//! key = FNV-1a64( u16 len | strategy name | config_image(cfg) )
+//! ```
+//!
+//! where `config_image` is the *bit-exact* `FedConfig` serialization
+//! from [`crate::net::proto`] (the same bytes the TCP handshake ships
+//! to workers, seed included). Two runs share a key iff they are the
+//! same experiment — same strategy, same config down to the float
+//! bits — which is exactly the determinism contract the transport
+//! layer already enforces, so a key is a *reproducibility address*:
+//! the sweep orchestrator skips any job whose key already has a
+//! completed record (resume-by-cache).
+//!
+//! Layout:
+//!
+//! * [`record`] — [`RunRecord`]: per-round `RoundMetrics`, the event
+//!   JSONL, the comm ledger (ideal + framed bytes), and final scores,
+//!   with explicit little-endian serialization and bit-exact
+//!   [`record::diff_records`] comparison.
+//! * [`index`] — [`RunStore`]: an append-only record file
+//!   (`runs.fcr`) with a checksum-verifying scan that rebuilds the
+//!   in-memory index on every open, plus a derived `index.json`
+//!   sidecar for external tooling. Corrupt or truncated input
+//!   surfaces as a typed [`StoreError`] — never a panic, never a hang
+//!   (same discipline as `net::frame`).
+//! * [`export`] — reporting: the `runs export-bench` summary
+//!   (`BENCH_sweep.json`) and the `runs compare` table rows.
+
+pub mod export;
+pub mod index;
+pub mod record;
+
+pub use index::{RunMeta, RunStore};
+pub use record::{diff_records, key_hex, parse_key_hex, run_key, RecordDiff, RunRecord};
+
+use std::fmt;
+
+/// Typed store failure. Every malformed, truncated, or corrupt byte
+/// sequence the record codecs can see maps to one of these — the
+/// decoders never panic.
+#[derive(Debug)]
+pub enum StoreError {
+    /// Underlying filesystem failure.
+    Io(std::io::Error),
+    /// File or record does not start with the expected magic.
+    BadMagic { what: &'static str, got: u32 },
+    /// Store file written by an unknown format version.
+    UnsupportedVersion { got: u32 },
+    /// A length field exceeds the sanity cap (refuse to allocate).
+    Oversized { len: u64, max: u64 },
+    /// Record body checksum does not match the stored FNV-1a.
+    ChecksumMismatch { stored: u64, computed: u64 },
+    /// File ended mid-structure.
+    Truncated { what: &'static str },
+    /// Structurally invalid record contents.
+    Malformed { what: String },
+    /// A record's stored key does not match its recomputed content
+    /// key — the record was tampered with or the key algorithm drifted.
+    KeyMismatch { stored: u64, computed: u64 },
+}
+
+impl fmt::Display for StoreError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            StoreError::Io(e) => write!(f, "run store i/o error: {e}"),
+            StoreError::BadMagic { what, got } => {
+                write!(f, "bad {what} magic 0x{got:08x} (not a run store?)")
+            }
+            StoreError::UnsupportedVersion { got } => {
+                write!(f, "unsupported run store format version {got}")
+            }
+            StoreError::Oversized { len, max } => {
+                write!(f, "record length {len} exceeds the {max}-byte cap")
+            }
+            StoreError::ChecksumMismatch { stored, computed } => write!(
+                f,
+                "record checksum mismatch: stored 0x{stored:016x}, computed 0x{computed:016x}"
+            ),
+            StoreError::Truncated { what } => write!(f, "truncated run store: {what}"),
+            StoreError::Malformed { what } => write!(f, "malformed record: {what}"),
+            StoreError::KeyMismatch { stored, computed } => write!(
+                f,
+                "record key mismatch: stored 0x{stored:016x}, content hashes to 0x{computed:016x}"
+            ),
+        }
+    }
+}
+
+impl std::error::Error for StoreError {
+    fn source(&self) -> Option<&(dyn std::error::Error + 'static)> {
+        match self {
+            StoreError::Io(e) => Some(e),
+            _ => None,
+        }
+    }
+}
+
+impl From<std::io::Error> for StoreError {
+    fn from(e: std::io::Error) -> StoreError {
+        StoreError::Io(e)
+    }
+}

@@ -1,0 +1,563 @@
+//! [`RunRecord`]: one persisted federated run, and its content key.
+//!
+//! Record body layout (little-endian; the store file wraps each body
+//! in a `magic | len | body | fnv1a64` entry, see [`super::index`]):
+//!
+//! ```text
+//! u64 key | u64 created_unix | u16 strat_len | strategy |
+//! u32 cfg_len | config_image | u32 n_rounds |
+//! n_rounds x RoundMetrics (80 B fixed, coordinator::metrics) |
+//! f64 final_accuracy | u64 final_model_bytes | u64 dense_model_bytes |
+//! u32 n_transfers | n_transfers x (u32 round | u8 dir | u64 bytes |
+//! u64 framed) | u32 events_len | events JSONL (utf-8)
+//! ```
+//!
+//! The model weights are deliberately *not* stored — records are the
+//! paper-facing measurements (metrics, events, ledger), small enough
+//! to accumulate thousands per store; the deliverable model belongs to
+//! `Checkpoint`.
+
+use crate::compression::accounting::{CommLedger, Direction};
+use crate::config::FedConfig;
+use crate::coordinator::events::EventLog;
+use crate::coordinator::metrics::{self, RoundMetrics, RunResult};
+use crate::net::proto::{config_image, parse_config_image};
+use crate::util::hash::Fnv1a;
+
+use super::StoreError;
+
+/// Content key of a run: FNV-1a64 over the strategy name (length-
+/// prefixed) followed by the bit-exact config image. Everything that
+/// can change a run's outcome — dataset, seed, fleet, every float knob
+/// — lives in the image, so equal keys mean "the same experiment".
+pub fn run_key(strategy: &str, cfg: &FedConfig) -> u64 {
+    let mut h = Fnv1a::new();
+    h.update(&(strategy.len() as u16).to_le_bytes());
+    h.update(strategy.as_bytes());
+    h.update(&config_image(cfg));
+    h.finish()
+}
+
+/// Render a key the way the CLI prints and parses it (16 hex digits).
+pub fn key_hex(key: u64) -> String {
+    format!("{key:016x}")
+}
+
+/// Parse a `runs show --key` style hex key.
+pub fn parse_key_hex(s: &str) -> Result<u64, StoreError> {
+    u64::from_str_radix(s.trim(), 16).map_err(|_| StoreError::Malformed {
+        what: format!("'{s}' is not a hex record key"),
+    })
+}
+
+#[derive(Clone, Debug)]
+pub struct RunRecord {
+    /// content key (`run_key(strategy, cfg)`), verified on decode
+    pub key: u64,
+    /// unix seconds the record was created (informational; excluded
+    /// from `diff_records`)
+    pub created_unix: u64,
+    /// canonical strategy name
+    pub strategy: String,
+    /// bit-exact `FedConfig` image (`net::proto::config_image`)
+    pub cfg_image: Vec<u8>,
+    pub rounds: Vec<RoundMetrics>,
+    pub final_accuracy: f64,
+    /// wire bytes of the final deliverable model
+    pub final_model_bytes: usize,
+    /// dense f32 bytes of the same model
+    pub dense_model_bytes: usize,
+    pub ledger: CommLedger,
+    /// the run's event log as JSON lines (stored verbatim)
+    pub events_jsonl: String,
+}
+
+/// Caps a decoder enforces before allocating (a corrupt length field
+/// must not become a multi-gigabyte allocation).
+const MAX_ROUNDS: u32 = 1_000_000;
+const MAX_TRANSFERS: u32 = 64_000_000;
+const MAX_CFG_BYTES: u32 = 64 << 10;
+
+impl RunRecord {
+    /// Convert a finished run into its persistent record. `cfg` must
+    /// be the config the run executed under.
+    pub fn from_result(cfg: &FedConfig, result: &RunResult) -> RunRecord {
+        let created_unix = std::time::SystemTime::now()
+            .duration_since(std::time::UNIX_EPOCH)
+            .map(|d| d.as_secs())
+            .unwrap_or(0);
+        RunRecord {
+            key: run_key(result.strategy, cfg),
+            created_unix,
+            strategy: result.strategy.to_string(),
+            cfg_image: config_image(cfg),
+            rounds: result.rounds.clone(),
+            final_accuracy: result.final_accuracy,
+            final_model_bytes: result.final_model_bytes,
+            dense_model_bytes: result.dense_model_bytes,
+            ledger: result.ledger.clone(),
+            events_jsonl: result.events.to_jsonl(),
+        }
+    }
+
+    /// Rebuild the exact `FedConfig` the run executed under.
+    pub fn cfg(&self) -> Result<FedConfig, StoreError> {
+        parse_config_image(&self.cfg_image).map_err(|e| StoreError::Malformed {
+            what: format!("config image: {e}"),
+        })
+    }
+
+    /// Parse the stored event log back into typed events.
+    pub fn events(&self) -> anyhow::Result<EventLog> {
+        EventLog::from_jsonl(&self.events_jsonl)
+    }
+
+    /// Model compression ratio versus dense f32 storage.
+    pub fn mcr(&self) -> f64 {
+        self.dense_model_bytes as f64 / self.final_model_bytes.max(1) as f64
+    }
+
+    pub fn total_bytes(&self) -> usize {
+        self.ledger.total_bytes()
+    }
+
+    pub fn total_framed_bytes(&self) -> usize {
+        self.ledger.total_framed_bytes()
+    }
+
+    pub fn total_sim_ms(&self) -> f64 {
+        metrics::total_sim_ms(&self.rounds)
+    }
+
+    /// Real coordinator wall-clock summed over rounds, ms.
+    pub fn total_wall_ms(&self) -> f64 {
+        self.rounds.iter().map(|r| r.wall_ms).sum()
+    }
+
+    pub fn time_to_accuracy(&self, target: f64) -> Option<(usize, f64)> {
+        metrics::time_to_accuracy(&self.rounds, target)
+    }
+
+    /// Active cluster count of the last trained round (the deployed C
+    /// a `table2 --from-run` evaluation uses).
+    pub fn final_clusters(&self) -> Option<usize> {
+        self.rounds.last().map(|r| r.clusters)
+    }
+
+    pub fn total_dropped(&self) -> usize {
+        self.rounds.iter().map(|r| r.dropped).sum()
+    }
+
+    pub fn total_stragglers(&self) -> usize {
+        self.rounds.iter().map(|r| r.stragglers).sum()
+    }
+
+    pub fn accuracy_trace(&self) -> Vec<f64> {
+        self.rounds.iter().map(|r| r.accuracy).collect()
+    }
+
+    pub fn score_trace(&self) -> Vec<f64> {
+        self.rounds.iter().map(|r| r.score).collect()
+    }
+
+    // --- serialization ------------------------------------------------
+
+    /// Serialize the record body (store entry framing not included).
+    pub fn to_body_bytes(&self) -> Vec<u8> {
+        let mut out = Vec::with_capacity(
+            64 + self.cfg_image.len()
+                + self.rounds.len() * metrics::ROUND_METRICS_BYTES
+                + self.ledger.transfer_count() * 21
+                + self.events_jsonl.len(),
+        );
+        out.extend_from_slice(&self.key.to_le_bytes());
+        out.extend_from_slice(&self.created_unix.to_le_bytes());
+        out.extend_from_slice(&(self.strategy.len() as u16).to_le_bytes());
+        out.extend_from_slice(self.strategy.as_bytes());
+        out.extend_from_slice(&(self.cfg_image.len() as u32).to_le_bytes());
+        out.extend_from_slice(&self.cfg_image);
+        out.extend_from_slice(&(self.rounds.len() as u32).to_le_bytes());
+        for r in &self.rounds {
+            out.extend_from_slice(&r.to_le_bytes());
+        }
+        out.extend_from_slice(&self.final_accuracy.to_le_bytes());
+        out.extend_from_slice(&(self.final_model_bytes as u64).to_le_bytes());
+        out.extend_from_slice(&(self.dense_model_bytes as u64).to_le_bytes());
+        out.extend_from_slice(&(self.ledger.transfer_count() as u32).to_le_bytes());
+        for t in self.ledger.transfers() {
+            out.extend_from_slice(&(t.round as u32).to_le_bytes());
+            out.push(match t.direction {
+                Direction::Down => 0,
+                Direction::Up => 1,
+            });
+            out.extend_from_slice(&(t.bytes as u64).to_le_bytes());
+            out.extend_from_slice(&(t.framed_bytes as u64).to_le_bytes());
+        }
+        out.extend_from_slice(&(self.events_jsonl.len() as u32).to_le_bytes());
+        out.extend_from_slice(self.events_jsonl.as_bytes());
+        out
+    }
+
+    /// Decode a record body. Every structural defect is a typed
+    /// [`StoreError`]; the stored key is re-verified against the
+    /// record's own content (strategy + config image).
+    pub fn from_body_bytes(body: &[u8]) -> Result<RunRecord, StoreError> {
+        let mut c = Cur { b: body, i: 0 };
+        let key = c.u64("record key")?;
+        let created_unix = c.u64("created timestamp")?;
+        let strategy = c.str16("strategy name")?;
+        let cfg_len = c.u32("config image length")?;
+        if cfg_len > MAX_CFG_BYTES {
+            return Err(StoreError::Oversized {
+                len: cfg_len as u64,
+                max: MAX_CFG_BYTES as u64,
+            });
+        }
+        let cfg_image = c.take(cfg_len as usize, "config image")?.to_vec();
+        // the image must parse — a record whose config cannot be
+        // rebuilt is not a usable experiment address
+        let cfg = parse_config_image(&cfg_image).map_err(|e| StoreError::Malformed {
+            what: format!("config image: {e}"),
+        })?;
+        let n_rounds = c.u32("round count")?;
+        if n_rounds > MAX_ROUNDS {
+            return Err(StoreError::Oversized {
+                len: n_rounds as u64,
+                max: MAX_ROUNDS as u64,
+            });
+        }
+        let mut rounds = Vec::with_capacity(n_rounds as usize);
+        for _ in 0..n_rounds {
+            let img: &[u8; metrics::ROUND_METRICS_BYTES] = c
+                .take(metrics::ROUND_METRICS_BYTES, "round metrics")?
+                .try_into()
+                .expect("fixed-size take");
+            rounds.push(RoundMetrics::from_le_bytes(img));
+        }
+        let final_accuracy = c.f64("final accuracy")?;
+        let final_model_bytes = c.u64("final model bytes")? as usize;
+        let dense_model_bytes = c.u64("dense model bytes")? as usize;
+        let n_transfers = c.u32("transfer count")?;
+        if n_transfers > MAX_TRANSFERS {
+            return Err(StoreError::Oversized {
+                len: n_transfers as u64,
+                max: MAX_TRANSFERS as u64,
+            });
+        }
+        let mut ledger = CommLedger::new();
+        for _ in 0..n_transfers {
+            let round = c.u32("transfer round")? as usize;
+            let direction = match c.u8("transfer direction")? {
+                0 => Direction::Down,
+                1 => Direction::Up,
+                d => {
+                    return Err(StoreError::Malformed {
+                        what: format!("unknown transfer direction tag {d}"),
+                    })
+                }
+            };
+            let bytes = c.u64("transfer bytes")? as usize;
+            let framed = c.u64("transfer framed bytes")? as usize;
+            if framed < bytes {
+                return Err(StoreError::Malformed {
+                    what: format!("transfer framed bytes {framed} undercut payload {bytes}"),
+                });
+            }
+            ledger.record(round, direction, bytes, framed);
+        }
+        let events_len = c.u32("event log length")?;
+        let events_bytes = c.take(events_len as usize, "event log")?;
+        let events_jsonl =
+            String::from_utf8(events_bytes.to_vec()).map_err(|_| StoreError::Malformed {
+                what: "event log is not utf-8".to_string(),
+            })?;
+        if !c.done() {
+            return Err(StoreError::Malformed {
+                what: format!("{} bytes of trailing garbage after record", c.remaining()),
+            });
+        }
+        let computed = run_key(&strategy, &cfg);
+        if computed != key {
+            return Err(StoreError::KeyMismatch {
+                stored: key,
+                computed,
+            });
+        }
+        Ok(RunRecord {
+            key,
+            created_unix,
+            strategy,
+            cfg_image,
+            rounds,
+            final_accuracy,
+            final_model_bytes,
+            dense_model_bytes,
+            ledger,
+            events_jsonl,
+        })
+    }
+}
+
+/// Result of a bit-exact record comparison: the (possibly empty) list
+/// of drifting fields.
+#[derive(Clone, Debug, Default, PartialEq, Eq)]
+pub struct RecordDiff {
+    pub fields: Vec<String>,
+}
+
+impl RecordDiff {
+    pub fn is_identical(&self) -> bool {
+        self.fields.is_empty()
+    }
+}
+
+/// Compare two records for bit-exact *experimental* equality. Every
+/// metric, ledger entry, and event byte participates; float fields are
+/// compared by bit pattern, so `-0.0 != 0.0` and NaN payloads count.
+///
+/// Deliberately excluded: `created_unix` and per-round `wall_ms` —
+/// both measure the *environment* the run happened in (when, and how
+/// fast this host was), not the experiment itself. Two faithful
+/// re-executions of the same key differ only in those two fields.
+pub fn diff_records(a: &RunRecord, b: &RunRecord) -> RecordDiff {
+    let mut d = RecordDiff::default();
+    let mut push = |what: String| d.fields.push(what);
+    if a.strategy != b.strategy {
+        push(format!("strategy ({} vs {})", a.strategy, b.strategy));
+    }
+    if a.cfg_image != b.cfg_image {
+        push("cfg_image".to_string());
+    }
+    if a.rounds.len() != b.rounds.len() {
+        push(format!("rounds.len ({} vs {})", a.rounds.len(), b.rounds.len()));
+    }
+    for (i, (ra, rb)) in a.rounds.iter().zip(&b.rounds).enumerate() {
+        // compare via the byte image with wall_ms blanked (bytes
+        // 56..64: round 4 + four f64 metrics 32 + clusters 4 +
+        // up/down u64s 16 precede it) — field layout lives in
+        // `RoundMetrics::to_le_bytes`, not twice
+        let mut ia = ra.to_le_bytes();
+        let mut ib = rb.to_le_bytes();
+        ia[56..64].fill(0);
+        ib[56..64].fill(0);
+        if ia != ib {
+            push(format!("rounds[{i}]"));
+        }
+    }
+    if a.final_accuracy.to_bits() != b.final_accuracy.to_bits() {
+        push(format!(
+            "final_accuracy ({} vs {})",
+            a.final_accuracy, b.final_accuracy
+        ));
+    }
+    if a.final_model_bytes != b.final_model_bytes {
+        push("final_model_bytes".to_string());
+    }
+    if a.dense_model_bytes != b.dense_model_bytes {
+        push("dense_model_bytes".to_string());
+    }
+    if a.ledger.transfer_count() != b.ledger.transfer_count() {
+        push(format!(
+            "ledger.len ({} vs {})",
+            a.ledger.transfer_count(),
+            b.ledger.transfer_count()
+        ));
+    }
+    for (i, (ta, tb)) in a
+        .ledger
+        .transfers()
+        .iter()
+        .zip(b.ledger.transfers())
+        .enumerate()
+    {
+        if ta.round != tb.round
+            || ta.direction != tb.direction
+            || ta.bytes != tb.bytes
+            || ta.framed_bytes != tb.framed_bytes
+        {
+            push(format!("ledger[{i}]"));
+        }
+    }
+    if a.events_jsonl != b.events_jsonl {
+        push("events_jsonl".to_string());
+    }
+    d
+}
+
+// --- cursor reader with typed truncation errors ----------------------------
+
+struct Cur<'a> {
+    b: &'a [u8],
+    i: usize,
+}
+
+impl<'a> Cur<'a> {
+    fn take(&mut self, n: usize, what: &'static str) -> Result<&'a [u8], StoreError> {
+        if self.i + n > self.b.len() {
+            return Err(StoreError::Truncated { what });
+        }
+        let s = &self.b[self.i..self.i + n];
+        self.i += n;
+        Ok(s)
+    }
+    fn u8(&mut self, what: &'static str) -> Result<u8, StoreError> {
+        Ok(self.take(1, what)?[0])
+    }
+    fn u16(&mut self, what: &'static str) -> Result<u16, StoreError> {
+        Ok(u16::from_le_bytes(self.take(2, what)?.try_into().unwrap()))
+    }
+    fn u32(&mut self, what: &'static str) -> Result<u32, StoreError> {
+        Ok(u32::from_le_bytes(self.take(4, what)?.try_into().unwrap()))
+    }
+    fn u64(&mut self, what: &'static str) -> Result<u64, StoreError> {
+        Ok(u64::from_le_bytes(self.take(8, what)?.try_into().unwrap()))
+    }
+    fn f64(&mut self, what: &'static str) -> Result<f64, StoreError> {
+        Ok(f64::from_le_bytes(self.take(8, what)?.try_into().unwrap()))
+    }
+    fn str16(&mut self, what: &'static str) -> Result<String, StoreError> {
+        let n = self.u16(what)? as usize;
+        let bytes = self.take(n, what)?;
+        String::from_utf8(bytes.to_vec()).map_err(|_| StoreError::Malformed {
+            what: format!("{what}: not utf-8"),
+        })
+    }
+    fn done(&self) -> bool {
+        self.i == self.b.len()
+    }
+    fn remaining(&self) -> usize {
+        self.b.len() - self.i
+    }
+}
+
+#[cfg(test)]
+pub(crate) mod tests {
+    use super::*;
+    use crate::coordinator::events::{Event, EventLog};
+
+    /// A fully populated record with awkward floats (no engine
+    /// needed — RunRecord is a plain measurement container).
+    pub(crate) fn demo_record(seed: u64, strategy: &'static str) -> RunRecord {
+        let mut cfg = FedConfig::quick("cifar10");
+        cfg.seed = seed;
+        let mut ledger = CommLedger::new();
+        let mut events = EventLog::new();
+        let mut rounds = Vec::new();
+        for r in 0..4usize {
+            ledger.record(r, Direction::Down, 1000 + r, 1024 + r);
+            ledger.record(r, Direction::Up, 250 + r, 290 + r);
+            events.push(Event::RoundStart {
+                round: r,
+                clusters: 16,
+            });
+            events.push(Event::Evaluated {
+                round: r,
+                accuracy: 0.5 + 0.1 * r as f64,
+                loss: 1.25e-3,
+            });
+            rounds.push(RoundMetrics {
+                round: r,
+                accuracy: 0.5 + 0.1 * r as f64,
+                test_loss: 0.7182818284590452,
+                score: 4.062499999999999,
+                client_mean_ce: 2.1,
+                clusters: 16 + r,
+                up_bytes: 250 + r,
+                down_bytes: 1000 + r,
+                wall_ms: 17.25 + r as f64,
+                round_sim_ms: 1500.0,
+                stragglers: r % 2,
+                dropped: 0,
+            });
+        }
+        let result = RunResult {
+            strategy,
+            dataset: cfg.dataset.clone(),
+            rounds,
+            final_theta: vec![],
+            final_accuracy: 0.8049999999999999,
+            final_model_bytes: 5_120,
+            dense_model_bytes: 81_920,
+            ledger,
+            events,
+            final_centroids: crate::clustering::CentroidState {
+                mu: vec![0.0; 4],
+                mask: vec![1.0; 4],
+                c_max: 4,
+                active: 4,
+            },
+        };
+        RunRecord::from_result(&cfg, &result)
+    }
+
+    #[test]
+    fn body_round_trips_bit_exactly() {
+        let rec = demo_record(7, "fedcompress");
+        let body = rec.to_body_bytes();
+        let back = RunRecord::from_body_bytes(&body).unwrap();
+        assert_eq!(back.to_body_bytes(), body);
+        assert!(diff_records(&rec, &back).is_identical());
+        assert_eq!(back.key, rec.key);
+        assert_eq!(back.strategy, "fedcompress");
+        assert_eq!(back.rounds.len(), 4);
+        assert_eq!(back.ledger.transfer_count(), 8);
+        assert_eq!(back.cfg().unwrap().seed, 7);
+        assert_eq!(back.events().unwrap().len(), 8);
+        assert_eq!(back.final_clusters(), Some(19));
+    }
+
+    #[test]
+    fn key_separates_experiments() {
+        let a = demo_record(7, "fedcompress");
+        let b = demo_record(8, "fedcompress");
+        let c = demo_record(7, "fedavg");
+        assert_ne!(a.key, b.key, "seed must change the key");
+        assert_ne!(a.key, c.key, "strategy must change the key");
+        // and the key is a pure function of (strategy, cfg)
+        assert_eq!(a.key, demo_record(7, "fedcompress").key);
+        let cfg = a.cfg().unwrap();
+        assert_eq!(a.key, run_key("fedcompress", &cfg));
+    }
+
+    #[test]
+    fn diff_ignores_environment_fields_only() {
+        let a = demo_record(7, "fedcompress");
+        let mut b = a.clone();
+        b.created_unix += 1000;
+        for r in &mut b.rounds {
+            r.wall_ms *= 3.0; // a slower host, same experiment
+        }
+        assert!(diff_records(&a, &b).is_identical());
+
+        let mut c = a.clone();
+        c.rounds[2].accuracy += 1e-15;
+        let d = diff_records(&a, &c);
+        assert_eq!(d.fields, vec!["rounds[2]".to_string()]);
+
+        // bit-pattern comparison: -0.0 and +0.0 are different records
+        let mut e = a.clone();
+        e.final_accuracy = -0.0;
+        let mut f = a.clone();
+        f.final_accuracy = 0.0;
+        assert!(!diff_records(&e, &f).is_identical());
+    }
+
+    #[test]
+    fn tampered_key_is_rejected() {
+        let rec = demo_record(7, "fedcompress");
+        let mut body = rec.to_body_bytes();
+        body[0] ^= 1; // flip a key bit; content untouched
+        match RunRecord::from_body_bytes(&body) {
+            Err(StoreError::KeyMismatch { .. }) => {}
+            other => panic!("expected KeyMismatch, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn key_hex_round_trips() {
+        let k = 0x0123_4567_89ab_cdefu64;
+        assert_eq!(parse_key_hex(&key_hex(k)).unwrap(), k);
+        assert_eq!(parse_key_hex(" 00ff00ff00ff00ff ").unwrap(), 0x00ff00ff00ff00ff);
+        assert!(parse_key_hex("not-hex").is_err());
+    }
+}

@@ -1,0 +1,282 @@
+//! The sweep orchestrator: expand a declarative grid into
+//! content-addressed jobs, execute them in parallel, persist every
+//! completed run in the [`RunStore`], and skip anything the store
+//! already holds.
+//!
+//! ```text
+//! SweepSpec (flags or spec file)        store::RunStore
+//!   -> expand()    strategies x fleets x seeds x grid axes
+//!   -> partition   key in store?  -> cached (resume-by-cache)
+//!   -> execute     threadpool::parallel_map, one engine per worker
+//!                  thread (spec.rs / runner.rs), records appended
+//!                  under a mutex as each job completes
+//!   -> SweepOutcome  executed / cached / failed counts
+//! ```
+//!
+//! Failure isolation: one failed job never aborts the sweep — its
+//! error is reported through [`SweepEvent::JobFailed`] and counted in
+//! [`SweepOutcome::failed`]; every completed job is already durable in
+//! the store, so re-running the same sweep re-attempts only the
+//! failures (everything else cache-hits).
+
+pub mod runner;
+pub mod spec;
+
+pub use runner::{run_or_cached, verify_cached, CacheStats, EngineRunner, JobRunner, SmokeRunner};
+pub use spec::{GridAxis, SweepJob, SweepSpec};
+
+use std::sync::Mutex;
+
+use anyhow::Result;
+
+use crate::store::RunStore;
+use crate::util::threadpool::parallel_map;
+
+/// Progress stream of a sweep (the CLI prints these as they happen).
+/// Owned payloads — the stream outlives no borrow and closures over it
+/// never need higher-ranked lifetimes.
+#[derive(Clone, Debug)]
+pub enum SweepEvent {
+    /// Emitted once after cache partitioning, before execution.
+    Planned { total: usize, cached: usize },
+    JobStart { idx: usize, label: String },
+    JobDone {
+        idx: usize,
+        key: u64,
+        label: String,
+        cached: bool,
+        final_accuracy: f64,
+        wall_s: f64,
+    },
+    JobFailed {
+        idx: usize,
+        label: String,
+        error: String,
+    },
+}
+
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct SweepOutcome {
+    pub total: usize,
+    pub executed: usize,
+    pub cached: usize,
+    pub failed: usize,
+}
+
+impl SweepOutcome {
+    /// One-line summary (the CLI's final line; CI greps it).
+    pub fn summary(&self) -> String {
+        format!(
+            "sweep: {} jobs — {} executed, {} cached, {} failed",
+            self.total, self.executed, self.cached, self.failed
+        )
+    }
+}
+
+/// Execute `jobs` against `store` with `workers` parallel threads.
+///
+/// Jobs whose key already has a completed record are skipped
+/// (`force` re-executes them; the fresh record supersedes). Pending
+/// jobs run on [`parallel_map`]; each completed record is appended to
+/// the store immediately (mutex-serialized), so an interrupted sweep
+/// resumes from what finished.
+pub fn run_sweep(
+    jobs: &[SweepJob],
+    store: &mut RunStore,
+    runner: &dyn JobRunner,
+    workers: usize,
+    force: bool,
+    progress: &(dyn Fn(SweepEvent) + Sync),
+) -> Result<SweepOutcome> {
+    let mut cached: Vec<&SweepJob> = Vec::new();
+    let mut pending: Vec<&SweepJob> = Vec::new();
+    for job in jobs {
+        if !force && store.contains(job.key) {
+            cached.push(job);
+        } else {
+            pending.push(job);
+        }
+    }
+    progress(SweepEvent::Planned {
+        total: jobs.len(),
+        cached: cached.len(),
+    });
+
+    // cache hits are still verified: a key collision or a tampered
+    // store must fail the sweep, not silently stand in for a run
+    for &job in &cached {
+        let rec = store.get(job.key)?.expect("partitioned as cached");
+        verify_cached(&rec, &job.strategy, &job.cfg)?;
+        progress(SweepEvent::JobDone {
+            idx: job.idx,
+            key: job.key,
+            label: job.label(),
+            cached: true,
+            final_accuracy: rec.final_accuracy,
+            wall_s: 0.0,
+        });
+    }
+
+    let store_mutex = Mutex::new(store);
+    let failures: Vec<Option<String>> = if pending.is_empty() {
+        Vec::new()
+    } else {
+        parallel_map(pending.len(), workers.max(1), |i| {
+            let job = pending[i];
+            progress(SweepEvent::JobStart {
+                idx: job.idx,
+                label: job.label(),
+            });
+            let t0 = std::time::Instant::now();
+            match runner.run(job) {
+                Ok(rec) => {
+                    debug_assert_eq!(rec.key, job.key, "runner broke the key contract");
+                    let append = {
+                        let mut guard = store_mutex.lock().unwrap();
+                        guard.append(&rec)
+                    };
+                    match append {
+                        Ok(()) => {
+                            progress(SweepEvent::JobDone {
+                                idx: job.idx,
+                                key: job.key,
+                                label: job.label(),
+                                cached: false,
+                                final_accuracy: rec.final_accuracy,
+                                wall_s: t0.elapsed().as_secs_f64(),
+                            });
+                            None
+                        }
+                        Err(e) => {
+                            let error = format!("persisting record: {e}");
+                            progress(SweepEvent::JobFailed {
+                                idx: job.idx,
+                                label: job.label(),
+                                error: error.clone(),
+                            });
+                            Some(error)
+                        }
+                    }
+                }
+                Err(e) => {
+                    let error = format!("{e:#}");
+                    progress(SweepEvent::JobFailed {
+                        idx: job.idx,
+                        label: job.label(),
+                        error: error.clone(),
+                    });
+                    Some(error)
+                }
+            }
+        })
+    };
+
+    // one sidecar refresh for the whole batch (appends skip it)
+    store_mutex.into_inner().unwrap().flush_sidecar()?;
+
+    let failed = failures.iter().flatten().count();
+    Ok(SweepOutcome {
+        total: jobs.len(),
+        executed: pending.len() - failed,
+        cached: cached.len(),
+        failed,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::baselines::registry::StrategyRegistry;
+    use crate::config::FedConfig;
+    use crate::store::RunRecord;
+
+    fn tmp_store(name: &str) -> RunStore {
+        let dir = std::env::temp_dir().join("fedcompress_sweep_unit").join(name);
+        let _ = std::fs::remove_dir_all(&dir);
+        RunStore::open(&dir).unwrap()
+    }
+
+    fn grid_jobs() -> Vec<SweepJob> {
+        let spec = SweepSpec {
+            strategies: vec!["fedavg".into(), "fedcompress".into()],
+            seeds: vec![1, 2],
+            ..SweepSpec::default()
+        };
+        spec.expand(&FedConfig::quick("cifar10"), &StrategyRegistry::builtin())
+            .unwrap()
+    }
+
+    #[test]
+    fn second_sweep_is_all_cache_hits() {
+        let mut store = tmp_store("cache");
+        let jobs = grid_jobs();
+        let quiet = |_: SweepEvent| {};
+        let first = run_sweep(&jobs, &mut store, &SmokeRunner, 4, false, &quiet).unwrap();
+        assert_eq!(first.executed, 4);
+        assert_eq!(first.cached, 0);
+        assert_eq!(first.failed, 0);
+        assert_eq!(store.len(), 4);
+        let second = run_sweep(&jobs, &mut store, &SmokeRunner, 4, false, &quiet).unwrap();
+        assert_eq!(second.cached, 4, "every job must cache-hit");
+        assert_eq!(second.executed, 0, "zero re-execution");
+        assert_eq!(store.len(), 4, "no new records");
+        // force re-executes and supersedes
+        let forced = run_sweep(&jobs, &mut store, &SmokeRunner, 2, true, &quiet).unwrap();
+        assert_eq!(forced.executed, 4);
+        assert_eq!(store.len(), 4, "same keys");
+        assert_eq!(store.metas().len(), 8, "history kept");
+    }
+
+    /// One failing job neither aborts the sweep nor poisons the store.
+    struct FailOne;
+    impl JobRunner for FailOne {
+        fn run(&self, job: &SweepJob) -> Result<RunRecord> {
+            if job.idx == 1 {
+                anyhow::bail!("injected failure");
+            }
+            SmokeRunner.run(job)
+        }
+        fn kind(&self) -> &'static str {
+            "fail-one"
+        }
+    }
+
+    #[test]
+    fn failures_are_isolated_and_retried_next_sweep() {
+        let mut store = tmp_store("failures");
+        let jobs = grid_jobs();
+        let quiet = |_: SweepEvent| {};
+        let out = run_sweep(&jobs, &mut store, &FailOne, 2, false, &quiet).unwrap();
+        assert_eq!(out.failed, 1);
+        assert_eq!(out.executed, 3);
+        assert_eq!(store.len(), 3, "completed jobs persisted");
+        // the retry sweep only re-runs the failure
+        let out = run_sweep(&jobs, &mut store, &SmokeRunner, 2, false, &quiet).unwrap();
+        assert_eq!(out.cached, 3);
+        assert_eq!(out.executed, 1);
+        assert_eq!(out.failed, 0);
+        assert_eq!(store.len(), 4);
+    }
+
+    #[test]
+    fn progress_events_cover_every_job() {
+        use std::sync::Mutex as M;
+        let mut store = tmp_store("progress");
+        let jobs = grid_jobs();
+        let seen = M::new((0usize, 0usize, 0usize)); // planned_total, starts, dones
+        run_sweep(&jobs, &mut store, &SmokeRunner, 2, false, &|e| {
+            let mut g = seen.lock().unwrap();
+            match e {
+                SweepEvent::Planned { total, .. } => g.0 = total,
+                SweepEvent::JobStart { .. } => g.1 += 1,
+                SweepEvent::JobDone { .. } => g.2 += 1,
+                SweepEvent::JobFailed { .. } => {}
+            }
+        })
+        .unwrap();
+        let (planned, starts, dones) = *seen.lock().unwrap();
+        assert_eq!(planned, 4);
+        assert_eq!(starts, 4);
+        assert_eq!(dones, 4);
+    }
+}

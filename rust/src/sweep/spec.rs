@@ -1,0 +1,336 @@
+//! Declarative sweep grids: strategies x fleet presets x seeds x
+//! arbitrary config knobs, expanded into content-addressed jobs.
+//!
+//! A grid comes from CLI flags (`--strategies a,b --fleets x,y
+//! --seeds 1,2 --axis c_max=8,16`) or a small `key = value` spec file:
+//!
+//! ```text
+//! # FedCompress budget sweep
+//! strategies = fedavg,fedcompress
+//! fleets     = ideal,mobile
+//! seeds      = 42,43
+//! grid.c_max = 8,16,32
+//! grid.topk_keep = 0.05,0.1
+//! ```
+//!
+//! `grid.<key>` axes go through `FedConfig::set`, so every `--set`able
+//! knob (cluster budgets, compression keeps, learning rates, ...) can
+//! be swept; unknown keys fail at expansion time, before anything
+//! runs.
+
+use anyhow::{bail, Context, Result};
+
+use crate::baselines::registry::StrategyRegistry;
+use crate::config::FedConfig;
+use crate::sim::FleetPreset;
+use crate::store::run_key;
+
+/// One swept config knob: a `FedConfig::set` key and its values.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct GridAxis {
+    pub key: String,
+    pub values: Vec<String>,
+}
+
+/// The declarative grid. Empty dimensions default at expansion time:
+/// no strategies -> every registered strategy; no fleets -> the base
+/// config's preset; no seeds -> the base config's seed.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct SweepSpec {
+    pub strategies: Vec<String>,
+    pub fleets: Vec<FleetPreset>,
+    pub seeds: Vec<u64>,
+    pub axes: Vec<GridAxis>,
+}
+
+/// One expanded job: a canonical strategy name, the fully resolved
+/// config, and the content key a completed record would carry.
+#[derive(Clone, Debug)]
+pub struct SweepJob {
+    /// position in expansion order (stable across re-runs)
+    pub idx: usize,
+    pub strategy: String,
+    pub cfg: FedConfig,
+    pub key: u64,
+}
+
+impl SweepJob {
+    /// Compact one-line label for progress output.
+    pub fn label(&self) -> String {
+        format!(
+            "{}/{} fleet={} seed={}",
+            self.strategy,
+            self.cfg.dataset,
+            self.cfg.fleet.preset.name(),
+            self.cfg.seed,
+        )
+    }
+}
+
+impl SweepSpec {
+    /// Parse a spec file (`key = value` lines, `#` comments).
+    pub fn from_file(path: &std::path::Path) -> Result<SweepSpec> {
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("reading sweep spec {path:?}"))?;
+        SweepSpec::parse(&text)
+    }
+
+    pub fn parse(text: &str) -> Result<SweepSpec> {
+        let mut spec = SweepSpec::default();
+        for (lineno, raw) in text.lines().enumerate() {
+            let line = raw.split('#').next().unwrap_or("").trim();
+            if line.is_empty() {
+                continue;
+            }
+            let Some((key, value)) = line.split_once('=') else {
+                bail!("sweep spec line {}: expected 'key = values', got '{raw}'", lineno + 1);
+            };
+            let (key, value) = (key.trim(), value.trim());
+            let values: Vec<&str> = value
+                .split(',')
+                .map(str::trim)
+                .filter(|s| !s.is_empty())
+                .collect();
+            if values.is_empty() {
+                bail!("sweep spec line {}: '{key}' has no values", lineno + 1);
+            }
+            match key {
+                "strategies" => {
+                    spec.strategies.extend(values.iter().map(|s| s.to_string()))
+                }
+                "fleets" => spec.fleets.extend(FleetPreset::parse_list(value)?),
+                "seeds" => {
+                    for v in &values {
+                        spec.seeds.push(
+                            v.parse::<u64>()
+                                .with_context(|| format!("sweep seed '{v}'"))?,
+                        );
+                    }
+                }
+                _ => match key.strip_prefix("grid.") {
+                    Some(cfg_key) if !cfg_key.is_empty() => spec.axes.push(GridAxis {
+                        key: cfg_key.to_string(),
+                        values: values.iter().map(|s| s.to_string()).collect(),
+                    }),
+                    _ => bail!(
+                        "sweep spec line {}: unknown key '{key}' \
+                         (use strategies/fleets/seeds/grid.<cfg-key>)",
+                        lineno + 1
+                    ),
+                },
+            }
+        }
+        Ok(spec)
+    }
+
+    /// Add one `--axis key=v1,v2` CLI axis.
+    pub fn push_axis(&mut self, key: &str, values: &str) -> Result<()> {
+        let values: Vec<String> = values
+            .split(',')
+            .map(str::trim)
+            .filter(|s| !s.is_empty())
+            .map(|s| s.to_string())
+            .collect();
+        if key.is_empty() || values.is_empty() {
+            bail!("--axis expects key=v1,v2,..., got '{key}={values:?}'");
+        }
+        self.axes.push(GridAxis {
+            key: key.to_string(),
+            values,
+        });
+        Ok(())
+    }
+
+    /// Total job count the grid expands to.
+    pub fn size(&self, registry: &StrategyRegistry) -> usize {
+        let strategies = if self.strategies.is_empty() {
+            registry.names().len()
+        } else {
+            self.strategies.len()
+        };
+        strategies
+            * self.fleets.len().max(1)
+            * self.seeds.len().max(1)
+            * self.axes.iter().map(|a| a.values.len()).product::<usize>()
+    }
+
+    /// Expand into concrete jobs: every strategy name is canonicalized
+    /// against `registry`, every axis value goes through
+    /// `FedConfig::set`, every job config is validated, and duplicate
+    /// content keys are rejected — all before anything executes.
+    pub fn expand(
+        &self,
+        base: &FedConfig,
+        registry: &StrategyRegistry,
+    ) -> Result<Vec<SweepJob>> {
+        let strategies: Vec<String> = if self.strategies.is_empty() {
+            registry.names().iter().map(|s| s.to_string()).collect()
+        } else {
+            self.strategies.clone()
+        };
+        // canonicalize (and reject typos) once, up front
+        let mut canonical = Vec::with_capacity(strategies.len());
+        for name in &strategies {
+            canonical.push(registry.build(name, base)?.name().to_string());
+        }
+        let fleets: Vec<FleetPreset> = if self.fleets.is_empty() {
+            vec![base.fleet.preset]
+        } else {
+            self.fleets.clone()
+        };
+        let seeds: Vec<u64> = if self.seeds.is_empty() {
+            vec![base.seed]
+        } else {
+            self.seeds.clone()
+        };
+
+        let mut jobs: Vec<SweepJob> = Vec::new();
+        let mut seen = std::collections::BTreeSet::new();
+        for strategy in &canonical {
+            for &fleet in &fleets {
+                for &seed in &seeds {
+                    for combo in cartesian(&self.axes) {
+                        let mut cfg = base.clone();
+                        cfg.fleet.preset = fleet;
+                        cfg.seed = seed;
+                        for (k, v) in &combo {
+                            cfg.set(k, v).with_context(|| {
+                                format!("sweep axis '{k}={v}'")
+                            })?;
+                        }
+                        cfg.validate().with_context(|| {
+                            format!("expanded job {strategy} fleet={} seed={seed}", fleet.name())
+                        })?;
+                        let key = run_key(strategy, &cfg);
+                        if !seen.insert(key) {
+                            bail!(
+                                "sweep grid expands to duplicate jobs \
+                                 (e.g. {strategy} seed={seed}: key {key:016x}); \
+                                 check for repeated values or a grid axis that \
+                                 overrides seed/fleet"
+                            );
+                        }
+                        jobs.push(SweepJob {
+                            idx: jobs.len(),
+                            strategy: strategy.clone(),
+                            cfg,
+                            key,
+                        });
+                    }
+                }
+            }
+        }
+        Ok(jobs)
+    }
+}
+
+/// Cartesian product of axis values, deterministic order (first axis
+/// slowest). No axes -> one empty combo.
+fn cartesian(axes: &[GridAxis]) -> Vec<Vec<(String, String)>> {
+    let mut combos: Vec<Vec<(String, String)>> = vec![Vec::new()];
+    for axis in axes {
+        let mut next = Vec::with_capacity(combos.len() * axis.values.len());
+        for combo in &combos {
+            for v in &axis.values {
+                let mut c = combo.clone();
+                c.push((axis.key.clone(), v.clone()));
+                next.push(c);
+            }
+        }
+        combos = next;
+    }
+    combos
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_spec_file_grammar() {
+        let spec = SweepSpec::parse(
+            "# budget sweep\n\
+             strategies = fedavg, fedcompress\n\
+             fleets = ideal,mobile # trailing comment\n\
+             seeds = 42,43\n\
+             grid.c_max = 8,16\n\
+             \n\
+             grid.topk_keep = 0.1\n",
+        )
+        .unwrap();
+        assert_eq!(spec.strategies, vec!["fedavg", "fedcompress"]);
+        assert_eq!(spec.fleets, vec![FleetPreset::Ideal, FleetPreset::Mobile]);
+        assert_eq!(spec.seeds, vec![42, 43]);
+        assert_eq!(spec.axes.len(), 2);
+        assert_eq!(spec.axes[0].values, vec!["8", "16"]);
+        assert_eq!(spec.size(&StrategyRegistry::builtin()), 2 * 2 * 2 * 2);
+    }
+
+    #[test]
+    fn parse_rejects_garbage() {
+        assert!(SweepSpec::parse("strategies fedavg\n").is_err());
+        assert!(SweepSpec::parse("seeds = not-a-number\n").is_err());
+        assert!(SweepSpec::parse("fleets = marsnet\n").is_err());
+        assert!(SweepSpec::parse("frobnicate = 1\n").is_err());
+        assert!(SweepSpec::parse("grid. = 1\n").is_err());
+        assert!(SweepSpec::parse("seeds =\n").is_err());
+    }
+
+    #[test]
+    fn expansion_is_deterministic_and_collision_free() {
+        let mut spec = SweepSpec {
+            strategies: vec!["fedavg".into(), "top-k".into()], // alias on purpose
+            seeds: vec![1, 2],
+            ..SweepSpec::default()
+        };
+        spec.push_axis("c_max", "16,32").unwrap();
+        let base = FedConfig::quick("cifar10");
+        let reg = StrategyRegistry::builtin();
+        let jobs = spec.expand(&base, &reg).unwrap();
+        assert_eq!(jobs.len(), 2 * 2 * 2);
+        assert_eq!(jobs.len(), spec.size(&reg));
+        // aliases canonicalize
+        assert!(jobs.iter().any(|j| j.strategy == "topk"));
+        // keys are all distinct and stable across re-expansion
+        let again = spec.expand(&base, &reg).unwrap();
+        for (a, b) in jobs.iter().zip(&again) {
+            assert_eq!(a.key, b.key);
+            assert_eq!(a.idx, b.idx);
+        }
+        // axis values landed in the configs
+        assert!(jobs.iter().any(|j| j.cfg.controller.c_max == 16));
+        assert!(jobs.iter().any(|j| j.cfg.controller.c_max == 32));
+    }
+
+    #[test]
+    fn empty_dimensions_default_sensibly() {
+        let base = FedConfig::quick("cifar10");
+        let reg = StrategyRegistry::builtin();
+        let jobs = SweepSpec::default().expand(&base, &reg).unwrap();
+        assert_eq!(jobs.len(), reg.names().len());
+        assert!(jobs.iter().all(|j| j.cfg.seed == base.seed));
+    }
+
+    #[test]
+    fn duplicate_jobs_rejected() {
+        let spec = SweepSpec {
+            strategies: vec!["fedavg".into()],
+            seeds: vec![7, 7],
+            ..SweepSpec::default()
+        };
+        let base = FedConfig::quick("cifar10");
+        let err = spec
+            .expand(&base, &StrategyRegistry::builtin())
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("duplicate"), "{err}");
+    }
+
+    #[test]
+    fn bad_axis_key_fails_at_expansion() {
+        let mut spec = SweepSpec::default();
+        spec.push_axis("nonsense", "1,2").unwrap();
+        let base = FedConfig::quick("cifar10");
+        assert!(spec.expand(&base, &StrategyRegistry::builtin()).is_err());
+    }
+}

@@ -1,8 +1,14 @@
 //! Minimal CSV writer/reader (RFC 4180 quoting) for experiment series
 //! (figure CSVs, result dumps). Reader handles quoted fields, embedded
 //! commas/quotes/newlines.
+//!
+//! `render`/`write_file` are the one shared table writer every
+//! experiment driver and the run store's `runs show --csv` path use —
+//! there is exactly one place CSV gets emitted from.
 
-use anyhow::{bail, Result};
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
 
 pub fn escape_field(s: &str) -> String {
     if s.contains([',', '"', '\n', '\r']) {
@@ -20,6 +26,29 @@ pub fn write_row(out: &mut String, fields: &[&str]) {
         out.push_str(&escape_field(f));
     }
     out.push('\n');
+}
+
+/// Render a header + data rows as one CSV document (RFC 4180 quoting).
+pub fn render(header: &[&str], rows: &[Vec<String>]) -> String {
+    let mut out = String::new();
+    write_row(&mut out, header);
+    for row in rows {
+        let fields: Vec<&str> = row.iter().map(|s| s.as_str()).collect();
+        write_row(&mut out, &fields);
+    }
+    out
+}
+
+/// Write a header + data rows to a CSV file (parent directories are
+/// created if missing).
+pub fn write_file(path: &Path, header: &[&str], rows: &[Vec<String>]) -> Result<()> {
+    if let Some(parent) = path.parent() {
+        if !parent.as_os_str().is_empty() {
+            std::fs::create_dir_all(parent)
+                .with_context(|| format!("creating {parent:?}"))?;
+        }
+    }
+    std::fs::write(path, render(header, rows)).with_context(|| format!("writing {path:?}"))
 }
 
 /// Parse CSV text into rows of fields.
@@ -114,5 +143,25 @@ mod tests {
     #[test]
     fn empty_input() {
         assert!(parse("").unwrap().is_empty());
+    }
+
+    #[test]
+    fn render_and_write_file_round_trip() {
+        let rows = vec![
+            vec!["0".to_string(), "4.5".to_string(), "plain".to_string()],
+            vec!["1".to_string(), "2.25".to_string(), "quo\"ted,x".to_string()],
+        ];
+        let text = render(&["round", "score", "note"], &rows);
+        let parsed = parse(&text).unwrap();
+        assert_eq!(parsed.len(), 3);
+        assert_eq!(parsed[0], vec!["round", "score", "note"]);
+        assert_eq!(parsed[2][2], "quo\"ted,x");
+
+        let dir = std::env::temp_dir().join("fedcompress_csv_test/nested");
+        let path = dir.join("out.csv");
+        let _ = std::fs::remove_dir_all(&dir);
+        write_file(&path, &["a", "b"], &[vec!["1".into(), "2".into()]]).unwrap();
+        let back = parse(&std::fs::read_to_string(&path).unwrap()).unwrap();
+        assert_eq!(back, vec![vec!["a", "b"], vec!["1", "2"]]);
     }
 }

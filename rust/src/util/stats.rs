@@ -86,10 +86,18 @@ impl MovingAverage {
 
 /// Pearson correlation coefficient (used to reproduce Figure 2's
 /// score<->accuracy correlation claim).
+///
+/// Degenerate inputs — fewer than two points, zero variance in either
+/// series, or any non-finite sample — return 0.0 rather than letting a
+/// NaN propagate into downstream tables and CSVs: "no measurable
+/// correlation" is the honest report for all of them.
 pub fn pearson(xs: &[f64], ys: &[f64]) -> f64 {
     assert_eq!(xs.len(), ys.len());
     let n = xs.len() as f64;
     if n < 2.0 {
+        return 0.0;
+    }
+    if xs.iter().chain(ys).any(|v| !v.is_finite()) {
         return 0.0;
     }
     let mx = xs.iter().sum::<f64>() / n;
@@ -105,7 +113,12 @@ pub fn pearson(xs: &[f64], ys: &[f64]) -> f64 {
     if sxx == 0.0 || syy == 0.0 {
         return 0.0;
     }
-    sxy / (sxx * syy).sqrt()
+    let r = sxy / (sxx * syy).sqrt();
+    if r.is_finite() {
+        r
+    } else {
+        0.0
+    }
 }
 
 /// Percentile of a sample (linear interpolation, p in [0, 100]).
@@ -163,6 +176,22 @@ mod tests {
         let zs: Vec<f64> = xs.iter().map(|x| -x).collect();
         assert!((pearson(&xs, &zs) + 1.0).abs() < 1e-12);
         assert_eq!(pearson(&xs, &[5.0, 5.0, 5.0, 5.0]), 0.0);
+    }
+
+    /// Degenerate inputs must never leak NaN into figure/table output.
+    #[test]
+    fn pearson_degenerate_inputs_return_zero() {
+        // zero variance on either side
+        assert_eq!(pearson(&[3.0, 3.0, 3.0], &[1.0, 2.0, 3.0]), 0.0);
+        assert_eq!(pearson(&[1.0, 2.0, 3.0], &[3.0, 3.0, 3.0]), 0.0);
+        // NaN / infinity in the samples
+        assert_eq!(pearson(&[1.0, f64::NAN, 3.0], &[1.0, 2.0, 3.0]), 0.0);
+        assert_eq!(pearson(&[1.0, 2.0], &[f64::INFINITY, 0.0]), 0.0);
+        // too few points
+        assert_eq!(pearson(&[1.0], &[2.0]), 0.0);
+        assert_eq!(pearson(&[], &[]), 0.0);
+        // and the guard never fires on healthy data
+        assert!(pearson(&[1.0, 2.0, 4.0], &[1.0, 3.0, 2.0]).is_finite());
     }
 
     #[test]

@@ -1,0 +1,230 @@
+//! Run-store persistence tests: bit-exact record round-trips, index
+//! rebuild from the file alone, and a corruption suite mirroring
+//! `net_proto.rs` — truncations at every cut point and bit flips at
+//! every byte must surface typed `StoreError`s, never panics.
+//!
+//! No engine needed anywhere here: records come from the sweep's
+//! `SmokeRunner`, which fabricates deterministic measurement records
+//! without PJRT.
+
+use std::path::PathBuf;
+
+use fedcompress::config::FedConfig;
+use fedcompress::store::{diff_records, key_hex, run_key, RunRecord, RunStore, StoreError};
+use fedcompress::sweep::{JobRunner, SmokeRunner, SweepJob};
+
+fn tmp(name: &str) -> PathBuf {
+    let dir = std::env::temp_dir()
+        .join("fedcompress_store_roundtrip")
+        .join(name);
+    let _ = std::fs::remove_dir_all(&dir);
+    dir
+}
+
+/// A deterministic record, no engine required.
+fn rec(strategy: &str, seed: u64) -> RunRecord {
+    let mut cfg = FedConfig::quick("cifar10");
+    cfg.seed = seed;
+    cfg.rounds = 5;
+    let job = SweepJob {
+        idx: 0,
+        strategy: strategy.to_string(),
+        cfg: cfg.clone(),
+        key: run_key(strategy, &cfg),
+    };
+    SmokeRunner.run(&job).unwrap()
+}
+
+#[test]
+fn record_serialization_is_a_fixpoint() {
+    let r = rec("fedcompress", 11);
+    let body = r.to_body_bytes();
+    let back = RunRecord::from_body_bytes(&body).unwrap();
+    assert_eq!(back.to_body_bytes(), body);
+    assert!(diff_records(&r, &back).is_identical());
+    // the config image reconstructs the exact experiment
+    let cfg = back.cfg().unwrap();
+    assert_eq!(cfg.seed, 11);
+    assert_eq!(back.key, run_key("fedcompress", &cfg));
+}
+
+#[test]
+fn store_round_trips_across_reopen() {
+    let dir = tmp("reopen");
+    let (a, b) = (rec("fedavg", 1), rec("topk", 2));
+    {
+        let mut store = RunStore::open(&dir).unwrap();
+        store.append(&a).unwrap();
+        store.append(&b).unwrap();
+        assert_eq!(store.len(), 2);
+    }
+    let store = RunStore::open(&dir).unwrap();
+    assert_eq!(store.len(), 2);
+    for r in [&a, &b] {
+        let got = store.get(r.key).unwrap().unwrap();
+        assert!(diff_records(r, &got).is_identical(), "{}", key_hex(r.key));
+    }
+    // metas carry the summary a listing needs
+    let metas = store.latest();
+    assert_eq!(metas.len(), 2);
+    assert!(metas.iter().any(|m| m.strategy == "fedavg" && m.seed == 1));
+    assert!(metas.iter().all(|m| m.rounds == 5 && m.total_bytes > 0));
+}
+
+#[test]
+fn index_is_derived_from_the_file_alone() {
+    let dir = tmp("index_rebuild");
+    let a = rec("fedzip", 3);
+    {
+        let mut store = RunStore::open(&dir).unwrap();
+        store.append(&a).unwrap();
+    }
+    // deleting the sidecar costs nothing
+    std::fs::remove_file(dir.join("index.json")).unwrap();
+    let store = RunStore::open(&dir).unwrap();
+    assert_eq!(store.len(), 1);
+    assert!(dir.join("index.json").exists(), "sidecar rewritten");
+    // corrupting the sidecar costs nothing either (it is never read)
+    std::fs::write(dir.join("index.json"), b"{not json").unwrap();
+    let store = RunStore::open(&dir).unwrap();
+    assert!(store.get(a.key).unwrap().is_some());
+}
+
+/// Truncating the record file at *every* byte offset must yield either
+/// a typed error or a clean store with fewer records (when the cut
+/// lands exactly on an entry boundary) — never a panic.
+#[test]
+fn truncation_at_every_cut_point_is_typed() {
+    let dir = tmp("truncate_src");
+    let (a, b) = (rec("fedavg", 4), rec("fedcompress", 5));
+    let boundaries = {
+        let mut store = RunStore::open(&dir).unwrap();
+        store.append(&a).unwrap();
+        store.append(&b).unwrap();
+        let metas = store.metas();
+        vec![
+            metas[0].offset as usize,
+            metas[1].offset as usize,
+            metas[1].offset as usize + metas[1].entry_len,
+        ]
+    };
+    let bytes = std::fs::read(dir.join("runs.fcr")).unwrap();
+    assert_eq!(*boundaries.last().unwrap(), bytes.len());
+
+    let cut_dir = tmp("truncate_cut");
+    std::fs::create_dir_all(&cut_dir).unwrap();
+    for cut in 0..bytes.len() {
+        std::fs::write(cut_dir.join("runs.fcr"), &bytes[..cut]).unwrap();
+        match RunStore::open(&cut_dir) {
+            Ok(store) => {
+                // only legal at an entry boundary (or bare header)
+                let expected = match cut {
+                    8 => 0,
+                    c if c == boundaries[1] => 1,
+                    c if c == boundaries[2] => 2,
+                    other => panic!("truncation at {other} silently accepted"),
+                };
+                assert_eq!(store.len(), expected, "cut at {cut}");
+            }
+            Err(
+                StoreError::Truncated { .. }
+                | StoreError::BadMagic { .. }
+                | StoreError::UnsupportedVersion { .. }
+                | StoreError::Oversized { .. }
+                | StoreError::ChecksumMismatch { .. },
+            ) => {}
+            Err(other) => panic!("cut at {cut}: unexpected error kind {other:?}"),
+        }
+    }
+}
+
+/// Flipping any single byte of the store must surface a typed error
+/// (header fields, entry framing, body bytes, checksums — everything
+/// is covered by magic, caps, or FNV).
+#[test]
+fn every_bit_flip_is_detected() {
+    let dir = tmp("bitflip_src");
+    let a = rec("topk", 6);
+    {
+        let mut store = RunStore::open(&dir).unwrap();
+        store.append(&a).unwrap();
+    }
+    let bytes = std::fs::read(dir.join("runs.fcr")).unwrap();
+    let flip_dir = tmp("bitflip_cut");
+    std::fs::create_dir_all(&flip_dir).unwrap();
+    for i in 0..bytes.len() {
+        let mut corrupt = bytes.clone();
+        corrupt[i] ^= 0x40;
+        std::fs::write(flip_dir.join("runs.fcr"), &corrupt).unwrap();
+        match RunStore::open(&flip_dir) {
+            Ok(_) => panic!("flip at byte {i} went undetected"),
+            Err(StoreError::Io(e)) => panic!("flip at byte {i}: io error {e}"),
+            Err(_) => {} // any typed corruption error is correct
+        }
+    }
+}
+
+#[test]
+fn oversized_and_foreign_files_are_rejected() {
+    let dir = tmp("foreign");
+    std::fs::create_dir_all(&dir).unwrap();
+    // a foreign file
+    std::fs::write(dir.join("runs.fcr"), b"GIF89a-not-a-store").unwrap();
+    assert!(matches!(
+        RunStore::open(&dir),
+        Err(StoreError::BadMagic { .. })
+    ));
+    // valid header, absurd entry length
+    let mut bytes = Vec::new();
+    bytes.extend_from_slice(b"FCST");
+    bytes.extend_from_slice(&1u32.to_le_bytes());
+    bytes.extend_from_slice(b"FCRE");
+    bytes.extend_from_slice(&u32::MAX.to_le_bytes());
+    bytes.extend_from_slice(&[0u8; 64]);
+    std::fs::write(dir.join("runs.fcr"), &bytes).unwrap();
+    assert!(matches!(
+        RunStore::open(&dir),
+        Err(StoreError::Oversized { .. })
+    ));
+    // future format version
+    let mut bytes = Vec::new();
+    bytes.extend_from_slice(b"FCST");
+    bytes.extend_from_slice(&9u32.to_le_bytes());
+    std::fs::write(dir.join("runs.fcr"), &bytes).unwrap();
+    assert!(matches!(
+        RunStore::open(&dir),
+        Err(StoreError::UnsupportedVersion { got: 9 })
+    ));
+}
+
+#[test]
+fn diff_reports_drift_fields_and_ignores_environment() {
+    let a = rec("fedcompress", 7);
+    // a faithful re-execution: same content, different wall/timestamp
+    let mut b = rec("fedcompress", 7);
+    b.created_unix = a.created_unix + 3600;
+    for r in &mut b.rounds {
+        r.wall_ms += 123.0;
+    }
+    assert!(diff_records(&a, &b).is_identical());
+
+    let mut c = rec("fedcompress", 7);
+    c.rounds[1].up_bytes += 1;
+    c.final_accuracy += 1e-12;
+    let d = diff_records(&a, &c);
+    assert_eq!(d.fields.len(), 2);
+    assert!(d.fields[0].contains("rounds[1]"), "{:?}", d.fields);
+    assert!(d.fields[1].contains("final_accuracy"), "{:?}", d.fields);
+}
+
+#[test]
+fn key_prefix_resolution_for_cli() {
+    let dir = tmp("resolve");
+    let mut store = RunStore::open(&dir).unwrap();
+    let a = rec("fedavg", 8);
+    store.append(&a).unwrap();
+    let hex = key_hex(a.key);
+    assert_eq!(store.resolve(&hex).unwrap(), a.key);
+    assert_eq!(store.resolve(&hex[..8]).unwrap(), a.key);
+    assert!(store.resolve("ffffffffffffffff").is_err() || a.key == u64::MAX);
+}

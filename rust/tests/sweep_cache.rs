@@ -1,0 +1,190 @@
+//! Sweep orchestrator tests: resume-by-cache (re-running an identical
+//! sweep executes nothing), zero drift between independently swept
+//! stores, spec-file expansion, and the bench export — all on the
+//! engine-free `SmokeRunner`. The engine-gated case at the bottom
+//! proves the real `exp::fleet` table is deterministic through the
+//! store cache (identical rows, second pass all cache hits).
+
+use std::path::{Path, PathBuf};
+use std::sync::Mutex;
+
+use fedcompress::baselines::registry::StrategyRegistry;
+use fedcompress::config::FedConfig;
+use fedcompress::store::{diff_records, export, RunStore};
+use fedcompress::sweep::{run_sweep, SmokeRunner, SweepEvent, SweepOutcome, SweepSpec};
+use fedcompress::util::json::Json;
+
+fn tmp(name: &str) -> PathBuf {
+    let dir = std::env::temp_dir()
+        .join("fedcompress_sweep_cache")
+        .join(name);
+    let _ = std::fs::remove_dir_all(&dir);
+    dir
+}
+
+fn quiet(_: SweepEvent) {}
+
+fn grid() -> (FedConfig, SweepSpec) {
+    let mut cfg = FedConfig::quick("cifar10");
+    cfg.rounds = 4;
+    let spec = SweepSpec {
+        strategies: vec!["fedavg".into(), "fedcompress".into(), "topk".into()],
+        seeds: vec![41, 42],
+        ..SweepSpec::default()
+    };
+    (cfg, spec)
+}
+
+fn sweep_into(dir: &Path) -> (RunStore, SweepOutcome) {
+    let (cfg, spec) = grid();
+    let jobs = spec.expand(&cfg, &StrategyRegistry::builtin()).unwrap();
+    let mut store = RunStore::open(dir).unwrap();
+    let out = run_sweep(&jobs, &mut store, &SmokeRunner, 4, false, &quiet).unwrap();
+    (store, out)
+}
+
+/// The acceptance criterion: re-running an identical sweep hits the
+/// record cache for every job (zero re-execution), and `runs diff`
+/// between the two store states reports zero drift on every key.
+#[test]
+fn identical_sweeps_cache_fully_and_never_drift() {
+    let dir_a = tmp("drift_a");
+    let dir_b = tmp("drift_b");
+    let (mut store_a, first) = sweep_into(&dir_a);
+    assert_eq!(first.executed, 6);
+    assert_eq!(first.cached, 0);
+    assert_eq!(first.failed, 0);
+
+    // same sweep, same store: zero re-execution
+    let (cfg, spec) = grid();
+    let jobs = spec.expand(&cfg, &StrategyRegistry::builtin()).unwrap();
+    let second = run_sweep(&jobs, &mut store_a, &SmokeRunner, 4, false, &quiet).unwrap();
+    assert_eq!(second.executed, 0, "cache must absorb every job");
+    assert_eq!(second.cached, 6);
+
+    // same sweep, independent store: every shared key bit-identical
+    let (store_b, _) = sweep_into(&dir_b);
+    assert_eq!(store_a.keys(), store_b.keys());
+    for key in store_a.keys() {
+        let a = store_a.get(key).unwrap().unwrap();
+        let b = store_b.get(key).unwrap().unwrap();
+        let d = diff_records(&a, &b);
+        assert!(d.is_identical(), "key {key:016x} drifted: {:?}", d.fields);
+    }
+}
+
+#[test]
+fn progress_stream_reports_cache_hits() {
+    let dir = tmp("progress");
+    let (mut store, _) = sweep_into(&dir);
+    let (cfg, spec) = grid();
+    let jobs = spec.expand(&cfg, &StrategyRegistry::builtin()).unwrap();
+    let cached_seen = Mutex::new(0usize);
+    run_sweep(&jobs, &mut store, &SmokeRunner, 2, false, &|e| {
+        if let SweepEvent::JobDone { cached: true, .. } = e {
+            *cached_seen.lock().unwrap() += 1;
+        }
+    })
+    .unwrap();
+    assert_eq!(*cached_seen.lock().unwrap(), jobs.len());
+}
+
+#[test]
+fn spec_file_drives_the_same_pipeline() {
+    let dir = tmp("specfile");
+    std::fs::create_dir_all(&dir).unwrap();
+    let spec_path = dir.join("grid.sweep");
+    std::fs::write(
+        &spec_path,
+        "# smoke grid\nstrategies = fedavg,fedzip\nseeds = 1,2\ngrid.c_max = 16,32\n",
+    )
+    .unwrap();
+    let spec = SweepSpec::from_file(&spec_path).unwrap();
+    let cfg = FedConfig::quick("cifar10");
+    let jobs = spec.expand(&cfg, &StrategyRegistry::builtin()).unwrap();
+    assert_eq!(jobs.len(), 2 * 2 * 2);
+    let mut store = RunStore::open(&dir.join("store")).unwrap();
+    let out = run_sweep(&jobs, &mut store, &SmokeRunner, 4, false, &quiet).unwrap();
+    assert_eq!(out.executed, 8);
+    // the swept axis really landed in the stored configs
+    let mut c_maxes: Vec<usize> = store
+        .keys()
+        .into_iter()
+        .map(|k| store.get(k).unwrap().unwrap().cfg().unwrap().controller.c_max)
+        .collect();
+    c_maxes.sort_unstable();
+    c_maxes.dedup();
+    assert_eq!(c_maxes, vec![16, 32]);
+}
+
+#[test]
+fn export_bench_summarizes_the_sweep() {
+    let dir = tmp("bench");
+    let (store, _) = sweep_into(&dir);
+    let out = dir.join("BENCH_sweep.json");
+    export::write_bench_json(&store, &out).unwrap();
+    let doc = Json::parse(std::fs::read_to_string(&out).unwrap().trim()).unwrap();
+    assert_eq!(doc.get("bench").unwrap().as_str().unwrap(), "sweep");
+    assert_eq!(doc.get("records").unwrap().as_usize().unwrap(), 6);
+    let runs = doc.get("runs").unwrap().as_arr().unwrap();
+    assert_eq!(runs.len(), 6);
+    for r in runs {
+        assert!(r.get("final_accuracy").unwrap().as_f64().unwrap() > 0.0);
+        assert!(r.get("total_bytes").unwrap().as_usize().unwrap() > 0);
+    }
+    let by = doc.get("by_strategy").unwrap();
+    for name in ["fedavg", "fedcompress", "topk"] {
+        let g = by.get(name).unwrap();
+        assert_eq!(g.get("runs").unwrap().as_usize().unwrap(), 2, "{name}");
+    }
+}
+
+// ---------------------------------------------------------------------------
+// engine-gated: the real fleet table through the store cache
+// ---------------------------------------------------------------------------
+
+fn engine() -> Option<fedcompress::runtime::Engine> {
+    let d = fedcompress::runtime::artifacts::default_dir();
+    if !d.join("manifest.json").exists() {
+        eprintln!("skipping: artifacts not built");
+        return None;
+    }
+    Some(fedcompress::runtime::Engine::load(&d).unwrap())
+}
+
+/// Satellite guarantee: the same seed + preset produce identical
+/// `FleetRow`s twice, with the second pass served entirely from the
+/// run store (cache-hit asserted, zero re-execution).
+#[test]
+fn fleet_table_is_deterministic_through_store_cache() {
+    let Some(engine) = engine() else { return };
+    let mut cfg = FedConfig::quick("cifar10");
+    cfg.rounds = 3;
+    cfg.clients = 3;
+    cfg.local_epochs = 2;
+    cfg.server_epochs = 1;
+    cfg.train_size = 192;
+    cfg.test_size = 96;
+    cfg.ood_size = 64;
+    cfg.unlabeled_per_client = 16;
+    cfg.warmup_rounds = 1;
+    cfg.validate().unwrap();
+
+    let dir = tmp("fleet_cache");
+    let mut store = RunStore::open(&dir).unwrap();
+    let presets = [fedcompress::sim::FleetPreset::Ideal];
+    let n_strategies = StrategyRegistry::builtin().names().len();
+
+    let (first, stats) =
+        fedcompress::exp::fleet::run_cached(&engine, &cfg, &presets, Some(&mut store)).unwrap();
+    assert_eq!(stats.hits, 0);
+    assert_eq!(stats.misses, n_strategies);
+    assert_eq!(store.len(), n_strategies);
+
+    let (second, stats) =
+        fedcompress::exp::fleet::run_cached(&engine, &cfg, &presets, Some(&mut store)).unwrap();
+    assert_eq!(stats.misses, 0, "second pass must not re-execute");
+    assert_eq!(stats.hits, n_strategies);
+    assert_eq!(first, second, "identical FleetRows through the cache");
+    assert_eq!(store.len(), n_strategies, "no new records");
+}
