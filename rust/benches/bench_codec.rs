@@ -1,16 +1,68 @@
 //! Codec hot-path benchmarks: encode/decode of clustered model updates
 //! at realistic model sizes — the L3 coordinator pays this per client
-//! per round in both directions.
+//! per round in both directions — plus the registry-built pipelines
+//! (per-stage primitives and full `topk|kmeans|huffman`-style stacks)
+//! the strategies now declare.
 
 use fedcompress::bench::{bench, report_throughput};
+use fedcompress::clustering::CentroidState;
+use fedcompress::codec::{Codec, CodecInput, CodecRegistry};
 use fedcompress::compression::codec::{decode, encode, quantize_and_encode};
 use fedcompress::compression::huffman::{huffman_decode, huffman_encode};
 use fedcompress::compression::kmeans::kmeans_1d;
 use fedcompress::util::rng::Rng;
 use std::hint::black_box;
 
+/// Registry pipelines: encode + decode MiB/s per spec, at one
+/// realistic model size. Dense-input MiB are the throughput unit for
+/// encode; payload MiB for decode.
+fn bench_pipelines(rng: &mut Rng) {
+    let p = 19_674usize;
+    let theta: Vec<f32> = (0..p).map(|_| rng.normal() * 0.2).collect();
+    let cents = CentroidState::init_from_weights(&theta, 16, 32, rng);
+    let reg = CodecRegistry::builtin();
+
+    for spec in [
+        "dense",
+        "topk(keep=0.1)",
+        "kmeans(c=16,iters=25)",
+        "codebook",
+        "topk(keep=0.6)|kmeans(c=15,iters=25)|huffman",
+        "codebook|huffman",
+        "codebook|delta",
+    ] {
+        let pipe = reg.build(spec).unwrap();
+        let input = CodecInput {
+            theta: &theta,
+            centroids: Some(&cents),
+            stream: fedcompress::codec::stream::FINAL,
+        };
+        let r = bench(&format!("pipe_encode[{spec}]"), || {
+            let mut enc_rng = Rng::new(7);
+            let blob = pipe.encode(black_box(&input), &mut enc_rng).unwrap();
+            black_box(blob.payload.len());
+        });
+        report_throughput(&r, 4 * p);
+
+        // the decode-bench blob comes from a FRESH sender instance:
+        // the loop above advanced `pipe`'s delta stream state, and a
+        // residual blob would be undecodable by a cold peer. A fresh
+        // sender ships the flat baseline form, which a fresh peer
+        // decodes repeatedly without needing stream history.
+        let blob = reg.build(spec).unwrap().encode(&input, &mut Rng::new(7)).unwrap();
+        let peer = reg.build(spec).unwrap();
+        peer.decode(&blob.payload).unwrap();
+        let r = bench(&format!("pipe_decode[{spec}]"), || {
+            let out = peer.decode(black_box(&blob.payload)).unwrap();
+            black_box(out.len());
+        });
+        report_throughput(&r, blob.payload.len());
+    }
+}
+
 fn main() {
     let mut rng = Rng::new(1);
+    bench_pipelines(&mut rng);
     for &(p, c) in &[(19_674usize, 16usize), (19_674, 32), (100_000, 16)] {
         let weights: Vec<f32> = (0..p).map(|_| rng.normal() * 0.2).collect();
         let (cb, _, _) = kmeans_1d(&weights, c, 25, &mut rng);

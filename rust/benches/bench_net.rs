@@ -6,8 +6,8 @@
 use std::net::{TcpListener, TcpStream};
 use std::thread;
 
-use fedcompress::baselines::wire::WireCodec;
 use fedcompress::bench::bench;
+use fedcompress::codec::StageBytes;
 use fedcompress::net::frame::{encode_frame, framed_len, read_frame, write_frame};
 use fedcompress::net::proto::{Msg, Upload};
 use fedcompress::util::rng::Rng;
@@ -50,7 +50,17 @@ fn main() {
         n: 96,
         mean_ce: 1.25,
         mu: (0..32).map(|_| rng.normal()).collect(),
-        codec: WireCodec::Clustered,
+        stages: vec![
+            StageBytes {
+                stage: "codebook".to_string(),
+                bytes: 24_000,
+            },
+            StageBytes {
+                stage: "huffman".to_string(),
+                bytes: 20_000,
+            },
+        ],
+        spec: "codebook|huffman".to_string(),
         payload: payload.clone(),
     });
     let encoded = {

@@ -1,17 +1,33 @@
 //! FedAvg (McMahan 2017) as a strategy plugin: dense f32 both
 //! directions, plain CE training, unmodified sample-count aggregation.
 //! The baseline every Table-1 ratio is measured against.
+//!
+//! Declares the `dense` codec pipeline for every direction; a `--codec
+//! <spec>` override swaps the upload pipeline in once warmup ends
+//! (turning FedAvg into a compressed-upload variant without touching
+//! this file).
 
 use anyhow::Result;
 
-use super::wire::WireBlob;
+use super::wire::{upload_pipeline, WireBlob};
+use crate::codec::{stream, CodecInput, Pipeline};
 use crate::compression::codec::dense_bytes;
 use crate::coordinator::strategy::{
     FedStrategy, FinalModel, RoundContext, ServerEnv, ServerModel, UploadInput,
 };
 use crate::util::rng::Rng;
 
-pub struct FedAvg;
+pub struct FedAvg {
+    upload: Pipeline,
+}
+
+impl FedAvg {
+    pub fn new(cfg: &crate::config::FedConfig) -> Result<FedAvg> {
+        Ok(FedAvg {
+            upload: upload_pipeline(cfg, "dense")?,
+        })
+    }
+}
 
 impl FedStrategy for FedAvg {
     fn name(&self) -> &'static str {
@@ -24,11 +40,22 @@ impl FedStrategy for FedAvg {
 
     fn encode_upload(
         &self,
-        _ctx: &RoundContext<'_>,
+        ctx: &RoundContext<'_>,
         input: &UploadInput<'_>,
-        _rng: &mut Rng,
+        rng: &mut Rng,
     ) -> Result<WireBlob> {
-        Ok(WireBlob::dense(input.theta))
+        if !ctx.compressing {
+            return Ok(WireBlob::dense(input.theta));
+        }
+        WireBlob::encode(
+            &self.upload,
+            &CodecInput {
+                theta: input.theta,
+                centroids: Some(input.centroids),
+                stream: stream::upload(input.client),
+            },
+            rng,
+        )
     }
 
     fn finalize(&self, _env: &ServerEnv<'_>, model: &ServerModel) -> Result<FinalModel> {

@@ -14,11 +14,11 @@
 
 use anyhow::Result;
 
-use super::wire::{codebook_blob, WireBlob};
+use super::wire::{upload_pipeline, WireBlob};
 use crate::client::trainer::evaluate;
 use crate::clustering::{CentroidState, ClusterController};
+use crate::codec::{stream, CodecInput, CodecRegistry, Pipeline};
 use crate::compression::codec::quantize_and_encode;
-use crate::compression::kmeans::kmeans_1d;
 use crate::config::FedConfig;
 use crate::coordinator::events::{Event, EventLog};
 use crate::coordinator::strategy::{
@@ -80,16 +80,24 @@ fn self_compress(
 }
 
 /// Full FedCompress: weight-clustered training, snapped wire both
-/// directions, SCS, dynamic cluster count.
+/// directions (the declared `codebook|huffman` pipeline), SCS, dynamic
+/// cluster count. `--codec <spec>` swaps the upload pipeline; the
+/// downstream keeps the strategy's declared codec (SCS guarantees the
+/// dispatched model is centroid-structured, which is what makes the
+/// snap lossless there).
 pub struct FedCompress {
     controller: ClusterController,
+    download: Pipeline,
+    upload: Pipeline,
 }
 
 impl FedCompress {
-    pub fn new(cfg: &FedConfig) -> FedCompress {
-        FedCompress {
+    pub fn new(cfg: &FedConfig) -> Result<FedCompress> {
+        Ok(FedCompress {
             controller: ClusterController::new(cfg.controller.clone()),
-        }
+            download: CodecRegistry::builtin().build("codebook|huffman")?,
+            upload: upload_pipeline(cfg, "codebook|huffman")?,
+        })
     }
 }
 
@@ -135,21 +143,35 @@ impl FedStrategy for FedCompress {
         if !ctx.down_compressed {
             return Ok(WireBlob::dense(&model.theta));
         }
-        codebook_blob(&model.theta, &model.centroids)
+        let input = CodecInput {
+            theta: &model.theta,
+            centroids: Some(&model.centroids),
+            stream: stream::DOWNLOAD,
+        };
+        // no stage of the declared pipeline draws randomness
+        WireBlob::encode(&self.download, &input, &mut Rng::new(0))
     }
 
     fn encode_upload(
         &self,
         ctx: &RoundContext<'_>,
         input: &UploadInput<'_>,
-        _rng: &mut Rng,
+        rng: &mut Rng,
     ) -> Result<WireBlob> {
         // dense during warmup; snapped to the client's learned
         // centroids afterwards
         if !ctx.compressing {
             return Ok(WireBlob::dense(input.theta));
         }
-        codebook_blob(input.theta, input.centroids)
+        WireBlob::encode(
+            &self.upload,
+            &CodecInput {
+                theta: input.theta,
+                centroids: Some(input.centroids),
+                stream: stream::upload(input.client),
+            },
+            rng,
+        )
     }
 
     fn aggregate(
@@ -210,18 +232,43 @@ impl FedStrategy for FedCompress {
         Ok(())
     }
 
-    fn finalize(&self, _env: &ServerEnv<'_>, model: &ServerModel) -> Result<FinalModel> {
-        let codebook = model.centroids.active_codebook();
-        let (enc, theta) = quantize_and_encode(&model.theta, &codebook);
+    fn finalize(&self, env: &ServerEnv<'_>, model: &ServerModel) -> Result<FinalModel> {
+        let mut rng = env.base.fork(9_999);
+        let blob = WireBlob::encode(
+            &self.upload,
+            &CodecInput {
+                theta: &model.theta,
+                centroids: Some(&model.centroids),
+                stream: stream::FINAL,
+            },
+            &mut rng,
+        )?;
         Ok(FinalModel {
-            theta,
-            wire_bytes: enc.wire_bytes(),
+            theta: blob.theta,
+            wire_bytes: blob.bytes,
         })
     }
 }
 
 /// Ablation: weight-clustered training without server re-clustering.
-pub struct FedCompressNoScs;
+/// Dense on the wire during training (CCR ~ 1); only the *final* model
+/// is compressed, through the declared `kmeans|huffman` pipeline at
+/// the controller's floor C.
+pub struct FedCompressNoScs {
+    upload: Pipeline,
+    final_codec: Pipeline,
+}
+
+impl FedCompressNoScs {
+    pub fn new(cfg: &FedConfig) -> Result<FedCompressNoScs> {
+        let c = cfg.controller.c_min.max(8);
+        Ok(FedCompressNoScs {
+            upload: upload_pipeline(cfg, "dense")?,
+            final_codec: CodecRegistry::builtin()
+                .build(&format!("kmeans(c={c},iters=25)|huffman"))?,
+        })
+    }
+}
 
 impl FedStrategy for FedCompressNoScs {
     fn name(&self) -> &'static str {
@@ -240,11 +287,22 @@ impl FedStrategy for FedCompressNoScs {
 
     fn encode_upload(
         &self,
-        _ctx: &RoundContext<'_>,
+        ctx: &RoundContext<'_>,
         input: &UploadInput<'_>,
-        _rng: &mut Rng,
+        rng: &mut Rng,
     ) -> Result<WireBlob> {
-        Ok(WireBlob::dense(input.theta))
+        if !ctx.compressing {
+            return Ok(WireBlob::dense(input.theta));
+        }
+        WireBlob::encode(
+            &self.upload,
+            &CodecInput {
+                theta: input.theta,
+                centroids: Some(input.centroids),
+                stream: stream::upload(input.client),
+            },
+            rng,
+        )
     }
 
     fn aggregate(
@@ -262,11 +320,18 @@ impl FedStrategy for FedCompressNoScs {
         // final-model-only compression: k-means at the controller's
         // floor C (training never grew it — no score feedback loop)
         let mut rng = env.base.fork(9_998);
-        let (cb, _, _) = kmeans_1d(&model.theta, env.cfg.controller.c_min.max(8), 25, &mut rng);
-        let (enc, theta) = quantize_and_encode(&model.theta, &cb);
+        let blob = WireBlob::encode(
+            &self.final_codec,
+            &CodecInput {
+                theta: &model.theta,
+                centroids: Some(&model.centroids),
+                stream: stream::FINAL,
+            },
+            &mut rng,
+        )?;
         Ok(FinalModel {
-            theta,
-            wire_bytes: enc.wire_bytes(),
+            theta: blob.theta,
+            wire_bytes: blob.bytes,
         })
     }
 }

@@ -2,16 +2,42 @@
 //! prune -> per-upload k-means (fixed cluster count, 15 in the paper)
 //! -> Huffman; downstream stays dense (FedZip only optimizes the
 //! client->server direction). Clients train plain CE.
+//!
+//! The upload path is *declared*, not hand-rolled: literally the
+//! `topk(keep)|kmeans(c,iters=25)|huffman` pipeline built from codec
+//! registry parts (byte-identical to the historical encoder — same
+//! prune, same k-means fit on the same RNG stream, same adaptive
+//! entropy coding). `--codec <spec>` swaps in any other pipeline.
 
 use anyhow::Result;
 
-use super::wire::{kmeans_blob, WireBlob};
+use super::wire::{upload_pipeline, WireBlob};
+use crate::codec::{stream, CodecInput, Pipeline};
+use crate::config::FedConfig;
 use crate::coordinator::strategy::{
     FedStrategy, FinalModel, RoundContext, ServerEnv, ServerModel, UploadInput,
 };
 use crate::util::rng::Rng;
 
-pub struct FedZip;
+/// FedZip's declared upload pipeline for a config.
+pub fn default_spec(cfg: &FedConfig) -> String {
+    format!(
+        "topk(keep={})|kmeans(c={},iters=25)|huffman",
+        cfg.fedzip_keep, cfg.fedzip_clusters
+    )
+}
+
+pub struct FedZip {
+    upload: Pipeline,
+}
+
+impl FedZip {
+    pub fn new(cfg: &FedConfig) -> Result<FedZip> {
+        Ok(FedZip {
+            upload: upload_pipeline(cfg, &default_spec(cfg))?,
+        })
+    }
+}
 
 impl FedStrategy for FedZip {
     fn name(&self) -> &'static str {
@@ -24,24 +50,30 @@ impl FedStrategy for FedZip {
 
     fn encode_upload(
         &self,
-        ctx: &RoundContext<'_>,
+        _ctx: &RoundContext<'_>,
         input: &UploadInput<'_>,
         rng: &mut Rng,
     ) -> Result<WireBlob> {
-        kmeans_blob(
-            input.theta,
-            ctx.cfg.fedzip_clusters,
-            ctx.cfg.fedzip_keep,
+        WireBlob::encode(
+            &self.upload,
+            &CodecInput {
+                theta: input.theta,
+                centroids: Some(input.centroids),
+                stream: stream::upload(input.client),
+            },
             rng,
         )
     }
 
     fn finalize(&self, env: &ServerEnv<'_>, model: &ServerModel) -> Result<FinalModel> {
         let mut rng = env.base.fork(9_999);
-        let blob = kmeans_blob(
-            &model.theta,
-            env.cfg.fedzip_clusters,
-            env.cfg.fedzip_keep,
+        let blob = WireBlob::encode(
+            &self.upload,
+            &CodecInput {
+                theta: &model.theta,
+                centroids: Some(&model.centroids),
+                stream: stream::FINAL,
+            },
             &mut rng,
         )?;
         Ok(FinalModel {

@@ -6,6 +6,12 @@
 //! is running — the paper's compatibility claim (the aggregation rule
 //! and round loop stay identical) is now a structural property.
 //!
+//! Wire policy is *declared*, not hand-rolled: every strategy builds
+//! [`crate::codec`] pipelines from registry parts at construction
+//! (`fedzip` is literally `topk|kmeans|huffman`) and `--codec <spec>`
+//! swaps the compressed-upload pipeline of any strategy, so pipelines
+//! sweep orthogonally to strategies.
+//!
 //! * [`fedavg`]      — dense FedAvg baseline.
 //! * [`fedzip`]      — pruned + clustered + Huffman uploads (Malekijoo 2021).
 //! * [`fedcompress`] — the paper's method and its no-SCS ablation.
@@ -20,4 +26,4 @@ pub mod topk;
 pub mod wire;
 
 pub use registry::{StrategyInfo, StrategyRegistry};
-pub use wire::{WireBlob, WireCodec, WirePayloadMismatch, WireSizeMismatch};
+pub use wire::{WireBlob, WirePayloadMismatch, WireSizeMismatch};

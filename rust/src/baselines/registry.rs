@@ -11,9 +11,12 @@ use super::fedzip::FedZip;
 use super::topk::TopK;
 use crate::config::FedConfig;
 use crate::coordinator::strategy::FedStrategy;
+use crate::util::suggest;
 
 /// Constructor: a fresh, single-run strategy instance for a config.
-pub type StrategyCtor = fn(&FedConfig) -> Box<dyn FedStrategy>;
+/// Fallible so strategies can resolve their declared codec pipelines
+/// (and the `--codec` override) at construction with a typed error.
+pub type StrategyCtor = fn(&FedConfig) -> Result<Box<dyn FedStrategy>>;
 
 pub struct StrategyInfo {
     pub name: &'static str,
@@ -42,35 +45,35 @@ impl StrategyRegistry {
             name: "fedavg",
             aliases: &[],
             description: "dense FedAvg baseline (f32 both directions)",
-            ctor: |_cfg| Box::new(FedAvg),
+            ctor: |cfg| Ok(Box::new(FedAvg::new(cfg)?)),
         })
         .unwrap();
         r.register(StrategyInfo {
             name: "fedzip",
             aliases: &[],
             description: "magnitude prune + k-means + Huffman uploads, dense downstream",
-            ctor: |_cfg| Box::new(FedZip),
+            ctor: |cfg| Ok(Box::new(FedZip::new(cfg)?)),
         })
         .unwrap();
         r.register(StrategyInfo {
             name: "fedcompress-noscs",
             aliases: &["noscs"],
             description: "weight-clustered training without server self-compression (ablation)",
-            ctor: |_cfg| Box::new(FedCompressNoScs),
+            ctor: |cfg| Ok(Box::new(FedCompressNoScs::new(cfg)?)),
         })
         .unwrap();
         r.register(StrategyInfo {
             name: "fedcompress",
             aliases: &[],
             description: "adaptive weight clustering + server-side distillation (the paper)",
-            ctor: |cfg| Box::new(FedCompress::new(cfg)),
+            ctor: |cfg| Ok(Box::new(FedCompress::new(cfg)?)),
         })
         .unwrap();
         r.register(StrategyInfo {
             name: "topk",
             aliases: &["top-k"],
             description: "top-k magnitude sparsification uploads, dense downstream",
-            ctor: |_cfg| Box::new(TopK),
+            ctor: |cfg| Ok(Box::new(TopK::new(cfg)?)),
         })
         .unwrap();
         r
@@ -113,7 +116,7 @@ impl StrategyRegistry {
         let want = name.to_ascii_lowercase();
         for e in &self.entries {
             if e.name == want || e.aliases.contains(&want.as_str()) {
-                return Ok((e.ctor)(cfg));
+                return (e.ctor)(cfg);
             }
         }
         let known = self.names().join(", ");
@@ -126,23 +129,15 @@ impl StrategyRegistry {
     }
 
     /// Closest registered name/alias by edit distance, if plausibly a
-    /// typo (distance <= half the query length, minimum 1).
+    /// typo (shared `util::suggest` machinery — same behavior as the
+    /// codec registry's unknown-name errors).
     pub fn suggest(&self, name: &str) -> Option<&'static str> {
-        let mut best: Option<(usize, &'static str)> = None;
-        for e in &self.entries {
-            for &cand in std::iter::once(&e.name).chain(e.aliases.iter()) {
-                let d = levenshtein(name, cand);
-                let better = match best {
-                    None => true,
-                    Some((bd, _)) => d < bd,
-                };
-                if better {
-                    best = Some((d, cand));
-                }
-            }
-        }
-        let (d, cand) = best?;
-        (d <= (name.len() / 2).max(1)).then_some(cand)
+        suggest::closest(
+            name,
+            self.entries
+                .iter()
+                .flat_map(|e| std::iter::once(e.name).chain(e.aliases.iter().copied())),
+        )
     }
 
     /// Render the `--strategy list` table.
@@ -158,23 +153,6 @@ impl StrategyRegistry {
         }
         s
     }
-}
-
-/// Plain O(nm) Levenshtein edit distance (names are short).
-fn levenshtein(a: &str, b: &str) -> usize {
-    let a: Vec<char> = a.chars().collect();
-    let b: Vec<char> = b.chars().collect();
-    let mut prev: Vec<usize> = (0..=b.len()).collect();
-    let mut cur = vec![0usize; b.len() + 1];
-    for (i, &ca) in a.iter().enumerate() {
-        cur[0] = i + 1;
-        for (j, &cb) in b.iter().enumerate() {
-            let sub = prev[j] + usize::from(ca != cb);
-            cur[j + 1] = sub.min(prev[j + 1] + 1).min(cur[j] + 1);
-        }
-        std::mem::swap(&mut prev, &mut cur);
-    }
-    prev[b.len()]
 }
 
 #[cfg(test)]
@@ -217,17 +195,26 @@ mod tests {
             name: "fedavg",
             aliases: &[],
             description: "dup",
-            ctor: |_| Box::new(FedAvg),
+            ctor: |cfg| Ok(Box::new(FedAvg::new(cfg)?)),
         };
         assert!(reg.register(dup).is_err());
     }
 
+    /// A `--codec` override flows from the config into every built-in
+    /// strategy's upload pipeline at construction; a bad spec fails
+    /// with the codec registry's suggestion.
     #[test]
-    fn levenshtein_basics() {
-        assert_eq!(levenshtein("", "abc"), 3);
-        assert_eq!(levenshtein("abc", "abc"), 0);
-        assert_eq!(levenshtein("fedzip", "fedavg"), 3);
-        assert_eq!(levenshtein("topk", "top-k"), 1);
+    fn codec_override_resolves_or_fails_at_build() {
+        let reg = StrategyRegistry::builtin();
+        let mut cfg = FedConfig::quick("cifar10");
+        cfg.codec = "topk(keep=0.2)|kmeans(c=8,iters=10)|huffman".to_string();
+        for name in reg.names() {
+            reg.build(name, &cfg)
+                .unwrap_or_else(|e| panic!("{name} with --codec override: {e}"));
+        }
+        cfg.codec = "topk|hufman".to_string();
+        let err = reg.build("fedavg", &cfg).unwrap_err().to_string();
+        assert!(err.contains("did you mean 'huffman'"), "{err}");
     }
 
     #[test]

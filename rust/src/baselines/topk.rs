@@ -1,29 +1,28 @@
 //! Top-k sparsification baseline — the "prove the API is open" plugin:
-//! a genuinely new strategy built on the existing `sparsify` + `bitio`
-//! machinery without touching the coordinator.
+//! a genuinely new strategy built without touching the coordinator.
 //!
 //! Upstream, each client keeps only the top `topk_keep` fraction of
-//! weights by magnitude and ships (position, value) pairs: positions
-//! bit-packed at ceil(log2 n) bits, values as raw f32. Downstream stays
-//! dense (like FedZip). The final deliverable is the sparse-encoded
-//! aggregate. Clients train plain CE.
+//! weights by magnitude and ships (position, value) pairs; downstream
+//! stays dense (like FedZip). The final deliverable is the
+//! sparse-encoded aggregate. Clients train plain CE.
 //!
-//! Wire layout (little-endian):
-//!   u32 magic 'FCS1' | u32 n | u32 k | u8 bits |
-//!   bit-packed positions (k * bits, LSB-first) | f32 values[k]
+//! The wire format lives in the codec layer now
+//! ([`crate::codec::stages::TopkStage`], registered as `topk`): the
+//! strategy just declares the single-stage `topk(keep=...)` pipeline.
+//! [`encode_topk`]/[`decode_topk`] remain as one-shot helpers over the
+//! same stage machinery.
 
-use anyhow::{bail, Result};
+use anyhow::Result;
 
-use super::wire::{WireBlob, WireCodec};
-use crate::compression::codec::index_bits;
+use super::wire::{upload_pipeline, WireBlob};
+use crate::codec::stages::{sparse_decode, sparse_encode};
+use crate::codec::{stream, CodecInput, Pipeline};
 use crate::compression::sparsify::magnitude_prune;
+use crate::config::FedConfig;
 use crate::coordinator::strategy::{
     FedStrategy, FinalModel, RoundContext, ServerEnv, ServerModel, UploadInput,
 };
-use crate::util::bitio::{BitReader, BitWriter};
 use crate::util::rng::Rng;
-
-const MAGIC: u32 = 0x4643_5331; // "FCS1"
 
 /// Sparse-encode a weight vector: magnitude-prune to `keep`, then pack
 /// survivors as (position, value). Returns the exact wire bytes and the
@@ -31,73 +30,26 @@ const MAGIC: u32 = 0x4643_5331; // "FCS1"
 pub fn encode_topk(theta: &[f32], keep: f64) -> (Vec<u8>, Vec<f32>) {
     let mut pruned = theta.to_vec();
     magnitude_prune(&mut pruned, keep);
-    let survivors: Vec<(usize, f32)> = pruned
-        .iter()
-        .enumerate()
-        .filter(|(_, w)| **w != 0.0)
-        .map(|(i, w)| (i, *w))
-        .collect();
-
-    let n = theta.len();
-    let bits = index_bits(n.max(2));
-    let mut out = Vec::new();
-    out.extend_from_slice(&MAGIC.to_le_bytes());
-    out.extend_from_slice(&(n as u32).to_le_bytes());
-    out.extend_from_slice(&(survivors.len() as u32).to_le_bytes());
-    out.push(bits as u8);
-    let mut w = BitWriter::new();
-    for (pos, _) in &survivors {
-        w.write(*pos as u32, bits);
-    }
-    out.extend_from_slice(w.as_bytes());
-    for (_, v) in &survivors {
-        out.extend_from_slice(&v.to_le_bytes());
-    }
-    (out, pruned)
-}
-
-fn take(bytes: &[u8], i: usize, n: usize) -> Result<&[u8]> {
-    if i + n > bytes.len() {
-        bail!("truncated topk blob");
-    }
-    Ok(&bytes[i..i + n])
+    (sparse_encode(&pruned), pruned)
 }
 
 /// Decode a sparse blob back to the dense (pruned) weight vector.
 pub fn decode_topk(bytes: &[u8]) -> Result<Vec<f32>> {
-    let take = |i: usize, n: usize| take(bytes, i, n);
-    if u32::from_le_bytes(take(0, 4)?.try_into()?) != MAGIC {
-        bail!("bad topk magic");
-    }
-    let n = u32::from_le_bytes(take(4, 4)?.try_into()?) as usize;
-    let k = u32::from_le_bytes(take(8, 4)?.try_into()?) as usize;
-    let bits = take(12, 1)?[0] as u32;
-    if k > n {
-        bail!("topk blob claims {k} survivors of {n} params");
-    }
-    if bits != index_bits(n.max(2)) {
-        bail!("topk blob bit width {bits} does not match {n} params");
-    }
-    let pos_bytes = (k * bits as usize).div_ceil(8);
-    let mut r = BitReader::new(take(13, pos_bytes)?);
-    let mut positions = Vec::with_capacity(k);
-    for _ in 0..k {
-        match r.read(bits) {
-            Some(p) if (p as usize) < n => positions.push(p as usize),
-            Some(p) => bail!("position {p} out of range {n}"),
-            None => bail!("truncated position stream"),
-        }
-    }
-    let mut theta = vec![0.0f32; n];
-    let vals = take(13 + pos_bytes, 4 * k)?;
-    for (j, &pos) in positions.iter().enumerate() {
-        theta[pos] = f32::from_le_bytes(vals[4 * j..4 * j + 4].try_into()?);
-    }
-    Ok(theta)
+    Ok(sparse_decode(bytes)?)
 }
 
 /// The plugin: top-k sparsified uploads, dense downstream.
-pub struct TopK;
+pub struct TopK {
+    upload: Pipeline,
+}
+
+impl TopK {
+    pub fn new(cfg: &FedConfig) -> Result<TopK> {
+        Ok(TopK {
+            upload: upload_pipeline(cfg, &format!("topk(keep={})", cfg.topk_keep))?,
+        })
+    }
+}
 
 impl FedStrategy for TopK {
     fn name(&self) -> &'static str {
@@ -110,24 +62,35 @@ impl FedStrategy for TopK {
 
     fn encode_upload(
         &self,
-        ctx: &RoundContext<'_>,
+        _ctx: &RoundContext<'_>,
         input: &UploadInput<'_>,
-        _rng: &mut Rng,
+        rng: &mut Rng,
     ) -> Result<WireBlob> {
-        let (bytes, theta) = encode_topk(input.theta, ctx.cfg.topk_keep);
-        Ok(WireBlob {
-            bytes: bytes.len(),
-            theta,
-            codec: WireCodec::Sparse,
-            payload: bytes,
-        })
+        WireBlob::encode(
+            &self.upload,
+            &CodecInput {
+                theta: input.theta,
+                centroids: Some(input.centroids),
+                stream: stream::upload(input.client),
+            },
+            rng,
+        )
     }
 
     fn finalize(&self, env: &ServerEnv<'_>, model: &ServerModel) -> Result<FinalModel> {
-        let (bytes, theta) = encode_topk(&model.theta, env.cfg.topk_keep);
+        let mut rng = env.base.fork(9_999);
+        let blob = WireBlob::encode(
+            &self.upload,
+            &CodecInput {
+                theta: &model.theta,
+                centroids: Some(&model.centroids),
+                stream: stream::FINAL,
+            },
+            &mut rng,
+        )?;
         Ok(FinalModel {
-            theta,
-            wire_bytes: bytes.len(),
+            theta: blob.theta,
+            wire_bytes: blob.bytes,
         })
     }
 }
@@ -178,5 +141,22 @@ mod tests {
         let (bytes, pruned) = encode_topk(&theta, 1.0);
         assert_eq!(pruned, theta);
         assert_eq!(decode_topk(&bytes).unwrap(), theta);
+    }
+
+    /// The strategy helper and the registered `topk` stage are the same
+    /// machinery: the plugin's declared pipeline produces the identical
+    /// wire image.
+    #[test]
+    fn strategy_pipeline_matches_the_helper() {
+        use crate::codec::{Codec, CodecInput, CodecRegistry};
+        let mut rng = Rng::new(4);
+        let theta: Vec<f32> = (0..3000).map(|_| rng.normal()).collect();
+        let (bytes, pruned) = encode_topk(&theta, 0.15);
+        let pipe = CodecRegistry::builtin().build("topk(keep=0.15)").unwrap();
+        let blob = pipe
+            .encode(&CodecInput::floats(&theta), &mut Rng::new(0))
+            .unwrap();
+        assert_eq!(blob.payload, bytes);
+        assert_eq!(blob.theta, pruned);
     }
 }

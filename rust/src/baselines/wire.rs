@@ -1,79 +1,106 @@
 //! Wire-blob building blocks shared by the strategy plugins.
 //!
 //! A `WireBlob` is what actually crossed the (simulated) network in one
-//! direction: the exact byte count plus the model the receiver
-//! reconstructs — quantization is part of the transport, so sender and
-//! receiver agree on the decoded weights. The helpers here are pure
-//! codec policy; *which* helper a strategy uses per direction/round
-//! lives in the plugin implementations (`baselines::fedavg` etc.), not
-//! in any central `match`.
-//!
-//! * [`WireBlob::dense`]    — raw f32 both ways (FedAvg, warmup rounds,
-//!   every compressed strategy's dense direction).
-//! * [`kmeans_blob`]        — magnitude prune -> per-upload k-means ->
-//!   Huffman/flat codec (FedZip upstream, Malekijoo 2021).
-//! * [`codebook_blob`]      — hard-snap to a learned centroid table +
-//!   codebook codec (FedCompress both directions once SCS has run).
+//! direction: the exact byte count, the encoded payload, the model the
+//! receiver reconstructs — quantization is part of the transport, so
+//! sender and receiver agree on the decoded weights — and the
+//! self-describing codec spec that decodes the payload. Blobs are
+//! produced by [`crate::codec`] pipelines ([`WireBlob::encode`]);
+//! *which* pipeline a strategy uses per direction/round lives in the
+//! plugin implementations (`baselines::fedavg` etc.), not in any
+//! central `match`, and any codec registered on both ends of a
+//! transport crosses it — there is no in-process-only format anymore.
 
 use std::fmt;
 
 use anyhow::Result;
 
 use crate::clustering::CentroidState;
-use crate::compression::codec::{dense_bytes, quantize_and_encode};
-use crate::compression::kmeans::kmeans_1d;
-use crate::compression::sparsify::magnitude_prune;
+use crate::codec::stages::dense_encode;
+use crate::codec::{Codec, CodecInput, CodecRegistry, StageBytes};
+use crate::compression::codec::dense_bytes;
 use crate::util::rng::Rng;
-
-/// Which self-describing payload format a [`WireBlob`] carries — the
-/// tag the networked transport (`net`) uses to decode the payload back
-/// into the exact `theta` the sender holds.
-#[derive(Clone, Copy, Debug, PartialEq, Eq)]
-pub enum WireCodec {
-    /// Raw little-endian f32s, 4 bytes per parameter.
-    Dense,
-    /// `compression::codec` format (codebook + packed/Huffman indices).
-    Clustered,
-    /// `baselines::topk` sparse format (positions + values).
-    Sparse,
-    /// Not decodable by the built-in transport. In-process runs carry
-    /// it fine (the decoded `theta` travels by reference); the TCP
-    /// transport rejects it with a typed error.
-    Opaque,
-}
-
-impl WireCodec {
-    pub fn tag(self) -> u8 {
-        match self {
-            WireCodec::Dense => 0,
-            WireCodec::Clustered => 1,
-            WireCodec::Sparse => 2,
-            WireCodec::Opaque => 3,
-        }
-    }
-
-    pub fn from_tag(tag: u8) -> Option<WireCodec> {
-        Some(match tag {
-            0 => WireCodec::Dense,
-            1 => WireCodec::Clustered,
-            2 => WireCodec::Sparse,
-            3 => WireCodec::Opaque,
-            _ => return None,
-        })
-    }
-}
 
 /// What crossed the wire: exact byte count plus the model the receiver
 /// reconstructs. `payload` is the actual encoded byte stream (what a
-/// networked transport puts on the socket) and `codec` tags its format;
-/// the invariant `payload.len() == bytes` (checked by
-/// [`WireBlob::ensure_payload`]) is what makes the ledger's ideal byte
-/// counts honest on a real wire.
+/// networked transport puts on the socket), `spec` is the canonical
+/// codec spec the receiver resolves against its registry to decode it,
+/// and `stage_bytes` is the per-stage ledger breakdown. The invariant
+/// `payload.len() == bytes` (checked by [`WireBlob::ensure_payload`])
+/// is what makes the ledger's ideal byte counts honest on a real wire
+/// — with the codec redesign it holds for *every* blob, with no
+/// exemptions.
 pub struct WireBlob {
     pub bytes: usize,
     pub theta: Vec<f32>,
-    pub codec: WireCodec,
+    /// Self-describing wire codec spec (e.g. `topk(keep=0.6)|kmeans(
+    /// c=15,iters=25)|huffman`) — what `net::proto` ships ahead of the
+    /// payload.
+    pub spec: String,
     pub payload: Vec<u8>,
+    /// Per-stage wire sizes (the last entry equals `bytes`).
+    pub stage_bytes: Vec<StageBytes>,
+}
+
+impl WireBlob {
+    /// Encode `input` through a codec pipeline into a wire blob.
+    pub fn encode(codec: &dyn Codec, input: &CodecInput<'_>, rng: &mut Rng) -> Result<WireBlob> {
+        let blob = codec.encode(input, rng)?;
+        Ok(WireBlob {
+            bytes: blob.payload.len(),
+            theta: blob.theta,
+            spec: codec.spec(),
+            payload: blob.payload,
+            stage_bytes: blob.stage_bytes,
+        })
+    }
+
+    /// Dense f32 transport: lossless, 4 bytes per parameter.
+    /// Byte-identical to encoding through the registry's `dense`
+    /// pipeline, without constructing one.
+    pub fn dense(theta: &[f32]) -> WireBlob {
+        let bytes = dense_bytes(theta.len());
+        WireBlob {
+            bytes,
+            theta: theta.to_vec(),
+            spec: "dense".to_string(),
+            payload: dense_encode(theta),
+            stage_bytes: vec![StageBytes {
+                stage: "dense".to_string(),
+                bytes,
+            }],
+        }
+    }
+
+    /// Check the payload-length invariant the framed ledger and the TCP
+    /// transport rely on.
+    pub fn ensure_payload(&self) -> Result<(), WirePayloadMismatch> {
+        if self.payload.len() != self.bytes {
+            return Err(WirePayloadMismatch {
+                bytes: self.bytes,
+                payload_len: self.payload.len(),
+            });
+        }
+        Ok(())
+    }
+
+    /// Check the decoded model against the manifest parameter count.
+    /// Debug builds assert; release builds surface the typed error so a
+    /// size mismatch can never silently corrupt aggregation.
+    pub fn ensure_param_count(&self, expected: usize) -> Result<(), WireSizeMismatch> {
+        debug_assert_eq!(
+            self.theta.len(),
+            expected,
+            "wire blob param count mismatch"
+        );
+        if self.theta.len() != expected {
+            return Err(WireSizeMismatch {
+                expected,
+                got: self.theta.len(),
+            });
+        }
+        Ok(())
+    }
 }
 
 /// Typed decode-invariant violation: the reconstructed model does not
@@ -118,102 +145,45 @@ impl fmt::Display for WirePayloadMismatch {
 
 impl std::error::Error for WirePayloadMismatch {}
 
-/// Serialize a weight vector as raw little-endian f32s (the `Dense`
-/// codec payload).
-pub fn dense_payload(theta: &[f32]) -> Vec<u8> {
-    let mut out = Vec::with_capacity(4 * theta.len());
-    for w in theta {
-        out.extend_from_slice(&w.to_le_bytes());
-    }
-    out
+/// Build a strategy's compressed-upload pipeline: the run-wide
+/// `--codec <spec>` override when the config carries one, the
+/// strategy's declared default otherwise. Resolution fails early (at
+/// strategy construction) with the registry's typo suggestion.
+pub fn upload_pipeline(
+    cfg: &crate::config::FedConfig,
+    default_spec: &str,
+) -> Result<crate::codec::Pipeline> {
+    let spec = if cfg.codec.is_empty() {
+        default_spec
+    } else {
+        cfg.codec.as_str()
+    };
+    Ok(CodecRegistry::builtin().build(spec)?)
 }
 
-impl WireBlob {
-    /// Dense f32 transport: lossless, 4 bytes per parameter.
-    pub fn dense(theta: &[f32]) -> WireBlob {
-        WireBlob {
-            bytes: dense_bytes(theta.len()),
-            theta: theta.to_vec(),
-            codec: WireCodec::Dense,
-            payload: dense_payload(theta),
-        }
-    }
-
-    /// Check the payload-length invariant the framed ledger and the TCP
-    /// transport rely on. `Opaque` blobs are exempt (they never reach a
-    /// socket).
-    pub fn ensure_payload(&self) -> Result<(), WirePayloadMismatch> {
-        if self.codec != WireCodec::Opaque && self.payload.len() != self.bytes {
-            return Err(WirePayloadMismatch {
-                bytes: self.bytes,
-                payload_len: self.payload.len(),
-            });
-        }
-        Ok(())
-    }
-
-    /// Check the decoded model against the manifest parameter count.
-    /// Debug builds assert; release builds surface the typed error so a
-    /// size mismatch can never silently corrupt aggregation.
-    pub fn ensure_param_count(&self, expected: usize) -> Result<(), WireSizeMismatch> {
-        debug_assert_eq!(
-            self.theta.len(),
-            expected,
-            "wire blob param count mismatch"
-        );
-        if self.theta.len() != expected {
-            return Err(WireSizeMismatch {
-                expected,
-                got: self.theta.len(),
-            });
-        }
-        Ok(())
-    }
-}
-
-/// FedZip upstream policy: magnitude prune to `keep`, fit a fresh
-/// `clusters`-entry k-means codebook on the pruned vector, encode.
+/// FedZip upstream policy as a one-shot helper: magnitude prune to
+/// `keep`, fit a fresh `clusters`-entry k-means codebook on the pruned
+/// vector, entropy-code — literally the `topk|kmeans|huffman` pipeline
+/// built from registry parts (what the `fedzip` plugin declares).
 pub fn kmeans_blob(theta: &[f32], clusters: usize, keep: f64, rng: &mut Rng) -> Result<WireBlob> {
-    let mut pruned = theta.to_vec();
-    magnitude_prune(&mut pruned, keep);
-    let (codebook, _, _) = kmeans_1d(&pruned, clusters, 25, rng);
-    let (enc, quantized) = quantize_and_encode(&pruned, &codebook);
-    Ok(WireBlob {
-        bytes: enc.wire_bytes(),
-        theta: quantized,
-        codec: WireCodec::Clustered,
-        payload: enc.bytes,
-    })
+    let spec = format!("topk(keep={keep})|kmeans(c={clusters},iters=25)|huffman");
+    let pipe = CodecRegistry::builtin().build(&spec)?;
+    WireBlob::encode(&pipe, &CodecInput::floats(theta), rng)
 }
 
-/// FedCompress policy: hard-snap to the active centroid codebook and
-/// encode; lossless when the model is already centroid-structured
+/// FedCompress policy as a one-shot helper: hard-snap to the active
+/// centroid codebook and entropy-code (the `codebook|huffman`
+/// pipeline); lossless when the model is already centroid-structured
 /// (post-SCS downstream).
 pub fn codebook_blob(theta: &[f32], centroids: &CentroidState) -> Result<WireBlob> {
-    let codebook = centroids.active_codebook();
-    let (enc, quantized) = quantize_and_encode(theta, &codebook);
-    if crate::util::logging::enabled(crate::util::logging::Level::Debug) {
-        let mse: f64 = theta
-            .iter()
-            .zip(&quantized)
-            .map(|(&a, &b)| ((a - b) as f64).powi(2))
-            .sum::<f64>()
-            / theta.len().max(1) as f64;
-        let span = codebook.last().unwrap() - codebook.first().unwrap();
-        crate::debug!(
-            "codebook snap: C={} span={:.4} mse={:.6} cb[0..4]={:?}",
-            codebook.len(),
-            span,
-            mse,
-            &codebook[..4.min(codebook.len())]
-        );
-    }
-    Ok(WireBlob {
-        bytes: enc.wire_bytes(),
-        theta: quantized,
-        codec: WireCodec::Clustered,
-        payload: enc.bytes,
-    })
+    let pipe = CodecRegistry::builtin().build("codebook|huffman")?;
+    let input = CodecInput {
+        theta,
+        centroids: Some(centroids),
+        stream: crate::codec::stream::FINAL,
+    };
+    // no stage of this pipeline draws randomness
+    WireBlob::encode(&pipe, &input, &mut Rng::new(0))
 }
 
 #[cfg(test)]
@@ -237,7 +207,7 @@ mod tests {
         assert_eq!(blob.theta, theta);
         assert!(blob.ensure_param_count(theta.len()).is_ok());
         // the payload is the exact little-endian image of theta
-        assert_eq!(blob.codec, WireCodec::Dense);
+        assert_eq!(blob.spec, "dense");
         assert!(blob.ensure_payload().is_ok());
         let decoded: Vec<f32> = blob
             .payload
@@ -245,10 +215,17 @@ mod tests {
             .map(|c| f32::from_le_bytes(c.try_into().unwrap()))
             .collect();
         assert_eq!(decoded, theta);
+        // ...and it is byte-identical to the registry's dense pipeline
+        let pipe = CodecRegistry::builtin().build("dense").unwrap();
+        let via_pipe =
+            WireBlob::encode(&pipe, &CodecInput::floats(&theta), &mut Rng::new(0)).unwrap();
+        assert_eq!(via_pipe.payload, blob.payload);
+        assert_eq!(via_pipe.spec, blob.spec);
+        assert_eq!(via_pipe.stage_bytes, blob.stage_bytes);
     }
 
-    /// Every built-in blob helper must satisfy `payload.len() == bytes`
-    /// — the invariant that keeps the framed ledger honest.
+    /// Every blob must satisfy `payload.len() == bytes` — the invariant
+    /// that keeps the framed ledger honest. No codec is exempt.
     #[test]
     fn payload_length_matches_claimed_bytes() {
         let (theta, cents, mut rng) = setup();
@@ -257,28 +234,23 @@ mod tests {
             kmeans_blob(&theta, 15, 0.6, &mut rng).unwrap(),
             codebook_blob(&theta, &cents).unwrap(),
         ] {
-            assert!(blob.ensure_payload().is_ok(), "{:?}", blob.codec);
+            assert!(blob.ensure_payload().is_ok(), "{}", blob.spec);
             assert_eq!(blob.payload.len(), blob.bytes);
+            // the per-stage ledger ends at the real payload size
+            assert_eq!(blob.stage_bytes.last().unwrap().bytes, blob.bytes);
         }
         // a lying blob is caught with the typed error
         let bad = WireBlob {
             bytes: 10,
             theta: vec![0.0; 4],
-            codec: WireCodec::Dense,
+            spec: "dense".to_string(),
             payload: vec![0u8; 16],
+            stage_bytes: Vec::new(),
         };
         let e = bad.ensure_payload().unwrap_err();
         assert_eq!(e.bytes, 10);
         assert_eq!(e.payload_len, 16);
         assert!(e.to_string().contains("payload length mismatch"));
-        // opaque blobs are exempt (in-process only)
-        let opaque = WireBlob {
-            bytes: 10,
-            theta: vec![0.0; 4],
-            codec: WireCodec::Opaque,
-            payload: Vec::new(),
-        };
-        assert!(opaque.ensure_payload().is_ok());
     }
 
     #[test]
@@ -289,6 +261,9 @@ mod tests {
         // the zero cluster exists and dominates at keep=0.6
         let zeros = blob.theta.iter().filter(|w| w.abs() < 1e-3).count();
         assert!(zeros as f64 > 0.3 * theta.len() as f64, "{zeros}");
+        // the stage ledger traces prune -> cluster -> entropy
+        let names: Vec<&str> = blob.stage_bytes.iter().map(|s| s.stage.as_str()).collect();
+        assert_eq!(names, ["topk", "kmeans", "huffman"]);
     }
 
     #[test]

@@ -44,6 +44,12 @@ COMMON OPTIONS:
     --strategy <name>       a registered strategy (fedavg|fedzip|
                             fedcompress-noscs|fedcompress|topk|...), or
                             'list' to print the registry
+    --codec <spec>          codec pipeline overriding the strategy's
+                            compressed-upload path: stage names joined
+                            by '|' with optional (key=value,...) params,
+                            e.g. 'topk(keep=0.2)|kmeans(c=8)|huffman';
+                            'list' prints the codec registry. Unset =
+                            each strategy's declared default
     --preset <paper|quick>  parameter preset (default: quick)
     --config <file.json>    JSON overrides on top of the preset
     --set key=value         single override (repeatable)
@@ -81,7 +87,10 @@ RUN STORE (sweep, runs, table1, fleet, table2):
     --fleets a,b            sweep: fleet preset axis ('all' = all three)
     --seeds 1,2,3           sweep: seed axis
     --axis key=v1,v2        sweep: extra config-knob axis (repeatable,
-                            any --set key: c_max, topk_keep, rounds, ...)
+                            any --set key: c_max, topk_keep, rounds,
+                            codec, ...; values split on top-level commas
+                            only, so codec=kmeans(c=8,iters=5),dense is
+                            a two-value axis)
     --spec <file>           sweep: grid spec file (key = value lines:
                             strategies/fleets/seeds/grid.<key>)
     --jobs <n>              sweep: parallel worker threads (default auto)
@@ -102,6 +111,9 @@ RUN STORE (sweep, runs, table1, fleet, table2):
 EXAMPLES:
     fedcompress train --dataset cifar10 --strategy fedcompress --preset quick
     fedcompress train --strategy list
+    fedcompress train --codec list
+    fedcompress train --strategy fedavg --codec 'topk(keep=0.1)|kmeans(c=8)|huffman'
+    fedcompress sweep --smoke --axis 'codec=dense,topk|kmeans|huffman'
     fedcompress serve --bind 127.0.0.1:7878 --workers 2 --strategy fedcompress
     fedcompress worker --connect 127.0.0.1:7878
     fedcompress train --fleet mobile --dropout 0.1 --deadline-s 60

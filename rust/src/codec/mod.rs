@@ -1,0 +1,191 @@
+//! First-class codec API: named, registered, composable compression
+//! pipelines that cross the wire.
+//!
+//! The compression surface used to be a closed 4-variant enum
+//! (`WireCodec`) with every strategy hand-rolling its encode path and
+//! custom (`Opaque`) formats unable to cross the TCP transport. This
+//! module replaces it with an open subsystem shaped like the strategy
+//! plugin API:
+//!
+//! * [`Codec`] — the wire-facing contract: `encode(&CodecInput, &mut
+//!   Rng) -> EncodedBlob` with exact `wire_bytes` accounting, and
+//!   `decode(payload) -> Vec<f32>` reproducing the encoder's quantized
+//!   model bit-for-bit.
+//! * [`Stage`] — the composable unit. A stage transforms a
+//!   [`StageData`] stream (`Floats` or `Indexed`) and defines its own
+//!   terminal serialization, so `topk|kmeans|huffman` stacks prune ->
+//!   cluster -> entropy-code exactly like FedZip hand-rolled it.
+//! * [`Pipeline`] — the combinator: an ordered stage stack parsed from
+//!   a spec string (`name(key=value,...)` joined by `|`), validating
+//!   stage input/output kinds at build time and ledgering per-stage
+//!   wire bytes individually.
+//! * [`CodecRegistry`] — name -> stage constructor, with aliases,
+//!   `--codec list`, and closest-name typo suggestions
+//!   (`util::suggest`), mirroring `StrategyRegistry`.
+//! * [`CodecCache`] — spec -> built pipeline, memoized. The networked
+//!   transport decodes through a cache so stateful stages (`delta`)
+//!   keep their cross-round stream state between messages.
+//!
+//! The canonical spec string is also the self-describing wire header:
+//! `net::proto` ships `version | spec` ahead of every payload, so any
+//! codec registered on both ends — including downstream user codecs —
+//! round-trips through the TCP worker path. There is no in-process-only
+//! carve-out anymore.
+
+pub mod pipeline;
+pub mod registry;
+pub mod stages;
+
+pub use pipeline::{DataKind, Pipeline, Stage, StageData};
+pub use registry::{CodecCache, CodecInfo, CodecRegistry, StageCtor, StageParams};
+
+use std::fmt;
+
+use crate::clustering::CentroidState;
+use crate::util::rng::Rng;
+
+/// Stream identities for cross-round stateful stages (`delta`): one
+/// monotone sequence of blobs per (direction, client). Upload streams
+/// are the client index; the download broadcast and the finalize
+/// encode get reserved ids far above any client count.
+pub mod stream {
+    /// Upload stream of client `k`.
+    pub fn upload(client: usize) -> u64 {
+        client as u64
+    }
+    /// The server -> client broadcast stream.
+    pub const DOWNLOAD: u64 = 1 << 40;
+    /// The final-deliverable encode (outside the round sequence).
+    pub const FINAL: u64 = 1 << 41;
+}
+
+/// Everything an encoder may draw on beyond the raw weights. Kept
+/// borrow-only so `encode` fans out over the upload worker pool
+/// without cloning server state.
+pub struct CodecInput<'a> {
+    /// The dense model to encode.
+    pub theta: &'a [f32],
+    /// Centroid state for codebook-snapping stages (`codebook`); None
+    /// when the caller has no clustering state.
+    pub centroids: Option<&'a CentroidState>,
+    /// Stream identity for cross-round stateful stages ([`stream`]).
+    pub stream: u64,
+}
+
+impl<'a> CodecInput<'a> {
+    /// Bare input: weights only, no centroid state, finalize stream.
+    pub fn floats(theta: &'a [f32]) -> CodecInput<'a> {
+        CodecInput {
+            theta,
+            centroids: None,
+            stream: stream::FINAL,
+        }
+    }
+}
+
+/// One stage's exact contribution to the wire ledger: the serialized
+/// size of the stream *after* that stage (what the transfer would cost
+/// if the pipeline stopped there). The last stage's entry equals the
+/// payload length, so the sequence reads as a compression trace.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct StageBytes {
+    pub stage: String,
+    pub bytes: usize,
+}
+
+/// What `Codec::encode` produces: the exact payload that crosses the
+/// wire, the model the receiver reconstructs from it (`decode(payload)
+/// == theta`, bit-for-bit), and the per-stage byte ledger.
+#[derive(Clone, Debug, Default)]
+pub struct EncodedBlob {
+    pub payload: Vec<u8>,
+    pub theta: Vec<f32>,
+    pub stage_bytes: Vec<StageBytes>,
+}
+
+impl EncodedBlob {
+    /// Exact wire size of the encoded model.
+    pub fn wire_bytes(&self) -> usize {
+        self.payload.len()
+    }
+}
+
+/// Typed codec failure. Decoders never panic on corrupt input; spec
+/// parsing reports unknown names with the registry's closest-name
+/// suggestion, exactly like unknown strategies.
+#[derive(Debug)]
+pub enum CodecError {
+    /// Spec references a name the registry does not know.
+    UnknownStage {
+        name: String,
+        suggestion: Option<String>,
+        known: String,
+    },
+    /// Structurally invalid spec string or stage parameter.
+    BadSpec { what: String },
+    /// A stage that needs data got an empty weight vector.
+    EmptyInput { stage: &'static str },
+    /// A codebook-snapping stage ran without centroid state.
+    MissingCodebook { stage: &'static str },
+    /// Payload ended mid-structure.
+    Truncated { what: &'static str },
+    /// Structurally invalid payload (bad magic, out-of-range index,
+    /// desynchronized delta stream, ...).
+    Malformed { what: String },
+}
+
+impl fmt::Display for CodecError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            CodecError::UnknownStage {
+                name,
+                suggestion,
+                known,
+            } => match suggestion {
+                Some(s) => write!(
+                    f,
+                    "unknown codec '{name}' — did you mean '{s}'? (registered: {known})"
+                ),
+                None => write!(f, "unknown codec '{name}' (registered: {known})"),
+            },
+            CodecError::BadSpec { what } => write!(f, "bad codec spec: {what}"),
+            CodecError::EmptyInput { stage } => {
+                write!(f, "codec stage '{stage}' cannot encode an empty weight vector")
+            }
+            CodecError::MissingCodebook { stage } => write!(
+                f,
+                "codec stage '{stage}' needs centroid state, but the caller provided none"
+            ),
+            CodecError::Truncated { what } => write!(f, "truncated codec payload: {what}"),
+            CodecError::Malformed { what } => write!(f, "malformed codec payload: {what}"),
+        }
+    }
+}
+
+impl std::error::Error for CodecError {}
+
+/// A wire codec: the contract every registered pipeline (and any
+/// downstream `Codec` implementation) satisfies.
+///
+/// Invariants the property suite (`tests/codec_roundtrip.rs`) holds
+/// every implementation to:
+///
+/// * `encode(...).payload.len() == wire_bytes` — the ledger never lies;
+/// * `decode(&blob.payload) == blob.theta` bit-for-bit — sender and
+///   receiver agree on the reconstructed model;
+/// * `blob.theta.len() == input.theta.len()` — parameter count is
+///   preserved through any stage stack.
+pub trait Codec: Send + Sync {
+    /// Canonical spec string — the self-describing wire header the
+    /// receiving side resolves against its registry.
+    fn spec(&self) -> String;
+
+    /// Encode a model. `rng` is the caller's deterministic stream
+    /// (clients pass their fork positioned where training left it), so
+    /// equal inputs and RNG positions give bit-identical blobs.
+    fn encode(&self, input: &CodecInput<'_>, rng: &mut Rng) -> Result<EncodedBlob, CodecError>;
+
+    /// Decode a payload back to the exact quantized model the encoder
+    /// reported as `theta`.
+    fn decode(&self, payload: &[u8]) -> Result<Vec<f32>, CodecError>;
+}

@@ -1,0 +1,233 @@
+//! The [`Pipeline`] combinator: an ordered stack of [`Stage`]s behind
+//! the [`Codec`] contract.
+//!
+//! Encode walks the stage list forward, transforming a [`StageData`]
+//! stream; the *last* stage serializes its output as the wire payload.
+//! Decode deserializes with the last stage and walks the rest backward
+//! (each stage's lossy inverse), reproducing exactly the quantized
+//! model the encoder reported. Per-stage wire sizes are ledgered
+//! individually: entry `i` is the exact serialized size the transfer
+//! would have cost had the pipeline stopped after stage `i`, so the
+//! sequence reads as a compression trace (`topk|kmeans|huffman` shows
+//! sparse -> flat-packed -> entropy-coded bytes).
+//!
+//! Stage compatibility is validated at build time: the first stage
+//! must consume `Floats`, adjacent kinds must match, and terminal-only
+//! stages (whose compression lives in serialization: `huffman`,
+//! `delta`) must come last.
+
+use super::{Codec, CodecError, CodecInput, EncodedBlob, StageBytes};
+use crate::util::rng::Rng;
+
+/// The intermediate stream stages transform.
+#[derive(Clone, Debug, PartialEq)]
+pub enum StageData {
+    /// A dense weight vector (possibly pruned: zeros are meaningful).
+    Floats(Vec<f32>),
+    /// A clustered stream: sorted codebook + one index per parameter.
+    Indexed {
+        codebook: Vec<f32>,
+        indices: Vec<u32>,
+    },
+}
+
+/// The kind tag used for build-time chain validation.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum DataKind {
+    Floats,
+    Indexed,
+}
+
+impl DataKind {
+    pub fn name(self) -> &'static str {
+        match self {
+            DataKind::Floats => "floats",
+            DataKind::Indexed => "an index stream",
+        }
+    }
+}
+
+impl StageData {
+    pub fn kind(&self) -> DataKind {
+        match self {
+            StageData::Floats(_) => DataKind::Floats,
+            StageData::Indexed { .. } => DataKind::Indexed,
+        }
+    }
+
+    /// Parameter count of the stream.
+    pub fn param_count(&self) -> usize {
+        match self {
+            StageData::Floats(v) => v.len(),
+            StageData::Indexed { indices, .. } => indices.len(),
+        }
+    }
+
+    /// The decoded view: what a receiver reconstructs from this stream.
+    pub fn to_floats(&self) -> Vec<f32> {
+        match self {
+            StageData::Floats(v) => v.clone(),
+            StageData::Indexed { codebook, indices } => {
+                indices.iter().map(|&i| codebook[i as usize]).collect()
+            }
+        }
+    }
+}
+
+/// One composable codec stage. Implementations are `&self` + `Send +
+/// Sync` so encodes fan out over the upload worker pool; stages with
+/// cross-round state (`delta`) guard it behind a mutex keyed by the
+/// input's stream id.
+pub trait Stage: Send + Sync {
+    /// Registry name (ledger label).
+    fn name(&self) -> &'static str;
+
+    /// Canonical spec fragment including explicit parameters, e.g.
+    /// `topk(keep=0.6)`. Must re-parse to an equivalent stage.
+    fn spec(&self) -> String;
+
+    fn input_kind(&self) -> DataKind;
+    fn output_kind(&self) -> DataKind;
+
+    /// Terminal-only stages compress in `serialize` and are identity
+    /// transforms on the stream; the pipeline rejects them anywhere but
+    /// last.
+    fn terminal_only(&self) -> bool {
+        false
+    }
+
+    /// Forward transform (prune, cluster, snap, ...). Consumes the
+    /// stream so in-place transforms need no copies.
+    fn encode(
+        &self,
+        data: StageData,
+        input: &CodecInput<'_>,
+        rng: &mut Rng,
+    ) -> Result<StageData, CodecError>;
+
+    /// Exact serialized size of `data` under this stage's terminal
+    /// format — the per-stage ledger entry for intermediate stages.
+    /// Terminal-only stages may keep the default (the pipeline uses
+    /// the real payload length for the last stage).
+    fn wire_len(&self, _data: &StageData) -> usize {
+        0
+    }
+
+    /// Terminal serialization of this stage's output.
+    fn serialize(&self, data: &StageData, input: &CodecInput<'_>) -> Result<Vec<u8>, CodecError>;
+
+    /// Inverse of [`Stage::serialize`].
+    fn deserialize(&self, payload: &[u8]) -> Result<StageData, CodecError>;
+
+    /// Lossy inverse transform: map this stage's output stream back to
+    /// the decoded view of its *input* stream (e.g. `kmeans` expands
+    /// indices through the codebook; `topk` is the identity — pruning
+    /// is not invertible).
+    fn backward(&self, data: StageData) -> Result<StageData, CodecError>;
+}
+
+/// Stage-count cap: a spec with more stages than this is a typo or an
+/// attack, not an experiment.
+pub const MAX_STAGES: usize = 8;
+
+/// An ordered, validated stage stack. Build one from a spec string via
+/// [`super::CodecRegistry::build`].
+pub struct Pipeline {
+    stages: Vec<Box<dyn Stage>>,
+}
+
+impl Pipeline {
+    /// Validate and assemble. Errors name the offending stage so CLI
+    /// users see exactly which part of the spec is wrong.
+    pub fn new(stages: Vec<Box<dyn Stage>>) -> Result<Pipeline, CodecError> {
+        if stages.is_empty() {
+            return Err(CodecError::BadSpec {
+                what: "empty pipeline (expected name[|name]...)".to_string(),
+            });
+        }
+        if stages.len() > MAX_STAGES {
+            return Err(CodecError::BadSpec {
+                what: format!("{} stages exceed the {MAX_STAGES}-stage cap", stages.len()),
+            });
+        }
+        if stages[0].input_kind() != DataKind::Floats {
+            return Err(CodecError::BadSpec {
+                what: format!(
+                    "'{}' consumes {} and cannot open a pipeline — put a \
+                     clustering stage (kmeans, codebook) before it",
+                    stages[0].name(),
+                    stages[0].input_kind().name()
+                ),
+            });
+        }
+        for pair in stages.windows(2) {
+            if pair[0].output_kind() != pair[1].input_kind() {
+                return Err(CodecError::BadSpec {
+                    what: format!(
+                        "'{}' produces {} but '{}' consumes {}",
+                        pair[0].name(),
+                        pair[0].output_kind().name(),
+                        pair[1].name(),
+                        pair[1].input_kind().name()
+                    ),
+                });
+            }
+        }
+        for s in &stages[..stages.len() - 1] {
+            if s.terminal_only() {
+                return Err(CodecError::BadSpec {
+                    what: format!("'{}' must be the last stage of a pipeline", s.name()),
+                });
+            }
+        }
+        Ok(Pipeline { stages })
+    }
+
+    pub fn stages(&self) -> &[Box<dyn Stage>] {
+        &self.stages
+    }
+}
+
+impl Codec for Pipeline {
+    fn spec(&self) -> String {
+        self.stages
+            .iter()
+            .map(|s| s.spec())
+            .collect::<Vec<_>>()
+            .join("|")
+    }
+
+    fn encode(&self, input: &CodecInput<'_>, rng: &mut Rng) -> Result<EncodedBlob, CodecError> {
+        let mut data = StageData::Floats(input.theta.to_vec());
+        let mut stage_bytes = Vec::with_capacity(self.stages.len());
+        let last = self.stages.len() - 1;
+        for (i, stage) in self.stages.iter().enumerate() {
+            data = stage.encode(data, input, rng)?;
+            if i < last {
+                stage_bytes.push(StageBytes {
+                    stage: stage.name().to_string(),
+                    bytes: stage.wire_len(&data),
+                });
+            }
+        }
+        let payload = self.stages[last].serialize(&data, input)?;
+        stage_bytes.push(StageBytes {
+            stage: self.stages[last].name().to_string(),
+            bytes: payload.len(),
+        });
+        Ok(EncodedBlob {
+            payload,
+            theta: data.to_floats(),
+            stage_bytes,
+        })
+    }
+
+    fn decode(&self, payload: &[u8]) -> Result<Vec<f32>, CodecError> {
+        let last = self.stages.len() - 1;
+        let mut data = self.stages[last].deserialize(payload)?;
+        for stage in self.stages[..last].iter().rev() {
+            data = stage.backward(data)?;
+        }
+        Ok(data.to_floats())
+    }
+}

@@ -1,0 +1,507 @@
+//! Codec registry + spec-string parser: the open end of the codec API,
+//! mirroring `baselines::StrategyRegistry` (name -> constructor,
+//! aliases, `--codec list`, closest-name typo suggestions via
+//! `util::suggest`).
+//!
+//! Spec grammar (also the self-describing wire header):
+//!
+//! ```text
+//! spec   := stage ('|' stage)*
+//! stage  := name [ '(' key '=' value (',' key '=' value)* ')' ]
+//! ```
+//!
+//! e.g. `topk(keep=0.6)|kmeans(c=15,iters=25)|huffman`. Parameters are
+//! validated by each stage constructor (unknown keys are rejected) and
+//! the resulting [`Pipeline`] re-renders the canonical spec with every
+//! parameter explicit, so wire headers round-trip through `build`.
+
+use std::collections::HashMap;
+use std::sync::{Arc, Mutex};
+
+use super::pipeline::{Pipeline, Stage};
+use super::stages::{CodebookStage, DeltaStage, DenseStage, HuffmanStage, KmeansStage, TopkStage};
+use super::CodecError;
+use crate::util::suggest;
+
+/// Longest spec string `build` accepts (the wire header length-prefixes
+/// specs with a u16, and anything near that is garbage anyway).
+pub const MAX_SPEC_LEN: usize = 4096;
+
+/// Parsed `key=value` parameters of one stage, with typed accessors.
+#[derive(Clone, Debug, Default)]
+pub struct StageParams {
+    stage: String,
+    pairs: Vec<(String, String)>,
+}
+
+impl StageParams {
+    fn bad(&self, what: String) -> CodecError {
+        CodecError::BadSpec {
+            what: format!("stage '{}': {what}", self.stage),
+        }
+    }
+
+    fn raw(&self, key: &str) -> Option<&str> {
+        self.pairs
+            .iter()
+            .find(|(k, _)| k == key)
+            .map(|(_, v)| v.as_str())
+    }
+
+    /// Reject unknown parameter keys (typo guard, like `Args::restrict`).
+    pub fn ensure_known(&self, allowed: &[&str]) -> Result<(), CodecError> {
+        for (k, _) in &self.pairs {
+            if !allowed.contains(&k.as_str()) {
+                return Err(self.bad(format!(
+                    "unknown parameter '{k}' (takes: {})",
+                    if allowed.is_empty() {
+                        "no parameters".to_string()
+                    } else {
+                        allowed.join(", ")
+                    }
+                )));
+            }
+        }
+        Ok(())
+    }
+
+    pub fn f64_or(&self, key: &str, default: f64) -> Result<f64, CodecError> {
+        match self.raw(key) {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .map_err(|_| self.bad(format!("'{key}={v}' is not a number"))),
+        }
+    }
+
+    pub fn usize_or(&self, key: &str, default: usize) -> Result<usize, CodecError> {
+        match self.raw(key) {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .map_err(|_| self.bad(format!("'{key}={v}' is not a count"))),
+        }
+    }
+}
+
+/// Constructor: a fresh stage instance from its parsed parameters.
+pub type StageCtor = fn(&StageParams) -> Result<Box<dyn Stage>, CodecError>;
+
+pub struct CodecInfo {
+    pub name: &'static str,
+    pub aliases: &'static [&'static str],
+    /// one-line description shown by `--codec list`
+    pub description: &'static str,
+    pub ctor: StageCtor,
+}
+
+pub struct CodecRegistry {
+    entries: Vec<CodecInfo>,
+}
+
+impl CodecRegistry {
+    /// Empty registry (for embedding custom codec sets).
+    pub fn empty() -> CodecRegistry {
+        CodecRegistry {
+            entries: Vec::new(),
+        }
+    }
+
+    /// The built-in stages: the `compression/` substrate as registry
+    /// parts.
+    pub fn builtin() -> CodecRegistry {
+        let mut r = CodecRegistry::empty();
+        r.register(CodecInfo {
+            name: "dense",
+            aliases: &["raw", "f32"],
+            description: "raw little-endian f32s, 4 bytes per parameter",
+            ctor: |p| {
+                p.ensure_known(&[])?;
+                Ok(Box::new(DenseStage))
+            },
+        })
+        .unwrap();
+        r.register(CodecInfo {
+            name: "topk",
+            aliases: &["top-k", "sparsify"],
+            description: "magnitude prune to `keep`; sparse (position, value) terminal form",
+            ctor: |p| {
+                p.ensure_known(&["keep"])?;
+                let keep = p.f64_or("keep", 0.1)?;
+                if !(keep > 0.0 && keep <= 1.0) {
+                    return Err(CodecError::BadSpec {
+                        what: format!("topk keep={keep} must be in (0, 1]"),
+                    });
+                }
+                Ok(Box::new(TopkStage { keep }))
+            },
+        })
+        .unwrap();
+        r.register(CodecInfo {
+            name: "kmeans",
+            aliases: &["k-means"],
+            description: "fit a fresh c-entry 1-D k-means codebook per blob and snap",
+            ctor: |p| {
+                p.ensure_known(&["c", "iters"])?;
+                let c = p.usize_or("c", 16)?;
+                let iters = p.usize_or("iters", 25)?;
+                if c == 0 || c > u16::MAX as usize {
+                    return Err(CodecError::BadSpec {
+                        what: format!("kmeans c={c} must be in 1..=65535"),
+                    });
+                }
+                if iters == 0 {
+                    return Err(CodecError::BadSpec {
+                        what: "kmeans iters=0 would never fit".to_string(),
+                    });
+                }
+                Ok(Box::new(KmeansStage { c, iters }))
+            },
+        })
+        .unwrap();
+        r.register(CodecInfo {
+            name: "codebook",
+            aliases: &["cluster", "snap"],
+            description: "snap to the caller's learned centroid table (FedCompress wire)",
+            ctor: |p| {
+                p.ensure_known(&[])?;
+                Ok(Box::new(CodebookStage))
+            },
+        })
+        .unwrap();
+        r.register(CodecInfo {
+            name: "huffman",
+            aliases: &["entropy"],
+            description: "entropy-code the index stream (canonical Huffman or flat, smaller wins)",
+            ctor: |p| {
+                p.ensure_known(&[])?;
+                Ok(Box::new(HuffmanStage))
+            },
+        })
+        .unwrap();
+        r.register(CodecInfo {
+            name: "delta",
+            aliases: &["residual"],
+            description: "cross-round residual coding: ship only changed indices per stream",
+            ctor: |p| {
+                p.ensure_known(&[])?;
+                Ok(Box::<DeltaStage>::default())
+            },
+        })
+        .unwrap();
+        r
+    }
+
+    /// Add an entry; fails on a name/alias collision or a name `build`
+    /// could never resolve (lookup is lowercase; `|(),=` are grammar).
+    pub fn register(&mut self, info: CodecInfo) -> Result<(), CodecError> {
+        let mut new_names = vec![info.name];
+        new_names.extend_from_slice(info.aliases);
+        for n in &new_names {
+            let ok = !n.is_empty()
+                && n.chars()
+                    .all(|c| c.is_ascii_lowercase() || c.is_ascii_digit() || c == '-' || c == '_');
+            if !ok {
+                return Err(CodecError::BadSpec {
+                    what: format!("codec name '{n}' must be non-empty [a-z0-9_-]"),
+                });
+            }
+        }
+        for e in &self.entries {
+            let mut taken = vec![e.name];
+            taken.extend_from_slice(e.aliases);
+            if let Some(dup) = new_names.iter().find(|n| taken.contains(n)) {
+                return Err(CodecError::BadSpec {
+                    what: format!("codec name '{dup}' already registered"),
+                });
+            }
+        }
+        self.entries.push(info);
+        Ok(())
+    }
+
+    pub fn entries(&self) -> &[CodecInfo] {
+        &self.entries
+    }
+
+    /// Canonical names, registration order.
+    pub fn names(&self) -> Vec<&'static str> {
+        self.entries.iter().map(|e| e.name).collect()
+    }
+
+    fn lookup(&self, name: &str) -> Option<&CodecInfo> {
+        self.entries
+            .iter()
+            .find(|e| e.name == name || e.aliases.contains(&name))
+    }
+
+    /// Closest registered name/alias, if plausibly a typo.
+    pub fn suggest(&self, name: &str) -> Option<&'static str> {
+        suggest::closest(
+            name,
+            self.entries
+                .iter()
+                .flat_map(|e| std::iter::once(e.name).chain(e.aliases.iter().copied())),
+        )
+    }
+
+    /// Parse a pipeline spec (`name(k=v,...)` joined by `|`) into a
+    /// validated [`Pipeline`]. Unknown names fail with the closest
+    /// registered name suggested; stage constructors validate params.
+    pub fn build(&self, spec: &str) -> Result<Pipeline, CodecError> {
+        if spec.len() > MAX_SPEC_LEN {
+            return Err(CodecError::BadSpec {
+                what: format!("spec of {} chars exceeds the {MAX_SPEC_LEN} cap", spec.len()),
+            });
+        }
+        let mut stages: Vec<Box<dyn Stage>> = Vec::new();
+        for part in spec.split('|') {
+            let params = parse_stage(part)?;
+            let want = params.stage.to_ascii_lowercase();
+            let Some(info) = self.lookup(&want) else {
+                return Err(CodecError::UnknownStage {
+                    name: params.stage.clone(),
+                    suggestion: self.suggest(&want).map(String::from),
+                    known: self.names().join(", "),
+                });
+            };
+            stages.push((info.ctor)(&params)?);
+        }
+        Pipeline::new(stages)
+    }
+
+    /// Render the `--codec list` table.
+    pub fn render_list(&self) -> String {
+        let mut s = String::from(
+            "registered codec stages (compose with '|', e.g. topk|kmeans|huffman):\n",
+        );
+        for e in &self.entries {
+            let alias = if e.aliases.is_empty() {
+                String::new()
+            } else {
+                format!(" (alias: {})", e.aliases.join(", "))
+            };
+            s.push_str(&format!("  {:<10} {}{}\n", e.name, e.description, alias));
+        }
+        s
+    }
+}
+
+/// Parse one `name` / `name(key=value,...)` stage fragment.
+fn parse_stage(part: &str) -> Result<StageParams, CodecError> {
+    let part = part.trim();
+    let bad = |what: String| CodecError::BadSpec { what };
+    if part.is_empty() {
+        return Err(bad("empty stage name (doubled '|'?)".to_string()));
+    }
+    let (name, args) = match part.split_once('(') {
+        None => {
+            if part.contains(')') {
+                return Err(bad(format!("stray ')' in '{part}'")));
+            }
+            (part, None)
+        }
+        Some((name, rest)) => {
+            let Some(args) = rest.strip_suffix(')') else {
+                return Err(bad(format!("unclosed '(' in '{part}'")));
+            };
+            if args.contains('(') || args.contains(')') {
+                return Err(bad(format!("nested parentheses in '{part}'")));
+            }
+            (name.trim(), Some(args))
+        }
+    };
+    if name.is_empty() {
+        return Err(bad(format!("missing stage name in '{part}'")));
+    }
+    let mut params = StageParams {
+        stage: name.to_string(),
+        pairs: Vec::new(),
+    };
+    if let Some(args) = args {
+        for pair in args.split(',') {
+            let pair = pair.trim();
+            if pair.is_empty() {
+                continue;
+            }
+            let Some((k, v)) = pair.split_once('=') else {
+                return Err(bad(format!("'{pair}' in '{part}' is not key=value")));
+            };
+            let (k, v) = (k.trim().to_string(), v.trim().to_string());
+            if params.pairs.iter().any(|(pk, _)| *pk == k) {
+                return Err(bad(format!("duplicate parameter '{k}' in '{part}'")));
+            }
+            params.pairs.push((k, v));
+        }
+    }
+    Ok(params)
+}
+
+/// Spec -> built pipeline, memoized. Decode paths hold one cache per
+/// peer so stateful stages (`delta`) keep their cross-round stream
+/// state between messages; encode paths may use it for convenience.
+pub struct CodecCache {
+    registry: CodecRegistry,
+    built: Mutex<HashMap<String, Arc<Pipeline>>>,
+}
+
+impl CodecCache {
+    pub fn new(registry: CodecRegistry) -> CodecCache {
+        CodecCache {
+            registry,
+            built: Mutex::new(HashMap::new()),
+        }
+    }
+
+    pub fn builtin() -> CodecCache {
+        CodecCache::new(CodecRegistry::builtin())
+    }
+
+    pub fn registry(&self) -> &CodecRegistry {
+        &self.registry
+    }
+
+    /// The pipeline for `spec`, building and memoizing on first use.
+    pub fn get(&self, spec: &str) -> Result<Arc<Pipeline>, CodecError> {
+        let mut built = self.built.lock().expect("codec cache");
+        if let Some(p) = built.get(spec) {
+            return Ok(p.clone());
+        }
+        let pipeline = Arc::new(self.registry.build(spec)?);
+        built.insert(spec.to_string(), pipeline.clone());
+        Ok(pipeline)
+    }
+
+    /// Decode a received payload under its wire spec.
+    pub fn decode(&self, spec: &str, payload: &[u8]) -> Result<Vec<f32>, CodecError> {
+        use super::Codec;
+        self.get(spec)?.decode(payload)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::codec::{Codec, CodecInput};
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn every_builtin_name_builds_standalone_or_chained() {
+        let reg = CodecRegistry::builtin();
+        assert!(reg.names().len() >= 6, "{:?}", reg.names());
+        for name in reg.names() {
+            // stages that consume an index stream need a clustering
+            // stage in front; everything else stands alone
+            let spec = match name {
+                "huffman" | "delta" => format!("kmeans(c=4)|{name}"),
+                other => other.to_string(),
+            };
+            let p = reg.build(&spec).unwrap();
+            assert!(p.spec().contains(name), "{name}: {}", p.spec());
+        }
+    }
+
+    #[test]
+    fn aliases_and_case_resolve_to_canonical_specs() {
+        let reg = CodecRegistry::builtin();
+        assert_eq!(reg.build("raw").unwrap().spec(), "dense");
+        assert_eq!(
+            reg.build("sparsify(keep=0.5)").unwrap().spec(),
+            "topk(keep=0.5)"
+        );
+        assert_eq!(
+            reg.build("Top-K|K-Means(c=8)|Entropy").unwrap().spec(),
+            "topk(keep=0.1)|kmeans(c=8,iters=25)|huffman"
+        );
+    }
+
+    #[test]
+    fn canonical_specs_reparse_to_themselves() {
+        let reg = CodecRegistry::builtin();
+        for spec in [
+            "dense",
+            "topk(keep=0.6)|kmeans(c=15,iters=25)|huffman",
+            "codebook|huffman",
+            "codebook|delta",
+        ] {
+            let p = reg.build(spec).unwrap();
+            assert_eq!(p.spec(), spec);
+            assert_eq!(reg.build(&p.spec()).unwrap().spec(), spec);
+        }
+    }
+
+    #[test]
+    fn unknown_names_suggest_like_the_strategy_registry() {
+        let reg = CodecRegistry::builtin();
+        let err = reg.build("topk|hufman").unwrap_err().to_string();
+        assert!(err.contains("did you mean 'huffman'"), "{err}");
+        let err = reg.build("zstd").unwrap_err().to_string();
+        assert!(err.contains("unknown codec 'zstd'"), "{err}");
+        assert!(err.contains("registered:"), "{err}");
+    }
+
+    #[test]
+    fn bad_specs_fail_with_the_offending_fragment() {
+        let reg = CodecRegistry::builtin();
+        for (spec, needle) in [
+            ("", "empty stage"),
+            ("topk||huffman", "empty stage"),
+            ("topk(keep=0.5", "unclosed"),
+            ("topk(keep)", "not key=value"),
+            ("topk(keep=0.5,keep=0.6)", "duplicate"),
+            ("topk(scale=2)", "unknown parameter"),
+            ("topk(keep=zero)", "not a number"),
+            ("topk(keep=0)", "(0, 1]"),
+            ("kmeans(c=0)", "1..=65535"),
+            ("huffman", "cannot open a pipeline"),
+            ("huffman|kmeans", "cannot open a pipeline"),
+            ("kmeans|huffman|dense", "must be the last stage"),
+            ("kmeans|kmeans", "consumes"),
+        ] {
+            let err = reg.build(spec).unwrap_err().to_string();
+            assert!(err.contains(needle), "spec '{spec}': {err}");
+        }
+    }
+
+    #[test]
+    fn duplicate_registration_rejected() {
+        let mut reg = CodecRegistry::builtin();
+        let dup = CodecInfo {
+            name: "dense",
+            aliases: &[],
+            description: "dup",
+            ctor: |_| Ok(Box::new(crate::codec::stages::DenseStage)),
+        };
+        assert!(reg.register(dup).is_err());
+        let bad = CodecInfo {
+            name: "Bad|Name",
+            aliases: &[],
+            description: "grammar chars",
+            ctor: |_| Ok(Box::new(crate::codec::stages::DenseStage)),
+        };
+        assert!(reg.register(bad).is_err());
+    }
+
+    #[test]
+    fn list_mentions_every_name() {
+        let reg = CodecRegistry::builtin();
+        let list = reg.render_list();
+        for name in reg.names() {
+            assert!(list.contains(name), "{name} missing from list");
+        }
+    }
+
+    #[test]
+    fn cache_memoizes_and_decodes() {
+        let cache = CodecCache::builtin();
+        let a = cache.get("dense").unwrap();
+        let b = cache.get("dense").unwrap();
+        assert!(Arc::ptr_eq(&a, &b), "same spec must share the pipeline");
+        let theta = [1.0f32, -2.5, 0.25];
+        let blob = a
+            .encode(&CodecInput::floats(&theta), &mut Rng::new(1))
+            .unwrap();
+        assert_eq!(cache.decode("dense", &blob.payload).unwrap(), theta);
+        assert!(cache.decode("nonsense", &[]).is_err());
+    }
+}

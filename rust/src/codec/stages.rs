@@ -1,0 +1,651 @@
+//! The built-in codec stages — the `compression/` substrate
+//! (`sparsify`, `kmeans`, `huffman`, `delta`) surfaced as registered,
+//! composable [`Stage`]s:
+//!
+//! * `dense`    — raw little-endian f32s (FedAvg's wire, 4 B/param).
+//! * `topk`     — magnitude prune; terminal form is the sparse
+//!                (position, value) format the `topk` strategy ships.
+//! * `kmeans`   — fit a fresh per-blob codebook and snap; terminal
+//!                form is the flat-packed clustered container.
+//! * `codebook` — snap to the caller's centroid table (FedCompress's
+//!                transport; needs `CodecInput::centroids`).
+//! * `huffman`  — entropy-code an index stream (picks canonical
+//!                Huffman or flat packing, whichever is smaller).
+//! * `delta`    — cross-round residual coding of index streams: ship
+//!                only changed positions against the previous blob on
+//!                the same stream, falling back to flat when the delta
+//!                would not pay.
+
+use std::collections::HashMap;
+use std::sync::Mutex;
+
+use super::pipeline::{DataKind, Stage, StageData};
+use super::{CodecError, CodecInput};
+use crate::compression::codec::{
+    decode as clustered_decode, dense_bytes, encode as clustered_encode, encode_flat,
+    flat_wire_bytes, index_bits,
+};
+use crate::compression::delta::{delta_decode, delta_encode};
+use crate::compression::kmeans::{kmeans_1d, snap};
+use crate::compression::sparsify::magnitude_prune;
+use crate::util::bitio::{BitReader, BitWriter};
+use crate::util::rng::Rng;
+
+fn malformed(what: impl Into<String>) -> CodecError {
+    CodecError::Malformed { what: what.into() }
+}
+
+/// Internal-invariant guard: a stage fed the wrong [`StageData`] kind
+/// (impossible through a validated [`super::Pipeline`], reachable only
+/// by calling stages by hand).
+fn wrong_kind(stage: &'static str, want: DataKind, got: &StageData) -> CodecError {
+    malformed(format!(
+        "stage '{stage}' expects {}, got {}",
+        want.name(),
+        got.kind().name()
+    ))
+}
+
+// --- dense ------------------------------------------------------------------
+
+/// Raw little-endian f32 transport: lossless, 4 bytes per parameter.
+pub struct DenseStage;
+
+/// Serialize a weight vector as raw little-endian f32s.
+pub fn dense_encode(theta: &[f32]) -> Vec<u8> {
+    let mut out = Vec::with_capacity(4 * theta.len());
+    for w in theta {
+        out.extend_from_slice(&w.to_le_bytes());
+    }
+    out
+}
+
+/// Inverse of [`dense_encode`].
+pub fn dense_decode(payload: &[u8]) -> Result<Vec<f32>, CodecError> {
+    if payload.len() % 4 != 0 {
+        return Err(malformed(format!(
+            "dense payload of {} bytes is not a whole number of f32s",
+            payload.len()
+        )));
+    }
+    Ok(payload
+        .chunks_exact(4)
+        .map(|c| f32::from_le_bytes(c.try_into().unwrap()))
+        .collect())
+}
+
+impl Stage for DenseStage {
+    fn name(&self) -> &'static str {
+        "dense"
+    }
+    fn spec(&self) -> String {
+        "dense".to_string()
+    }
+    fn input_kind(&self) -> DataKind {
+        DataKind::Floats
+    }
+    fn output_kind(&self) -> DataKind {
+        DataKind::Floats
+    }
+
+    fn encode(
+        &self,
+        data: StageData,
+        _input: &CodecInput<'_>,
+        _rng: &mut Rng,
+    ) -> Result<StageData, CodecError> {
+        Ok(data)
+    }
+
+    fn wire_len(&self, data: &StageData) -> usize {
+        dense_bytes(data.param_count())
+    }
+
+    fn serialize(&self, data: &StageData, _input: &CodecInput<'_>) -> Result<Vec<u8>, CodecError> {
+        match data {
+            StageData::Floats(v) => Ok(dense_encode(v)),
+            other => Err(wrong_kind("dense", DataKind::Floats, other)),
+        }
+    }
+
+    fn deserialize(&self, payload: &[u8]) -> Result<StageData, CodecError> {
+        Ok(StageData::Floats(dense_decode(payload)?))
+    }
+
+    fn backward(&self, data: StageData) -> Result<StageData, CodecError> {
+        Ok(data)
+    }
+}
+
+// --- topk (magnitude sparsification) ----------------------------------------
+
+const SPARSE_MAGIC: u32 = 0x4643_5331; // "FCS1"
+
+/// Exact wire size of the sparse format for `n` params, `k` survivors.
+pub fn sparse_wire_bytes(n: usize, k: usize) -> usize {
+    let bits = index_bits(n.max(2)) as usize;
+    13 + (k * bits).div_ceil(8) + 4 * k
+}
+
+/// Sparse-encode an (already pruned) weight vector as (position,
+/// value) pairs: positions bit-packed at ceil(log2 n) bits, values as
+/// raw f32. Layout (little-endian):
+/// `u32 magic 'FCS1' | u32 n | u32 k | u8 bits | positions | values`.
+pub fn sparse_encode(pruned: &[f32]) -> Vec<u8> {
+    let survivors: Vec<(usize, f32)> = pruned
+        .iter()
+        .enumerate()
+        .filter(|(_, w)| **w != 0.0)
+        .map(|(i, w)| (i, *w))
+        .collect();
+    let n = pruned.len();
+    let bits = index_bits(n.max(2));
+    let mut out = Vec::with_capacity(sparse_wire_bytes(n, survivors.len()));
+    out.extend_from_slice(&SPARSE_MAGIC.to_le_bytes());
+    out.extend_from_slice(&(n as u32).to_le_bytes());
+    out.extend_from_slice(&(survivors.len() as u32).to_le_bytes());
+    out.push(bits as u8);
+    let mut w = BitWriter::new();
+    for (pos, _) in &survivors {
+        w.write(*pos as u32, bits);
+    }
+    out.extend_from_slice(w.as_bytes());
+    for (_, v) in &survivors {
+        out.extend_from_slice(&v.to_le_bytes());
+    }
+    out
+}
+
+/// Decode a sparse blob back to the dense (pruned) weight vector.
+pub fn sparse_decode(bytes: &[u8]) -> Result<Vec<f32>, CodecError> {
+    let take = |i: usize, n: usize| -> Result<&[u8], CodecError> {
+        if i + n > bytes.len() {
+            return Err(CodecError::Truncated {
+                what: "sparse blob",
+            });
+        }
+        Ok(&bytes[i..i + n])
+    };
+    if u32::from_le_bytes(take(0, 4)?.try_into().unwrap()) != SPARSE_MAGIC {
+        return Err(malformed("bad sparse magic"));
+    }
+    let n = u32::from_le_bytes(take(4, 4)?.try_into().unwrap()) as usize;
+    let k = u32::from_le_bytes(take(8, 4)?.try_into().unwrap()) as usize;
+    let bits = take(12, 1)?[0] as u32;
+    if k > n {
+        return Err(malformed(format!(
+            "sparse blob claims {k} survivors of {n} params"
+        )));
+    }
+    if bits != index_bits(n.max(2)) {
+        return Err(malformed(format!(
+            "sparse blob bit width {bits} does not match {n} params"
+        )));
+    }
+    let pos_bytes = (k * bits as usize).div_ceil(8);
+    let mut r = BitReader::new(take(13, pos_bytes)?);
+    let mut positions = Vec::with_capacity(k);
+    for _ in 0..k {
+        match r.read(bits) {
+            Some(p) if (p as usize) < n => positions.push(p as usize),
+            Some(p) => return Err(malformed(format!("position {p} out of range {n}"))),
+            None => {
+                return Err(CodecError::Truncated {
+                    what: "sparse position stream",
+                })
+            }
+        }
+    }
+    let vals = take(13 + pos_bytes, 4 * k)?;
+    if 13 + pos_bytes + 4 * k != bytes.len() {
+        return Err(malformed("trailing garbage after sparse values"));
+    }
+    let mut theta = vec![0.0f32; n];
+    for (j, &pos) in positions.iter().enumerate() {
+        theta[pos] = f32::from_le_bytes(vals[4 * j..4 * j + 4].try_into().unwrap());
+    }
+    Ok(theta)
+}
+
+/// Magnitude pruning: keep the top `keep` fraction of weights by
+/// |magnitude|, zero the rest. Terminal form is the sparse format.
+pub struct TopkStage {
+    pub keep: f64,
+}
+
+impl Stage for TopkStage {
+    fn name(&self) -> &'static str {
+        "topk"
+    }
+    fn spec(&self) -> String {
+        format!("topk(keep={})", self.keep)
+    }
+    fn input_kind(&self) -> DataKind {
+        DataKind::Floats
+    }
+    fn output_kind(&self) -> DataKind {
+        DataKind::Floats
+    }
+
+    fn encode(
+        &self,
+        data: StageData,
+        _input: &CodecInput<'_>,
+        _rng: &mut Rng,
+    ) -> Result<StageData, CodecError> {
+        match data {
+            StageData::Floats(mut v) => {
+                magnitude_prune(&mut v, self.keep);
+                Ok(StageData::Floats(v))
+            }
+            other => Err(wrong_kind("topk", DataKind::Floats, &other)),
+        }
+    }
+
+    fn wire_len(&self, data: &StageData) -> usize {
+        match data {
+            StageData::Floats(v) => {
+                let k = v.iter().filter(|w| **w != 0.0).count();
+                sparse_wire_bytes(v.len(), k)
+            }
+            StageData::Indexed { indices, .. } => sparse_wire_bytes(indices.len(), indices.len()),
+        }
+    }
+
+    fn serialize(&self, data: &StageData, _input: &CodecInput<'_>) -> Result<Vec<u8>, CodecError> {
+        match data {
+            StageData::Floats(v) => Ok(sparse_encode(v)),
+            other => Err(wrong_kind("topk", DataKind::Floats, other)),
+        }
+    }
+
+    fn deserialize(&self, payload: &[u8]) -> Result<StageData, CodecError> {
+        Ok(StageData::Floats(sparse_decode(payload)?))
+    }
+
+    fn backward(&self, data: StageData) -> Result<StageData, CodecError> {
+        // pruning is not invertible: the pruned vector IS the decode
+        Ok(data)
+    }
+}
+
+// --- kmeans (per-blob codebook fit) -----------------------------------------
+
+/// Fit a fresh `c`-entry 1-D k-means codebook on the incoming floats
+/// (consuming the caller's RNG stream exactly like the hand-rolled
+/// FedZip path did) and snap. Terminal form is the flat-packed
+/// clustered container.
+pub struct KmeansStage {
+    pub c: usize,
+    pub iters: usize,
+}
+
+impl Stage for KmeansStage {
+    fn name(&self) -> &'static str {
+        "kmeans"
+    }
+    fn spec(&self) -> String {
+        format!("kmeans(c={},iters={})", self.c, self.iters)
+    }
+    fn input_kind(&self) -> DataKind {
+        DataKind::Floats
+    }
+    fn output_kind(&self) -> DataKind {
+        DataKind::Indexed
+    }
+
+    fn encode(
+        &self,
+        data: StageData,
+        _input: &CodecInput<'_>,
+        rng: &mut Rng,
+    ) -> Result<StageData, CodecError> {
+        match data {
+            StageData::Floats(mut v) => {
+                if v.is_empty() {
+                    return Err(CodecError::EmptyInput { stage: "kmeans" });
+                }
+                let (codebook, _, _) = kmeans_1d(&v, self.c, self.iters, rng);
+                let indices = snap(&mut v, &codebook);
+                Ok(StageData::Indexed { codebook, indices })
+            }
+            other => Err(wrong_kind("kmeans", DataKind::Floats, &other)),
+        }
+    }
+
+    fn wire_len(&self, data: &StageData) -> usize {
+        match data {
+            StageData::Indexed { codebook, indices } => {
+                flat_wire_bytes(codebook.len(), indices.len())
+            }
+            StageData::Floats(v) => flat_wire_bytes(self.c, v.len()),
+        }
+    }
+
+    fn serialize(&self, data: &StageData, _input: &CodecInput<'_>) -> Result<Vec<u8>, CodecError> {
+        serialize_indexed_flat("kmeans", data)
+    }
+
+    fn deserialize(&self, payload: &[u8]) -> Result<StageData, CodecError> {
+        deserialize_clustered(payload)
+    }
+
+    fn backward(&self, data: StageData) -> Result<StageData, CodecError> {
+        Ok(StageData::Floats(data.to_floats()))
+    }
+}
+
+// --- codebook (snap to the caller's centroid table) -------------------------
+
+/// Snap to the *caller-provided* sorted codebook
+/// (`CodecInput::centroids`): FedCompress's transport, lossless once
+/// the model is centroid-structured. Terminal form is flat-packed.
+pub struct CodebookStage;
+
+impl Stage for CodebookStage {
+    fn name(&self) -> &'static str {
+        "codebook"
+    }
+    fn spec(&self) -> String {
+        "codebook".to_string()
+    }
+    fn input_kind(&self) -> DataKind {
+        DataKind::Floats
+    }
+    fn output_kind(&self) -> DataKind {
+        DataKind::Indexed
+    }
+
+    fn encode(
+        &self,
+        data: StageData,
+        input: &CodecInput<'_>,
+        _rng: &mut Rng,
+    ) -> Result<StageData, CodecError> {
+        let Some(centroids) = input.centroids else {
+            return Err(CodecError::MissingCodebook { stage: "codebook" });
+        };
+        let codebook = centroids.active_codebook();
+        if codebook.is_empty() {
+            return Err(CodecError::MissingCodebook { stage: "codebook" });
+        }
+        match data {
+            StageData::Floats(mut v) => {
+                let indices = snap(&mut v, &codebook);
+                Ok(StageData::Indexed { codebook, indices })
+            }
+            other => Err(wrong_kind("codebook", DataKind::Floats, &other)),
+        }
+    }
+
+    fn wire_len(&self, data: &StageData) -> usize {
+        match data {
+            StageData::Indexed { codebook, indices } => {
+                flat_wire_bytes(codebook.len(), indices.len())
+            }
+            StageData::Floats(v) => flat_wire_bytes(1, v.len()),
+        }
+    }
+
+    fn serialize(&self, data: &StageData, _input: &CodecInput<'_>) -> Result<Vec<u8>, CodecError> {
+        serialize_indexed_flat("codebook", data)
+    }
+
+    fn deserialize(&self, payload: &[u8]) -> Result<StageData, CodecError> {
+        deserialize_clustered(payload)
+    }
+
+    fn backward(&self, data: StageData) -> Result<StageData, CodecError> {
+        Ok(StageData::Floats(data.to_floats()))
+    }
+}
+
+// --- huffman (entropy stage) ------------------------------------------------
+
+/// Entropy-code an index stream inside the clustered container,
+/// picking canonical Huffman or flat packing per blob — exactly the
+/// adaptive choice the hand-rolled FedZip/FedCompress encoders made.
+/// Terminal-only: its compression lives in serialization.
+pub struct HuffmanStage;
+
+impl Stage for HuffmanStage {
+    fn name(&self) -> &'static str {
+        "huffman"
+    }
+    fn spec(&self) -> String {
+        "huffman".to_string()
+    }
+    fn input_kind(&self) -> DataKind {
+        DataKind::Indexed
+    }
+    fn output_kind(&self) -> DataKind {
+        DataKind::Indexed
+    }
+    fn terminal_only(&self) -> bool {
+        true
+    }
+
+    fn encode(
+        &self,
+        data: StageData,
+        _input: &CodecInput<'_>,
+        _rng: &mut Rng,
+    ) -> Result<StageData, CodecError> {
+        match data {
+            d @ StageData::Indexed { .. } => Ok(d),
+            other => Err(wrong_kind("huffman", DataKind::Indexed, &other)),
+        }
+    }
+
+    fn serialize(&self, data: &StageData, _input: &CodecInput<'_>) -> Result<Vec<u8>, CodecError> {
+        match data {
+            StageData::Indexed { codebook, indices } => {
+                if codebook.is_empty() {
+                    return Err(CodecError::EmptyInput { stage: "huffman" });
+                }
+                Ok(clustered_encode(codebook, indices).bytes)
+            }
+            other => Err(wrong_kind("huffman", DataKind::Indexed, other)),
+        }
+    }
+
+    fn deserialize(&self, payload: &[u8]) -> Result<StageData, CodecError> {
+        deserialize_clustered(payload)
+    }
+
+    fn backward(&self, data: StageData) -> Result<StageData, CodecError> {
+        Ok(data)
+    }
+}
+
+// --- delta (cross-round residual coding) ------------------------------------
+
+/// Previous index stream per stream id, kept separately for the encode
+/// and decode directions so one instance can serve both sides of a
+/// loopback without corrupting itself.
+type DeltaState = Mutex<HashMap<u64, (usize, Vec<u32>)>>;
+
+/// Cross-round residual coding of index streams
+/// (`compression::delta`): when consecutive blobs on one stream share
+/// most assignments, ship only the changed (position, index) pairs.
+/// Self-describing fallback: blobs that would not beat flat packing
+/// ship flat, so the first blob of a stream and codebook-size changes
+/// cost nothing extra. Terminal-only and stateful per stream id —
+/// resumed runs start a fresh stream (their first blob ships flat).
+///
+/// Layout: `u64 stream | u16 c | f32 codebook[c] | u32 n | u8 mode |
+/// body` where mode 0 = flat-packed indices and mode 1 = a
+/// `delta_encode` blob against the stream's previous indices.
+#[derive(Default)]
+pub struct DeltaStage {
+    enc: DeltaState,
+    dec: DeltaState,
+}
+
+const DELTA_MODE_FLAT: u8 = 0;
+const DELTA_MODE_DELTA: u8 = 1;
+
+impl Stage for DeltaStage {
+    fn name(&self) -> &'static str {
+        "delta"
+    }
+    fn spec(&self) -> String {
+        "delta".to_string()
+    }
+    fn input_kind(&self) -> DataKind {
+        DataKind::Indexed
+    }
+    fn output_kind(&self) -> DataKind {
+        DataKind::Indexed
+    }
+    fn terminal_only(&self) -> bool {
+        true
+    }
+
+    fn encode(
+        &self,
+        data: StageData,
+        _input: &CodecInput<'_>,
+        _rng: &mut Rng,
+    ) -> Result<StageData, CodecError> {
+        match data {
+            d @ StageData::Indexed { .. } => Ok(d),
+            other => Err(wrong_kind("delta", DataKind::Indexed, &other)),
+        }
+    }
+
+    fn serialize(&self, data: &StageData, input: &CodecInput<'_>) -> Result<Vec<u8>, CodecError> {
+        let StageData::Indexed { codebook, indices } = data else {
+            return Err(wrong_kind("delta", DataKind::Indexed, data));
+        };
+        let c = codebook.len();
+        if c == 0 || c > u16::MAX as usize {
+            return Err(malformed(format!("delta codebook size {c} out of range")));
+        }
+        let mut out = Vec::new();
+        out.extend_from_slice(&input.stream.to_le_bytes());
+        out.extend_from_slice(&(c as u16).to_le_bytes());
+        for &v in codebook {
+            out.extend_from_slice(&v.to_le_bytes());
+        }
+        out.extend_from_slice(&(indices.len() as u32).to_le_bytes());
+
+        let mut state = self.enc.lock().expect("delta encode state");
+        let prev = state.get(&input.stream);
+        let body = match prev {
+            Some((pc, pi)) if *pc == c && pi.len() == indices.len() => {
+                delta_encode(pi, indices, c)
+            }
+            _ => None,
+        };
+        match body {
+            Some(blob) => {
+                out.push(DELTA_MODE_DELTA);
+                out.extend_from_slice(&blob);
+            }
+            None => {
+                out.push(DELTA_MODE_FLAT);
+                let bits = index_bits(c);
+                let mut w = BitWriter::new();
+                for &i in indices {
+                    w.write(i, bits);
+                }
+                out.extend_from_slice(w.as_bytes());
+            }
+        }
+        state.insert(input.stream, (c, indices.clone()));
+        Ok(out)
+    }
+
+    fn deserialize(&self, payload: &[u8]) -> Result<StageData, CodecError> {
+        let take = |i: usize, n: usize| -> Result<&[u8], CodecError> {
+            if i + n > payload.len() {
+                return Err(CodecError::Truncated { what: "delta blob" });
+            }
+            Ok(&payload[i..i + n])
+        };
+        let stream = u64::from_le_bytes(take(0, 8)?.try_into().unwrap());
+        let c = u16::from_le_bytes(take(8, 2)?.try_into().unwrap()) as usize;
+        if c == 0 {
+            return Err(malformed("delta blob with empty codebook"));
+        }
+        let mut codebook = Vec::with_capacity(c);
+        for j in 0..c {
+            codebook.push(f32::from_le_bytes(take(10 + 4 * j, 4)?.try_into().unwrap()));
+        }
+        let base = 10 + 4 * c;
+        let n = u32::from_le_bytes(take(base, 4)?.try_into().unwrap()) as usize;
+        let mode = take(base + 4, 1)?[0];
+        let body = &payload[base + 5..];
+
+        let mut state = self.dec.lock().expect("delta decode state");
+        let indices = match mode {
+            DELTA_MODE_FLAT => {
+                let bits = index_bits(c);
+                let mut r = BitReader::new(body);
+                let mut v = Vec::with_capacity(n);
+                for _ in 0..n {
+                    match r.read(bits) {
+                        Some(x) if (x as usize) < c => v.push(x),
+                        Some(x) => {
+                            return Err(malformed(format!("index {x} out of codebook range {c}")))
+                        }
+                        None => {
+                            return Err(CodecError::Truncated {
+                                what: "delta flat index stream",
+                            })
+                        }
+                    }
+                }
+                v
+            }
+            DELTA_MODE_DELTA => {
+                let Some((pc, prev)) = state.get(&stream) else {
+                    return Err(malformed(format!(
+                        "delta blob on unknown stream {stream} (receiver has no baseline)"
+                    )));
+                };
+                if *pc != c || prev.len() != n {
+                    return Err(malformed(format!(
+                        "delta stream {stream} desynchronized: baseline is {}x{}, blob \
+                         claims {n}x{c}",
+                        prev.len(),
+                        pc
+                    )));
+                }
+                delta_decode(prev, body, c).map_err(|e| malformed(format!("delta body: {e}")))?
+            }
+            other => return Err(malformed(format!("unknown delta mode {other}"))),
+        };
+        state.insert(stream, (c, indices.clone()));
+        Ok(StageData::Indexed { codebook, indices })
+    }
+
+    fn backward(&self, data: StageData) -> Result<StageData, CodecError> {
+        Ok(data)
+    }
+}
+
+// --- shared helpers ---------------------------------------------------------
+
+/// Flat-packed clustered container for an `Indexed` stream (the
+/// terminal form of `kmeans`/`codebook`).
+fn serialize_indexed_flat(stage: &'static str, data: &StageData) -> Result<Vec<u8>, CodecError> {
+    match data {
+        StageData::Indexed { codebook, indices } => {
+            if codebook.is_empty() {
+                return Err(CodecError::EmptyInput { stage });
+            }
+            Ok(encode_flat(codebook, indices).bytes)
+        }
+        other => Err(wrong_kind(stage, DataKind::Indexed, other)),
+    }
+}
+
+/// Decode a clustered container (flat or Huffman payload) back to an
+/// `Indexed` stream.
+fn deserialize_clustered(payload: &[u8]) -> Result<StageData, CodecError> {
+    let (_, indices, codebook) =
+        clustered_decode(payload).map_err(|e| malformed(format!("clustered payload: {e}")))?;
+    Ok(StageData::Indexed { codebook, indices })
+}

@@ -18,6 +18,10 @@
 //!   traffic is tracked separately by the TCP transport
 //!   (`net::TcpTransport::control_bytes`).
 
+use std::collections::BTreeMap;
+
+use crate::codec::StageBytes;
+
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum Direction {
     /// server -> client (model dispatch)
@@ -36,9 +40,23 @@ pub struct Transfer {
     pub framed_bytes: usize,
 }
 
+/// Per-stage byte totals across a run, one per direction. `bytes[i]`
+/// of a stage is "what the stream would have cost had the pipeline
+/// stopped there", so totals read as a compression trace, not an
+/// additive decomposition (the *last* stage's total equals the
+/// direction's ideal bytes for pipeline-encoded transfers).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct StageTotal {
+    pub down: usize,
+    pub up: usize,
+}
+
 #[derive(Clone, Debug, Default)]
 pub struct CommLedger {
     transfers: Vec<Transfer>,
+    /// Codec-stage breakdown (runtime observability; not persisted in
+    /// run records — the record carries the codec spec instead).
+    stage_totals: BTreeMap<String, StageTotal>,
 }
 
 impl CommLedger {
@@ -54,6 +72,32 @@ impl CommLedger {
             bytes,
             framed_bytes: framed,
         });
+    }
+
+    /// Fold one blob's per-stage breakdown into the run totals.
+    pub fn record_stages(&mut self, direction: Direction, stages: &[StageBytes]) {
+        for s in stages {
+            let t = self.stage_totals.entry(s.stage.clone()).or_default();
+            match direction {
+                Direction::Down => t.down += s.bytes,
+                Direction::Up => t.up += s.bytes,
+            }
+        }
+    }
+
+    /// Per-stage byte totals, keyed by stage name.
+    pub fn stage_totals(&self) -> &BTreeMap<String, StageTotal> {
+        &self.stage_totals
+    }
+
+    /// One-line per-stage summary (empty string when nothing was
+    /// pipeline-encoded).
+    pub fn render_stage_totals(&self) -> String {
+        let mut parts = Vec::with_capacity(self.stage_totals.len());
+        for (stage, t) in &self.stage_totals {
+            parts.push(format!("{stage}: down {} B / up {} B", t.down, t.up));
+        }
+        parts.join(", ")
     }
 
     pub fn transfers(&self) -> &[Transfer] {
@@ -147,6 +191,32 @@ mod tests {
         }
         // the ideal totals are untouched by framing
         assert_eq!(l.total_bytes(), 1250);
+    }
+
+    #[test]
+    fn stage_totals_accumulate_per_direction() {
+        let mut l = CommLedger::new();
+        let stages = |a: usize, b: usize| {
+            vec![
+                StageBytes {
+                    stage: "topk".to_string(),
+                    bytes: a,
+                },
+                StageBytes {
+                    stage: "huffman".to_string(),
+                    bytes: b,
+                },
+            ]
+        };
+        l.record_stages(Direction::Up, &stages(100, 40));
+        l.record_stages(Direction::Up, &stages(110, 42));
+        l.record_stages(Direction::Down, &stages(50, 20));
+        let t = l.stage_totals();
+        assert_eq!(t["topk"], StageTotal { down: 50, up: 210 });
+        assert_eq!(t["huffman"], StageTotal { down: 20, up: 82 });
+        let rendered = l.render_stage_totals();
+        assert!(rendered.contains("topk: down 50 B / up 210 B"), "{rendered}");
+        assert_eq!(CommLedger::new().render_stage_totals(), "");
     }
 
     #[test]

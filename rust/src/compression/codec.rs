@@ -74,19 +74,41 @@ pub fn index_bits(c: usize) -> u32 {
     (usize::BITS - (c.max(2) - 1).leading_zeros()).max(1)
 }
 
+/// Exact wire size of a *flat-packed* `encode_flat` blob: 12-byte
+/// header + codebook + u64 bit count + bit-packed indices. The
+/// `kmeans`/`codebook` codec stages ledger intermediate streams with
+/// this formula, so it must stay in lockstep with the encoder layout.
+pub fn flat_wire_bytes(c: usize, n: usize) -> usize {
+    12 + 4 * c + 8 + (n * index_bits(c) as usize).div_ceil(8)
+}
+
+/// Encode quantized weights as (codebook, indices), always flat
+/// bit-packing (no entropy stage) — the terminal form of a pipeline
+/// that stops at a clustering stage.
+pub fn encode_flat(codebook: &[f32], indices: &[u32]) -> EncodedModel {
+    encode_inner(codebook, indices, true)
+}
+
 /// Encode quantized weights as (codebook, indices).
 /// `indices[i]` must reference `codebook`; panics on out-of-range.
 pub fn encode(codebook: &[f32], indices: &[u32]) -> EncodedModel {
+    encode_inner(codebook, indices, false)
+}
+
+fn encode_inner(codebook: &[f32], indices: &[u32], force_flat: bool) -> EncodedModel {
     assert!(!codebook.is_empty() && codebook.len() <= u16::MAX as usize);
     let c = codebook.len();
     let bits = index_bits(c);
 
     // candidate 1: flat packing
     let flat_bits = indices.len() * bits as usize;
-    // candidate 2: huffman
-    let huff: HuffmanEncoded = huffman_encode(indices, c);
+    // candidate 2: huffman (skipped entirely when flat is forced)
+    let huff: Option<HuffmanEncoded> =
+        (!force_flat).then(|| huffman_encode(indices, c));
 
-    let use_huffman = huff.wire_bytes() < flat_bits.div_ceil(8);
+    let use_huffman = huff
+        .as_ref()
+        .is_some_and(|h| h.wire_bytes() < flat_bits.div_ceil(8));
 
     let mut out = Vec::new();
     put_u32(&mut out, MAGIC);
@@ -98,6 +120,7 @@ pub fn encode(codebook: &[f32], indices: &[u32]) -> EncodedModel {
         out.extend_from_slice(&v.to_le_bytes());
     }
     if use_huffman {
+        let huff = huff.expect("use_huffman implies candidate built");
         out.extend_from_slice(&huff.lengths);
         put_u64(&mut out, huff.payload_bits as u64);
         out.extend_from_slice(&huff.payload);
@@ -223,6 +246,34 @@ mod tests {
         let mut short = enc.bytes.clone();
         short.truncate(10);
         assert!(decode(&short).is_err());
+    }
+
+    /// `encode_flat` must match the formula the codec stages ledger
+    /// intermediate streams with, and decode like any other container.
+    #[test]
+    fn forced_flat_matches_the_size_formula() {
+        let mut rng = Rng::new(5);
+        for &(n, c) in &[(1usize, 2usize), (100, 3), (4096, 16), (777, 31)] {
+            let cb: Vec<f32> = {
+                let mut v: Vec<f32> = (0..c).map(|_| rng.normal()).collect();
+                v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+                v
+            };
+            let idx: Vec<u32> = (0..n).map(|_| rng.below(c) as u32).collect();
+            let enc = encode_flat(&cb, &idx);
+            assert_eq!(enc.wire_bytes(), flat_wire_bytes(c, n), "n={n} c={c}");
+            let (_, idx2, cb2) = decode(&enc.bytes).unwrap();
+            assert_eq!(idx2, idx);
+            assert_eq!(cb2, cb);
+            // forced flat is never larger than needed: the adaptive
+            // encoder may only beat it
+            assert!(encode(&cb, &idx).wire_bytes() <= enc.wire_bytes());
+        }
+        // empty index stream: header + codebook + zero-bit payload
+        let enc = encode_flat(&[0.5f32], &[]);
+        assert_eq!(enc.wire_bytes(), flat_wire_bytes(1, 0));
+        let (w, i, _) = decode(&enc.bytes).unwrap();
+        assert!(w.is_empty() && i.is_empty());
     }
 
     #[test]

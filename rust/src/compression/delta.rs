@@ -4,6 +4,11 @@
 //! the full stream. The encoder picks whichever is smaller and flags it,
 //! so the receiver is format-agnostic. This is the natural next step the
 //! paper's conclusion gestures at for the downstream channel.
+//!
+//! Wired into the codec layer as the registered `delta` stage
+//! ([`crate::codec::stages::DeltaStage`]): `codebook|delta` ships
+//! residuals against the previous round's blob on the same stream and
+//! crosses the TCP transport like any other registered codec.
 
 use anyhow::{bail, Result};
 

@@ -258,10 +258,48 @@ mod tests {
         assert_eq!(huffman_decode(&enc).unwrap(), symbols);
     }
 
+    /// Edge case: a stream whose alphabet has exactly one *distinct*
+    /// symbol present must round-trip cleanly — the canonical table
+    /// degenerates to a single length-1 code, never a panic — and an
+    /// absent-symbol table row stays 0 (no phantom codes).
+    #[test]
+    fn single_distinct_symbol_stream_round_trips() {
+        for n in [1usize, 7, 4096] {
+            let symbols = vec![0u32; n];
+            let enc = huffman_encode(&symbols, 16);
+            assert_eq!(enc.lengths[0], 1, "present symbol gets a real code");
+            assert!(enc.lengths[1..].iter().all(|&l| l == 0), "absent = 0");
+            assert_eq!(enc.payload_bits, n);
+            assert_eq!(huffman_decode(&enc).unwrap(), symbols);
+        }
+    }
+
     #[test]
     fn empty_stream() {
         let enc = huffman_encode(&[], 4);
         assert_eq!(huffman_decode(&enc).unwrap(), Vec::<u32>::new());
+    }
+
+    /// Edge case: empty input over an empty alphabet is a 0-byte table
+    /// and a 0-bit payload — encode and decode both succeed, and a
+    /// *nonempty* claimed stream over an empty table is a typed error,
+    /// never a panic or a bogus decode.
+    #[test]
+    fn empty_input_is_zero_byte_table_not_a_panic() {
+        let enc = huffman_encode(&[], 0);
+        assert!(enc.lengths.is_empty());
+        assert_eq!(enc.payload_bits, 0);
+        assert_eq!(enc.wire_bytes(), 8); // just the u64 count slot
+        assert_eq!(huffman_decode(&enc).unwrap(), Vec::<u32>::new());
+
+        let lying = HuffmanEncoded {
+            lengths: Vec::new(),
+            payload: Vec::new(),
+            n_symbols: 5,
+            payload_bits: 0,
+        };
+        let err = huffman_decode(&lying).unwrap_err().to_string();
+        assert!(err.contains("empty code table"), "{err}");
     }
 
     #[test]

@@ -1,13 +1,21 @@
 //! Model-compression substrate: everything that turns a flat f32
-//! parameter vector into bytes on the (simulated) wire and back.
+//! parameter vector into bytes on the (simulated) wire and back. These
+//! primitives surface as registered, composable stages in the
+//! first-class codec layer ([`crate::codec`]) — strategies declare
+//! pipelines like `topk|kmeans|huffman` instead of calling this module
+//! directly.
 //!
-//! * `kmeans`    — 1-D Lloyd's algorithm + k-means++ init (codebook fit)
-//! * `codec`     — clustered-weight wire format: codebook + bit-packed
-//!                 indices (FedCompress's transport)
-//! * `huffman`   — canonical Huffman coder over index streams (FedZip's
-//!                 extra entropy stage)
-//! * `sparsify`  — magnitude pruning (FedZip's first stage)
+//! * `kmeans`    — 1-D Lloyd's algorithm + k-means++ init (codebook
+//!                 fit; the `kmeans`/`codebook` stages)
+//! * `codec`     — clustered-weight wire container: codebook +
+//!                 bit-packed or entropy-coded indices
+//! * `huffman`   — canonical Huffman coder over index streams (the
+//!                 `huffman` stage)
+//! * `sparsify`  — magnitude pruning (the `topk` stage)
+//! * `delta`     — cross-round residual coding of index streams (the
+//!                 `delta` stage)
 //! * `accounting`— byte-exact bidirectional communication ledger (CCR)
+//!                 with per-codec-stage totals
 
 pub mod accounting;
 pub mod codec;

@@ -55,6 +55,11 @@ pub struct FedConfig {
     pub topk_keep: f64,
     /// worker threads for the parallel client encode step (0 = auto)
     pub upload_workers: usize,
+    /// codec pipeline spec overriding every strategy's compressed
+    /// *upload* path (e.g. `topk|kmeans|huffman`; see `--codec list`).
+    /// Empty = each strategy's declared default, byte-identical to the
+    /// pre-codec-API runs. Sweepable via `--axis codec=a,b`.
+    pub codec: String,
     /// fleet simulation knobs: preset, extra dropout, round deadline.
     /// The default is the ideal fleet — byte-identical to pre-sim runs.
     pub fleet: FleetConfig,
@@ -87,6 +92,7 @@ impl FedConfig {
             fedzip_keep: 0.6,
             topk_keep: 0.1,
             upload_workers: 0,
+            codec: String::new(),
             fleet: FleetConfig::default(),
             seed: 42,
         }
@@ -133,6 +139,13 @@ impl FedConfig {
         if !(self.topk_keep > 0.0 && self.topk_keep <= 1.0) {
             bail!("topk_keep must be in (0, 1]");
         }
+        if !self.codec.is_empty() {
+            // resolve against the built-in codec registry so typos fail
+            // here (with a suggestion), before anything runs
+            crate::codec::CodecRegistry::builtin()
+                .build(&self.codec)
+                .map_err(|e| anyhow::anyhow!("codec '{}': {e}", self.codec))?;
+        }
         if !(0.0..1.0).contains(&self.fleet.dropout) {
             bail!("fleet dropout must be in [0, 1)");
         }
@@ -178,6 +191,7 @@ impl FedConfig {
             "workers" | "upload_workers" => {
                 self.upload_workers = value.parse().with_context(e)?
             }
+            "codec" => self.codec = value.to_string(),
             "fleet" => self.fleet.preset = FleetPreset::from_name(value)?,
             "dropout" => self.fleet.dropout = value.parse().with_context(e)?,
             "deadline_s" => self.fleet.deadline_s = value.parse().with_context(e)?,
@@ -250,6 +264,19 @@ mod tests {
         assert!(c.validate().is_err());
         c.topk_keep = 1.5;
         assert!(c.validate().is_err());
+    }
+
+    #[test]
+    fn codec_override_and_validation() {
+        let mut c = FedConfig::quick("cifar10");
+        assert!(c.codec.is_empty(), "default must be the declared pipelines");
+        c.set("codec", "topk(keep=0.2)|kmeans(c=8)|huffman").unwrap();
+        c.validate().unwrap();
+        c.set("codec", "topk|kmean").unwrap();
+        let err = c.validate().unwrap_err().to_string();
+        assert!(err.contains("did you mean 'kmeans'"), "{err}");
+        c.set("codec", "").unwrap();
+        c.validate().unwrap();
     }
 
     #[test]

@@ -245,6 +245,7 @@ pub fn run_with_strategy_opts(
             // the server pushes the dispatch before it can know which
             // clients will fault, so every selected client is ledgered
             ledger.record(round, Direction::Down, down.bytes, down_framed);
+            ledger.record_stages(Direction::Down, &down.stage_bytes);
             events.push(Event::Dispatch {
                 round,
                 client: k,
@@ -339,6 +340,7 @@ pub fn run_with_strategy_opts(
             max_reporting_s = max_reporting_s.max(sim_s);
             let up_framed = framed_up(up.blob.bytes);
             ledger.record(round, Direction::Up, up.blob.bytes, up_framed);
+            ledger.record_stages(Direction::Up, &up.blob.stage_bytes);
             up_bytes_round += up.blob.bytes;
             events.push(Event::Upload {
                 round,

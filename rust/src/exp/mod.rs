@@ -1,7 +1,21 @@
 //! Experiment drivers: one per paper table/figure (DESIGN.md §4), plus
 //! the fleet scenario table (`fleet`, beyond the paper).
+//!
+//! Every driver runs under the config's codec pipeline override when
+//! one is set (`--codec` / `--axis codec=`): run-store content keys
+//! cover the spec, so cached rows never mix pipelines, and the CLI
+//! prints the [`codec_banner`] so a table is never misread as the
+//! strategies' declared defaults.
 
 pub mod figure2;
 pub mod fleet;
 pub mod table1;
 pub mod table2;
+
+use crate::config::FedConfig;
+
+/// One-line banner naming the active codec override, if any — printed
+/// by the table drivers so compressed-variant tables are labeled.
+pub fn codec_banner(cfg: &FedConfig) -> Option<String> {
+    (!cfg.codec.is_empty()).then(|| format!("codec override: {}", cfg.codec))
+}

@@ -36,6 +36,35 @@
 //! the coordinator thread — the PJRT client is thread-confined,
 //! faithful to a single shared accelerator.
 //!
+//! # Codec API
+//!
+//! Compression is a first-class subsystem shaped like the strategy
+//! API: [`codec::Stage`]s (the `compression/` substrate as registry
+//! parts — `dense`, `topk`, `kmeans`, `codebook`, `huffman`, `delta`)
+//! compose into [`codec::Pipeline`]s parsed from spec strings
+//! (`topk(keep=0.6)|kmeans(c=15,iters=25)|huffman` — FedZip,
+//! literally), resolved by name through [`codec::CodecRegistry`] with
+//! aliases and typo suggestions. A pipeline's canonical spec is also
+//! its self-describing wire header: `net::proto` ships it ahead of
+//! every payload and the receiver decodes through a
+//! [`codec::CodecCache`], so *any* codec registered on both ends —
+//! including downstream user codecs — crosses the TCP transport
+//! end-to-end (the old `Opaque` in-process-only carve-out is gone).
+//! Per-stage wire bytes are ledgered individually
+//! (`CommLedger::stage_totals`).
+//!
+//! CLI surface:
+//!
+//! * `--codec <spec>` — override every strategy's compressed-upload
+//!   pipeline for a run (`--set codec=`): it applies exactly where the
+//!   strategy's declared upload pipeline did, so warmup-dense
+//!   strategies stay dense during warmup and always-compressed ones
+//!   (fedzip, topk) apply it from round 0;
+//! * `--codec list` — print the codec registry (`train`);
+//! * `sweep --axis codec=a,b` — sweep pipelines x strategies x fleets
+//!   through the run store; the spec participates in the bit-exact
+//!   config image and therefore in record content keys.
+//!
 //! # Fleet simulation
 //!
 //! Real FL fleets are dominated by client heterogeneity — stragglers,
@@ -136,6 +165,7 @@ pub mod check;
 pub mod cli;
 pub mod client;
 pub mod clustering;
+pub mod codec;
 pub mod compression;
 pub mod config;
 pub mod coordinator;

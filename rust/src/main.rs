@@ -8,6 +8,7 @@ use anyhow::{Context, Result};
 use fedcompress::baselines::StrategyRegistry;
 use fedcompress::cli::{Args, ParsedCommand, USAGE};
 use fedcompress::clustering::ControllerConfig;
+use fedcompress::codec::CodecRegistry;
 use fedcompress::compression::accounting::ccr;
 use fedcompress::config::FedConfig;
 use fedcompress::coordinator::checkpoint::Checkpoint;
@@ -39,6 +40,10 @@ fn build_config(args: &Args) -> Result<FedConfig> {
     }
     for (k, v) in &args.sets {
         cfg.set(k, v)?;
+    }
+    // codec pipeline override (sugar over --set codec=<spec>)
+    if let Some(spec) = args.flag("codec") {
+        cfg.set("codec", spec)?;
     }
     // fleet simulation flags (sugar over --set fleet=/dropout=/deadline_s=)
     if let Some(name) = args.flag("fleet") {
@@ -133,6 +138,14 @@ fn finish_run(args: &Args, cfg: &FedConfig, result: &RunResult, transport: &str)
         result.dense_model_bytes,
         result.final_model_bytes,
     );
+    // per-stage wire breakdown (codec pipelines ledger each stage)
+    let stages = result.ledger.render_stage_totals();
+    if !stages.is_empty() {
+        println!("per-stage wire bytes: {stages}");
+    }
+    if !cfg.codec.is_empty() {
+        println!("codec override: {}", cfg.codec);
+    }
     // persist the final model + codebook as a resumable checkpoint
     if let Some(path) = args.flag("checkpoint") {
         let scores: Vec<f64> = result.rounds.iter().map(|r| r.score).collect();
@@ -157,9 +170,14 @@ fn finish_run(args: &Args, cfg: &FedConfig, result: &RunResult, transport: &str)
 
 fn cmd_train(args: &Args) -> Result<()> {
     let strategy = args.flag_or("strategy", "fedcompress");
-    // `--strategy list` prints the registry without needing artifacts
+    // `--strategy list` / `--codec list` print the registries without
+    // needing artifacts
     if strategy == "list" {
         print!("{}", StrategyRegistry::builtin().render_list());
+        return Ok(());
+    }
+    if args.flag("codec") == Some("list") {
+        print!("{}", CodecRegistry::builtin().render_list());
         return Ok(());
     }
     let cfg = build_config(args)?;
@@ -242,6 +260,9 @@ fn cmd_table1(args: &Args) -> Result<()> {
         "datasets",
         "cifar10,cifar100,pathmnist,speechcommands,voxforge",
     );
+    if let Some(banner) = fedcompress::exp::codec_banner(&build_config(args)?) {
+        println!("{banner}");
+    }
     table1::print_header();
     let mut rows = Vec::new();
     let mut stats = fedcompress::sweep::CacheStats::default();
@@ -315,6 +336,9 @@ fn cmd_fleet(args: &Args) -> Result<()> {
         Some(name) => vec![FleetPreset::from_name(name)?],
         None => FleetPreset::ALL.to_vec(),
     };
+    if let Some(banner) = fedcompress::exp::codec_banner(&cfg) {
+        println!("{banner}");
+    }
     let (table, stats) = fleet::run_cached(&engine, &cfg, &presets, store.as_mut())?;
     fleet::print_table(&table);
     if store.is_some() {
@@ -437,11 +461,12 @@ fn cmd_runs(args: &Args) -> Result<()> {
             let rec = store.get(key)?.expect("resolved key exists");
             let cfg = rec.cfg()?;
             println!(
-                "run {}: {} on {} (fleet={}, seed={})",
+                "run {}: {} on {} (fleet={}, codec={}, seed={})",
                 key_hex(key),
                 rec.strategy,
                 cfg.dataset,
                 cfg.fleet.preset.name(),
+                if cfg.codec.is_empty() { "-" } else { &cfg.codec },
                 cfg.seed
             );
             println!(

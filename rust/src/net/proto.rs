@@ -19,15 +19,24 @@
 //! `bytes + DOWNLOAD_OVERHEAD` and of an upload `bytes +
 //! UPLOAD_OVERHEAD` — both fixed constants (≤ 64 bytes, asserted in
 //! tests) since the model payload crosses the wire in its *encoded*
-//! form (`WireBlob::payload`), not as dense f32s. The per-round
-//! centroid table (`RoundOpen.mu` down, `Upload.mu` up) is
+//! form (`WireBlob::payload`), not as dense f32s. Metadata that rides
+//! along — the per-round centroid table (`RoundOpen.mu` down,
+//! `Upload.mu` up), the self-describing codec header beyond its 1-byte
+//! accounting baseline, and the per-stage byte sidecar — is
 //! control-plane traffic, tracked by `TcpTransport::control_bytes`
-//! rather than the per-client ledger.
+//! rather than the per-client ledger, so ledgers stay byte-identical
+//! across transport backends and across the codec-API redesign.
+//!
+//! Codec header (versioned like the frame layer): every `Download` and
+//! `Upload` carries `u8 version | u16 spec_len | spec` ahead of its
+//! payload — the canonical codec spec string the receiver resolves
+//! against its `codec::CodecRegistry`. Any codec registered on both
+//! ends crosses the wire; the old closed 4-variant tag (and its
+//! `Opaque` in-process-only carve-out) is gone.
 
-use crate::baselines::topk::decode_topk;
-use crate::baselines::wire::{WireBlob, WireCodec};
+use crate::baselines::wire::WireBlob;
 use crate::clustering::ControllerConfig;
-use crate::compression::codec;
+use crate::codec::{CodecCache, StageBytes};
 use crate::config::FedConfig;
 use crate::sim::{FleetConfig, FleetPreset};
 
@@ -35,13 +44,35 @@ use super::frame::FRAME_OVERHEAD;
 use super::ProtoError;
 
 /// Ledgered framing cost of one `Download`: frame overhead + round(4)
-/// + client(4) + codec(1).
+/// + client(4) + codec baseline(1). The self-describing codec header
+/// is variable-length; the ledger accounts its 1-byte baseline here
+/// and the rest as control traffic ([`codec_header_surplus`]).
 pub const DOWNLOAD_OVERHEAD: usize = FRAME_OVERHEAD + 9;
 
 /// Ledgered framing cost of one `Upload`, excluding the centroid-table
-/// sidecar: frame overhead + round(4) + client(4) + score(8) + n(4) +
-/// mean_ce(4) + codec(1).
+/// and stage-byte sidecars: frame overhead + round(4) + client(4) +
+/// score(8) + n(4) + mean_ce(4) + codec baseline(1).
 pub const UPLOAD_OVERHEAD: usize = FRAME_OVERHEAD + 25;
+
+/// Version byte of the self-describing codec header.
+pub const CODEC_HEADER_VERSION: u8 = 1;
+
+/// Wire size of the codec header: version(1) + spec_len(2) + spec.
+pub fn codec_header_len(spec: &str) -> usize {
+    3 + spec.len()
+}
+
+/// Codec-header bytes beyond the 1-byte baseline the ledger accounts —
+/// tracked as control-plane traffic like the centroid sidecar.
+pub fn codec_header_surplus(spec: &str) -> usize {
+    codec_header_len(spec) - 1
+}
+
+/// Wire size of an upload's per-stage byte sidecar: count(1) + per
+/// stage name_len(1) + name + bytes(8). Control-plane traffic.
+pub fn stages_sidecar_len(stages: &[StageBytes]) -> usize {
+    1 + stages.iter().map(|s| 9 + s.stage.len()).sum::<usize>()
+}
 
 /// Framed wire size of a dispatch carrying `bytes` payload bytes.
 pub fn framed_down(bytes: usize) -> usize {
@@ -49,7 +80,8 @@ pub fn framed_down(bytes: usize) -> usize {
 }
 
 /// Ledgered framed wire size of an upload carrying `bytes` payload
-/// bytes (centroid sidecar accounted separately as control traffic).
+/// bytes (centroid/codec/stage sidecars accounted separately as
+/// control traffic).
 pub fn framed_up(bytes: usize) -> usize {
     bytes + UPLOAD_OVERHEAD
 }
@@ -91,7 +123,8 @@ pub struct RoundOpen {
 pub struct Download {
     pub round: u32,
     pub client: u32,
-    pub codec: WireCodec,
+    /// self-describing codec spec that decodes `payload`
+    pub spec: String,
     pub payload: Vec<u8>,
 }
 
@@ -103,7 +136,10 @@ pub struct Upload {
     pub n: u32,
     pub mean_ce: f32,
     pub mu: Vec<f32>,
-    pub codec: WireCodec,
+    /// per-stage wire-byte breakdown (ledger sidecar)
+    pub stages: Vec<StageBytes>,
+    /// self-describing codec spec that decodes `payload`
+    pub spec: String,
     pub payload: Vec<u8>,
 }
 
@@ -171,7 +207,7 @@ impl Msg {
             Msg::Download(d) => {
                 put_u32(&mut out, d.round);
                 put_u32(&mut out, d.client);
-                out.push(d.codec.tag());
+                put_codec_header(&mut out, &d.spec);
                 out.extend_from_slice(&d.payload);
             }
             Msg::Upload(u) => {
@@ -181,7 +217,8 @@ impl Msg {
                 put_u32(&mut out, u.n);
                 put_f32(&mut out, u.mean_ce);
                 put_f32s(&mut out, &u.mu);
-                out.push(u.codec.tag());
+                put_stages(&mut out, &u.stages);
+                put_codec_header(&mut out, &u.spec);
                 out.extend_from_slice(&u.payload);
             }
             Msg::RoundClose { round } => put_u32(&mut out, *round),
@@ -243,7 +280,7 @@ impl Msg {
             4 => Msg::Download(Download {
                 round: c.u32("download round")?,
                 client: c.u32("download client")?,
-                codec: c.codec("download codec")?,
+                spec: c.codec_spec("download codec header")?,
                 payload: c.rest(),
             }),
             5 => Msg::Upload(Upload {
@@ -253,7 +290,8 @@ impl Msg {
                 n: c.u32("upload n")?,
                 mean_ce: c.f32("upload mean_ce")?,
                 mu: c.f32s("upload centroids")?,
-                codec: c.codec("upload codec")?,
+                stages: c.stages("upload stage sidecar")?,
+                spec: c.codec_spec("upload codec header")?,
                 payload: c.rest(),
             }),
             6 => Msg::RoundClose {
@@ -296,66 +334,58 @@ pub fn write_download(
     w: &mut impl std::io::Write,
     round: u32,
     client: u32,
-    codec: WireCodec,
+    spec: &str,
     payload: &[u8],
 ) -> Result<usize, ProtoError> {
-    let mut head = [0u8; 9];
-    head[0..4].copy_from_slice(&round.to_le_bytes());
-    head[4..8].copy_from_slice(&client.to_le_bytes());
-    head[8] = codec.tag();
+    let mut head = Vec::with_capacity(8 + codec_header_len(spec));
+    put_u32(&mut head, round);
+    put_u32(&mut head, client);
+    put_codec_header(&mut head, spec);
     super::frame::write_frame_parts(w, 4, &head, payload)
 }
 
 /// Zero-copy upload send: the sidecars form the head, the encoded blob
 /// streams as the tail. Byte-identical to `Msg::Upload(..).write_to`.
 pub fn write_upload(w: &mut impl std::io::Write, up: &Upload) -> Result<usize, ProtoError> {
-    let mut head = Vec::with_capacity(25 + 4 + 4 * up.mu.len());
+    let mut head = Vec::with_capacity(
+        24 + 4 + 4 * up.mu.len() + stages_sidecar_len(&up.stages) + codec_header_len(&up.spec),
+    );
     put_u32(&mut head, up.round);
     put_u32(&mut head, up.client);
     put_f64(&mut head, up.score);
     put_u32(&mut head, up.n);
     put_f32(&mut head, up.mean_ce);
     put_f32s(&mut head, &up.mu);
-    head.push(up.codec.tag());
+    put_stages(&mut head, &up.stages);
+    put_codec_header(&mut head, &up.spec);
     super::frame::write_frame_parts(w, 5, &head, &up.payload)
 }
 
 /// Decode a blob payload back into the weight vector the sender holds
-/// (bit-exact: every built-in codec round-trips its quantized model).
-pub fn decode_blob(codec: WireCodec, payload: &[u8]) -> Result<Vec<f32>, ProtoError> {
-    match codec {
-        WireCodec::Dense => {
-            if payload.len() % 4 != 0 {
-                return Err(malformed(format!(
-                    "dense payload of {} bytes is not a whole number of f32s",
-                    payload.len()
-                )));
-            }
-            Ok(payload
-                .chunks_exact(4)
-                .map(|b| f32::from_le_bytes(b.try_into().unwrap()))
-                .collect())
-        }
-        WireCodec::Clustered => codec::decode(payload)
-            .map(|(weights, _, _)| weights)
-            .map_err(|e| malformed(format!("clustered payload: {e}"))),
-        WireCodec::Sparse => {
-            decode_topk(payload).map_err(|e| malformed(format!("sparse payload: {e}")))
-        }
-        WireCodec::Opaque => Err(malformed(
-            "opaque wire codec cannot cross the networked transport".to_string(),
-        )),
-    }
+/// (bit-exact: every registered codec round-trips its quantized
+/// model). The cache keeps one pipeline instance per spec so stateful
+/// stages (`delta`) hold their cross-round stream state.
+pub fn decode_blob(cache: &CodecCache, spec: &str, payload: &[u8]) -> Result<Vec<f32>, ProtoError> {
+    cache
+        .decode(spec, payload)
+        .map_err(|e| malformed(format!("payload under codec '{spec}': {e}")))
 }
 
-/// Rebuild a [`WireBlob`] from a received (codec, payload) pair.
-pub fn blob_from_payload(codec: WireCodec, payload: Vec<u8>) -> Result<WireBlob, ProtoError> {
-    let theta = decode_blob(codec, &payload)?;
+/// Rebuild a [`WireBlob`] from a received (spec, stages, payload)
+/// triple, decoding through `cache`.
+pub fn blob_from_payload(
+    cache: &CodecCache,
+    spec: String,
+    stages: Vec<StageBytes>,
+    payload: Vec<u8>,
+) -> Result<WireBlob, ProtoError> {
+    let theta = decode_blob(cache, &spec, &payload)?;
     Ok(WireBlob {
         bytes: payload.len(),
         theta,
-        codec,
+        spec,
         payload,
+        stage_bytes: stages,
     })
 }
 
@@ -391,6 +421,33 @@ fn put_str(v: &mut Vec<u8>, s: &str) {
     put_u16(v, s.len() as u16);
     v.extend_from_slice(s.as_bytes());
 }
+fn put_codec_header(v: &mut Vec<u8>, spec: &str) {
+    v.push(CODEC_HEADER_VERSION);
+    put_str(v, spec);
+}
+fn put_stages(v: &mut Vec<u8>, stages: &[StageBytes]) {
+    // The sidecar is observability metadata, so an out-of-spec custom
+    // codec (more stages than the cap, a name over 255 bytes) is
+    // clamped rather than panicking the send path: registry-built
+    // pipelines can never hit either bound (MAX_STAGES=8, validated
+    // short names), and a clamped sidecar still frames identically on
+    // both ends.
+    let stages = &stages[..stages.len().min(MAX_STAGE_SIDECAR)];
+    v.push(stages.len() as u8);
+    for s in stages {
+        let mut cut = s.stage.len().min(u8::MAX as usize);
+        while !s.stage.is_char_boundary(cut) {
+            cut -= 1;
+        }
+        v.push(cut as u8);
+        v.extend_from_slice(&s.stage.as_bytes()[..cut]);
+        put_u64(v, s.bytes as u64);
+    }
+}
+
+/// Cap on per-upload stage sidecar entries (pipelines are capped far
+/// below this; a corrupt count must not loop long).
+const MAX_STAGE_SIDECAR: usize = 32;
 
 // --- cursor reader with typed truncation errors ----------------------------
 
@@ -442,10 +499,34 @@ impl<'a> Cur<'a> {
         let bytes = self.take(n, what)?;
         String::from_utf8(bytes.to_vec()).map_err(|_| malformed(format!("{what}: not utf-8")))
     }
-    fn codec(&mut self, what: &'static str) -> Result<WireCodec, ProtoError> {
-        let tag = self.u8(what)?;
-        WireCodec::from_tag(tag)
-            .ok_or_else(|| malformed(format!("{what}: unknown codec tag {tag}")))
+    fn codec_spec(&mut self, what: &'static str) -> Result<String, ProtoError> {
+        let version = self.u8(what)?;
+        if version != CODEC_HEADER_VERSION {
+            return Err(malformed(format!(
+                "{what}: codec header version {version}, this build speaks v{CODEC_HEADER_VERSION}"
+            )));
+        }
+        let spec = self.str(what)?;
+        if spec.is_empty() {
+            return Err(malformed(format!("{what}: empty codec spec")));
+        }
+        Ok(spec)
+    }
+    fn stages(&mut self, what: &'static str) -> Result<Vec<StageBytes>, ProtoError> {
+        let n = self.u8(what)? as usize;
+        if n > MAX_STAGE_SIDECAR {
+            return Err(malformed(format!("{what}: {n} stages is over the cap")));
+        }
+        let mut out = Vec::with_capacity(n);
+        for _ in 0..n {
+            let len = self.u8(what)? as usize;
+            let name = self.take(len, what)?;
+            let stage = String::from_utf8(name.to_vec())
+                .map_err(|_| malformed(format!("{what}: stage name is not utf-8")))?;
+            let bytes = self.u64(what)? as usize;
+            out.push(StageBytes { stage, bytes });
+        }
+        Ok(out)
     }
     fn rest(&mut self) -> Vec<u8> {
         let out = self.b[self.i..].to_vec();
@@ -517,6 +598,7 @@ fn put_cfg(v: &mut Vec<u8>, cfg: &FedConfig) {
     put_f64(v, cfg.fedzip_keep);
     put_f64(v, cfg.topk_keep);
     put_u64(v, cfg.upload_workers as u64);
+    put_str(v, &cfg.codec);
     put_str(v, cfg.fleet.preset.name());
     put_f64(v, cfg.fleet.dropout);
     put_f64(v, cfg.fleet.deadline_s);
@@ -554,6 +636,7 @@ fn read_cfg(c: &mut Cur<'_>) -> Result<FedConfig, ProtoError> {
         fedzip_keep: c.f64(w)?,
         topk_keep: c.f64(w)?,
         upload_workers: c.u64(w)? as usize,
+        codec: c.str(w)?,
         fleet: FleetConfig {
             preset: FleetPreset::from_name(&c.str(w)?)
                 .map_err(|e| malformed(e.to_string()))?,
@@ -628,7 +711,7 @@ mod tests {
         let dl = Download {
             round: 4,
             client: 5,
-            codec: WireCodec::Clustered,
+            spec: "codebook|huffman".to_string(),
             payload: vec![9u8; 777],
         };
         match roundtrip(&Msg::Download(dl.clone())) {
@@ -643,7 +726,17 @@ mod tests {
             n: 96,
             mean_ce: 1.5,
             mu,
-            codec: WireCodec::Sparse,
+            stages: vec![
+                StageBytes {
+                    stage: "topk".to_string(),
+                    bytes: 4000,
+                },
+                StageBytes {
+                    stage: "huffman".to_string(),
+                    bytes: 3,
+                },
+            ],
+            spec: "topk(keep=0.1)|kmeans(c=15,iters=25)|huffman".to_string(),
             payload: vec![1, 2, 3],
         };
         match roundtrip(&Msg::Upload(up.clone())) {
@@ -668,6 +761,7 @@ mod tests {
         cfg.lr_client = 0.049999997;
         cfg.set("fleet", "hostile").unwrap();
         cfg.set("dropout", "0.125").unwrap();
+        cfg.set("codec", "topk(keep=0.25)|kmeans(c=9)|huffman").unwrap();
         let mut buf = Vec::new();
         put_cfg(&mut buf, &cfg);
         let mut cur = Cur { b: &buf, i: 0 };
@@ -696,22 +790,35 @@ mod tests {
     }
 
     /// Acceptance bound: the per-message framing overhead the ledger
-    /// records is a constant and stays under 64 bytes each way.
+    /// records is a constant and stays under 64 bytes each way; the
+    /// variable codec header and stage sidecar are accounted exactly
+    /// by the control-plane helpers.
     #[test]
     fn ledgered_overheads_are_constant_and_small() {
         assert!(DOWNLOAD_OVERHEAD <= 64, "{DOWNLOAD_OVERHEAD}");
         assert!(UPLOAD_OVERHEAD <= 64, "{UPLOAD_OVERHEAD}");
         // ...and they match the real encoders: a Download frame is
-        // exactly framed_down(payload), an Upload frame is exactly
-        // framed_up(payload) plus its centroid sidecar.
+        // exactly framed_down(payload) plus the codec header's control
+        // surplus; an Upload adds its centroid + stage sidecars too.
+        let spec = "codebook|huffman";
         let dl = Msg::Download(Download {
             round: 0,
             client: 0,
-            codec: WireCodec::Dense,
+            spec: spec.to_string(),
             payload: vec![0u8; 1000],
         });
-        assert_eq!(dl.framed_len(), framed_down(1000));
+        assert_eq!(dl.framed_len(), framed_down(1000) + codec_header_surplus(spec));
         let mu = vec![0.0f32; 32];
+        let stages = vec![
+            StageBytes {
+                stage: "codebook".to_string(),
+                bytes: 700,
+            },
+            StageBytes {
+                stage: "huffman".to_string(),
+                bytes: 500,
+            },
+        ];
         let up = Msg::Upload(Upload {
             round: 0,
             client: 0,
@@ -719,10 +826,18 @@ mod tests {
             n: 1,
             mean_ce: 0.0,
             mu: mu.clone(),
-            codec: WireCodec::Dense,
+            stages: stages.clone(),
+            spec: spec.to_string(),
             payload: vec![0u8; 500],
         });
-        assert_eq!(up.framed_len(), framed_up(500) + 4 + 4 * mu.len());
+        assert_eq!(
+            up.framed_len(),
+            framed_up(500)
+                + 4
+                + 4 * mu.len()
+                + stages_sidecar_len(&stages)
+                + codec_header_surplus(spec)
+        );
     }
 
     /// The zero-copy writers must put the exact same bytes on the wire
@@ -732,13 +847,14 @@ mod tests {
         let mut rng = Rng::new(3);
         let payload: Vec<u8> = (0..5000).map(|_| rng.below(256) as u8).collect();
 
+        let spec = "codebook|huffman";
         let mut via_helper = Vec::new();
-        let n = write_download(&mut via_helper, 6, 2, WireCodec::Clustered, &payload).unwrap();
+        let n = write_download(&mut via_helper, 6, 2, spec, &payload).unwrap();
         let mut via_msg = Vec::new();
         Msg::Download(Download {
             round: 6,
             client: 2,
-            codec: WireCodec::Clustered,
+            spec: spec.to_string(),
             payload: payload.clone(),
         })
         .write_to(&mut via_msg)
@@ -753,7 +869,11 @@ mod tests {
             n: 64,
             mean_ce: 0.5,
             mu: (0..32).map(|_| rng.normal()).collect(),
-            codec: WireCodec::Sparse,
+            stages: vec![StageBytes {
+                stage: "topk".to_string(),
+                bytes: 5000,
+            }],
+            spec: "topk(keep=0.1)".to_string(),
             payload,
         };
         let mut via_helper = Vec::new();
@@ -773,17 +893,28 @@ mod tests {
         let theta: Vec<f32> = (0..4000).map(|_| rng.normal() * 0.2).collect();
         let cents = CentroidState::init_from_weights(&theta, 16, 32, &mut rng);
 
+        let cache = CodecCache::builtin();
         let blobs = [
             WireBlob::dense(&theta),
             kmeans_blob(&theta, 15, 0.6, &mut rng).unwrap(),
             codebook_blob(&theta, &cents).unwrap(),
         ];
         for blob in blobs {
-            let back = blob_from_payload(blob.codec, blob.payload.clone()).unwrap();
-            assert_eq!(back.theta, blob.theta, "{:?}", blob.codec);
+            let back = blob_from_payload(
+                &cache,
+                blob.spec.clone(),
+                blob.stage_bytes.clone(),
+                blob.payload.clone(),
+            )
+            .unwrap();
+            assert_eq!(back.theta, blob.theta, "{}", blob.spec);
             assert_eq!(back.bytes, blob.bytes);
+            assert_eq!(back.stage_bytes, blob.stage_bytes);
         }
-        // opaque is rejected, not mis-decoded
-        assert!(decode_blob(WireCodec::Opaque, &[1, 2, 3]).is_err());
+        // an unregistered codec is rejected with the typed error, not
+        // mis-decoded (the old Opaque carve-out is gone — anything the
+        // registry resolves crosses; anything else fails loudly)
+        let err = decode_blob(&cache, "opaque", &[1, 2, 3]).unwrap_err().to_string();
+        assert!(err.contains("unknown codec 'opaque'"), "{err}");
     }
 }

@@ -23,6 +23,7 @@ use std::time::Duration;
 
 use anyhow::{Context, Result};
 
+use crate::codec::{CodecCache, CodecRegistry};
 use crate::config::FedConfig;
 use crate::coordinator::events::DropPhase;
 use crate::coordinator::strategy::FedStrategy;
@@ -44,18 +45,40 @@ pub struct TcpServer {
     cfg: FedConfig,
     strategy: String,
     timeout: Option<Duration>,
+    codecs: CodecRegistry,
 }
 
 impl TcpServer {
     /// Bind the coordinator socket. `timeout` bounds each per-client
     /// upload wait (`None` = wait forever; real deployments want a
-    /// bound).
+    /// bound). Uploads decode against the built-in codec registry;
+    /// embedders with custom codecs use [`TcpServer::bind_with_codecs`].
     pub fn bind(
         addr: &str,
         expected_workers: usize,
         cfg: &FedConfig,
         strategy: &str,
         timeout: Option<Duration>,
+    ) -> Result<TcpServer> {
+        TcpServer::bind_with_codecs(
+            addr,
+            expected_workers,
+            cfg,
+            strategy,
+            timeout,
+            CodecRegistry::builtin(),
+        )
+    }
+
+    /// [`TcpServer::bind`] with a caller-supplied codec registry, so
+    /// custom codecs registered on both ends cross the transport.
+    pub fn bind_with_codecs(
+        addr: &str,
+        expected_workers: usize,
+        cfg: &FedConfig,
+        strategy: &str,
+        timeout: Option<Duration>,
+        codecs: CodecRegistry,
     ) -> Result<TcpServer> {
         anyhow::ensure!(expected_workers > 0, "need at least one worker");
         let listener =
@@ -66,6 +89,7 @@ impl TcpServer {
             cfg: cfg.clone(),
             strategy: strategy.to_string(),
             timeout,
+            codecs,
         })
     }
 
@@ -127,6 +151,7 @@ impl TcpServer {
             workers: w,
             timeout: self.timeout,
             control_bytes,
+            codecs: CodecCache::new(self.codecs),
         })
     }
 }
@@ -141,9 +166,13 @@ pub struct TcpTransport {
     conns: Vec<WorkerConn>,
     workers: usize,
     timeout: Option<Duration>,
-    /// Handshake, round-control, and centroid-sidecar bytes — the wire
-    /// traffic the per-client ledger does not attribute.
+    /// Handshake, round-control, centroid-sidecar, codec-header, and
+    /// stage-sidecar bytes — the wire traffic the per-client ledger
+    /// does not attribute.
     control_bytes: usize,
+    /// Spec -> pipeline, shared across rounds so stateful codecs
+    /// (`delta`) keep their per-stream decode state.
+    codecs: CodecCache,
 }
 
 /// What one worker's collection loop produced, per slot.
@@ -212,12 +241,15 @@ impl TcpTransport {
         let mut pending: Vec<(usize, Participant)> = owned.to_vec();
         for (_, part) in owned {
             // zero-copy dispatch: the shared round payload streams out
-            // under this client's 9-byte header
+            // under this client's header. The self-describing codec
+            // header beyond its 1-byte ledger baseline is control
+            // traffic, like the centroid sidecar.
+            control += proto::codec_header_surplus(&spec.down.spec);
             let sent = proto::write_download(
                 &mut &*stream,
                 spec.round as u32,
                 part.client as u32,
-                spec.down.codec,
+                &spec.down.spec,
                 &spec.down.payload,
             );
             if let Err(e) = sent {
@@ -276,8 +308,9 @@ impl TcpTransport {
     }
 
     /// Validate one `Upload` against the round's outstanding set and
-    /// decode it. Returns the slot, the decoded upload, and the
-    /// control-plane size of its centroid sidecar.
+    /// decode it through the codec cache. Returns the slot, the
+    /// decoded upload, and the control-plane size of its sidecars
+    /// (centroid table + codec header surplus + stage bytes).
     fn receive_upload(
         &self,
         up: Upload,
@@ -296,9 +329,12 @@ impl TcpTransport {
             .position(|(_, p)| p.client == client)
             .with_context(|| format!("unexpected upload from client {client}"))?;
         let (slot, _) = pending.swap_remove(pos);
-        let blob = proto::blob_from_payload(up.codec, up.payload)?;
+        let sidecar = 4
+            + 4 * up.mu.len()
+            + proto::codec_header_surplus(&up.spec)
+            + proto::stages_sidecar_len(&up.stages);
+        let blob = proto::blob_from_payload(&self.codecs, up.spec, up.stages, up.payload)?;
         blob.ensure_param_count(expected_p)?;
-        let sidecar = 4 + 4 * up.mu.len();
         Ok((
             slot,
             Box::new(ReceivedUpload {
@@ -327,12 +363,10 @@ impl Transport for TcpTransport {
     ) -> Result<Vec<ClientResult>> {
         let expected_p = spec.down.theta.len();
         // the wire carries the encoded payload; a blob whose payload
-        // lies about its size would desynchronize the framed ledger
+        // lies about its size would desynchronize the framed ledger.
+        // (No opaque exemption: every blob carries a registry-
+        // resolvable spec, so every blob can cross.)
         spec.down.ensure_payload()?;
-        anyhow::ensure!(
-            spec.down.codec != crate::baselines::wire::WireCodec::Opaque,
-            "strategy produced an opaque wire blob; the TCP transport cannot ship it"
-        );
 
         let mut results: Vec<Option<ClientResult>> =
             spec.participants.iter().map(|_| None).collect();

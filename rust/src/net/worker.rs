@@ -19,9 +19,9 @@ use std::time::{Duration, Instant};
 use anyhow::{bail, Context, Result};
 
 use crate::baselines::registry::StrategyRegistry;
-use crate::baselines::wire::WireCodec;
 use crate::client::trainer::train_local;
 use crate::clustering::CentroidState;
+use crate::codec::{CodecCache, CodecRegistry};
 use crate::config::FedConfig;
 use crate::coordinator::server::{build_data, client_stream, run_rng, FederatedData};
 use crate::coordinator::strategy::{FedStrategy, RoundContext, UploadInput};
@@ -49,8 +49,21 @@ fn connect(addr: &str, patience: Duration) -> Result<TcpStream> {
 }
 
 /// Run one worker process to completion: handshake, serve rounds until
-/// `Shutdown`. Returns the number of uploads produced.
+/// `Shutdown`. Returns the number of uploads produced. Decodes
+/// dispatches against the built-in codec registry; embedders with
+/// custom codecs use [`run_worker_with_codecs`].
 pub fn run_worker(addr: &str, artifacts: &Path) -> Result<usize> {
+    run_worker_with_codecs(addr, artifacts, CodecRegistry::builtin())
+}
+
+/// [`run_worker`] with a caller-supplied codec registry, so custom
+/// codecs registered on both ends cross the TCP transport end-to-end.
+pub fn run_worker_with_codecs(
+    addr: &str,
+    artifacts: &Path,
+    codecs: CodecRegistry,
+) -> Result<usize> {
+    let codecs = CodecCache::new(codecs);
     let stream = connect(addr, Duration::from_secs(10))?;
     stream.set_nodelay(true).ok();
     Msg::Hello(Hello {
@@ -88,6 +101,7 @@ pub fn run_worker(addr: &str, artifacts: &Path) -> Result<usize> {
                     strategy.as_ref(),
                     &base,
                     &owned,
+                    &codecs,
                 )?;
             }
             Ok(Msg::RoundClose { .. }) => continue,
@@ -117,6 +131,7 @@ fn serve_round(
     strategy: &dyn FedStrategy,
     base: &Rng,
     owned: &[usize],
+    codecs: &CodecCache,
 ) -> Result<usize> {
     let round = open.round as usize;
     // the server centroid table: mask rebuilt from the active count
@@ -155,7 +170,7 @@ fn serve_round(
             owned.contains(&k),
             "download for client {k} this worker does not own"
         );
-        let theta = super::proto::decode_blob(dl.codec, &dl.payload)?;
+        let theta = super::proto::decode_blob(codecs, &dl.spec, &dl.payload)?;
 
         let mut client_rng = base.fork(client_stream(round, cfg.clients, k));
         let outcome = train_local(
@@ -181,13 +196,9 @@ fn serve_round(
             &mut client_rng,
         )?;
         blob.ensure_payload()?;
-        anyhow::ensure!(
-            blob.codec != WireCodec::Opaque,
-            "strategy {} produces opaque blobs; it cannot run over TCP",
-            strategy.name()
-        );
         // zero-copy send: sidecars as the head, the encoded blob as the
-        // streamed tail
+        // streamed tail. Any codec the coordinator's registry resolves
+        // crosses — the Opaque in-process-only carve-out is gone.
         super::proto::write_upload(
             &mut &*stream,
             &Upload {
@@ -197,7 +208,8 @@ fn serve_round(
                 n: outcome.n as u32,
                 mean_ce: outcome.mean_ce,
                 mu: outcome.mu,
-                codec: blob.codec,
+                stages: blob.stage_bytes,
+                spec: blob.spec,
                 payload: blob.payload,
             },
         )?;

@@ -12,11 +12,12 @@ use super::record::{key_hex, RunRecord};
 use super::StoreError;
 
 /// `runs list` columns.
-pub const LIST_HEADER: [&str; 10] = [
+pub const LIST_HEADER: [&str; 11] = [
     "key",
     "strategy",
     "dataset",
     "fleet",
+    "codec",
     "seed",
     "rounds",
     "final_acc",
@@ -34,6 +35,7 @@ pub fn list_rows(metas: &[&RunMeta]) -> Vec<Vec<String>> {
                 m.strategy.clone(),
                 m.dataset.clone(),
                 m.fleet.clone(),
+                m.codec.clone(),
                 m.seed.to_string(),
                 m.rounds.to_string(),
                 format!("{:.4}", m.final_accuracy),
@@ -47,10 +49,11 @@ pub fn list_rows(metas: &[&RunMeta]) -> Vec<Vec<String>> {
 
 /// `runs compare` columns — one row per record, grouped for paired
 /// reading (strategy / dataset / fleet / seed sort).
-pub const COMPARE_HEADER: [&str; 10] = [
+pub const COMPARE_HEADER: [&str; 11] = [
     "strategy",
     "dataset",
     "fleet",
+    "codec",
     "seed",
     "final_acc",
     "mcr",
@@ -63,8 +66,8 @@ pub const COMPARE_HEADER: [&str; 10] = [
 pub fn compare_rows(metas: &[&RunMeta]) -> Vec<Vec<String>> {
     let mut sorted: Vec<&RunMeta> = metas.to_vec();
     sorted.sort_by(|a, b| {
-        (&a.strategy, &a.dataset, &a.fleet, a.seed)
-            .cmp(&(&b.strategy, &b.dataset, &b.fleet, b.seed))
+        (&a.strategy, &a.dataset, &a.fleet, &a.codec, a.seed)
+            .cmp(&(&b.strategy, &b.dataset, &b.fleet, &b.codec, b.seed))
     });
     sorted
         .iter()
@@ -73,6 +76,7 @@ pub fn compare_rows(metas: &[&RunMeta]) -> Vec<Vec<String>> {
                 m.strategy.clone(),
                 m.dataset.clone(),
                 m.fleet.clone(),
+                m.codec.clone(),
                 m.seed.to_string(),
                 format!("{:.4}", m.final_accuracy),
                 format!("{:.2}", m.mcr),
@@ -135,6 +139,7 @@ pub fn bench_summary(store: &RunStore) -> Json {
                 ("strategy", Json::str(&m.strategy)),
                 ("dataset", Json::str(&m.dataset)),
                 ("fleet", Json::str(&m.fleet)),
+                ("codec", Json::str(&m.codec)),
                 ("seed", Json::str(&m.seed.to_string())),
                 ("rounds", Json::from(m.rounds)),
                 ("final_accuracy", Json::num(m.final_accuracy)),

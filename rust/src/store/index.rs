@@ -34,7 +34,10 @@ use super::StoreError;
 
 const FILE_MAGIC: u32 = u32::from_le_bytes(*b"FCST");
 const ENTRY_MAGIC: u32 = u32::from_le_bytes(*b"FCRE");
-const FORMAT_VERSION: u32 = 1;
+/// Store format version. Bump when record bodies change shape.
+/// v2: the embedded config image gained the codec pipeline spec
+/// (pre-codec stores would misparse, not error, without the bump).
+pub const FORMAT_VERSION: u32 = 2;
 const FILE_HEADER_LEN: u64 = 8;
 /// Per-entry framing: magic(4) + body_len(4) + checksum(8).
 const ENTRY_OVERHEAD: usize = 16;
@@ -50,6 +53,9 @@ pub struct RunMeta {
     pub strategy: String,
     pub dataset: String,
     pub fleet: String,
+    /// codec pipeline override the run executed under ("-" = the
+    /// strategy's declared default)
+    pub codec: String,
     pub seed: u64,
     pub rounds: usize,
     pub final_accuracy: f64,
@@ -75,6 +81,11 @@ impl RunMeta {
             strategy: rec.strategy.clone(),
             dataset: cfg.dataset.clone(),
             fleet: cfg.fleet.preset.name().to_string(),
+            codec: if cfg.codec.is_empty() {
+                "-".to_string()
+            } else {
+                cfg.codec.clone()
+            },
             seed: cfg.seed,
             rounds: rec.rounds.len(),
             final_accuracy: rec.final_accuracy,
@@ -286,6 +297,7 @@ impl RunStore {
                     ("strategy", Json::str(&m.strategy)),
                     ("dataset", Json::str(&m.dataset)),
                     ("fleet", Json::str(&m.fleet)),
+                    ("codec", Json::str(&m.codec)),
                     ("seed", Json::str(&m.seed.to_string())),
                     ("rounds", Json::from(m.rounds)),
                     ("final_accuracy", Json::num(m.final_accuracy)),

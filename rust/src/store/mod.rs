@@ -37,7 +37,7 @@ pub mod export;
 pub mod index;
 pub mod record;
 
-pub use index::{RunMeta, RunStore};
+pub use index::{RunMeta, RunStore, FORMAT_VERSION};
 pub use record::{diff_records, key_hex, parse_key_hex, run_key, RecordDiff, RunRecord};
 
 use std::fmt;

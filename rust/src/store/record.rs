@@ -107,6 +107,13 @@ impl RunRecord {
         })
     }
 
+    /// Codec pipeline spec the run executed under — recorded in the
+    /// body as part of the bit-exact config image (so it participates
+    /// in the content key). Empty = the strategy's declared default.
+    pub fn codec_spec(&self) -> Result<String, StoreError> {
+        Ok(self.cfg()?.codec)
+    }
+
     /// Parse the stored event log back into typed events.
     pub fn events(&self) -> anyhow::Result<EventLog> {
         EventLog::from_jsonl(&self.events_jsonl)
@@ -504,6 +511,26 @@ pub(crate) mod tests {
         assert_eq!(back.cfg().unwrap().seed, 7);
         assert_eq!(back.events().unwrap().len(), 8);
         assert_eq!(back.final_clusters(), Some(19));
+    }
+
+    /// The codec spec is part of the recorded body (via the config
+    /// image) and of the content key: two runs differing only in their
+    /// pipeline are different experiments.
+    #[test]
+    fn codec_spec_is_recorded_and_keyed() {
+        let base = demo_record(7, "fedavg");
+        assert_eq!(base.codec_spec().unwrap(), "");
+        let mut cfg = base.cfg().unwrap();
+        cfg.codec = "topk(keep=0.2)|kmeans(c=8,iters=25)|huffman".to_string();
+        let mut rec = base.clone();
+        rec.cfg_image = config_image(&cfg);
+        rec.key = run_key(&rec.strategy, &cfg);
+        assert_ne!(rec.key, base.key, "codec must change the key");
+        let back = RunRecord::from_body_bytes(&rec.to_body_bytes()).unwrap();
+        assert_eq!(
+            back.codec_spec().unwrap(),
+            "topk(keep=0.2)|kmeans(c=8,iters=25)|huffman"
+        );
     }
 
     #[test]

@@ -86,11 +86,7 @@ impl SweepSpec {
                 bail!("sweep spec line {}: expected 'key = values', got '{raw}'", lineno + 1);
             };
             let (key, value) = (key.trim(), value.trim());
-            let values: Vec<&str> = value
-                .split(',')
-                .map(str::trim)
-                .filter(|s| !s.is_empty())
-                .collect();
+            let values = split_top_level(value);
             if values.is_empty() {
                 bail!("sweep spec line {}: '{key}' has no values", lineno + 1);
             }
@@ -123,12 +119,12 @@ impl SweepSpec {
         Ok(spec)
     }
 
-    /// Add one `--axis key=v1,v2` CLI axis.
+    /// Add one `--axis key=v1,v2` CLI axis. Values split on *top-level*
+    /// commas only, so parameterized codec specs sweep cleanly:
+    /// `--axis codec=kmeans(c=8,iters=5)|huffman,dense` is two values.
     pub fn push_axis(&mut self, key: &str, values: &str) -> Result<()> {
-        let values: Vec<String> = values
-            .split(',')
-            .map(str::trim)
-            .filter(|s| !s.is_empty())
+        let values: Vec<String> = split_top_level(values)
+            .into_iter()
             .map(|s| s.to_string())
             .collect();
         if key.is_empty() || values.is_empty() {
@@ -222,6 +218,31 @@ impl SweepSpec {
         }
         Ok(jobs)
     }
+}
+
+/// Split a comma-separated value list at paren depth 0, trimming and
+/// dropping empties — so codec stage parameters (`kmeans(c=8,iters=5)`)
+/// survive inside one axis value.
+fn split_top_level(value: &str) -> Vec<&str> {
+    let mut out = Vec::new();
+    let mut depth = 0usize;
+    let mut start = 0usize;
+    for (i, ch) in value.char_indices() {
+        match ch {
+            '(' => depth += 1,
+            ')' => depth = depth.saturating_sub(1),
+            ',' if depth == 0 => {
+                out.push(&value[start..i]);
+                start = i + 1;
+            }
+            _ => {}
+        }
+    }
+    out.push(&value[start..]);
+    out.into_iter()
+        .map(str::trim)
+        .filter(|s| !s.is_empty())
+        .collect()
 }
 
 /// Cartesian product of axis values, deterministic order (first axis
@@ -324,6 +345,55 @@ mod tests {
             .unwrap_err()
             .to_string();
         assert!(err.contains("duplicate"), "{err}");
+    }
+
+    /// The headline of the codec API: pipelines sweep as a first-class
+    /// axis, orthogonally to strategies and fleets — with parameterized
+    /// specs surviving the comma-separated axis grammar.
+    #[test]
+    fn codec_axis_expands_and_keys_cover_the_spec() {
+        let mut spec = SweepSpec {
+            strategies: vec!["fedavg".into(), "fedzip".into()],
+            ..SweepSpec::default()
+        };
+        spec.push_axis("codec", "dense,topk(keep=0.2)|kmeans(c=8,iters=5)|huffman")
+            .unwrap();
+        assert_eq!(
+            spec.axes[0].values,
+            vec!["dense", "topk(keep=0.2)|kmeans(c=8,iters=5)|huffman"]
+        );
+        let base = FedConfig::quick("cifar10");
+        let reg = StrategyRegistry::builtin();
+        let jobs = spec.expand(&base, &reg).unwrap();
+        assert_eq!(jobs.len(), 2 * 2);
+        // the codec landed in the configs and separates content keys
+        let keys: std::collections::BTreeSet<u64> = jobs.iter().map(|j| j.key).collect();
+        assert_eq!(keys.len(), 4);
+        assert!(jobs.iter().any(|j| j.cfg.codec == "dense"));
+        assert!(jobs
+            .iter()
+            .any(|j| j.cfg.codec == "topk(keep=0.2)|kmeans(c=8,iters=5)|huffman"));
+        // a typo'd codec axis fails at expansion with the suggestion
+        // (full anyhow chain: the context names the job, the root
+        // cause carries the registry's suggestion)
+        let mut bad = SweepSpec::default();
+        bad.push_axis("codec", "topk|hufman").unwrap();
+        let err = format!("{:#}", bad.expand(&base, &reg).unwrap_err());
+        assert!(err.contains("did you mean 'huffman'"), "{err}");
+    }
+
+    #[test]
+    fn spec_file_codec_grid_respects_parens() {
+        let spec = SweepSpec::parse(
+            "strategies = fedavg\n\
+             grid.codec = dense, kmeans(c=8,iters=5)|huffman\n",
+        )
+        .unwrap();
+        assert_eq!(spec.axes.len(), 1);
+        assert_eq!(
+            spec.axes[0].values,
+            vec!["dense", "kmeans(c=8,iters=5)|huffman"]
+        );
     }
 
     #[test]

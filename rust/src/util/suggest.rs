@@ -1,0 +1,65 @@
+//! Closest-name suggestion shared by the name registries
+//! (`baselines::StrategyRegistry`, `codec::CodecRegistry`): plain
+//! Levenshtein distance plus the "plausibly a typo" cutoff, extracted
+//! so every `--foo list`-style surface reports unknown names the same
+//! way instead of copy-pasting the edit-distance machinery.
+
+/// Plain O(nm) Levenshtein edit distance (registry names are short).
+pub fn levenshtein(a: &str, b: &str) -> usize {
+    let a: Vec<char> = a.chars().collect();
+    let b: Vec<char> = b.chars().collect();
+    let mut prev: Vec<usize> = (0..=b.len()).collect();
+    let mut cur = vec![0usize; b.len() + 1];
+    for (i, &ca) in a.iter().enumerate() {
+        cur[0] = i + 1;
+        for (j, &cb) in b.iter().enumerate() {
+            let sub = prev[j] + usize::from(ca != cb);
+            cur[j + 1] = sub.min(prev[j + 1] + 1).min(cur[j] + 1);
+        }
+        std::mem::swap(&mut prev, &mut cur);
+    }
+    prev[b.len()]
+}
+
+/// Closest candidate by edit distance, if plausibly a typo of `name`
+/// (distance <= half the query length, minimum 1). Ties resolve to the
+/// earliest candidate, so registration order is the tiebreak.
+pub fn closest<'a>(name: &str, candidates: impl Iterator<Item = &'a str>) -> Option<&'a str> {
+    let mut best: Option<(usize, &'a str)> = None;
+    for cand in candidates {
+        let d = levenshtein(name, cand);
+        let better = match best {
+            None => true,
+            Some((bd, _)) => d < bd,
+        };
+        if better {
+            best = Some((d, cand));
+        }
+    }
+    let (d, cand) = best?;
+    (d <= (name.len() / 2).max(1)).then_some(cand)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn levenshtein_basics() {
+        assert_eq!(levenshtein("", "abc"), 3);
+        assert_eq!(levenshtein("abc", "abc"), 0);
+        assert_eq!(levenshtein("fedzip", "fedavg"), 3);
+        assert_eq!(levenshtein("topk", "top-k"), 1);
+    }
+
+    #[test]
+    fn closest_applies_the_typo_cutoff() {
+        let names = ["dense", "topk", "kmeans", "huffman"];
+        assert_eq!(closest("kmean", names.iter().copied()), Some("kmeans"));
+        assert_eq!(closest("hufman", names.iter().copied()), Some("huffman"));
+        // nothing plausibly close
+        assert_eq!(closest("zstd", names.iter().copied()), None);
+        // empty candidate set
+        assert_eq!(closest("x", [].iter().copied()), None);
+    }
+}

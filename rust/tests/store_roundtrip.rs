@@ -10,7 +10,9 @@
 use std::path::PathBuf;
 
 use fedcompress::config::FedConfig;
-use fedcompress::store::{diff_records, key_hex, run_key, RunRecord, RunStore, StoreError};
+use fedcompress::store::{
+    diff_records, key_hex, run_key, RunRecord, RunStore, StoreError, FORMAT_VERSION,
+};
 use fedcompress::sweep::{JobRunner, SmokeRunner, SweepJob};
 
 fn tmp(name: &str) -> PathBuf {
@@ -177,7 +179,7 @@ fn oversized_and_foreign_files_are_rejected() {
     // valid header, absurd entry length
     let mut bytes = Vec::new();
     bytes.extend_from_slice(b"FCST");
-    bytes.extend_from_slice(&1u32.to_le_bytes());
+    bytes.extend_from_slice(&FORMAT_VERSION.to_le_bytes());
     bytes.extend_from_slice(b"FCRE");
     bytes.extend_from_slice(&u32::MAX.to_le_bytes());
     bytes.extend_from_slice(&[0u8; 64]);
@@ -189,11 +191,11 @@ fn oversized_and_foreign_files_are_rejected() {
     // future format version
     let mut bytes = Vec::new();
     bytes.extend_from_slice(b"FCST");
-    bytes.extend_from_slice(&9u32.to_le_bytes());
+    bytes.extend_from_slice(&99u32.to_le_bytes());
     std::fs::write(dir.join("runs.fcr"), &bytes).unwrap();
     assert!(matches!(
         RunStore::open(&dir),
-        Err(StoreError::UnsupportedVersion { got: 9 })
+        Err(StoreError::UnsupportedVersion { got: 99 })
     ));
 }
 
