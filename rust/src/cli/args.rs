@@ -15,6 +15,8 @@ pub struct Args {
     pub sets: Vec<(String, String)>,
     /// repeatable `--axis key=v1,v2` sweep-grid axes
     pub axes: Vec<(String, String)>,
+    /// free positional arguments (only `lint` accepts them: paths)
+    pub positionals: Vec<String>,
 }
 
 #[derive(Clone, Debug, PartialEq, Eq)]
@@ -28,16 +30,20 @@ pub enum ParsedCommand {
     Fleet,
     Sweep,
     Runs,
+    Lint,
     AblateC,
     Inspect,
     Help,
 }
 
 /// Flags that take no value.
-const SWITCHES: [&str; 4] = ["verbose", "csv", "smoke", "force"];
+const SWITCHES: [&str; 5] = ["verbose", "csv", "smoke", "force", "json"];
 
 /// Commands that take a subcommand positional (`runs list`, ...).
 const SUBCOMMAND_FAMILIES: [&str; 1] = ["runs"];
+
+/// Commands that accept free positional arguments (`lint src/net`).
+const POSITIONAL_COMMANDS: [&str; 1] = ["lint"];
 
 impl Args {
     pub fn parse(argv: &[String]) -> Result<Args> {
@@ -57,6 +63,11 @@ impl Args {
         while i < argv.len() {
             let a = &argv[i];
             let Some(name) = a.strip_prefix("--") else {
+                if POSITIONAL_COMMANDS.contains(&args.command.as_str()) {
+                    args.positionals.push(a.clone());
+                    i += 1;
+                    continue;
+                }
                 bail!("unexpected positional argument '{a}'");
             };
             if SWITCHES.contains(&name) {
@@ -95,6 +106,7 @@ impl Args {
             "fleet" => ParsedCommand::Fleet,
             "sweep" => ParsedCommand::Sweep,
             "runs" => ParsedCommand::Runs,
+            "lint" => ParsedCommand::Lint,
             "ablate-c" => ParsedCommand::AblateC,
             "inspect" => ParsedCommand::Inspect,
             "help" | "--help" | "-h" => ParsedCommand::Help,
@@ -211,6 +223,20 @@ mod tests {
         assert_eq!(b.sub, None);
         // other commands still reject positionals
         assert!(Args::parse(&v(&["train", "list"])).is_err());
+    }
+
+    #[test]
+    fn lint_command_takes_path_positionals_and_switches() {
+        let a = Args::parse(&v(&[
+            "lint", "src/net", "src/codec/stages.rs", "--json", "--rule", "det-map-iter",
+        ]))
+        .unwrap();
+        assert_eq!(a.command().unwrap(), ParsedCommand::Lint);
+        assert_eq!(a.positionals, vec!["src/net", "src/codec/stages.rs"]);
+        assert_eq!(a.flag("json"), Some("true"));
+        assert_eq!(a.flag("rule"), Some("det-map-iter"));
+        // positionals stay rejected everywhere else
+        assert!(Args::parse(&v(&["train", "src/net"])).is_err());
     }
 
     #[test]

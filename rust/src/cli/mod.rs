@@ -35,6 +35,8 @@ COMMANDS:
                                  (or two whole stores via --other)
                   runs compare   grouped comparison table
                   runs export-bench  write BENCH_sweep.json
+    lint        run fedlint, the self-hosted determinism & wire-safety
+                linter, over the crate sources (CI runs this as a gate)
     ablate-c    ablation: dynamic-C controller vs fixed C
     inspect     print manifest / model / artifact information
     help        show this message
@@ -108,6 +110,18 @@ RUN STORE (sweep, runs, table1, fleet, table2):
     --from-run <hex>        table2: read the deployed cluster count from
                             a stored run instead of --clusters
 
+LINT (lint [paths...]):
+    [paths...]              limit the scan to these files/directories
+                            (relative to the crate root)
+    --rule <name>           run a single rule (det-map-iter,
+                            no-panic-decode, no-wallclock-state,
+                            rng-discipline, float-order)
+    --json                  machine-readable report on stdout
+    --out <file>            also write the JSON report to a file
+    --root <dir>            crate root to scan (default: auto-detect)
+    --config <file>         rule config (default: <root>/fedlint.toml,
+                            falling back to the built-in config)
+
 EXAMPLES:
     fedcompress train --dataset cifar10 --strategy fedcompress --preset quick
     fedcompress train --strategy list
@@ -127,4 +141,7 @@ EXAMPLES:
     fedcompress runs diff --a 3fa9 --b 81c2
     fedcompress runs export-bench --store runs --out BENCH_sweep.json
     fedcompress table1 --store runs          # cache-hits prior runs
+    fedcompress lint                         # whole crate, text report
+    fedcompress lint --json --out fedlint.json
+    fedcompress lint src/net --rule no-panic-decode
 ";

@@ -64,12 +64,17 @@ impl StageData {
     }
 
     /// The decoded view: what a receiver reconstructs from this stream.
+    /// Every decode path validates indices against the codebook before
+    /// building an `Indexed` stream, so the out-of-range arm is
+    /// unreachable from wire bytes; it maps to 0.0 rather than
+    /// panicking so a hand-built stream cannot take the process down.
     pub fn to_floats(&self) -> Vec<f32> {
         match self {
             StageData::Floats(v) => v.clone(),
-            StageData::Indexed { codebook, indices } => {
-                indices.iter().map(|&i| codebook[i as usize]).collect()
-            }
+            StageData::Indexed { codebook, indices } => indices
+                .iter()
+                .map(|&i| codebook.get(i as usize).copied().unwrap_or(0.0))
+                .collect(),
         }
     }
 }
@@ -150,34 +155,40 @@ impl Pipeline {
                 what: format!("{} stages exceed the {MAX_STAGES}-stage cap", stages.len()),
             });
         }
-        if stages[0].input_kind() != DataKind::Floats {
-            return Err(CodecError::BadSpec {
-                what: format!(
-                    "'{}' consumes {} and cannot open a pipeline — put a \
-                     clustering stage (kmeans, codebook) before it",
-                    stages[0].name(),
-                    stages[0].input_kind().name()
-                ),
-            });
-        }
-        for pair in stages.windows(2) {
-            if pair[0].output_kind() != pair[1].input_kind() {
+        if let Some(first) = stages.first() {
+            if first.input_kind() != DataKind::Floats {
                 return Err(CodecError::BadSpec {
                     what: format!(
-                        "'{}' produces {} but '{}' consumes {}",
-                        pair[0].name(),
-                        pair[0].output_kind().name(),
-                        pair[1].name(),
-                        pair[1].input_kind().name()
+                        "'{}' consumes {} and cannot open a pipeline — put a \
+                         clustering stage (kmeans, codebook) before it",
+                        first.name(),
+                        first.input_kind().name()
                     ),
                 });
             }
         }
-        for s in &stages[..stages.len() - 1] {
-            if s.terminal_only() {
-                return Err(CodecError::BadSpec {
-                    what: format!("'{}' must be the last stage of a pipeline", s.name()),
-                });
+        for pair in stages.windows(2) {
+            if let [a, b] = pair {
+                if a.output_kind() != b.input_kind() {
+                    return Err(CodecError::BadSpec {
+                        what: format!(
+                            "'{}' produces {} but '{}' consumes {}",
+                            a.name(),
+                            a.output_kind().name(),
+                            b.name(),
+                            b.input_kind().name()
+                        ),
+                    });
+                }
+            }
+        }
+        if let Some((_, init)) = stages.split_last() {
+            for s in init {
+                if s.terminal_only() {
+                    return Err(CodecError::BadSpec {
+                        what: format!("'{}' must be the last stage of a pipeline", s.name()),
+                    });
+                }
             }
         }
         Ok(Pipeline { stages })
@@ -185,6 +196,14 @@ impl Pipeline {
 
     pub fn stages(&self) -> &[Box<dyn Stage>] {
         &self.stages
+    }
+}
+
+/// The error for the statically-unreachable empty-stage-list case
+/// (`Pipeline::new` rejects it); keeps encode/decode panic-free.
+fn empty_pipeline() -> CodecError {
+    CodecError::BadSpec {
+        what: "empty pipeline".to_string(),
     }
 }
 
@@ -198,21 +217,20 @@ impl Codec for Pipeline {
     }
 
     fn encode(&self, input: &CodecInput<'_>, rng: &mut Rng) -> Result<EncodedBlob, CodecError> {
+        let (terminal, init) = self.stages.split_last().ok_or_else(empty_pipeline)?;
         let mut data = StageData::Floats(input.theta.to_vec());
         let mut stage_bytes = Vec::with_capacity(self.stages.len());
-        let last = self.stages.len() - 1;
-        for (i, stage) in self.stages.iter().enumerate() {
+        for stage in init {
             data = stage.encode(data, input, rng)?;
-            if i < last {
-                stage_bytes.push(StageBytes {
-                    stage: stage.name().to_string(),
-                    bytes: stage.wire_len(&data),
-                });
-            }
+            stage_bytes.push(StageBytes {
+                stage: stage.name().to_string(),
+                bytes: stage.wire_len(&data),
+            });
         }
-        let payload = self.stages[last].serialize(&data, input)?;
+        data = terminal.encode(data, input, rng)?;
+        let payload = terminal.serialize(&data, input)?;
         stage_bytes.push(StageBytes {
-            stage: self.stages[last].name().to_string(),
+            stage: terminal.name().to_string(),
             bytes: payload.len(),
         });
         Ok(EncodedBlob {
@@ -223,9 +241,9 @@ impl Codec for Pipeline {
     }
 
     fn decode(&self, payload: &[u8]) -> Result<Vec<f32>, CodecError> {
-        let last = self.stages.len() - 1;
-        let mut data = self.stages[last].deserialize(payload)?;
-        for stage in self.stages[..last].iter().rev() {
+        let (terminal, init) = self.stages.split_last().ok_or_else(empty_pipeline)?;
+        let mut data = terminal.deserialize(payload)?;
+        for stage in init.iter().rev() {
             data = stage.backward(data)?;
         }
         Ok(data.to_floats())

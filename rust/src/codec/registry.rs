@@ -15,7 +15,7 @@
 //! the resulting [`Pipeline`] re-renders the canonical spec with every
 //! parameter explicit, so wire headers round-trip through `build`.
 
-use std::collections::HashMap;
+use std::collections::BTreeMap;
 use std::sync::{Arc, Mutex};
 
 use super::pipeline::{Pipeline, Stage};
@@ -342,14 +342,14 @@ fn parse_stage(part: &str) -> Result<StageParams, CodecError> {
 /// state between messages; encode paths may use it for convenience.
 pub struct CodecCache {
     registry: CodecRegistry,
-    built: Mutex<HashMap<String, Arc<Pipeline>>>,
+    built: Mutex<BTreeMap<String, Arc<Pipeline>>>,
 }
 
 impl CodecCache {
     pub fn new(registry: CodecRegistry) -> CodecCache {
         CodecCache {
             registry,
-            built: Mutex::new(HashMap::new()),
+            built: Mutex::new(BTreeMap::new()),
         }
     }
 

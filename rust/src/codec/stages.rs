@@ -16,7 +16,7 @@
 //!                the same stream, falling back to flat when the delta
 //!                would not pay.
 
-use std::collections::HashMap;
+use std::collections::BTreeMap;
 use std::sync::Mutex;
 
 use super::pipeline::{DataKind, Stage, StageData};
@@ -29,7 +29,14 @@ use crate::compression::delta::{delta_decode, delta_encode};
 use crate::compression::kmeans::{kmeans_1d, snap};
 use crate::compression::sparsify::magnitude_prune;
 use crate::util::bitio::{BitReader, BitWriter};
+use crate::util::cursor::ByteCursor;
 use crate::util::rng::Rng;
+
+/// Refuse wire-claimed element counts above this. A corrupt or hostile
+/// length field must not become a multi-gigabyte allocation before the
+/// payload-length checks run (64M f32 params = 256 MiB dense, matching
+/// `net::frame::MAX_PAYLOAD`).
+pub const MAX_PARAMS: usize = 64 << 20;
 
 fn malformed(what: impl Into<String>) -> CodecError {
     CodecError::Malformed { what: what.into() }
@@ -68,10 +75,12 @@ pub fn dense_decode(payload: &[u8]) -> Result<Vec<f32>, CodecError> {
             payload.len()
         )));
     }
-    Ok(payload
-        .chunks_exact(4)
-        .map(|c| f32::from_le_bytes(c.try_into().unwrap()))
-        .collect())
+    let mut cur = ByteCursor::new(payload);
+    let mut out = Vec::with_capacity(payload.len() / 4);
+    while let Some(w) = cur.f32() {
+        out.push(w);
+    }
+    Ok(out)
 }
 
 impl Stage for DenseStage {
@@ -158,20 +167,19 @@ pub fn sparse_encode(pruned: &[f32]) -> Vec<u8> {
 
 /// Decode a sparse blob back to the dense (pruned) weight vector.
 pub fn sparse_decode(bytes: &[u8]) -> Result<Vec<f32>, CodecError> {
-    let take = |i: usize, n: usize| -> Result<&[u8], CodecError> {
-        if i + n > bytes.len() {
-            return Err(CodecError::Truncated {
-                what: "sparse blob",
-            });
-        }
-        Ok(&bytes[i..i + n])
-    };
-    if u32::from_le_bytes(take(0, 4)?.try_into().unwrap()) != SPARSE_MAGIC {
+    let short = |what: &'static str| CodecError::Truncated { what };
+    let mut cur = ByteCursor::new(bytes);
+    if cur.u32().ok_or(short("sparse blob"))? != SPARSE_MAGIC {
         return Err(malformed("bad sparse magic"));
     }
-    let n = u32::from_le_bytes(take(4, 4)?.try_into().unwrap()) as usize;
-    let k = u32::from_le_bytes(take(8, 4)?.try_into().unwrap()) as usize;
-    let bits = take(12, 1)?[0] as u32;
+    let n = cur.u32().ok_or(short("sparse blob"))? as usize;
+    let k = cur.u32().ok_or(short("sparse blob"))? as usize;
+    let bits = cur.u8().ok_or(short("sparse blob"))? as u32;
+    if n > MAX_PARAMS {
+        return Err(malformed(format!(
+            "sparse blob claims {n} params (cap {MAX_PARAMS})"
+        )));
+    }
     if k > n {
         return Err(malformed(format!(
             "sparse blob claims {k} survivors of {n} params"
@@ -183,7 +191,7 @@ pub fn sparse_decode(bytes: &[u8]) -> Result<Vec<f32>, CodecError> {
         )));
     }
     let pos_bytes = (k * bits as usize).div_ceil(8);
-    let mut r = BitReader::new(take(13, pos_bytes)?);
+    let mut r = BitReader::new(cur.take(pos_bytes).ok_or(short("sparse blob"))?);
     let mut positions = Vec::with_capacity(k);
     for _ in 0..k {
         match r.read(bits) {
@@ -196,13 +204,15 @@ pub fn sparse_decode(bytes: &[u8]) -> Result<Vec<f32>, CodecError> {
             }
         }
     }
-    let vals = take(13 + pos_bytes, 4 * k)?;
-    if 13 + pos_bytes + 4 * k != bytes.len() {
-        return Err(malformed("trailing garbage after sparse values"));
-    }
     let mut theta = vec![0.0f32; n];
-    for (j, &pos) in positions.iter().enumerate() {
-        theta[pos] = f32::from_le_bytes(vals[4 * j..4 * j + 4].try_into().unwrap());
+    for &pos in &positions {
+        let v = cur.f32().ok_or(short("sparse blob"))?;
+        if let Some(slot) = theta.get_mut(pos) {
+            *slot = v;
+        }
+    }
+    if !cur.done() {
+        return Err(malformed("trailing garbage after sparse values"));
     }
     Ok(theta)
 }
@@ -462,8 +472,11 @@ impl Stage for HuffmanStage {
 
 /// Previous index stream per stream id, kept separately for the encode
 /// and decode directions so one instance can serve both sides of a
-/// loopback without corrupting itself.
-type DeltaState = Mutex<HashMap<u64, (usize, Vec<u32>)>>;
+/// loopback without corrupting itself. `BTreeMap` so any iteration
+/// over the state (diagnostics, future serialization) is
+/// insertion-order-independent — fedlint's `det-map-iter` rule bans
+/// `HashMap` in codec modules outright.
+type DeltaState = Mutex<BTreeMap<u64, (usize, Vec<u32>)>>;
 
 /// Cross-round residual coding of index streams
 /// (`compression::delta`): when consecutive blobs on one stream share
@@ -530,6 +543,7 @@ impl Stage for DeltaStage {
         }
         out.extend_from_slice(&(indices.len() as u32).to_le_bytes());
 
+        // fedlint:allow(no-panic-decode) -- lock poisoning means a prior panic in this process, not adversarial bytes
         let mut state = self.enc.lock().expect("delta encode state");
         let prev = state.get(&input.stream);
         let body = match prev {
@@ -558,26 +572,27 @@ impl Stage for DeltaStage {
     }
 
     fn deserialize(&self, payload: &[u8]) -> Result<StageData, CodecError> {
-        let take = |i: usize, n: usize| -> Result<&[u8], CodecError> {
-            if i + n > payload.len() {
-                return Err(CodecError::Truncated { what: "delta blob" });
-            }
-            Ok(&payload[i..i + n])
-        };
-        let stream = u64::from_le_bytes(take(0, 8)?.try_into().unwrap());
-        let c = u16::from_le_bytes(take(8, 2)?.try_into().unwrap()) as usize;
+        let short = || CodecError::Truncated { what: "delta blob" };
+        let mut cur = ByteCursor::new(payload);
+        let stream = cur.u64().ok_or_else(short)?;
+        let c = cur.u16().ok_or_else(short)? as usize;
         if c == 0 {
             return Err(malformed("delta blob with empty codebook"));
         }
         let mut codebook = Vec::with_capacity(c);
-        for j in 0..c {
-            codebook.push(f32::from_le_bytes(take(10 + 4 * j, 4)?.try_into().unwrap()));
+        for _ in 0..c {
+            codebook.push(cur.f32().ok_or_else(short)?);
         }
-        let base = 10 + 4 * c;
-        let n = u32::from_le_bytes(take(base, 4)?.try_into().unwrap()) as usize;
-        let mode = take(base + 4, 1)?[0];
-        let body = &payload[base + 5..];
+        let n = cur.u32().ok_or_else(short)? as usize;
+        if n > MAX_PARAMS {
+            return Err(malformed(format!(
+                "delta blob claims {n} indices (cap {MAX_PARAMS})"
+            )));
+        }
+        let mode = cur.u8().ok_or_else(short)?;
+        let body = cur.rest();
 
+        // fedlint:allow(no-panic-decode) -- lock poisoning means a prior panic in this process, not adversarial bytes
         let mut state = self.dec.lock().expect("delta decode state");
         let indices = match mode {
             DELTA_MODE_FLAT => {

@@ -23,6 +23,7 @@ pub fn kmeans_pp_init(weights: &[f32], c: usize, rng: &mut crate::util::rng::Rng
         let new = if total <= 0.0 {
             // all mass covered (fewer distinct values than c): jitter off
             // an existing centroid so the codebook keeps c distinct slots
+            // fedlint:allow(float-order) -- cast of a small integer count, exact in f32
             centroids[rng.below(centroids.len())] + 1e-6 * (centroids.len() as f32)
         } else {
             let mut r = rng.f64() * total;
@@ -111,6 +112,7 @@ pub fn kmeans_1d(
                 let s = pre_w[hi] - pre_w[lo];
                 let s2 = pre_w2[hi] - pre_w2[lo];
                 let mean = s / n;
+                // fedlint:allow(float-order) -- deliberate single narrowing: means accumulate in f64, land in the f32 codebook
                 centroids[j] = mean as f32;
                 new_inertia += s2 - 2.0 * mean * s + n * mean * mean;
             }

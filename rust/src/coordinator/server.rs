@@ -56,6 +56,7 @@ pub struct FederatedData {
 /// Root RNG of a run. Part of the wire protocol's determinism
 /// contract: TCP workers derive the same root from the config image.
 pub fn run_rng(cfg: &FedConfig) -> Rng {
+    // fedlint:allow(rng-discipline) -- this IS the named root constructor every stream forks from
     Rng::new(cfg.seed ^ 0xFEDC)
 }
 
@@ -69,6 +70,7 @@ pub fn client_stream(round: usize, clients: usize, k: usize) -> u64 {
 pub fn build_data(engine: &Engine, cfg: &FedConfig) -> Result<FederatedData> {
     let spec = synth::SynthSpec::for_dataset(&cfg.dataset);
     let domain = engine.manifest.dataset(&cfg.dataset)?.spec.domain.clone();
+    // fedlint:allow(rng-discipline) -- seed-derived data stream root, part of the config-image contract
     let base = Rng::new(cfg.seed);
 
     let train = synth::generate(&spec, cfg.train_size, cfg.seed, 0);
@@ -217,6 +219,7 @@ pub fn run_with_strategy_opts(
     };
 
     for round in start_round..cfg.rounds {
+        // fedlint:allow(no-wallclock-state) -- wall_ms is a bench field, excluded from record diffing
         let t0 = std::time::Instant::now();
         let mut round_rng = base.fork(100 + round as u64);
         let ctx = RoundContext {

@@ -158,6 +158,26 @@
 //!   experiment drivers read prior runs from the store by content key
 //!   instead of re-executing; `table2 --from-run <hex>` deploys the
 //!   cluster count a stored run actually landed on.
+//!
+//! # Invariants as lint rules (fedlint)
+//!
+//! Everything above rests on invariants the compiler cannot check:
+//! map iteration order must never cross the wire or land in records,
+//! decode paths must never panic on adversarial bytes, wall clocks and
+//! ad-hoc RNG seeds must never leak into bit-exact state, and float
+//! narrowing in codec hot paths must be deliberate. The [`lint`]
+//! module enforces them statically — a std-only, self-hosted pass over
+//! the crate's own sources (lightweight lexer, heuristic rules, scopes
+//! from `fedlint.toml`, suppression only via reasoned
+//! `// fedlint:allow(rule) -- why` comments). CI runs it as a hard
+//! gate next to the test suites.
+//!
+//! CLI surface:
+//!
+//! * `fedcompress lint [--json] [--rule <name>] [--out report.json]
+//!   [paths...]` — lint the crate (or just `paths`); nonzero exit on
+//!   any deny-severity violation. See ARCHITECTURE.md
+//!   "Invariants & lint" for the rule table and the allow contract.
 
 pub mod baselines;
 pub mod bench;
@@ -173,6 +193,7 @@ pub mod data;
 pub mod edge;
 pub mod exp;
 pub mod linalg;
+pub mod lint;
 pub mod models;
 pub mod net;
 pub mod runtime;

@@ -1,0 +1,249 @@
+//! The lint configuration: which rules run, at what severity, over
+//! which path scopes — parsed from a hand-rolled `fedlint.toml` subset
+//! (the vendored crate set has no toml parser, and the lint is meant
+//! to stay std-only).
+//!
+//! Grammar (line-oriented):
+//!
+//! ```toml
+//! # comment
+//! [rule.det-map-iter]
+//! severity = "deny"
+//! paths = ["src/net/", "src/codec/stages.rs"]
+//! ```
+//!
+//! A path ending in `/` scopes a whole directory subtree; a path
+//! ending in `.rs` scopes exactly that file. Paths are relative to the
+//! linted root, `/`-separated. The committed `rust/fedlint.toml` is
+//! compiled into the binary as [`LintConfig::builtin`], so `lint`
+//! works from any working directory; an on-disk `fedlint.toml` at the
+//! linted root takes precedence when present.
+
+use std::path::Path;
+
+/// Per-rule reporting level.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Severity {
+    /// Violations fail the lint (nonzero exit, CI gate).
+    Deny,
+    /// Violations are reported but do not fail the lint.
+    Warn,
+    /// Rule disabled.
+    Off,
+}
+
+impl Severity {
+    pub fn name(self) -> &'static str {
+        match self {
+            Severity::Deny => "deny",
+            Severity::Warn => "warn",
+            Severity::Off => "off",
+        }
+    }
+}
+
+/// One configured rule: name + severity + path scopes.
+#[derive(Clone, Debug)]
+pub struct RuleConfig {
+    pub name: String,
+    pub severity: Severity,
+    /// Scope prefixes (`src/net/`) and exact files (`src/net/proto.rs`).
+    pub paths: Vec<String>,
+}
+
+impl RuleConfig {
+    /// Does `rel` (a `/`-separated path relative to the linted root)
+    /// fall inside this rule's scope?
+    pub fn in_scope(&self, rel: &str) -> bool {
+        self.paths.iter().any(|p| {
+            if p.ends_with(".rs") {
+                rel == p
+            } else {
+                rel.starts_with(p.as_str())
+            }
+        })
+    }
+}
+
+/// The full lint configuration.
+#[derive(Clone, Debug, Default)]
+pub struct LintConfig {
+    pub rules: Vec<RuleConfig>,
+}
+
+/// The committed project configuration, compiled in.
+const BUILTIN: &str = include_str!("../../fedlint.toml");
+
+impl LintConfig {
+    /// The project's own `fedlint.toml`, baked into the binary.
+    pub fn builtin() -> LintConfig {
+        // the committed config must parse — covered by a unit test
+        LintConfig::parse(BUILTIN).unwrap_or_default()
+    }
+
+    pub fn from_file(path: &Path) -> Result<LintConfig, String> {
+        let text = std::fs::read_to_string(path)
+            .map_err(|e| format!("reading {}: {e}", path.display()))?;
+        LintConfig::parse(&text).map_err(|e| format!("{}: {e}", path.display()))
+    }
+
+    pub fn rule(&self, name: &str) -> Option<&RuleConfig> {
+        self.rules.iter().find(|r| r.name == name)
+    }
+
+    /// Parse the `fedlint.toml` subset. Errors carry the 1-based line.
+    pub fn parse(text: &str) -> Result<LintConfig, String> {
+        let mut cfg = LintConfig::default();
+        let mut current: Option<usize> = None;
+        for (idx, raw) in text.lines().enumerate() {
+            let lno = idx + 1;
+            let line = raw.trim();
+            if line.is_empty() || line.starts_with('#') {
+                continue;
+            }
+            if let Some(head) = line.strip_prefix('[') {
+                let head = head
+                    .strip_suffix(']')
+                    .ok_or_else(|| format!("line {lno}: unclosed section header"))?;
+                let name = head
+                    .strip_prefix("rule.")
+                    .ok_or_else(|| format!("line {lno}: expected [rule.<name>], got [{head}]"))?;
+                if name.is_empty() {
+                    return Err(format!("line {lno}: empty rule name"));
+                }
+                if cfg.rules.iter().any(|r| r.name == name) {
+                    return Err(format!("line {lno}: duplicate section [rule.{name}]"));
+                }
+                cfg.rules.push(RuleConfig {
+                    name: name.to_string(),
+                    severity: Severity::Deny,
+                    paths: Vec::new(),
+                });
+                current = Some(cfg.rules.len() - 1);
+                continue;
+            }
+            let (key, value) = line
+                .split_once('=')
+                .ok_or_else(|| format!("line {lno}: expected key = value"))?;
+            let slot = current.ok_or_else(|| {
+                format!("line {lno}: '{}' outside any [rule.<name>] section", key.trim())
+            })?;
+            let Some(rule) = cfg.rules.get_mut(slot) else {
+                return Err(format!("line {lno}: internal section index"));
+            };
+            match key.trim() {
+                "severity" => {
+                    rule.severity = match parse_string(value.trim(), lno)?.as_str() {
+                        "deny" => Severity::Deny,
+                        "warn" => Severity::Warn,
+                        "off" => Severity::Off,
+                        other => {
+                            return Err(format!(
+                                "line {lno}: severity '{other}' (expected deny|warn|off)"
+                            ))
+                        }
+                    };
+                }
+                "paths" => rule.paths = parse_string_array(value.trim(), lno)?,
+                other => return Err(format!("line {lno}: unknown key '{other}'")),
+            }
+        }
+        Ok(cfg)
+    }
+}
+
+/// Parse a double-quoted string (no escapes — paths and severities
+/// never need them).
+fn parse_string(v: &str, lno: usize) -> Result<String, String> {
+    v.strip_prefix('"')
+        .and_then(|s| s.strip_suffix('"'))
+        .filter(|s| !s.contains('"'))
+        .map(str::to_string)
+        .ok_or_else(|| format!("line {lno}: expected a \"quoted\" string, got {v}"))
+}
+
+/// Parse `["a", "b"]` on a single line.
+fn parse_string_array(v: &str, lno: usize) -> Result<Vec<String>, String> {
+    let inner = v
+        .strip_prefix('[')
+        .and_then(|s| s.strip_suffix(']'))
+        .ok_or_else(|| format!("line {lno}: expected [\"...\"], got {v}"))?;
+    let inner = inner.trim();
+    if inner.is_empty() {
+        return Ok(Vec::new());
+    }
+    inner
+        .split(',')
+        .map(|item| {
+            let item = item.trim();
+            if item.is_empty() {
+                Err(format!("line {lno}: empty array element"))
+            } else {
+                parse_string(item, lno)
+            }
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_sections_severities_and_scopes() {
+        let cfg = LintConfig::parse(
+            "# header comment\n\
+             [rule.det-map-iter]\n\
+             severity = \"deny\"\n\
+             paths = [\"src/net/\", \"src/codec/stages.rs\"]\n\
+             \n\
+             [rule.float-order]\n\
+             severity = \"warn\"\n\
+             paths = [\"src/codec/\"]\n",
+        )
+        .unwrap();
+        assert_eq!(cfg.rules.len(), 2);
+        let r = cfg.rule("det-map-iter").unwrap();
+        assert_eq!(r.severity, Severity::Deny);
+        assert!(r.in_scope("src/net/frame.rs"));
+        assert!(r.in_scope("src/codec/stages.rs"));
+        assert!(!r.in_scope("src/codec/registry.rs"), "exact-file scope");
+        assert!(!r.in_scope("src/store/record.rs"));
+        assert_eq!(cfg.rule("float-order").unwrap().severity, Severity::Warn);
+        assert!(cfg.rule("missing").is_none());
+    }
+
+    #[test]
+    fn rejects_malformed_configs() {
+        for bad in [
+            "[rule.x",                       // unclosed header
+            "[other.x]",                     // not a rule section
+            "severity = \"deny\"",           // key outside a section
+            "[rule.x]\nseverity = \"hard\"", // unknown severity
+            "[rule.x]\npaths = \"src/\"",    // not an array
+            "[rule.x]\nwat = \"y\"",         // unknown key
+            "[rule.x]\nseverity deny",       // no '='
+            "[rule.x]\n[rule.x]",            // duplicate
+            "[rule.]",                       // empty name
+            "[rule.x]\npaths = [\"a\",]",    // empty element
+        ] {
+            assert!(LintConfig::parse(bad).is_err(), "should reject: {bad}");
+        }
+    }
+
+    #[test]
+    fn builtin_config_parses_and_covers_the_known_rules() {
+        let cfg = LintConfig::builtin();
+        assert!(!cfg.rules.is_empty(), "committed fedlint.toml must parse");
+        for name in [
+            "det-map-iter",
+            "no-panic-decode",
+            "no-wallclock-state",
+            "rng-discipline",
+            "float-order",
+        ] {
+            let rule = cfg.rule(name).unwrap_or_else(|| panic!("missing rule {name}"));
+            assert!(!rule.paths.is_empty(), "{name} has no scope");
+        }
+    }
+}

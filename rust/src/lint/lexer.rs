@@ -1,0 +1,533 @@
+//! A lightweight Rust tokenizer for fedlint — comments, strings,
+//! identifiers, numbers, and punctuation with line spans. Deliberately
+//! *not* a full parser: the lint rules are heuristics over the token
+//! stream, and a token stream is all they need. The lexer must accept
+//! arbitrary bytes without panicking (it lints work-in-progress files),
+//! so every branch degrades gracefully: an unterminated string runs to
+//! end of file, an unknown character becomes punctuation.
+//!
+//! What it does understand, because the rules depend on it:
+//! * line (`//`) and nested block (`/* /* */ */`) comments, captured
+//!   separately from the token stream (the `fedlint:allow` contract
+//!   lives in comments);
+//! * string/char/byte/raw-string literals (`"…"`, `'…'`, `b"…"`,
+//!   `r#"…"#`, …) so quoted text can never fake a violation or an
+//!   allow;
+//! * lifetimes vs char literals (`'a` vs `'a'`);
+//! * `#[cfg(test)] mod … { … }` blocks, reported as line ranges so
+//!   rules can exempt inline unit tests.
+
+/// Token kinds — just enough structure for heuristic rules.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum TokKind {
+    /// Identifier or keyword (`HashMap`, `unwrap`, `mut`, ...).
+    Ident,
+    /// Single punctuation character (`.`, `[`, `!`, `:`, ...).
+    Punct,
+    /// Numeric literal (`42`, `0xFF`, `1.5e-3`, `1_000u64`).
+    Num,
+    /// String literal of any flavor, content included.
+    Str,
+    /// Char or byte literal (`'x'`, `b'\n'`).
+    Char,
+    /// Lifetime (`'a`, `'static`).
+    Lifetime,
+}
+
+#[derive(Clone, Debug)]
+pub struct Tok {
+    pub kind: TokKind,
+    pub text: String,
+    /// 1-based line of the token's first character.
+    pub line: u32,
+}
+
+/// A comment, kept out of the token stream.
+#[derive(Clone, Debug)]
+pub struct Comment {
+    /// 1-based line the comment starts on.
+    pub line: u32,
+    /// Full text including the `//` / `/*` introducer.
+    pub text: String,
+    /// True when code precedes the comment on its starting line
+    /// (a trailing comment annotates its own line; a standalone
+    /// comment annotates the next code line).
+    pub trailing: bool,
+}
+
+/// Lexer output: token stream plus the comment side-channel.
+#[derive(Debug, Default)]
+pub struct Lexed {
+    pub toks: Vec<Tok>,
+    pub comments: Vec<Comment>,
+}
+
+struct Scan {
+    chars: Vec<char>,
+    i: usize,
+    line: u32,
+}
+
+impl Scan {
+    fn peek(&self) -> Option<char> {
+        self.chars.get(self.i).copied()
+    }
+
+    fn peek_at(&self, k: usize) -> Option<char> {
+        self.i.checked_add(k).and_then(|j| self.chars.get(j)).copied()
+    }
+
+    fn bump(&mut self) -> Option<char> {
+        let c = self.peek()?;
+        self.i += 1;
+        if c == '\n' {
+            self.line += 1;
+        }
+        Some(c)
+    }
+}
+
+fn is_ident_start(c: char) -> bool {
+    c.is_alphabetic() || c == '_'
+}
+
+fn is_ident_continue(c: char) -> bool {
+    c.is_alphanumeric() || c == '_'
+}
+
+/// Tokenize `src`. Total over all inputs: never panics, never loops
+/// forever (every iteration of the main loop consumes at least one
+/// character).
+pub fn lex(src: &str) -> Lexed {
+    let mut s = Scan {
+        chars: src.chars().collect(),
+        i: 0,
+        line: 1,
+    };
+    let mut out = Lexed::default();
+    // line number of the most recent token, to classify comments as
+    // trailing (code before them on the same line) or standalone
+    let mut last_tok_line = 0u32;
+
+    while let Some(c) = s.peek() {
+        let line = s.line;
+        if c.is_whitespace() {
+            s.bump();
+        } else if c == '/' && s.peek_at(1) == Some('/') {
+            let mut text = String::new();
+            while let Some(ch) = s.peek() {
+                if ch == '\n' {
+                    break;
+                }
+                text.push(ch);
+                s.bump();
+            }
+            out.comments.push(Comment {
+                line,
+                text,
+                trailing: last_tok_line == line,
+            });
+        } else if c == '/' && s.peek_at(1) == Some('*') {
+            let mut text = String::new();
+            let mut depth = 0u32;
+            while let Some(ch) = s.peek() {
+                if ch == '/' && s.peek_at(1) == Some('*') {
+                    depth += 1;
+                    text.push('/');
+                    text.push('*');
+                    s.bump();
+                    s.bump();
+                } else if ch == '*' && s.peek_at(1) == Some('/') {
+                    depth = depth.saturating_sub(1);
+                    text.push('*');
+                    text.push('/');
+                    s.bump();
+                    s.bump();
+                    if depth == 0 {
+                        break;
+                    }
+                } else {
+                    text.push(ch);
+                    s.bump();
+                }
+            }
+            out.comments.push(Comment {
+                line,
+                text,
+                trailing: last_tok_line == line,
+            });
+        } else if c == '"' {
+            let text = lex_string(&mut s);
+            out.toks.push(Tok { kind: TokKind::Str, text, line });
+            last_tok_line = line;
+        } else if c == '\'' {
+            let (kind, text) = lex_quote(&mut s);
+            out.toks.push(Tok { kind, text, line });
+            last_tok_line = line;
+        } else if is_ident_start(c) {
+            let mut text = String::new();
+            while let Some(ch) = s.peek() {
+                if !is_ident_continue(ch) {
+                    break;
+                }
+                text.push(ch);
+                s.bump();
+            }
+            // raw / byte string prefixes: r"", r#""#, b"", br"", c"", …
+            let is_raw = matches!(text.as_str(), "r" | "br" | "cr") && raw_string_follows(&s);
+            let is_bstr = matches!(text.as_str(), "b" | "c") && s.peek() == Some('"');
+            let is_bchar = text == "b" && s.peek() == Some('\'');
+            let (kind, text) = if is_raw {
+                (TokKind::Str, lex_raw_string(&mut s, text))
+            } else if is_bstr {
+                let mut t = text;
+                t.push_str(&lex_string(&mut s));
+                (TokKind::Str, t)
+            } else if is_bchar {
+                let (_, q) = lex_quote(&mut s);
+                let mut t = text;
+                t.push_str(&q);
+                (TokKind::Char, t)
+            } else {
+                (TokKind::Ident, text)
+            };
+            out.toks.push(Tok { kind, text, line });
+            last_tok_line = line;
+        } else if c.is_ascii_digit() {
+            let mut text = String::new();
+            let mut seen_dot = false;
+            while let Some(ch) = s.peek() {
+                if is_ident_continue(ch) {
+                    text.push(ch);
+                    s.bump();
+                } else if ch == '.'
+                    && !seen_dot
+                    && s.peek_at(1).is_some_and(|d| d.is_ascii_digit())
+                {
+                    seen_dot = true;
+                    text.push(ch);
+                    s.bump();
+                } else {
+                    break;
+                }
+            }
+            out.toks.push(Tok { kind: TokKind::Num, text, line });
+            last_tok_line = line;
+        } else {
+            s.bump();
+            out.toks.push(Tok {
+                kind: TokKind::Punct,
+                text: c.to_string(),
+                line,
+            });
+            last_tok_line = line;
+        }
+    }
+    out
+}
+
+/// After an `r`/`br`/`cr` identifier: true when `#*"` follows (a raw
+/// string, not a raw identifier like `r#type`).
+fn raw_string_follows(s: &Scan) -> bool {
+    let mut k = 0;
+    while s.peek_at(k) == Some('#') {
+        k += 1;
+    }
+    s.peek_at(k) == Some('"')
+}
+
+/// Consume a raw string body (cursor sits on the first `#` or the
+/// opening quote); `prefix` is the already-consumed `r`/`br`/`cr`.
+fn lex_raw_string(s: &mut Scan, prefix: String) -> String {
+    let mut text = prefix;
+    let mut hashes = 0usize;
+    while s.peek() == Some('#') {
+        hashes += 1;
+        text.push('#');
+        s.bump();
+    }
+    if s.peek() == Some('"') {
+        text.push('"');
+        s.bump();
+    }
+    // body runs until `"` followed by `hashes` `#`s (or end of input)
+    while let Some(ch) = s.peek() {
+        if ch == '"' && (0..hashes).all(|k| s.peek_at(1 + k) == Some('#')) {
+            text.push('"');
+            s.bump();
+            for _ in 0..hashes {
+                text.push('#');
+                s.bump();
+            }
+            break;
+        }
+        text.push(ch);
+        s.bump();
+    }
+    text
+}
+
+/// Consume a `"…"` string with escapes (cursor on the opening quote).
+/// Unterminated strings run to end of input.
+fn lex_string(s: &mut Scan) -> String {
+    let mut text = String::new();
+    text.push('"');
+    s.bump();
+    while let Some(ch) = s.bump() {
+        text.push(ch);
+        if ch == '\\' {
+            if let Some(esc) = s.bump() {
+                text.push(esc);
+            }
+        } else if ch == '"' {
+            break;
+        }
+    }
+    text
+}
+
+/// Disambiguate `'` between a lifetime (`'a`, `'static`) and a char
+/// literal (`'x'`, `'\n'`, `'\u{1F600}'`). Cursor on the quote.
+fn lex_quote(s: &mut Scan) -> (TokKind, String) {
+    let mut text = String::new();
+    text.push('\'');
+    s.bump();
+    let first = s.peek();
+    // `'ident` not followed by a closing quote is a lifetime
+    if first.is_some_and(is_ident_start) {
+        let mut k = 1;
+        while s.peek_at(k).is_some_and(is_ident_continue) {
+            k += 1;
+        }
+        if s.peek_at(k) != Some('\'') {
+            while s.peek().is_some_and(is_ident_continue) {
+                if let Some(ch) = s.bump() {
+                    text.push(ch);
+                }
+            }
+            return (TokKind::Lifetime, text);
+        }
+    }
+    // char literal: escapes may span several chars (`'\u{…}'`); cap
+    // the scan so malformed input can't absorb the rest of the file
+    let mut budget = 16;
+    while let Some(ch) = s.bump() {
+        text.push(ch);
+        if ch == '\\' {
+            if let Some(esc) = s.bump() {
+                text.push(esc);
+            }
+        } else if ch == '\'' {
+            break;
+        }
+        budget -= 1;
+        if budget == 0 {
+            break;
+        }
+    }
+    (TokKind::Char, text)
+}
+
+/// 1-based inclusive line ranges of `#[cfg(test)] mod … { … }` blocks,
+/// so rules can exempt inline unit tests (test code asserts and
+/// unwraps by design). Conservative: an unmatched brace extends the
+/// range to the last token.
+pub fn test_line_ranges(toks: &[Tok]) -> Vec<(u32, u32)> {
+    let mut ranges = Vec::new();
+    let is = |t: Option<&Tok>, kind: TokKind, text: &str| {
+        t.is_some_and(|t| t.kind == kind && t.text == text)
+    };
+    let mut i = 0;
+    while i < toks.len() {
+        // match `# [ cfg ( test ) ]`
+        let m = is(toks.get(i), TokKind::Punct, "#")
+            && is(toks.get(i + 1), TokKind::Punct, "[")
+            && is(toks.get(i + 2), TokKind::Ident, "cfg")
+            && is(toks.get(i + 3), TokKind::Punct, "(")
+            && is(toks.get(i + 4), TokKind::Ident, "test")
+            && is(toks.get(i + 5), TokKind::Punct, ")")
+            && is(toks.get(i + 6), TokKind::Punct, "]");
+        if !m {
+            i += 1;
+            continue;
+        }
+        let start_line = toks.get(i).map_or(0, |t| t.line);
+        let mut j = i + 7;
+        // skip further attributes between the cfg and the item
+        while is(toks.get(j), TokKind::Punct, "#") && is(toks.get(j + 1), TokKind::Punct, "[") {
+            let mut depth = 0usize;
+            while let Some(t) = toks.get(j) {
+                if t.kind == TokKind::Punct && t.text == "[" {
+                    depth += 1;
+                } else if t.kind == TokKind::Punct && t.text == "]" {
+                    depth = depth.saturating_sub(1);
+                    if depth == 0 {
+                        j += 1;
+                        break;
+                    }
+                }
+                j += 1;
+            }
+        }
+        if !is(toks.get(j), TokKind::Ident, "mod") {
+            i += 7;
+            continue;
+        }
+        // find the block's opening brace, then match braces to its end
+        while let Some(t) = toks.get(j) {
+            if t.kind == TokKind::Punct && (t.text == "{" || t.text == ";") {
+                break;
+            }
+            j += 1;
+        }
+        if is(toks.get(j), TokKind::Punct, ";") {
+            i = j + 1; // `#[cfg(test)] mod tests;` — out-of-line, no range
+            continue;
+        }
+        let mut depth = 0usize;
+        let mut end_line = toks.last().map_or(start_line, |t| t.line);
+        while let Some(t) = toks.get(j) {
+            if t.kind == TokKind::Punct && t.text == "{" {
+                depth += 1;
+            } else if t.kind == TokKind::Punct && t.text == "}" {
+                depth = depth.saturating_sub(1);
+                if depth == 0 {
+                    end_line = t.line;
+                    break;
+                }
+            }
+            j += 1;
+        }
+        ranges.push((start_line, end_line));
+        i = j + 1;
+    }
+    ranges
+}
+
+/// True when `line` falls inside any of `ranges` (inclusive).
+pub fn in_ranges(ranges: &[(u32, u32)], line: u32) -> bool {
+    ranges.iter().any(|&(a, b)| a <= line && line <= b)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn idents(src: &str) -> Vec<String> {
+        lex(src)
+            .toks
+            .into_iter()
+            .filter(|t| t.kind == TokKind::Ident)
+            .map(|t| t.text)
+            .collect()
+    }
+
+    #[test]
+    fn strings_and_comments_never_leak_tokens() {
+        let src = r##"
+            let a = "HashMap::new() // not a comment";
+            // HashMap in a comment is not a token
+            let b = 'x'; /* Instant::now */
+            let c = r#"SystemTime "quoted" raw"#;
+        "##;
+        let ids = idents(src);
+        assert!(!ids.contains(&"HashMap".to_string()), "{ids:?}");
+        assert!(!ids.contains(&"Instant".to_string()), "{ids:?}");
+        assert!(!ids.contains(&"SystemTime".to_string()), "{ids:?}");
+        let lexed = lex(src);
+        assert_eq!(lexed.comments.len(), 2);
+        assert!(lexed.comments[1].text.contains("Instant::now"));
+    }
+
+    #[test]
+    fn lifetimes_are_not_char_literals() {
+        let lexed = lex("fn f<'a>(x: &'a str) -> char { 'a' }");
+        let lifetimes: Vec<_> = lexed
+            .toks
+            .iter()
+            .filter(|t| t.kind == TokKind::Lifetime)
+            .collect();
+        assert_eq!(lifetimes.len(), 2);
+        let chars: Vec<_> = lexed.toks.iter().filter(|t| t.kind == TokKind::Char).collect();
+        assert_eq!(chars.len(), 1);
+        assert_eq!(chars[0].text, "'a'");
+    }
+
+    #[test]
+    fn lines_are_tracked_through_multiline_constructs() {
+        let src = "let a = \"x\ny\";\n/* c\nc */\nlet b = 1;";
+        let lexed = lex(src);
+        let b = lexed.toks.iter().find(|t| t.text == "b").unwrap();
+        assert_eq!(b.line, 5);
+        assert_eq!(lexed.comments[0].line, 3);
+    }
+
+    #[test]
+    fn trailing_vs_standalone_comments() {
+        let src = "let a = 1; // trailing\n// standalone\nlet b = 2;";
+        let lexed = lex(src);
+        assert!(lexed.comments[0].trailing);
+        assert!(!lexed.comments[1].trailing);
+    }
+
+    #[test]
+    fn raw_identifiers_are_not_raw_strings() {
+        let ids = idents("let r#type = 1; let r = 2;");
+        assert!(ids.contains(&"r".to_string()));
+        assert!(ids.contains(&"type".to_string()));
+    }
+
+    #[test]
+    fn cfg_test_mod_ranges_cover_the_block() {
+        let src = "\
+fn real() {}
+#[cfg(test)]
+mod tests {
+    fn t() { let x = vec![1]; }
+}
+fn after() {}
+";
+        let lexed = lex(src);
+        let ranges = test_line_ranges(&lexed.toks);
+        assert_eq!(ranges.len(), 1);
+        assert!(in_ranges(&ranges, 3));
+        assert!(in_ranges(&ranges, 4));
+        assert!(!in_ranges(&ranges, 1));
+        assert!(!in_ranges(&ranges, 6));
+    }
+
+    #[test]
+    fn cfg_test_with_extra_attributes_still_matches() {
+        let src = "\
+#[cfg(test)]
+#[allow(dead_code)]
+mod tests { fn t() {} }
+fn real() {}
+";
+        let ranges = test_line_ranges(&lex(src).toks);
+        assert_eq!(ranges.len(), 1);
+        assert!(in_ranges(&ranges, 3));
+        assert!(!in_ranges(&ranges, 4));
+    }
+
+    #[test]
+    fn pathological_inputs_do_not_panic() {
+        for src in [
+            "",
+            "\"unterminated",
+            "'",
+            "'\\",
+            "r#\"unterminated raw",
+            "/* unterminated /* nested",
+            "#[cfg(test)] mod t {",
+            "b'",
+            "1.2.3.4",
+            "\u{1F600}\u{1F600}",
+            "'''''",
+            "r#####",
+        ] {
+            let lexed = lex(src);
+            let _ = test_line_ranges(&lexed.toks);
+        }
+    }
+}

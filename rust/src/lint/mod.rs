@@ -1,0 +1,347 @@
+//! fedlint — the project's self-hosted determinism & wire-safety lint.
+//!
+//! The reproduction's claims (bit-exact run records, TCP==in-process
+//! loopback equivalence, content-addressed cache keys) rest on
+//! invariants no compiler checks: map iteration order must never cross
+//! the wire, decode paths must never panic on adversarial bytes, wall
+//! clocks and ad-hoc RNG seeds must never leak into recorded state,
+//! float narrowing in codec hot paths must be deliberate. fedlint
+//! enforces them statically, as named rules over the crate's own token
+//! stream — `cargo run -- lint` is the CLI verb, and CI runs it as a
+//! hard gate.
+//!
+//! Layout: [`lexer`] tokenizes (no full parse — rules are heuristics
+//! over tokens), [`rules`] holds the rule registry and the
+//! `fedlint:allow` contract, [`config`] reads the `fedlint.toml`
+//! scope/severity table, [`report`] renders text and JSON. The engine
+//! in this module walks the tree, applies scopes, and reconciles
+//! violations against allow comments.
+//!
+//! Suppression contract: a violation is suppressed only by a comment
+//! `// fedlint:allow(rule) -- reason` on the same line (trailing) or
+//! the line directly above (standalone). The reason is mandatory,
+//! honored allows are counted and printed, stale ones are reported as
+//! `unused-allow` warnings, and malformed ones are `bad-allow`
+//! denials — a broken suppression never silently suppresses.
+
+pub mod config;
+pub mod lexer;
+pub mod report;
+pub mod rules;
+
+use std::path::{Path, PathBuf};
+
+pub use config::{LintConfig, RuleConfig, Severity};
+pub use report::{render_json, render_text};
+pub use rules::{rule_names, RULES};
+
+use rules::FileCtx;
+
+/// One reported violation, scope- and suppression-resolved.
+#[derive(Clone, Debug)]
+pub struct Violation {
+    /// `/`-separated path relative to the linted root.
+    pub file: String,
+    pub line: u32,
+    pub rule: String,
+    pub severity: Severity,
+    pub message: String,
+    /// The offending source line, trimmed.
+    pub excerpt: String,
+}
+
+/// One honored `fedlint:allow`, for the reporter's accounting.
+#[derive(Clone, Debug)]
+pub struct AllowedSite {
+    pub file: String,
+    /// Line of the allow comment.
+    pub line: u32,
+    pub rules: Vec<String>,
+    pub reason: String,
+    /// Violations this allow suppressed (>= 1; stale allows are
+    /// reported as `unused-allow` instead of landing here).
+    pub uses: usize,
+}
+
+/// The outcome of one lint run.
+#[derive(Clone, Debug, Default)]
+pub struct LintReport {
+    /// Unsuppressed violations, sorted by (file, line, rule).
+    pub violations: Vec<Violation>,
+    /// Honored allows, sorted by (file, line).
+    pub allowed: Vec<AllowedSite>,
+    /// Files that had at least one applicable rule and were scanned.
+    pub files_scanned: usize,
+}
+
+impl LintReport {
+    pub fn deny_count(&self) -> usize {
+        self.violations.iter().filter(|v| v.severity == Severity::Deny).count()
+    }
+
+    pub fn warn_count(&self) -> usize {
+        self.violations.iter().filter(|v| v.severity == Severity::Warn).count()
+    }
+
+    /// Clean = nothing that should gate (warnings tolerated).
+    pub fn is_clean(&self) -> bool {
+        self.deny_count() == 0
+    }
+}
+
+/// Lint one file's source text under `cfg`. `rel` is the
+/// `/`-separated path scopes are matched against. Exposed for tests;
+/// [`lint_root`] drives it over a tree.
+pub fn lint_source(
+    rel: &str,
+    src: &str,
+    cfg: &LintConfig,
+    rule_filter: Option<&str>,
+) -> (Vec<Violation>, Vec<AllowedSite>) {
+    let applicable: Vec<&RuleConfig> = cfg
+        .rules
+        .iter()
+        .filter(|r| r.severity != Severity::Off)
+        .filter(|r| rule_filter.map_or(true, |f| f == r.name))
+        .filter(|r| r.in_scope(rel))
+        .collect();
+    if applicable.is_empty() {
+        return (Vec::new(), Vec::new());
+    }
+
+    let lexed = lexer::lex(src);
+    let test_ranges = lexer::test_line_ranges(&lexed.toks);
+    let ctx = FileCtx {
+        rel,
+        toks: &lexed.toks,
+        test_ranges: &test_ranges,
+    };
+
+    let mut raw = Vec::new();
+    for def in &RULES {
+        if applicable.iter().any(|r| r.name == def.name) {
+            (def.check)(&ctx, &mut raw);
+        }
+    }
+    let (allows, bad_allows) = rules::parse_allows(&lexed.comments, &test_ranges);
+    raw.extend(bad_allows);
+
+    // reconcile: a violation is suppressed by an allow naming its rule
+    // whose target line matches; count uses per allow
+    let mut uses = vec![0usize; allows.len()];
+    let mut out = Vec::new();
+    let lines: Vec<&str> = src.lines().collect();
+    for v in raw {
+        let suppressed = allows.iter().enumerate().find(|(_, a)| {
+            a.target_line == v.line && a.rules.iter().any(|r| r == v.rule)
+        });
+        if let Some((k, _)) = suppressed {
+            uses[k] += 1;
+            continue;
+        }
+        let severity = match cfg.rule(v.rule) {
+            Some(r) => r.severity,
+            // contract violations (bad-allow) always gate
+            None => Severity::Deny,
+        };
+        out.push(Violation {
+            file: rel.to_string(),
+            line: v.line,
+            rule: v.rule.to_string(),
+            severity,
+            message: v.message,
+            excerpt: excerpt(&lines, v.line),
+        });
+    }
+
+    let mut honored = Vec::new();
+    for (k, a) in allows.iter().enumerate() {
+        if uses[k] > 0 {
+            honored.push(AllowedSite {
+                file: rel.to_string(),
+                line: a.line,
+                rules: a.rules.clone(),
+                reason: a.reason.clone(),
+                uses: uses[k],
+            });
+        } else {
+            out.push(Violation {
+                file: rel.to_string(),
+                line: a.line,
+                rule: "unused-allow".to_string(),
+                severity: Severity::Warn,
+                message: format!(
+                    "allow({}) suppresses nothing — remove it or fix its target",
+                    a.rules.join(", ")
+                ),
+                excerpt: excerpt(&lines, a.line),
+            });
+        }
+    }
+    (out, honored)
+}
+
+fn excerpt(lines: &[&str], line: u32) -> String {
+    (line as usize)
+        .checked_sub(1)
+        .and_then(|i| lines.get(i))
+        .map(|s| s.trim().to_string())
+        .unwrap_or_default()
+}
+
+/// Lint every `.rs` file under `root` (skipping `target/`, `vendor/`,
+/// and VCS metadata) against `cfg`. `rule_filter` restricts to one
+/// rule; `path_filters` restrict to files whose relative path starts
+/// with any of the given prefixes. Deterministic: files are visited in
+/// sorted order and results sorted by (file, line, rule).
+pub fn lint_root(
+    root: &Path,
+    cfg: &LintConfig,
+    rule_filter: Option<&str>,
+    path_filters: &[String],
+) -> Result<LintReport, String> {
+    if let Some(f) = rule_filter {
+        let known = rule_names();
+        if !known.contains(&f) {
+            let hint = crate::util::suggest::closest(f, known.iter().copied())
+                .map(|c| format!(" (did you mean '{c}'?)"))
+                .unwrap_or_default();
+            return Err(format!("unknown rule '{f}'{hint}; known: {}", known.join(", ")));
+        }
+    }
+    let mut files = Vec::new();
+    walk(root, root, &mut files)?;
+    files.sort();
+
+    let filters: Vec<String> = path_filters
+        .iter()
+        .map(|f| f.trim_start_matches("./").trim_end_matches('/').to_string())
+        .filter(|f| !f.is_empty())
+        .collect();
+
+    let mut report = LintReport::default();
+    for (rel, path) in &files {
+        if !filters.is_empty() && !filters.iter().any(|f| rel.starts_with(f.as_str())) {
+            continue;
+        }
+        let scanned = cfg.rules.iter().any(|r| {
+            r.severity != Severity::Off
+                && rule_filter.map_or(true, |f| f == r.name)
+                && r.in_scope(rel)
+        });
+        if !scanned {
+            continue;
+        }
+        report.files_scanned += 1;
+        let src = std::fs::read_to_string(path)
+            .map_err(|e| format!("reading {}: {e}", path.display()))?;
+        let (violations, allowed) = lint_source(rel, &src, cfg, rule_filter);
+        report.violations.extend(violations);
+        report.allowed.extend(allowed);
+    }
+    report
+        .violations
+        .sort_by(|a, b| (&a.file, a.line, &a.rule).cmp(&(&b.file, b.line, &b.rule)));
+    report.allowed.sort_by(|a, b| (&a.file, a.line).cmp(&(&b.file, b.line)));
+    Ok(report)
+}
+
+fn walk(root: &Path, dir: &Path, out: &mut Vec<(String, PathBuf)>) -> Result<(), String> {
+    let entries =
+        std::fs::read_dir(dir).map_err(|e| format!("reading {}: {e}", dir.display()))?;
+    for entry in entries {
+        let entry = entry.map_err(|e| format!("walking {}: {e}", dir.display()))?;
+        let path = entry.path();
+        let name = entry.file_name().to_string_lossy().into_owned();
+        if path.is_dir() {
+            if matches!(name.as_str(), "target" | "vendor" | ".git" | ".jj" | "node_modules") {
+                continue;
+            }
+            walk(root, &path, out)?;
+        } else if name.ends_with(".rs") {
+            let rel = path
+                .strip_prefix(root)
+                .map_err(|e| format!("relativizing {}: {e}", path.display()))?
+                .components()
+                .map(|c| c.as_os_str().to_string_lossy().into_owned())
+                .collect::<Vec<_>>()
+                .join("/");
+            out.push((rel, path));
+        }
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cfg_for(rule: &str, scope: &str) -> LintConfig {
+        LintConfig::parse(&format!(
+            "[rule.{rule}]\nseverity = \"deny\"\npaths = [\"{scope}\"]\n"
+        ))
+        .unwrap()
+    }
+
+    #[test]
+    fn scope_gates_whether_a_rule_fires() {
+        let cfg = cfg_for("det-map-iter", "src/net/");
+        let src = "use std::collections::HashMap;\n";
+        let (v, _) = lint_source("src/net/proto.rs", src, &cfg, None);
+        assert_eq!(v.len(), 1);
+        assert_eq!(v[0].rule, "det-map-iter");
+        assert_eq!(v[0].excerpt, "use std::collections::HashMap;");
+        let (v, _) = lint_source("src/data/partition.rs", src, &cfg, None);
+        assert!(v.is_empty(), "out of scope");
+    }
+
+    #[test]
+    fn allows_suppress_and_are_counted_and_stale_ones_warn() {
+        let cfg = cfg_for("det-map-iter", "src/");
+        let src = "\
+// fedlint:allow(det-map-iter) -- this map never iterates
+use std::collections::HashMap;
+use std::collections::BTreeMap; // fedlint:allow(det-map-iter) -- stale
+";
+        let (v, allowed) = lint_source("src/x.rs", src, &cfg, None);
+        assert_eq!(allowed.len(), 1);
+        assert_eq!(allowed[0].uses, 1);
+        assert_eq!(allowed[0].reason, "this map never iterates");
+        assert_eq!(v.len(), 1, "{v:?}");
+        assert_eq!(v[0].rule, "unused-allow");
+        assert_eq!(v[0].severity, Severity::Warn);
+    }
+
+    #[test]
+    fn severity_off_and_warn_are_respected() {
+        let src = "use std::collections::HashMap;\n";
+        let off = LintConfig::parse(
+            "[rule.det-map-iter]\nseverity = \"off\"\npaths = [\"src/\"]\n",
+        )
+        .unwrap();
+        assert!(lint_source("src/x.rs", src, &off, None).0.is_empty());
+        let warn = LintConfig::parse(
+            "[rule.det-map-iter]\nseverity = \"warn\"\npaths = [\"src/\"]\n",
+        )
+        .unwrap();
+        let (v, _) = lint_source("src/x.rs", src, &warn, None);
+        assert_eq!(v[0].severity, Severity::Warn);
+        let report = LintReport {
+            violations: v,
+            ..Default::default()
+        };
+        assert!(report.is_clean(), "warnings do not gate");
+        assert_eq!(report.warn_count(), 1);
+    }
+
+    #[test]
+    fn rule_filter_limits_checks_and_rejects_typos() {
+        let cfg = LintConfig::builtin();
+        let src = "use std::collections::HashMap;\nlet t = Instant::now();\n";
+        let (v, _) = lint_source("src/net/x.rs", src, &cfg, Some("no-wallclock-state"));
+        assert_eq!(v.len(), 1, "{v:?}");
+        assert_eq!(v[0].rule, "no-wallclock-state");
+        let err = lint_root(Path::new("."), &cfg, Some("det-map-itr"), &[]).unwrap_err();
+        assert!(err.contains("det-map-iter"), "{err}");
+    }
+}

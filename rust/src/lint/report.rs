@@ -1,0 +1,158 @@
+//! Reporters for [`super::LintReport`]: human text (file:line + rule +
+//! excerpt, plus the allow ledger) and machine JSON for the CI gate
+//! artifact. Both are deterministic — the report is pre-sorted and the
+//! JSON object keys are BTreeMap-ordered — so reports diff cleanly
+//! across runs.
+
+use super::{LintReport, Severity};
+use crate::util::json::Json;
+
+/// Human-readable report. Violations first, then the honored-allow
+/// ledger (every suppression is visible, never silent), then a
+/// one-line summary.
+pub fn render_text(report: &LintReport) -> String {
+    let mut out = String::new();
+    for v in &report.violations {
+        out.push_str(&format!(
+            "{}:{}: [{}] {}: {}\n",
+            v.file,
+            v.line,
+            v.severity.name(),
+            v.rule,
+            v.message
+        ));
+        if !v.excerpt.is_empty() {
+            out.push_str(&format!("    {}\n", v.excerpt));
+        }
+    }
+    if !report.allowed.is_empty() {
+        out.push_str(&format!("{} allow(s) in effect:\n", report.allowed.len()));
+        for a in &report.allowed {
+            out.push_str(&format!(
+                "    {}:{} allow({}) x{} -- {}\n",
+                a.file,
+                a.line,
+                a.rules.join(", "),
+                a.uses,
+                a.reason
+            ));
+        }
+    }
+    let (deny, warn) = (report.deny_count(), report.warn_count());
+    if deny == 0 && warn == 0 {
+        out.push_str(&format!(
+            "fedlint: {} file(s) scanned, clean ({} allows honored)\n",
+            report.files_scanned,
+            report.allowed.len()
+        ));
+    } else {
+        out.push_str(&format!(
+            "fedlint: {} file(s) scanned, {deny} deny / {warn} warn violation(s), \
+             {} allows honored\n",
+            report.files_scanned,
+            report.allowed.len()
+        ));
+    }
+    out
+}
+
+/// JSON report (one line, stable key order) for `lint --json` and the
+/// CI artifact.
+pub fn render_json(report: &LintReport) -> String {
+    let violations: Vec<Json> = report
+        .violations
+        .iter()
+        .map(|v| {
+            Json::obj(vec![
+                ("file", Json::str(&v.file)),
+                ("line", Json::from(v.line as usize)),
+                ("rule", Json::str(&v.rule)),
+                ("severity", Json::str(v.severity.name())),
+                ("message", Json::str(&v.message)),
+                ("excerpt", Json::str(&v.excerpt)),
+            ])
+        })
+        .collect();
+    let allows: Vec<Json> = report
+        .allowed
+        .iter()
+        .map(|a| {
+            Json::obj(vec![
+                ("file", Json::str(&a.file)),
+                ("line", Json::from(a.line as usize)),
+                ("rules", Json::Arr(a.rules.iter().map(|r| Json::str(r)).collect())),
+                ("reason", Json::str(&a.reason)),
+                ("uses", Json::from(a.uses)),
+            ])
+        })
+        .collect();
+    Json::obj(vec![
+        ("files_scanned", Json::from(report.files_scanned)),
+        ("deny", Json::from(report.deny_count())),
+        ("warn", Json::from(report.warn_count())),
+        ("violations", Json::Arr(violations)),
+        ("allows", Json::Arr(allows)),
+    ])
+    .to_string()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::lint::{AllowedSite, Violation};
+
+    fn sample() -> LintReport {
+        LintReport {
+            violations: vec![Violation {
+                file: "src/net/proto.rs".into(),
+                line: 42,
+                rule: "no-panic-decode".into(),
+                severity: Severity::Deny,
+                message: "unwrap in decode".into(),
+                excerpt: "x.unwrap()".into(),
+            }],
+            allowed: vec![AllowedSite {
+                file: "src/store/record.rs".into(),
+                line: 84,
+                rules: vec!["no-wallclock-state".into()],
+                reason: "created_unix is an environment field".into(),
+                uses: 1,
+            }],
+            files_scanned: 7,
+        }
+    }
+
+    #[test]
+    fn text_report_has_file_line_rule_and_allow_ledger() {
+        let text = render_text(&sample());
+        assert!(text.contains("src/net/proto.rs:42: [deny] no-panic-decode"), "{text}");
+        assert!(text.contains("x.unwrap()"), "{text}");
+        assert!(text.contains("allow(no-wallclock-state) x1"), "{text}");
+        assert!(text.contains("1 deny / 0 warn"), "{text}");
+    }
+
+    #[test]
+    fn json_report_round_trips_through_the_parser() {
+        let parsed = Json::parse(&render_json(&sample())).unwrap();
+        assert_eq!(parsed.get("deny").unwrap().as_usize().unwrap(), 1);
+        assert_eq!(parsed.get("warn").unwrap().as_usize().unwrap(), 0);
+        assert_eq!(parsed.get("files_scanned").unwrap().as_usize().unwrap(), 7);
+        let v = parsed.get("violations").unwrap().as_arr().unwrap();
+        assert_eq!(v.len(), 1);
+        assert_eq!(v[0].get("line").unwrap().as_usize().unwrap(), 42);
+        assert_eq!(v[0].get("rule").unwrap().as_str().unwrap(), "no-panic-decode");
+        let a = parsed.get("allows").unwrap().as_arr().unwrap();
+        assert_eq!(a[0].get("uses").unwrap().as_usize().unwrap(), 1);
+    }
+
+    #[test]
+    fn clean_report_says_so() {
+        let clean = LintReport {
+            files_scanned: 3,
+            ..Default::default()
+        };
+        assert!(render_text(&clean).contains("clean"));
+        let parsed = Json::parse(&render_json(&clean)).unwrap();
+        assert_eq!(parsed.get("deny").unwrap().as_usize().unwrap(), 0);
+    }
+}

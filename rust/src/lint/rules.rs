@@ -1,0 +1,447 @@
+//! The fedlint rules: heuristics over the token stream of one file.
+//!
+//! Every rule is a pure function `(FileCtx) -> violations` registered
+//! in [`RULES`]; the engine decides scope (which files a rule sees,
+//! from `fedlint.toml`) and suppression (`fedlint:allow` comments), so
+//! a rule only has to recognize its pattern. Rules skip `#[cfg(test)]
+//! mod` blocks — test code unwraps and seeds RNGs by design.
+//!
+//! These are token-level heuristics, not type-checked analyses: they
+//! trade a few theoretical false positives (e.g. an `as f32` that
+//! provably loses no precision) for zero build-time dependencies and
+//! total coverage of the patterns that have actually bitten wire
+//! determinism. A justified exception carries an allow comment with a
+//! reason, which doubles as in-place documentation.
+
+use super::lexer::{in_ranges, Comment, Tok, TokKind};
+
+/// Context a rule sees for one file.
+pub struct FileCtx<'a> {
+    /// `/`-separated path relative to the linted root.
+    pub rel: &'a str,
+    pub toks: &'a [Tok],
+    /// 1-based line ranges of `#[cfg(test)] mod` blocks.
+    pub test_ranges: &'a [(u32, u32)],
+}
+
+/// A rule hit before scope/severity/suppression are applied.
+#[derive(Clone, Debug)]
+pub struct RawViolation {
+    pub rule: &'static str,
+    pub line: u32,
+    pub message: String,
+}
+
+/// One registered rule.
+pub struct RuleDef {
+    pub name: &'static str,
+    /// One-line description for `lint --rule list` style surfaces.
+    pub summary: &'static str,
+    pub check: fn(&FileCtx<'_>, &mut Vec<RawViolation>),
+}
+
+/// The rule registry. Adding a rule = one entry here + a section in
+/// `fedlint.toml` + a fixture under `tests/lint_fixtures/`.
+pub const RULES: [RuleDef; 5] = [
+    RuleDef {
+        name: "det-map-iter",
+        summary: "no HashMap/HashSet where iteration order can cross the wire or land in records",
+        check: check_det_map_iter,
+    },
+    RuleDef {
+        name: "no-panic-decode",
+        summary: "decode paths return typed errors: no unwrap/expect/panic!/indexing",
+        check: check_no_panic_decode,
+    },
+    RuleDef {
+        name: "no-wallclock-state",
+        summary: "wall-clock reads only for environment fields excluded from diff_records",
+        check: check_no_wallclock_state,
+    },
+    RuleDef {
+        name: "rng-discipline",
+        summary: "Rng construction only via the named root/fork stream constructors",
+        check: check_rng_discipline,
+    },
+    RuleDef {
+        name: "float-order",
+        summary: "no unannotated f32 narrowing or f32 reductions in codec hot paths",
+        check: check_float_order,
+    },
+];
+
+pub fn rule_names() -> Vec<&'static str> {
+    RULES.iter().map(|r| r.name).collect()
+}
+
+// --- the rules --------------------------------------------------------------
+
+fn check_det_map_iter(ctx: &FileCtx<'_>, out: &mut Vec<RawViolation>) {
+    for t in ctx.toks {
+        if t.kind == TokKind::Ident
+            && (t.text == "HashMap" || t.text == "HashSet")
+            && !in_ranges(ctx.test_ranges, t.line)
+        {
+            out.push(RawViolation {
+                rule: "det-map-iter",
+                line: t.line,
+                message: format!(
+                    "{} in a determinism scope — iteration order is randomized per \
+                     process; use BTreeMap/BTreeSet or sort before emitting",
+                    t.text
+                ),
+            });
+        }
+    }
+}
+
+/// Identifiers that may legitimately precede `[` without it being an
+/// index expression (slice patterns, array types after keywords).
+const NON_INDEX_KEYWORDS: &[&str] = &[
+    "as", "box", "break", "const", "continue", "crate", "dyn", "else", "enum", "extern", "fn",
+    "for", "if", "impl", "in", "let", "loop", "match", "mod", "move", "mut", "pub", "ref",
+    "return", "static", "struct", "trait", "type", "unsafe", "use", "where", "while",
+];
+
+fn check_no_panic_decode(ctx: &FileCtx<'_>, out: &mut Vec<RawViolation>) {
+    let toks = ctx.toks;
+    let punct = |k: usize, text: &str| {
+        toks.get(k).is_some_and(|t| t.kind == TokKind::Punct && t.text == text)
+    };
+    for (i, t) in toks.iter().enumerate() {
+        if in_ranges(ctx.test_ranges, t.line) {
+            continue;
+        }
+        match t.kind {
+            TokKind::Ident if (t.text == "unwrap" || t.text == "expect") => {
+                // `.unwrap()` / `.expect(` — method calls only, so
+                // `unwrap_or` and fields named `expect` don't trip
+                if i > 0 && punct(i - 1, ".") && punct(i + 1, "(") {
+                    out.push(RawViolation {
+                        rule: "no-panic-decode",
+                        line: t.line,
+                        message: format!(
+                            ".{}() in a decode path — adversarial bytes must surface \
+                             as a typed error, not a panic",
+                            t.text
+                        ),
+                    });
+                }
+            }
+            TokKind::Ident
+                if matches!(t.text.as_str(), "panic" | "unreachable" | "todo" | "unimplemented") =>
+            {
+                if punct(i + 1, "!") {
+                    out.push(RawViolation {
+                        rule: "no-panic-decode",
+                        line: t.line,
+                        message: format!("{}! in a decode path — return a typed error", t.text),
+                    });
+                }
+            }
+            TokKind::Punct if t.text == "[" && i > 0 => {
+                // index expression: `expr[...]` — `[` right after an
+                // identifier, `)`, or `]`. Array types/literals and
+                // slice patterns follow punctuation or a keyword.
+                let indexes = toks.get(i - 1).is_some_and(|p| match p.kind {
+                    TokKind::Ident => !NON_INDEX_KEYWORDS.contains(&p.text.as_str()),
+                    TokKind::Punct => p.text == ")" || p.text == "]",
+                    _ => false,
+                });
+                if indexes {
+                    out.push(RawViolation {
+                        rule: "no-panic-decode",
+                        line: t.line,
+                        message: "slice/array indexing in a decode path — a bad offset \
+                                  panics; use .get()/ByteCursor and return a typed error"
+                            .to_string(),
+                    });
+                }
+            }
+            _ => {}
+        }
+    }
+}
+
+fn check_no_wallclock_state(ctx: &FileCtx<'_>, out: &mut Vec<RawViolation>) {
+    // flag the *reads* — `Instant::now` / `SystemTime::now` — not
+    // imports or type positions, so one allow marks one clock read
+    for (i, t) in ctx.toks.iter().enumerate() {
+        if t.kind == TokKind::Ident
+            && (t.text == "Instant" || t.text == "SystemTime")
+            && !in_ranges(ctx.test_ranges, t.line)
+            && path_call(ctx.toks, i, "now")
+        {
+            out.push(RawViolation {
+                rule: "no-wallclock-state",
+                line: t.line,
+                message: format!(
+                    "{}::now in a determinism scope — wall time may only feed \
+                     environment fields that diff_records excludes",
+                    t.text
+                ),
+            });
+        }
+    }
+}
+
+fn check_rng_discipline(ctx: &FileCtx<'_>, out: &mut Vec<RawViolation>) {
+    for (i, t) in ctx.toks.iter().enumerate() {
+        if t.kind == TokKind::Ident
+            && t.text == "Rng"
+            && !in_ranges(ctx.test_ranges, t.line)
+            && path_call(ctx.toks, i, "new")
+        {
+            out.push(RawViolation {
+                rule: "rng-discipline",
+                line: t.line,
+                message: "ad-hoc Rng::new — derive streams from the run's named \
+                          root/fork constructors, or allow with the stream's name"
+                    .to_string(),
+            });
+        }
+    }
+}
+
+fn check_float_order(ctx: &FileCtx<'_>, out: &mut Vec<RawViolation>) {
+    let toks = ctx.toks;
+    let seq = |k: usize, kind: TokKind, text: &str| {
+        toks.get(k).is_some_and(|t| t.kind == kind && t.text == text)
+    };
+    for (i, t) in toks.iter().enumerate() {
+        if in_ranges(ctx.test_ranges, t.line) {
+            continue;
+        }
+        if t.kind == TokKind::Ident && t.text == "as" && seq(i + 1, TokKind::Ident, "f32") {
+            out.push(RawViolation {
+                rule: "float-order",
+                line: t.line,
+                message: "`as f32` narrowing in a codec hot path — rounding depends on \
+                          accumulation order; annotate the deliberate cases"
+                    .to_string(),
+            });
+        }
+        // `.sum::<f32>()` — an unordered f32 reduction
+        if t.kind == TokKind::Ident
+            && t.text == "sum"
+            && i > 0
+            && seq(i - 1, TokKind::Punct, ".")
+            && seq(i + 1, TokKind::Punct, ":")
+            && seq(i + 2, TokKind::Punct, ":")
+            && seq(i + 3, TokKind::Punct, "<")
+            && seq(i + 4, TokKind::Ident, "f32")
+        {
+            out.push(RawViolation {
+                rule: "float-order",
+                line: t.line,
+                message: ".sum::<f32>() — f32 reduction order changes the result; \
+                          accumulate in f64 or document the ordering"
+                    .to_string(),
+            });
+        }
+    }
+}
+
+/// `toks[i]` starts a `Name::method` path call: `Name :: method`.
+fn path_call(toks: &[Tok], i: usize, method: &str) -> bool {
+    let p = |k: usize, text: &str| {
+        toks.get(k).is_some_and(|t| t.kind == TokKind::Punct && t.text == text)
+    };
+    p(i + 1, ":")
+        && p(i + 2, ":")
+        && toks
+            .get(i + 3)
+            .is_some_and(|t| t.kind == TokKind::Ident && t.text == method)
+}
+
+// --- the allow contract -----------------------------------------------------
+
+/// A parsed `// fedlint:allow(rule[, rule]) -- reason` comment.
+#[derive(Clone, Debug)]
+pub struct Allow {
+    /// Line of the comment itself.
+    pub line: u32,
+    /// Line whose violations it suppresses: its own line for a
+    /// trailing comment, the next line for a standalone one.
+    pub target_line: u32,
+    pub rules: Vec<String>,
+    pub reason: String,
+}
+
+const MARKER: &str = "fedlint:allow";
+
+/// Extract allow comments; malformed ones (missing rule list, unknown
+/// rule, missing `-- reason`) become `bad-allow` violations — a broken
+/// suppression must never silently suppress.
+pub fn parse_allows(
+    comments: &[Comment],
+    test_ranges: &[(u32, u32)],
+) -> (Vec<Allow>, Vec<RawViolation>) {
+    let mut allows = Vec::new();
+    let mut bad = Vec::new();
+    let mut push_bad = |line: u32, message: String| {
+        bad.push(RawViolation {
+            rule: "bad-allow",
+            line,
+            message,
+        });
+    };
+    for c in comments {
+        let Some(pos) = c.text.find(MARKER) else {
+            continue;
+        };
+        if in_ranges(test_ranges, c.line) {
+            continue; // rules skip test code, so allows there are moot
+        }
+        let after = &c.text[pos + MARKER.len()..];
+        let Some(open) = after.strip_prefix('(') else {
+            push_bad(c.line, format!("expected {MARKER}(rule, ...) -- reason"));
+            continue;
+        };
+        let Some((list, rest)) = open.split_once(')') else {
+            push_bad(c.line, "unclosed rule list in allow comment".to_string());
+            continue;
+        };
+        let rules: Vec<String> =
+            list.split(',').map(|r| r.trim().to_string()).filter(|r| !r.is_empty()).collect();
+        if rules.is_empty() {
+            push_bad(c.line, "allow comment names no rules".to_string());
+            continue;
+        }
+        let known = rule_names();
+        if let Some(unknown) = rules.iter().find(|r| !known.contains(&r.as_str())) {
+            push_bad(
+                c.line,
+                format!("allow names unknown rule '{unknown}' (known: {})", known.join(", ")),
+            );
+            continue;
+        }
+        let rest = rest.trim_start();
+        let reason = rest.strip_prefix("--").map(str::trim).unwrap_or_default();
+        if reason.is_empty() {
+            push_bad(
+                c.line,
+                "allow comment without a reason — write `-- <why this is sound>`".to_string(),
+            );
+            continue;
+        }
+        allows.push(Allow {
+            line: c.line,
+            target_line: if c.trailing { c.line } else { c.line + 1 },
+            rules,
+            reason: reason.to_string(),
+        });
+    }
+    (allows, bad)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::lint::lexer::{lex, test_line_ranges};
+
+    fn run(rule: &str, src: &str) -> Vec<RawViolation> {
+        let lexed = lex(src);
+        let ranges = test_line_ranges(&lexed.toks);
+        let ctx = FileCtx {
+            rel: "src/fake.rs",
+            toks: &lexed.toks,
+            test_ranges: &ranges,
+        };
+        let mut out = Vec::new();
+        for def in &RULES {
+            if def.name == rule {
+                (def.check)(&ctx, &mut out);
+            }
+        }
+        out
+    }
+
+    #[test]
+    fn det_map_iter_flags_hash_collections_outside_tests() {
+        let hits = run(
+            "det-map-iter",
+            "use std::collections::HashMap;\n\
+             fn f(m: &HashMap<u32, u32>) {}\n\
+             #[cfg(test)]\nmod tests { use std::collections::HashSet; }\n",
+        );
+        assert_eq!(hits.iter().map(|v| v.line).collect::<Vec<_>>(), vec![1, 2]);
+        assert!(run("det-map-iter", "use std::collections::BTreeMap;").is_empty());
+    }
+
+    #[test]
+    fn no_panic_decode_distinguishes_calls_from_lookalikes() {
+        let hits = run(
+            "no-panic-decode",
+            "fn f(v: &[u8]) -> u8 {\n\
+             let a = v.first().unwrap();\n\
+             let b = x.unwrap_or(0);\n\
+             let c = v[0];\n\
+             let d: [u8; 4] = [0; 4];\n\
+             #[derive(Debug)] struct S;\n\
+             panic!(\"no\");\n\
+             }\n",
+        );
+        let lines: Vec<u32> = hits.iter().map(|v| v.line).collect();
+        assert!(lines.contains(&2), "unwrap call: {hits:?}");
+        assert!(!lines.contains(&3), "unwrap_or is fine: {hits:?}");
+        assert!(lines.contains(&4), "indexing: {hits:?}");
+        assert!(!lines.contains(&5), "array literal/type is fine: {hits:?}");
+        assert!(!lines.contains(&6), "attribute is fine: {hits:?}");
+        assert!(lines.contains(&7), "panic!: {hits:?}");
+    }
+
+    #[test]
+    fn slice_patterns_and_macro_brackets_are_not_indexing() {
+        assert!(run("no-panic-decode", "let [a, b] = pair;").is_empty());
+        assert!(run("no-panic-decode", "let v = vec![1, 2];").is_empty());
+        assert!(run("no-panic-decode", "fn f() -> [u8; 2] { g() }").is_empty());
+        assert_eq!(run("no-panic-decode", "let x = buf[i];").len(), 1);
+        assert_eq!(run("no-panic-decode", "let x = f()[0];").len(), 1);
+    }
+
+    #[test]
+    fn wallclock_flags_reads_not_imports() {
+        assert!(run("no-wallclock-state", "use std::time::Instant;").is_empty());
+        assert!(run("no-wallclock-state", "fn f(t: Instant) {}").is_empty());
+        assert_eq!(run("no-wallclock-state", "let t = Instant::now();").len(), 1);
+        assert_eq!(
+            run("no-wallclock-state", "let t = std::time::SystemTime::now();").len(),
+            1
+        );
+    }
+
+    #[test]
+    fn rng_discipline_flags_construction_only() {
+        assert_eq!(run("rng-discipline", "let mut r = Rng::new(42);").len(), 1);
+        assert!(run("rng-discipline", "let s = rng.fork(3);").is_empty());
+        assert!(run("rng-discipline", "fn f(rng: &mut Rng) {}").is_empty());
+    }
+
+    #[test]
+    fn float_order_flags_narrowing_and_f32_sums() {
+        assert_eq!(run("float-order", "let x = total as f32;").len(), 1);
+        assert_eq!(run("float-order", "let s = v.iter().sum::<f32>();").len(), 1);
+        assert!(run("float-order", "let x = total as f64;").is_empty());
+        assert!(run("float-order", "let s: f64 = v.iter().sum();").is_empty());
+    }
+
+    #[test]
+    fn allow_comments_parse_and_malformed_ones_are_violations() {
+        let lexed = lex(
+            "let a = 1; // fedlint:allow(det-map-iter) -- keyed iteration is sorted first\n\
+             // fedlint:allow(no-panic-decode, rng-discipline) -- lock poisoning only\n\
+             let b = 2;\n\
+             // fedlint:allow(det-map-iter)\n\
+             // fedlint:allow(not-a-rule) -- whatever\n\
+             // fedlint:allow -- no list\n",
+        );
+        let (allows, bad) = parse_allows(&lexed.comments, &[]);
+        assert_eq!(allows.len(), 2);
+        assert_eq!(allows[0].target_line, 1, "trailing allow suppresses its own line");
+        assert_eq!(allows[1].target_line, 3, "standalone allow suppresses the next line");
+        assert_eq!(allows[1].rules.len(), 2);
+        let bad_lines: Vec<u32> = bad.iter().map(|v| v.line).collect();
+        assert_eq!(bad_lines, vec![4, 5, 6], "{bad:?}");
+    }
+}

@@ -636,6 +636,49 @@ fn cmd_inspect(args: &Args) -> Result<()> {
     Ok(())
 }
 
+fn cmd_lint(args: &Args) -> Result<()> {
+    use fedcompress::lint::{self, LintConfig};
+
+    args.restrict(&["json", "rule", "root", "out", "config", "verbose"])?;
+    // Auto-detect the crate root: run from rust/ or from the repo root.
+    let root = match args.flag("root") {
+        Some(r) => PathBuf::from(r),
+        None if Path::new("src/lib.rs").exists() => PathBuf::from("."),
+        None if Path::new("rust/src/lib.rs").exists() => PathBuf::from("rust"),
+        None => anyhow::bail!(
+            "cannot find the crate root (no src/lib.rs here or under rust/); pass --root"
+        ),
+    };
+    let cfg = match args.flag("config") {
+        Some(f) => LintConfig::from_file(Path::new(f)).map_err(anyhow::Error::msg)?,
+        None => {
+            let committed = root.join("fedlint.toml");
+            if committed.exists() {
+                LintConfig::from_file(&committed).map_err(anyhow::Error::msg)?
+            } else {
+                LintConfig::builtin()
+            }
+        }
+    };
+    let report = lint::lint_root(&root, &cfg, args.flag("rule"), &args.positionals)
+        .map_err(anyhow::Error::msg)?;
+    let json = lint::render_json(&report);
+    if let Some(out) = args.flag("out") {
+        std::fs::write(out, format!("{json}\n")).with_context(|| format!("writing {out}"))?;
+    }
+    if args.flag("json").is_some() {
+        println!("{json}");
+    } else {
+        print!("{}", lint::render_text(&report));
+    }
+    anyhow::ensure!(
+        report.deny_count() == 0,
+        "fedlint: {} deny-severity violation(s)",
+        report.deny_count()
+    );
+    Ok(())
+}
+
 fn main() -> Result<()> {
     logging::init();
     let argv: Vec<String> = std::env::args().skip(1).collect();
@@ -654,6 +697,7 @@ fn main() -> Result<()> {
         ParsedCommand::Fleet => cmd_fleet(&args),
         ParsedCommand::Sweep => cmd_sweep(&args),
         ParsedCommand::Runs => cmd_runs(&args),
+        ParsedCommand::Lint => cmd_lint(&args),
         ParsedCommand::AblateC => cmd_ablate_c(&args),
         ParsedCommand::Inspect => cmd_inspect(&args),
     }

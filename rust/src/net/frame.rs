@@ -14,6 +14,7 @@
 use std::io::{Read, Write};
 
 use super::ProtoError;
+use crate::util::cursor::ByteCursor;
 
 /// Frame magic, "FCN1" as a little-endian u32.
 pub const MAGIC: u32 = u32::from_le_bytes(*b"FCN1");
@@ -41,6 +42,7 @@ const fn crc_table() -> [u32; 256] {
             c = if c & 1 == 1 { 0xEDB8_8320 ^ (c >> 1) } else { c >> 1 };
             k += 1;
         }
+        // fedlint:allow(no-panic-decode) -- const-eval table build, i < 256 by the loop bound
         t[i] = c;
         i += 1;
     }
@@ -70,6 +72,7 @@ impl Crc32 {
     pub fn update(&mut self, bytes: &[u8]) {
         let mut c = self.state;
         for &b in bytes {
+            // fedlint:allow(no-panic-decode) -- index is masked to 8 bits, always in range
             c = CRC_TABLE[((c ^ b as u32) & 0xFF) as usize] ^ (c >> 8);
         }
         self.state = c;
@@ -167,16 +170,20 @@ fn read_exact_or(
 pub fn read_frame(r: &mut impl Read) -> Result<(u8, Vec<u8>), ProtoError> {
     let mut header = [0u8; 11];
     read_exact_or(r, &mut header, "frame header")?;
-    let magic = u32::from_le_bytes(header[0..4].try_into().unwrap());
+    // the cursor cannot actually run out of an 11-byte header, but the
+    // decode path stays panic-free on principle (fedlint: no-panic-decode)
+    let short = || ProtoError::Truncated { what: "frame header" };
+    let mut c = ByteCursor::new(&header);
+    let magic = c.u32().ok_or_else(short)?;
     if magic != MAGIC {
         return Err(ProtoError::BadMagic { got: magic });
     }
-    let version = u16::from_le_bytes(header[4..6].try_into().unwrap());
+    let version = c.u16().ok_or_else(short)?;
     if version != PROTO_VERSION {
         return Err(ProtoError::BadVersion { got: version });
     }
-    let msg_type = header[6];
-    let len = u32::from_le_bytes(header[7..11].try_into().unwrap());
+    let msg_type = c.u8().ok_or_else(short)?;
+    let len = c.u32().ok_or_else(short)?;
     if len > MAX_PAYLOAD {
         return Err(ProtoError::Oversized { len, max: MAX_PAYLOAD });
     }

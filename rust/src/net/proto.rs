@@ -39,6 +39,7 @@ use crate::clustering::ControllerConfig;
 use crate::codec::{CodecCache, StageBytes};
 use crate::config::FedConfig;
 use crate::sim::{FleetConfig, FleetPreset};
+use crate::util::cursor::ByteCursor;
 
 use super::frame::FRAME_OVERHEAD;
 use super::ProtoError;
@@ -229,7 +230,7 @@ impl Msg {
 
     /// Decode a frame body (`msg_type` from the frame header).
     pub fn decode(msg_type: u8, payload: &[u8]) -> Result<Msg, ProtoError> {
-        let mut c = Cur { b: payload, i: 0 };
+        let mut c = Cur::new(payload);
         let msg = match msg_type {
             1 => Msg::Hello(Hello {
                 proto_version: c.u16("hello version")?,
@@ -432,15 +433,15 @@ fn put_stages(v: &mut Vec<u8>, stages: &[StageBytes]) {
     // pipelines can never hit either bound (MAX_STAGES=8, validated
     // short names), and a clamped sidecar still frames identically on
     // both ends.
-    let stages = &stages[..stages.len().min(MAX_STAGE_SIDECAR)];
-    v.push(stages.len() as u8);
-    for s in stages {
+    let n = stages.len().min(MAX_STAGE_SIDECAR);
+    v.push(n as u8);
+    for s in stages.iter().take(n) {
         let mut cut = s.stage.len().min(u8::MAX as usize);
         while !s.stage.is_char_boundary(cut) {
             cut -= 1;
         }
         v.push(cut as u8);
-        v.extend_from_slice(&s.stage.as_bytes()[..cut]);
+        v.extend_from_slice(s.stage.as_bytes().get(..cut).unwrap_or_default());
         put_u64(v, s.bytes as u64);
     }
 }
@@ -451,37 +452,36 @@ const MAX_STAGE_SIDECAR: usize = 32;
 
 // --- cursor reader with typed truncation errors ----------------------------
 
+/// Message-level cursor: [`ByteCursor`] plus the `what` labels that
+/// turn an out-of-bytes read into a useful [`ProtoError::Truncated`].
 struct Cur<'a> {
-    b: &'a [u8],
-    i: usize,
+    c: ByteCursor<'a>,
 }
 
 impl<'a> Cur<'a> {
+    fn new(b: &'a [u8]) -> Cur<'a> {
+        Cur { c: ByteCursor::new(b) }
+    }
     fn take(&mut self, n: usize, what: &'static str) -> Result<&'a [u8], ProtoError> {
-        if self.i + n > self.b.len() {
-            return Err(ProtoError::Truncated { what });
-        }
-        let s = &self.b[self.i..self.i + n];
-        self.i += n;
-        Ok(s)
+        self.c.take(n).ok_or(ProtoError::Truncated { what })
     }
     fn u8(&mut self, what: &'static str) -> Result<u8, ProtoError> {
-        Ok(self.take(1, what)?[0])
+        self.c.u8().ok_or(ProtoError::Truncated { what })
     }
     fn u16(&mut self, what: &'static str) -> Result<u16, ProtoError> {
-        Ok(u16::from_le_bytes(self.take(2, what)?.try_into().unwrap()))
+        self.c.u16().ok_or(ProtoError::Truncated { what })
     }
     fn u32(&mut self, what: &'static str) -> Result<u32, ProtoError> {
-        Ok(u32::from_le_bytes(self.take(4, what)?.try_into().unwrap()))
+        self.c.u32().ok_or(ProtoError::Truncated { what })
     }
     fn u64(&mut self, what: &'static str) -> Result<u64, ProtoError> {
-        Ok(u64::from_le_bytes(self.take(8, what)?.try_into().unwrap()))
+        self.c.u64().ok_or(ProtoError::Truncated { what })
     }
     fn f32(&mut self, what: &'static str) -> Result<f32, ProtoError> {
-        Ok(f32::from_le_bytes(self.take(4, what)?.try_into().unwrap()))
+        self.c.f32().ok_or(ProtoError::Truncated { what })
     }
     fn f64(&mut self, what: &'static str) -> Result<f64, ProtoError> {
-        Ok(f64::from_le_bytes(self.take(8, what)?.try_into().unwrap()))
+        self.c.f64().ok_or(ProtoError::Truncated { what })
     }
     fn f32s(&mut self, what: &'static str) -> Result<Vec<f32>, ProtoError> {
         let n = self.u32(what)? as usize;
@@ -529,15 +529,13 @@ impl<'a> Cur<'a> {
         Ok(out)
     }
     fn rest(&mut self) -> Vec<u8> {
-        let out = self.b[self.i..].to_vec();
-        self.i = self.b.len();
-        out
+        self.c.rest().to_vec()
     }
     fn done(&self) -> bool {
-        self.i == self.b.len()
+        self.c.done()
     }
     fn remaining(&self) -> usize {
-        self.b.len() - self.i
+        self.c.remaining()
     }
 }
 
@@ -557,7 +555,7 @@ pub fn config_image(cfg: &FedConfig) -> Vec<u8> {
 /// Inverse of [`config_image`]: rebuild the exact `FedConfig`.
 /// Trailing garbage after the image is rejected.
 pub fn parse_config_image(bytes: &[u8]) -> Result<FedConfig, ProtoError> {
-    let mut c = Cur { b: bytes, i: 0 };
+    let mut c = Cur::new(bytes);
     let cfg = read_cfg(&mut c)?;
     if !c.done() {
         return Err(malformed(format!(
@@ -764,7 +762,7 @@ mod tests {
         cfg.set("codec", "topk(keep=0.25)|kmeans(c=9)|huffman").unwrap();
         let mut buf = Vec::new();
         put_cfg(&mut buf, &cfg);
-        let mut cur = Cur { b: &buf, i: 0 };
+        let mut cur = Cur::new(&buf);
         let back = read_cfg(&mut cur).unwrap();
         assert!(cur.done());
         cfg_eq(&back, &cfg);

@@ -34,6 +34,7 @@ use super::{ProtoError, PROTO_VERSION};
 
 /// Connect with retry so `worker` can be launched before `serve`.
 fn connect(addr: &str, patience: Duration) -> Result<TcpStream> {
+    // fedlint:allow(no-wallclock-state) -- connect retry pacing only, never recorded
     let t0 = Instant::now();
     loop {
         match TcpStream::connect(addr) {

@@ -2,7 +2,7 @@
 //! the typed `run` entry the coordinator/client layers call.
 
 use std::cell::RefCell;
-use std::collections::HashMap;
+use std::collections::BTreeMap;
 use std::path::Path;
 use std::rc::Rc;
 
@@ -16,7 +16,7 @@ use crate::info;
 pub struct Engine {
     client: PjRtClient,
     pub manifest: Manifest,
-    cache: RefCell<HashMap<(String, String), Rc<PjRtLoadedExecutable>>>,
+    cache: RefCell<BTreeMap<(String, String), Rc<PjRtLoadedExecutable>>>,
     /// executions performed (for perf accounting)
     exec_count: RefCell<u64>,
 }
@@ -35,7 +35,7 @@ impl Engine {
         Ok(Engine {
             client,
             manifest,
-            cache: RefCell::new(HashMap::new()),
+            cache: RefCell::new(BTreeMap::new()),
             exec_count: RefCell::new(0),
         })
     }

@@ -62,6 +62,7 @@ pub struct FaultSchedule {
 impl FaultSchedule {
     pub fn new(profile: &FleetProfile, dropout: f64, seed: u64) -> FaultSchedule {
         FaultSchedule {
+            // fedlint:allow(rng-discipline) -- fault-schedule root stream, domain-separated from training seeds
             base: Rng::new(seed ^ 0xFA17),
             drop_prob: profile
                 .clients

@@ -188,6 +188,7 @@ impl FleetProfile {
     /// profile of client k does not depend on the fleet size.
     pub fn build(cfg: &FleetConfig, clients: usize, seed: u64) -> FleetProfile {
         let params = cfg.preset.params();
+        // fedlint:allow(rng-discipline) -- fleet-profile root stream, domain-separated from training seeds
         let base = Rng::new(seed ^ 0xF1EE7);
         let profiles = (0..clients)
             .map(|k| {

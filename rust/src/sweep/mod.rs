@@ -127,6 +127,7 @@ pub fn run_sweep(
                 idx: job.idx,
                 label: job.label(),
             });
+            // fedlint:allow(no-wallclock-state) -- wall_s is a bench field, excluded from record diffing
             let t0 = std::time::Instant::now();
             match runner.run(job) {
                 Ok(rec) => {

@@ -75,6 +75,7 @@ pub struct SmokeRunner;
 impl JobRunner for SmokeRunner {
     fn run(&self, job: &SweepJob) -> Result<RunRecord> {
         let cfg = &job.cfg;
+        // fedlint:allow(rng-discipline) -- smoke-runner root stream, seeded by the job's content key
         let mut rng = Rng::new(job.key);
         let p = 2_048usize;
         let dense = dense_bytes(p);

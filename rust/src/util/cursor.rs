@@ -1,0 +1,129 @@
+//! Panic-free little-endian byte cursor — the shared substrate under
+//! every wire/record decode path.
+//!
+//! Decoders that face adversarial bytes (`net/frame`, `net/proto`, the
+//! codec terminal formats) must never panic on any input — the fedlint
+//! rule `no-panic-decode` enforces that statically. This cursor is the
+//! bounds-checked primitive they build on: every accessor returns
+//! `Option`, `None` meaning the input ran out, and the caller maps
+//! `None` onto its own typed truncation error (`ProtoError::Truncated`,
+//! `CodecError::Truncated`, ...). All multi-byte reads are
+//! little-endian, matching the wire format everywhere in this crate.
+
+/// A forward-only reader over a byte slice. Never panics: out-of-range
+/// reads (including position arithmetic that would overflow `usize`)
+/// return `None` and leave the cursor where it was.
+pub struct ByteCursor<'a> {
+    b: &'a [u8],
+    i: usize,
+}
+
+impl<'a> ByteCursor<'a> {
+    pub fn new(b: &'a [u8]) -> ByteCursor<'a> {
+        ByteCursor { b, i: 0 }
+    }
+
+    /// Bytes not yet consumed.
+    pub fn remaining(&self) -> usize {
+        self.b.len().saturating_sub(self.i)
+    }
+
+    /// True once every byte has been consumed.
+    pub fn done(&self) -> bool {
+        self.remaining() == 0
+    }
+
+    /// Take the next `n` bytes, or `None` if fewer remain.
+    pub fn take(&mut self, n: usize) -> Option<&'a [u8]> {
+        let end = self.i.checked_add(n)?;
+        let s = self.b.get(self.i..end)?;
+        self.i = end;
+        Some(s)
+    }
+
+    /// Take a fixed-width array off the front.
+    pub fn array<const N: usize>(&mut self) -> Option<[u8; N]> {
+        let s = self.take(N)?;
+        <[u8; N]>::try_from(s).ok()
+    }
+
+    pub fn u8(&mut self) -> Option<u8> {
+        self.array::<1>().map(|[b]| b)
+    }
+
+    pub fn u16(&mut self) -> Option<u16> {
+        self.array().map(u16::from_le_bytes)
+    }
+
+    pub fn u32(&mut self) -> Option<u32> {
+        self.array().map(u32::from_le_bytes)
+    }
+
+    pub fn u64(&mut self) -> Option<u64> {
+        self.array().map(u64::from_le_bytes)
+    }
+
+    pub fn f32(&mut self) -> Option<f32> {
+        self.array().map(f32::from_le_bytes)
+    }
+
+    pub fn f64(&mut self) -> Option<f64> {
+        self.array().map(f64::from_le_bytes)
+    }
+
+    /// Everything left, consuming it (empty slice at the end).
+    pub fn rest(&mut self) -> &'a [u8] {
+        let s = self.b.get(self.i..).unwrap_or_default();
+        self.i = self.b.len();
+        s
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn reads_every_width_in_order() {
+        let mut buf = Vec::new();
+        buf.push(7u8);
+        buf.extend_from_slice(&0xBEEFu16.to_le_bytes());
+        buf.extend_from_slice(&0xDEAD_BEEFu32.to_le_bytes());
+        buf.extend_from_slice(&0x0123_4567_89AB_CDEFu64.to_le_bytes());
+        buf.extend_from_slice(&1.5f32.to_le_bytes());
+        buf.extend_from_slice(&(-0.25f64).to_le_bytes());
+        buf.extend_from_slice(b"tail");
+
+        let mut c = ByteCursor::new(&buf);
+        assert_eq!(c.u8(), Some(7));
+        assert_eq!(c.u16(), Some(0xBEEF));
+        assert_eq!(c.u32(), Some(0xDEAD_BEEF));
+        assert_eq!(c.u64(), Some(0x0123_4567_89AB_CDEF));
+        assert_eq!(c.f32(), Some(1.5));
+        assert_eq!(c.f64(), Some(-0.25));
+        assert_eq!(c.rest(), b"tail");
+        assert!(c.done());
+        assert_eq!(c.rest(), b"");
+    }
+
+    #[test]
+    fn truncation_returns_none_and_does_not_advance() {
+        let mut c = ByteCursor::new(&[1, 2, 3]);
+        assert_eq!(c.u32(), None);
+        assert_eq!(c.remaining(), 3, "failed read must not consume");
+        assert_eq!(c.u16(), Some(0x0201));
+        assert_eq!(c.take(2), None);
+        assert_eq!(c.take(1), Some(&[3u8][..]));
+        assert!(c.done());
+        assert_eq!(c.u8(), None);
+    }
+
+    #[test]
+    fn huge_take_is_overflow_safe() {
+        let mut c = ByteCursor::new(&[0; 8]);
+        assert_eq!(c.u32(), Some(0));
+        // i + usize::MAX would overflow; must be None, not a panic
+        assert_eq!(c.take(usize::MAX), None);
+        assert_eq!(c.remaining(), 4);
+    }
+}

@@ -3,6 +3,7 @@
 
 pub mod bitio;
 pub mod csv;
+pub mod cursor;
 pub mod hash;
 pub mod json;
 pub mod logging;

@@ -513,3 +513,88 @@ fn delta_desync_is_a_typed_error_and_streams_are_independent() {
     let err = cold.decode(&second.payload).unwrap_err().to_string();
     assert!(err.contains("no baseline"), "{err}");
 }
+
+/// The delta stage keeps its per-stream baselines in an ordered map
+/// (`fedlint: det-map-iter`): the bytes a stream produces depend only
+/// on that stream's own history, never on which *other* streams the
+/// pipeline has seen or in what order they arrived. Two senders fed
+/// the same per-stream sequences in opposite interleavings must emit
+/// bit-identical blobs.
+#[test]
+fn delta_stream_state_is_arrival_order_independent() {
+    let mut rng = Rng::new(0x0A0B);
+    let (theta_a, cents) = random_state(800, &mut rng);
+    let mut theta_b = theta_a.clone();
+    for i in (0..theta_b.len()).step_by(7) {
+        theta_b[i] += 0.3;
+    }
+    let mut drift_a = theta_a.clone();
+    drift_a[5] += 0.4;
+    let mut drift_b = theta_b.clone();
+    drift_b[11] -= 0.4;
+
+    let reg = CodecRegistry::builtin();
+    let enc = |p: &fedcompress::codec::Pipeline, theta: &[f32], sid: u64| {
+        let inp = CodecInput {
+            theta,
+            centroids: Some(&cents),
+            stream: sid,
+        };
+        p.encode(&inp, &mut Rng::new(0)).unwrap().payload
+    };
+
+    // sender 1 sees stream 10 first, sender 2 sees stream 20 first
+    let s1 = reg.build("codebook|delta").unwrap();
+    let a1 = enc(&s1, &theta_a, 10);
+    let b1 = enc(&s1, &theta_b, 20);
+    let a2 = enc(&s1, &drift_a, 10);
+    let b2 = enc(&s1, &drift_b, 20);
+
+    let s2 = reg.build("codebook|delta").unwrap();
+    let b1x = enc(&s2, &theta_b, 20);
+    let a1x = enc(&s2, &theta_a, 10);
+    let b2x = enc(&s2, &drift_b, 20);
+    let a2x = enc(&s2, &drift_a, 10);
+
+    assert_eq!(a1, a1x, "stream 10 round 1 depends on arrival order");
+    assert_eq!(a2, a2x, "stream 10 round 2 depends on arrival order");
+    assert_eq!(b1, b1x, "stream 20 round 1 depends on arrival order");
+    assert_eq!(b2, b2x, "stream 20 round 2 depends on arrival order");
+
+    // and a receiver reading the opposite interleaving still follows
+    let recv = reg.build("codebook|delta").unwrap();
+    assert_eq!(recv.decode(&b1).unwrap().len(), theta_b.len());
+    assert_eq!(recv.decode(&a1).unwrap().len(), theta_a.len());
+    assert_eq!(recv.decode(&b2).unwrap().len(), theta_b.len());
+    assert_eq!(recv.decode(&a2).unwrap().len(), theta_a.len());
+}
+
+/// Wire-claimed element counts are capped (`MAX_PARAMS`) before any
+/// allocation happens: a 4-billion-param claim in a 20-byte blob is a
+/// typed error, not an OOM.
+#[test]
+fn hostile_param_counts_are_refused_before_allocation() {
+    use fedcompress::codec::stages::{sparse_decode, MAX_PARAMS};
+
+    // sparse: magic | n | k | bits | positions | values
+    let mut bad = Vec::new();
+    bad.extend_from_slice(&0x4643_5331u32.to_le_bytes());
+    bad.extend_from_slice(&u32::MAX.to_le_bytes());
+    bad.extend_from_slice(&0u32.to_le_bytes());
+    bad.push(32);
+    let err = sparse_decode(&bad).unwrap_err().to_string();
+    assert!(err.contains("cap"), "{err}");
+    assert!((MAX_PARAMS as u64) < u64::from(u32::MAX));
+
+    // delta: stream | c | codebook | n | mode | body
+    let reg = CodecRegistry::builtin();
+    let p = reg.build("codebook|delta").unwrap();
+    let mut bad = Vec::new();
+    bad.extend_from_slice(&1u64.to_le_bytes());
+    bad.extend_from_slice(&1u16.to_le_bytes());
+    bad.extend_from_slice(&0.5f32.to_le_bytes());
+    bad.extend_from_slice(&u32::MAX.to_le_bytes());
+    bad.push(0);
+    let err = p.decode(&bad).unwrap_err().to_string();
+    assert!(err.contains("cap"), "{err}");
+}

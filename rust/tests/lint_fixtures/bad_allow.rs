@@ -1,0 +1,12 @@
+//! bad-allow fixture: broken suppressions must never suppress.
+//!   line 5: allow without a reason  (bad-allow, deny)
+//!   line 8: allow naming an unknown rule  (bad-allow, deny)
+//!   line 11: well-formed but stale  (unused-allow, warn)
+// fedlint:allow(det-map-iter)
+use std::collections::BTreeMap;
+
+// fedlint:allow(not-a-rule) -- misspelled rule name
+pub fn f() -> BTreeMap<u8, u8> { BTreeMap::new() }
+
+// fedlint:allow(det-map-iter) -- nothing on the next line violates it
+pub fn g() {}

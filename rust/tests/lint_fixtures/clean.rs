@@ -1,0 +1,16 @@
+//! Clean fixture: every rule passes — ordered maps, option-based
+//! access, forked rngs, f64 accumulation.
+
+use std::collections::BTreeMap;
+
+pub fn sum64(v: &[f32]) -> f64 {
+    v.iter().map(|&x| x as f64).sum::<f64>()
+}
+
+pub fn first(buf: &[u8]) -> Option<u8> {
+    buf.first().copied()
+}
+
+pub fn ordered(base: &Rng) -> (BTreeMap<u64, u64>, Rng) {
+    (BTreeMap::new(), base.fork(1))
+}

@@ -1,0 +1,24 @@
+//! det-map-iter fixture. Expected (scoped as src/fake/):
+//!   deny hits on lines 6, 7, 13; line 10 suppressed by line 9.
+//!   The test module at the bottom is exempt.
+
+use std::collections::BTreeMap;
+use std::collections::HashMap;
+use std::collections::HashSet;
+
+// fedlint:allow(det-map-iter) -- perf-only cache, never iterated
+pub struct Cache(HashMap<u64, u64>);
+
+pub fn build() -> (Cache, BTreeMap<u64, u64>) {
+    (Cache(HashMap::new()), BTreeMap::new())
+}
+
+#[cfg(test)]
+mod tests {
+    use std::collections::HashSet;
+
+    #[test]
+    fn hash_in_tests_is_fine() {
+        let _ = HashSet::<u8>::new();
+    }
+}

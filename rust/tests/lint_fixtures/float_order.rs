@@ -1,0 +1,13 @@
+//! float-order fixture. Expected (scoped as src/fake/):
+//!   deny hits on lines 6, 8; line 13 suppressed by line 12.
+//!   Widening casts and f64 reductions never trip the rule.
+
+pub fn narrow(x: f64) -> f32 {
+    x as f32
+}
+pub fn total(v: &[f32]) -> f32 { v.iter().sum::<f32>() }
+
+pub fn wide(v: &[f32]) -> f64 { v.iter().map(|&x| x as f64).sum::<f64>() }
+
+// fedlint:allow(float-order) -- accumulated in f64, narrowed exactly once
+pub fn narrow_once(acc: f64) -> f32 { acc as f32 }

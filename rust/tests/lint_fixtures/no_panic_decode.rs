@@ -1,0 +1,30 @@
+//! no-panic-decode fixture. Expected (scoped as src/fake/):
+//!   deny hits on lines 6, 7, 8, 10, 12; line 16 suppressed by line 15.
+//!   Slice patterns, array types, and test code never trip the rule.
+
+pub fn decode(buf: &[u8]) -> u8 {
+    let first = buf[0];
+    let second = buf.get(1).unwrap();
+    let third = buf.get(2).expect("third byte");
+    if buf.len() > 9 {
+        panic!("oversized");
+    }
+    unreachable!()
+}
+
+// fedlint:allow(no-panic-decode) -- index bounded by the fixed array type
+pub fn bounded(buf: &[u8; 4]) -> u8 { buf[1] }
+
+pub fn safe(buf: &[u8]) -> Option<u8> {
+    let [_a, _b] = [0u8; 2];
+    buf.first().copied()
+}
+
+#[cfg(test)]
+mod tests {
+    #[test]
+    fn unwrap_in_tests_is_fine() {
+        let v = [1u8];
+        assert_eq!(*v.first().unwrap(), 1);
+    }
+}

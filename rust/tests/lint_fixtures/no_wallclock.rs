@@ -1,0 +1,16 @@
+//! no-wallclock-state fixture. Expected (scoped as src/fake/):
+//!   deny hits on lines 8, 9; line 14 suppressed by line 13.
+//!   Imports and type positions never trip the rule.
+
+use std::time::{Duration, Instant, SystemTime};
+
+pub fn stamp() -> (Instant, SystemTime) {
+    let t = Instant::now();
+    let s = SystemTime::now();
+    (t, s)
+}
+
+// fedlint:allow(no-wallclock-state) -- created_unix is an environment field
+pub fn created() -> SystemTime { SystemTime::now() }
+
+pub fn span() -> Duration { Duration::from_secs(1) }

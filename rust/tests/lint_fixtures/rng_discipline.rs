@@ -1,0 +1,12 @@
+//! rng-discipline fixture. Expected (scoped as src/fake/):
+//!   deny hit on line 6; line 12 suppressed by line 11.
+//!   Forks and borrowed Rng parameters never trip the rule.
+
+pub fn ad_hoc() -> Rng {
+    Rng::new(1234)
+}
+
+pub fn forked(base: &Rng) -> Rng { base.fork(7) }
+
+// fedlint:allow(rng-discipline) -- the named per-run root constructor
+pub fn run_root(seed: u64) -> Rng { Rng::new(seed ^ 0xFEDC) }

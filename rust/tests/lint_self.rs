@@ -1,0 +1,227 @@
+//! fedlint end-to-end: fixture files with known violations per rule,
+//! the allow/suppression contract, scope boundaries, lexer robustness
+//! under random inputs, and the self-lint gate — the committed tree
+//! must be clean under the committed `fedlint.toml`.
+//!
+//! The fixtures under `tests/lint_fixtures/` are data, not compiled
+//! code (cargo only builds top-level `tests/*.rs`); each one documents
+//! its expected hits in its header.
+
+use std::path::Path;
+
+use fedcompress::check::{ensure, forall, FnGen};
+use fedcompress::lint::{self, lexer, LintConfig, Severity};
+use fedcompress::util::json::Json;
+use fedcompress::util::rng::Rng;
+
+fn fixture(name: &str) -> String {
+    let p = Path::new(env!("CARGO_MANIFEST_DIR"))
+        .join("tests/lint_fixtures")
+        .join(name);
+    std::fs::read_to_string(&p).unwrap_or_else(|e| panic!("reading {}: {e}", p.display()))
+}
+
+/// All five rules at deny over `src/` — fixtures are linted as if they
+/// lived at `src/fake/<name>`.
+fn deny_all() -> LintConfig {
+    let rules = lint::rule_names()
+        .iter()
+        .map(|r| format!("[rule.{r}]\nseverity = \"deny\"\npaths = [\"src/\"]\n"))
+        .collect::<String>();
+    LintConfig::parse(&rules).unwrap()
+}
+
+fn lint_fixture(name: &str) -> (Vec<lint::Violation>, Vec<lint::AllowedSite>) {
+    let rel = format!("src/fake/{name}");
+    lint::lint_source(&rel, &fixture(name), &deny_all(), None)
+}
+
+fn hits(v: &[lint::Violation], rule: &str) -> Vec<u32> {
+    v.iter().filter(|x| x.rule == rule).map(|x| x.line).collect()
+}
+
+#[test]
+fn det_map_iter_fixture_hits_expected_lines() {
+    let (v, allowed) = lint_fixture("det_map_iter.rs");
+    assert_eq!(hits(&v, "det-map-iter"), vec![6, 7, 13], "{v:?}");
+    assert_eq!(allowed.len(), 1, "{allowed:?}");
+    assert_eq!((allowed[0].line, allowed[0].uses), (9, 1));
+}
+
+#[test]
+fn no_panic_decode_fixture_hits_expected_lines() {
+    let (v, allowed) = lint_fixture("no_panic_decode.rs");
+    assert_eq!(hits(&v, "no-panic-decode"), vec![6, 7, 8, 10, 12], "{v:?}");
+    assert_eq!(allowed.len(), 1, "{allowed:?}");
+    assert_eq!((allowed[0].line, allowed[0].uses), (15, 1));
+}
+
+#[test]
+fn no_wallclock_fixture_hits_expected_lines() {
+    let (v, allowed) = lint_fixture("no_wallclock.rs");
+    assert_eq!(hits(&v, "no-wallclock-state"), vec![8, 9], "{v:?}");
+    assert_eq!(allowed.len(), 1, "{allowed:?}");
+    assert_eq!((allowed[0].line, allowed[0].uses), (13, 1));
+}
+
+#[test]
+fn rng_discipline_fixture_hits_expected_lines() {
+    let (v, allowed) = lint_fixture("rng_discipline.rs");
+    assert_eq!(hits(&v, "rng-discipline"), vec![6], "{v:?}");
+    assert_eq!(allowed.len(), 1, "{allowed:?}");
+    assert_eq!((allowed[0].line, allowed[0].uses), (11, 1));
+}
+
+#[test]
+fn float_order_fixture_hits_expected_lines() {
+    let (v, allowed) = lint_fixture("float_order.rs");
+    assert_eq!(hits(&v, "float-order"), vec![6, 8], "{v:?}");
+    assert_eq!(allowed.len(), 1, "{allowed:?}");
+    assert_eq!((allowed[0].line, allowed[0].uses), (12, 1));
+}
+
+#[test]
+fn clean_fixture_is_clean() {
+    let (v, allowed) = lint_fixture("clean.rs");
+    assert!(v.is_empty(), "{v:?}");
+    assert!(allowed.is_empty(), "{allowed:?}");
+}
+
+#[test]
+fn bad_allow_fixture_reports_contract_violations() {
+    let (v, allowed) = lint_fixture("bad_allow.rs");
+    assert!(allowed.is_empty(), "broken allows must not be honored: {allowed:?}");
+    assert_eq!(hits(&v, "bad-allow"), vec![5, 8], "{v:?}");
+    assert_eq!(hits(&v, "unused-allow"), vec![11], "{v:?}");
+    for x in &v {
+        match x.rule.as_str() {
+            "bad-allow" => assert_eq!(x.severity, Severity::Deny, "bad-allow always gates"),
+            "unused-allow" => assert_eq!(x.severity, Severity::Warn),
+            other => panic!("unexpected rule {other}: {v:?}"),
+        }
+    }
+}
+
+#[test]
+fn scope_boundaries_gate_every_fixture() {
+    // the same bytes outside the configured scope produce nothing
+    let cfg = deny_all();
+    for name in [
+        "det_map_iter.rs",
+        "no_panic_decode.rs",
+        "no_wallclock.rs",
+        "rng_discipline.rs",
+        "float_order.rs",
+        "bad_allow.rs",
+    ] {
+        let src = fixture(name);
+        let rel = format!("tests/lint_fixtures/{name}");
+        let (v, allowed) = lint::lint_source(&rel, &src, &cfg, None);
+        assert!(v.is_empty(), "{name} out of scope fired: {v:?}");
+        assert!(allowed.is_empty(), "{name} out of scope honored allows");
+    }
+    // directory-prefix vs exact-file scopes
+    let exact = LintConfig::parse(
+        "[rule.det-map-iter]\nseverity = \"deny\"\npaths = [\"src/net/proto.rs\"]\n",
+    )
+    .unwrap();
+    let src = "use std::collections::HashMap;\n";
+    assert_eq!(lint::lint_source("src/net/proto.rs", src, &exact, None).0.len(), 1);
+    assert!(lint::lint_source("src/net/frame.rs", src, &exact, None).0.is_empty());
+}
+
+/// Point `lint_root` at the fixture tree: diagnostics must carry
+/// file:line, the report must gate, and the JSON must round-trip.
+#[test]
+fn lint_root_reports_fixture_violations_with_file_and_line() {
+    let root = Path::new(env!("CARGO_MANIFEST_DIR"));
+    let cfg = LintConfig::parse(
+        "[rule.det-map-iter]\nseverity = \"deny\"\npaths = [\"tests/lint_fixtures/\"]\n",
+    )
+    .unwrap();
+    let report = lint::lint_root(root, &cfg, None, &[]).unwrap();
+    assert!(!report.is_clean());
+    let first = report
+        .violations
+        .iter()
+        .find(|v| v.rule == "det-map-iter")
+        .expect("fixture violation surfaced");
+    assert_eq!(first.file, "tests/lint_fixtures/det_map_iter.rs");
+    assert_eq!(first.line, 6);
+    assert!(first.excerpt.contains("HashMap"), "{first:?}");
+
+    let text = lint::render_text(&report);
+    assert!(text.contains("tests/lint_fixtures/det_map_iter.rs:6"), "{text}");
+
+    let parsed = Json::parse(&lint::render_json(&report)).unwrap();
+    assert!(parsed.get("deny").unwrap().as_usize().unwrap() >= 3);
+    let v = parsed.get("violations").unwrap().as_arr().unwrap();
+    assert!(!v.is_empty());
+    assert!(v[0].get("file").unwrap().as_str().is_ok());
+
+    // path filters narrow the scan to one file
+    let only = lint::lint_root(
+        root,
+        &cfg,
+        None,
+        &["tests/lint_fixtures/clean.rs".to_string()],
+    )
+    .unwrap();
+    assert!(only.violations.is_empty(), "{:?}", only.violations);
+    assert_eq!(only.files_scanned, 1);
+}
+
+/// The gate itself: the committed tree is clean under the committed
+/// config, and the allows in the tree are all real (each suppresses at
+/// least one live violation — stale ones would surface as warnings).
+#[test]
+fn the_committed_tree_is_lint_clean() {
+    let root = Path::new(env!("CARGO_MANIFEST_DIR"));
+    let cfg = LintConfig::from_file(&root.join("fedlint.toml"))
+        .expect("committed fedlint.toml parses");
+    let report = lint::lint_root(root, &cfg, None, &[]).expect("lint runs");
+    let gate: Vec<String> = report
+        .violations
+        .iter()
+        .map(|v| format!("{}:{}: [{}] {}: {}", v.file, v.line, v.severity.name(), v.rule, v.message))
+        .collect();
+    assert!(
+        report.violations.is_empty(),
+        "self-lint violations:\n{}",
+        gate.join("\n")
+    );
+    assert!(report.files_scanned > 10, "scanned only {}", report.files_scanned);
+    assert!(
+        !report.allowed.is_empty(),
+        "the tree documents its exceptions via reasoned allows"
+    );
+}
+
+/// Random token soup must never panic the lexer, and its line
+/// numbering must stay sane — the linter runs on every CI build, so
+/// robustness here is part of the gate.
+#[test]
+fn lexer_never_panics_on_random_input() {
+    let pool: Vec<char> =
+        "abrcz_09 \t\n\"'\\/*()[]{}<>:;.,#!|&-=+".chars().collect();
+    let gen = FnGen(move |rng: &mut Rng, size: usize| {
+        let n = rng.below(size.max(1) + 1);
+        (0..n).map(|_| pool[rng.below(pool.len())]).collect::<String>()
+    });
+    forall(300, 0xF3D7, &gen, |s: &String| {
+        let lexed = lexer::lex(s);
+        ensure(
+            lexed.toks.len() <= s.chars().count().max(1),
+            "every token consumes at least one char",
+        )?;
+        ensure(
+            lexed.toks.windows(2).all(|w| w[0].line <= w[1].line),
+            "token lines are monotone",
+        )?;
+        let max_line = s.lines().count().max(1) as u32 + 1;
+        ensure(
+            lexed.toks.iter().all(|t| t.line >= 1 && t.line <= max_line),
+            "token lines in range",
+        )
+    });
+}

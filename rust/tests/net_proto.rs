@@ -8,9 +8,10 @@ use std::net::TcpStream;
 use std::thread;
 use std::time::Duration;
 
+use fedcompress::codec::StageBytes;
 use fedcompress::config::FedConfig;
 use fedcompress::net::frame::{self, MAX_PAYLOAD};
-use fedcompress::net::proto::{Hello, Msg};
+use fedcompress::net::proto::{Hello, HelloAck, Msg, Upload};
 use fedcompress::net::{read_frame, write_frame, ProtoError, TcpServer, Transport, PROTO_VERSION};
 
 fn ok_frame() -> Vec<u8> {
@@ -128,6 +129,123 @@ fn malformed_message_bodies_are_typed_not_panics() {
         let ty = (x >> 8) as u8;
         let _ = Msg::decode(ty, &bytes); // must return, not panic
     }
+}
+
+/// The sidecar-bearing messages (Upload with its stage table and codec
+/// header, HelloAck with its config image) must be robust at *every*
+/// byte boundary, not just the easy prefixes — a truncated stage name
+/// or a half-read f64 in the config are exactly the cuts a dying peer
+/// produces.
+#[test]
+fn sidecar_messages_error_at_every_truncation_point() {
+    let up = Msg::Upload(Upload {
+        round: 3,
+        client: 8,
+        score: 0.75,
+        n: 32,
+        mean_ce: 1.25,
+        mu: vec![0.5, -0.5, 2.0],
+        stages: vec![
+            StageBytes { stage: "topk".to_string(), bytes: 900 },
+            StageBytes { stage: "huffman".to_string(), bytes: 40 },
+        ],
+        spec: "topk(keep=0.1)|huffman".to_string(),
+        payload: vec![7u8; 16],
+    });
+    let body = up.encode_payload();
+    // Upload swallows all trailing bytes as payload, so every strict
+    // prefix must fail *up to* the point where the payload begins;
+    // after that, shorter payloads still decode (just shorter).
+    let payload_start = body.len() - 16;
+    for cut in 0..payload_start {
+        let err = Msg::decode(5, &body[..cut]).unwrap_err();
+        assert!(
+            matches!(err, ProtoError::Truncated { .. } | ProtoError::Malformed { .. }),
+            "upload cut at {cut}: {err}"
+        );
+    }
+    assert!(Msg::decode(5, &body).is_ok());
+
+    let ack = Msg::HelloAck(HelloAck {
+        worker: 0,
+        workers: 2,
+        clients: vec![0, 2, 4],
+        strategy: "fedavg".to_string(),
+        cfg: Box::new(FedConfig::quick("cifar10")),
+    });
+    let body = ack.encode_payload();
+    for cut in 0..body.len() {
+        let err = Msg::decode(2, &body[..cut]).unwrap_err();
+        assert!(
+            matches!(err, ProtoError::Truncated { .. } | ProtoError::Malformed { .. }),
+            "ack cut at {cut}: {err}"
+        );
+    }
+    assert!(Msg::decode(2, &body).is_ok());
+}
+
+/// Hostile counts and headers inside a message body are refused with a
+/// typed error before any oversized allocation or bogus decode.
+#[test]
+fn hostile_sidecar_fields_are_typed_malformed() {
+    // upload fixed head: round(4) client(4) score(8) n(4) mean_ce(4)
+    let mut head = Vec::new();
+    head.extend_from_slice(&1u32.to_le_bytes());
+    head.extend_from_slice(&2u32.to_le_bytes());
+    head.extend_from_slice(&0.5f64.to_le_bytes());
+    head.extend_from_slice(&4u32.to_le_bytes());
+    head.extend_from_slice(&0.1f32.to_le_bytes());
+    head.extend_from_slice(&0u32.to_le_bytes()); // empty centroid table
+
+    // stage count far over the sidecar cap
+    let mut bad = head.clone();
+    bad.push(255);
+    let err = Msg::decode(5, &bad).unwrap_err();
+    assert!(matches!(err, ProtoError::Malformed { .. }), "{err}");
+    assert!(err.to_string().contains("over the cap"), "{err}");
+
+    // stage name that is not utf-8
+    let mut bad = head.clone();
+    bad.push(1); // one stage
+    bad.push(2); // name_len
+    bad.extend_from_slice(&[0xFF, 0xFE]);
+    bad.extend_from_slice(&0u64.to_le_bytes());
+    let err = Msg::decode(5, &bad).unwrap_err();
+    assert!(err.to_string().contains("utf-8"), "{err}");
+
+    // codec header from a future build
+    let mut bad = head.clone();
+    bad.push(0); // no stages
+    bad.push(99); // codec header version
+    let err = Msg::decode(5, &bad).unwrap_err();
+    assert!(err.to_string().contains("codec header version 99"), "{err}");
+
+    // empty codec spec names no pipeline
+    let mut bad = head;
+    bad.push(0); // no stages
+    bad.push(1); // codec header version
+    bad.extend_from_slice(&0u16.to_le_bytes()); // spec_len = 0
+    let err = Msg::decode(5, &bad).unwrap_err();
+    assert!(err.to_string().contains("empty codec spec"), "{err}");
+
+    // a handshake granting two million clients is a corrupt peer, not
+    // a reason to allocate 8 MB
+    let mut bad = Vec::new();
+    bad.extend_from_slice(&0u32.to_le_bytes());
+    bad.extend_from_slice(&1u32.to_le_bytes());
+    bad.extend_from_slice(&2_000_000u32.to_le_bytes());
+    let err = Msg::decode(2, &bad).unwrap_err();
+    assert!(err.to_string().contains("2000000 clients"), "{err}");
+
+    // a round open claiming more active centroids than it ships
+    let mut bad = Vec::new();
+    bad.extend_from_slice(&1u32.to_le_bytes()); // round
+    bad.extend_from_slice(&0u32.to_le_bytes()); // n_downloads
+    bad.push(0); // flags
+    bad.extend_from_slice(&5u32.to_le_bytes()); // active = 5
+    bad.extend_from_slice(&0u32.to_le_bytes()); // ...of 0 centroids
+    let err = Msg::decode(3, &bad).unwrap_err();
+    assert!(err.to_string().contains("5 active"), "{err}");
 }
 
 #[test]
