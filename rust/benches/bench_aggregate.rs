@@ -15,7 +15,7 @@ fn main() {
             .collect();
         let weights: Vec<usize> = (0..m).map(|i| 50 + i).collect();
         let r = bench(&format!("fedavg_p{p}_m{m}"), || {
-            let agg = fedavg(black_box(&clients), black_box(&weights));
+            let agg = fedavg(black_box(&clients), black_box(&weights)).unwrap();
             black_box(agg[0]);
         });
         report_throughput(&r, p * m * 4);

@@ -1,14 +1,29 @@
 //! Transport hot-path benchmarks: frame encode/decode, full protocol
-//! message round-trips, and loopback TCP frame throughput — the
+//! message round-trips, loopback TCP frame throughput — the
 //! per-client per-round cost a networked coordinator pays on top of
-//! the codec work `bench_codec` measures. Prints a MiB/s table.
+//! the codec work `bench_codec` measures — and a fleet-scale mux
+//! smoke: N simulated clients streamed over a handful of sockets
+//! through `Mux` + `StreamAccumulator`, reporting throughput, the
+//! accumulator's reorder window, and peak RSS. Prints a MiB/s table
+//! plus one machine-readable `FLEET ...` line.
+//!
+//! Env knobs (CI's memory gate drives these):
+//!   FEDCOMPRESS_BENCH_CLIENTS     fleet size for the mux smoke
+//!                                 (default 10000)
+//!   FEDCOMPRESS_BENCH_FLEET_ONLY  set to skip the micro benches and
+//!                                 emit only the FLEET line
 
+use std::io::Read;
 use std::net::{TcpListener, TcpStream};
 use std::thread;
+use std::time::{Duration, Instant};
 
 use fedcompress::bench::bench;
 use fedcompress::codec::StageBytes;
+use fedcompress::coordinator::accumulate::{FedAvgFold, StreamAccumulator};
+use fedcompress::coordinator::strategy::ClientUpdate;
 use fedcompress::net::frame::{encode_frame, framed_len, read_frame, write_frame};
+use fedcompress::net::mux::{Mux, MuxEvent};
 use fedcompress::net::proto::{Msg, Upload};
 use fedcompress::util::rng::Rng;
 use std::hint::black_box;
@@ -17,7 +32,128 @@ fn mib_s(bytes_per_iter: usize, median_ns: f64) -> f64 {
     (bytes_per_iter as f64 / (1 << 20) as f64) / (median_ns * 1e-9)
 }
 
+/// Peak resident set of this process so far, in kB (`VmHWM` from
+/// /proc/self/status). None off Linux — the caller prints 0.
+fn peak_rss_kb() -> Option<u64> {
+    let status = std::fs::read_to_string("/proc/self/status").ok()?;
+    status
+        .lines()
+        .find_map(|l| l.strip_prefix("VmHWM:"))
+        .and_then(|rest| rest.split_whitespace().next())
+        .and_then(|n| n.parse().ok())
+}
+
+/// The fleet-scale smoke: `clients` logical uploads stream over
+/// `workers` sockets into one readiness loop that folds each one on
+/// arrival. Coordinator-side memory is the accumulator's reorder
+/// window plus one fold state — NOT `clients` buffered uploads — and
+/// the `FLEET` line carries the peak RSS that CI holds flat across
+/// fleet sizes.
+fn fleet_smoke(clients: usize, workers: usize, params: usize) {
+    let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+    let addr = listener.local_addr().unwrap();
+
+    // each peer owns clients k % workers == w and streams one raw
+    // upload frame per client: client id (u32) + params f32 LE
+    let peers: Vec<_> = (0..workers)
+        .map(|w| {
+            thread::spawn(move || {
+                let mut stream = TcpStream::connect(addr).unwrap();
+                stream.set_nodelay(true).ok();
+                let mut rng = Rng::new(w as u64 + 1);
+                let mut body = Vec::with_capacity(4 + params * 4);
+                for k in (w..clients).step_by(workers) {
+                    body.clear();
+                    body.extend_from_slice(&(k as u32).to_le_bytes());
+                    for _ in 0..params {
+                        body.extend_from_slice(&rng.normal().to_le_bytes());
+                    }
+                    write_frame(&mut &stream, 9, &body).unwrap();
+                }
+                // hold the socket open until the coordinator is done —
+                // closing early would race the last buffered frames
+                let mut sink = Vec::new();
+                let _ = stream.read_to_end(&mut sink);
+            })
+        })
+        .collect();
+
+    let streams: Vec<TcpStream> = (0..workers)
+        .map(|_| listener.accept().unwrap().0)
+        .collect();
+    let mut mux = Mux::new(streams).unwrap();
+    let mut acc = StreamAccumulator::new(Box::new(FedAvgFold::new()), clients);
+
+    let start = Instant::now();
+    let mut events = Vec::new();
+    let mut resolved = 0usize;
+    while resolved < clients {
+        events.clear();
+        let progress = mux.poll(&mut events);
+        for ev in &events {
+            match ev {
+                MuxEvent::Frame { payload, .. } => {
+                    let k = u32::from_le_bytes(payload[..4].try_into().unwrap()) as usize;
+                    let theta: Vec<f32> = payload[4..]
+                        .chunks_exact(4)
+                        .map(|c| f32::from_le_bytes(c.try_into().unwrap()))
+                        .collect();
+                    let up = ClientUpdate {
+                        client: k,
+                        theta,
+                        mu: vec![0.0; 4],
+                        score: 1.0,
+                        n: 1,
+                    };
+                    acc.resolve_upload(k, up).unwrap();
+                    resolved += 1;
+                }
+                MuxEvent::Closed { conn, error } => {
+                    panic!("fleet smoke: conn {conn} died early: {error}")
+                }
+            }
+        }
+        if !progress {
+            thread::sleep(Duration::from_micros(100));
+        }
+    }
+    let peak_parked = acc.peak_parked();
+    let out = acc.finish().unwrap();
+    assert_eq!(out.clients, clients, "every upload folded");
+    assert_eq!(out.theta.len(), params);
+    let elapsed = start.elapsed();
+
+    for c in 0..workers {
+        mux.close(c); // releases the peers' read_to_end
+    }
+    for p in peers {
+        p.join().unwrap();
+    }
+
+    let secs = elapsed.as_secs_f64();
+    println!(
+        "FLEET clients={} workers={} params={} elapsed_ms={:.1} uploads_per_s={:.0} \
+         peak_parked={} peak_rss_kb={}",
+        clients,
+        workers,
+        params,
+        secs * 1e3,
+        clients as f64 / secs,
+        peak_parked,
+        peak_rss_kb().unwrap_or(0),
+    );
+}
+
 fn main() {
+    let fleet_clients: usize = std::env::var("FEDCOMPRESS_BENCH_CLIENTS")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(10_000);
+    if std::env::var("FEDCOMPRESS_BENCH_FLEET_ONLY").is_ok() {
+        fleet_smoke(fleet_clients, 8, 256);
+        return;
+    }
+
     let mut rng = Rng::new(1);
     println!(
         "{:<34} {:>12} {:>10}",
@@ -108,4 +244,7 @@ fn main() {
     }
     drop(stream);
     echo.join().unwrap();
+
+    // --- fleet-scale mux smoke --------------------------------------------
+    fleet_smoke(fleet_clients, 8, 256);
 }

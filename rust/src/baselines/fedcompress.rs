@@ -20,10 +20,10 @@ use crate::clustering::{CentroidState, ClusterController};
 use crate::codec::{stream, CodecInput, CodecRegistry, Pipeline};
 use crate::compression::codec::quantize_and_encode;
 use crate::config::FedConfig;
+use crate::coordinator::accumulate::AggOutput;
 use crate::coordinator::events::{Event, EventLog};
 use crate::coordinator::strategy::{
-    aggregate_centroid_mu, aggregate_fedavg, ClientTrainOpts, ClientUpdate, FedStrategy,
-    FinalModel, RoundContext, ServerEnv, ServerModel, UploadInput,
+    ClientTrainOpts, FedStrategy, FinalModel, RoundContext, ServerEnv, ServerModel, UploadInput,
 };
 use crate::data::Dataset;
 use crate::runtime::literals::{literal_scalar_f32, literal_to_f32, Arg};
@@ -178,11 +178,13 @@ impl FedStrategy for FedCompress {
         &mut self,
         _ctx: &RoundContext<'_>,
         model: &mut ServerModel,
-        uploads: &[ClientUpdate],
+        agg: AggOutput,
     ) -> Result<f64> {
-        let score = aggregate_fedavg(model, uploads);
-        aggregate_centroid_mu(model, uploads);
-        Ok(score)
+        // unmodified FedAvg on theta plus the centroid-table average
+        // (paper Algorithm 1, line 7), both from the streaming fold
+        model.theta = agg.theta;
+        model.centroids.mu = agg.mu;
+        Ok(agg.score)
     }
 
     fn post_aggregate(
@@ -309,11 +311,11 @@ impl FedStrategy for FedCompressNoScs {
         &mut self,
         _ctx: &RoundContext<'_>,
         model: &mut ServerModel,
-        uploads: &[ClientUpdate],
+        agg: AggOutput,
     ) -> Result<f64> {
-        let score = aggregate_fedavg(model, uploads);
-        aggregate_centroid_mu(model, uploads);
-        Ok(score)
+        model.theta = agg.theta;
+        model.centroids.mu = agg.mu;
+        Ok(agg.score)
     }
 
     fn finalize(&self, env: &ServerEnv<'_>, model: &ServerModel) -> Result<FinalModel> {

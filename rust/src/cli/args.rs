@@ -195,15 +195,21 @@ mod tests {
     fn serve_and_worker_commands_parse() {
         let a = Args::parse(&v(&[
             "serve", "--bind", "0.0.0.0:7878", "--workers", "4", "--timeout-s", "30",
+            "--handshake-timeout-s", "5",
         ]))
         .unwrap();
         assert_eq!(a.command().unwrap(), ParsedCommand::Serve);
         assert_eq!(a.flag("bind"), Some("0.0.0.0:7878"));
         assert_eq!(a.flag("workers"), Some("4"));
         assert_eq!(a.flag("timeout-s"), Some("30"));
-        let b = Args::parse(&v(&["worker", "--connect", "10.0.0.1:7878"])).unwrap();
+        assert_eq!(a.flag("handshake-timeout-s"), Some("5"));
+        let b = Args::parse(&v(&[
+            "worker", "--connect", "10.0.0.1:7878", "--edge-of", "8",
+        ]))
+        .unwrap();
         assert_eq!(b.command().unwrap(), ParsedCommand::Worker);
         assert_eq!(b.flag("connect"), Some("10.0.0.1:7878"));
+        assert_eq!(b.flag("edge-of"), Some("8"));
     }
 
     #[test]

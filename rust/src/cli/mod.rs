@@ -63,10 +63,19 @@ COMMON OPTIONS:
 NETWORKED TRANSPORT (serve, worker):
     --bind <addr>           serve: listen address (default 127.0.0.1:7878)
     --workers <n>           serve: worker connections to wait for (default 1)
-    --timeout-s <s>         serve: per-client upload timeout in real
-                            seconds; late workers are cut like deadline
-                            stragglers (0 = wait forever)
+    --timeout-s <s>         serve: per-connection inactivity timeout in
+                            real seconds; a silent worker's clients are
+                            cut like deadline stragglers (0 = wait
+                            forever)
+    --handshake-timeout-s <s>  serve: max real seconds to wait for a
+                            peer's Hello before dropping the connection
+                            (default 30, 0 = wait forever); sugar over
+                            --set handshake_timeout_s=<s>
     --connect <addr>        worker: coordinator address
+    --edge-of <n>           worker: act as an edge aggregator for up to
+                            <n> clients — fold the sub-fleet locally
+                            and ship one pre-aggregated upload per
+                            round (default 0 = leaf worker)
 
 CHECKPOINTING (train, serve):
     --checkpoint <file>     write the final model + codebook, stamped

@@ -64,6 +64,11 @@ pub struct FedConfig {
     /// The default is the ideal fleet — byte-identical to pre-sim runs.
     pub fleet: FleetConfig,
     pub seed: u64,
+    /// wall-clock seconds a connecting peer gets to complete the TCP
+    /// handshake before being dropped (0 = wait forever). Real time,
+    /// not sim time: it guards `serve` against port scanners, so it
+    /// never touches metrics.
+    pub handshake_timeout_s: f64,
 }
 
 impl FedConfig {
@@ -95,6 +100,7 @@ impl FedConfig {
             codec: String::new(),
             fleet: FleetConfig::default(),
             seed: 42,
+            handshake_timeout_s: 30.0,
         }
     }
 
@@ -152,6 +158,9 @@ impl FedConfig {
         if !(self.fleet.deadline_s >= 0.0 && self.fleet.deadline_s.is_finite()) {
             bail!("fleet deadline_s must be finite and >= 0");
         }
+        if !(self.handshake_timeout_s >= 0.0 && self.handshake_timeout_s.is_finite()) {
+            bail!("handshake_timeout_s must be finite and >= 0");
+        }
         Ok(())
     }
 
@@ -196,6 +205,9 @@ impl FedConfig {
             "dropout" => self.fleet.dropout = value.parse().with_context(e)?,
             "deadline_s" => self.fleet.deadline_s = value.parse().with_context(e)?,
             "seed" => self.seed = value.parse().with_context(e)?,
+            "handshake_timeout_s" => {
+                self.handshake_timeout_s = value.parse().with_context(e)?
+            }
             other => bail!("unknown config key '{other}'"),
         }
         Ok(())

@@ -1,0 +1,438 @@
+//! Streaming aggregation: constant-memory folds over client uploads.
+//!
+//! The historical coordinator buffered every `ClientUpdate` of a round
+//! and reduced the full vector at the end — O(fleet × params) memory.
+//! This module is the scale-out replacement (ROADMAP item 1): a
+//! `fold(upload) / finish()` interface that reduces each upload into a
+//! running aggregate as it arrives, so coordinator memory stays flat in
+//! fleet size.
+//!
+//! # Determinism contract: canonicalize, then fold
+//!
+//! A sequential f64 fold is order-dependent, and a multiplexed
+//! transport delivers uploads in arbitrary arrival order. To keep the
+//! streaming path bit-identical to the buffered reduce, uploads are
+//! *canonicalized before folding*: the round's participants are laid
+//! out as slots sorted by client id, and [`StreamAccumulator`] parks an
+//! out-of-order upload (bounded by the reorder window, not the fleet)
+//! until every earlier slot is resolved, then folds parked uploads in
+//! slot order. The fold itself uses one algebra everywhere —
+//! `acc[i] += w·x[i]` in f64, divided by the total weight at `finish()`
+//! — and the buffered helpers in [`crate::coordinator::aggregate`] are
+//! implemented on the same [`WeightedSum`], so "buffered equals
+//! streaming, bit for bit" holds by construction and is asserted under
+//! arrival-order permutations by `tests/accumulate_stream.rs`.
+//!
+//! This file is in fedlint's `no-panic-decode` scope: network-fed
+//! values flow through here, so everything returns a typed
+//! [`AggError`] — no asserts, no indexing, no unchecked division.
+
+use std::fmt;
+
+use crate::coordinator::strategy::ClientUpdate;
+
+/// Typed aggregation failure. Network uploads feed the fold, so every
+/// malformed shape is an error value, never a panic (satellite of
+/// ISSUE 7; the old `fedavg_slices` asserted and `weighted_mean`
+/// yielded NaN on zero total).
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum AggError {
+    /// finish() with no folded uploads (fully-lost round).
+    Empty,
+    /// finish() with a non-positive total weight (all `n == 0`).
+    ZeroWeight,
+    /// A folded vector's length disagrees with the first one's.
+    Ragged { expected: usize, got: usize },
+    /// Buffered helpers: vector count and weight count disagree.
+    WeightCount { vectors: usize, weights: usize },
+    /// Slot index outside the round's participant range.
+    BadSlot { slot: usize, slots: usize },
+    /// A slot was resolved twice (duplicate upload or upload-after-loss).
+    SlotResolved { slot: usize },
+    /// finish() while some slots are still unresolved.
+    Unresolved { pending: usize },
+}
+
+impl fmt::Display for AggError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            AggError::Empty => write!(f, "aggregate of zero uploads"),
+            AggError::ZeroWeight => write!(f, "aggregate with non-positive total weight"),
+            AggError::Ragged { expected, got } => {
+                write!(f, "ragged aggregate: expected {expected} params, got {got}")
+            }
+            AggError::WeightCount { vectors, weights } => {
+                write!(f, "{vectors} vectors but {weights} weights")
+            }
+            AggError::BadSlot { slot, slots } => {
+                write!(f, "slot {slot} out of range for {slots} participants")
+            }
+            AggError::SlotResolved { slot } => write!(f, "slot {slot} resolved twice"),
+            AggError::Unresolved { pending } => {
+                write!(f, "finish with {pending} unresolved participant slots")
+            }
+        }
+    }
+}
+
+impl std::error::Error for AggError {}
+
+/// Running weighted sum: `acc[i] += w·x[i]` in f64, `acc / Σw` at
+/// finish. The single source of arithmetic for both the buffered
+/// helpers and the streaming fold — equality between the two paths is
+/// by construction, not by test luck.
+#[derive(Clone, Debug, Default)]
+pub struct WeightedSum {
+    acc: Vec<f64>,
+    total: f64,
+    folds: usize,
+}
+
+impl WeightedSum {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Fold one weighted vector. The first fold fixes the dimension;
+    /// later folds must match it.
+    pub fn fold(&mut self, xs: &[f32], w: f64) -> Result<(), AggError> {
+        if self.folds == 0 {
+            self.acc = vec![0.0; xs.len()];
+        } else if xs.len() != self.acc.len() {
+            return Err(AggError::Ragged {
+                expected: self.acc.len(),
+                got: xs.len(),
+            });
+        }
+        for (a, &x) in self.acc.iter_mut().zip(xs) {
+            *a += w * f64::from(x);
+        }
+        self.total += w;
+        self.folds += 1;
+        Ok(())
+    }
+
+    pub fn folds(&self) -> usize {
+        self.folds
+    }
+
+    pub fn total(&self) -> f64 {
+        self.total
+    }
+
+    pub fn finish(self) -> Result<Vec<f32>, AggError> {
+        if self.folds == 0 {
+            return Err(AggError::Empty);
+        }
+        if self.total <= 0.0 {
+            return Err(AggError::ZeroWeight);
+        }
+        Ok(self.acc.iter().map(|&a| (a / self.total) as f32).collect())
+    }
+}
+
+/// What a finished fold hands the strategy: the reduced model, the
+/// reduced centroid table, the sample-weighted mean score, and the
+/// contributor counts.
+#[derive(Clone, Debug, Default)]
+pub struct AggOutput {
+    pub theta: Vec<f32>,
+    pub mu: Vec<f32>,
+    pub score: f64,
+    /// folds that reached the aggregate (an edge blob counts once)
+    pub clients: usize,
+    /// Σ n over folded uploads — the aggregate's total sample weight
+    pub total_n: usize,
+}
+
+/// A strategy's streaming reduction. `fold` consumes one upload;
+/// `finish` yields the aggregate. Implementations must be pure in the
+/// fold sequence (no wall-clock, no ambient randomness) so the
+/// canonicalized replay is deterministic.
+pub trait AggFold: Send {
+    fn fold(&mut self, up: &ClientUpdate) -> Result<(), AggError>;
+    fn finish(self: Box<Self>) -> Result<AggOutput, AggError>;
+}
+
+/// Sample-count-weighted FedAvg over theta, centroid table, and score —
+/// the unmodified-FedAvg reduction every built-in strategy uses.
+#[derive(Clone, Debug, Default)]
+pub struct FedAvgFold {
+    theta: WeightedSum,
+    mu: WeightedSum,
+    score_acc: f64,
+    clients: usize,
+    total_n: usize,
+}
+
+impl FedAvgFold {
+    pub fn new() -> Self {
+        Self::default()
+    }
+}
+
+impl AggFold for FedAvgFold {
+    fn fold(&mut self, up: &ClientUpdate) -> Result<(), AggError> {
+        let w = up.n as f64;
+        self.theta.fold(&up.theta, w)?;
+        self.mu.fold(&up.mu, w)?;
+        self.score_acc += w * up.score;
+        self.clients += 1;
+        self.total_n += up.n;
+        Ok(())
+    }
+
+    fn finish(self: Box<Self>) -> Result<AggOutput, AggError> {
+        let me = *self;
+        let total = me.theta.total();
+        let theta = me.theta.finish()?;
+        // a round of empty centroid tables still reduces to an empty
+        // table: mirror theta's weight history rather than re-checking
+        let mu = match me.mu.finish() {
+            Ok(mu) => mu,
+            Err(AggError::Empty) | Err(AggError::ZeroWeight) => Vec::new(),
+            Err(e) => return Err(e),
+        };
+        Ok(AggOutput {
+            theta,
+            mu,
+            score: me.score_acc / total,
+            clients: me.clients,
+            total_n: me.total_n,
+        })
+    }
+}
+
+enum Slot {
+    Pending,
+    Parked(Box<ClientUpdate>),
+    Lost,
+    Folded,
+}
+
+/// Park-and-fold reorder buffer over a round's participant slots.
+///
+/// Slots are the round's participants in canonical order (sorted by
+/// client id). Each slot resolves exactly once — to an upload or to a
+/// loss — in any order; a greedy cursor folds resolved uploads the
+/// moment every earlier slot is resolved. Memory is O(params +
+/// reorder-window), not O(fleet): an upload is parked only while an
+/// earlier slot is still open, and `peak_parked()` exposes the
+/// high-water mark so tests and benches can assert the window stays
+/// small.
+pub struct StreamAccumulator {
+    fold: Box<dyn AggFold>,
+    slots: Vec<Slot>,
+    cursor: usize,
+    parked: usize,
+    peak_parked: usize,
+    folded: usize,
+    lost: usize,
+}
+
+impl StreamAccumulator {
+    pub fn new(fold: Box<dyn AggFold>, slots: usize) -> Self {
+        Self {
+            fold,
+            slots: (0..slots).map(|_| Slot::Pending).collect(),
+            cursor: 0,
+            parked: 0,
+            peak_parked: 0,
+            folded: 0,
+            lost: 0,
+        }
+    }
+
+    pub fn slots(&self) -> usize {
+        self.slots.len()
+    }
+
+    /// uploads folded into the running aggregate so far
+    pub fn folded(&self) -> usize {
+        self.folded
+    }
+
+    /// slots resolved as lost (dropout / deadline / eviction)
+    pub fn lost(&self) -> usize {
+        self.lost
+    }
+
+    /// high-water mark of uploads held for reordering
+    pub fn peak_parked(&self) -> usize {
+        self.peak_parked
+    }
+
+    /// Resolve a slot with its upload. Folds immediately when the slot
+    /// is next in canonical order, parks it otherwise.
+    pub fn resolve_upload(&mut self, slot: usize, up: ClientUpdate) -> Result<(), AggError> {
+        let slots = self.slots.len();
+        let s = self
+            .slots
+            .get_mut(slot)
+            .ok_or(AggError::BadSlot { slot, slots })?;
+        if !matches!(s, Slot::Pending) {
+            return Err(AggError::SlotResolved { slot });
+        }
+        *s = Slot::Parked(Box::new(up));
+        self.parked += 1;
+        self.peak_parked = self.peak_parked.max(self.parked);
+        self.advance()
+    }
+
+    /// Resolve a slot as lost: the cursor skips it without folding.
+    pub fn resolve_lost(&mut self, slot: usize) -> Result<(), AggError> {
+        let slots = self.slots.len();
+        let s = self
+            .slots
+            .get_mut(slot)
+            .ok_or(AggError::BadSlot { slot, slots })?;
+        if !matches!(s, Slot::Pending) {
+            return Err(AggError::SlotResolved { slot });
+        }
+        *s = Slot::Lost;
+        self.lost += 1;
+        self.advance()
+    }
+
+    fn advance(&mut self) -> Result<(), AggError> {
+        loop {
+            let Some(s) = self.slots.get_mut(self.cursor) else {
+                return Ok(());
+            };
+            match s {
+                Slot::Pending => return Ok(()),
+                Slot::Lost | Slot::Folded => {}
+                Slot::Parked(_) => {
+                    if let Slot::Parked(up) = std::mem::replace(s, Slot::Folded) {
+                        self.fold.fold(&up)?;
+                        self.parked -= 1;
+                        self.folded += 1;
+                    }
+                }
+            }
+            self.cursor += 1;
+        }
+    }
+
+    /// Finish the fold. Errors if any slot is still unresolved;
+    /// a fully-lost round surfaces as [`AggError::Empty`].
+    pub fn finish(self) -> Result<AggOutput, AggError> {
+        if self.cursor < self.slots.len() {
+            return Err(AggError::Unresolved {
+                pending: self.slots.len() - self.folded - self.lost,
+            });
+        }
+        self.fold.finish()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn up(client: usize, theta: &[f32], n: usize, score: f64) -> ClientUpdate {
+        ClientUpdate {
+            client,
+            theta: theta.to_vec(),
+            mu: vec![theta[0]; 2],
+            score,
+            n,
+        }
+    }
+
+    fn fedavg_acc(slots: usize) -> StreamAccumulator {
+        StreamAccumulator::new(Box::new(FedAvgFold::new()), slots)
+    }
+
+    #[test]
+    fn in_order_fold_matches_weighted_sum() {
+        let mut acc = fedavg_acc(2);
+        acc.resolve_upload(0, up(0, &[1.0, 2.0], 30, 0.0)).unwrap();
+        acc.resolve_upload(1, up(1, &[4.0, 2.0], 10, 10.0)).unwrap();
+        let agg = acc.finish().unwrap();
+        let mut sum = WeightedSum::new();
+        sum.fold(&[1.0, 2.0], 30.0).unwrap();
+        sum.fold(&[4.0, 2.0], 10.0).unwrap();
+        assert_eq!(agg.theta, sum.finish().unwrap());
+        assert_eq!(agg.clients, 2);
+        assert_eq!(agg.total_n, 40);
+        assert!((agg.score - 2.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn out_of_order_arrival_folds_in_slot_order() {
+        let ups = [
+            up(0, &[1.0], 1, 1.0),
+            up(1, &[2.0], 2, 2.0),
+            up(2, &[3.0], 3, 3.0),
+        ];
+        let mut canonical = fedavg_acc(3);
+        for (i, u) in ups.iter().enumerate() {
+            canonical.resolve_upload(i, u.clone()).unwrap();
+        }
+        let want = canonical.finish().unwrap();
+
+        let mut shuffled = fedavg_acc(3);
+        shuffled.resolve_upload(2, ups[2].clone()).unwrap();
+        assert_eq!(shuffled.peak_parked(), 1);
+        shuffled.resolve_upload(0, ups[0].clone()).unwrap();
+        shuffled.resolve_upload(1, ups[1].clone()).unwrap();
+        let got = shuffled.finish().unwrap();
+        let bits = |v: &[f32]| v.iter().map(|x| x.to_bits()).collect::<Vec<_>>();
+        assert_eq!(bits(&got.theta), bits(&want.theta));
+        assert_eq!(got.score.to_bits(), want.score.to_bits());
+        assert_eq!(shuffled.folded(), 3);
+    }
+
+    #[test]
+    fn lost_slots_are_skipped_not_folded() {
+        let mut acc = fedavg_acc(3);
+        acc.resolve_lost(0).unwrap();
+        acc.resolve_upload(2, up(2, &[6.0], 2, 0.0)).unwrap();
+        acc.resolve_upload(1, up(1, &[3.0], 1, 0.0)).unwrap();
+        let agg = acc.finish().unwrap();
+        assert_eq!(agg.clients, 2);
+        assert_eq!(agg.theta, vec![5.0]); // (3 + 12) / 3
+    }
+
+    #[test]
+    fn fully_lost_round_is_empty_error() {
+        let mut acc = fedavg_acc(2);
+        acc.resolve_lost(0).unwrap();
+        acc.resolve_lost(1).unwrap();
+        assert_eq!(acc.finish().unwrap_err(), AggError::Empty);
+    }
+
+    #[test]
+    fn zero_total_weight_is_typed_error() {
+        let mut acc = fedavg_acc(1);
+        acc.resolve_upload(0, up(0, &[1.0], 0, 0.0)).unwrap();
+        assert_eq!(acc.finish().unwrap_err(), AggError::ZeroWeight);
+    }
+
+    #[test]
+    fn ragged_upload_is_typed_error() {
+        let mut acc = fedavg_acc(2);
+        acc.resolve_upload(0, up(0, &[1.0, 2.0], 1, 0.0)).unwrap();
+        let err = acc.resolve_upload(1, up(1, &[1.0], 1, 0.0)).unwrap_err();
+        assert_eq!(err, AggError::Ragged { expected: 2, got: 1 });
+    }
+
+    #[test]
+    fn slot_misuse_is_typed_error() {
+        let mut acc = fedavg_acc(2);
+        assert_eq!(
+            acc.resolve_lost(7).unwrap_err(),
+            AggError::BadSlot { slot: 7, slots: 2 }
+        );
+        acc.resolve_upload(0, up(0, &[1.0], 1, 0.0)).unwrap();
+        assert_eq!(
+            acc.resolve_upload(0, up(0, &[1.0], 1, 0.0)).unwrap_err(),
+            AggError::SlotResolved { slot: 0 }
+        );
+        assert!(matches!(
+            acc.finish().unwrap_err(),
+            AggError::Unresolved { pending: 1 }
+        ));
+    }
+}

@@ -3,42 +3,60 @@
 //! of FedCompress ("no modifications to the underlying aggregation").
 //! The same weighting aggregates centroid tables and representation
 //! scores (paper Algorithm 1, line 7).
+//!
+//! These are the *buffered* helpers; they are thin wrappers over
+//! [`WeightedSum`], the same running fold the streaming path
+//! (`coordinator::accumulate`) uses, so the two reduce bit-identically
+//! by construction. Inputs can come straight off the network, so every
+//! malformed shape — ragged vectors, zero uploads, zero total weight —
+//! is a typed [`AggError`], never a panic or a silent NaN.
+
+use crate::coordinator::accumulate::{AggError, WeightedSum};
 
 /// Weighted average of flat vectors. `weights[i]` is client i's sample
 /// count N_k; vectors must agree in length.
-pub fn fedavg(vectors: &[Vec<f32>], weights: &[usize]) -> Vec<f32> {
+pub fn fedavg(vectors: &[Vec<f32>], weights: &[usize]) -> Result<Vec<f32>, AggError> {
     let refs: Vec<&[f32]> = vectors.iter().map(|v| v.as_slice()).collect();
     fedavg_slices(&refs, weights)
 }
 
 /// Borrow-friendly form of [`fedavg`] (strategy plugins aggregate
 /// uploads without cloning each client vector).
-pub fn fedavg_slices(vectors: &[&[f32]], weights: &[usize]) -> Vec<f32> {
-    assert!(!vectors.is_empty());
-    assert_eq!(vectors.len(), weights.len());
-    let n = vectors[0].len();
-    let total: f64 = weights.iter().map(|&w| w as f64).sum();
-    assert!(total > 0.0, "all clients empty");
-    let mut out = vec![0.0f64; n];
-    for (v, &w) in vectors.iter().zip(weights) {
-        assert_eq!(v.len(), n, "ragged client vectors");
-        let coef = w as f64 / total;
-        for (o, &x) in out.iter_mut().zip(v.iter()) {
-            *o += coef * x as f64;
-        }
+pub fn fedavg_slices(vectors: &[&[f32]], weights: &[usize]) -> Result<Vec<f32>, AggError> {
+    if vectors.len() != weights.len() {
+        return Err(AggError::WeightCount {
+            vectors: vectors.len(),
+            weights: weights.len(),
+        });
     }
-    out.into_iter().map(|x| x as f32).collect()
+    let mut sum = WeightedSum::new();
+    for (v, &w) in vectors.iter().zip(weights) {
+        sum.fold(v, w as f64)?;
+    }
+    sum.finish()
 }
 
 /// Weighted scalar average (for the representation score E).
-pub fn weighted_mean(values: &[f64], weights: &[usize]) -> f64 {
-    assert_eq!(values.len(), weights.len());
-    let total: f64 = weights.iter().map(|&w| w as f64).sum();
-    values
-        .iter()
-        .zip(weights)
-        .map(|(&v, &w)| v * w as f64 / total)
-        .sum()
+pub fn weighted_mean(values: &[f64], weights: &[usize]) -> Result<f64, AggError> {
+    if values.len() != weights.len() {
+        return Err(AggError::WeightCount {
+            vectors: values.len(),
+            weights: weights.len(),
+        });
+    }
+    if values.is_empty() {
+        return Err(AggError::Empty);
+    }
+    let mut num = 0.0f64;
+    let mut den = 0.0f64;
+    for (&v, &w) in values.iter().zip(weights) {
+        num += v * w as f64;
+        den += w as f64;
+    }
+    if den <= 0.0 {
+        return Err(AggError::ZeroWeight);
+    }
+    Ok(num / den)
 }
 
 #[cfg(test)]
@@ -48,21 +66,21 @@ mod tests {
     #[test]
     fn equal_weights_is_plain_mean() {
         let v = vec![vec![1.0f32, 2.0], vec![3.0, 4.0]];
-        let out = fedavg(&v, &[10, 10]);
+        let out = fedavg(&v, &[10, 10]).unwrap();
         assert_eq!(out, vec![2.0, 3.0]);
     }
 
     #[test]
     fn weighting_respects_sample_counts() {
         let v = vec![vec![0.0f32], vec![10.0]];
-        let out = fedavg(&v, &[30, 10]);
+        let out = fedavg(&v, &[30, 10]).unwrap();
         assert!((out[0] - 2.5).abs() < 1e-6);
     }
 
     #[test]
     fn single_client_identity() {
         let v = vec![vec![1.5f32, -2.5, 0.0]];
-        assert_eq!(fedavg(&v, &[7]), v[0]);
+        assert_eq!(fedavg(&v, &[7]).unwrap(), v[0]);
     }
 
     #[test]
@@ -74,7 +92,7 @@ mod tests {
             .map(|_| (0..40).map(|_| rng.normal()).collect())
             .collect();
         let ws = [3usize, 9, 1, 5, 2];
-        let agg = fedavg(&vs, &ws);
+        let agg = fedavg(&vs, &ws).unwrap();
         for j in 0..40 {
             let lo = vs.iter().map(|v| v[j]).fold(f32::MAX, f32::min);
             let hi = vs.iter().map(|v| v[j]).fold(f32::MIN, f32::max);
@@ -84,12 +102,23 @@ mod tests {
 
     #[test]
     fn weighted_mean_scalar() {
-        assert!((weighted_mean(&[1.0, 3.0], &[1, 3]) - 2.5).abs() < 1e-12);
+        assert!((weighted_mean(&[1.0, 3.0], &[1, 3]).unwrap() - 2.5).abs() < 1e-12);
     }
 
     #[test]
-    #[should_panic]
-    fn ragged_vectors_panic() {
-        fedavg(&[vec![1.0], vec![1.0, 2.0]], &[1, 1]);
+    fn ragged_vectors_are_typed_errors() {
+        let err = fedavg(&[vec![1.0], vec![1.0, 2.0]], &[1, 1]).unwrap_err();
+        assert_eq!(err, AggError::Ragged { expected: 1, got: 2 });
+    }
+
+    #[test]
+    fn empty_and_zero_weight_are_typed_errors() {
+        assert_eq!(fedavg(&[], &[]).unwrap_err(), AggError::Empty);
+        let err = fedavg(&[vec![1.0], vec![2.0]], &[0, 0]).unwrap_err();
+        assert_eq!(err, AggError::ZeroWeight);
+        assert_eq!(weighted_mean(&[], &[]).unwrap_err(), AggError::Empty);
+        assert_eq!(weighted_mean(&[1.0], &[0]).unwrap_err(), AggError::ZeroWeight);
+        let err = weighted_mean(&[1.0], &[1, 2]).unwrap_err();
+        assert_eq!(err, AggError::WeightCount { vectors: 1, weights: 2 });
     }
 }

@@ -7,6 +7,7 @@
 //! `strategy::FedStrategy` plugin trait, resolved by name through
 //! `baselines::registry::StrategyRegistry`.
 
+pub mod accumulate;
 pub mod aggregate;
 pub mod checkpoint;
 pub mod events;
@@ -15,9 +16,11 @@ pub mod selection;
 pub mod server;
 pub mod strategy;
 
+pub use accumulate::{AggError, AggFold, AggOutput, FedAvgFold, StreamAccumulator};
 pub use metrics::{RoundMetrics, RunResult};
 pub use server::{
     run_federated, run_federated_with_data, run_with_strategy, run_with_strategy_opts,
+    EdgeCutMember, EdgeMember, EdgePartial, RoundIngest, RoundIntake,
 };
 pub use strategy::{
     ClientTrainOpts, ClientUpdate, FedStrategy, FinalModel, RoundContext, ServerEnv, ServerModel,

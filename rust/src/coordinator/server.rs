@@ -3,14 +3,19 @@
 //!
 //! Per round: `round_start` hook, dispatch the encoded model to the
 //! selected clients (ledgered, with both ideal and framed byte
-//! counts), hand the round to the configured [`Transport`] — which
-//! trains and encodes either in this process (`net::InProcess`, the
-//! default) or on remote worker processes over framed TCP
-//! (`net::TcpTransport`) — then fold the collected uploads through
-//! `aggregate`, `post_aggregate` (where FedCompress's SelfCompress +
-//! cluster growth live), and evaluate the *deliverable* model (the one
-//! that would be dispatched next round) — which is what Table 1's
-//! accuracy reports. Every per-strategy decision flows through the
+//! counts), hand the round and a streaming [`RoundIngest`] to the
+//! configured [`Transport`] — which trains and encodes either in this
+//! process (`net::InProcess`, the default) or on remote worker
+//! processes over multiplexed framed TCP (`net::TcpTransport`). The
+//! transport resolves each participant slot as its result arrives and
+//! the ingest folds survivors straight into the strategy's
+//! [`AggFold`] in canonical client-id order — constant memory in
+//! fleet size, bit-identical to the historical buffered reduce — then
+//! `aggregate` commits the fold, `post_aggregate` runs (where
+//! FedCompress's SelfCompress + cluster growth live), and the
+//! *deliverable* model (the one that would be dispatched next round)
+//! is evaluated — which is what Table 1's accuracy reports. Every
+//! per-strategy decision flows through the
 //! [`FedStrategy`](super::strategy::FedStrategy) hooks; every
 //! per-backend decision flows through the
 //! [`Transport`](crate::net::Transport) trait; this file contains no
@@ -23,14 +28,16 @@
 
 use anyhow::Result;
 
+use super::accumulate::{AggError, AggFold, AggOutput, StreamAccumulator};
 use super::checkpoint::Checkpoint;
-use super::events::{Event, EventLog};
+use super::events::{DropPhase, Event, EventLog};
 use super::metrics::{RoundMetrics, RunResult};
 use super::selection::select_clients;
 use super::strategy::{ClientUpdate, FedStrategy, RoundContext, ServerEnv, ServerModel};
 use crate::baselines::registry::StrategyRegistry;
 use crate::client::trainer::evaluate;
 use crate::clustering::CentroidState;
+use crate::codec::StageBytes;
 use crate::compression::accounting::{CommLedger, Direction};
 use crate::compression::codec::dense_bytes;
 use crate::config::FedConfig;
@@ -99,7 +106,423 @@ pub fn build_data(engine: &Engine, cfg: &FedConfig) -> Result<FederatedData> {
 
 /// Training FLOPs per sample per epoch: forward + backward is ~3x the
 /// forward pass (the standard estimate the fleet clock runs on).
-const TRAIN_FLOPS_FACTOR: f64 = 3.0;
+/// Public because edge-aggregator workers rebuild the same `FleetSim`
+/// from the config image to apply the deadline clock locally.
+pub const TRAIN_FLOPS_FACTOR: f64 = 3.0;
+
+/// One member of an edge aggregator's pre-folded sub-round, as reported
+/// upstream. The coordinator recomputes each member's simulated
+/// reporting time from these values with the same pure clock the edge
+/// used, so the two tiers always agree on deadline cuts.
+#[derive(Clone, Copy, Debug)]
+pub struct EdgeMember {
+    pub client: usize,
+    /// labeled sample count N_k (the member's FedAvg weight)
+    pub n: usize,
+    /// bytes the member uploaded to the edge tier (ledgered as Up)
+    pub up_bytes: usize,
+    pub score: f64,
+    pub mean_ce: f32,
+}
+
+/// A sub-fleet member the edge aggregator cut at the simulated deadline.
+#[derive(Clone, Copy, Debug)]
+pub struct EdgeCutMember {
+    pub client: usize,
+    pub up_bytes: usize,
+}
+
+/// An edge aggregator's decoded upstream contribution: one pre-reduced
+/// weighted mean over its surviving sub-fleet plus per-member metadata.
+/// Folding `theta` with weight `total_n` reproduces the grand weighted
+/// mean exactly in real arithmetic (group mean × group weight), so edge
+/// runs stay deterministic — though not bit-identical to a flat run,
+/// since the two-tier fold rounds differently.
+#[derive(Clone, Debug)]
+pub struct EdgePartial {
+    pub theta: Vec<f32>,
+    pub mu: Vec<f32>,
+    /// weighted mean of member scores (weight = n)
+    pub score: f64,
+    /// Σ n over members — the group's fold weight
+    pub total_n: usize,
+    pub members: Vec<EdgeMember>,
+    pub cut: Vec<EdgeCutMember>,
+}
+
+/// Per-slot terminal state recorded at resolve time and replayed in
+/// canonical order by `finish`.
+enum SlotMeta {
+    Open,
+    Dropped(DropPhase),
+    TimedOut { elapsed_s: f64 },
+    DeadlineCut { sim_s: f64 },
+    Uploaded(Box<UploadMeta>),
+}
+
+/// The scalar sidecars of a survivor's upload — everything the event
+/// stream, ledger, and round metrics need, with the heavy theta already
+/// folded into the accumulator.
+struct UploadMeta {
+    bytes: usize,
+    stage_bytes: Vec<StageBytes>,
+    score: f64,
+    mean_ce: f32,
+    sim_s: f64,
+}
+
+/// What a finished ingest hands back to the round loop.
+pub struct RoundIntake {
+    /// `None` when no survivor carried weight (fully lost or zero-n
+    /// round): the model stays untouched and the score reports 0.0.
+    pub agg: Option<AggOutput>,
+    pub survivors: usize,
+    pub fault_drops: usize,
+    pub deadline_drops: usize,
+    pub ce_sum: f64,
+    pub up_bytes: usize,
+    pub max_reporting_s: f64,
+    /// reorder-window high-water mark of the streaming accumulator
+    pub peak_parked: usize,
+}
+
+/// Streaming ingest for one round. The transport resolves every
+/// participant slot exactly once — upload, loss, or timeout — in any
+/// arrival order; survivors' thetas are folded immediately at their
+/// canonical (client-id-sorted) position via [`StreamAccumulator`], so
+/// coordinator memory stays O(params + reorder window) instead of
+/// O(fleet × params). Event and ledger emission is deferred to
+/// [`RoundIngest::finish`], which replays the slots in canonical order
+/// — the record stream is byte-identical to the historical buffered
+/// loop no matter how the wire interleaved arrivals.
+pub struct RoundIngest<'a> {
+    round: usize,
+    participants: &'a [Participant],
+    sim: &'a FleetSim,
+    samples: Vec<usize>,
+    local_epochs: usize,
+    down_bytes: usize,
+    expected_params: usize,
+    expected_mu: usize,
+    accumulator: StreamAccumulator,
+    outcomes: Vec<SlotMeta>,
+}
+
+impl<'a> RoundIngest<'a> {
+    /// `participants` must be sorted by client id (the server sorts its
+    /// selection) — slot index order IS the canonical fold order.
+    #[allow(clippy::too_many_arguments)]
+    pub fn new(
+        round: usize,
+        participants: &'a [Participant],
+        sim: &'a FleetSim,
+        data: &FederatedData,
+        cfg: &FedConfig,
+        down_bytes: usize,
+        expected_params: usize,
+        expected_mu: usize,
+        fold: Box<dyn AggFold>,
+    ) -> Self {
+        debug_assert!(
+            participants.windows(2).all(|w| w[0].client < w[1].client),
+            "participants must be sorted by client id"
+        );
+        let samples = participants
+            .iter()
+            .map(|pt| data.labeled[pt.client].len())
+            .collect();
+        Self {
+            round,
+            participants,
+            sim,
+            samples,
+            local_epochs: cfg.local_epochs,
+            down_bytes,
+            expected_params,
+            expected_mu,
+            accumulator: StreamAccumulator::new(fold, participants.len()),
+            outcomes: (0..participants.len()).map(|_| SlotMeta::Open).collect(),
+        }
+    }
+
+    pub fn round(&self) -> usize {
+        self.round
+    }
+
+    pub fn slots(&self) -> usize {
+        self.participants.len()
+    }
+
+    /// Canonical slot of a client id, if it participates this round.
+    pub fn slot_of(&self, client: usize) -> Option<usize> {
+        self.participants
+            .binary_search_by_key(&client, |pt| pt.client)
+            .ok()
+    }
+
+    /// Number of parameters every decoded upload must carry.
+    pub fn expected_params(&self) -> usize {
+        self.expected_params
+    }
+
+    /// Length of the centroid table every upload's mu must match.
+    pub fn expected_mu(&self) -> usize {
+        self.expected_mu
+    }
+
+    /// Resolve one slot with its transport result. Uploads are deadline-
+    /// checked on the simulated clock, then folded (or parked) at their
+    /// canonical position; losses let the fold cursor move past them.
+    pub fn resolve(&mut self, slot: usize, res: ClientResult) -> Result<()> {
+        anyhow::ensure!(
+            matches!(self.outcomes.get(slot), Some(SlotMeta::Open)),
+            "participant slot {slot} resolved twice or out of range"
+        );
+        let part = self.participants[slot];
+        match res {
+            ClientResult::Dropped(phase) => {
+                self.outcomes[slot] = SlotMeta::Dropped(phase);
+                self.accumulator.resolve_lost(slot)?;
+            }
+            ClientResult::TimedOut { elapsed_s } => {
+                self.outcomes[slot] = SlotMeta::TimedOut { elapsed_s };
+                self.accumulator.resolve_lost(slot)?;
+            }
+            ClientResult::Upload(up) => {
+                let u = *up;
+                anyhow::ensure!(
+                    u.client == part.client,
+                    "upload for client {} resolved at client {}'s slot",
+                    u.client,
+                    part.client
+                );
+                u.blob.ensure_param_count(self.expected_params)?;
+                let sim_s = self.sim.client_time_s(
+                    part.client,
+                    self.down_bytes,
+                    u.blob.bytes,
+                    self.samples[slot],
+                    self.local_epochs,
+                    part.fate.slowdown(),
+                );
+                if self.sim.clock().over_deadline(sim_s) {
+                    self.outcomes[slot] = SlotMeta::DeadlineCut { sim_s };
+                    self.accumulator.resolve_lost(slot)?;
+                } else {
+                    self.outcomes[slot] = SlotMeta::Uploaded(Box::new(UploadMeta {
+                        bytes: u.blob.bytes,
+                        stage_bytes: u.blob.stage_bytes,
+                        score: u.score,
+                        mean_ce: u.mean_ce,
+                        sim_s,
+                    }));
+                    self.accumulator.resolve_upload(
+                        slot,
+                        ClientUpdate {
+                            client: u.client,
+                            theta: u.blob.theta,
+                            mu: u.mu,
+                            score: u.score,
+                            n: u.n,
+                        },
+                    )?;
+                }
+            }
+        }
+        Ok(())
+    }
+
+    /// Validate-then-commit an edge aggregator's pre-folded sub-round.
+    /// `Err(reason)` means the message disagrees with the coordinator's
+    /// own deterministic bookkeeping (unknown member, resolved slot,
+    /// weight mismatch, deadline disagreement) — the transport should
+    /// treat it as a protocol violation: evict the connection and drop
+    /// its remaining slots. Nothing is mutated on rejection.
+    pub fn resolve_edge(&mut self, partial: EdgePartial) -> std::result::Result<(), String> {
+        // an all-cut sub-round legitimately carries an empty fold
+        if !partial.members.is_empty() && partial.theta.len() != self.expected_params {
+            return Err(format!(
+                "edge theta carries {} params, expected {}",
+                partial.theta.len(),
+                self.expected_params
+            ));
+        }
+        if !partial.members.is_empty() && partial.mu.len() != self.expected_mu {
+            return Err(format!(
+                "edge mu carries {} centroids, expected {}",
+                partial.mu.len(),
+                self.expected_mu
+            ));
+        }
+        let n_sum: usize = partial.members.iter().map(|m| m.n).sum();
+        if n_sum != partial.total_n {
+            return Err(format!(
+                "edge weight {} disagrees with member sum {n_sum}",
+                partial.total_n
+            ));
+        }
+        let open_slot = |client: usize| -> std::result::Result<usize, String> {
+            let slot = self
+                .slot_of(client)
+                .ok_or_else(|| format!("edge member {client} is not a round participant"))?;
+            match self.outcomes.get(slot) {
+                Some(SlotMeta::Open) => Ok(slot),
+                _ => Err(format!("edge member {client} already resolved")),
+            }
+        };
+        // recompute every member's simulated reporting time with the
+        // coordinator's own clock; the edge ran the same pure function,
+        // so any disagreement on a cut is a lie, not a race
+        let mut member_slots = Vec::with_capacity(partial.members.len());
+        for m in &partial.members {
+            let slot = open_slot(m.client)?;
+            let sim_s = self.member_sim_s(slot, m.up_bytes);
+            if self.sim.clock().over_deadline(sim_s) {
+                return Err(format!("edge member {} is over the deadline but not cut", m.client));
+            }
+            member_slots.push((slot, sim_s));
+        }
+        let mut cut_slots = Vec::with_capacity(partial.cut.len());
+        for c in &partial.cut {
+            let slot = open_slot(c.client)?;
+            let sim_s = self.member_sim_s(slot, c.up_bytes);
+            if !self.sim.clock().over_deadline(sim_s) {
+                return Err(format!("edge cut member {} beats the deadline", c.client));
+            }
+            cut_slots.push((slot, sim_s));
+        }
+        let mut seen: Vec<usize> = member_slots
+            .iter()
+            .chain(cut_slots.iter())
+            .map(|&(slot, _)| slot)
+            .collect();
+        seen.sort_unstable();
+        if seen.windows(2).any(|w| w[0] == w[1]) {
+            return Err("duplicate client in edge upload".into());
+        }
+
+        // commit — all checks passed, so the accumulator calls below
+        // cannot fail on slot state
+        for &(slot, sim_s) in &cut_slots {
+            self.outcomes[slot] = SlotMeta::DeadlineCut { sim_s };
+            self.accumulator.resolve_lost(slot).map_err(|e| e.to_string())?;
+        }
+        let lead = member_slots.iter().map(|&(slot, _)| slot).min();
+        for (&(slot, sim_s), m) in member_slots.iter().zip(&partial.members) {
+            self.outcomes[slot] = SlotMeta::Uploaded(Box::new(UploadMeta {
+                bytes: m.up_bytes,
+                stage_bytes: Vec::new(),
+                score: m.score,
+                mean_ce: m.mean_ce,
+                sim_s,
+            }));
+            if Some(slot) != lead {
+                // folded through the lead slot's group update below
+                self.accumulator.resolve_lost(slot).map_err(|e| e.to_string())?;
+            }
+        }
+        if let Some(lead_slot) = lead {
+            let group = ClientUpdate {
+                client: self.participants[lead_slot].client,
+                theta: partial.theta,
+                mu: partial.mu,
+                score: partial.score,
+                n: partial.total_n,
+            };
+            self.accumulator
+                .resolve_upload(lead_slot, group)
+                .map_err(|e| e.to_string())?;
+        }
+        Ok(())
+    }
+
+    fn member_sim_s(&self, slot: usize, up_bytes: usize) -> f64 {
+        let part = self.participants[slot];
+        self.sim.client_time_s(
+            part.client,
+            self.down_bytes,
+            up_bytes,
+            self.samples[slot],
+            self.local_epochs,
+            part.fate.slowdown(),
+        )
+    }
+
+    /// Replay the resolved slots in canonical order — first every
+    /// fault dropout, then deadlines/uploads with their ledger records
+    /// — exactly the event and ledger sequence the buffered loop
+    /// produced, then finish the fold.
+    pub fn finish(self, ledger: &mut CommLedger, events: &mut EventLog) -> Result<RoundIntake> {
+        let round = self.round;
+        let mut intake = RoundIntake {
+            agg: None,
+            survivors: 0,
+            fault_drops: 0,
+            deadline_drops: 0,
+            ce_sum: 0.0,
+            up_bytes: 0,
+            max_reporting_s: 0.0,
+            peak_parked: self.accumulator.peak_parked(),
+        };
+        for (pt, m) in self.participants.iter().zip(&self.outcomes) {
+            if let SlotMeta::Dropped(phase) = m {
+                intake.fault_drops += 1;
+                events.push(Event::Dropout {
+                    round,
+                    client: pt.client,
+                    phase: *phase,
+                });
+            }
+        }
+        for (pt, m) in self.participants.iter().zip(&self.outcomes) {
+            match m {
+                SlotMeta::Open => {
+                    anyhow::bail!("transport left client {} unresolved", pt.client)
+                }
+                SlotMeta::Dropped(_) => {}
+                SlotMeta::TimedOut { elapsed_s } => {
+                    // a *real* straggler cut by the transport's timeout
+                    intake.deadline_drops += 1;
+                    events.push(Event::Deadline {
+                        round,
+                        client: pt.client,
+                        sim_s: *elapsed_s,
+                    });
+                }
+                SlotMeta::DeadlineCut { sim_s } => {
+                    intake.deadline_drops += 1;
+                    events.push(Event::Deadline {
+                        round,
+                        client: pt.client,
+                        sim_s: *sim_s,
+                    });
+                }
+                SlotMeta::Uploaded(up) => {
+                    intake.max_reporting_s = intake.max_reporting_s.max(up.sim_s);
+                    ledger.record(round, Direction::Up, up.bytes, framed_up(up.bytes));
+                    ledger.record_stages(Direction::Up, &up.stage_bytes);
+                    intake.up_bytes += up.bytes;
+                    events.push(Event::Upload {
+                        round,
+                        client: pt.client,
+                        bytes: up.bytes,
+                        score: up.score,
+                        mean_ce: up.mean_ce as f64,
+                    });
+                    intake.ce_sum += up.mean_ce as f64;
+                    intake.survivors += 1;
+                }
+            }
+        }
+        intake.agg = match self.accumulator.finish() {
+            Ok(agg) => Some(agg),
+            // fully lost or zero-weight round: model stays untouched
+            Err(AggError::Empty) | Err(AggError::ZeroWeight) => None,
+            Err(e) => return Err(e.into()),
+        };
+        Ok(intake)
+    }
+}
 
 /// Run one full federated training experiment for a registered
 /// strategy name.
@@ -239,7 +662,11 @@ pub fn run_with_strategy_opts(
             round,
             clusters: model.centroids.active,
         });
-        let selected = select_clients(cfg.clients, cfg.participation, &mut round_rng)?;
+        let mut selected = select_clients(cfg.clients, cfg.participation, &mut round_rng)?;
+        // canonical order: dispatch, events, and the streaming fold all
+        // walk participants sorted by client id (fold determinism
+        // contract — `coordinator::accumulate` module docs)
+        selected.sort_unstable();
         let fates = sim.round_fates(round, &selected);
         let down = strategy.encode_download(&ctx, &model)?;
         down.ensure_param_count(p)?;
@@ -280,101 +707,37 @@ pub fn run_with_strategy_opts(
             base: &base,
             encode_workers: workers,
         };
-        let results = transport.run_round(&env, &*strategy, &round_spec)?;
-        anyhow::ensure!(
-            results.len() == participants.len(),
-            "transport returned {} results for {} participants",
-            results.len(),
-            participants.len()
+        let mut ingest = RoundIngest::new(
+            round,
+            &participants,
+            &sim,
+            data,
+            cfg,
+            down.bytes,
+            p,
+            model.centroids.mu.len(),
+            strategy.make_fold(&ctx),
         );
-
-        // --- losses (sim faults + transport faults) -----------------------
-        let mut fault_drops = 0usize;
-        for (part, res) in participants.iter().zip(&results) {
-            if let ClientResult::Dropped(phase) = res {
-                fault_drops += 1;
-                events.push(Event::Dropout {
-                    round,
-                    client: part.client,
-                    phase: *phase,
-                });
-            }
-        }
-
-        // --- deadline + receive (simulated round clock) -------------------
-        let mut uploads = Vec::with_capacity(participants.len());
-        let mut ce_sum = 0.0f64;
-        let mut up_bytes_round = 0usize;
-        let mut max_reporting_s = 0.0f64;
-        let mut deadline_drops = 0usize;
-        for (part, res) in participants.iter().zip(results) {
-            let up = match res {
-                ClientResult::Dropped(_) => continue,
-                ClientResult::TimedOut { elapsed_s } => {
-                    // a *real* straggler cut by the transport's timeout
-                    deadline_drops += 1;
-                    events.push(Event::Deadline {
-                        round,
-                        client: part.client,
-                        sim_s: elapsed_s,
-                    });
-                    continue;
-                }
-                ClientResult::Upload(up) => up,
-            };
-            up.blob.ensure_param_count(p)?;
-            let sim_s = sim.client_time_s(
-                part.client,
-                down.bytes,
-                up.blob.bytes,
-                data.labeled[part.client].len(),
-                cfg.local_epochs,
-                part.fate.slowdown(),
-            );
-            if sim.clock().over_deadline(sim_s) {
-                deadline_drops += 1;
-                events.push(Event::Deadline {
-                    round,
-                    client: part.client,
-                    sim_s,
-                });
-                continue;
-            }
-            max_reporting_s = max_reporting_s.max(sim_s);
-            let up_framed = framed_up(up.blob.bytes);
-            ledger.record(round, Direction::Up, up.blob.bytes, up_framed);
-            ledger.record_stages(Direction::Up, &up.blob.stage_bytes);
-            up_bytes_round += up.blob.bytes;
-            events.push(Event::Upload {
-                round,
-                client: part.client,
-                bytes: up.blob.bytes,
-                score: up.score,
-                mean_ce: up.mean_ce as f64,
-            });
-            ce_sum += up.mean_ce as f64;
-            uploads.push(ClientUpdate {
-                client: part.client,
-                theta: up.blob.theta,
-                mu: up.mu,
-                score: up.score,
-                n: up.n,
-            });
-        }
-        let dropped = fault_drops + deadline_drops;
+        transport.run_round(&env, &*strategy, &round_spec, &mut ingest)?;
+        // canonical-order replay: events + ledger byte-identical to the
+        // buffered loop, survivors already folded
+        let intake = ingest.finish(&mut ledger, &mut events)?;
+        let dropped = intake.fault_drops + intake.deadline_drops;
         let stragglers = fates.iter().filter(|f| f.is_straggler()).count();
-        let round_sim_ms = 1e3 * sim.clock().round_time_s(max_reporting_s, dropped > 0);
+        let round_sim_ms = 1e3 * sim.clock().round_time_s(intake.max_reporting_s, dropped > 0);
 
         // --- aggregate ----------------------------------------------------
-        // survivors only; a fully lost round leaves the model untouched
-        let score = if uploads.is_empty() {
-            0.0
-        } else {
-            strategy.aggregate(&ctx, &mut model, &uploads)?
+        // survivors only; a fully lost (or zero-weight) round leaves the
+        // model untouched
+        let survivors = intake.survivors;
+        let aggregated = intake.agg.is_some();
+        let score = match intake.agg {
+            None => 0.0,
+            Some(agg) => strategy.aggregate(&ctx, &mut model, agg)?,
         };
         events.push(Event::Aggregated {
             round,
-            clients: uploads.len(),
+            clients: survivors,
             score,
         });
         // active count reported for the round (before any growth below)
@@ -387,7 +750,7 @@ pub fn run_with_strategy_opts(
             data,
             base: &base,
         };
-        if !uploads.is_empty() {
+        if aggregated {
             strategy.post_aggregate(&ctx, &env, &mut model, score, &mut events)?;
         }
 
@@ -404,9 +767,9 @@ pub fn run_with_strategy_opts(
             test_loss,
             score,
             // mean over the *survivors* the server actually heard from
-            client_mean_ce: ce_sum / uploads.len().max(1) as f64,
+            client_mean_ce: intake.ce_sum / survivors.max(1) as f64,
             clusters,
-            up_bytes: up_bytes_round,
+            up_bytes: intake.up_bytes,
             down_bytes: down.bytes * selected.len(),
             wall_ms: t0.elapsed().as_secs_f64() * 1e3,
             round_sim_ms,

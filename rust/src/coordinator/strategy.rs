@@ -13,8 +13,11 @@
 //! 4. [`FedStrategy::encode_upload`]     — per client; pure CPU and
 //!    `&self`, so the driver fans it out through
 //!    `util::threadpool::parallel_map`. MUST NOT touch the engine.
-//! 5. [`FedStrategy::aggregate`]         — fold decoded uploads into
-//!    the server model; default is byte-identical FedAvg.
+//! 5. [`FedStrategy::make_fold`]         — build the round's streaming
+//!    reduction; each decoded upload is folded in as it arrives, in
+//!    canonical client-id order (`coordinator::accumulate`), then
+//!    [`FedStrategy::aggregate`] commits the finished fold into the
+//!    server model; default is byte-identical FedAvg.
 //! 6. [`FedStrategy::post_aggregate`]    — server-side work on the
 //!    aggregated model (FedCompress: SelfCompress + cluster growth).
 //! 7. After the last round, [`FedStrategy::finalize`] produces the
@@ -36,7 +39,7 @@
 
 use anyhow::Result;
 
-use super::aggregate::{fedavg_slices, weighted_mean};
+use super::accumulate::{AggFold, AggOutput, FedAvgFold};
 use super::events::EventLog;
 use super::server::FederatedData;
 use crate::baselines::wire::WireBlob;
@@ -155,16 +158,26 @@ pub trait FedStrategy: Send + Sync {
         rng: &mut Rng,
     ) -> Result<WireBlob>;
 
-    /// Fold the decoded uploads into the server model; returns the
-    /// aggregated representation score E. Default: plain sample-count
-    /// FedAvg on theta (the paper's unmodified aggregation).
+    /// Build this round's streaming reduction. The round loop folds
+    /// each decoded upload into it in canonical (client-id) order, as
+    /// the upload arrives — constant memory in fleet size. Default:
+    /// sample-count FedAvg over theta, centroid table, and score.
+    fn make_fold(&self, _ctx: &RoundContext<'_>) -> Box<dyn AggFold> {
+        Box::new(FedAvgFold::new())
+    }
+
+    /// Commit a finished fold into the server model; returns the
+    /// aggregated representation score E. Default: install the reduced
+    /// theta and leave the server centroid table alone (the paper's
+    /// unmodified aggregation).
     fn aggregate(
         &mut self,
         _ctx: &RoundContext<'_>,
         model: &mut ServerModel,
-        uploads: &[ClientUpdate],
+        agg: AggOutput,
     ) -> Result<f64> {
-        Ok(aggregate_fedavg(model, uploads))
+        model.theta = agg.theta;
+        Ok(agg.score)
     }
 
     /// Server-side work on the aggregated model (SelfCompress, cluster
@@ -183,24 +196,6 @@ pub trait FedStrategy: Send + Sync {
 
     /// Produce the final deliverable model and its exact wire size.
     fn finalize(&self, env: &ServerEnv<'_>, model: &ServerModel) -> Result<FinalModel>;
-}
-
-/// Sample-count-weighted FedAvg of the uploads into `model.theta`;
-/// returns the same weighting applied to the representation scores.
-pub fn aggregate_fedavg(model: &mut ServerModel, uploads: &[ClientUpdate]) -> f64 {
-    let thetas: Vec<&[f32]> = uploads.iter().map(|u| u.theta.as_slice()).collect();
-    let ns: Vec<usize> = uploads.iter().map(|u| u.n).collect();
-    let scores: Vec<f64> = uploads.iter().map(|u| u.score).collect();
-    model.theta = fedavg_slices(&thetas, &ns);
-    weighted_mean(&scores, &ns)
-}
-
-/// FedAvg the client-learned centroid tables into the server table
-/// (weight-clustering strategies only).
-pub fn aggregate_centroid_mu(model: &mut ServerModel, uploads: &[ClientUpdate]) {
-    let mus: Vec<&[f32]> = uploads.iter().map(|u| u.mu.as_slice()).collect();
-    let ns: Vec<usize> = uploads.iter().map(|u| u.n).collect();
-    model.centroids.mu = fedavg_slices(&mus, &ns);
 }
 
 #[cfg(test)]
@@ -225,11 +220,20 @@ mod tests {
         }
     }
 
+    fn run_fold(ups: &[ClientUpdate]) -> AggOutput {
+        let mut fold: Box<dyn AggFold> = Box::new(FedAvgFold::new());
+        for u in ups {
+            fold.fold(u).unwrap();
+        }
+        fold.finish().unwrap()
+    }
+
     #[test]
     fn default_aggregation_is_weighted_fedavg() {
         let mut m = model();
-        let ups = vec![update(0, 0.0, 30), update(1, 10.0, 10)];
-        let score = aggregate_fedavg(&mut m, &ups);
+        let agg = run_fold(&[update(0, 0.0, 30), update(1, 10.0, 10)]);
+        let score = agg.score;
+        m.theta = agg.theta;
         assert!((m.theta[0] - 2.5).abs() < 1e-6);
         assert!((score - 2.5).abs() < 1e-9);
     }
@@ -237,8 +241,8 @@ mod tests {
     #[test]
     fn centroid_aggregation_tracks_weights() {
         let mut m = model();
-        let ups = vec![update(0, 1.0, 1), update(1, 3.0, 3)];
-        aggregate_centroid_mu(&mut m, &ups);
+        let agg = run_fold(&[update(0, 1.0, 1), update(1, 3.0, 3)]);
+        m.centroids.mu = agg.mu;
         assert!((m.centroids.mu[0] - 2.5).abs() < 1e-6);
     }
 }

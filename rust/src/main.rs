@@ -55,6 +55,10 @@ fn build_config(args: &Args) -> Result<FedConfig> {
     if let Some(s) = args.flag("deadline-s") {
         cfg.set("deadline_s", s)?;
     }
+    // transport handshake guard (sugar over --set handshake_timeout_s=)
+    if let Some(s) = args.flag("handshake-timeout-s") {
+        cfg.set("handshake_timeout_s", s)?;
+    }
     cfg.validate()?;
     Ok(cfg)
 }
@@ -242,13 +246,19 @@ fn cmd_serve(args: &Args) -> Result<()> {
     finish_run(args, &cfg, &result, "tcp")
 }
 
-/// One worker process; everything but the address and artifacts dir
-/// arrives at handshake.
+/// One worker process; everything but the address, artifacts dir, and
+/// an optional edge-aggregator capacity arrives at handshake.
 fn cmd_worker(args: &Args) -> Result<()> {
     let addr = args
         .flag("connect")
         .context("worker needs --connect <addr>")?;
-    let uploads = worker::run_worker(addr, &artifacts_dir(args))?;
+    let edge_of: usize = args.flag_or("edge-of", "0").parse()?;
+    let uploads = worker::run_worker_opts(
+        addr,
+        &artifacts_dir(args),
+        fedcompress::codec::CodecRegistry::builtin(),
+        edge_of,
+    )?;
     println!("worker finished cleanly after {uploads} uploads");
     Ok(())
 }

@@ -22,7 +22,9 @@ pub const MAGIC: u32 = u32::from_le_bytes(*b"FCN1");
 /// Protocol version this build speaks. Bump on any wire change.
 /// v2: self-describing codec headers + stage sidecars on
 /// Download/Upload, and the `codec` field in the config image.
-pub const PROTO_VERSION: u16 = 2;
+/// v3: `edge_of` in Hello, the `EdgeUpload` message, and
+/// `handshake_timeout_s` in the config image.
+pub const PROTO_VERSION: u16 = 3;
 
 /// Fixed per-frame cost: magic(4) + version(2) + type(1) + len(4) +
 /// crc32(4).

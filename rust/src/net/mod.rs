@@ -19,27 +19,39 @@
 //! * [`transport`] — the [`Transport`] trait extracted from the round
 //!   loop's dispatch/collect path, plus the default [`InProcess`]
 //!   backend (byte-identical to the pre-transport coordinator).
+//! * [`mux`] — the multiplexed connection layer: every worker socket
+//!   nonblocking, serviced by one readiness loop on the coordinator
+//!   thread, with incremental frame reassembly per connection. Many
+//!   logical clients share one socket; a failing connection is
+//!   evicted without disturbing the rest.
 //! * [`tcp`] — the coordinator-side [`TcpTransport`]: accepts worker
-//!   connections, assigns deterministic client ids at handshake,
-//!   dispatches downloads concurrently, and collects uploads under
-//!   per-client timeouts that feed the existing dropout/deadline fault
-//!   machinery.
-//! * [`worker`] — the worker runtime behind `fedcompress worker`.
+//!   connections (surviving failed handshakes), assigns deterministic
+//!   client ids at handshake, then drives rounds through the mux —
+//!   uploads stream into the round's accumulator in whatever order
+//!   they arrive, under a per-connection inactivity timeout that
+//!   feeds the existing dropout/deadline fault machinery.
+//! * [`worker`] — the worker runtime behind `fedcompress worker`,
+//!   including the `--edge-of` aggregator mode that folds a sub-fleet
+//!   locally and ships one pre-aggregated upload.
 //!
 //! Determinism contract: client ids are assigned at handshake by
 //! arrival order (worker `j` of `W` hosts every client `k` with
 //! `k % W == j`), but a client's behavior depends only on its id —
 //! data shard, RNG streams (`10_000 + round*clients + k`), fault fates
-//! — never on which socket hosts it, so a loopback run reproduces the
-//! in-process run bit-exactly for any worker arrival order.
+//! — never on which socket hosts it; and the coordinator canonicalizes
+//! uploads by client id before folding (`coordinator::accumulate`), so
+//! a loopback run reproduces the in-process run bit-exactly for any
+//! worker arrival order and any upload interleaving.
 
 pub mod frame;
+pub mod mux;
 pub mod proto;
 pub mod tcp;
 pub mod transport;
 pub mod worker;
 
 pub use frame::{read_frame, write_frame, FRAME_OVERHEAD, PROTO_VERSION};
+pub use mux::{FrameReader, Mux, MuxEvent};
 pub use proto::Msg;
 pub use tcp::{TcpServer, TcpTransport};
 pub use transport::{

@@ -1,0 +1,418 @@
+//! Multiplexed connection layer: many logical clients per socket,
+//! all sockets serviced by one readiness loop on the coordinator
+//! thread.
+//!
+//! The first-generation TCP transport parked one OS thread per worker
+//! connection in a stop-and-wait loop (dispatch every download, then
+//! block on each upload in turn). That shape caps the fleet at the
+//! thread budget and keeps every in-flight upload buffered until the
+//! slowest worker reports. The mux replaces it:
+//!
+//! ```text
+//!            ┌─────────────── readiness loop ────────────────┐
+//!            │  for each conn:                               │
+//!            │    write: drain outbox  ──► WouldBlock? next  │
+//!            │    read:  fill FrameReader ─► frames? yield   │
+//!            │  no progress anywhere ──► sleep ~1ms          │
+//!            └───────────────────────────────────────────────┘
+//!                 ▲                │
+//!     enqueue(conn, frame)        ▼
+//!      (bounded outboxes)   MuxEvent::{Frame, Closed}
+//! ```
+//!
+//! Every socket is nonblocking; the loop makes one write pass and one
+//! read pass per iteration and reports progress so the caller can
+//! decide when to sleep and when to top off outboxes. Incoming bytes
+//! accumulate in a per-connection [`FrameReader`] — an incremental
+//! version of [`frame::read_frame`] with the identical validation
+//! order (magic, version, length cap, CRC) and the identical typed
+//! errors. A connection that fails — dead socket, malformed frame —
+//! is closed and reported as [`MuxEvent::Closed`]; the other
+//! connections are untouched.
+//!
+//! Memory contract: the caller bounds outboxes (top off below a
+//! watermark instead of enqueueing the whole round up front) and the
+//! reader only ever buffers partial frames, so coordinator memory is
+//! constant in fleet size — uploads stream out of here straight into
+//! the round's `StreamAccumulator`.
+
+use std::io::{Read, Write};
+use std::net::TcpStream;
+use std::time::{Duration, Instant};
+
+use super::frame::{crc32, MAGIC, MAX_PAYLOAD, PROTO_VERSION};
+use super::ProtoError;
+
+/// Incremental frame parser: feed bytes with [`FrameReader::push`],
+/// drain complete frames with [`FrameReader::next_frame`]. Mirrors
+/// `frame::read_frame` exactly — same validation order, same typed
+/// errors — but never blocks: a partial frame simply waits for more
+/// bytes.
+#[derive(Default)]
+pub struct FrameReader {
+    buf: Vec<u8>,
+}
+
+/// Frame header size on the wire: magic(4) + version(2) + type(1) +
+/// len(4).
+const HEADER_LEN: usize = 11;
+
+impl FrameReader {
+    pub fn new() -> FrameReader {
+        FrameReader { buf: Vec::new() }
+    }
+
+    /// Bytes buffered but not yet consumed as frames (partial frame).
+    pub fn pending(&self) -> usize {
+        self.buf.len()
+    }
+
+    /// Append freshly read bytes.
+    pub fn push(&mut self, bytes: &[u8]) {
+        self.buf.extend_from_slice(bytes);
+    }
+
+    /// Try to parse one complete frame out of the buffer. `Ok(None)`
+    /// means "need more bytes"; an error means the stream is
+    /// unrecoverably out of sync (frame boundaries are lost) and the
+    /// connection should be dropped.
+    pub fn next_frame(&mut self) -> Result<Option<(u8, Vec<u8>)>, ProtoError> {
+        let Some(header) = self.buf.get(..HEADER_LEN) else {
+            return Ok(None);
+        };
+        let short = || ProtoError::Truncated { what: "frame header" };
+        let word = |i: usize| -> Result<u32, ProtoError> {
+            let b: [u8; 4] = header
+                .get(i..i + 4)
+                .and_then(|s| s.try_into().ok())
+                .ok_or_else(short)?;
+            Ok(u32::from_le_bytes(b))
+        };
+        let magic = word(0)?;
+        if magic != MAGIC {
+            return Err(ProtoError::BadMagic { got: magic });
+        }
+        let vb: [u8; 2] = header
+            .get(4..6)
+            .and_then(|s| s.try_into().ok())
+            .ok_or_else(short)?;
+        let version = u16::from_le_bytes(vb);
+        if version != PROTO_VERSION {
+            return Err(ProtoError::BadVersion { got: version });
+        }
+        let msg_type = *header.get(6).ok_or_else(short)?;
+        let len = word(7)?;
+        if len > MAX_PAYLOAD {
+            return Err(ProtoError::Oversized { len, max: MAX_PAYLOAD });
+        }
+        let total = HEADER_LEN + len as usize + 4;
+        let Some(frame) = self.buf.get(..total) else {
+            return Ok(None);
+        };
+        let payload_end = HEADER_LEN + len as usize;
+        let payload = frame
+            .get(HEADER_LEN..payload_end)
+            .ok_or_else(short)?
+            .to_vec();
+        let cb: [u8; 4] = frame
+            .get(payload_end..total)
+            .and_then(|s| s.try_into().ok())
+            .ok_or(ProtoError::Truncated { what: "frame checksum" })?;
+        let stored = u32::from_le_bytes(cb);
+        let computed = crc32(&payload);
+        if stored != computed {
+            return Err(ProtoError::CrcMismatch { stored, computed });
+        }
+        self.buf.drain(..total);
+        Ok(Some((msg_type, payload)))
+    }
+}
+
+/// What one readiness pass surfaced.
+pub enum MuxEvent {
+    /// A complete, validated frame from connection `conn`.
+    Frame {
+        conn: usize,
+        msg_type: u8,
+        payload: Vec<u8>,
+    },
+    /// Connection `conn` is gone: socket error, clean close mid-round,
+    /// or a protocol violation that lost frame sync. The mux has
+    /// already closed it; the caller decides what its in-flight
+    /// clients become.
+    Closed { conn: usize, error: ProtoError },
+}
+
+struct MuxConn {
+    stream: TcpStream,
+    reader: FrameReader,
+    /// Pending outbound bytes; `sent` is the drained prefix. Compacted
+    /// once fully flushed so a long round cannot grow it unboundedly.
+    outbox: Vec<u8>,
+    sent: usize,
+    open: bool,
+    /// Wall instant of the last successful read — drives the caller's
+    /// inactivity timeout, never recorded in any deterministic output.
+    last_rx: Instant,
+}
+
+/// The readiness loop's state: every worker connection, nonblocking.
+pub struct Mux {
+    conns: Vec<MuxConn>,
+    read_buf: Vec<u8>,
+}
+
+impl Mux {
+    /// Take ownership of handshaken streams and switch them to
+    /// nonblocking mode. Connection indices are positions in `streams`.
+    pub fn new(streams: Vec<TcpStream>) -> std::io::Result<Mux> {
+        // fedlint:allow(no-wallclock-state) -- socket inactivity clock only, never recorded
+        let now = Instant::now();
+        let mut conns = Vec::with_capacity(streams.len());
+        for stream in streams {
+            stream.set_nonblocking(true)?;
+            stream.set_nodelay(true)?;
+            conns.push(MuxConn {
+                stream,
+                reader: FrameReader::new(),
+                outbox: Vec::new(),
+                sent: 0,
+                open: true,
+                last_rx: now,
+            });
+        }
+        Ok(Mux {
+            conns,
+            read_buf: vec![0u8; 64 << 10],
+        })
+    }
+
+    pub fn len(&self) -> usize {
+        self.conns.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.conns.is_empty()
+    }
+
+    pub fn is_open(&self, conn: usize) -> bool {
+        self.conns.get(conn).is_some_and(|c| c.open)
+    }
+
+    /// Bytes queued but not yet flushed on `conn` — the caller's
+    /// backpressure signal (top off below a watermark).
+    pub fn outbox_len(&self, conn: usize) -> usize {
+        self.conns.get(conn).map_or(0, |c| c.outbox.len() - c.sent)
+    }
+
+    /// Queue already-framed bytes for `conn`. Silently ignored on a
+    /// closed connection (the caller sees `Closed` and stops caring).
+    pub fn enqueue(&mut self, conn: usize, frame: &[u8]) {
+        if let Some(c) = self.conns.get_mut(conn) {
+            if c.open {
+                c.outbox.extend_from_slice(frame);
+            }
+        }
+    }
+
+    /// Reset the inactivity clock for `conn` — called when the caller
+    /// hands it new work, so the timeout measures silence *since the
+    /// last dispatch or read*, not since connection setup.
+    pub fn mark_active(&mut self, conn: usize) {
+        if let Some(c) = self.conns.get_mut(conn) {
+            // fedlint:allow(no-wallclock-state) -- socket inactivity clock only, never recorded
+            c.last_rx = Instant::now();
+        }
+    }
+
+    /// How long `conn` has been silent (no bytes read, no
+    /// `mark_active`). Closed/unknown connections report zero.
+    pub fn idle_for(&self, conn: usize) -> Duration {
+        match self.conns.get(conn) {
+            Some(c) if c.open => c.last_rx.elapsed(),
+            _ => Duration::ZERO,
+        }
+    }
+
+    /// Close `conn` locally (protocol violation, timeout eviction).
+    /// No further events will be reported for it.
+    pub fn close(&mut self, conn: usize) {
+        if let Some(c) = self.conns.get_mut(conn) {
+            c.open = false;
+            c.outbox.clear();
+            c.sent = 0;
+            let _ = c.stream.shutdown(std::net::Shutdown::Both);
+        }
+    }
+
+    /// Switch `conn` back to blocking mode and return the stream — the
+    /// shutdown path writes its final frame synchronously.
+    pub fn blocking_stream(&mut self, conn: usize) -> Option<&mut TcpStream> {
+        let c = self.conns.get_mut(conn)?;
+        if !c.open {
+            return None;
+        }
+        c.stream.set_nonblocking(false).ok()?;
+        Some(&mut c.stream)
+    }
+
+    /// One readiness pass: a write attempt and a read attempt on every
+    /// open connection. Complete frames and closures are appended to
+    /// `events`; returns true when any byte moved (the caller sleeps
+    /// briefly when nothing does).
+    pub fn poll(&mut self, events: &mut Vec<MuxEvent>) -> bool {
+        let mut progress = false;
+        for (i, c) in self.conns.iter_mut().enumerate() {
+            if !c.open {
+                continue;
+            }
+
+            // --- write pass: drain as much outbox as the socket takes
+            while let Some(pending) = c.outbox.get(c.sent..).filter(|p| !p.is_empty()) {
+                match c.stream.write(pending) {
+                    Ok(0) => break,
+                    Ok(n) => {
+                        c.sent += n;
+                        progress = true;
+                    }
+                    Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => break,
+                    Err(e) if e.kind() == std::io::ErrorKind::Interrupted => continue,
+                    Err(e) => {
+                        c.open = false;
+                        let _ = c.stream.shutdown(std::net::Shutdown::Both);
+                        events.push(MuxEvent::Closed { conn: i, error: ProtoError::Io(e) });
+                        progress = true;
+                        break;
+                    }
+                }
+            }
+            if !c.open {
+                continue;
+            }
+            if c.sent == c.outbox.len() && c.sent > 0 {
+                c.outbox.clear();
+                c.sent = 0;
+            }
+
+            // --- read pass: pull whatever is ready, then parse
+            loop {
+                match c.stream.read(&mut self.read_buf) {
+                    Ok(0) => {
+                        c.open = false;
+                        let _ = c.stream.shutdown(std::net::Shutdown::Both);
+                        events.push(MuxEvent::Closed {
+                            conn: i,
+                            error: ProtoError::Truncated { what: "connection closed" },
+                        });
+                        progress = true;
+                        break;
+                    }
+                    Ok(n) => {
+                        progress = true;
+                        c.reader.push(self.read_buf.get(..n).unwrap_or(&[]));
+                        // fedlint:allow(no-wallclock-state) -- socket inactivity clock only, never recorded
+                        c.last_rx = Instant::now();
+                        if n < self.read_buf.len() {
+                            break;
+                        }
+                    }
+                    Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => break,
+                    Err(e) if e.kind() == std::io::ErrorKind::Interrupted => continue,
+                    Err(e) => {
+                        c.open = false;
+                        let _ = c.stream.shutdown(std::net::Shutdown::Both);
+                        events.push(MuxEvent::Closed { conn: i, error: ProtoError::Io(e) });
+                        progress = true;
+                        break;
+                    }
+                }
+            }
+            if !c.open {
+                continue;
+            }
+
+            // --- parse pass: yield every complete frame buffered
+            loop {
+                match c.reader.next_frame() {
+                    Ok(Some((msg_type, payload))) => {
+                        progress = true;
+                        events.push(MuxEvent::Frame { conn: i, msg_type, payload });
+                    }
+                    Ok(None) => break,
+                    Err(e) => {
+                        // frame sync is lost: everything after this
+                        // byte is garbage, so the connection dies
+                        c.open = false;
+                        let _ = c.stream.shutdown(std::net::Shutdown::Both);
+                        events.push(MuxEvent::Closed { conn: i, error: e });
+                        progress = true;
+                        break;
+                    }
+                }
+            }
+        }
+        progress
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::net::frame::encode_frame;
+
+    #[test]
+    fn reader_reassembles_frames_from_arbitrary_chunks() {
+        let frames = [
+            encode_frame(1, b"hello"),
+            encode_frame(2, &[]),
+            encode_frame(3, &vec![7u8; 10_000]),
+        ];
+        let wire: Vec<u8> = frames.iter().flatten().copied().collect();
+        for chunk in [1usize, 2, 7, 11, 64, 4096] {
+            let mut r = FrameReader::new();
+            let mut got = Vec::new();
+            for part in wire.chunks(chunk) {
+                r.push(part);
+                while let Some((ty, payload)) = r.next_frame().unwrap() {
+                    got.push((ty, payload));
+                }
+            }
+            assert_eq!(got.len(), 3, "chunk={chunk}");
+            assert_eq!(got[0], (1, b"hello".to_vec()));
+            assert_eq!(got[1], (2, Vec::new()));
+            assert_eq!(got[2].0, 3);
+            assert_eq!(got[2].1.len(), 10_000);
+            assert_eq!(r.pending(), 0);
+        }
+    }
+
+    #[test]
+    fn reader_rejects_bad_magic() {
+        let mut r = FrameReader::new();
+        r.push(b"GARBAGE-NOT-A-FRAME");
+        assert!(matches!(r.next_frame(), Err(ProtoError::BadMagic { .. })));
+    }
+
+    #[test]
+    fn reader_rejects_corrupt_payload() {
+        let mut frame = encode_frame(1, b"payload");
+        frame[HEADER_LEN] ^= 0xFF; // flip a payload byte, CRC now wrong
+        let mut r = FrameReader::new();
+        r.push(&frame);
+        assert!(matches!(r.next_frame(), Err(ProtoError::CrcMismatch { .. })));
+    }
+
+    #[test]
+    fn reader_waits_on_partial_frames() {
+        let frame = encode_frame(4, b"0123456789");
+        let mut r = FrameReader::new();
+        for &b in &frame[..frame.len() - 1] {
+            r.push(&[b]);
+            assert!(r.next_frame().unwrap().is_none());
+        }
+        r.push(&frame[frame.len() - 1..]);
+        let (ty, payload) = r.next_frame().unwrap().unwrap();
+        assert_eq!(ty, 4);
+        assert_eq!(payload, b"0123456789");
+    }
+}

@@ -4,12 +4,14 @@
 //!
 //! ```text
 //! worker                     coordinator
-//!   │── Hello{version} ────────▶│   (one per connection)
+//!   │── Hello{version, edge} ──▶│   (one per connection)
 //!   │◀─ HelloAck{ids, cfg} ─────│   deterministic client-id grant
 //!   │                           │
 //!   │◀─ RoundOpen{r, μ, flags} ─│   per round, per worker
 //!   │◀─ Download{r, k, blob} ───│   per selected healthy client
 //!   │── Upload{r, k, blob, …} ─▶│   training result + sidecars
+//!   │── EdgeUpload{r, Σ, …} ───▶│   (edge workers: one pre-folded
+//!   │                           │    blob for the whole sub-fleet)
 //!   │◀─ RoundClose{r} ──────────│
 //!   │        ⋮                  │
 //!   │◀─ Shutdown ───────────────│   end of run
@@ -92,6 +94,10 @@ pub fn framed_up(bytes: usize) -> usize {
 #[derive(Clone, Debug, PartialEq)]
 pub struct Hello {
     pub proto_version: u16,
+    /// Edge-aggregator capacity: 0 for a leaf worker, otherwise the
+    /// maximum sub-fleet size this connection folds locally before
+    /// shipping one [`EdgeUpload`] upstream.
+    pub edge_of: u32,
 }
 
 /// Handshake grant: which worker this connection is, the deterministic
@@ -144,6 +150,68 @@ pub struct Upload {
     pub payload: Vec<u8>,
 }
 
+/// One surviving member of an edge worker's sub-fleet: the sidecar
+/// facts the coordinator needs to keep its ledger and events
+/// byte-identical to a flat fleet (`up_bytes` is what the member's
+/// upload *would* have cost on the wire — it was folded locally
+/// instead).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct EdgeMemberWire {
+    pub client: u32,
+    pub n: u32,
+    pub up_bytes: u64,
+    pub score: f64,
+    pub mean_ce: f32,
+}
+
+/// A sub-fleet member the edge worker cut for missing the sim
+/// deadline; the coordinator re-derives the same verdict from its own
+/// clock and records the usual `Deadline` event.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct EdgeCutWire {
+    pub client: u32,
+    pub up_bytes: u64,
+}
+
+/// An edge worker's whole round in one message: the sample-weighted
+/// partial FedAvg of its surviving members (`payload` = raw
+/// little-endian f32 theta, `mu` = the matching centroid-table fold),
+/// plus the per-member sidecars.
+#[derive(Clone, Debug, PartialEq)]
+pub struct EdgeUpload {
+    pub round: u32,
+    /// Σ member `n` — the fold's total FedAvg weight.
+    pub total_n: u64,
+    /// sample-weighted mean of member scores
+    pub score: f64,
+    pub members: Vec<EdgeMemberWire>,
+    pub cut: Vec<EdgeCutWire>,
+    pub mu: Vec<f32>,
+    /// group-folded partial theta as raw little-endian f32s
+    pub payload: Vec<u8>,
+}
+
+impl EdgeUpload {
+    /// Decode the raw payload back into the folded theta.
+    pub fn theta(&self) -> Result<Vec<f32>, ProtoError> {
+        if self.payload.len() % 4 != 0 {
+            return Err(malformed(format!(
+                "edge payload is {} bytes, not a whole number of f32s",
+                self.payload.len()
+            )));
+        }
+        Ok(self
+            .payload
+            .chunks_exact(4)
+            .map(|b| {
+                // chunks_exact(4) guarantees the conversion succeeds
+                let arr: [u8; 4] = b.try_into().unwrap_or_default();
+                f32::from_le_bytes(arr)
+            })
+            .collect())
+    }
+}
+
 #[derive(Clone, Debug)]
 pub enum Msg {
     Hello(Hello),
@@ -153,6 +221,7 @@ pub enum Msg {
     Upload(Upload),
     RoundClose { round: u32 },
     Shutdown,
+    EdgeUpload(EdgeUpload),
 }
 
 impl Msg {
@@ -165,6 +234,7 @@ impl Msg {
             Msg::Upload(_) => 5,
             Msg::RoundClose { .. } => 6,
             Msg::Shutdown => 7,
+            Msg::EdgeUpload(_) => 8,
         }
     }
 
@@ -177,6 +247,7 @@ impl Msg {
             Msg::Upload(_) => "Upload",
             Msg::RoundClose { .. } => "RoundClose",
             Msg::Shutdown => "Shutdown",
+            Msg::EdgeUpload(_) => "EdgeUpload",
         }
     }
 
@@ -184,7 +255,10 @@ impl Msg {
     pub fn encode_payload(&self) -> Vec<u8> {
         let mut out = Vec::new();
         match self {
-            Msg::Hello(h) => put_u16(&mut out, h.proto_version),
+            Msg::Hello(h) => {
+                put_u16(&mut out, h.proto_version);
+                put_u32(&mut out, h.edge_of);
+            }
             Msg::HelloAck(a) => {
                 put_u32(&mut out, a.worker);
                 put_u32(&mut out, a.workers);
@@ -224,6 +298,26 @@ impl Msg {
             }
             Msg::RoundClose { round } => put_u32(&mut out, *round),
             Msg::Shutdown => {}
+            Msg::EdgeUpload(e) => {
+                put_u32(&mut out, e.round);
+                put_u64(&mut out, e.total_n);
+                put_f64(&mut out, e.score);
+                put_u32(&mut out, e.members.len() as u32);
+                for m in &e.members {
+                    put_u32(&mut out, m.client);
+                    put_u32(&mut out, m.n);
+                    put_u64(&mut out, m.up_bytes);
+                    put_f64(&mut out, m.score);
+                    put_f32(&mut out, m.mean_ce);
+                }
+                put_u32(&mut out, e.cut.len() as u32);
+                for c in &e.cut {
+                    put_u32(&mut out, c.client);
+                    put_u64(&mut out, c.up_bytes);
+                }
+                put_f32s(&mut out, &e.mu);
+                out.extend_from_slice(&e.payload);
+            }
         }
         out
     }
@@ -234,6 +328,7 @@ impl Msg {
         let msg = match msg_type {
             1 => Msg::Hello(Hello {
                 proto_version: c.u16("hello version")?,
+                edge_of: c.u32("hello edge_of")?,
             }),
             2 => {
                 let worker = c.u32("ack worker")?;
@@ -299,6 +394,46 @@ impl Msg {
                 round: c.u32("close round")?,
             },
             7 => Msg::Shutdown,
+            8 => {
+                let round = c.u32("edge round")?;
+                let total_n = c.u64("edge total_n")?;
+                let score = c.f64("edge score")?;
+                let n_members = c.u32("edge member count")? as usize;
+                if n_members > 1_000_000 {
+                    return Err(malformed(format!("edge upload lists {n_members} members")));
+                }
+                let mut members = Vec::with_capacity(n_members);
+                for _ in 0..n_members {
+                    members.push(EdgeMemberWire {
+                        client: c.u32("edge member client")?,
+                        n: c.u32("edge member n")?,
+                        up_bytes: c.u64("edge member up_bytes")?,
+                        score: c.f64("edge member score")?,
+                        mean_ce: c.f32("edge member mean_ce")?,
+                    });
+                }
+                let n_cut = c.u32("edge cut count")? as usize;
+                if n_cut > 1_000_000 {
+                    return Err(malformed(format!("edge upload lists {n_cut} cut members")));
+                }
+                let mut cut = Vec::with_capacity(n_cut);
+                for _ in 0..n_cut {
+                    cut.push(EdgeCutWire {
+                        client: c.u32("edge cut client")?,
+                        up_bytes: c.u64("edge cut up_bytes")?,
+                    });
+                }
+                let mu = c.f32s("edge centroids")?;
+                Msg::EdgeUpload(EdgeUpload {
+                    round,
+                    total_n,
+                    score,
+                    members,
+                    cut,
+                    mu,
+                    payload: c.rest(),
+                })
+            }
             got => return Err(ProtoError::UnknownMsgType { got }),
         };
         if !c.done() {
@@ -601,6 +736,7 @@ fn put_cfg(v: &mut Vec<u8>, cfg: &FedConfig) {
     put_f64(v, cfg.fleet.dropout);
     put_f64(v, cfg.fleet.deadline_s);
     put_u64(v, cfg.seed);
+    put_f64(v, cfg.handshake_timeout_s);
 }
 
 fn read_cfg(c: &mut Cur<'_>) -> Result<FedConfig, ProtoError> {
@@ -642,6 +778,7 @@ fn read_cfg(c: &mut Cur<'_>) -> Result<FedConfig, ProtoError> {
             deadline_s: c.f64(w)?,
         },
         seed: c.u64(w)?,
+        handshake_timeout_s: c.f64(w)?,
     })
 }
 
@@ -668,8 +805,11 @@ mod tests {
         let mut rng = Rng::new(1);
         let mu: Vec<f32> = (0..32).map(|_| rng.normal()).collect();
 
-        match roundtrip(&Msg::Hello(Hello { proto_version: 1 })) {
-            Msg::Hello(h) => assert_eq!(h.proto_version, 1),
+        match roundtrip(&Msg::Hello(Hello { proto_version: 1, edge_of: 8 })) {
+            Msg::Hello(h) => {
+                assert_eq!(h.proto_version, 1);
+                assert_eq!(h.edge_of, 8);
+            }
             other => panic!("{}", other.kind()),
         }
 
@@ -747,6 +887,58 @@ mod tests {
             other => panic!("{}", other.kind()),
         }
         assert!(matches!(roundtrip(&Msg::Shutdown), Msg::Shutdown));
+
+        let theta = [0.5f32, -1.25, 3.0];
+        let edge = EdgeUpload {
+            round: 4,
+            total_n: 160,
+            score: 2.75,
+            members: vec![
+                EdgeMemberWire {
+                    client: 1,
+                    n: 96,
+                    up_bytes: 4096,
+                    score: 3.0,
+                    mean_ce: 1.25,
+                },
+                EdgeMemberWire {
+                    client: 3,
+                    n: 64,
+                    up_bytes: 2048,
+                    score: 2.5,
+                    mean_ce: 0.75,
+                },
+            ],
+            cut: vec![EdgeCutWire {
+                client: 5,
+                up_bytes: 4096,
+            }],
+            mu: vec![0.5, -0.5],
+            payload: theta.iter().flat_map(|x| x.to_le_bytes()).collect(),
+        };
+        match roundtrip(&Msg::EdgeUpload(edge.clone())) {
+            Msg::EdgeUpload(e) => {
+                assert_eq!(e, edge);
+                assert_eq!(e.theta().unwrap(), theta);
+            }
+            other => panic!("{}", other.kind()),
+        }
+    }
+
+    /// A ragged edge payload (not a multiple of 4 bytes) is a typed
+    /// error, not a panic or a silent truncation.
+    #[test]
+    fn ragged_edge_payload_is_rejected() {
+        let edge = EdgeUpload {
+            round: 0,
+            total_n: 1,
+            score: 0.0,
+            members: Vec::new(),
+            cut: Vec::new(),
+            mu: Vec::new(),
+            payload: vec![1, 2, 3],
+        };
+        assert!(matches!(edge.theta(), Err(ProtoError::Malformed { .. })));
     }
 
     /// The paper-facing config must survive the wire bit-for-bit —

@@ -1,24 +1,40 @@
 //! Coordinator-side TCP transport: accept worker connections, grant
-//! deterministic client ids at handshake, dispatch each round's
-//! downloads concurrently, and collect uploads under per-client
-//! timeouts.
+//! deterministic client ids at handshake, then drive every round
+//! through the [`Mux`] readiness loop — all sockets nonblocking, all
+//! serviced by the coordinator thread, uploads streaming into the
+//! round's accumulator in whatever order they arrive.
 //!
-//! Client ownership: worker `j` (by arrival order) of `W` hosts every
-//! client `k` with `k % W == j`. The grant travels in `HelloAck`
-//! together with the strategy name and the full config image, so a
-//! worker rebuilds the exact experiment (data shards, RNG streams,
-//! strategy plugin) locally — only models cross the wire.
+//! Client ownership: worker `j` (by successful-handshake order) of `W`
+//! hosts every client `k` with `k % W == j`. The grant travels in
+//! `HelloAck` together with the strategy name and the full config
+//! image, so a worker rebuilds the exact experiment (data shards, RNG
+//! streams, strategy plugin) locally — only models cross the wire.
+//!
+//! Accept robustness: a connection that fails its handshake — a port
+//! scanner probing the socket, a stalled peer, a version-mismatched
+//! build — is logged and dropped, and the listener keeps accepting
+//! until `expected_workers` real workers are in. The handshake wait is
+//! bounded by `FedConfig::handshake_timeout_s` (`--handshake-timeout-s`).
 //!
 //! Fault surface: a sim-fated drop is never dispatched (mirroring the
 //! in-process backend bit-for-bit); a dead or protocol-violating
-//! worker turns its remaining clients into `Dropped(BeforeUpload)` and
-//! is evicted for the rest of the run; a read timeout turns the
-//! worker's outstanding clients into `TimedOut` (the driver logs
-//! `Event::Deadline`) and also evicts it — a stream abandoned
-//! mid-frame cannot be resynchronized. Real stragglers therefore feed
-//! exactly the fault machinery the simulator models.
+//! worker — including one shipping a ragged or otherwise hostile
+//! upload — turns its outstanding clients into `Dropped(BeforeUpload)`
+//! and is evicted for the rest of the run, while every other
+//! connection's round continues undisturbed; a connection silent
+//! beyond the round timeout turns its outstanding clients into
+//! `TimedOut` (the driver logs `Event::Deadline`) and is evicted too.
+//! Real stragglers therefore feed exactly the fault machinery the
+//! simulator models.
+//!
+//! Edge tier: a worker that handshakes with `edge_of > 0` receives
+//! its downloads like any other, but folds its sub-fleet locally and
+//! answers with one `EdgeUpload` — the group's partial FedAvg plus
+//! per-member sidecars — which `RoundIngest::resolve_edge` validates
+//! against the coordinator's own deadline clock before committing.
 
-use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::collections::{BTreeMap, VecDeque};
+use std::net::{SocketAddr, TcpListener};
 use std::time::Duration;
 
 use anyhow::{Context, Result};
@@ -26,14 +42,20 @@ use anyhow::{Context, Result};
 use crate::codec::{CodecCache, CodecRegistry};
 use crate::config::FedConfig;
 use crate::coordinator::events::DropPhase;
+use crate::coordinator::server::{EdgeCutMember, EdgeMember, EdgePartial, RoundIngest};
 use crate::coordinator::strategy::FedStrategy;
 use crate::sim::ClientFate;
-use crate::util::threadpool::parallel_map;
 
+use super::mux::{Mux, MuxEvent};
 use super::proto::{self, HelloAck, Msg, RoundOpen, Upload};
 use super::transport::{
     ClientResult, Participant, ReceivedUpload, RoundEnv, RoundSpec, Transport, TransportKind,
 };
+
+/// Keep roughly this many unflushed bytes queued per connection before
+/// materializing more `Download` frames — bounds coordinator memory at
+/// (watermark + one frame) per connection instead of (round size).
+const OUTBOX_WATERMARK: usize = 64 << 10;
 
 /// A bound listener that has not yet completed its handshakes. Split
 /// from [`TcpTransport`] so callers (and the loopback tests) can learn
@@ -49,10 +71,11 @@ pub struct TcpServer {
 }
 
 impl TcpServer {
-    /// Bind the coordinator socket. `timeout` bounds each per-client
-    /// upload wait (`None` = wait forever; real deployments want a
-    /// bound). Uploads decode against the built-in codec registry;
-    /// embedders with custom codecs use [`TcpServer::bind_with_codecs`].
+    /// Bind the coordinator socket. `timeout` bounds each round's
+    /// per-connection silence (`None` = wait forever; real deployments
+    /// want a bound). Uploads decode against the built-in codec
+    /// registry; embedders with custom codecs use
+    /// [`TcpServer::bind_with_codecs`].
     pub fn bind(
         addr: &str,
         expected_workers: usize,
@@ -98,14 +121,24 @@ impl TcpServer {
         Ok(self.listener.local_addr()?)
     }
 
-    /// Accept `expected_workers` connections, handshake each, and
-    /// return the ready transport. Worker `j` by arrival order hosts
-    /// clients `{k : k % W == j}`.
+    /// Accept connections until `expected_workers` have completed the
+    /// handshake, then return the ready transport. Worker `j` by
+    /// successful-handshake order hosts clients `{k : k % W == j}`.
+    /// A connection that fails its handshake (port scanner, garbage
+    /// bytes, stalled peer) is dropped and does not consume a worker
+    /// slot — only a listener failure aborts startup.
     pub fn accept_workers(self) -> Result<TcpTransport> {
         let w = self.expected_workers;
-        let mut conns = Vec::with_capacity(w);
+        let handshake_timeout = if self.cfg.handshake_timeout_s > 0.0 {
+            Some(Duration::from_secs_f64(self.cfg.handshake_timeout_s))
+        } else {
+            None
+        };
+        let mut streams = Vec::with_capacity(w);
+        let mut edge = Vec::with_capacity(w);
         let mut control_bytes = 0usize;
-        for j in 0..w {
+        while streams.len() < w {
+            let j = streams.len();
             let (stream, peer) = self
                 .listener
                 .accept()
@@ -113,16 +146,22 @@ impl TcpServer {
             stream.set_nodelay(true).ok();
             // a connection that sends nothing (port scanner, stalled
             // peer) must not wedge startup forever
-            stream.set_read_timeout(Some(Duration::from_secs(30))).ok();
-            let hello = Msg::read_from(&mut &stream)
-                .map_err(|e| anyhow::anyhow!("handshake with {peer}: {e}"))?;
-            stream.set_read_timeout(None).ok();
-            let h = match hello {
-                Msg::Hello(h) => h,
-                other => {
-                    anyhow::bail!("worker {peer} opened with {} instead of Hello", other.kind())
+            stream.set_read_timeout(handshake_timeout).ok();
+            let h = match Msg::read_from(&mut &stream) {
+                Ok(Msg::Hello(h)) => h,
+                Ok(other) => {
+                    crate::info!(
+                        "peer {peer} opened with {} instead of Hello; dropping it",
+                        other.kind()
+                    );
+                    continue;
+                }
+                Err(e) => {
+                    crate::info!("handshake with {peer} failed ({e}); dropping it");
+                    continue;
                 }
             };
+            stream.set_read_timeout(None).ok();
             control_bytes += Msg::Hello(h.clone()).framed_len();
             let clients: Vec<u32> = (0..self.cfg.clients)
                 .filter(|k| k % w == j)
@@ -135,19 +174,26 @@ impl TcpServer {
                 strategy: self.strategy.clone(),
                 cfg: Box::new(self.cfg.clone()),
             });
-            control_bytes += ack.write_to(&mut &stream)?;
+            match ack.write_to(&mut &stream) {
+                Ok(n) => control_bytes += n,
+                Err(e) => {
+                    crate::info!("handshake ack to {peer} failed ({e}); dropping it");
+                    continue;
+                }
+            }
             crate::info!(
-                "worker {j}/{w} connected from {peer} (proto v{}, {} clients)",
+                "worker {j}/{w} connected from {peer} (proto v{}, {} clients, edge_of={})",
                 h.proto_version,
-                clients.len()
+                clients.len(),
+                h.edge_of
             );
-            conns.push(WorkerConn {
-                stream,
-                alive: true,
-            });
+            edge.push(h.edge_of as usize);
+            streams.push(stream);
         }
+        let mux = Mux::new(streams).context("switching worker sockets to nonblocking")?;
         Ok(TcpTransport {
-            conns,
+            mux,
+            edge,
             workers: w,
             timeout: self.timeout,
             control_bytes,
@@ -156,35 +202,25 @@ impl TcpServer {
     }
 }
 
-struct WorkerConn {
-    stream: TcpStream,
-    alive: bool,
-}
-
-/// The networked backend: one live connection per worker process.
+/// The networked backend: every worker connection multiplexed through
+/// one readiness loop, uploads resolved on the round's ingest as they
+/// arrive.
 pub struct TcpTransport {
-    conns: Vec<WorkerConn>,
+    mux: Mux,
+    /// Per-connection edge-aggregator capacity (0 = leaf worker).
+    edge: Vec<usize>,
     workers: usize,
     timeout: Option<Duration>,
     /// Handshake, round-control, centroid-sidecar, codec-header, and
     /// stage-sidecar bytes — the wire traffic the per-client ledger
-    /// does not attribute.
+    /// does not attribute. Edge blobs count here in full: the ledger
+    /// records the *logical* member uploads instead, so CCR stays
+    /// comparable with a flat fleet.
     control_bytes: usize,
     /// Spec -> pipeline, shared across rounds so stateful codecs
     /// (`delta`) keep their per-stream decode state.
     codecs: CodecCache,
 }
-
-/// What one worker's collection loop produced, per slot.
-enum SlotOutcome {
-    Upload(Box<ReceivedUpload>),
-    TimedOut(f64),
-    Dead,
-}
-
-/// One worker's whole-round result: per-slot outcomes, control bytes
-/// spent, and whether the connection is still usable.
-type WorkerRound = (Vec<(usize, SlotOutcome)>, usize, bool);
 
 impl TcpTransport {
     /// Total control-plane bytes so far (both directions).
@@ -194,147 +230,43 @@ impl TcpTransport {
 
     /// Workers still answering.
     pub fn alive_workers(&self) -> usize {
-        self.conns.iter().filter(|c| c.alive).count()
+        (0..self.workers).filter(|&j| self.mux.is_open(j)).count()
     }
 
-    /// Dispatch + collect against one worker. Returns the per-slot
-    /// outcomes plus the control bytes this exchange cost.
-    fn round_with_worker(
-        &self,
-        conn: &WorkerConn,
-        spec: &RoundSpec<'_>,
-        expected_p: usize,
-        owned: &[(usize, Participant)],
-    ) -> (Vec<(usize, SlotOutcome)>, usize) {
-        let mut control = 0usize;
-        let mut out: Vec<(usize, SlotOutcome)> = Vec::with_capacity(owned.len());
-        let stream = &conn.stream;
-
-        // --- dispatch / collect, stop-and-wait ----------------------------
-        // Strictly alternate: send one Download, then block for its
-        // Upload. At any instant only one direction of the socket is
-        // transferring (each side fully drains its read before it
-        // writes), so neither peer can wedge on a full socket buffer no
-        // matter how large the model is. Overlap comes from run_round's
-        // one-thread-per-worker fan-out, not from pipelining one stream.
-        let open = Msg::RoundOpen(RoundOpen {
-            round: spec.round as u32,
-            n_downloads: owned.len() as u32,
-            weight_clustering: spec.opts.weight_clustering,
-            compressing: spec.compressing,
-            down_compressed: spec.down_compressed,
-            active: spec.centroids.active as u32,
-            mu: spec.centroids.mu.clone(),
-        });
-        // RoundOpen is control traffic; Downloads are the ledgered data
-        // plane (the driver records framed_down per dispatch)
-        match open.write_to(&mut &*stream) {
-            Ok(n) => control += n,
-            Err(e) => {
-                crate::info!("worker send failed, evicting: {e}");
-                let dead = owned.iter().map(|&(s, _)| (s, SlotOutcome::Dead)).collect();
-                return (dead, control);
-            }
-        }
-
-        let timeout_s = self.timeout.map(|d| d.as_secs_f64()).unwrap_or(0.0);
-        let mut pending: Vec<(usize, Participant)> = owned.to_vec();
-        for (_, part) in owned {
-            // zero-copy dispatch: the shared round payload streams out
-            // under this client's header. The self-describing codec
-            // header beyond its 1-byte ledger baseline is control
-            // traffic, like the centroid sidecar.
-            control += proto::codec_header_surplus(&spec.down.spec);
-            let sent = proto::write_download(
-                &mut &*stream,
-                spec.round as u32,
-                part.client as u32,
-                &spec.down.spec,
-                &spec.down.payload,
-            );
-            if let Err(e) = sent {
-                crate::info!("worker send failed, evicting: {e}");
-                for &(slot, _) in &pending {
-                    out.push((slot, SlotOutcome::Dead));
-                }
-                return (out, control);
-            }
-            let msg = match Msg::read_from(&mut &*stream) {
-                Ok(m) => m,
-                Err(e) if e.is_timeout() => {
-                    // deadline fired: everything still outstanding is a
-                    // straggler cut. The stream may be mid-frame now, so
-                    // the worker is evicted (slots report TimedOut, the
-                    // driver logs Event::Deadline).
-                    crate::info!("worker timed out with {} uploads pending", pending.len());
-                    for &(slot, _) in &pending {
-                        out.push((slot, SlotOutcome::TimedOut(timeout_s)));
-                    }
-                    return (out, control);
-                }
-                Err(e) => {
-                    crate::info!("worker read failed, evicting: {e}");
-                    for &(slot, _) in &pending {
-                        out.push((slot, SlotOutcome::Dead));
-                    }
-                    return (out, control);
-                }
-            };
-            let up = match msg {
-                Msg::Upload(u) => u,
-                other => {
-                    crate::info!("expected Upload, got {}; evicting worker", other.kind());
-                    for &(slot, _) in &pending {
-                        out.push((slot, SlotOutcome::Dead));
-                    }
-                    return (out, control);
-                }
-            };
-            match self.receive_upload(up, spec.round, expected_p, &mut pending) {
-                Ok((slot, received, sidecar)) => {
-                    control += sidecar;
-                    out.push((slot, SlotOutcome::Upload(received)));
-                }
-                Err(e) => {
-                    crate::info!("rejecting upload: {e}; evicting worker");
-                    for &(slot, _) in &pending {
-                        out.push((slot, SlotOutcome::Dead));
-                    }
-                    return (out, control);
-                }
-            }
-        }
-        (out, control)
-    }
-
-    /// Validate one `Upload` against the round's outstanding set and
-    /// decode it through the codec cache. Returns the slot, the
-    /// decoded upload, and the control-plane size of its sidecars
-    /// (centroid table + codec header surplus + stage bytes).
-    fn receive_upload(
-        &self,
+    /// Validate one `Upload` against the connection's outstanding set
+    /// and decode it. On success the sidecar control bytes are
+    /// accounted and `(slot, upload)` is returned; any `Err` is a
+    /// protocol violation and the caller evicts the connection.
+    fn accept_upload(
+        &mut self,
         up: Upload,
         round: usize,
         expected_p: usize,
-        pending: &mut Vec<(usize, Participant)>,
-    ) -> Result<(usize, Box<ReceivedUpload>, usize)> {
-        anyhow::ensure!(
-            up.round as usize == round,
-            "upload for round {} during round {round}",
-            up.round
-        );
+        expected_mu: usize,
+        outstanding: &mut BTreeMap<usize, usize>,
+    ) -> std::result::Result<(usize, Box<ReceivedUpload>), String> {
+        if up.round as usize != round {
+            return Err(format!("upload for round {} during round {round}", up.round));
+        }
         let client = up.client as usize;
-        let pos = pending
-            .iter()
-            .position(|(_, p)| p.client == client)
-            .with_context(|| format!("unexpected upload from client {client}"))?;
-        let (slot, _) = pending.swap_remove(pos);
+        let Some(slot) = outstanding.remove(&client) else {
+            return Err(format!("unexpected upload from client {client}"));
+        };
+        if up.mu.len() != expected_mu {
+            return Err(format!(
+                "client {client} upload carries {} centroids, server table has {expected_mu}",
+                up.mu.len()
+            ));
+        }
         let sidecar = 4
             + 4 * up.mu.len()
             + proto::codec_header_surplus(&up.spec)
             + proto::stages_sidecar_len(&up.stages);
-        let blob = proto::blob_from_payload(&self.codecs, up.spec, up.stages, up.payload)?;
-        blob.ensure_param_count(expected_p)?;
+        let blob = proto::blob_from_payload(&self.codecs, up.spec, up.stages, up.payload)
+            .map_err(|e| format!("client {client} upload: {e}"))?;
+        blob.ensure_param_count(expected_p)
+            .map_err(|e| format!("client {client} upload: {e}"))?;
+        self.control_bytes += sidecar;
         Ok((
             slot,
             Box::new(ReceivedUpload {
@@ -345,9 +277,101 @@ impl TcpTransport {
                 n: up.n as usize,
                 mean_ce: up.mean_ce,
             }),
-            sidecar,
         ))
     }
+
+    /// Validate one `EdgeUpload` against the connection's outstanding
+    /// set and commit it on the ingest. Returns the number of slots it
+    /// resolved; any `Err` is a protocol violation and the caller
+    /// evicts the connection.
+    fn accept_edge(
+        edge_cap: usize,
+        e: proto::EdgeUpload,
+        round: usize,
+        ingest: &mut RoundIngest<'_>,
+        outstanding: &mut BTreeMap<usize, usize>,
+    ) -> std::result::Result<usize, String> {
+        if edge_cap == 0 {
+            return Err("EdgeUpload from a worker that handshook as a leaf".to_string());
+        }
+        if e.round as usize != round {
+            return Err(format!("edge upload for round {} during round {round}", e.round));
+        }
+        let reported = e.members.len() + e.cut.len();
+        if reported > edge_cap {
+            return Err(format!(
+                "edge upload reports {reported} clients, over its edge_of={edge_cap} grant"
+            ));
+        }
+        // ownership first: an edge worker may only speak for clients
+        // this connection is still outstanding on — anything else
+        // could poison another connection's slots
+        for client in e
+            .members
+            .iter()
+            .map(|m| m.client as usize)
+            .chain(e.cut.iter().map(|c| c.client as usize))
+        {
+            if !outstanding.contains_key(&client) {
+                return Err(format!(
+                    "edge upload speaks for client {client} this connection does not own"
+                ));
+            }
+        }
+        let theta = e.theta().map_err(|err| format!("edge payload: {err}"))?;
+        let partial = EdgePartial {
+            theta,
+            mu: e.mu,
+            score: e.score,
+            total_n: e.total_n as usize,
+            members: e
+                .members
+                .iter()
+                .map(|m| EdgeMember {
+                    client: m.client as usize,
+                    n: m.n as usize,
+                    up_bytes: m.up_bytes as usize,
+                    score: m.score,
+                    mean_ce: m.mean_ce,
+                })
+                .collect(),
+            cut: e
+                .cut
+                .iter()
+                .map(|c| EdgeCutMember {
+                    client: c.client as usize,
+                    up_bytes: c.up_bytes as usize,
+                })
+                .collect(),
+        };
+        ingest.resolve_edge(partial)?;
+        for client in e
+            .members
+            .iter()
+            .map(|m| m.client as usize)
+            .chain(e.cut.iter().map(|c| c.client as usize))
+        {
+            outstanding.remove(&client);
+        }
+        Ok(reported)
+    }
+}
+
+/// Resolve every slot a dying connection still owes as
+/// `Dropped(BeforeUpload)` and clear its queues. Returns how many
+/// slots that was.
+fn drop_outstanding(
+    outstanding: &mut BTreeMap<usize, usize>,
+    dispatch: &mut VecDeque<(usize, Participant)>,
+    ingest: &mut RoundIngest<'_>,
+) -> Result<usize> {
+    let n = outstanding.len();
+    for &slot in outstanding.values() {
+        ingest.resolve(slot, ClientResult::Dropped(DropPhase::BeforeUpload))?;
+    }
+    outstanding.clear();
+    dispatch.clear();
+    Ok(n)
 }
 
 impl Transport for TcpTransport {
@@ -360,97 +384,248 @@ impl Transport for TcpTransport {
         _env: &RoundEnv<'_>,
         _strategy: &dyn FedStrategy,
         spec: &RoundSpec<'_>,
-    ) -> Result<Vec<ClientResult>> {
+        ingest: &mut RoundIngest<'_>,
+    ) -> Result<()> {
+        let round = spec.round;
         let expected_p = spec.down.theta.len();
+        let expected_mu = ingest.expected_mu();
         // the wire carries the encoded payload; a blob whose payload
         // lies about its size would desynchronize the framed ledger.
-        // (No opaque exemption: every blob carries a registry-
-        // resolvable spec, so every blob can cross.)
         spec.down.ensure_payload()?;
 
-        let mut results: Vec<Option<ClientResult>> =
-            spec.participants.iter().map(|_| None).collect();
-
         // sim-fated drops never dispatch — identical to InProcess
-        let mut per_worker: Vec<Vec<(usize, Participant)>> = vec![Vec::new(); self.workers];
+        let mut owned: Vec<Vec<(usize, Participant)>> = vec![Vec::new(); self.workers];
         for (slot, part) in spec.participants.iter().enumerate() {
             match part.fate {
                 ClientFate::DropBeforeTrain => {
-                    results[slot] = Some(ClientResult::Dropped(DropPhase::BeforeTrain));
+                    ingest.resolve(slot, ClientResult::Dropped(DropPhase::BeforeTrain))?;
                 }
                 ClientFate::DropBeforeUpload => {
-                    results[slot] = Some(ClientResult::Dropped(DropPhase::BeforeUpload));
+                    ingest.resolve(slot, ClientResult::Dropped(DropPhase::BeforeUpload))?;
                 }
                 ClientFate::Healthy { .. } => {
-                    per_worker[part.client % self.workers].push((slot, *part));
+                    owned[part.client % self.workers].push((slot, *part));
                 }
             }
         }
 
-        if let Some(d) = self.timeout {
-            for conn in &self.conns {
-                // collect-phase read timeout; dispatch writes block
-                conn.stream.set_read_timeout(Some(d)).ok();
+        // open the round on every live connection that has work
+        let mut dispatch: Vec<VecDeque<(usize, Participant)>> =
+            (0..self.workers).map(|_| VecDeque::new()).collect();
+        let mut outstanding: Vec<BTreeMap<usize, usize>> =
+            (0..self.workers).map(|_| BTreeMap::new()).collect();
+        let mut had_work = vec![false; self.workers];
+        let mut closed = vec![false; self.workers];
+        let mut remaining = 0usize;
+        for (j, slots) in owned.into_iter().enumerate() {
+            if slots.is_empty() {
+                continue;
             }
-        }
-
-        // one collection thread per worker connection: downloads go out
-        // concurrently and slow workers do not serialize fast ones
-        let per_worker_out: Vec<WorkerRound> =
-            parallel_map(self.workers, self.workers, |j| {
-                let conn = &self.conns[j];
-                if per_worker[j].is_empty() {
-                    return (Vec::new(), 0, conn.alive);
+            if !self.mux.is_open(j) {
+                for &(slot, _) in &slots {
+                    ingest.resolve(slot, ClientResult::Dropped(DropPhase::BeforeUpload))?;
                 }
-                if !conn.alive {
-                    let dead = per_worker[j]
-                        .iter()
-                        .map(|&(slot, _)| (slot, SlotOutcome::Dead))
-                        .collect();
-                    return (dead, 0, false);
-                }
-                let owned = &per_worker[j];
-                let (out, control) = self.round_with_worker(conn, spec, expected_p, owned);
-                let lost = out
-                    .iter()
-                    .any(|(_, o)| matches!(o, SlotOutcome::Dead | SlotOutcome::TimedOut(_)));
-                (out, control, !lost)
+                continue;
+            }
+            had_work[j] = true;
+            let open = Msg::RoundOpen(RoundOpen {
+                round: round as u32,
+                n_downloads: slots.len() as u32,
+                weight_clustering: spec.opts.weight_clustering,
+                compressing: spec.compressing,
+                down_compressed: spec.down_compressed,
+                active: spec.centroids.active as u32,
+                mu: spec.centroids.mu.clone(),
             });
+            let mut buf = Vec::new();
+            // RoundOpen is control traffic; Downloads are the ledgered
+            // data plane (the driver records framed_down per dispatch)
+            self.control_bytes += open.write_to(&mut buf)?;
+            self.mux.enqueue(j, &buf);
+            self.mux.mark_active(j);
+            for &(slot, part) in &slots {
+                outstanding[j].insert(part.client, slot);
+            }
+            remaining += slots.len();
+            dispatch[j] = slots.into_iter().collect();
+        }
 
-        let round_close = Msg::RoundClose {
-            round: spec.round as u32,
-        };
-        for (j, (slots, control, still_alive)) in per_worker_out.into_iter().enumerate() {
-            self.control_bytes += control;
-            self.conns[j].alive = still_alive;
-            if still_alive && !per_worker[j].is_empty() {
-                match round_close.write_to(&mut &self.conns[j].stream) {
-                    Ok(n) => self.control_bytes += n,
-                    Err(_) => self.conns[j].alive = false,
+        let timeout_s = self.timeout.map(|d| d.as_secs_f64()).unwrap_or(0.0);
+        let mut events: Vec<MuxEvent> = Vec::new();
+        loop {
+            // --- top off outboxes with pending Downloads ------------------
+            for j in 0..self.workers {
+                if !self.mux.is_open(j) {
+                    continue;
+                }
+                while let Some(&(_slot, part)) = dispatch[j].front() {
+                    if self.mux.outbox_len(j) >= OUTBOX_WATERMARK {
+                        break;
+                    }
+                    // zero-copy-spirit dispatch: the shared payload is
+                    // framed per client, but only up to the watermark at
+                    // a time, so memory stays flat in fleet size. The
+                    // codec header beyond its 1-byte ledger baseline is
+                    // control traffic, like the centroid sidecar.
+                    self.control_bytes += proto::codec_header_surplus(&spec.down.spec);
+                    let mut buf = Vec::with_capacity(64 + spec.down.payload.len());
+                    proto::write_download(
+                        &mut buf,
+                        round as u32,
+                        part.client as u32,
+                        &spec.down.spec,
+                        &spec.down.payload,
+                    )?;
+                    self.mux.enqueue(j, &buf);
+                    dispatch[j].pop_front();
                 }
             }
-            for (slot, outcome) in slots {
-                results[slot] = Some(match outcome {
-                    SlotOutcome::Upload(u) => ClientResult::Upload(u),
-                    SlotOutcome::TimedOut(s) => ClientResult::TimedOut { elapsed_s: s },
-                    SlotOutcome::Dead => ClientResult::Dropped(DropPhase::BeforeUpload),
+
+            // --- close the round on connections that finished it ----------
+            for j in 0..self.workers {
+                if had_work[j]
+                    && !closed[j]
+                    && self.mux.is_open(j)
+                    && outstanding[j].is_empty()
+                    && dispatch[j].is_empty()
+                {
+                    let mut buf = Vec::new();
+                    self.control_bytes +=
+                        Msg::RoundClose { round: round as u32 }.write_to(&mut buf)?;
+                    self.mux.enqueue(j, &buf);
+                    closed[j] = true;
+                }
+            }
+
+            // --- one readiness pass ---------------------------------------
+            events.clear();
+            let progress = self.mux.poll(&mut events);
+            for ev in events.drain(..) {
+                match ev {
+                    MuxEvent::Closed { conn, error } => {
+                        if outstanding[conn].is_empty() {
+                            crate::info!("worker {conn} connection closed ({error})");
+                            continue;
+                        }
+                        crate::info!(
+                            "worker {conn} connection lost ({error}); dropping {} clients",
+                            outstanding[conn].len()
+                        );
+                        remaining -=
+                            drop_outstanding(&mut outstanding[conn], &mut dispatch[conn], ingest)?;
+                    }
+                    MuxEvent::Frame { conn, msg_type, payload } => {
+                        if outstanding[conn].is_empty() {
+                            crate::info!("worker {conn} sent an unsolicited frame; evicting it");
+                            self.mux.close(conn);
+                            continue;
+                        }
+                        let frame_len = super::frame::framed_len(payload.len());
+                        let verdict = match Msg::decode(msg_type, &payload) {
+                            Ok(Msg::Upload(up)) => self
+                                .accept_upload(
+                                    up,
+                                    round,
+                                    expected_p,
+                                    expected_mu,
+                                    &mut outstanding[conn],
+                                )
+                                .and_then(|(slot, received)| {
+                                    ingest
+                                        .resolve(slot, ClientResult::Upload(received))
+                                        .map_err(|e| e.to_string())?;
+                                    remaining -= 1;
+                                    Ok(())
+                                }),
+                            Ok(Msg::EdgeUpload(e)) => {
+                                // the edge blob is control traffic in
+                                // full; the ledger records the logical
+                                // member uploads instead (resolve_edge)
+                                TcpTransport::accept_edge(
+                                    self.edge[conn],
+                                    e,
+                                    round,
+                                    ingest,
+                                    &mut outstanding[conn],
+                                )
+                                .map(|n| {
+                                    self.control_bytes += frame_len;
+                                    remaining -= n;
+                                })
+                            }
+                            Ok(other) => {
+                                Err(format!("unexpected {} mid-round", other.kind()))
+                            }
+                            Err(e) => Err(format!("undecodable frame: {e}")),
+                        };
+                        match verdict {
+                            Ok(()) => self.mux.mark_active(conn),
+                            Err(reason) => {
+                                crate::info!(
+                                    "rejecting worker {conn} ({reason}); dropping {} clients",
+                                    outstanding[conn].len()
+                                );
+                                self.mux.close(conn);
+                                remaining -= drop_outstanding(
+                                    &mut outstanding[conn],
+                                    &mut dispatch[conn],
+                                    ingest,
+                                )?;
+                            }
+                        }
+                    }
+                }
+            }
+
+            // --- round timeout: a silent connection is a straggler cut ----
+            if let Some(t) = self.timeout {
+                for j in 0..self.workers {
+                    if !outstanding[j].is_empty()
+                        && self.mux.is_open(j)
+                        && self.mux.idle_for(j) > t
+                    {
+                        crate::info!(
+                            "worker {j} timed out with {} uploads pending",
+                            outstanding[j].len()
+                        );
+                        for &slot in outstanding[j].values() {
+                            ingest.resolve(slot, ClientResult::TimedOut { elapsed_s: timeout_s })?;
+                        }
+                        remaining -= outstanding[j].len();
+                        outstanding[j].clear();
+                        dispatch[j].clear();
+                        self.mux.close(j);
+                    }
+                }
+            }
+
+            // --- done when everything is resolved and flushed -------------
+            if remaining == 0 {
+                let flushed = (0..self.workers).all(|j| {
+                    !self.mux.is_open(j)
+                        || (self.mux.outbox_len(j) == 0 && (!had_work[j] || closed[j]))
                 });
+                if flushed {
+                    break;
+                }
+            }
+            if !progress {
+                std::thread::sleep(Duration::from_micros(500));
             }
         }
-        Ok(results
-            .into_iter()
-            .map(|r| r.expect("every participant resolved"))
-            .collect())
+        Ok(())
     }
 
     fn shutdown(&mut self) -> Result<()> {
-        for conn in &mut self.conns {
-            if conn.alive {
-                if let Ok(n) = Msg::Shutdown.write_to(&mut &conn.stream) {
-                    self.control_bytes += n;
-                }
-                conn.alive = false;
+        for j in 0..self.workers {
+            let sent = match self.mux.blocking_stream(j) {
+                Some(stream) => Msg::Shutdown.write_to(stream).ok(),
+                None => None,
+            };
+            if let Some(n) = sent {
+                self.control_bytes += n;
             }
+            self.mux.close(j);
         }
         Ok(())
     }

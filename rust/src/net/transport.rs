@@ -5,7 +5,11 @@
 //! stays the owner of selection, fault fates, the ledger, the sim
 //! deadline clock, events, and aggregation; a transport only answers
 //! one question per round — *given this dispatch, what did each
-//! participant send back?* Two backends:
+//! participant send back?* Results stream into the round's
+//! [`RoundIngest`]: the transport resolves each participant slot as
+//! its outcome is known (any arrival order), and the ingest folds
+//! surviving uploads into the strategy's aggregate immediately, so
+//! coordinator memory stays constant in fleet size. Two backends:
 //!
 //! * [`InProcess`] (default) — trains and encodes in this process,
 //!   exactly as the pre-transport coordinator did: engine-bound
@@ -30,7 +34,7 @@ use crate::client::trainer::{train_local, ClientOutcome};
 use crate::clustering::CentroidState;
 use crate::config::FedConfig;
 use crate::coordinator::events::DropPhase;
-use crate::coordinator::server::{client_stream, FederatedData};
+use crate::coordinator::server::{client_stream, FederatedData, RoundIngest};
 use crate::coordinator::strategy::{ClientTrainOpts, FedStrategy, RoundContext, UploadInput};
 use crate::runtime::Engine;
 use crate::sim::ClientFate;
@@ -116,17 +120,19 @@ pub trait Transport {
     fn kind(&self) -> TransportKind;
 
     /// Execute one round: deliver the dispatch to every healthy
-    /// participant, run their local updates, and return one result per
-    /// participant in the same order. Sim-fated drops must be returned
-    /// as `Dropped` without training (their work would be discarded;
-    /// every client owns an independent RNG fork, so skipping perturbs
-    /// nothing).
+    /// participant, run their local updates, and resolve every
+    /// participant slot on `ingest` exactly once — in any arrival
+    /// order; the ingest canonicalizes. Sim-fated drops must be
+    /// resolved as `Dropped` without training (their work would be
+    /// discarded; every client owns an independent RNG fork, so
+    /// skipping perturbs nothing).
     fn run_round(
         &mut self,
         env: &RoundEnv<'_>,
         strategy: &dyn FedStrategy,
         spec: &RoundSpec<'_>,
-    ) -> Result<Vec<ClientResult>>;
+        ingest: &mut RoundIngest<'_>,
+    ) -> Result<()>;
 
     /// Release transport resources (TCP: send `Shutdown` to workers).
     fn shutdown(&mut self) -> Result<()> {
@@ -160,7 +166,8 @@ impl Transport for InProcess {
         env: &RoundEnv<'_>,
         strategy: &dyn FedStrategy,
         spec: &RoundSpec<'_>,
-    ) -> Result<Vec<ClientResult>> {
+        ingest: &mut RoundIngest<'_>,
+    ) -> Result<()> {
         let cfg = env.cfg;
         let ctx = RoundContext {
             round: spec.round,
@@ -171,8 +178,6 @@ impl Transport for InProcess {
         };
 
         // --- client updates (engine-bound, coordinator thread) ------------
-        let mut results: Vec<Option<ClientResult>> =
-            spec.participants.iter().map(|_| None).collect();
         let mut trained = Vec::with_capacity(spec.participants.len());
         for (slot, part) in spec.participants.iter().enumerate() {
             let phase = match part.fate {
@@ -181,7 +186,7 @@ impl Transport for InProcess {
                 ClientFate::DropBeforeUpload => Some(DropPhase::BeforeUpload),
             };
             if let Some(phase) = phase {
-                results[slot] = Some(ClientResult::Dropped(phase));
+                ingest.resolve(slot, ClientResult::Dropped(phase))?;
                 continue;
             }
             let k = part.client;
@@ -226,19 +231,19 @@ impl Transport for InProcess {
             })
         };
 
+        // slot order here is already canonical, so the streaming fold
+        // never needs to park an in-process upload
         for (t, blob) in trained.into_iter().zip(blobs) {
-            results[t.slot] = Some(ClientResult::Upload(Box::new(ReceivedUpload {
+            let up = ReceivedUpload {
                 client: t.client,
                 blob: blob?,
                 mu: t.outcome.mu,
                 score: t.outcome.score,
                 n: t.outcome.n,
                 mean_ce: t.outcome.mean_ce,
-            })));
+            };
+            ingest.resolve(t.slot, ClientResult::Upload(Box::new(up)))?;
         }
-        Ok(results
-            .into_iter()
-            .map(|r| r.expect("every participant resolved"))
-            .collect())
+        Ok(())
     }
 }

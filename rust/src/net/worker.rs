@@ -8,8 +8,13 @@
 //! and metrics match the in-process run exactly.
 //!
 //! Round loop: `RoundOpen` (centroid table + train flags), then one
-//! `Download` per owned selected client — each answered with an
-//! `Upload` before the next `Download` is read — then `RoundClose`.
+//! `Download` per owned selected client, then `RoundClose`. A leaf
+//! worker answers every `Download` with an `Upload`; an edge
+//! aggregator (`--edge-of N`) instead folds its sub-fleet's updates
+//! locally — applying the same pure simulated deadline clock the
+//! coordinator uses, so both tiers always agree on who was cut — and
+//! answers the whole round with a single `EdgeUpload`: the
+//! sample-weighted partial FedAvg plus per-member sidecars.
 //! `Shutdown` (or a clean EOF in its place) ends the process.
 
 use std::net::TcpStream;
@@ -19,17 +24,25 @@ use std::time::{Duration, Instant};
 use anyhow::{bail, Context, Result};
 
 use crate::baselines::registry::StrategyRegistry;
-use crate::client::trainer::train_local;
+use crate::baselines::wire::WireBlob;
+use crate::client::trainer::{train_local, ClientOutcome};
 use crate::clustering::CentroidState;
 use crate::codec::{CodecCache, CodecRegistry};
 use crate::config::FedConfig;
-use crate::coordinator::server::{build_data, client_stream, run_rng, FederatedData};
-use crate::coordinator::strategy::{FedStrategy, RoundContext, UploadInput};
+use crate::coordinator::accumulate::{AggError, AggFold, FedAvgFold};
+use crate::coordinator::server::{
+    build_data, client_stream, run_rng, FederatedData, TRAIN_FLOPS_FACTOR,
+};
+use crate::coordinator::strategy::{ClientUpdate, FedStrategy, RoundContext, UploadInput};
 use crate::info;
+use crate::models::flops::total_flops;
 use crate::runtime::Engine;
+use crate::sim::FleetSim;
 use crate::util::rng::Rng;
 
-use super::proto::{Download, Hello, Msg, RoundOpen, Upload};
+use super::proto::{
+    Download, EdgeCutWire, EdgeMemberWire, EdgeUpload, Hello, Msg, RoundOpen, Upload,
+};
 use super::{ProtoError, PROTO_VERSION};
 
 /// Connect with retry so `worker` can be launched before `serve`.
@@ -54,7 +67,7 @@ fn connect(addr: &str, patience: Duration) -> Result<TcpStream> {
 /// dispatches against the built-in codec registry; embedders with
 /// custom codecs use [`run_worker_with_codecs`].
 pub fn run_worker(addr: &str, artifacts: &Path) -> Result<usize> {
-    run_worker_with_codecs(addr, artifacts, CodecRegistry::builtin())
+    run_worker_opts(addr, artifacts, CodecRegistry::builtin(), 0)
 }
 
 /// [`run_worker`] with a caller-supplied codec registry, so custom
@@ -64,11 +77,25 @@ pub fn run_worker_with_codecs(
     artifacts: &Path,
     codecs: CodecRegistry,
 ) -> Result<usize> {
+    run_worker_opts(addr, artifacts, codecs, 0)
+}
+
+/// The full-control worker entry point. `edge_of = 0` is a leaf worker
+/// (one `Upload` per client); `edge_of = N > 0` announces an edge
+/// aggregator that locally folds a sub-fleet of up to `N` clients per
+/// round and ships one pre-aggregated `EdgeUpload` upstream.
+pub fn run_worker_opts(
+    addr: &str,
+    artifacts: &Path,
+    codecs: CodecRegistry,
+    edge_of: usize,
+) -> Result<usize> {
     let codecs = CodecCache::new(codecs);
     let stream = connect(addr, Duration::from_secs(10))?;
     stream.set_nodelay(true).ok();
     Msg::Hello(Hello {
         proto_version: PROTO_VERSION,
+        edge_of: edge_of as u32,
     })
     .write_to(&mut &stream)?;
     let ack = match Msg::read_from(&mut &stream)? {
@@ -78,8 +105,15 @@ pub fn run_worker_with_codecs(
     let cfg = *ack.cfg;
     cfg.validate().context("coordinator sent an invalid config")?;
     let owned: Vec<usize> = ack.clients.iter().map(|&c| c as usize).collect();
+    if edge_of > 0 {
+        anyhow::ensure!(
+            owned.len() <= edge_of,
+            "coordinator granted {} clients, over this worker's --edge-of {edge_of} capacity",
+            owned.len()
+        );
+    }
     info!(
-        "worker {}/{}: strategy={} dataset={} clients={owned:?}",
+        "worker {}/{}: strategy={} dataset={} edge_of={edge_of} clients={owned:?}",
         ack.worker, ack.workers, ack.strategy, cfg.dataset
     );
 
@@ -88,22 +122,39 @@ pub fn run_worker_with_codecs(
     let engine = Engine::load(artifacts)?;
     let data = build_data(&engine, &cfg)?;
     let base = run_rng(&cfg);
+    // an edge aggregator re-derives the coordinator's simulated
+    // deadline clock from the config image: `FaultSchedule::fate` and
+    // `client_time_s` are pure in (round, client), so both tiers reach
+    // the same cut verdicts without exchanging any clock state
+    let edge_sim = if edge_of > 0 {
+        let spec = &engine.manifest.dataset(&cfg.dataset)?.spec;
+        Some(FleetSim::new(
+            &cfg.fleet,
+            cfg.clients,
+            cfg.seed,
+            TRAIN_FLOPS_FACTOR * total_flops(spec) as f64,
+        ))
+    } else {
+        None
+    };
 
     let mut uploads = 0usize;
     loop {
         match Msg::read_from(&mut &stream) {
             Ok(Msg::RoundOpen(open)) => {
-                uploads += serve_round(
-                    &stream,
-                    &open,
-                    &engine,
-                    &cfg,
-                    &data,
-                    strategy.as_ref(),
-                    &base,
-                    &owned,
-                    &codecs,
-                )?;
+                let env = ServeEnv {
+                    engine: &engine,
+                    cfg: &cfg,
+                    data: &data,
+                    strategy: strategy.as_ref(),
+                    base: &base,
+                    owned: &owned,
+                    codecs: &codecs,
+                };
+                uploads += match &edge_sim {
+                    None => serve_round(&stream, &open, &env)?,
+                    Some(sim) => serve_round_edge(&stream, &open, &env, sim)?,
+                };
             }
             Ok(Msg::RoundClose { .. }) => continue,
             Ok(Msg::Shutdown) => break,
@@ -121,82 +172,102 @@ pub fn run_worker_with_codecs(
     Ok(uploads)
 }
 
-/// Handle one `RoundOpen`: `n_downloads` train/encode/upload cycles.
-#[allow(clippy::too_many_arguments)]
-fn serve_round(
-    stream: &TcpStream,
-    open: &RoundOpen,
-    engine: &Engine,
-    cfg: &FedConfig,
-    data: &FederatedData,
-    strategy: &dyn FedStrategy,
-    base: &Rng,
-    owned: &[usize],
-    codecs: &CodecCache,
-) -> Result<usize> {
-    let round = open.round as usize;
-    // the server centroid table: mask rebuilt from the active count
-    // (the prefix invariant the checkpoint format also relies on)
+/// The per-round context a worker serves from — everything rebuilt at
+/// handshake, bundled so the round loops stay readable.
+struct ServeEnv<'a> {
+    engine: &'a Engine,
+    cfg: &'a FedConfig,
+    data: &'a FederatedData,
+    strategy: &'a dyn FedStrategy,
+    base: &'a Rng,
+    owned: &'a [usize],
+    codecs: &'a CodecCache,
+}
+
+/// Rebuild the server centroid table from a `RoundOpen`: mask rebuilt
+/// from the active count (the prefix invariant the checkpoint format
+/// also relies on).
+fn open_centroids(open: &RoundOpen) -> CentroidState {
     let c_max = open.mu.len();
     let mut mask = vec![0.0f32; c_max];
     for m in mask.iter_mut().take(open.active as usize) {
         *m = 1.0;
     }
-    let centroids = CentroidState {
+    CentroidState {
         mu: open.mu.clone(),
         mask,
         c_max,
         active: open.active as usize,
+    }
+}
+
+/// Read one `Download`, train its client, and encode the upload blob —
+/// the per-client work both the leaf and edge paths share.
+fn train_download(
+    stream: &TcpStream,
+    open: &RoundOpen,
+    env: &ServeEnv<'_>,
+    centroids: &CentroidState,
+    ctx: &RoundContext<'_>,
+) -> Result<(usize, Download, ClientOutcome, WireBlob)> {
+    let round = open.round as usize;
+    let dl: Download = match Msg::read_from(&mut &*stream)? {
+        Msg::Download(d) => d,
+        other => bail!("expected Download in round {round}, got {}", other.kind()),
     };
+    anyhow::ensure!(
+        dl.round as usize == round,
+        "download for round {} inside round {round}",
+        dl.round
+    );
+    let k = dl.client as usize;
+    anyhow::ensure!(
+        env.owned.contains(&k),
+        "download for client {k} this worker does not own"
+    );
+    let theta = super::proto::decode_blob(env.codecs, &dl.spec, &dl.payload)?;
+
+    let mut client_rng = env.base.fork(client_stream(round, env.cfg.clients, k));
+    let outcome = train_local(
+        env.engine,
+        env.cfg,
+        &env.data.labeled[k],
+        &env.data.unlabeled[k],
+        &theta,
+        centroids,
+        open.weight_clustering,
+        &mut client_rng,
+    )?;
+    // the client's learned centroids ride along for the snap
+    let mut client_cents = centroids.clone();
+    client_cents.mu.clone_from(&outcome.mu);
+    let blob = env.strategy.encode_upload(
+        ctx,
+        &UploadInput {
+            client: k,
+            theta: &outcome.theta,
+            centroids: &client_cents,
+        },
+        &mut client_rng,
+    )?;
+    blob.ensure_payload()?;
+    Ok((k, dl, outcome, blob))
+}
+
+/// Leaf round: `n_downloads` train/encode/upload cycles.
+fn serve_round(stream: &TcpStream, open: &RoundOpen, env: &ServeEnv<'_>) -> Result<usize> {
+    let round = open.round as usize;
+    let centroids = open_centroids(open);
     let ctx = RoundContext {
         round,
-        cfg,
-        base,
+        cfg: env.cfg,
+        base: env.base,
         compressing: open.compressing,
         down_compressed: open.down_compressed,
     };
 
     for _ in 0..open.n_downloads {
-        let dl: Download = match Msg::read_from(&mut &*stream)? {
-            Msg::Download(d) => d,
-            other => bail!("expected Download in round {round}, got {}", other.kind()),
-        };
-        anyhow::ensure!(
-            dl.round as usize == round,
-            "download for round {} inside round {round}",
-            dl.round
-        );
-        let k = dl.client as usize;
-        anyhow::ensure!(
-            owned.contains(&k),
-            "download for client {k} this worker does not own"
-        );
-        let theta = super::proto::decode_blob(codecs, &dl.spec, &dl.payload)?;
-
-        let mut client_rng = base.fork(client_stream(round, cfg.clients, k));
-        let outcome = train_local(
-            engine,
-            cfg,
-            &data.labeled[k],
-            &data.unlabeled[k],
-            &theta,
-            &centroids,
-            open.weight_clustering,
-            &mut client_rng,
-        )?;
-        // the client's learned centroids ride along for the snap
-        let mut client_cents = centroids.clone();
-        client_cents.mu.clone_from(&outcome.mu);
-        let blob = strategy.encode_upload(
-            &ctx,
-            &UploadInput {
-                client: k,
-                theta: &outcome.theta,
-                centroids: &client_cents,
-            },
-            &mut client_rng,
-        )?;
-        blob.ensure_payload()?;
+        let (k, _dl, outcome, blob) = train_download(stream, open, env, &centroids, &ctx)?;
         // zero-copy send: sidecars as the head, the encoded blob as the
         // streamed tail. Any codec the coordinator's registry resolves
         // crosses — the Opaque in-process-only carve-out is gone.
@@ -217,4 +288,105 @@ fn serve_round(
     }
     info!("worker: round {round} served {} clients", open.n_downloads);
     Ok(open.n_downloads as usize)
+}
+
+/// Edge round: train every sub-fleet member, apply the simulated
+/// deadline locally, fold the survivors into one sample-weighted
+/// partial FedAvg, and ship a single `EdgeUpload` upstream. Cut
+/// members are reported with the upload bytes they *would* have sent,
+/// so the coordinator re-derives the identical verdict from its own
+/// clock and keeps its ledger flat-fleet-comparable.
+fn serve_round_edge(
+    stream: &TcpStream,
+    open: &RoundOpen,
+    env: &ServeEnv<'_>,
+    sim: &FleetSim,
+) -> Result<usize> {
+    let round = open.round as usize;
+    let centroids = open_centroids(open);
+    let ctx = RoundContext {
+        round,
+        cfg: env.cfg,
+        base: env.base,
+        compressing: open.compressing,
+        down_compressed: open.down_compressed,
+    };
+
+    let mut fold: Box<dyn AggFold> = Box::new(FedAvgFold::new());
+    let mut members: Vec<EdgeMemberWire> = Vec::new();
+    let mut cut: Vec<EdgeCutWire> = Vec::new();
+    let mut params = 0usize;
+    for _ in 0..open.n_downloads {
+        let (k, dl, outcome, blob) = train_download(stream, open, env, &centroids, &ctx)?;
+        params = blob.theta.len();
+        // the same pure clock the coordinator runs: down is the shared
+        // dispatch payload, up is what this member's upload would cost
+        let sim_s = sim.client_time_s(
+            k,
+            dl.payload.len(),
+            blob.bytes,
+            env.data.labeled[k].len(),
+            env.cfg.local_epochs,
+            sim.fate(round, k).slowdown(),
+        );
+        if sim.clock().over_deadline(sim_s) {
+            cut.push(EdgeCutWire {
+                client: k as u32,
+                up_bytes: blob.bytes as u64,
+            });
+            continue;
+        }
+        fold.fold(&ClientUpdate {
+            client: k,
+            theta: blob.theta,
+            mu: outcome.mu,
+            score: outcome.score,
+            n: outcome.n,
+        })
+        .map_err(|e| anyhow::anyhow!("edge fold: {e}"))?;
+        members.push(EdgeMemberWire {
+            client: k as u32,
+            n: outcome.n as u32,
+            up_bytes: blob.bytes as u64,
+            score: outcome.score,
+            mean_ce: outcome.mean_ce,
+        });
+    }
+
+    let (total_n, score, mu, payload) = if members.is_empty() {
+        // every member cut: the coordinator only needs the cut report
+        (0u64, 0.0f64, Vec::new(), Vec::new())
+    } else {
+        match fold.finish() {
+            Ok(agg) => {
+                let payload: Vec<u8> = agg.theta.iter().flat_map(|v| v.to_le_bytes()).collect();
+                (agg.total_n as u64, agg.score, agg.mu, payload)
+            }
+            // surviving members with zero total sample weight: ship a
+            // zero vector with zero weight — it folds to nothing
+            Err(AggError::ZeroWeight) => (
+                0u64,
+                0.0f64,
+                vec![0.0f32; open.mu.len()],
+                vec![0u8; 4 * params],
+            ),
+            Err(e) => bail!("edge fold finish: {e}"),
+        }
+    };
+    let survived = members.len();
+    Msg::EdgeUpload(EdgeUpload {
+        round: round as u32,
+        total_n,
+        score,
+        members,
+        cut,
+        mu,
+        payload,
+    })
+    .write_to(&mut &*stream)?;
+    info!(
+        "worker: round {round} edge-folded {survived}/{} clients",
+        open.n_downloads
+    );
+    Ok(usize::from(open.n_downloads > 0))
 }

@@ -1,0 +1,174 @@
+//! The streaming-fold determinism contract, as a property test: for
+//! every registered strategy, folding a round's uploads through
+//! [`StreamAccumulator`] produces a bit-identical `AggOutput` under
+//! EVERY arrival order — identity, reversed, and a battery of seeded
+//! shuffles — because the accumulator parks out-of-order uploads and
+//! folds strictly in canonical (client-id-sorted) slot order. No
+//! engine needed: updates are synthetic vectors.
+
+use fedcompress::baselines::registry::StrategyRegistry;
+use fedcompress::config::FedConfig;
+use fedcompress::coordinator::accumulate::{AggFold, AggOutput, FedAvgFold, StreamAccumulator};
+use fedcompress::coordinator::aggregate::{fedavg, weighted_mean};
+use fedcompress::coordinator::server::run_rng;
+use fedcompress::coordinator::strategy::{ClientUpdate, RoundContext};
+use fedcompress::util::rng::Rng;
+
+const PARAMS: usize = 97;
+const C_MAX: usize = 8;
+const SLOTS: usize = 13;
+
+/// One synthetic round: per-slot either an upload (Some) or a loss
+/// (None). Client ids are the slot indices — already canonical.
+fn round_updates() -> Vec<Option<ClientUpdate>> {
+    let mut rng = Rng::new(0xACC);
+    (0..SLOTS)
+        .map(|slot| {
+            // slots 3 and 9 are losses (dropout / deadline / eviction)
+            if slot == 3 || slot == 9 {
+                return None;
+            }
+            Some(ClientUpdate {
+                client: slot,
+                theta: (0..PARAMS).map(|_| rng.normal()).collect(),
+                mu: (0..C_MAX).map(|_| rng.normal()).collect(),
+                score: rng.f64(),
+                n: 5 + rng.below(60),
+            })
+        })
+        .collect()
+}
+
+/// Arrival orders: identity, reversed, and seeded shuffles.
+fn arrival_orders() -> Vec<Vec<usize>> {
+    let mut orders = vec![
+        (0..SLOTS).collect::<Vec<_>>(),
+        (0..SLOTS).rev().collect::<Vec<_>>(),
+    ];
+    for seed in 0..40u64 {
+        let mut order: Vec<usize> = (0..SLOTS).collect();
+        Rng::new(seed).shuffle(&mut order);
+        orders.push(order);
+    }
+    orders
+}
+
+/// Drive one accumulator over the round in the given arrival order.
+fn stream_in_order(
+    fold: Box<dyn AggFold>,
+    updates: &[Option<ClientUpdate>],
+    order: &[usize],
+) -> AggOutput {
+    let mut acc = StreamAccumulator::new(fold, updates.len());
+    for &slot in order {
+        match &updates[slot] {
+            Some(up) => acc.resolve_upload(slot, up.clone()).unwrap(),
+            None => acc.resolve_lost(slot).unwrap(),
+        }
+    }
+    acc.finish().unwrap()
+}
+
+fn assert_bit_identical(a: &AggOutput, b: &AggOutput, what: &str) {
+    assert_eq!(a.theta.len(), b.theta.len(), "{what}: theta length");
+    for (i, (x, y)) in a.theta.iter().zip(&b.theta).enumerate() {
+        assert_eq!(x.to_bits(), y.to_bits(), "{what}: theta[{i}]");
+    }
+    assert_eq!(a.mu.len(), b.mu.len(), "{what}: mu length");
+    for (i, (x, y)) in a.mu.iter().zip(&b.mu).enumerate() {
+        assert_eq!(x.to_bits(), y.to_bits(), "{what}: mu[{i}]");
+    }
+    assert_eq!(a.score.to_bits(), b.score.to_bits(), "{what}: score");
+    assert_eq!(a.clients, b.clients, "{what}: clients");
+    assert_eq!(a.total_n, b.total_n, "{what}: total_n");
+}
+
+/// The headline property, against the buffered reference: streaming
+/// FedAvg == `fedavg`/`weighted_mean` over the survivor set,
+/// bit-for-bit, for every arrival order.
+#[test]
+fn streaming_fedavg_matches_buffered_fedavg_under_every_arrival_order() {
+    let updates = round_updates();
+    let survivors: Vec<&ClientUpdate> = updates.iter().flatten().collect();
+    let thetas: Vec<Vec<f32>> = survivors.iter().map(|u| u.theta.clone()).collect();
+    let mus: Vec<Vec<f32>> = survivors.iter().map(|u| u.mu.clone()).collect();
+    let ns: Vec<usize> = survivors.iter().map(|u| u.n).collect();
+    let scores: Vec<f64> = survivors.iter().map(|u| u.score).collect();
+    let buffered_theta = fedavg(&thetas, &ns).unwrap();
+    let buffered_mu = fedavg(&mus, &ns).unwrap();
+    let buffered_score = weighted_mean(&scores, &ns).unwrap();
+
+    for order in arrival_orders() {
+        let out = stream_in_order(Box::new(FedAvgFold::new()), &updates, &order);
+        assert_eq!(out.clients, survivors.len());
+        assert_eq!(out.total_n, ns.iter().sum::<usize>());
+        for (i, (x, y)) in out.theta.iter().zip(&buffered_theta).enumerate() {
+            assert_eq!(x.to_bits(), y.to_bits(), "theta[{i}] under {order:?}");
+        }
+        for (i, (x, y)) in out.mu.iter().zip(&buffered_mu).enumerate() {
+            assert_eq!(x.to_bits(), y.to_bits(), "mu[{i}] under {order:?}");
+        }
+        assert_eq!(out.score.to_bits(), buffered_score.to_bits(), "under {order:?}");
+    }
+}
+
+/// Every registered strategy's fold — whatever reduction it implements
+/// — is arrival-order-invariant through the accumulator: shuffled
+/// arrival bit-matches canonical arrival.
+#[test]
+fn every_strategy_fold_is_arrival_order_invariant() {
+    let cfg = FedConfig::quick("cifar10");
+    let base = run_rng(&cfg);
+    let ctx = RoundContext {
+        round: 2,
+        cfg: &cfg,
+        base: &base,
+        compressing: true,
+        down_compressed: true,
+    };
+    let updates = round_updates();
+    let canonical: Vec<usize> = (0..SLOTS).collect();
+
+    for name in StrategyRegistry::builtin().names() {
+        let strategy = StrategyRegistry::builtin().build(name, &cfg).unwrap();
+        let reference = stream_in_order(strategy.make_fold(&ctx), &updates, &canonical);
+        for order in arrival_orders() {
+            let out = stream_in_order(strategy.make_fold(&ctx), &updates, &order);
+            assert_bit_identical(&out, &reference, &format!("{name} under {order:?}"));
+        }
+    }
+}
+
+/// The reorder window: canonical arrival never parks; fully reversed
+/// arrival parks everything but the last slot.
+#[test]
+fn peak_parked_tracks_the_reorder_window() {
+    let updates = round_updates();
+
+    let mut acc = StreamAccumulator::new(Box::new(FedAvgFold::new()), updates.len());
+    for slot in 0..SLOTS {
+        match &updates[slot] {
+            Some(up) => acc.resolve_upload(slot, up.clone()).unwrap(),
+            None => acc.resolve_lost(slot).unwrap(),
+        }
+    }
+    assert_eq!(acc.peak_parked(), 0, "in-order arrival must not park");
+    acc.finish().unwrap();
+
+    let mut acc = StreamAccumulator::new(Box::new(FedAvgFold::new()), updates.len());
+    for slot in (0..SLOTS).rev() {
+        match &updates[slot] {
+            Some(up) => acc.resolve_upload(slot, up.clone()).unwrap(),
+            None => acc.resolve_lost(slot).unwrap(),
+        }
+    }
+    // every upload after slot 0 is held until slot 0 lands (losses
+    // are marked, not parked — they carry no payload)
+    let late_uploads = updates[1..].iter().flatten().count();
+    assert_eq!(
+        acc.peak_parked(),
+        late_uploads,
+        "reversed arrival parks every later upload until slot 0 lands"
+    );
+    acc.finish().unwrap();
+}

@@ -183,7 +183,7 @@ fn fedavg_of_quantized_models_stays_in_codebook_hull() {
             q
         })
         .collect();
-    let agg = fedavg(&clients, &[1, 2, 3, 4, 5]);
+    let agg = fedavg(&clients, &[1, 2, 3, 4, 5]).unwrap();
     let lo = cb.first().unwrap();
     let hi = cb.last().unwrap();
     for v in &agg {

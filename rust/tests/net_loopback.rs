@@ -15,7 +15,7 @@ use fedcompress::config::FedConfig;
 use fedcompress::coordinator::checkpoint::Checkpoint;
 use fedcompress::coordinator::server::{build_data, run_federated_with_data};
 use fedcompress::coordinator::{run_with_strategy_opts, RunResult};
-use fedcompress::net::proto::{Hello, Msg};
+use fedcompress::net::proto::{Hello, Msg, Upload};
 use fedcompress::net::{worker, InProcess, TcpServer, Transport, PROTO_VERSION};
 use fedcompress::runtime::artifacts::default_dir;
 use fedcompress::runtime::Engine;
@@ -196,6 +196,7 @@ fn silent_worker_is_cut_by_the_timeout() {
         let stream = TcpStream::connect(addr).unwrap();
         Msg::Hello(Hello {
             proto_version: PROTO_VERSION,
+            edge_of: 0,
         })
         .write_to(&mut &stream)
         .unwrap();
@@ -223,9 +224,9 @@ fn silent_worker_is_cut_by_the_timeout() {
     drop(transport);
     h.join().unwrap();
 
-    // round 0: every client cut by the timeout (Event::Deadline); the
-    // stream is unsynchronized after that, so the worker is evicted
-    // and round 1's clients are transport dropouts (Event::Dropout)
+    // round 0: every client cut by the inactivity timeout
+    // (Event::Deadline), which also evicts the connection, so round
+    // 1's clients are transport dropouts (Event::Dropout)
     assert_eq!(result.events.of_kind("deadline").count(), cfg.clients);
     assert_eq!(result.events.of_kind("dropout").count(), cfg.clients);
     assert_eq!(result.ledger.bytes_in(Direction::Up), 0);
@@ -234,6 +235,94 @@ fn silent_worker_is_cut_by_the_timeout() {
         assert_eq!(m.up_bytes, 0);
         // no survivors -> the evaluated model never changes
         assert_eq!(m.accuracy, result.rounds[0].accuracy);
+    }
+}
+
+/// A hostile peer that handshakes correctly and then ships a ragged
+/// upload (wrong parameter count) is evicted — its clients surface as
+/// `Event::Dropout` — while the honest worker's round completes and
+/// the run finishes with survivors every round. The coordinator never
+/// panics and never aborts the run.
+#[test]
+fn ragged_upload_evicts_the_connection_and_the_round_survives() {
+    let Some(engine) = engine() else { return };
+    let mut cfg = tiny_cfg("cifar10");
+    cfg.rounds = 2;
+    // 4 clients over 2 workers: each connection owns exactly 2, so the
+    // assertions hold whichever handshake order the threads win
+    cfg.clients = 4;
+    cfg.validate().unwrap();
+    let data = build_data(&engine, &cfg).unwrap();
+
+    let server = TcpServer::bind("127.0.0.1:0", 2, &cfg, "fedavg", None).unwrap();
+    let addr = server.local_addr().unwrap();
+    let addr_s = addr.to_string();
+    // an honest worker for one connection...
+    let honest = thread::spawn(move || worker::run_worker(&addr_s, &default_dir()));
+    // ...and a protocol-correct but content-hostile peer for the other
+    let hostile = thread::spawn(move || {
+        let stream = TcpStream::connect(addr).unwrap();
+        Msg::Hello(Hello {
+            proto_version: PROTO_VERSION,
+            edge_of: 0,
+        })
+        .write_to(&mut &stream)
+        .unwrap();
+        let Msg::HelloAck(_) = Msg::read_from(&mut &stream).unwrap() else {
+            panic!("no ack")
+        };
+        let mut c_max = 0usize;
+        loop {
+            match Msg::read_from(&mut &stream) {
+                Ok(Msg::RoundOpen(open)) => c_max = open.mu.len(),
+                Ok(Msg::Download(d)) => {
+                    // well-formed frame, well-formed message, ragged
+                    // payload: 2 params where the model has thousands
+                    let bad = Msg::Upload(Upload {
+                        round: d.round,
+                        client: d.client,
+                        score: 0.5,
+                        n: 7,
+                        mean_ce: 0.1,
+                        mu: vec![0.0; c_max],
+                        stages: Vec::new(),
+                        spec: "raw".into(),
+                        payload: vec![0u8; 8],
+                    });
+                    if bad.write_to(&mut &stream).is_err() {
+                        break;
+                    }
+                }
+                Ok(_) => continue,
+                Err(_) => break,
+            }
+        }
+    });
+
+    let mut transport = server.accept_workers().unwrap();
+    let mut plugin = StrategyRegistry::builtin().build("fedavg", &cfg).unwrap();
+    let result = run_with_strategy_opts(
+        &engine,
+        &cfg,
+        plugin.as_mut(),
+        &data,
+        &mut transport,
+        None,
+    )
+    .unwrap();
+    assert_eq!(transport.alive_workers(), 1, "only the hostile peer was evicted");
+    transport.shutdown().unwrap();
+    drop(transport);
+    honest.join().unwrap().unwrap();
+    hostile.join().unwrap();
+
+    // the hostile connection's 2 clients drop every round (evicted in
+    // round 0, dead connection afterwards); the honest 2 survive
+    assert_eq!(result.events.of_kind("dropout").count(), 2 * cfg.rounds);
+    assert_eq!(result.events.of_kind("deadline").count(), 0);
+    for m in &result.rounds {
+        assert_eq!(m.dropped, 2, "round {}", m.round);
+        assert!(m.up_bytes > 0, "round {} should have survivors", m.round);
     }
 }
 

@@ -1,0 +1,183 @@
+//! Mux-layer behaviour over real localhost sockets: the readiness
+//! loop round-trips frames across many connections, surfaces a dead
+//! peer as `MuxEvent::Closed` without touching its neighbours, and
+//! the accept path's handshake timeout drops a silent connector
+//! instead of wedging `accept_workers` forever.
+
+use std::net::{TcpListener, TcpStream};
+use std::thread;
+use std::time::Duration;
+
+use fedcompress::config::FedConfig;
+use fedcompress::net::frame::encode_frame;
+use fedcompress::net::proto::Hello;
+use fedcompress::net::{
+    read_frame, write_frame, Msg, Mux, MuxEvent, ProtoError, TcpServer, Transport, PROTO_VERSION,
+};
+
+/// Drive the mux until `done` says so, sleeping briefly on idle
+/// passes. Panics (instead of hanging CI) if the condition never
+/// lands.
+fn poll_until(
+    mux: &mut Mux,
+    events: &mut Vec<MuxEvent>,
+    mut done: impl FnMut(&Mux, &[MuxEvent]) -> bool,
+) {
+    for _ in 0..20_000 {
+        if done(mux, events) {
+            return;
+        }
+        if !mux.poll(events) {
+            thread::sleep(Duration::from_micros(200));
+        }
+    }
+    panic!("mux poll loop did not converge");
+}
+
+/// Frames written by independent peers come out of `poll` attributed
+/// to the right connection, and enqueued replies drain back out —
+/// the full readiness-loop round trip, no protocol layer involved.
+#[test]
+fn mux_round_trips_frames_across_connections() {
+    let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+    let addr = listener.local_addr().unwrap();
+
+    let peer = |ty: u8, body: Vec<u8>| {
+        thread::spawn(move || {
+            let stream = TcpStream::connect(addr).unwrap();
+            write_frame(&mut &stream, ty, &body).unwrap();
+            // read the echo (type bumped by one)
+            let (echo_ty, echo) = read_frame(&mut &stream).unwrap();
+            assert_eq!(echo_ty, ty + 1);
+            assert_eq!(echo, body);
+        })
+    };
+    let h1 = peer(10, vec![0xAB; 5_000]);
+    let h2 = peer(20, (0..255u8).collect());
+
+    let s1 = listener.accept().unwrap().0;
+    let s2 = listener.accept().unwrap().0;
+    let mut mux = Mux::new(vec![s1, s2]).unwrap();
+    assert_eq!(mux.len(), 2);
+
+    let mut events = Vec::new();
+    poll_until(&mut mux, &mut events, |_, ev| {
+        ev.iter()
+            .filter(|e| matches!(e, MuxEvent::Frame { .. }))
+            .count()
+            >= 2
+    });
+    for ev in &events {
+        match ev {
+            MuxEvent::Frame { conn, msg_type, payload } => {
+                // echo back with the type bumped, on the same conn
+                let reply = encode_frame(msg_type + 1, payload);
+                mux.enqueue(*conn, &reply);
+            }
+            MuxEvent::Closed { conn, error } => panic!("conn {conn} closed: {error}"),
+        }
+    }
+    let mut drained = Vec::new();
+    poll_until(&mut mux, &mut drained, |m, _| {
+        m.outbox_len(0) == 0 && m.outbox_len(1) == 0
+    });
+    h1.join().unwrap();
+    h2.join().unwrap();
+}
+
+/// A peer hanging up surfaces as exactly one `Closed` on its own
+/// connection; the surviving connection keeps exchanging frames.
+#[test]
+fn dead_peer_closes_its_connection_only() {
+    let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+    let addr = listener.local_addr().unwrap();
+
+    let dier = thread::spawn(move || {
+        drop(TcpStream::connect(addr).unwrap());
+    });
+    let survivor = thread::spawn(move || {
+        let mut stream = TcpStream::connect(addr).unwrap();
+        write_frame(&mut &stream, 7, b"still here").unwrap();
+        // stay connected until the mux hangs up, so only the dier's
+        // connection ever closes while the assertions run
+        let mut sink = Vec::new();
+        let _ = std::io::Read::read_to_end(&mut stream, &mut sink);
+    });
+    let s1 = listener.accept().unwrap().0;
+    let s2 = listener.accept().unwrap().0;
+    let mut mux = Mux::new(vec![s1, s2]).unwrap();
+
+    let mut events = Vec::new();
+    poll_until(&mut mux, &mut events, |_, ev| {
+        let closed = ev.iter().any(|e| matches!(e, MuxEvent::Closed { .. }));
+        let framed = ev
+            .iter()
+            .any(|e| matches!(e, MuxEvent::Frame { payload, .. } if payload == b"still here"));
+        closed && framed
+    });
+    let closed: Vec<usize> = events
+        .iter()
+        .filter_map(|e| match e {
+            MuxEvent::Closed { conn, error } => {
+                assert!(
+                    matches!(error, ProtoError::Truncated { .. } | ProtoError::Io(_)),
+                    "{error}"
+                );
+                Some(*conn)
+            }
+            _ => None,
+        })
+        .collect();
+    assert_eq!(closed.len(), 1, "exactly one connection died");
+    assert!(!mux.is_open(closed[0]));
+    assert!(mux.is_open(1 - closed[0]), "the survivor stays open");
+    mux.close(1 - closed[0]); // release the survivor
+    dier.join().unwrap();
+    survivor.join().unwrap();
+}
+
+/// A connector that never speaks cannot wedge `accept_workers`: the
+/// handshake timeout (config `handshake_timeout_s`, surfaced as
+/// `--handshake-timeout-s`) drops it and the listener keeps accepting
+/// until a real worker completes the grant.
+#[test]
+fn silent_connector_is_dropped_after_the_handshake_timeout() {
+    let mut cfg = FedConfig::quick("cifar10");
+    cfg.set("handshake_timeout_s", "0.3").unwrap();
+    let server = TcpServer::bind("127.0.0.1:0", 1, &cfg, "fedavg", None).unwrap();
+    let addr = server.local_addr().unwrap();
+
+    // connects, says nothing, waits to be hung up on
+    let silent = thread::spawn(move || {
+        let mut stream = TcpStream::connect(addr).unwrap();
+        let mut sink = Vec::new();
+        let _ = std::io::Read::read_to_end(&mut stream, &mut sink);
+        assert!(sink.is_empty(), "a silent peer earns no grant");
+    });
+    thread::sleep(Duration::from_millis(100)); // pin arrival order
+    let real = thread::spawn(move || {
+        let stream = TcpStream::connect(addr).unwrap();
+        Msg::Hello(Hello {
+            proto_version: PROTO_VERSION,
+            edge_of: 0,
+        })
+        .write_to(&mut &stream)
+        .unwrap();
+        let ack = match Msg::read_from(&mut &stream).unwrap() {
+            Msg::HelloAck(a) => a,
+            other => panic!("expected HelloAck, got {}", other.kind()),
+        };
+        assert_eq!(ack.worker, 0);
+        assert_eq!(ack.workers, 1);
+        match Msg::read_from(&mut &stream).unwrap() {
+            Msg::Shutdown => {}
+            other => panic!("expected Shutdown, got {}", other.kind()),
+        }
+    });
+
+    let mut transport = server.accept_workers().unwrap();
+    assert_eq!(transport.alive_workers(), 1);
+    transport.shutdown().unwrap();
+    silent.join().unwrap();
+    real.join().unwrap();
+}

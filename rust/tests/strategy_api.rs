@@ -291,7 +291,7 @@ fn reference_fedavg(
             ns.push(outcome.n);
             thetas.push(outcome.theta);
         }
-        theta = fedavg(&thetas, &ns);
+        theta = fedavg(&thetas, &ns).unwrap();
         let (acc, _) = evaluate(engine, &cfg.dataset, &data.test, &theta).unwrap();
         accs.push(acc);
     }
@@ -366,8 +366,8 @@ fn reference_fedzip(
             scores.push(outcome.score);
             thetas.push(quantized);
         }
-        let _ = weighted_mean(&scores, &ns);
-        theta = fedavg(&thetas, &ns);
+        let _ = weighted_mean(&scores, &ns).unwrap();
+        theta = fedavg(&thetas, &ns).unwrap();
         up_bytes.push(round_up);
         let (acc, _) = evaluate(engine, &cfg.dataset, &data.test, &theta).unwrap();
         accs.push(acc);
