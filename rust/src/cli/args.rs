@@ -15,7 +15,7 @@ pub struct Args {
     pub sets: Vec<(String, String)>,
     /// repeatable `--axis key=v1,v2` sweep-grid axes
     pub axes: Vec<(String, String)>,
-    /// free positional arguments (only `lint` accepts them: paths)
+    /// free positional arguments (`lint` paths, `runs tail` keys)
     pub positionals: Vec<String>,
 }
 
@@ -37,13 +37,14 @@ pub enum ParsedCommand {
 }
 
 /// Flags that take no value.
-const SWITCHES: [&str; 5] = ["verbose", "csv", "smoke", "force", "json"];
+const SWITCHES: [&str; 7] = ["verbose", "csv", "smoke", "force", "json", "watch", "follow"];
 
 /// Commands that take a subcommand positional (`runs list`, ...).
 const SUBCOMMAND_FAMILIES: [&str; 1] = ["runs"];
 
-/// Commands that accept free positional arguments (`lint src/net`).
-const POSITIONAL_COMMANDS: [&str; 1] = ["lint"];
+/// Commands that accept free positional arguments (`lint src/net`,
+/// `runs tail <key>`).
+const POSITIONAL_COMMANDS: [&str; 2] = ["lint", "runs"];
 
 impl Args {
     pub fn parse(argv: &[String]) -> Result<Args> {
@@ -243,6 +244,23 @@ mod tests {
         assert_eq!(a.flag("rule"), Some("det-map-iter"));
         // positionals stay rejected everywhere else
         assert!(Args::parse(&v(&["train", "src/net"])).is_err());
+    }
+
+    #[test]
+    fn runs_tail_takes_key_positional_and_follow_switch() {
+        let a = Args::parse(&v(&[
+            "runs", "tail", "a1b2c3d4e5f60718", "--store", "out", "--follow",
+        ]))
+        .unwrap();
+        assert_eq!(a.command().unwrap(), ParsedCommand::Runs);
+        assert_eq!(a.sub.as_deref(), Some("tail"));
+        assert_eq!(a.positionals, vec!["a1b2c3d4e5f60718"]);
+        assert_eq!(a.flag("store"), Some("out"));
+        assert_eq!(a.flag("follow"), Some("true"));
+        // --watch is a sweep switch, not a valued flag
+        let b = Args::parse(&v(&["sweep", "--watch", "--smoke"])).unwrap();
+        assert_eq!(b.flag("watch"), Some("true"));
+        assert_eq!(b.flag("smoke"), Some("true"));
     }
 
     #[test]

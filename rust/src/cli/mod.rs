@@ -31,6 +31,9 @@ COMMANDS:
     runs        query the run store:
                   runs list      one line per stored run
                   runs show      per-round metrics of one record
+                  runs tail      render a run's event stream as a live
+                                 view (--follow refreshes; works on the
+                                 teed stream or replayed from the record)
                   runs diff      bit-exact drift check of two records
                                  (or two whole stores via --other)
                   runs compare   grouped comparison table
@@ -93,7 +96,10 @@ FLEET SIMULATION (train, serve, fleet, figure2, ablate-c):
 RUN STORE (sweep, runs, table1, fleet, table2):
     --store <dir>           run store directory. sweep/runs/table2
                             default to ./runs; table1 and fleet only
-                            touch a store when the flag is given
+                            touch a store when the flag is given.
+                            train/serve: also tee a live event stream
+                            to <store>/events/<key>.jsonl and persist
+                            the finished run (tail it with runs tail)
     --strategies a,b        sweep: strategy axis (default: all registered)
     --fleets a,b            sweep: fleet preset axis ('all' = all three)
     --seeds 1,2,3           sweep: seed axis
@@ -109,7 +115,12 @@ RUN STORE (sweep, runs, table1, fleet, table2):
                             artifacts needed; exercises grid, store,
                             cache, and export end to end
     --force                 sweep: re-run jobs even when cached
-    --key <hex>             runs show: record key (unique prefix ok)
+    --watch                 sweep: live full-screen progress table
+                            instead of per-job lines
+    --key <hex>             runs show/tail: record key (unique prefix
+                            ok; tail also takes it as a positional)
+    --follow                runs tail: keep refreshing the view from
+                            the stream file until interrupted
     --a / --b <hex>         runs diff: the two records to compare
     --other <dir>           runs diff: compare all shared keys against
                             a second store
@@ -147,6 +158,9 @@ EXAMPLES:
     fedcompress sweep --spec grids/budget.sweep --store runs --jobs 8
     fedcompress runs list --store runs
     fedcompress runs show --key 3fa9 --csv --out run.csv
+    fedcompress train --store runs           # tee a live event stream
+    fedcompress runs tail 3fa9 --store runs --follow
+    fedcompress sweep --smoke --watch        # live progress table
     fedcompress runs diff --a 3fa9 --b 81c2
     fedcompress runs export-bench --store runs --out BENCH_sweep.json
     fedcompress table1 --store runs          # cache-hits prior runs

@@ -302,11 +302,18 @@ impl EventLog {
         self.events.iter().filter(move |e| e.kind() == kind)
     }
 
-    /// JSON-lines serialization (one event per line).
+    /// JSON-lines serialization (one event per line). Every line carries
+    /// a monotonic `seq` field — its position in the log — so consumers
+    /// can detect gaps (a bounded sink that dropped events) and order
+    /// merged streams without any wall-clock reads.
     pub fn to_jsonl(&self) -> String {
         let mut s = String::new();
-        for e in &self.events {
-            s.push_str(&e.to_json().to_string());
+        for (seq, e) in self.events.iter().enumerate() {
+            let mut j = e.to_json();
+            if let Json::Obj(m) = &mut j {
+                m.insert("seq".to_string(), Json::from(seq));
+            }
+            s.push_str(&j.to_string());
             s.push('\n');
         }
         s
@@ -314,12 +321,53 @@ impl EventLog {
 
     /// Parse a JSON-lines dump back into a typed log (inverse of
     /// [`EventLog::to_jsonl`]; blank lines are skipped).
-    pub fn from_jsonl(text: &str) -> Result<EventLog> {
+    ///
+    /// Tolerant by design: a malformed line is recorded as an
+    /// [`EventParseError`] with its 1-based line number and parsing
+    /// continues — a truncated or bit-flipped event file never aborts a
+    /// replay, it just reports how much of it was unreadable. Logs
+    /// written before the `seq` field existed decode unchanged (the
+    /// field is ignored on input and regenerated from position).
+    pub fn from_jsonl(text: &str) -> ParsedLog {
         let mut log = EventLog::new();
-        for line in text.lines().filter(|l| !l.trim().is_empty()) {
-            log.push(Event::from_json(&Json::parse(line)?)?);
+        let mut errors = Vec::new();
+        for (idx, line) in text.lines().enumerate() {
+            if line.trim().is_empty() {
+                continue;
+            }
+            let parsed = Json::parse(line).and_then(|j| Event::from_json(&j));
+            match parsed {
+                Ok(e) => log.push(e),
+                Err(e) => errors.push(EventParseError {
+                    line: idx + 1,
+                    error: e.to_string(),
+                }),
+            }
         }
-        Ok(log)
+        ParsedLog { log, errors }
+    }
+}
+
+/// A single unreadable line in a JSON-lines event dump.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct EventParseError {
+    /// 1-based line number in the source text.
+    pub line: usize,
+    pub error: String,
+}
+
+/// Result of the tolerant [`EventLog::from_jsonl`]: everything that
+/// parsed, plus a per-line error report for everything that did not.
+#[derive(Clone, Debug, Default)]
+pub struct ParsedLog {
+    pub log: EventLog,
+    pub errors: Vec<EventParseError>,
+}
+
+impl ParsedLog {
+    /// True when every non-blank line parsed.
+    pub fn is_clean(&self) -> bool {
+        self.errors.is_empty()
     }
 }
 
@@ -427,10 +475,26 @@ mod tests {
     #[test]
     fn jsonl_round_trips_every_variant() {
         let log = full_log();
-        let restored = EventLog::from_jsonl(&log.to_jsonl()).unwrap();
-        assert_eq!(restored.all(), log.all());
-        // and once more through text, to prove the fixpoint
-        assert_eq!(restored.to_jsonl(), log.to_jsonl());
+        let parsed = EventLog::from_jsonl(&log.to_jsonl());
+        assert!(parsed.is_clean());
+        assert_eq!(parsed.log.all(), log.all());
+        // and once more through text, to prove the fixpoint (seq is the
+        // line index, so regeneration reproduces it exactly)
+        assert_eq!(parsed.log.to_jsonl(), log.to_jsonl());
+    }
+
+    #[test]
+    fn every_line_carries_its_sequence_number() {
+        let log = full_log();
+        for (i, line) in log.to_jsonl().lines().enumerate() {
+            let j = Json::parse(line).unwrap();
+            assert_eq!(j.get("seq").unwrap().as_usize().unwrap(), i);
+        }
+        // pre-seq logs (no seq field) still decode
+        let legacy = "{\"kind\":\"round_start\",\"round\":0,\"clusters\":4}\n";
+        let parsed = EventLog::from_jsonl(legacy);
+        assert!(parsed.is_clean());
+        assert_eq!(parsed.log.len(), 1);
     }
 
     #[test]
@@ -452,13 +516,35 @@ mod tests {
     }
 
     #[test]
-    fn malformed_jsonl_is_rejected() {
-        assert!(EventLog::from_jsonl("{\"kind\":\"upload\",\"round\":0}").is_err());
-        assert!(EventLog::from_jsonl("{\"kind\":\"martian\",\"round\":0}").is_err());
-        assert!(EventLog::from_jsonl("not json at all").is_err());
-        // blank lines are fine
+    fn malformed_lines_are_collected_not_fatal() {
+        // missing fields, unknown kind, not JSON: each becomes a
+        // per-line error, none aborts the parse
+        let text = "{\"kind\":\"upload\",\"round\":0}\n\
+                    {\"kind\":\"martian\",\"round\":0}\n\
+                    not json at all\n";
+        let parsed = EventLog::from_jsonl(text);
+        assert_eq!(parsed.log.len(), 0);
+        assert_eq!(parsed.errors.len(), 3);
+        assert_eq!(
+            parsed.errors.iter().map(|e| e.line).collect::<Vec<_>>(),
+            vec![1, 2, 3]
+        );
+
+        // good lines around a bad one survive, with the right line number
         let log = demo_log();
+        let mut lines: Vec<&str> = Vec::new();
+        let jsonl = log.to_jsonl();
+        lines.extend(jsonl.lines());
+        lines.insert(2, "garbage");
+        let parsed = EventLog::from_jsonl(&lines.join("\n"));
+        assert_eq!(parsed.log.len(), log.len());
+        assert_eq!(parsed.errors.len(), 1);
+        assert_eq!(parsed.errors[0].line, 3);
+
+        // blank lines are fine and do not count as errors
         let padded = format!("\n{}\n\n", log.to_jsonl());
-        assert_eq!(EventLog::from_jsonl(&padded).unwrap().len(), log.len());
+        let parsed = EventLog::from_jsonl(&padded);
+        assert!(parsed.is_clean());
+        assert_eq!(parsed.log.len(), log.len());
     }
 }

@@ -20,7 +20,7 @@ pub use accumulate::{AggError, AggFold, AggOutput, FedAvgFold, StreamAccumulator
 pub use metrics::{RoundMetrics, RunResult};
 pub use server::{
     run_federated, run_federated_with_data, run_with_strategy, run_with_strategy_opts,
-    EdgeCutMember, EdgeMember, EdgePartial, RoundIngest, RoundIntake,
+    run_with_strategy_sink, EdgeCutMember, EdgeMember, EdgePartial, RoundIngest, RoundIntake,
 };
 pub use strategy::{
     ClientTrainOpts, ClientUpdate, FedStrategy, FinalModel, RoundContext, ServerEnv, ServerModel,

@@ -46,6 +46,8 @@ use crate::info;
 use crate::models::flops::total_flops;
 use crate::net::proto::{framed_down, framed_up};
 use crate::net::{ClientResult, InProcess, Participant, RoundEnv, RoundSpec, Transport};
+use crate::obs::sink::{EventSink, NULL_SINK};
+use crate::obs::stream::StreamEvent;
 use crate::runtime::Engine;
 use crate::sim::FleetSim;
 use crate::util::rng::Rng;
@@ -206,6 +208,10 @@ pub struct RoundIngest<'a> {
     expected_mu: usize,
     accumulator: StreamAccumulator,
     outcomes: Vec<SlotMeta>,
+    /// Live ops tee: per-slot resolutions (and, via the transport,
+    /// evictions) stream here as they happen. Defaults to the
+    /// [`NULL_SINK`]; never touches the canonical `EventLog`.
+    sink: &'a dyn EventSink,
 }
 
 impl<'a> RoundIngest<'a> {
@@ -242,7 +248,21 @@ impl<'a> RoundIngest<'a> {
             expected_mu,
             accumulator: StreamAccumulator::new(fold, participants.len()),
             outcomes: (0..participants.len()).map(|_| SlotMeta::Open).collect(),
+            sink: &NULL_SINK,
         }
+    }
+
+    /// Route live per-slot ops events to `sink` for the rest of this
+    /// round. The sink observes arrival order — deliberately *not* the
+    /// canonical replay order `finish` produces.
+    pub fn attach_sink(&mut self, sink: &'a dyn EventSink) {
+        self.sink = sink;
+    }
+
+    /// The attached live sink (the transport emits eviction events
+    /// through it).
+    pub fn sink(&self) -> &dyn EventSink {
+        self.sink
     }
 
     pub fn round(&self) -> usize {
@@ -328,6 +348,22 @@ impl<'a> RoundIngest<'a> {
                     )?;
                 }
             }
+        }
+        if self.sink.enabled() {
+            // live arrival-order tee; `Open` is unreachable — the slot
+            // was resolved just above
+            let outcome = match self.outcomes.get(slot) {
+                Some(SlotMeta::Dropped(phase)) => format!("drop_{}", phase.as_str()),
+                Some(SlotMeta::TimedOut { .. }) => "timeout".to_string(),
+                Some(SlotMeta::DeadlineCut { .. }) => "deadline".to_string(),
+                Some(SlotMeta::Uploaded(_)) => "upload".to_string(),
+                None | Some(SlotMeta::Open) => "open".to_string(),
+            };
+            self.sink.emit(&StreamEvent::Slot {
+                round: self.round,
+                client: part.client,
+                outcome,
+            });
         }
         Ok(())
     }
@@ -572,6 +608,38 @@ pub fn run_with_strategy_opts(
     transport: &mut dyn Transport,
     resume: Option<&Checkpoint>,
 ) -> Result<RunResult> {
+    run_with_strategy_sink(engine, cfg, strategy, data, transport, resume, &NULL_SINK)
+}
+
+/// Tee every canonical event past the `teed` cursor to the live sink.
+/// The cursor advances even when the sink is disabled, so attaching a
+/// real sink costs nothing on the default path.
+fn tee_events(sink: &dyn EventSink, events: &EventLog, teed: &mut usize) {
+    if sink.enabled() {
+        for e in events.all().iter().skip(*teed) {
+            sink.emit(&StreamEvent::Run(e.clone()));
+        }
+    }
+    *teed = events.len();
+}
+
+/// [`run_with_strategy_opts`] plus a live [`EventSink`]: every
+/// canonical event is teed to `sink` as it lands in the run's
+/// [`EventLog`], interleaved with ops-only detail (per-slot arrival
+/// order, reorder-window depth, transport evictions, per-round
+/// `RoundOps`) that never enters the bit-exact record. The sink
+/// contract is non-blocking, so observability cannot perturb round
+/// latency — and because the canonical log is written first and teed
+/// after, it cannot perturb determinism either.
+pub fn run_with_strategy_sink(
+    engine: &Engine,
+    cfg: &FedConfig,
+    strategy: &mut dyn FedStrategy,
+    data: &FederatedData,
+    transport: &mut dyn Transport,
+    resume: Option<&Checkpoint>,
+    sink: &dyn EventSink,
+) -> Result<RunResult> {
     let base = run_rng(cfg);
     let spec = &engine.manifest.dataset(&cfg.dataset)?.spec;
     let p = spec.param_count;
@@ -598,6 +666,8 @@ pub fn run_with_strategy_opts(
 
     let mut ledger = CommLedger::new();
     let mut events = EventLog::new();
+    // cursor into `events` marking what the live sink has already seen
+    let mut teed = 0usize;
     let mut start_round = 0usize;
     if let Some(ckpt) = resume {
         anyhow::ensure!(
@@ -634,6 +704,7 @@ pub fn run_with_strategy_opts(
             });
         }
     }
+    tee_events(sink, &events, &mut teed);
 
     let mut rounds = Vec::with_capacity(cfg.rounds - start_round);
     let workers = match cfg.upload_workers {
@@ -683,6 +754,7 @@ pub fn run_with_strategy_opts(
                 compressed: down.bytes < 4 * p,
             });
         }
+        tee_events(sink, &events, &mut teed);
 
         // --- client updates via the transport -----------------------------
         let participants: Vec<Participant> = selected
@@ -718,10 +790,12 @@ pub fn run_with_strategy_opts(
             model.centroids.mu.len(),
             strategy.make_fold(&ctx),
         );
+        ingest.attach_sink(sink);
         transport.run_round(&env, &*strategy, &round_spec, &mut ingest)?;
         // canonical-order replay: events + ledger byte-identical to the
         // buffered loop, survivors already folded
         let intake = ingest.finish(&mut ledger, &mut events)?;
+        tee_events(sink, &events, &mut teed);
         let dropped = intake.fault_drops + intake.deadline_drops;
         let stragglers = fates.iter().filter(|f| f.is_straggler()).count();
         let round_sim_ms = 1e3 * sim.clock().round_time_s(intake.max_reporting_s, dropped > 0);
@@ -753,6 +827,7 @@ pub fn run_with_strategy_opts(
         if aggregated {
             strategy.post_aggregate(&ctx, &env, &mut model, score, &mut events)?;
         }
+        tee_events(sink, &events, &mut teed);
 
         // --- evaluate the deliverable model --------------------------------
         let (accuracy, test_loss) = evaluate(engine, &cfg.dataset, &data.test, &model.theta)?;
@@ -760,6 +835,16 @@ pub fn run_with_strategy_opts(
             round,
             accuracy,
             loss: test_loss,
+        });
+        tee_events(sink, &events, &mut teed);
+        // ops-only round summary, emitted right after the round's last
+        // canonical event — offline replay synthesizes RoundOps at the
+        // same position, so live tee and record replay line up
+        sink.emit(&StreamEvent::RoundOps {
+            round,
+            stragglers,
+            peak_parked: intake.peak_parked,
+            sim_ms: round_sim_ms,
         });
         let m = RoundMetrics {
             round,

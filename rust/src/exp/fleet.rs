@@ -24,6 +24,7 @@ use crate::runtime::Engine;
 use crate::sim::FleetPreset;
 use crate::store::{run_key, RunStore};
 use crate::sweep::{run_or_cached, verify_cached, CacheStats};
+use crate::util::table::{self, Align};
 
 #[derive(Clone, Debug, PartialEq)]
 pub struct FleetRow {
@@ -132,33 +133,54 @@ pub fn run_cached(
 }
 
 pub fn print_table(t: &FleetTable) {
-    println!(
-        "{:<9} {:<18} {:>9} {:>8} {:>10} {:>10} {:>8} {:>6} {:>6}",
-        "fleet", "strategy", "final_acc", "r@tgt", "sim_s@tgt", "sim_s_tot", "comm_MB", "drop",
-        "strag"
-    );
-    for r in &t.rows {
-        let r_tgt = r
-            .rounds_to_target
-            .map(|n| n.to_string())
-            .unwrap_or_else(|| "-".into());
-        let s_tgt = r
-            .sim_s_to_target
-            .map(|s| format!("{s:.1}"))
-            .unwrap_or_else(|| "-".into());
-        println!(
-            "{:<9} {:<18} {:>9.4} {:>8} {:>10} {:>10.1} {:>8.2} {:>6} {:>6}",
-            r.fleet,
-            r.strategy,
-            r.final_acc,
-            r_tgt,
-            s_tgt,
-            r.total_sim_s,
-            r.total_mb,
-            r.dropped,
-            r.stragglers
-        );
-    }
+    let header = [
+        "fleet",
+        "strategy",
+        "final_acc",
+        "r@tgt",
+        "sim_s@tgt",
+        "sim_s_tot",
+        "comm_MB",
+        "drop",
+        "strag",
+    ];
+    let aligns = [
+        Align::Left,
+        Align::Left,
+        Align::Right,
+        Align::Right,
+        Align::Right,
+        Align::Right,
+        Align::Right,
+        Align::Right,
+        Align::Right,
+    ];
+    let rows: Vec<Vec<String>> = t
+        .rows
+        .iter()
+        .map(|r| {
+            let r_tgt = r
+                .rounds_to_target
+                .map(|n| n.to_string())
+                .unwrap_or_else(|| "-".into());
+            let s_tgt = r
+                .sim_s_to_target
+                .map(|s| format!("{s:.1}"))
+                .unwrap_or_else(|| "-".into());
+            vec![
+                r.fleet.to_string(),
+                r.strategy.to_string(),
+                format!("{:.4}", r.final_acc),
+                r_tgt,
+                s_tgt,
+                format!("{:.1}", r.total_sim_s),
+                format!("{:.2}", r.total_mb),
+                r.dropped.to_string(),
+                r.stragglers.to_string(),
+            ]
+        })
+        .collect();
+    print!("{}", table::render(&header, &rows, &aligns));
     println!(
         "target accuracy: {:.4} ({:.0}% of best final)",
         t.target_acc,

@@ -159,6 +159,21 @@
 //!   instead of re-executing; `table2 --from-run <hex>` deploys the
 //!   cluster count a stored run actually landed on.
 //!
+//! # Observability
+//!
+//! Every run path can tee a **versioned JSONL event stream** (header
+//! line `EVNT1 {...}` with schema version, run key, and config
+//! fingerprint) to `<store>/events/<run_key>.jsonl` through the
+//! non-blocking [`obs::EventSink`] trait (bounded channel + drop
+//! counter — a slow disk costs events, never round latency). The
+//! stream carries the canonical run events *plus* ops-only detail
+//! (per-slot arrival order, reorder-window depth, worker evictions)
+//! that never enters the bit-exact run record. `runs tail <key>
+//! [--follow]` and `sweep --watch` render live terminal tables from
+//! the stream via a tolerant parser (per-line errors are counted, a
+//! damaged stream still replays), and the same renderer reconstructs
+//! the identical view offline from a stored [`store::RunRecord`].
+//!
 //! # Invariants as lint rules (fedlint)
 //!
 //! Everything above rests on invariants the compiler cannot check:
@@ -196,6 +211,7 @@ pub mod linalg;
 pub mod lint;
 pub mod models;
 pub mod net;
+pub mod obs;
 pub mod runtime;
 pub mod sim;
 pub mod store;

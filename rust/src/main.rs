@@ -13,16 +13,24 @@ use fedcompress::compression::accounting::ccr;
 use fedcompress::config::FedConfig;
 use fedcompress::coordinator::checkpoint::Checkpoint;
 use fedcompress::coordinator::server::{build_data, run_federated_with_data};
-use fedcompress::coordinator::{run_with_strategy_opts, RunResult};
+use fedcompress::coordinator::{run_with_strategy_sink, RunResult};
 use fedcompress::exp::{figure2, fleet, table1, table2};
 use fedcompress::models::flops;
 use fedcompress::net::{worker, InProcess, TcpServer, Transport};
+use fedcompress::obs::sink::{EventSink, FileSink, NULL_SINK};
+use fedcompress::obs::stream::{
+    parse_stream, record_stream_events, StreamEvent, StreamHeader, StreamReplay,
+};
+use fedcompress::obs::view::{sweep_progress_line, RunView, SweepView};
 use fedcompress::runtime::Engine;
 use fedcompress::sim::FleetPreset;
-use fedcompress::store::{diff_records, export, key_hex, RunStore};
+use fedcompress::store::{
+    diff_records, export, key_hex, parse_key_hex, run_key, RunRecord, RunStore,
+};
 use fedcompress::sweep::{run_sweep, EngineRunner, JobRunner, SmokeRunner, SweepEvent, SweepSpec};
 use fedcompress::util::csv;
 use fedcompress::util::logging;
+use fedcompress::util::table;
 use fedcompress::util::threadpool::default_workers;
 
 fn build_config(args: &Args) -> Result<FedConfig> {
@@ -83,26 +91,7 @@ fn store_for(args: &Args) -> Result<Option<RunStore>> {
 
 /// Print a header + rows as an aligned terminal table.
 fn print_aligned(header: &[&str], rows: &[Vec<String>]) {
-    let mut widths: Vec<usize> = header.iter().map(|h| h.len()).collect();
-    for row in rows {
-        for (w, cell) in widths.iter_mut().zip(row) {
-            *w = (*w).max(cell.len());
-        }
-    }
-    let line = |cells: Vec<&str>| {
-        let mut s = String::new();
-        for (i, (cell, &w)) in cells.iter().zip(&widths).enumerate() {
-            if i > 0 {
-                s.push_str("  ");
-            }
-            s.push_str(&format!("{cell:>w$}"));
-        }
-        println!("{s}");
-    };
-    line(header.to_vec());
-    for row in rows {
-        line(row.iter().map(|s| s.as_str()).collect());
-    }
+    print!("{}", table::render_right(header, rows));
 }
 
 /// Shared `--csv` / `--out` tail of the `runs` table subcommands.
@@ -115,6 +104,56 @@ fn emit_table(args: &Args, header: &[&str], rows: &[Vec<String>]) -> Result<()> 
         }
         (None, true) => print!("{}", csv::render(header, rows)),
         (None, false) => print_aligned(header, rows),
+    }
+    Ok(())
+}
+
+/// `--store <dir>` on train/serve: live-tee the run's event stream to
+/// `<store>/events/<key>.jsonl` and persist the finished record.
+struct RunTee {
+    store: RunStore,
+    key: u64,
+    sink: FileSink,
+}
+
+/// The live sink a run should emit to: the tee's file sink, or the
+/// null sink when `--store` was not given.
+fn tee_sink(tee: &Option<RunTee>) -> &dyn EventSink {
+    match tee {
+        Some(t) => &t.sink,
+        None => &NULL_SINK,
+    }
+}
+
+fn open_run_tee(args: &Args, cfg: &FedConfig, strategy: &str) -> Result<Option<RunTee>> {
+    let store = match store_for(args)? {
+        Some(s) => s,
+        None => return Ok(None),
+    };
+    let key = run_key(strategy, cfg);
+    let path = store
+        .dir()
+        .join("events")
+        .join(format!("{}.jsonl", key_hex(key)));
+    let sink = FileSink::create(&path, &StreamHeader::new(key, cfg, strategy), 4096)?;
+    println!("event stream: {}", sink.path().display());
+    Ok(Some(RunTee { store, key, sink }))
+}
+
+/// Persist the finished run, close the stream, print the tail hint.
+fn close_run_tee(tee: Option<RunTee>, cfg: &FedConfig, result: &RunResult) -> Result<()> {
+    if let Some(RunTee { mut store, key, sink }) = tee {
+        store.append(&RunRecord::from_result(cfg, result))?;
+        store.flush_sidecar()?;
+        let dropped = sink.finish()?;
+        if dropped > 0 {
+            println!("event stream: {dropped} event(s) dropped by the bounded sink");
+        }
+        println!(
+            "run stored — replay with: fedcompress runs tail {} --store {}",
+            key_hex(key),
+            store.dir().display()
+        );
     }
     Ok(())
 }
@@ -191,15 +230,18 @@ fn cmd_train(args: &Args) -> Result<()> {
     let engine = engine_for(args)?;
     let data = build_data(&engine, &cfg)?;
     let resume = load_resume(args)?;
+    let tee = open_run_tee(args, &cfg, plugin.name())?;
     let mut transport = InProcess;
-    let result = run_with_strategy_opts(
+    let result = run_with_strategy_sink(
         &engine,
         &cfg,
         plugin.as_mut(),
         &data,
         &mut transport,
         resume.as_ref(),
+        tee_sink(&tee),
     )?;
+    close_run_tee(tee, &cfg, &result)?;
     finish_run(args, &cfg, &result, transport.kind().name())
 }
 
@@ -227,13 +269,15 @@ fn cmd_serve(args: &Args) -> Result<()> {
         server.local_addr()?
     );
     let mut transport = server.accept_workers()?;
-    let result = run_with_strategy_opts(
+    let tee = open_run_tee(args, &cfg, plugin.name())?;
+    let result = run_with_strategy_sink(
         &engine,
         &cfg,
         plugin.as_mut(),
         &data,
         &mut transport,
         resume.as_ref(),
+        tee_sink(&tee),
     )?;
     transport.shutdown()?;
     println!(
@@ -243,6 +287,7 @@ fn cmd_serve(args: &Args) -> Result<()> {
         transport.alive_workers(),
         workers
     );
+    close_run_tee(tee, &cfg, &result)?;
     finish_run(args, &cfg, &result, "tcp")
 }
 
@@ -409,42 +454,44 @@ fn cmd_sweep(args: &Args) -> Result<()> {
     };
 
     let total = jobs.len();
-    let progress = move |e: SweepEvent| match e {
-        SweepEvent::Planned { total, cached } => println!(
-            "sweep: {total} job(s), {cached} already in the store, {workers} worker(s)"
-        ),
-        SweepEvent::JobStart { idx, label } => {
-            println!("[{:>3}/{total}] run    {label}", idx + 1)
-        }
-        SweepEvent::JobDone {
-            idx,
-            key,
-            label,
-            cached,
-            final_accuracy,
-            wall_s,
-        } => {
-            if cached {
-                println!(
-                    "[{:>3}/{total}] cached {label} acc={final_accuracy:.4} key={}",
-                    idx + 1,
-                    key_hex(key)
-                );
-            } else {
-                println!(
-                    "[{:>3}/{total}] done   {label} acc={final_accuracy:.4} \
-                     ({wall_s:.1}s) key={}",
-                    idx + 1,
-                    key_hex(key)
-                );
-            }
-        }
-        SweepEvent::JobFailed { idx, label, error } => {
-            println!("[{:>3}/{total}] FAILED {label}: {error}", idx + 1)
+    // every SweepEvent is teed to <store>/events/sweep.jsonl as a
+    // first-class stream event; per-job run streams land next to it
+    let events_dir = store.dir().join("events");
+    let sweep_sink = FileSink::create(
+        &events_dir.join("sweep.jsonl"),
+        &StreamHeader::new(0, &cfg, "sweep"),
+        4096,
+    )?;
+    let watch = args.flag("watch").is_some();
+    let view = std::sync::Mutex::new(SweepView::new());
+    let progress = |e: SweepEvent| {
+        let ev = StreamEvent::from(&e);
+        sweep_sink.emit(&ev);
+        if watch {
+            // full-screen refresh: clear, home, re-render the table
+            let mut v = view.lock().unwrap();
+            v.apply(&ev);
+            print!("\x1b[2J\x1b[H{}", v.render());
+            use std::io::Write;
+            let _ = std::io::stdout().flush();
+        } else {
+            println!("{}", sweep_progress_line(&e, total, workers));
         }
     };
     let force = args.flag("force").is_some();
-    let outcome = run_sweep(&jobs, &mut store, runner, workers, force, &progress)?;
+    let outcome = run_sweep(
+        &jobs,
+        &mut store,
+        runner,
+        workers,
+        force,
+        Some(&events_dir),
+        &progress,
+    )?;
+    let stream_drops = sweep_sink.finish()?;
+    if stream_drops > 0 {
+        println!("event stream: {stream_drops} event(s) dropped by the bounded sink");
+    }
     println!("{}", outcome.summary());
     println!("store: {} record(s) at {:?}", store.len(), store.dir());
     anyhow::ensure!(outcome.failed == 0, "{} sweep job(s) failed", outcome.failed);
@@ -479,9 +526,14 @@ fn cmd_runs(args: &Args) -> Result<()> {
                 if cfg.codec.is_empty() { "-" } else { &cfg.codec },
                 cfg.seed
             );
+            let parsed = rec.events();
+            let bad = match parsed.errors.len() {
+                0 => String::new(),
+                n => format!(" ({n} bad line(s))"),
+            };
             println!(
                 "final acc={:.4} model={} B (dense {} B, mcr={:.2}) comm={} B \
-                 (framed {} B) sim={:.1}s events={}",
+                 (framed {} B) sim={:.1}s events={}{}",
                 rec.final_accuracy,
                 rec.final_model_bytes,
                 rec.dense_model_bytes,
@@ -489,10 +541,12 @@ fn cmd_runs(args: &Args) -> Result<()> {
                 rec.total_bytes(),
                 rec.total_framed_bytes(),
                 rec.total_sim_ms() / 1e3,
-                rec.events()?.len()
+                parsed.log.len(),
+                bad
             );
             emit_table(args, &export::ROUNDS_HEADER, &export::rounds_rows(&rec))?;
         }
+        "tail" => return cmd_runs_tail(args, &store),
         "diff" => return cmd_runs_diff(args, &store),
         "compare" => {
             let latest = store.latest();
@@ -504,10 +558,64 @@ fn cmd_runs(args: &Args) -> Result<()> {
             println!("wrote {out} ({} record(s))", store.len());
         }
         other => anyhow::bail!(
-            "unknown runs subcommand '{other}' (list|show|diff|compare|export-bench)"
+            "unknown runs subcommand '{other}' (list|show|tail|diff|compare|export-bench)"
         ),
     }
     Ok(())
+}
+
+/// `runs tail <key> [--follow]`: render the run view — from the teed
+/// stream file when one exists (it carries the ops-only detail), else
+/// replayed from the stored record. `--follow` refreshes the screen
+/// until interrupted, so a live `train --store` run can be tailed from
+/// another terminal.
+fn cmd_runs_tail(args: &Args, store: &RunStore) -> Result<()> {
+    let hex = match args.flag("key") {
+        Some(h) => h,
+        None => args
+            .positionals
+            .first()
+            .map(|s| s.as_str())
+            .context("runs tail needs a <key> positional or --key <hex>")?,
+    };
+    let key = match store.resolve(hex) {
+        Ok(k) => k,
+        // a run being teed right now is not in the index yet; a full
+        // 16-hex key still addresses its stream file directly
+        Err(e) => parse_key_hex(hex).map_err(|_| e)?,
+    };
+    let stream_path = store
+        .dir()
+        .join("events")
+        .join(format!("{}.jsonl", key_hex(key)));
+    let follow = args.flag("follow").is_some();
+    loop {
+        let replay = load_replay(store, key, &stream_path)?;
+        let view = RunView::from_replay(&replay);
+        if !follow {
+            print!("{}", view.render());
+            return Ok(());
+        }
+        print!("\x1b[2J\x1b[H{}", view.render());
+        use std::io::Write;
+        let _ = std::io::stdout().flush();
+        std::thread::sleep(Duration::from_millis(700));
+    }
+}
+
+/// The replay source for `runs tail`: the stream file if readable,
+/// otherwise a stream synthesized from the stored record.
+fn load_replay(store: &RunStore, key: u64, stream_path: &Path) -> Result<StreamReplay> {
+    if let Ok(text) = std::fs::read_to_string(stream_path) {
+        return Ok(parse_stream(&text));
+    }
+    let rec = store.get(key)?.context("key resolved but record missing")?;
+    let (events, errors) = record_stream_events(&rec);
+    Ok(StreamReplay {
+        header: Some(StreamHeader::for_record(&rec)),
+        events,
+        errors,
+    })
 }
 
 /// `runs diff`: bit-exact drift check — two records (`--a`/`--b`) or

@@ -44,6 +44,7 @@ use crate::config::FedConfig;
 use crate::coordinator::events::DropPhase;
 use crate::coordinator::server::{EdgeCutMember, EdgeMember, EdgePartial, RoundIngest};
 use crate::coordinator::strategy::FedStrategy;
+use crate::obs::stream::StreamEvent;
 use crate::sim::ClientFate;
 
 use super::mux::{Mux, MuxEvent};
@@ -511,12 +512,24 @@ impl Transport for TcpTransport {
                             "worker {conn} connection lost ({error}); dropping {} clients",
                             outstanding[conn].len()
                         );
+                        ingest.sink().emit(&StreamEvent::Evicted {
+                            round,
+                            conn,
+                            cause: format!("connection_lost: {error}"),
+                            dropped_clients: outstanding[conn].len(),
+                        });
                         remaining -=
                             drop_outstanding(&mut outstanding[conn], &mut dispatch[conn], ingest)?;
                     }
                     MuxEvent::Frame { conn, msg_type, payload } => {
                         if outstanding[conn].is_empty() {
                             crate::info!("worker {conn} sent an unsolicited frame; evicting it");
+                            ingest.sink().emit(&StreamEvent::Evicted {
+                                round,
+                                conn,
+                                cause: "unsolicited_frame".to_string(),
+                                dropped_clients: 0,
+                            });
                             self.mux.close(conn);
                             continue;
                         }
@@ -565,6 +578,12 @@ impl Transport for TcpTransport {
                                     "rejecting worker {conn} ({reason}); dropping {} clients",
                                     outstanding[conn].len()
                                 );
+                                ingest.sink().emit(&StreamEvent::Evicted {
+                                    round,
+                                    conn,
+                                    cause: reason,
+                                    dropped_clients: outstanding[conn].len(),
+                                });
                                 self.mux.close(conn);
                                 remaining -= drop_outstanding(
                                     &mut outstanding[conn],
@@ -588,6 +607,12 @@ impl Transport for TcpTransport {
                             "worker {j} timed out with {} uploads pending",
                             outstanding[j].len()
                         );
+                        ingest.sink().emit(&StreamEvent::Evicted {
+                            round,
+                            conn: j,
+                            cause: "round_timeout".to_string(),
+                            dropped_clients: outstanding[j].len(),
+                        });
                         for &slot in outstanding[j].values() {
                             ingest.resolve(slot, ClientResult::TimedOut { elapsed_s: timeout_s })?;
                         }

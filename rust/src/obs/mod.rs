@@ -1,0 +1,46 @@
+//! Live observability: versioned event streams, non-blocking sinks,
+//! and the terminal views behind `runs tail` and `sweep --watch`.
+//!
+//! ```text
+//!  run loop (coordinator/server.rs)          sweep (sweep/mod.rs)
+//!    |  canonical Event + ops StreamEvent      |  SweepEvent
+//!    v                                         v
+//!  EventSink::emit  -- non-blocking: bounded channel + drop counter
+//!    |
+//!    v
+//!  <store>/events/<run_key>.jsonl   "EVNT1 {schema,run,fingerprint,..}"
+//!    |                                          header line, then one
+//!    v                                          JSON event per line
+//!  parse_stream (tolerant: per-line errors, never aborts)
+//!    |
+//!    v
+//!  RunView / SweepView  -> util::table  -> terminal
+//! ```
+//!
+//! Two event classes cross a stream:
+//!
+//! * **canonical events** ([`crate::coordinator::events::Event`]) — the
+//!   run's experimental record. Deterministic and transport-invariant:
+//!   the TCP loopback suite asserts their JSONL is bit-identical to the
+//!   in-process run, and `runs diff` compares them byte for byte. They
+//!   are stored in the [`crate::store::RunRecord`], which is why a
+//!   stored record can replay the same view offline.
+//! * **ops events** (the other [`stream::StreamEvent`] variants) — what
+//!   actually happened on *this* execution: per-slot resolution order,
+//!   reorder-window depth (`peak_parked`), worker evictions, sweep
+//!   progress. They exist only in the teed stream file and never enter
+//!   the record, so observability cannot perturb the determinism
+//!   contract.
+//!
+//! Sequencing is positional (`seq` counters), never wall-clock — the
+//! whole module is inside fedlint's `no-wallclock-state` scope, and its
+//! parsers are inside `no-panic-decode` (stream files face truncation
+//! and bit rot, not trusted input).
+
+pub mod sink;
+pub mod stream;
+pub mod view;
+
+pub use sink::{BoundedSink, EventSink, FileSink, NullSink, NULL_SINK};
+pub use stream::{parse_stream, StreamEvent, StreamHeader, StreamReplay, SCHEMA_VERSION};
+pub use view::{RunView, SweepView};

@@ -1,0 +1,456 @@
+//! Terminal views over event streams: the per-round run table behind
+//! `runs tail` (live and offline replay render through the *same* code
+//! path, so they are byte-identical by construction) and the per-job
+//! sweep table behind `sweep --watch`.
+
+use std::collections::BTreeMap;
+
+use crate::coordinator::events::Event;
+use crate::net::proto::{framed_down, framed_up};
+use crate::obs::stream::{StreamEvent, StreamHeader, StreamReplay};
+use crate::store::key_hex;
+use crate::sweep::SweepEvent;
+use crate::util::table::{self, Align};
+
+fn fmt_opt_f64(v: Option<f64>, decimals: usize) -> String {
+    match v {
+        Some(x) => format!("{x:.decimals$}"),
+        None => "-".to_string(),
+    }
+}
+
+fn fmt_opt_usize(v: Option<usize>) -> String {
+    match v {
+        Some(x) => x.to_string(),
+        None => "-".to_string(),
+    }
+}
+
+#[derive(Clone, Debug, Default)]
+struct RoundRow {
+    clusters: Option<usize>,
+    accuracy: Option<f64>,
+    loss: Option<f64>,
+    /// clients that reached aggregation (from `aggregated`)
+    survivors: Option<usize>,
+    uploads: usize,
+    drops: usize,
+    deadline_cuts: usize,
+    stragglers: Option<usize>,
+    peak_parked: Option<usize>,
+    sim_ms: Option<f64>,
+    up_bytes: usize,
+    down_bytes: usize,
+    framed_bytes: usize,
+}
+
+/// Per-round view of one run's event stream. Fold events in with
+/// [`RunView::from_replay`], render with [`RunView::render`].
+#[derive(Clone, Debug, Default)]
+pub struct RunView {
+    header: Option<StreamHeader>,
+    rows: BTreeMap<usize, RoundRow>,
+    events: usize,
+    parse_errors: usize,
+    evictions: usize,
+}
+
+impl RunView {
+    pub fn from_replay(replay: &StreamReplay) -> RunView {
+        let mut view = RunView {
+            header: replay.header.clone(),
+            events: replay.events.len(),
+            parse_errors: replay.errors.len(),
+            ..RunView::default()
+        };
+        for ev in &replay.events {
+            view.apply(ev);
+        }
+        view
+    }
+
+    fn apply(&mut self, ev: &StreamEvent) {
+        match ev {
+            StreamEvent::Run(e) => self.apply_run(e),
+            StreamEvent::RoundOps {
+                round,
+                stragglers,
+                peak_parked,
+                sim_ms,
+            } => {
+                let row = self.rows.entry(*round).or_default();
+                row.stragglers = Some(*stragglers);
+                row.peak_parked = Some(*peak_parked);
+                row.sim_ms = Some(*sim_ms);
+            }
+            StreamEvent::Evicted { .. } => self.evictions += 1,
+            // per-slot arrival order is forensic detail (grep the
+            // stream file); sweep events belong to the SweepView
+            StreamEvent::Slot { .. }
+            | StreamEvent::SweepPlanned { .. }
+            | StreamEvent::SweepJobStart { .. }
+            | StreamEvent::SweepJobDone { .. }
+            | StreamEvent::SweepJobFailed { .. } => {}
+        }
+    }
+
+    fn apply_run(&mut self, e: &Event) {
+        let row = self.rows.entry(e.round()).or_default();
+        match e {
+            Event::RoundStart { clusters, .. } => row.clusters = Some(*clusters),
+            Event::Dispatch { bytes, .. } => {
+                row.down_bytes += bytes;
+                row.framed_bytes += framed_down(*bytes);
+            }
+            Event::Upload { bytes, .. } => {
+                row.uploads += 1;
+                row.up_bytes += bytes;
+                row.framed_bytes += framed_up(*bytes);
+            }
+            Event::Aggregated { clients, .. } => row.survivors = Some(*clients),
+            Event::Evaluated { accuracy, loss, .. } => {
+                row.accuracy = Some(*accuracy);
+                row.loss = Some(*loss);
+            }
+            Event::Dropout { .. } => row.drops += 1,
+            Event::Deadline { .. } => row.deadline_cuts += 1,
+            Event::SelfCompress { .. }
+            | Event::ControllerGrow { .. }
+            | Event::ResumeMismatch { .. } => {}
+        }
+    }
+
+    pub fn final_round(&self) -> Option<usize> {
+        self.rows.keys().next_back().copied()
+    }
+
+    /// Render the full view: identity line (when the stream carried a
+    /// header), the per-round table, and a summary line. The summary
+    /// always names the final round — scripts (and CI) grep for it.
+    pub fn render(&self) -> String {
+        let mut out = String::new();
+        if let Some(h) = &self.header {
+            out.push_str(&format!(
+                "stream: run={} strategy={} schema={} fingerprint={}\n",
+                key_hex(h.run),
+                h.strategy,
+                h.schema,
+                key_hex(h.fingerprint)
+            ));
+        }
+        let header = [
+            "round", "acc", "loss", "C", "ok", "drop", "cut", "strag", "park", "up_B", "down_B",
+            "framed_B", "sim_s",
+        ];
+        let rows: Vec<Vec<String>> = self
+            .rows
+            .iter()
+            .map(|(round, r)| {
+                vec![
+                    round.to_string(),
+                    fmt_opt_f64(r.accuracy, 4),
+                    fmt_opt_f64(r.loss, 4),
+                    fmt_opt_usize(r.clusters),
+                    fmt_opt_usize(r.survivors.or((r.uploads > 0).then_some(r.uploads))),
+                    r.drops.to_string(),
+                    r.deadline_cuts.to_string(),
+                    fmt_opt_usize(r.stragglers),
+                    fmt_opt_usize(r.peak_parked),
+                    r.up_bytes.to_string(),
+                    r.down_bytes.to_string(),
+                    r.framed_bytes.to_string(),
+                    fmt_opt_f64(r.sim_ms.map(|ms| ms / 1e3), 1),
+                ]
+            })
+            .collect();
+        out.push_str(&table::render(&header, &rows, &[]));
+        match self.final_round() {
+            Some(last) => out.push_str(&format!(
+                "stream: {} event(s), {} parse error(s) — final round {last}",
+                self.events, self.parse_errors
+            )),
+            None => out.push_str(&format!(
+                "stream: {} event(s), {} parse error(s) — no rounds",
+                self.events, self.parse_errors
+            )),
+        }
+        if self.evictions > 0 {
+            out.push_str(&format!(" — {} eviction(s)", self.evictions));
+        }
+        out.push('\n');
+        out
+    }
+}
+
+#[derive(Clone, Debug, Default)]
+struct JobRow {
+    label: String,
+    status: String,
+    accuracy: Option<f64>,
+    wall_s: Option<f64>,
+    key: Option<u64>,
+    note: String,
+}
+
+/// Per-job view of a sweep's progress events — the `sweep --watch`
+/// table. Feed it [`StreamEvent`]s (sweep variants; everything else is
+/// ignored) and re-render on change.
+#[derive(Clone, Debug, Default)]
+pub struct SweepView {
+    total: usize,
+    planned_cached: usize,
+    rows: BTreeMap<usize, JobRow>,
+}
+
+impl SweepView {
+    pub fn new() -> SweepView {
+        SweepView::default()
+    }
+
+    pub fn apply(&mut self, ev: &StreamEvent) {
+        match ev {
+            StreamEvent::SweepPlanned { total, cached } => {
+                self.total = *total;
+                self.planned_cached = *cached;
+            }
+            StreamEvent::SweepJobStart { idx, label } => {
+                let row = self.rows.entry(*idx).or_default();
+                row.label = label.clone();
+                row.status = "run".to_string();
+            }
+            StreamEvent::SweepJobDone {
+                idx,
+                key,
+                label,
+                cached,
+                final_accuracy,
+                wall_s,
+            } => {
+                let row = self.rows.entry(*idx).or_default();
+                row.label = label.clone();
+                row.status = if *cached { "cached" } else { "done" }.to_string();
+                row.accuracy = Some(*final_accuracy);
+                row.wall_s = Some(*wall_s);
+                row.key = Some(*key);
+            }
+            StreamEvent::SweepJobFailed { idx, label, error } => {
+                let row = self.rows.entry(*idx).or_default();
+                row.label = label.clone();
+                row.status = "FAILED".to_string();
+                row.note = error.clone();
+            }
+            _ => {}
+        }
+    }
+
+    pub fn render(&self) -> String {
+        let done = self
+            .rows
+            .values()
+            .filter(|r| r.status == "done" || r.status == "cached")
+            .count();
+        let running = self.rows.values().filter(|r| r.status == "run").count();
+        let failed = self.rows.values().filter(|r| r.status == "FAILED").count();
+        let mut out = format!(
+            "sweep: {done}/{} done ({} cached at plan) — {running} running, {failed} failed\n",
+            self.total, self.planned_cached
+        );
+        let header = ["job", "status", "label", "acc", "wall_s", "key", "note"];
+        let aligns = [
+            Align::Right,
+            Align::Left,
+            Align::Left,
+            Align::Right,
+            Align::Right,
+            Align::Left,
+            Align::Left,
+        ];
+        let rows: Vec<Vec<String>> = self
+            .rows
+            .iter()
+            .map(|(idx, r)| {
+                vec![
+                    (idx + 1).to_string(),
+                    r.status.clone(),
+                    r.label.clone(),
+                    fmt_opt_f64(r.accuracy, 4),
+                    fmt_opt_f64(r.wall_s, 1),
+                    r.key.map(key_hex).unwrap_or_else(|| "-".to_string()),
+                    r.note.clone(),
+                ]
+            })
+            .collect();
+        out.push_str(&table::render(&header, &rows, &aligns));
+        out
+    }
+}
+
+/// The plain (non-`--watch`) sweep progress line for one event — the
+/// historical stdout format, shared here so batch output and the watch
+/// table come from one module.
+pub fn sweep_progress_line(e: &SweepEvent, total: usize, workers: usize) -> String {
+    match e {
+        SweepEvent::Planned { total, cached } => format!(
+            "sweep: {total} job(s), {cached} already in the store, {workers} worker(s)"
+        ),
+        SweepEvent::JobStart { idx, label } => {
+            format!("[{:>3}/{total}] run    {label}", idx + 1)
+        }
+        SweepEvent::JobDone {
+            idx,
+            key,
+            label,
+            cached,
+            final_accuracy,
+            wall_s,
+        } => {
+            if *cached {
+                format!(
+                    "[{:>3}/{total}] cached {label} acc={final_accuracy:.4} key={}",
+                    idx + 1,
+                    key_hex(*key)
+                )
+            } else {
+                format!(
+                    "[{:>3}/{total}] done   {label} acc={final_accuracy:.4} \
+                     ({wall_s:.1}s) key={}",
+                    idx + 1,
+                    key_hex(*key)
+                )
+            }
+        }
+        SweepEvent::JobFailed { idx, label, error } => {
+            format!("[{:>3}/{total}] FAILED {label}: {error}", idx + 1)
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::events::DropPhase;
+    use crate::obs::stream::SCHEMA_VERSION;
+
+    fn demo_replay() -> StreamReplay {
+        let header = StreamHeader {
+            schema: SCHEMA_VERSION,
+            run: 0xaa,
+            fingerprint: 0xbb,
+            strategy: "fedcompress".to_string(),
+        };
+        let events = vec![
+            StreamEvent::Run(Event::RoundStart {
+                round: 0,
+                clusters: 16,
+            }),
+            StreamEvent::Run(Event::Dispatch {
+                round: 0,
+                client: 0,
+                bytes: 1000,
+                compressed: true,
+            }),
+            StreamEvent::Run(Event::Upload {
+                round: 0,
+                client: 0,
+                bytes: 200,
+                score: 4.5,
+                mean_ce: 2.1,
+            }),
+            StreamEvent::Run(Event::Dropout {
+                round: 0,
+                client: 1,
+                phase: DropPhase::BeforeTrain,
+            }),
+            StreamEvent::Run(Event::Deadline {
+                round: 0,
+                client: 2,
+                sim_s: 31.0,
+            }),
+            StreamEvent::Run(Event::Aggregated {
+                round: 0,
+                clients: 1,
+                score: 4.5,
+            }),
+            StreamEvent::Run(Event::Evaluated {
+                round: 0,
+                accuracy: 0.5,
+                loss: 1.5,
+            }),
+            StreamEvent::RoundOps {
+                round: 0,
+                stragglers: 1,
+                peak_parked: 3,
+                sim_ms: 1500.0,
+            },
+        ];
+        StreamReplay {
+            header: Some(header),
+            events,
+            errors: Vec::new(),
+        }
+    }
+
+    #[test]
+    fn run_view_folds_rounds_and_names_the_final_round() {
+        let view = RunView::from_replay(&demo_replay());
+        assert_eq!(view.final_round(), Some(0));
+        let text = view.render();
+        assert!(text.contains("run=00000000000000aa"), "{text}");
+        assert!(text.contains("final round 0"), "{text}");
+        assert!(text.contains("0 parse error(s)"), "{text}");
+        // framed bytes = ideal + per-message overheads, so strictly more
+        assert!(text.contains("0.5000"), "{text}");
+    }
+
+    #[test]
+    fn framed_bytes_exceed_ideal_bytes() {
+        let view = RunView::from_replay(&demo_replay());
+        let text = view.render();
+        // down 1000 + up 200 ideal; framed adds both overheads
+        let framed = framed_down(1000) + framed_up(200);
+        assert!(text.contains(&framed.to_string()), "{text}");
+    }
+
+    #[test]
+    fn sweep_view_tracks_job_lifecycle() {
+        let mut view = SweepView::new();
+        view.apply(&StreamEvent::SweepPlanned { total: 2, cached: 0 });
+        view.apply(&StreamEvent::SweepJobStart {
+            idx: 0,
+            label: "a".to_string(),
+        });
+        view.apply(&StreamEvent::SweepJobDone {
+            idx: 0,
+            key: 7,
+            label: "a".to_string(),
+            cached: false,
+            final_accuracy: 0.5,
+            wall_s: 1.25,
+        });
+        view.apply(&StreamEvent::SweepJobFailed {
+            idx: 1,
+            label: "b".to_string(),
+            error: "boom".to_string(),
+        });
+        let text = view.render();
+        assert!(text.contains("1/2 done"), "{text}");
+        assert!(text.contains("1 failed"), "{text}");
+        assert!(text.contains("boom"), "{text}");
+        assert!(text.contains(&key_hex(7)), "{text}");
+    }
+
+    #[test]
+    fn progress_lines_match_the_historical_format() {
+        let line = sweep_progress_line(
+            &SweepEvent::JobStart {
+                idx: 0,
+                label: "fedavg/s1".to_string(),
+            },
+            4,
+            2,
+        );
+        assert_eq!(line, "[  1/4] run    fedavg/s1");
+        let line = sweep_progress_line(&SweepEvent::Planned { total: 4, cached: 1 }, 4, 2);
+        assert_eq!(line, "sweep: 4 job(s), 1 already in the store, 2 worker(s)");
+    }
+}

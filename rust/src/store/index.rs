@@ -292,6 +292,11 @@ impl RunStore {
             .metas
             .iter()
             .map(|m| {
+                // store-relative pointer to the run's replayable event
+                // stream (`runs tail`); `..._present` says whether the
+                // tee exists on disk at flush time
+                let stream = format!("events/{}.jsonl", key_hex(m.key));
+                let present = self.dir.join(&stream).exists();
                 Json::obj(vec![
                     ("key", Json::str(&key_hex(m.key))),
                     ("strategy", Json::str(&m.strategy)),
@@ -305,6 +310,8 @@ impl RunStore {
                     ("created_unix", Json::from(m.created_unix as usize)),
                     ("offset", Json::from(m.offset as usize)),
                     ("entry_len", Json::from(m.entry_len)),
+                    ("event_stream", Json::str(&stream)),
+                    ("event_stream_present", Json::Bool(present)),
                 ])
             })
             .collect();

@@ -19,7 +19,7 @@
 
 use crate::compression::accounting::{CommLedger, Direction};
 use crate::config::FedConfig;
-use crate::coordinator::events::EventLog;
+use crate::coordinator::events::{EventLog, ParsedLog};
 use crate::coordinator::metrics::{self, RoundMetrics, RunResult};
 use crate::net::proto::{config_image, parse_config_image};
 use crate::util::hash::Fnv1a;
@@ -115,8 +115,11 @@ impl RunRecord {
         Ok(self.cfg()?.codec)
     }
 
-    /// Parse the stored event log back into typed events.
-    pub fn events(&self) -> anyhow::Result<EventLog> {
+    /// Parse the stored event log back into typed events. Tolerant:
+    /// unreadable lines are collected as per-line errors in the
+    /// returned [`ParsedLog`], never a failure — a damaged log still
+    /// replays as far as it goes.
+    pub fn events(&self) -> ParsedLog {
         EventLog::from_jsonl(&self.events_jsonl)
     }
 
@@ -510,7 +513,9 @@ pub(crate) mod tests {
         assert_eq!(back.rounds.len(), 4);
         assert_eq!(back.ledger.transfer_count(), 8);
         assert_eq!(back.cfg().unwrap().seed, 7);
-        assert_eq!(back.events().unwrap().len(), 8);
+        let parsed = back.events();
+        assert!(parsed.is_clean());
+        assert_eq!(parsed.log.len(), 8);
         assert_eq!(back.final_clusters(), Some(19));
     }
 

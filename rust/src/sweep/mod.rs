@@ -25,11 +25,13 @@ pub mod spec;
 pub use runner::{run_or_cached, verify_cached, CacheStats, EngineRunner, JobRunner, SmokeRunner};
 pub use spec::{GridAxis, SweepJob, SweepSpec};
 
+use std::path::Path;
 use std::sync::Mutex;
 
 use anyhow::Result;
 
-use crate::store::RunStore;
+use crate::obs::stream::write_record_stream;
+use crate::store::{key_hex, RunRecord, RunStore};
 use crate::util::threadpool::parallel_map;
 
 /// Progress stream of a sweep (the CLI prints these as they happen).
@@ -73,6 +75,21 @@ impl SweepOutcome {
     }
 }
 
+/// Best-effort per-job event stream tee into `events_dir`. A failed
+/// write is logged, never escalated — observability must not fail a
+/// sweep whose record is already durable in the store.
+fn tee_record(events_dir: Option<&Path>, rec: &RunRecord, overwrite: bool) {
+    if let Some(dir) = events_dir {
+        let path = dir.join(format!("{}.jsonl", key_hex(rec.key)));
+        if !overwrite && path.exists() {
+            return;
+        }
+        if let Err(e) = write_record_stream(rec, &path) {
+            crate::info!("event stream tee {}: {e}", path.display());
+        }
+    }
+}
+
 /// Execute `jobs` against `store` with `workers` parallel threads.
 ///
 /// Jobs whose key already has a completed record are skipped
@@ -80,12 +97,18 @@ impl SweepOutcome {
 /// jobs run on [`parallel_map`]; each completed record is appended to
 /// the store immediately (mutex-serialized), so an interrupted sweep
 /// resumes from what finished.
+///
+/// `events_dir` (usually `<store>/events`) tees a replayable
+/// `<key>.jsonl` event stream per completed job: freshly executed jobs
+/// overwrite theirs, cache hits only fill in a missing file — the tee
+/// is best-effort observability and never fails the sweep.
 pub fn run_sweep(
     jobs: &[SweepJob],
     store: &mut RunStore,
     runner: &dyn JobRunner,
     workers: usize,
     force: bool,
+    events_dir: Option<&Path>,
     progress: &(dyn Fn(SweepEvent) + Sync),
 ) -> Result<SweepOutcome> {
     let mut cached: Vec<&SweepJob> = Vec::new();
@@ -107,6 +130,7 @@ pub fn run_sweep(
     for &job in &cached {
         let rec = store.get(job.key)?.expect("partitioned as cached");
         verify_cached(&rec, &job.strategy, &job.cfg)?;
+        tee_record(events_dir, &rec, false);
         progress(SweepEvent::JobDone {
             idx: job.idx,
             key: job.key,
@@ -138,6 +162,7 @@ pub fn run_sweep(
                     };
                     match append {
                         Ok(()) => {
+                            tee_record(events_dir, &rec, true);
                             progress(SweepEvent::JobDone {
                                 idx: job.idx,
                                 key: job.key,
@@ -212,17 +237,17 @@ mod tests {
         let mut store = tmp_store("cache");
         let jobs = grid_jobs();
         let quiet = |_: SweepEvent| {};
-        let first = run_sweep(&jobs, &mut store, &SmokeRunner, 4, false, &quiet).unwrap();
+        let first = run_sweep(&jobs, &mut store, &SmokeRunner, 4, false, None, &quiet).unwrap();
         assert_eq!(first.executed, 4);
         assert_eq!(first.cached, 0);
         assert_eq!(first.failed, 0);
         assert_eq!(store.len(), 4);
-        let second = run_sweep(&jobs, &mut store, &SmokeRunner, 4, false, &quiet).unwrap();
+        let second = run_sweep(&jobs, &mut store, &SmokeRunner, 4, false, None, &quiet).unwrap();
         assert_eq!(second.cached, 4, "every job must cache-hit");
         assert_eq!(second.executed, 0, "zero re-execution");
         assert_eq!(store.len(), 4, "no new records");
         // force re-executes and supersedes
-        let forced = run_sweep(&jobs, &mut store, &SmokeRunner, 2, true, &quiet).unwrap();
+        let forced = run_sweep(&jobs, &mut store, &SmokeRunner, 2, true, None, &quiet).unwrap();
         assert_eq!(forced.executed, 4);
         assert_eq!(store.len(), 4, "same keys");
         assert_eq!(store.metas().len(), 8, "history kept");
@@ -247,12 +272,12 @@ mod tests {
         let mut store = tmp_store("failures");
         let jobs = grid_jobs();
         let quiet = |_: SweepEvent| {};
-        let out = run_sweep(&jobs, &mut store, &FailOne, 2, false, &quiet).unwrap();
+        let out = run_sweep(&jobs, &mut store, &FailOne, 2, false, None, &quiet).unwrap();
         assert_eq!(out.failed, 1);
         assert_eq!(out.executed, 3);
         assert_eq!(store.len(), 3, "completed jobs persisted");
         // the retry sweep only re-runs the failure
-        let out = run_sweep(&jobs, &mut store, &SmokeRunner, 2, false, &quiet).unwrap();
+        let out = run_sweep(&jobs, &mut store, &SmokeRunner, 2, false, None, &quiet).unwrap();
         assert_eq!(out.cached, 3);
         assert_eq!(out.executed, 1);
         assert_eq!(out.failed, 0);
@@ -265,7 +290,7 @@ mod tests {
         let mut store = tmp_store("progress");
         let jobs = grid_jobs();
         let seen = M::new((0usize, 0usize, 0usize)); // planned_total, starts, dones
-        run_sweep(&jobs, &mut store, &SmokeRunner, 2, false, &|e| {
+        run_sweep(&jobs, &mut store, &SmokeRunner, 2, false, None, &|e| {
             let mut g = seen.lock().unwrap();
             match e {
                 SweepEvent::Planned { total, .. } => g.0 = total,

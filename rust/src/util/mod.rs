@@ -10,4 +10,5 @@ pub mod logging;
 pub mod rng;
 pub mod stats;
 pub mod suggest;
+pub mod table;
 pub mod threadpool;

@@ -1,0 +1,114 @@
+//! Shared fixed-width table renderer.
+//!
+//! Every human-facing table in the CLI — `runs list`, `runs compare`,
+//! `exp/fleet`, and the live `runs tail` / `sweep --watch` views — goes
+//! through this one renderer so batch and live output stay visually
+//! consistent. Columns are sized to their widest cell, separated by two
+//! spaces, and aligned per column; trailing whitespace is trimmed so the
+//! output is stable under diffing and greps.
+
+/// Per-column alignment. Columns beyond the provided alignment slice
+/// default to [`Align::Right`], which suits numeric data.
+#[derive(Clone, Copy, PartialEq, Eq, Debug)]
+pub enum Align {
+    Left,
+    Right,
+}
+
+fn width_of(header: &[&str], rows: &[Vec<String>], col: usize) -> usize {
+    let mut w = header.get(col).map(|h| h.len()).unwrap_or(0);
+    for row in rows {
+        if let Some(cell) = row.get(col) {
+            w = w.max(cell.len());
+        }
+    }
+    w
+}
+
+fn render_line(cells: &[String], widths: &[usize], aligns: &[Align]) -> String {
+    let mut line = String::new();
+    for (i, w) in widths.iter().enumerate() {
+        if i > 0 {
+            line.push_str("  ");
+        }
+        let cell = cells.get(i).map(String::as_str).unwrap_or("");
+        match aligns.get(i).copied().unwrap_or(Align::Right) {
+            Align::Left => {
+                line.push_str(cell);
+                for _ in cell.len()..*w {
+                    line.push(' ');
+                }
+            }
+            Align::Right => {
+                for _ in cell.len()..*w {
+                    line.push(' ');
+                }
+                line.push_str(cell);
+            }
+        }
+    }
+    while line.ends_with(' ') {
+        line.pop();
+    }
+    line
+}
+
+/// Render `header` + `rows` as an aligned table. Returns the table as a
+/// string with one trailing `\n` per line (including the last).
+pub fn render(header: &[&str], rows: &[Vec<String>], aligns: &[Align]) -> String {
+    let cols = rows
+        .iter()
+        .map(Vec::len)
+        .chain(std::iter::once(header.len()))
+        .max()
+        .unwrap_or(0);
+    let widths: Vec<usize> = (0..cols).map(|c| width_of(header, rows, c)).collect();
+    let mut out = String::new();
+    let head: Vec<String> = header.iter().map(|h| (*h).to_string()).collect();
+    out.push_str(&render_line(&head, &widths, aligns));
+    out.push('\n');
+    for row in rows {
+        out.push_str(&render_line(row, &widths, aligns));
+        out.push('\n');
+    }
+    out
+}
+
+/// Right-align every column — the historical `print_aligned` behaviour
+/// used by `runs list` / `runs compare`.
+pub fn render_right(header: &[&str], rows: &[Vec<String>]) -> String {
+    render(header, rows, &[])
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn right_alignment_and_widths() {
+        let t = render_right(
+            &["a", "long"],
+            &[
+                vec!["1".into(), "2".into()],
+                vec!["300".into(), "4".into()],
+            ],
+        );
+        assert_eq!(t, "  a  long\n  1     2\n300     4\n");
+    }
+
+    #[test]
+    fn left_columns_pad_right_and_trim_trailing() {
+        let t = render(
+            &["name", "n"],
+            &[vec!["ab".into(), "1".into()], vec!["long".into(), "22".into()]],
+            &[Align::Left],
+        );
+        assert_eq!(t, "name   n\nab     1\nlong  22\n");
+    }
+
+    #[test]
+    fn ragged_rows_do_not_panic() {
+        let t = render(&["a"], &[vec![], vec!["1".into(), "2".into()]], &[]);
+        assert!(t.contains('2'));
+    }
+}

@@ -1,0 +1,328 @@
+//! Observability contract tests: the teed event stream, the offline
+//! replay synthesized from a stored [`RunRecord`], and the live
+//! [`FileSink`] serialization path must all agree byte-for-byte, and
+//! the tolerant parser must survive arbitrary corruption — truncation
+//! at every byte offset and single-bit flips — without panicking.
+//! Everything here runs on the engine-free `SmokeRunner`; the
+//! engine-gated case at the bottom proves the same contract for a real
+//! in-process training run with a live tee attached.
+
+use std::path::{Path, PathBuf};
+
+use fedcompress::baselines::registry::StrategyRegistry;
+use fedcompress::config::FedConfig;
+use fedcompress::obs::sink::{BoundedSink, EventSink, FileSink};
+use fedcompress::obs::stream::{
+    parse_stream, record_stream_events, render_stream, StreamEvent, StreamHeader,
+};
+use fedcompress::obs::view::RunView;
+use fedcompress::store::{key_hex, RunStore};
+use fedcompress::sweep::{run_sweep, SmokeRunner, SweepEvent, SweepSpec};
+
+fn tmp(name: &str) -> PathBuf {
+    let dir = std::env::temp_dir()
+        .join("fedcompress_obs_stream")
+        .join(name);
+    let _ = std::fs::remove_dir_all(&dir);
+    dir
+}
+
+fn quiet(_: SweepEvent) {}
+
+fn grid(strategies: &[&str]) -> (FedConfig, SweepSpec) {
+    let mut cfg = FedConfig::quick("cifar10");
+    cfg.rounds = 4;
+    let spec = SweepSpec {
+        strategies: strategies.iter().map(|s| s.to_string()).collect(),
+        seeds: vec![41],
+        ..SweepSpec::default()
+    };
+    (cfg, spec)
+}
+
+/// Smoke-sweep the given strategies into `<dir>/store`, teeing one
+/// stream file per job into `<dir>/store/events`.
+fn sweep_into(dir: &Path, strategies: &[&str]) -> (RunStore, PathBuf) {
+    let (cfg, spec) = grid(strategies);
+    let jobs = spec.expand(&cfg, &StrategyRegistry::builtin()).unwrap();
+    let mut store = RunStore::open(&dir.join("store")).unwrap();
+    let events_dir = dir.join("store").join("events");
+    run_sweep(&jobs, &mut store, &SmokeRunner, 4, false, Some(&events_dir), &quiet).unwrap();
+    (store, events_dir)
+}
+
+fn stream_path(events_dir: &Path, key: u64) -> PathBuf {
+    events_dir.join(format!("{}.jsonl", key_hex(key)))
+}
+
+/// One small teed stream (single strategy, single seed) as corruption
+/// fodder for the fuzz tests.
+fn demo_stream(name: &str) -> String {
+    let dir = tmp(name);
+    let (store, events_dir) = sweep_into(&dir, &["fedcompress"]);
+    let key = store.keys()[0];
+    std::fs::read_to_string(stream_path(&events_dir, key)).unwrap()
+}
+
+/// The headline guarantee, per registered strategy: the sweep's teed
+/// stream file, the replay synthesized from the stored record, and the
+/// live `FileSink` serialization of the same events are byte-identical,
+/// and all of them render into the same error-free `runs tail` view.
+#[test]
+fn teed_stream_matches_record_replay_for_every_strategy() {
+    let dir = tmp("replay_equality");
+    let all = StrategyRegistry::builtin().names();
+    let (store, events_dir) = sweep_into(&dir, &all);
+    let keys = store.keys();
+    assert_eq!(keys.len(), all.len());
+    for key in keys {
+        let rec = store.get(key).unwrap().unwrap();
+        let teed = std::fs::read_to_string(stream_path(&events_dir, key)).unwrap();
+
+        // offline synthesis from the stored record
+        let (events, errors) = record_stream_events(&rec);
+        assert!(errors.is_empty(), "key {}", key_hex(key));
+        let synthesized = render_stream(&StreamHeader::for_record(&rec), &events);
+        assert_eq!(teed, synthesized, "key {}", key_hex(key));
+
+        // the live-sink path: emitting the same events through a
+        // FileSink (bounded channel + writer thread) must serialize to
+        // the identical bytes, seq stamping included
+        let live_path = dir.join("live").join(format!("{}.jsonl", key_hex(key)));
+        let sink = FileSink::create(&live_path, &StreamHeader::for_record(&rec), 4096).unwrap();
+        for e in &events {
+            sink.emit(e);
+        }
+        assert_eq!(sink.finish().unwrap(), 0);
+        let lived = std::fs::read_to_string(&live_path).unwrap();
+        assert_eq!(lived, synthesized, "key {}", key_hex(key));
+
+        // both replay into the same rendered view, error-free
+        let replay = parse_stream(&teed);
+        assert!(replay.errors.is_empty(), "key {}", key_hex(key));
+        let view = RunView::from_replay(&replay).render();
+        let live_view = RunView::from_replay(&parse_stream(&lived)).render();
+        assert_eq!(view, live_view);
+        assert!(view.contains("final round"), "{view}");
+        assert!(view.contains("0 parse error"), "{view}");
+        assert!(view.contains(&key_hex(key)), "{view}");
+    }
+}
+
+/// A fully cached re-sweep executes nothing but still restores a
+/// deleted stream file (and leaves the surviving ones byte-identical).
+#[test]
+fn cached_sweep_restores_missing_tee_files() {
+    let dir = tmp("cache_tee");
+    let (mut store, events_dir) = sweep_into(&dir, &["fedavg", "fedcompress"]);
+    let keys = store.keys();
+    let victim = stream_path(&events_dir, keys[0]);
+    let survivor = stream_path(&events_dir, keys[1]);
+    let survivor_before = std::fs::read_to_string(&survivor).unwrap();
+    std::fs::remove_file(&victim).unwrap();
+
+    let (cfg, spec) = grid(&["fedavg", "fedcompress"]);
+    let jobs = spec.expand(&cfg, &StrategyRegistry::builtin()).unwrap();
+    let out = run_sweep(&jobs, &mut store, &SmokeRunner, 2, false, Some(&events_dir), &quiet)
+        .unwrap();
+    assert_eq!(out.executed, 0, "cache must absorb every job");
+    assert_eq!(out.cached, 2);
+
+    let rec = store.get(keys[0]).unwrap().unwrap();
+    let restored = std::fs::read_to_string(&victim).unwrap();
+    let (events, _) = record_stream_events(&rec);
+    assert_eq!(restored, render_stream(&StreamHeader::for_record(&rec), &events));
+    assert_eq!(std::fs::read_to_string(&survivor).unwrap(), survivor_before);
+}
+
+/// Truncation at *every* byte offset: the parser and the view renderer
+/// must never panic, whatever half-line the cut leaves behind.
+#[test]
+fn parse_and_render_survive_truncation_at_every_byte_offset() {
+    let text = demo_stream("truncate");
+    let bytes = text.as_bytes();
+    assert!(bytes.len() > 200, "fixture unexpectedly small");
+    for cut in 0..=bytes.len() {
+        let s = String::from_utf8_lossy(&bytes[..cut]);
+        let replay = parse_stream(&s);
+        let _ = RunView::from_replay(&replay).render();
+    }
+}
+
+/// Single-bit flips anywhere in the stream: damage stays per-line —
+/// counted, never fatal, never a panic.
+#[test]
+fn parse_and_render_survive_single_bit_flips() {
+    let text = demo_stream("bitflip");
+    let bytes = text.as_bytes().to_vec();
+    for i in 0..bytes.len() {
+        let mut mutated = bytes.clone();
+        mutated[i] ^= 1 << (i % 8);
+        let s = String::from_utf8_lossy(&mutated);
+        let replay = parse_stream(&s);
+        assert!(replay.errors.len() <= s.lines().count());
+        let _ = RunView::from_replay(&replay).render();
+    }
+}
+
+/// Garbage lines appended to a clean stream surface as per-line parse
+/// errors in the rendered view; every valid event still replays.
+#[test]
+fn corrupt_lines_are_counted_not_fatal() {
+    let text = demo_stream("garbage");
+    let clean = parse_stream(&text);
+    assert!(clean.errors.is_empty());
+    let n = clean.events.len();
+
+    let dirty = format!("{text}not json at all\n{{\"kind\":\"from_the_future\"}}\n");
+    let replay = parse_stream(&dirty);
+    assert_eq!(replay.events.len(), n, "valid events must all survive");
+    assert_eq!(replay.errors.len(), 2);
+    let view = RunView::from_replay(&replay).render();
+    assert!(view.contains("2 parse error(s)"), "{view}");
+    assert!(view.contains("final round"), "{view}");
+}
+
+/// A second EVNT1 header mid-stream is an error line, not a header
+/// swap: the first identity wins.
+#[test]
+fn duplicate_header_is_rejected_per_line() {
+    let text = demo_stream("dup_header");
+    let header_line = text.lines().next().unwrap().to_string();
+    let dirty = format!("{text}{header_line}\n");
+    let replay = parse_stream(&dirty);
+    assert_eq!(replay.errors.len(), 1);
+    assert!(replay.errors[0].error.contains("extra stream header"));
+    let first = parse_stream(&text).header.unwrap();
+    assert_eq!(replay.header.unwrap().run, first.run);
+}
+
+/// The non-blocking contract through the public API: with nothing
+/// draining the channel, every emit past capacity returns immediately
+/// and increments the drop counter; seq keeps advancing so readers see
+/// the loss as a gap.
+#[test]
+fn bounded_sink_overflow_drops_without_blocking() {
+    let (tx, rx) = std::sync::mpsc::sync_channel(2);
+    let sink = BoundedSink::new(tx);
+    for round in 0..10 {
+        sink.emit(&StreamEvent::RoundOps {
+            round,
+            stragglers: 0,
+            peak_parked: 0,
+            sim_ms: 0.0,
+        });
+    }
+    assert_eq!(sink.offered(), 10);
+    assert_eq!(sink.dropped(), 8);
+    let delivered: Vec<String> = rx.try_iter().collect();
+    assert_eq!(delivered.len(), 2);
+    let replay = parse_stream(&delivered.join("\n"));
+    assert!(replay.errors.is_empty());
+    assert_eq!(replay.events.len(), 2);
+}
+
+// ---------------------------------------------------------------------------
+// engine-gated: a real run with a live tee attached
+// ---------------------------------------------------------------------------
+
+fn engine() -> Option<fedcompress::runtime::Engine> {
+    let d = fedcompress::runtime::artifacts::default_dir();
+    if !d.join("manifest.json").exists() {
+        eprintln!("skipping: artifacts not built");
+        return None;
+    }
+    Some(fedcompress::runtime::Engine::load(&d).unwrap())
+}
+
+/// The acceptance criterion on a real training run: the stream teed
+/// live during `run_with_strategy_sink` equals the replay synthesized
+/// from the stored record, byte for byte, once the live-only transport
+/// detail is set aside — the per-slot forensic lines, and the parked
+/// reorder peak inside `round_ops` (the record deliberately keeps
+/// neither; replay zeroes the peak).
+#[test]
+fn live_tee_equals_record_replay_for_a_real_run() {
+    let Some(engine) = engine() else { return };
+    let mut cfg = FedConfig::quick("cifar10");
+    cfg.rounds = 3;
+    cfg.clients = 3;
+    cfg.local_epochs = 2;
+    cfg.server_epochs = 1;
+    cfg.train_size = 192;
+    cfg.test_size = 96;
+    cfg.ood_size = 64;
+    cfg.unlabeled_per_client = 16;
+    cfg.warmup_rounds = 1;
+    cfg.validate().unwrap();
+
+    let dir = tmp("live_tee");
+    let key = fedcompress::store::run_key("fedavg", &cfg);
+    let live_path = dir.join("events").join(format!("{}.jsonl", key_hex(key)));
+    let header = StreamHeader::new(key, &cfg, "fedavg");
+    let sink = FileSink::create(&live_path, &header, 4096).unwrap();
+
+    let mut plugin = StrategyRegistry::builtin().build("fedavg", &cfg).unwrap();
+    let data = fedcompress::coordinator::server::build_data(&engine, &cfg).unwrap();
+    let mut transport = fedcompress::net::InProcess;
+    let result = fedcompress::coordinator::run_with_strategy_sink(
+        &engine,
+        &cfg,
+        plugin.as_mut(),
+        &data,
+        &mut transport,
+        None,
+        &sink,
+    )
+    .unwrap();
+    assert_eq!(sink.finish().unwrap(), 0);
+
+    let rec = fedcompress::store::RunRecord::from_result(&cfg, &result);
+    assert_eq!(rec.key, key);
+    let (events, errors) = record_stream_events(&rec);
+    assert!(errors.is_empty());
+    let synthesized = render_stream(&StreamHeader::for_record(&rec), &events);
+
+    let live_text = std::fs::read_to_string(&live_path).unwrap();
+    let live = parse_stream(&live_text);
+    assert!(live.errors.is_empty());
+    // the live stream additionally carries per-slot arrival lines, and
+    // its round_ops report the reorder window's real high-water mark
+    // (≥ 1 whenever anything uploaded); everything else — order,
+    // values, round_ops placement — matches
+    let canonical: Vec<StreamEvent> = live
+        .events
+        .iter()
+        .filter(|e| !matches!(e, StreamEvent::Slot { .. }))
+        .map(|e| match e {
+            StreamEvent::RoundOps {
+                round,
+                stragglers,
+                sim_ms,
+                ..
+            } => StreamEvent::RoundOps {
+                round: *round,
+                stragglers: *stragglers,
+                peak_parked: 0,
+                sim_ms: *sim_ms,
+            },
+            other => other.clone(),
+        })
+        .collect();
+    assert!(live.events.len() > canonical.len(), "slot lines expected");
+    let refiltered = render_stream(&StreamHeader::for_record(&rec), &canonical);
+    assert_eq!(refiltered, synthesized);
+
+    // the normalized live stream and the record replay render the same
+    // view, and the live view itself names the final round
+    let norm = fedcompress::obs::stream::StreamReplay {
+        header: live.header.clone(),
+        events: canonical,
+        errors: Vec::new(),
+    };
+    let norm_view = RunView::from_replay(&norm).render();
+    let replay_view = RunView::from_replay(&parse_stream(&synthesized)).render();
+    assert_eq!(norm_view, replay_view);
+    let live_view = RunView::from_replay(&live).render();
+    assert!(live_view.contains(&format!("final round {}", cfg.rounds - 1)));
+}

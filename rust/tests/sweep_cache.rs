@@ -39,7 +39,7 @@ fn sweep_into(dir: &Path) -> (RunStore, SweepOutcome) {
     let (cfg, spec) = grid();
     let jobs = spec.expand(&cfg, &StrategyRegistry::builtin()).unwrap();
     let mut store = RunStore::open(dir).unwrap();
-    let out = run_sweep(&jobs, &mut store, &SmokeRunner, 4, false, &quiet).unwrap();
+    let out = run_sweep(&jobs, &mut store, &SmokeRunner, 4, false, None, &quiet).unwrap();
     (store, out)
 }
 
@@ -58,7 +58,7 @@ fn identical_sweeps_cache_fully_and_never_drift() {
     // same sweep, same store: zero re-execution
     let (cfg, spec) = grid();
     let jobs = spec.expand(&cfg, &StrategyRegistry::builtin()).unwrap();
-    let second = run_sweep(&jobs, &mut store_a, &SmokeRunner, 4, false, &quiet).unwrap();
+    let second = run_sweep(&jobs, &mut store_a, &SmokeRunner, 4, false, None, &quiet).unwrap();
     assert_eq!(second.executed, 0, "cache must absorb every job");
     assert_eq!(second.cached, 6);
 
@@ -80,7 +80,7 @@ fn progress_stream_reports_cache_hits() {
     let (cfg, spec) = grid();
     let jobs = spec.expand(&cfg, &StrategyRegistry::builtin()).unwrap();
     let cached_seen = Mutex::new(0usize);
-    run_sweep(&jobs, &mut store, &SmokeRunner, 2, false, &|e| {
+    run_sweep(&jobs, &mut store, &SmokeRunner, 2, false, None, &|e| {
         if let SweepEvent::JobDone { cached: true, .. } = e {
             *cached_seen.lock().unwrap() += 1;
         }
@@ -104,7 +104,7 @@ fn spec_file_drives_the_same_pipeline() {
     let jobs = spec.expand(&cfg, &StrategyRegistry::builtin()).unwrap();
     assert_eq!(jobs.len(), 2 * 2 * 2);
     let mut store = RunStore::open(&dir.join("store")).unwrap();
-    let out = run_sweep(&jobs, &mut store, &SmokeRunner, 4, false, &quiet).unwrap();
+    let out = run_sweep(&jobs, &mut store, &SmokeRunner, 4, false, None, &quiet).unwrap();
     assert_eq!(out.executed, 8);
     // the swept axis really landed in the stored configs
     let mut c_maxes: Vec<usize> = store
