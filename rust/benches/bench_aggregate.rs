@@ -1,31 +1,11 @@
-//! Aggregation + score benchmarks: FedAvg over M client vectors and the
-//! representation-score SVD — the two pure-rust stages of every round.
+//! Aggregation + score benchmarks — thin wrapper over the shared suite
+//! function in `fedcompress::bench::suite`: FedAvg over M client
+//! vectors and the representation-score SVD, the two pure-rust stages
+//! of every round. Same rows as `bench run --area aggregate`.
 
-use fedcompress::bench::{bench, report_throughput};
-use fedcompress::clustering::representation_score;
-use fedcompress::coordinator::aggregate::fedavg;
-use fedcompress::util::rng::Rng;
-use std::hint::black_box;
+use fedcompress::bench::suite::{aggregate, SuiteCtx};
 
 fn main() {
-    let mut rng = Rng::new(3);
-    for &(p, m) in &[(19_674usize, 20usize), (100_000, 20), (19_674, 100)] {
-        let clients: Vec<Vec<f32>> = (0..m)
-            .map(|_| (0..p).map(|_| rng.normal()).collect())
-            .collect();
-        let weights: Vec<usize> = (0..m).map(|i| 50 + i).collect();
-        let r = bench(&format!("fedavg_p{p}_m{m}"), || {
-            let agg = fedavg(black_box(&clients), black_box(&weights)).unwrap();
-            black_box(agg[0]);
-        });
-        report_throughput(&r, p * m * 4);
-    }
-
-    for &(n, d) in &[(64usize, 32usize), (256, 32), (64, 64)] {
-        let emb: Vec<f32> = (0..n * d).map(|_| rng.normal()).collect();
-        bench(&format!("repr_score_n{n}_d{d}"), || {
-            let s = representation_score(black_box(&emb), n, d);
-            black_box(s);
-        });
-    }
+    let mut ctx = SuiteCtx::new(false);
+    aggregate(&mut ctx).unwrap();
 }

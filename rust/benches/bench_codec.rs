@@ -1,101 +1,13 @@
-//! Codec hot-path benchmarks: encode/decode of clustered model updates
-//! at realistic model sizes — the L3 coordinator pays this per client
-//! per round in both directions — plus the registry-built pipelines
-//! (per-stage primitives and full `topk|kmeans|huffman`-style stacks)
-//! the strategies now declare.
+//! Codec hot-path benchmarks — thin wrapper over the shared suite
+//! functions in `fedcompress::bench::suite`, so `cargo bench` and the
+//! headless `bench run --area codec` verb measure identical code and
+//! emit identical row names (pipelines, per-stage profile, quantize /
+//! huffman / flat primitives).
 
-use fedcompress::bench::{bench, report_throughput};
-use fedcompress::clustering::CentroidState;
-use fedcompress::codec::{Codec, CodecInput, CodecRegistry};
-use fedcompress::compression::codec::{decode, encode, quantize_and_encode};
-use fedcompress::compression::huffman::{huffman_decode, huffman_encode};
-use fedcompress::compression::kmeans::kmeans_1d;
-use fedcompress::util::rng::Rng;
-use std::hint::black_box;
-
-/// Registry pipelines: encode + decode MiB/s per spec, at one
-/// realistic model size. Dense-input MiB are the throughput unit for
-/// encode; payload MiB for decode.
-fn bench_pipelines(rng: &mut Rng) {
-    let p = 19_674usize;
-    let theta: Vec<f32> = (0..p).map(|_| rng.normal() * 0.2).collect();
-    let cents = CentroidState::init_from_weights(&theta, 16, 32, rng);
-    let reg = CodecRegistry::builtin();
-
-    for spec in [
-        "dense",
-        "topk(keep=0.1)",
-        "kmeans(c=16,iters=25)",
-        "codebook",
-        "topk(keep=0.6)|kmeans(c=15,iters=25)|huffman",
-        "codebook|huffman",
-        "codebook|delta",
-    ] {
-        let pipe = reg.build(spec).unwrap();
-        let input = CodecInput {
-            theta: &theta,
-            centroids: Some(&cents),
-            stream: fedcompress::codec::stream::FINAL,
-        };
-        let r = bench(&format!("pipe_encode[{spec}]"), || {
-            let mut enc_rng = Rng::new(7);
-            let blob = pipe.encode(black_box(&input), &mut enc_rng).unwrap();
-            black_box(blob.payload.len());
-        });
-        report_throughput(&r, 4 * p);
-
-        // the decode-bench blob comes from a FRESH sender instance:
-        // the loop above advanced `pipe`'s delta stream state, and a
-        // residual blob would be undecodable by a cold peer. A fresh
-        // sender ships the flat baseline form, which a fresh peer
-        // decodes repeatedly without needing stream history.
-        let blob = reg.build(spec).unwrap().encode(&input, &mut Rng::new(7)).unwrap();
-        let peer = reg.build(spec).unwrap();
-        peer.decode(&blob.payload).unwrap();
-        let r = bench(&format!("pipe_decode[{spec}]"), || {
-            let out = peer.decode(black_box(&blob.payload)).unwrap();
-            black_box(out.len());
-        });
-        report_throughput(&r, blob.payload.len());
-    }
-}
+use fedcompress::bench::suite::{codec_pipelines, codec_primitives, SuiteCtx};
 
 fn main() {
-    let mut rng = Rng::new(1);
-    bench_pipelines(&mut rng);
-    for &(p, c) in &[(19_674usize, 16usize), (19_674, 32), (100_000, 16)] {
-        let weights: Vec<f32> = (0..p).map(|_| rng.normal() * 0.2).collect();
-        let (cb, _, _) = kmeans_1d(&weights, c, 25, &mut rng);
-
-        let r = bench(&format!("quantize_encode_p{p}_c{c}"), || {
-            let (enc, _) = quantize_and_encode(black_box(&weights), black_box(&cb));
-            black_box(enc.wire_bytes());
-        });
-        report_throughput(&r, p * 4);
-
-        let (enc, _) = quantize_and_encode(&weights, &cb);
-        let r = bench(&format!("decode_p{p}_c{c}"), || {
-            let out = decode(black_box(&enc.bytes)).unwrap();
-            black_box(out.0.len());
-        });
-        report_throughput(&r, enc.bytes.len());
-
-        // pure huffman on the index stream
-        let idx: Vec<u32> = (0..p).map(|_| rng.below(c) as u32).collect();
-        bench(&format!("huffman_encode_p{p}_c{c}"), || {
-            let e = huffman_encode(black_box(&idx), c);
-            black_box(e.payload_bits);
-        });
-        let henc = huffman_encode(&idx, c);
-        bench(&format!("huffman_decode_p{p}_c{c}"), || {
-            let d = huffman_decode(black_box(&henc)).unwrap();
-            black_box(d.len());
-        });
-
-        // flat-pack path (encode() picks it for uniform indices)
-        bench(&format!("flat_encode_p{p}_c{c}"), || {
-            let e = encode(black_box(&cb), black_box(&idx));
-            black_box(e.bytes.len());
-        });
-    }
+    let mut ctx = SuiteCtx::new(false);
+    codec_pipelines(&mut ctx).unwrap();
+    codec_primitives(&mut ctx).unwrap();
 }

@@ -1,38 +1,12 @@
-//! k-means benchmarks: the server re-fits codebooks (FedZip per upload;
-//! FedCompress at warmup exit / final snap), so Lloyd iterations sit on
-//! the coordinator path.
+//! k-means benchmarks — thin wrapper over the shared suite function in
+//! `fedcompress::bench::suite` (the server re-fits codebooks: FedZip
+//! per upload, FedCompress at warmup exit / final snap, so Lloyd
+//! iterations sit on the coordinator path). Same rows as the `kmeans`
+//! suite of `bench run --area codec`.
 
-use fedcompress::bench::bench;
-use fedcompress::compression::kmeans::{assign_sorted, kmeans_1d, kmeans_pp_init};
-use fedcompress::util::rng::Rng;
-use std::hint::black_box;
+use fedcompress::bench::suite::{kmeans, SuiteCtx};
 
 fn main() {
-    let mut rng = Rng::new(2);
-    for &p in &[19_674usize, 100_000] {
-        let weights: Vec<f32> = (0..p).map(|_| rng.normal() * 0.2).collect();
-
-        for &c in &[15usize, 16, 32] {
-            bench(&format!("kmeanspp_init_p{p}_c{c}"), || {
-                let mut r = Rng::new(3);
-                let cb = kmeans_pp_init(black_box(&weights), c, &mut r);
-                black_box(cb.len());
-            });
-            bench(&format!("kmeans_full_p{p}_c{c}"), || {
-                let mut r = Rng::new(3);
-                let (cb, _, _) = kmeans_1d(black_box(&weights), c, 25, &mut r);
-                black_box(cb.len());
-            });
-        }
-
-        let mut r = Rng::new(3);
-        let (cb, _, _) = kmeans_1d(&weights, 16, 25, &mut r);
-        bench(&format!("assign_all_p{p}_c16"), || {
-            let mut acc = 0usize;
-            for &w in black_box(&weights) {
-                acc += assign_sorted(w, black_box(&cb));
-            }
-            black_box(acc);
-        });
-    }
+    let mut ctx = SuiteCtx::new(false);
+    kmeans(&mut ctx).unwrap();
 }

@@ -1,11 +1,11 @@
-//! Transport hot-path benchmarks: frame encode/decode, full protocol
-//! message round-trips, loopback TCP frame throughput — the
-//! per-client per-round cost a networked coordinator pays on top of
-//! the codec work `bench_codec` measures — and a fleet-scale mux
-//! smoke: N simulated clients streamed over a handful of sockets
-//! through `Mux` + `StreamAccumulator`, reporting throughput, the
-//! accumulator's reorder window, and peak RSS. Prints a MiB/s table
-//! plus one machine-readable `FLEET ...` line.
+//! Transport hot-path benchmarks. The micro suites (frame codec,
+//! protocol messages, loopback TCP) live in `fedcompress::bench::suite`
+//! and are shared with the headless `bench run --area net` verb — this
+//! target wraps them, then runs the fleet-scale mux smoke: N simulated
+//! clients streamed over a handful of sockets through `Mux` +
+//! `StreamAccumulator`, reporting throughput, the accumulator's
+//! reorder window, and peak RSS via one machine-readable `FLEET ...`
+//! line (CI's flat-memory gate greps it).
 //!
 //! Env knobs (CI's memory gate drives these):
 //!   FEDCOMPRESS_BENCH_CLIENTS     fleet size for the mux smoke
@@ -16,21 +16,15 @@
 use std::io::Read;
 use std::net::{TcpListener, TcpStream};
 use std::thread;
-use std::time::{Duration, Instant};
+use std::time::Duration;
 
-use fedcompress::bench::bench;
-use fedcompress::codec::StageBytes;
+use fedcompress::bench::suite::{net_micro, SuiteCtx};
 use fedcompress::coordinator::accumulate::{FedAvgFold, StreamAccumulator};
 use fedcompress::coordinator::strategy::ClientUpdate;
-use fedcompress::net::frame::{encode_frame, framed_len, read_frame, write_frame};
+use fedcompress::net::frame::write_frame;
 use fedcompress::net::mux::{Mux, MuxEvent};
-use fedcompress::net::proto::{Msg, Upload};
 use fedcompress::util::rng::Rng;
-use std::hint::black_box;
-
-fn mib_s(bytes_per_iter: usize, median_ns: f64) -> f64 {
-    (bytes_per_iter as f64 / (1 << 20) as f64) / (median_ns * 1e-9)
-}
+use fedcompress::util::timer::Stopwatch;
 
 /// Peak resident set of this process so far, in kB (`VmHWM` from
 /// /proc/self/status). None off Linux — the caller prints 0.
@@ -84,7 +78,7 @@ fn fleet_smoke(clients: usize, workers: usize, params: usize) {
     let mut mux = Mux::new(streams).unwrap();
     let mut acc = StreamAccumulator::new(Box::new(FedAvgFold::new()), clients);
 
-    let start = Instant::now();
+    let sw = Stopwatch::start();
     let mut events = Vec::new();
     let mut resolved = 0usize;
     while resolved < clients {
@@ -121,7 +115,7 @@ fn fleet_smoke(clients: usize, workers: usize, params: usize) {
     let out = acc.finish().unwrap();
     assert_eq!(out.clients, clients, "every upload folded");
     assert_eq!(out.theta.len(), params);
-    let elapsed = start.elapsed();
+    let secs = sw.elapsed_s();
 
     for c in 0..workers {
         mux.close(c); // releases the peers' read_to_end
@@ -130,7 +124,6 @@ fn fleet_smoke(clients: usize, workers: usize, params: usize) {
         p.join().unwrap();
     }
 
-    let secs = elapsed.as_secs_f64();
     println!(
         "FLEET clients={} workers={} params={} elapsed_ms={:.1} uploads_per_s={:.0} \
          peak_parked={} peak_rss_kb={}",
@@ -154,96 +147,8 @@ fn main() {
         return;
     }
 
-    let mut rng = Rng::new(1);
-    println!(
-        "{:<34} {:>12} {:>10}",
-        "case", "median_ns", "MiB/s"
-    );
-
-    // --- frame codec ------------------------------------------------------
-    for &size in &[1_000usize, 78_696, 1_000_000] {
-        let payload: Vec<u8> = (0..size).map(|_| rng.below(256) as u8).collect();
-        let r = bench(&format!("frame_encode_{size}B"), || {
-            let f = encode_frame(4, black_box(&payload));
-            black_box(f.len());
-        });
-        println!("{:<34} {:>12.0} {:>10.1}", r.name, r.median_ns, mib_s(size, r.median_ns));
-
-        let frame = encode_frame(4, &payload);
-        let r = bench(&format!("frame_decode_{size}B"), || {
-            let (ty, body) = read_frame(&mut black_box(&frame[..])).unwrap();
-            black_box((ty, body.len()));
-        });
-        println!("{:<34} {:>12.0} {:>10.1}", r.name, r.median_ns, mib_s(size, r.median_ns));
-    }
-
-    // --- full Upload message (the per-client per-round unit) --------------
-    let payload: Vec<u8> = (0..20_000).map(|_| rng.below(256) as u8).collect();
-    let upload = Msg::Upload(Upload {
-        round: 3,
-        client: 7,
-        score: 4.5,
-        n: 96,
-        mean_ce: 1.25,
-        mu: (0..32).map(|_| rng.normal()).collect(),
-        stages: vec![
-            StageBytes {
-                stage: "codebook".to_string(),
-                bytes: 24_000,
-            },
-            StageBytes {
-                stage: "huffman".to_string(),
-                bytes: 20_000,
-            },
-        ],
-        spec: "codebook|huffman".to_string(),
-        payload: payload.clone(),
-    });
-    let encoded = {
-        let mut buf = Vec::new();
-        upload.write_to(&mut buf).unwrap();
-        buf
-    };
-    let r = bench("upload_msg_encode_20kB", || {
-        let mut buf = Vec::with_capacity(encoded.len());
-        upload.write_to(&mut buf).unwrap();
-        black_box(buf.len());
-    });
-    println!("{:<34} {:>12.0} {:>10.1}", r.name, r.median_ns, mib_s(encoded.len(), r.median_ns));
-    let r = bench("upload_msg_decode_20kB", || {
-        let m = Msg::read_from(&mut black_box(&encoded[..])).unwrap();
-        black_box(m.kind());
-    });
-    println!("{:<34} {:>12.0} {:>10.1}", r.name, r.median_ns, mib_s(encoded.len(), r.median_ns));
-
-    // --- loopback TCP round-trip ------------------------------------------
-    // an echo peer: every received frame comes straight back
-    let listener = TcpListener::bind("127.0.0.1:0").unwrap();
-    let addr = listener.local_addr().unwrap();
-    let echo = thread::spawn(move || {
-        let (stream, _) = listener.accept().unwrap();
-        stream.set_nodelay(true).ok();
-        while let Ok((ty, payload)) = read_frame(&mut &stream) {
-            if write_frame(&mut &stream, ty, &payload).is_err() {
-                break;
-            }
-        }
-    });
-    let stream = TcpStream::connect(addr).unwrap();
-    stream.set_nodelay(true).ok();
-    for &size in &[1_000usize, 78_696, 1_000_000] {
-        let payload: Vec<u8> = (0..size).map(|_| rng.below(256) as u8).collect();
-        let r = bench(&format!("loopback_roundtrip_{size}B"), || {
-            write_frame(&mut &stream, 4, black_box(&payload)).unwrap();
-            let (_, body) = read_frame(&mut &stream).unwrap();
-            black_box(body.len());
-        });
-        // a round trip moves the frame both ways
-        let moved = 2 * framed_len(size);
-        println!("{:<34} {:>12.0} {:>10.1}", r.name, r.median_ns, mib_s(moved, r.median_ns));
-    }
-    drop(stream);
-    echo.join().unwrap();
+    let mut ctx = SuiteCtx::new(false);
+    net_micro(&mut ctx).unwrap();
 
     // --- fleet-scale mux smoke --------------------------------------------
     fleet_smoke(fleet_clients, 8, 256);

@@ -1,107 +1,11 @@
-//! PJRT runtime benchmarks: per-entry execution latency — the dominant
-//! cost of a federated round. One number per (dataset, entry).
+//! PJRT runtime benchmarks — thin wrapper over the shared suite
+//! function in `fedcompress::bench::suite`: per-entry execution
+//! latency, the dominant cost of a federated round. Skips cleanly when
+//! AOT artifacts are absent. Same rows as `bench run --area runtime`.
 
-use fedcompress::bench::bench;
-use fedcompress::runtime::artifacts::default_dir;
-use fedcompress::runtime::literals::Arg;
-use fedcompress::runtime::Engine;
-use fedcompress::util::rng::Rng;
-use std::hint::black_box;
+use fedcompress::bench::suite::{runtime, SuiteCtx};
 
 fn main() {
-    let dir = default_dir();
-    if !dir.join("manifest.json").exists() {
-        println!("SKIP bench_runtime: artifacts not built (run `make artifacts`)");
-        return;
-    }
-    let engine = Engine::load(&dir).unwrap();
-    let mut rng = Rng::new(4);
-
-    for dataset in ["cifar10", "speechcommands"] {
-        let ds = engine.manifest.dataset(dataset).unwrap().clone();
-        let p = ds.spec.param_count;
-        let (c, h, w) = ds.spec.input_shape;
-        let b = engine.manifest.batch;
-        let eb = engine.manifest.eval_batch;
-        let c_max = engine.manifest.c_max;
-
-        let theta = engine.init_theta(dataset).unwrap();
-        let mu: Vec<f32> = (0..c_max).map(|i| -0.5 + i as f32 / c_max as f32).collect();
-        let mask: Vec<f32> = (0..c_max).map(|i| (i < 16) as u8 as f32).collect();
-        let x: Vec<f32> = (0..b * c * h * w).map(|_| rng.normal()).collect();
-        let y: Vec<i32> = (0..b).map(|_| rng.below(ds.spec.num_classes) as i32).collect();
-        let xe: Vec<f32> = (0..eb * c * h * w).map(|_| rng.normal()).collect();
-        let ye: Vec<i32> = (0..eb).map(|_| rng.below(ds.spec.num_classes) as i32).collect();
-        let teacher = theta.clone();
-
-        engine.warmup(dataset).unwrap();
-
-        bench(&format!("{dataset}_train_step_p{p}"), || {
-            let out = engine
-                .run(
-                    dataset,
-                    "train_step",
-                    &[
-                        Arg::F32(&theta),
-                        Arg::F32(&mu),
-                        Arg::F32(&mask),
-                        Arg::F32(&x),
-                        Arg::I32(&y),
-                        Arg::Scalar(0.05),
-                        Arg::Scalar(0.5),
-                    ],
-                )
-                .unwrap();
-            black_box(out.len());
-        });
-
-        bench(&format!("{dataset}_distill_step_p{p}"), || {
-            let out = engine
-                .run(
-                    dataset,
-                    "distill_step",
-                    &[
-                        Arg::F32(&theta),
-                        Arg::F32(&teacher),
-                        Arg::F32(&mu),
-                        Arg::F32(&mask),
-                        Arg::F32(&x),
-                        Arg::Scalar(0.05),
-                        Arg::Scalar(0.5),
-                        Arg::Scalar(2.0),
-                    ],
-                )
-                .unwrap();
-            black_box(out.len());
-        });
-
-        bench(&format!("{dataset}_eval_step"), || {
-            let out = engine
-                .run(
-                    dataset,
-                    "eval_step",
-                    &[Arg::F32(&theta), Arg::F32(&xe), Arg::I32(&ye)],
-                )
-                .unwrap();
-            black_box(out.len());
-        });
-
-        bench(&format!("{dataset}_embed"), || {
-            let out = engine
-                .run(dataset, "embed", &[Arg::F32(&theta), Arg::F32(&xe)])
-                .unwrap();
-            black_box(out.len());
-        });
-
-        bench(&format!("{dataset}_snap_hlo"), || {
-            let out = engine
-                .run(
-                    dataset,
-                    "snap",
-                    &[Arg::F32(&theta), Arg::F32(&mu), Arg::F32(&mask)],
-                )
-                .unwrap();
-            black_box(out.len());
-        });
-    }
+    let mut ctx = SuiteCtx::new(false);
+    runtime(&mut ctx).unwrap();
 }

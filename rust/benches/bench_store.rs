@@ -1,84 +1,12 @@
-//! Run-store throughput: record encode/decode, content-key hashing,
-//! append, and the checksum-verifying open scan. No artifacts needed —
-//! records come from the sweep's synthetic runner.
+//! Run-store throughput — thin wrapper over the shared suite function
+//! in `fedcompress::bench::suite`: record encode/decode, content-key
+//! hashing, append, and the checksum-verifying open scan. No artifacts
+//! needed — records come from the sweep's synthetic runner. Same rows
+//! as `bench run --area store`.
 
-use fedcompress::bench::{bench, report_throughput};
-use fedcompress::config::FedConfig;
-use fedcompress::store::{run_key, RunRecord, RunStore};
-use fedcompress::sweep::{JobRunner, SmokeRunner, SweepJob};
-
-fn smoke_record(seed: u64) -> RunRecord {
-    let mut cfg = FedConfig::quick("cifar10");
-    cfg.seed = seed;
-    cfg.rounds = 20;
-    cfg.clients = 20;
-    let job = SweepJob {
-        idx: 0,
-        strategy: "fedcompress".to_string(),
-        cfg: cfg.clone(),
-        key: run_key("fedcompress", &cfg),
-    };
-    SmokeRunner.run(&job).unwrap()
-}
+use fedcompress::bench::suite::{store, SuiteCtx};
 
 fn main() {
-    let rec = smoke_record(1);
-    let body = rec.to_body_bytes();
-    println!(
-        "record: {} rounds, {} transfers, {} B body",
-        rec.rounds.len(),
-        rec.ledger.transfer_count(),
-        body.len()
-    );
-
-    let r = bench("store_record_encode", || {
-        std::hint::black_box(rec.to_body_bytes());
-    });
-    report_throughput(&r, body.len());
-
-    let r = bench("store_record_decode", || {
-        std::hint::black_box(RunRecord::from_body_bytes(&body).unwrap());
-    });
-    report_throughput(&r, body.len());
-
-    let cfg = FedConfig::paper("cifar10");
-    bench("store_run_key", || {
-        std::hint::black_box(run_key("fedcompress", &cfg));
-    });
-
-    // append + open over a populated store; append is measured once
-    // over a fixed batch (the adaptive harness would grow the file —
-    // and the derived index.json rewrite — without bound)
-    let dir = std::env::temp_dir().join("fedcompress_bench_store");
-    let _ = std::fs::remove_dir_all(&dir);
-    let mut store = RunStore::open(&dir).unwrap();
-    let records: Vec<RunRecord> = (0..64u64).map(smoke_record).collect();
-    let t0 = std::time::Instant::now();
-    for rec in &records {
-        store.append(rec).unwrap();
-    }
-    let total_ms = t0.elapsed().as_secs_f64() * 1e3;
-    println!(
-        "BENCH store_append_batch n={} total_ms={:.1} per_append_us={:.1}",
-        records.len(),
-        total_ms,
-        1e3 * total_ms / records.len() as f64
-    );
-    let per_entry = body.len() + 16;
-
-    let entries = store.metas().len();
-    let file_len = std::fs::metadata(dir.join("runs.fcr")).unwrap().len() as usize;
-    println!("store: {entries} entries, {file_len} B file");
-    let r = bench("store_open_scan", || {
-        std::hint::black_box(RunStore::open(&dir).unwrap());
-    });
-    report_throughput(&r, file_len);
-
-    let key = records[0].key;
-    let r = bench("store_get", || {
-        std::hint::black_box(store.get(key).unwrap().unwrap());
-    });
-    report_throughput(&r, per_entry);
-
-    let _ = std::fs::remove_dir_all(&dir);
+    let mut ctx = SuiteCtx::new(false);
+    store(&mut ctx).unwrap();
 }

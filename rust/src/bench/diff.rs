@@ -1,0 +1,277 @@
+//! `bench diff` — the name-wise regression gate over two
+//! [`BenchDoc`]s. Rows pair by `suite/name`; a pair regresses when
+//! the new median exceeds the old by strictly more than the threshold
+//! percentage. Missing / added rows and incomparable medians (NaN or
+//! non-positive) are reported but never fail the gate — only a
+//! measured slowdown does. Schema errors are the caller's problem and
+//! must fail hard (a baseline that stops parsing is not a pass).
+
+use std::collections::BTreeMap;
+
+use crate::util::json::Json;
+
+use super::schema::{BenchDoc, BenchRow};
+
+/// Default `--threshold-pct`: generous on purpose, since shared CI
+/// runners are noisy. Tighten per-invocation for local A/B runs.
+pub const DEFAULT_THRESHOLD_PCT: f64 = 25.0;
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum RowStatus {
+    /// Within threshold (includes improvements smaller than noise).
+    Ok,
+    /// New median faster than old by more than the threshold.
+    Improved,
+    /// New median slower than old by strictly more than the threshold.
+    Regressed,
+    /// A median on either side is NaN or non-positive — no ratio.
+    Incomparable,
+}
+
+impl RowStatus {
+    pub fn label(&self) -> &'static str {
+        match self {
+            RowStatus::Ok => "ok",
+            RowStatus::Improved => "improved",
+            RowStatus::Regressed => "REGRESSED",
+            RowStatus::Incomparable => "incomparable",
+        }
+    }
+}
+
+#[derive(Clone, Debug)]
+pub struct DiffRow {
+    pub id: String,
+    pub old_ns: f64,
+    pub new_ns: f64,
+    /// Percent change of the new median over the old; `None` when
+    /// incomparable.
+    pub delta_pct: Option<f64>,
+    pub status: RowStatus,
+}
+
+#[derive(Clone, Debug)]
+pub struct BenchDiff {
+    pub threshold_pct: f64,
+    pub rows: Vec<DiffRow>,
+    /// Row ids present in the baseline but absent from the fresh run.
+    pub missing: Vec<String>,
+    /// Row ids new in the fresh run (no baseline to compare against).
+    pub added: Vec<String>,
+}
+
+impl BenchDiff {
+    pub fn regressions(&self) -> usize {
+        self.rows.iter().filter(|r| r.status == RowStatus::Regressed).count()
+    }
+
+    pub fn incomparable(&self) -> usize {
+        self.rows.iter().filter(|r| r.status == RowStatus::Incomparable).count()
+    }
+
+    /// Human-readable report, one line per compared row plus
+    /// missing/added sections and a verdict line.
+    pub fn render(&self) -> String {
+        let mut out = String::new();
+        for r in &self.rows {
+            let delta = match r.delta_pct {
+                Some(d) => format!("{d:+.1}%"),
+                None => "n/a".to_string(),
+            };
+            out.push_str(&format!(
+                "{:<13} {:<48} {:>12.0} -> {:>12.0} ns  {}\n",
+                r.status.label(),
+                r.id,
+                r.old_ns,
+                r.new_ns,
+                delta
+            ));
+        }
+        for id in &self.missing {
+            out.push_str(&format!("missing       {id} (in baseline, not in fresh run)\n"));
+        }
+        for id in &self.added {
+            out.push_str(&format!("added         {id} (no baseline row)\n"));
+        }
+        let verdict = if self.regressions() > 0 { "FAIL" } else { "ok" };
+        out.push_str(&format!(
+            "bench diff: {} compared, {} regressed (threshold {:.0}%), {} incomparable, \
+             {} missing, {} added -> {}\n",
+            self.rows.len(),
+            self.regressions(),
+            self.threshold_pct,
+            self.incomparable(),
+            self.missing.len(),
+            self.added.len(),
+            verdict
+        ));
+        out
+    }
+
+    /// Machine-readable report (`bench diff --json`).
+    pub fn to_json(&self) -> Json {
+        let rows: Vec<Json> = self
+            .rows
+            .iter()
+            .map(|r| {
+                Json::obj(vec![
+                    ("id", Json::str(&r.id)),
+                    ("old_ns", Json::num(r.old_ns)),
+                    ("new_ns", Json::num(r.new_ns)),
+                    (
+                        "delta_pct",
+                        r.delta_pct.map(Json::num).unwrap_or(Json::Null),
+                    ),
+                    ("status", Json::str(r.status.label())),
+                ])
+            })
+            .collect();
+        Json::obj(vec![
+            ("bench", Json::str("diff")),
+            ("threshold_pct", Json::num(self.threshold_pct)),
+            ("compared", Json::from(self.rows.len())),
+            ("regressed", Json::from(self.regressions())),
+            ("incomparable", Json::from(self.incomparable())),
+            (
+                "missing",
+                Json::Arr(self.missing.iter().map(|s| Json::str(s)).collect()),
+            ),
+            (
+                "added",
+                Json::Arr(self.added.iter().map(|s| Json::str(s)).collect()),
+            ),
+            ("rows", Json::Arr(rows)),
+        ])
+    }
+}
+
+fn comparable(ns: f64) -> bool {
+    ns.is_finite() && ns > 0.0
+}
+
+/// Compare `new` against the `old` baseline.
+pub fn diff_docs(old: &BenchDoc, new: &BenchDoc, threshold_pct: f64) -> BenchDiff {
+    let index = |doc: &BenchDoc| -> BTreeMap<String, BenchRow> {
+        doc.rows.iter().map(|r| (r.id(), r.clone())).collect()
+    };
+    let old_rows = index(old);
+    let new_rows = index(new);
+
+    let mut rows = Vec::new();
+    let mut missing = Vec::new();
+    for (id, o) in &old_rows {
+        let Some(n) = new_rows.get(id) else {
+            missing.push(id.clone());
+            continue;
+        };
+        let (delta_pct, status) = if comparable(o.median_ns) && comparable(n.median_ns) {
+            let d = (n.median_ns - o.median_ns) / o.median_ns * 100.0;
+            let s = if d > threshold_pct {
+                RowStatus::Regressed
+            } else if d < -threshold_pct {
+                RowStatus::Improved
+            } else {
+                RowStatus::Ok
+            };
+            (Some(d), s)
+        } else {
+            (None, RowStatus::Incomparable)
+        };
+        rows.push(DiffRow {
+            id: id.clone(),
+            old_ns: o.median_ns,
+            new_ns: n.median_ns,
+            delta_pct,
+            status,
+        });
+    }
+    let added = new_rows
+        .keys()
+        .filter(|id| !old_rows.contains_key(*id))
+        .cloned()
+        .collect();
+    BenchDiff {
+        threshold_pct,
+        rows,
+        missing,
+        added,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn doc_with(rows: Vec<(&str, &str, f64)>) -> BenchDoc {
+        let mut doc = BenchDoc::new("codec", true);
+        for (suite, name, median_ns) in rows {
+            doc.rows.push(BenchRow {
+                suite: suite.to_string(),
+                name: name.to_string(),
+                median_ns,
+                p10_ns: median_ns,
+                p90_ns: median_ns,
+                iters: 1,
+                bytes: None,
+            });
+        }
+        doc
+    }
+
+    #[test]
+    fn exact_threshold_is_not_a_regression() {
+        let old = doc_with(vec![("s", "a", 100.0)]);
+        let new = doc_with(vec![("s", "a", 125.0)]);
+        let d = diff_docs(&old, &new, 25.0);
+        assert_eq!(d.rows[0].status, RowStatus::Ok);
+        // one tick past the boundary trips it
+        let worse = doc_with(vec![("s", "a", 125.1)]);
+        let d = diff_docs(&old, &worse, 25.0);
+        assert_eq!(d.rows[0].status, RowStatus::Regressed);
+        assert_eq!(d.regressions(), 1);
+    }
+
+    #[test]
+    fn improvements_and_noise_pass() {
+        let old = doc_with(vec![("s", "a", 100.0), ("s", "b", 100.0)]);
+        let new = doc_with(vec![("s", "a", 40.0), ("s", "b", 110.0)]);
+        let d = diff_docs(&old, &new, 25.0);
+        assert_eq!(d.rows[0].status, RowStatus::Improved);
+        assert_eq!(d.rows[1].status, RowStatus::Ok);
+        assert_eq!(d.regressions(), 0);
+    }
+
+    #[test]
+    fn degenerate_medians_never_fail_the_gate() {
+        let old = doc_with(vec![("s", "nan", f64::NAN), ("s", "zero", 0.0)]);
+        let new = doc_with(vec![("s", "nan", 100.0), ("s", "zero", 100.0)]);
+        let d = diff_docs(&old, &new, 25.0);
+        assert_eq!(d.incomparable(), 2);
+        assert_eq!(d.regressions(), 0);
+        assert!(d.rows.iter().all(|r| r.delta_pct.is_none()));
+    }
+
+    #[test]
+    fn missing_and_added_rows_are_reported_not_failed() {
+        let old = doc_with(vec![("s", "gone", 100.0), ("s", "kept", 100.0)]);
+        let new = doc_with(vec![("s", "kept", 100.0), ("s", "fresh", 100.0)]);
+        let d = diff_docs(&old, &new, 25.0);
+        assert_eq!(d.missing, vec!["s/gone".to_string()]);
+        assert_eq!(d.added, vec!["s/fresh".to_string()]);
+        assert_eq!(d.regressions(), 0);
+        let report = d.render();
+        assert!(report.contains("missing") && report.contains("added"));
+        assert!(report.contains("-> ok"));
+    }
+
+    #[test]
+    fn json_report_shape() {
+        let old = doc_with(vec![("s", "a", 100.0)]);
+        let new = doc_with(vec![("s", "a", 200.0)]);
+        let d = diff_docs(&old, &new, 25.0);
+        let j = d.to_json();
+        assert_eq!(j.get("regressed").unwrap().as_usize().unwrap(), 1);
+        let rows = j.get("rows").unwrap().as_arr().unwrap();
+        assert_eq!(rows[0].get("status").unwrap().as_str().unwrap(), "REGRESSED");
+    }
+}

@@ -1,12 +1,17 @@
 //! Micro-benchmark harness (criterion is not in the vendored crate
-//! set). `cargo bench` targets use `harness = false` and drive this.
+//! set). `cargo bench` targets use `harness = false` and drive this,
+//! as does the headless `bench run` CLI verb via [`suite`].
 //!
 //! Methodology: warmup runs, then adaptive iteration count targeting a
 //! minimum measurement window, then median / p10 / p90 over samples.
 //! Results print in a stable machine-greppable format:
 //!     BENCH <name> median_ns=<n> p10_ns=<n> p90_ns=<n> iters=<n>
 
-use std::time::Instant;
+pub mod diff;
+pub mod schema;
+pub mod suite;
+
+use crate::util::timer::Stopwatch;
 
 pub struct BenchResult {
     pub name: String,
@@ -16,25 +21,55 @@ pub struct BenchResult {
     pub iters_per_sample: usize,
 }
 
+/// Sampling knobs: the default profile targets ~20ms windows over 15
+/// samples; `quick()` trades precision for wall time so a CI job can
+/// sweep every suite in seconds.
+#[derive(Clone, Copy, Debug)]
+pub struct BenchOpts {
+    pub window_s: f64,
+    pub samples: usize,
+}
+
+impl BenchOpts {
+    pub fn full() -> BenchOpts {
+        BenchOpts {
+            window_s: 0.02,
+            samples: 15,
+        }
+    }
+
+    pub fn quick() -> BenchOpts {
+        BenchOpts {
+            window_s: 0.005,
+            samples: 7,
+        }
+    }
+}
+
 /// Measure `f`, returning per-iteration stats. `f` is called in batches;
 /// use `std::hint::black_box` inside to defeat dead-code elimination.
-pub fn bench<F: FnMut()>(name: &str, mut f: F) -> BenchResult {
-    // warmup + calibrate iteration count for a ~20ms sample window
-    let t0 = Instant::now();
-    f();
-    let one = t0.elapsed().as_secs_f64().max(1e-9);
-    let iters = ((0.02 / one).ceil() as usize).clamp(1, 100_000);
+pub fn bench<F: FnMut()>(name: &str, f: F) -> BenchResult {
+    bench_opts(name, BenchOpts::full(), f)
+}
 
-    let samples = 15usize;
+/// [`bench`] with explicit sampling knobs (the quick CI profile).
+pub fn bench_opts<F: FnMut()>(name: &str, opts: BenchOpts, mut f: F) -> BenchResult {
+    // warmup + calibrate iteration count for the target sample window
+    let sw = Stopwatch::start();
+    f();
+    let one = sw.elapsed_s().max(1e-9);
+    let iters = ((opts.window_s / one).ceil() as usize).clamp(1, 100_000);
+
+    let samples = opts.samples.max(3);
     let mut per_iter: Vec<f64> = Vec::with_capacity(samples);
     for _ in 0..samples {
-        let t = Instant::now();
+        let t = Stopwatch::start();
         for _ in 0..iters {
             f();
         }
-        per_iter.push(t.elapsed().as_secs_f64() * 1e9 / iters as f64);
+        per_iter.push(t.elapsed_s() * 1e9 / iters as f64);
     }
-    per_iter.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    per_iter.sort_by(|a, b| a.total_cmp(b));
     let result = BenchResult {
         name: name.to_string(),
         median_ns: per_iter[samples / 2],
@@ -49,10 +84,24 @@ pub fn bench<F: FnMut()>(name: &str, mut f: F) -> BenchResult {
     result
 }
 
-/// Pretty throughput helper: bytes processed per iteration -> GB/s line.
+/// Bytes-per-nanosecond → MiB/s (the unit ROADMAP tracks).
+pub fn mib_per_s(bytes_per_iter: usize, median_ns: f64) -> f64 {
+    if !median_ns.is_finite() || median_ns <= 0.0 {
+        return 0.0;
+    }
+    bytes_per_iter as f64 / (median_ns * 1e-9) / (1024.0 * 1024.0)
+}
+
+/// Pretty throughput helper: bytes processed per iteration ->
+/// MiB/s + GB/s line.
 pub fn report_throughput(r: &BenchResult, bytes_per_iter: usize) {
     let gbps = bytes_per_iter as f64 / r.median_ns;
-    println!("  -> {:.3} GB/s ({} B/iter)", gbps, bytes_per_iter);
+    println!(
+        "  -> {:.1} MiB/s ({:.3} GB/s, {} B/iter)",
+        mib_per_s(bytes_per_iter, r.median_ns),
+        gbps,
+        bytes_per_iter
+    );
 }
 
 #[cfg(test)]
@@ -70,5 +119,22 @@ mod tests {
         });
         assert!(r.median_ns > 0.0);
         assert!(r.p10_ns <= r.median_ns && r.median_ns <= r.p90_ns);
+    }
+
+    #[test]
+    fn quick_opts_use_fewer_samples() {
+        let q = BenchOpts::quick();
+        let f = BenchOpts::full();
+        assert!(q.samples < f.samples && q.window_s < f.window_s);
+    }
+
+    #[test]
+    fn mib_per_s_handles_degenerate_medians() {
+        assert_eq!(mib_per_s(1024, 0.0), 0.0);
+        assert_eq!(mib_per_s(1024, f64::NAN), 0.0);
+        assert_eq!(mib_per_s(1024, -5.0), 0.0);
+        // 1 MiB per millisecond = 1000 MiB/s
+        let v = mib_per_s(1024 * 1024, 1e6);
+        assert!((v - 1000.0).abs() < 1e-9);
     }
 }

@@ -1,0 +1,408 @@
+//! The versioned `BENCH_*.json` document — the one schema every perf
+//! artifact in the repo speaks: `bench run` suite output, the
+//! `runs export-bench` sweep summary, and the `bench diff` regression
+//! gate all read and write [`BenchDoc`].
+//!
+//! Format 2 envelope (format 1 was the ad-hoc sweep summary):
+//!
+//! ```json
+//! {"bench":"codec","format":2,"quick":true,
+//!  "host":{"os":"linux","arch":"x86_64","threads":8},
+//!  "fingerprint":"9f2c41d0a3b7e615",
+//!  "rows":[{"suite":"pipelines","name":"enc[dense]/p19674",
+//!           "median_ns":81234.0,"p10_ns":79000.0,"p90_ns":90210.0,
+//!           "iters":246,"bytes":78696,"mib_s":924.1}, ...]}
+//! ```
+//!
+//! `bytes` is the optional payload-size axis; when present the derived
+//! `mib_s` throughput is written alongside (recomputed on load, never
+//! trusted). Producers may attach extra top-level keys (the sweep
+//! summary keeps its legacy `records`/`runs`/`by_strategy` sections);
+//! they round-trip verbatim and the diff gate ignores them.
+
+use std::collections::BTreeMap;
+use std::fmt;
+use std::path::Path;
+
+use crate::util::hash::fnv1a64;
+use crate::util::json::Json;
+
+use super::mib_per_s;
+
+/// Current envelope version. Bump on any breaking row/envelope change;
+/// `bench diff` hard-fails on a mismatch rather than comparing apples
+/// to oranges.
+pub const BENCH_FORMAT: usize = 2;
+
+/// Typed schema errors — a malformed baseline must fail the gate with
+/// a diagnosable message, never a panic and never a silent pass.
+#[derive(Debug)]
+pub enum BenchError {
+    /// File-level I/O (missing baseline, unreadable path).
+    Io(String, std::io::Error),
+    /// Not JSON at all.
+    Json(String),
+    /// Valid JSON, wrong shape (missing key, wrong type, bad format).
+    Schema(String),
+}
+
+impl fmt::Display for BenchError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            BenchError::Io(path, e) => write!(f, "bench file {path}: {e}"),
+            BenchError::Json(m) => write!(f, "bench file is not valid JSON: {m}"),
+            BenchError::Schema(m) => write!(f, "bench schema violation: {m}"),
+        }
+    }
+}
+
+impl std::error::Error for BenchError {}
+
+/// One measured row. Identity for the regression gate is
+/// `suite/name`; everything else is payload.
+#[derive(Clone, Debug, PartialEq)]
+pub struct BenchRow {
+    pub suite: String,
+    pub name: String,
+    pub median_ns: f64,
+    pub p10_ns: f64,
+    pub p90_ns: f64,
+    pub iters: usize,
+    /// Payload-size axis: bytes processed per iteration, when the
+    /// benchmark has a natural byte count (codec/net/store rows).
+    pub bytes: Option<usize>,
+}
+
+impl BenchRow {
+    /// The name-wise diff key.
+    pub fn id(&self) -> String {
+        format!("{}/{}", self.suite, self.name)
+    }
+
+    /// Derived throughput where a byte count exists.
+    pub fn mib_s(&self) -> Option<f64> {
+        self.bytes.map(|b| mib_per_s(b, self.median_ns))
+    }
+
+    pub fn to_json(&self) -> Json {
+        let mut pairs = vec![
+            ("suite", Json::str(&self.suite)),
+            ("name", Json::str(&self.name)),
+            ("median_ns", Json::num(self.median_ns)),
+            ("p10_ns", Json::num(self.p10_ns)),
+            ("p90_ns", Json::num(self.p90_ns)),
+            ("iters", Json::from(self.iters)),
+        ];
+        if let Some(b) = self.bytes {
+            pairs.push(("bytes", Json::from(b)));
+            pairs.push(("mib_s", Json::num(mib_per_s(b, self.median_ns))));
+        }
+        Json::obj(pairs)
+    }
+
+    pub fn from_json(j: &Json) -> Result<BenchRow, BenchError> {
+        let field = |key: &str| {
+            j.get(key)
+                .map_err(|e| BenchError::Schema(format!("row: {e}")))
+        };
+        let num = |key: &str| {
+            field(key)?
+                .as_f64()
+                .map_err(|e| BenchError::Schema(format!("row {key}: {e}")))
+        };
+        let bytes = match j.opt("bytes") {
+            Some(v) => Some(
+                v.as_usize()
+                    .map_err(|e| BenchError::Schema(format!("row bytes: {e}")))?,
+            ),
+            None => None,
+        };
+        Ok(BenchRow {
+            suite: field("suite")?
+                .as_str()
+                .map_err(|e| BenchError::Schema(format!("row suite: {e}")))?
+                .to_string(),
+            name: field("name")?
+                .as_str()
+                .map_err(|e| BenchError::Schema(format!("row name: {e}")))?
+                .to_string(),
+            median_ns: num("median_ns")?,
+            p10_ns: num("p10_ns")?,
+            p90_ns: num("p90_ns")?,
+            iters: field("iters")?
+                .as_usize()
+                .map_err(|e| BenchError::Schema(format!("row iters: {e}")))?,
+            bytes,
+        })
+    }
+}
+
+/// Host descriptor — context for reading a baseline, deliberately
+/// coarse (fine-grained CPU identity would churn on every runner).
+#[derive(Clone, Debug, PartialEq)]
+pub struct HostInfo {
+    pub os: String,
+    pub arch: String,
+    pub threads: usize,
+}
+
+impl HostInfo {
+    pub fn current() -> HostInfo {
+        HostInfo {
+            os: std::env::consts::OS.to_string(),
+            arch: std::env::consts::ARCH.to_string(),
+            threads: std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1),
+        }
+    }
+
+    fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("os", Json::str(&self.os)),
+            ("arch", Json::str(&self.arch)),
+            ("threads", Json::from(self.threads)),
+        ])
+    }
+
+    fn from_json(j: &Json) -> Result<HostInfo, BenchError> {
+        let get = |key: &str| {
+            j.get(key)
+                .map_err(|e| BenchError::Schema(format!("host: {e}")))
+        };
+        Ok(HostInfo {
+            os: get("os")?
+                .as_str()
+                .map_err(|e| BenchError::Schema(format!("host os: {e}")))?
+                .to_string(),
+            arch: get("arch")?
+                .as_str()
+                .map_err(|e| BenchError::Schema(format!("host arch: {e}")))?
+                .to_string(),
+            threads: get("threads")?
+                .as_usize()
+                .map_err(|e| BenchError::Schema(format!("host threads: {e}")))?,
+        })
+    }
+}
+
+/// A full `BENCH_<area>.json` document.
+#[derive(Clone, Debug, PartialEq)]
+pub struct BenchDoc {
+    /// Area name (`codec`, `net`, `store`, `aggregate`, `runtime`,
+    /// `rounds`, `sweep`).
+    pub bench: String,
+    pub format: usize,
+    /// Whether rows were sampled with the quick profile — baselines
+    /// and fresh runs must agree on this to be comparable.
+    pub quick: bool,
+    pub host: HostInfo,
+    /// Config fingerprint (crate version + area + sampling profile) —
+    /// cheap drift detector for "this baseline predates a schema-
+    /// relevant change".
+    pub fingerprint: String,
+    pub rows: Vec<BenchRow>,
+    /// Producer-specific top-level sections, round-tripped verbatim
+    /// (the sweep summary's `records` / `runs` / `by_strategy`).
+    pub extra: BTreeMap<String, Json>,
+}
+
+const ENVELOPE_KEYS: [&str; 6] = ["bench", "format", "quick", "host", "fingerprint", "rows"];
+
+impl BenchDoc {
+    pub fn new(area: &str, quick: bool) -> BenchDoc {
+        let host = HostInfo::current();
+        BenchDoc {
+            bench: area.to_string(),
+            format: BENCH_FORMAT,
+            quick,
+            fingerprint: fingerprint(area, quick),
+            host,
+            rows: Vec::new(),
+            extra: BTreeMap::new(),
+        }
+    }
+
+    pub fn to_json(&self) -> Json {
+        let mut obj: BTreeMap<String, Json> = self
+            .extra
+            .iter()
+            .map(|(k, v)| (k.clone(), v.clone()))
+            .collect();
+        obj.insert("bench".to_string(), Json::str(&self.bench));
+        obj.insert("format".to_string(), Json::from(self.format));
+        obj.insert("quick".to_string(), Json::from(self.quick));
+        obj.insert("host".to_string(), self.host.to_json());
+        obj.insert("fingerprint".to_string(), Json::str(&self.fingerprint));
+        obj.insert(
+            "rows".to_string(),
+            Json::Arr(self.rows.iter().map(|r| r.to_json()).collect()),
+        );
+        Json::Obj(obj)
+    }
+
+    pub fn from_json(j: &Json) -> Result<BenchDoc, BenchError> {
+        let obj = j
+            .as_obj()
+            .map_err(|e| BenchError::Schema(format!("document: {e}")))?;
+        let get = |key: &str| {
+            j.get(key)
+                .map_err(|e| BenchError::Schema(format!("document: {e}")))
+        };
+        let format = get("format")?
+            .as_usize()
+            .map_err(|e| BenchError::Schema(format!("format: {e}")))?;
+        if format != BENCH_FORMAT {
+            return Err(BenchError::Schema(format!(
+                "unsupported bench format {format} (this build reads format {BENCH_FORMAT})"
+            )));
+        }
+        let rows = get("rows")?
+            .as_arr()
+            .map_err(|e| BenchError::Schema(format!("rows: {e}")))?
+            .iter()
+            .map(BenchRow::from_json)
+            .collect::<Result<Vec<_>, _>>()?;
+        let extra: BTreeMap<String, Json> = obj
+            .iter()
+            .filter(|(k, _)| !ENVELOPE_KEYS.contains(&k.as_str()))
+            .map(|(k, v)| (k.clone(), v.clone()))
+            .collect();
+        Ok(BenchDoc {
+            bench: get("bench")?
+                .as_str()
+                .map_err(|e| BenchError::Schema(format!("bench: {e}")))?
+                .to_string(),
+            format,
+            quick: get("quick")?
+                .as_bool()
+                .map_err(|e| BenchError::Schema(format!("quick: {e}")))?,
+            host: HostInfo::from_json(get("host")?)?,
+            fingerprint: get("fingerprint")?
+                .as_str()
+                .map_err(|e| BenchError::Schema(format!("fingerprint: {e}")))?
+                .to_string(),
+            rows,
+            extra,
+        })
+    }
+
+    /// Parse a document from file contents.
+    pub fn parse(text: &str) -> Result<BenchDoc, BenchError> {
+        let j = Json::parse(text.trim()).map_err(|e| BenchError::Json(e.to_string()))?;
+        BenchDoc::from_json(&j)
+    }
+
+    pub fn load(path: &Path) -> Result<BenchDoc, BenchError> {
+        let text = std::fs::read_to_string(path)
+            .map_err(|e| BenchError::Io(path.display().to_string(), e))?;
+        BenchDoc::parse(&text)
+    }
+
+    /// Write `{json}\n` to `path`, creating parent directories — the
+    /// single writer behind `bench run` and `runs export-bench`.
+    pub fn write(&self, path: &Path) -> Result<(), BenchError> {
+        if let Some(parent) = path.parent() {
+            if !parent.as_os_str().is_empty() {
+                std::fs::create_dir_all(parent)
+                    .map_err(|e| BenchError::Io(parent.display().to_string(), e))?;
+            }
+        }
+        std::fs::write(path, format!("{}\n", self.to_json()))
+            .map_err(|e| BenchError::Io(path.display().to_string(), e))
+    }
+}
+
+/// Stable config fingerprint: hex-encoded FNV-1a over the inputs that
+/// make two documents comparable.
+fn fingerprint(area: &str, quick: bool) -> String {
+    let image = format!(
+        "fedcompress/{}|format={}|area={}|quick={}",
+        env!("CARGO_PKG_VERSION"),
+        BENCH_FORMAT,
+        area,
+        quick
+    );
+    format!("{:016x}", fnv1a64(image.as_bytes()))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn demo_doc() -> BenchDoc {
+        let mut doc = BenchDoc::new("codec", true);
+        doc.rows.push(BenchRow {
+            suite: "pipelines".to_string(),
+            name: "enc[dense]/p19674".to_string(),
+            median_ns: 81234.0,
+            p10_ns: 79000.0,
+            p90_ns: 90210.0,
+            iters: 246,
+            bytes: Some(78_696),
+        });
+        doc.rows.push(BenchRow {
+            suite: "kmeans".to_string(),
+            name: "kmeans_full/p19674/c16".to_string(),
+            median_ns: 2.5e6,
+            p10_ns: 2.4e6,
+            p90_ns: 2.9e6,
+            iters: 8,
+            bytes: None,
+        });
+        doc.extra.insert("note".to_string(), Json::str("unit fixture"));
+        doc
+    }
+
+    #[test]
+    fn document_round_trips() {
+        let doc = demo_doc();
+        let text = format!("{}", doc.to_json());
+        let back = BenchDoc::parse(&text).unwrap();
+        assert_eq!(back, doc);
+        // extra keys survive a second trip verbatim
+        assert_eq!(format!("{}", back.to_json()), text);
+    }
+
+    #[test]
+    fn write_then_load() {
+        let dir = std::env::temp_dir().join("fedcompress_bench_schema_unit");
+        let _ = std::fs::remove_dir_all(&dir);
+        let path = dir.join("nested/BENCH_codec.json");
+        let doc = demo_doc();
+        doc.write(&path).unwrap();
+        assert_eq!(BenchDoc::load(&path).unwrap(), doc);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn format_mismatch_is_a_schema_error() {
+        let mut doc = demo_doc();
+        doc.format = 1;
+        let text = format!("{}", doc.to_json());
+        match BenchDoc::parse(&text) {
+            Err(BenchError::Schema(m)) => assert!(m.contains("format 1")),
+            other => panic!("expected schema error, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn malformed_inputs_are_typed_errors() {
+        assert!(matches!(BenchDoc::parse("not json"), Err(BenchError::Json(_))));
+        assert!(matches!(
+            BenchDoc::parse("{\"format\":2}"),
+            Err(BenchError::Schema(_))
+        ));
+        assert!(matches!(
+            BenchDoc::load(Path::new("/nonexistent/BENCH_x.json")),
+            Err(BenchError::Io(_, _))
+        ));
+    }
+
+    #[test]
+    fn mib_s_is_written_for_byte_rows_only() {
+        let doc = demo_doc();
+        let j = doc.to_json();
+        let rows = j.get("rows").unwrap().as_arr().unwrap();
+        assert!(rows[0].opt("mib_s").is_some());
+        assert!(rows[1].opt("mib_s").is_none());
+    }
+}

@@ -1,0 +1,773 @@
+//! The in-process suite registry behind `bench run`. Each
+//! `benches/bench_*.rs` body lives here as a registered suite
+//! function; the `harness = false` bench targets are thin wrappers
+//! over the same functions, so `cargo bench` and the headless CLI
+//! verb measure identical code and emit identical row names.
+//!
+//! A [`SuiteCtx`] threads the sampling profile (full vs `--quick`)
+//! through every measurement and collects [`BenchRow`]s; `run_area`
+//! wraps the rows of one area into the committed `BENCH_<area>.json`
+//! document.
+
+use std::collections::BTreeMap;
+use std::net::{TcpListener, TcpStream};
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+use crate::clustering::{representation_score, CentroidState};
+use crate::codec::{Codec, CodecInput, CodecRegistry, StageBytes};
+use crate::compression::codec::{decode, encode, quantize_and_encode};
+use crate::compression::huffman::{huffman_decode, huffman_encode};
+use crate::compression::kmeans::{assign_sorted, kmeans_1d, kmeans_pp_init};
+use crate::config::FedConfig;
+use crate::coordinator::aggregate::fedavg;
+use crate::net::frame::{encode_frame, framed_len, read_frame, write_frame};
+use crate::net::proto::{Msg, Upload};
+use crate::obs::stream::{parse_stream, StreamEvent};
+use crate::runtime::artifacts::default_dir;
+use crate::runtime::literals::Arg;
+use crate::runtime::Engine;
+use crate::store::{run_key, RunRecord, RunStore};
+use crate::sweep::{JobRunner, SmokeRunner, SweepJob};
+use crate::util::json::Json;
+use crate::util::rng::Rng;
+use crate::util::timer::Stopwatch;
+
+use super::schema::{BenchDoc, BenchRow};
+use super::{bench_opts, report_throughput, BenchOpts};
+
+/// Measurement context: sampling profile + collected rows + notes
+/// destined for the document's extra section.
+pub struct SuiteCtx {
+    opts: BenchOpts,
+    quick: bool,
+    rows: Vec<BenchRow>,
+    notes: BTreeMap<String, Json>,
+}
+
+impl SuiteCtx {
+    pub fn new(quick: bool) -> SuiteCtx {
+        SuiteCtx {
+            opts: if quick { BenchOpts::quick() } else { BenchOpts::full() },
+            quick,
+            rows: Vec::new(),
+            notes: BTreeMap::new(),
+        }
+    }
+
+    pub fn quick(&self) -> bool {
+        self.quick
+    }
+
+    /// Measure `f` under the context's sampling profile and record one
+    /// row. `bytes` is the payload-size axis; when present the MiB/s
+    /// throughput line prints and the row carries the byte count.
+    pub fn bench<F: FnMut()>(&mut self, suite: &str, name: &str, bytes: Option<usize>, f: F) {
+        let r = bench_opts(name, self.opts, f);
+        if let Some(b) = bytes {
+            report_throughput(&r, b);
+        }
+        self.rows.push(BenchRow {
+            suite: suite.to_string(),
+            name: r.name,
+            median_ns: r.median_ns,
+            p10_ns: r.p10_ns,
+            p90_ns: r.p90_ns,
+            iters: r.iters_per_sample,
+            bytes,
+        });
+    }
+
+    /// Record a row measured outside the adaptive harness (one-shot
+    /// batch measurements like the store append).
+    pub fn push(&mut self, row: BenchRow) {
+        self.rows.push(row);
+    }
+
+    pub fn note(&mut self, key: &str, value: Json) {
+        self.notes.insert(key.to_string(), value);
+    }
+
+    pub fn rows(&self) -> &[BenchRow] {
+        self.rows.as_slice()
+    }
+}
+
+/// One registered bench area.
+pub struct Area {
+    pub name: &'static str,
+    pub summary: &'static str,
+    run: fn(&mut SuiteCtx) -> Result<()>,
+}
+
+/// The registry `bench run --area <name>|all` resolves against.
+/// (`rounds` is not here: it rolls up teed phase-timing events from a
+/// run store instead of measuring code, see [`rounds_rollup`].)
+pub const AREAS: [Area; 5] = [
+    Area {
+        name: "codec",
+        summary: "pipeline encode/decode, quantize, huffman, k-means",
+        run: |ctx| {
+            codec_pipelines(ctx)?;
+            codec_primitives(ctx)?;
+            kmeans(ctx)
+        },
+    },
+    Area {
+        name: "net",
+        summary: "frame codec, protocol messages, loopback TCP",
+        run: net_micro,
+    },
+    Area {
+        name: "store",
+        summary: "record encode/decode, key hash, append, open scan",
+        run: store,
+    },
+    Area {
+        name: "aggregate",
+        summary: "fedavg fold and representation score",
+        run: aggregate,
+    },
+    Area {
+        name: "runtime",
+        summary: "PJRT entry-point latency (skips without artifacts)",
+        run: runtime,
+    },
+];
+
+pub fn area(name: &str) -> Option<&'static Area> {
+    AREAS.iter().find(|a| a.name == name)
+}
+
+/// Run one area's suites and wrap the rows into a versioned document.
+pub fn run_area(name: &str, quick: bool) -> Result<BenchDoc> {
+    let Some(area) = area(name) else {
+        let known: Vec<&str> = AREAS.iter().map(|a| a.name).collect();
+        bail!("unknown bench area '{name}' (expected one of {known:?}, 'rounds', or 'all')");
+    };
+    let mut ctx = SuiteCtx::new(quick);
+    (area.run)(&mut ctx).with_context(|| format!("bench area '{name}'"))?;
+    let mut doc = BenchDoc::new(name, quick);
+    doc.rows = ctx.rows;
+    doc.extra = ctx.notes;
+    Ok(doc)
+}
+
+// --- codec ----------------------------------------------------------------
+
+/// Registry pipelines: encode + decode per spec at one realistic model
+/// size, plus per-stage encode ns via the pipeline's timed path.
+pub fn codec_pipelines(ctx: &mut SuiteCtx) -> Result<()> {
+    use std::hint::black_box;
+    let mut rng = Rng::new(1);
+    let p = 19_674usize;
+    let theta: Vec<f32> = (0..p).map(|_| rng.normal() * 0.2).collect();
+    let cents = CentroidState::init_from_weights(&theta, 16, 32, &mut rng);
+    let reg = CodecRegistry::builtin();
+
+    for spec in [
+        "dense",
+        "topk(keep=0.1)",
+        "kmeans(c=16,iters=25)",
+        "codebook",
+        "topk(keep=0.6)|kmeans(c=15,iters=25)|huffman",
+        "codebook|huffman",
+        "codebook|delta",
+    ] {
+        let pipe = reg.build(spec)?;
+        let input = CodecInput {
+            theta: &theta,
+            centroids: Some(&cents),
+            stream: crate::codec::stream::FINAL,
+        };
+        ctx.bench("pipelines", &format!("pipe_encode[{spec}]"), Some(4 * p), || {
+            let mut enc_rng = Rng::new(7);
+            let blob = pipe.encode(black_box(&input), &mut enc_rng).unwrap();
+            black_box(blob.payload.len());
+        });
+
+        // the decode-bench blob comes from a FRESH sender instance:
+        // the loop above advanced `pipe`'s delta stream state, and a
+        // residual blob would be undecodable by a cold peer. A fresh
+        // sender ships the flat baseline form, which a fresh peer
+        // decodes repeatedly without needing stream history.
+        let blob = reg.build(spec)?.encode(&input, &mut Rng::new(7))?;
+        let peer = reg.build(spec)?;
+        peer.decode(&blob.payload)?;
+        let bytes = blob.payload.len();
+        ctx.bench("pipelines", &format!("pipe_decode[{spec}]"), Some(bytes), || {
+            let out = peer.decode(black_box(&blob.payload)).unwrap();
+            black_box(out.len());
+        });
+    }
+
+    // per-stage profile of the FedZip stack via the timed pipeline
+    // path: medians over repeated timed encodes, one row per stage
+    let spec = "topk(keep=0.6)|kmeans(c=15,iters=25)|huffman";
+    let input = CodecInput {
+        theta: &theta,
+        centroids: Some(&cents),
+        stream: crate::codec::stream::FINAL,
+    };
+    let reps = if ctx.quick() { 5 } else { 15 };
+    let mut per_stage: BTreeMap<String, Vec<f64>> = BTreeMap::new();
+    for _ in 0..reps {
+        let pipe = reg.build(spec)?;
+        let (_, stage_ns) = pipe.encode_timed(&input, &mut Rng::new(7))?;
+        for (stage, ns) in stage_ns {
+            per_stage.entry(stage).or_default().push(ns as f64);
+        }
+    }
+    for (stage, samples) in per_stage {
+        let (median, p10, p90) = percentiles(samples);
+        ctx.push(BenchRow {
+            suite: "stages".to_string(),
+            name: format!("enc[{spec}]/{stage}"),
+            median_ns: median,
+            p10_ns: p10,
+            p90_ns: p90,
+            iters: reps,
+            bytes: None,
+        });
+    }
+    Ok(())
+}
+
+/// Quantize/encode/decode primitives at realistic (p, c) points.
+pub fn codec_primitives(ctx: &mut SuiteCtx) -> Result<()> {
+    use std::hint::black_box;
+    let mut rng = Rng::new(1);
+    for &(p, c) in &[(19_674usize, 16usize), (19_674, 32), (100_000, 16)] {
+        let weights: Vec<f32> = (0..p).map(|_| rng.normal() * 0.2).collect();
+        let (cb, _, _) = kmeans_1d(&weights, c, 25, &mut rng);
+
+        ctx.bench(
+            "primitives",
+            &format!("quantize_encode_p{p}_c{c}"),
+            Some(p * 4),
+            || {
+                let (enc, _) = quantize_and_encode(black_box(&weights), black_box(&cb));
+                black_box(enc.wire_bytes());
+            },
+        );
+
+        let (enc, _) = quantize_and_encode(&weights, &cb);
+        let bytes = enc.bytes.len();
+        ctx.bench("primitives", &format!("decode_p{p}_c{c}"), Some(bytes), || {
+            let out = decode(black_box(&enc.bytes)).unwrap();
+            black_box(out.0.len());
+        });
+
+        // pure huffman on the index stream
+        let idx: Vec<u32> = (0..p).map(|_| rng.below(c) as u32).collect();
+        ctx.bench("primitives", &format!("huffman_encode_p{p}_c{c}"), None, || {
+            let e = huffman_encode(black_box(&idx), c);
+            black_box(e.payload_bits);
+        });
+        let henc = huffman_encode(&idx, c);
+        ctx.bench("primitives", &format!("huffman_decode_p{p}_c{c}"), None, || {
+            let d = huffman_decode(black_box(&henc)).unwrap();
+            black_box(d.len());
+        });
+
+        // flat-pack path (encode() picks it for uniform indices)
+        ctx.bench("primitives", &format!("flat_encode_p{p}_c{c}"), None, || {
+            let e = encode(black_box(&cb), black_box(&idx));
+            black_box(e.bytes.len());
+        });
+    }
+    Ok(())
+}
+
+/// k-means: the server re-fits codebooks (FedZip per upload;
+/// FedCompress at warmup exit / final snap), so Lloyd iterations sit
+/// on the coordinator path.
+pub fn kmeans(ctx: &mut SuiteCtx) -> Result<()> {
+    use std::hint::black_box;
+    let mut rng = Rng::new(2);
+    for &p in &[19_674usize, 100_000] {
+        let weights: Vec<f32> = (0..p).map(|_| rng.normal() * 0.2).collect();
+
+        for &c in &[15usize, 16, 32] {
+            ctx.bench("kmeans", &format!("kmeanspp_init_p{p}_c{c}"), None, || {
+                let mut r = Rng::new(3);
+                let cb = kmeans_pp_init(black_box(&weights), c, &mut r);
+                black_box(cb.len());
+            });
+            ctx.bench("kmeans", &format!("kmeans_full_p{p}_c{c}"), None, || {
+                let mut r = Rng::new(3);
+                let (cb, _, _) = kmeans_1d(black_box(&weights), c, 25, &mut r);
+                black_box(cb.len());
+            });
+        }
+
+        let mut r = Rng::new(3);
+        let (cb, _, _) = kmeans_1d(&weights, 16, 25, &mut r);
+        ctx.bench("kmeans", &format!("assign_all_p{p}_c16"), None, || {
+            let mut acc = 0usize;
+            for &w in black_box(&weights) {
+                acc += assign_sorted(w, black_box(&cb));
+            }
+            black_box(acc);
+        });
+    }
+    Ok(())
+}
+
+// --- aggregate ------------------------------------------------------------
+
+/// FedAvg over M client vectors and the representation-score SVD — the
+/// two pure-rust stages of every round.
+pub fn aggregate(ctx: &mut SuiteCtx) -> Result<()> {
+    use std::hint::black_box;
+    let mut rng = Rng::new(3);
+    for &(p, m) in &[(19_674usize, 20usize), (100_000, 20), (19_674, 100)] {
+        let clients: Vec<Vec<f32>> = (0..m)
+            .map(|_| (0..p).map(|_| rng.normal()).collect())
+            .collect();
+        let weights: Vec<usize> = (0..m).map(|i| 50 + i).collect();
+        ctx.bench("aggregate", &format!("fedavg_p{p}_m{m}"), Some(p * m * 4), || {
+            let agg = fedavg(black_box(&clients), black_box(&weights)).unwrap();
+            black_box(agg[0]);
+        });
+    }
+
+    for &(n, d) in &[(64usize, 32usize), (256, 32), (64, 64)] {
+        let emb: Vec<f32> = (0..n * d).map(|_| rng.normal()).collect();
+        ctx.bench("aggregate", &format!("repr_score_n{n}_d{d}"), None, || {
+            let s = representation_score(black_box(&emb), n, d);
+            black_box(s);
+        });
+    }
+    Ok(())
+}
+
+// --- net ------------------------------------------------------------------
+
+/// Frame codec, full `Upload` protocol message, loopback TCP
+/// round-trips. The fleet-scale mux smoke stays in
+/// `benches/bench_net.rs` — it is an assertion harness with env
+/// knobs (CI's flat-RSS gate), not a trajectory row.
+pub fn net_micro(ctx: &mut SuiteCtx) -> Result<()> {
+    use std::hint::black_box;
+    let mut rng = Rng::new(1);
+
+    // --- frame codec ------------------------------------------------------
+    for &size in &[1_000usize, 78_696, 1_000_000] {
+        let payload: Vec<u8> = (0..size).map(|_| rng.below(256) as u8).collect();
+        ctx.bench("frame", &format!("frame_encode_{size}B"), Some(size), || {
+            let f = encode_frame(4, black_box(&payload));
+            black_box(f.len());
+        });
+
+        let frame = encode_frame(4, &payload);
+        ctx.bench("frame", &format!("frame_decode_{size}B"), Some(size), || {
+            let (ty, body) = read_frame(&mut black_box(&frame[..])).unwrap();
+            black_box((ty, body.len()));
+        });
+    }
+
+    // --- full Upload message (the per-client per-round unit) --------------
+    let payload: Vec<u8> = (0..20_000).map(|_| rng.below(256) as u8).collect();
+    let upload = Msg::Upload(Upload {
+        round: 3,
+        client: 7,
+        score: 4.5,
+        n: 96,
+        mean_ce: 1.25,
+        mu: (0..32).map(|_| rng.normal()).collect(),
+        stages: vec![
+            StageBytes {
+                stage: "codebook".to_string(),
+                bytes: 24_000,
+            },
+            StageBytes {
+                stage: "huffman".to_string(),
+                bytes: 20_000,
+            },
+        ],
+        spec: "codebook|huffman".to_string(),
+        payload: payload.clone(),
+    });
+    let encoded = {
+        let mut buf = Vec::new();
+        upload.write_to(&mut buf)?;
+        buf
+    };
+    let enc_len = encoded.len();
+    ctx.bench("proto", "upload_msg_encode_20kB", Some(enc_len), || {
+        let mut buf = Vec::with_capacity(enc_len);
+        upload.write_to(&mut buf).unwrap();
+        black_box(buf.len());
+    });
+    ctx.bench("proto", "upload_msg_decode_20kB", Some(enc_len), || {
+        let m = Msg::read_from(&mut black_box(&encoded[..])).unwrap();
+        black_box(m.kind());
+    });
+
+    // --- loopback TCP round-trip ------------------------------------------
+    // an echo peer: every received frame comes straight back
+    let listener = TcpListener::bind("127.0.0.1:0")?;
+    let addr = listener.local_addr()?;
+    let echo = std::thread::spawn(move || {
+        let (stream, _) = listener.accept().unwrap();
+        stream.set_nodelay(true).ok();
+        while let Ok((ty, payload)) = read_frame(&mut &stream) {
+            if write_frame(&mut &stream, ty, &payload).is_err() {
+                break;
+            }
+        }
+    });
+    let stream = TcpStream::connect(addr)?;
+    stream.set_nodelay(true).ok();
+    for &size in &[1_000usize, 78_696, 1_000_000] {
+        let payload: Vec<u8> = (0..size).map(|_| rng.below(256) as u8).collect();
+        // a round trip moves the frame both ways
+        let moved = 2 * framed_len(size);
+        ctx.bench("loopback", &format!("loopback_roundtrip_{size}B"), Some(moved), || {
+            write_frame(&mut &stream, 4, black_box(&payload)).unwrap();
+            let (_, body) = read_frame(&mut &stream).unwrap();
+            black_box(body.len());
+        });
+    }
+    drop(stream);
+    echo.join().ok();
+    Ok(())
+}
+
+// --- store ----------------------------------------------------------------
+
+fn smoke_record(seed: u64) -> Result<RunRecord> {
+    let mut cfg = FedConfig::quick("cifar10");
+    cfg.seed = seed;
+    cfg.rounds = 20;
+    cfg.clients = 20;
+    let job = SweepJob {
+        idx: 0,
+        strategy: "fedcompress".to_string(),
+        cfg: cfg.clone(),
+        key: run_key("fedcompress", &cfg),
+    };
+    SmokeRunner.run(&job)
+}
+
+/// Record encode/decode, content-key hashing, append, and the
+/// checksum-verifying open scan. No artifacts needed — records come
+/// from the sweep's synthetic runner.
+pub fn store(ctx: &mut SuiteCtx) -> Result<()> {
+    let rec = smoke_record(1)?;
+    let body = rec.to_body_bytes();
+    println!(
+        "record: {} rounds, {} transfers, {} B body",
+        rec.rounds.len(),
+        rec.ledger.transfer_count(),
+        body.len()
+    );
+
+    ctx.bench("store", "store_record_encode", Some(body.len()), || {
+        std::hint::black_box(rec.to_body_bytes());
+    });
+    ctx.bench("store", "store_record_decode", Some(body.len()), || {
+        std::hint::black_box(RunRecord::from_body_bytes(&body).unwrap());
+    });
+
+    let cfg = FedConfig::paper("cifar10");
+    ctx.bench("store", "store_run_key", None, || {
+        std::hint::black_box(run_key("fedcompress", &cfg));
+    });
+
+    // append + open over a populated store; append is measured once
+    // over a fixed batch (the adaptive harness would grow the file —
+    // and the derived index.json rewrite — without bound)
+    let dir = std::env::temp_dir().join("fedcompress_bench_store");
+    let _ = std::fs::remove_dir_all(&dir);
+    let mut store = RunStore::open(&dir)?;
+    let n = if ctx.quick() { 16u64 } else { 64 };
+    let records: Vec<RunRecord> = (0..n).map(smoke_record).collect::<Result<_>>()?;
+    let sw = Stopwatch::start();
+    for rec in &records {
+        store.append(rec)?;
+    }
+    let total_ms = sw.elapsed_ms();
+    let per_append_ns = 1e6 * total_ms / records.len() as f64;
+    println!(
+        "BENCH store_append_batch n={} total_ms={:.1} per_append_us={:.1}",
+        records.len(),
+        total_ms,
+        per_append_ns / 1e3
+    );
+    ctx.push(BenchRow {
+        suite: "store".to_string(),
+        name: "store_append_batch".to_string(),
+        median_ns: per_append_ns,
+        p10_ns: per_append_ns,
+        p90_ns: per_append_ns,
+        iters: records.len(),
+        bytes: Some(body.len() + 16),
+    });
+
+    let entries = store.metas().len();
+    let file_len = std::fs::metadata(dir.join("runs.fcr"))?.len() as usize;
+    println!("store: {entries} entries, {file_len} B file");
+    ctx.bench("store", "store_open_scan", Some(file_len), || {
+        std::hint::black_box(RunStore::open(&dir).unwrap());
+    });
+
+    let key = records[0].key;
+    ctx.bench("store", "store_get", Some(body.len() + 16), || {
+        std::hint::black_box(store.get(key).unwrap().unwrap());
+    });
+
+    let _ = std::fs::remove_dir_all(&dir);
+    Ok(())
+}
+
+// --- runtime --------------------------------------------------------------
+
+/// PJRT entry-point latency — the dominant cost of a federated round.
+/// Skips cleanly (zero rows, a `skipped` note) when AOT artifacts are
+/// absent, mirroring the engine-gated test convention.
+pub fn runtime(ctx: &mut SuiteCtx) -> Result<()> {
+    use std::hint::black_box;
+    let dir = default_dir();
+    if !dir.join("manifest.json").exists() {
+        println!("SKIP bench_runtime: artifacts not built (run `make artifacts`)");
+        ctx.note("skipped", Json::from(true));
+        ctx.note("skip_reason", Json::str("artifacts not built"));
+        return Ok(());
+    }
+    let engine = Engine::load(&dir)?;
+    let mut rng = Rng::new(4);
+
+    for dataset in ["cifar10", "speechcommands"] {
+        let ds = engine.manifest.dataset(dataset)?.clone();
+        let p = ds.spec.param_count;
+        let (c, h, w) = ds.spec.input_shape;
+        let b = engine.manifest.batch;
+        let eb = engine.manifest.eval_batch;
+        let c_max = engine.manifest.c_max;
+
+        let theta = engine.init_theta(dataset)?;
+        let mu: Vec<f32> = (0..c_max).map(|i| -0.5 + i as f32 / c_max as f32).collect();
+        let mask: Vec<f32> = (0..c_max).map(|i| (i < 16) as u8 as f32).collect();
+        let x: Vec<f32> = (0..b * c * h * w).map(|_| rng.normal()).collect();
+        let y: Vec<i32> = (0..b).map(|_| rng.below(ds.spec.num_classes) as i32).collect();
+        let xe: Vec<f32> = (0..eb * c * h * w).map(|_| rng.normal()).collect();
+        let ye: Vec<i32> = (0..eb).map(|_| rng.below(ds.spec.num_classes) as i32).collect();
+        let teacher = theta.clone();
+
+        engine.warmup(dataset)?;
+
+        ctx.bench("runtime", &format!("{dataset}_train_step_p{p}"), None, || {
+            let out = engine
+                .run(
+                    dataset,
+                    "train_step",
+                    &[
+                        Arg::F32(&theta),
+                        Arg::F32(&mu),
+                        Arg::F32(&mask),
+                        Arg::F32(&x),
+                        Arg::I32(&y),
+                        Arg::Scalar(0.05),
+                        Arg::Scalar(0.5),
+                    ],
+                )
+                .unwrap();
+            black_box(out.len());
+        });
+
+        ctx.bench("runtime", &format!("{dataset}_distill_step_p{p}"), None, || {
+            let out = engine
+                .run(
+                    dataset,
+                    "distill_step",
+                    &[
+                        Arg::F32(&theta),
+                        Arg::F32(&teacher),
+                        Arg::F32(&mu),
+                        Arg::F32(&mask),
+                        Arg::F32(&x),
+                        Arg::Scalar(0.05),
+                        Arg::Scalar(0.5),
+                        Arg::Scalar(2.0),
+                    ],
+                )
+                .unwrap();
+            black_box(out.len());
+        });
+
+        ctx.bench("runtime", &format!("{dataset}_eval_step"), None, || {
+            let out = engine
+                .run(
+                    dataset,
+                    "eval_step",
+                    &[Arg::F32(&theta), Arg::F32(&xe), Arg::I32(&ye)],
+                )
+                .unwrap();
+            black_box(out.len());
+        });
+
+        ctx.bench("runtime", &format!("{dataset}_embed"), None, || {
+            let out = engine
+                .run(dataset, "embed", &[Arg::F32(&theta), Arg::F32(&xe)])
+                .unwrap();
+            black_box(out.len());
+        });
+
+        ctx.bench("runtime", &format!("{dataset}_snap_hlo"), None, || {
+            let out = engine
+                .run(
+                    dataset,
+                    "snap",
+                    &[Arg::F32(&theta), Arg::F32(&mu), Arg::F32(&mask)],
+                )
+                .unwrap();
+            black_box(out.len());
+        });
+    }
+    Ok(())
+}
+
+// --- rounds rollup --------------------------------------------------------
+
+/// `bench run --area rounds`: roll the live-only `phase_timing`
+/// events teed under `<store>/events/*.jsonl` into one document —
+/// median / p10 / p90 ns per phase across every profiled round, plus
+/// a synthetic `total` row summing each round's phases.
+pub fn rounds_rollup(events_dir: &Path, quick: bool) -> Result<BenchDoc> {
+    let mut files: Vec<std::path::PathBuf> = match std::fs::read_dir(events_dir) {
+        Ok(rd) => rd
+            .filter_map(|e| e.ok())
+            .map(|e| e.path())
+            .filter(|p| p.extension().is_some_and(|x| x == "jsonl"))
+            .collect(),
+        Err(e) => bail!("reading events dir {}: {e}", events_dir.display()),
+    };
+    files.sort();
+
+    let mut per_phase: BTreeMap<String, Vec<f64>> = BTreeMap::new();
+    let mut rounds_seen = 0usize;
+    for path in &files {
+        let Ok(text) = std::fs::read_to_string(path) else { continue };
+        let replay = parse_stream(&text);
+        for ev in &replay.events {
+            if let StreamEvent::PhaseTiming { ns, .. } = ev {
+                rounds_seen += 1;
+                let mut total = 0u64;
+                for (phase, v) in ns {
+                    per_phase.entry(phase.clone()).or_default().push(*v as f64);
+                    total = total.saturating_add(*v);
+                }
+                per_phase.entry("total".to_string()).or_default().push(total as f64);
+            }
+        }
+    }
+
+    let mut doc = BenchDoc::new("rounds", quick);
+    doc.extra.insert("stream_files".to_string(), Json::from(files.len()));
+    doc.extra.insert("profiled_rounds".to_string(), Json::from(rounds_seen));
+    for (phase, samples) in per_phase {
+        let iters = samples.len();
+        let (median, p10, p90) = percentiles(samples);
+        doc.rows.push(BenchRow {
+            suite: "rounds".to_string(),
+            name: phase,
+            median_ns: median,
+            p10_ns: p10,
+            p90_ns: p90,
+            iters,
+            bytes: None,
+        });
+    }
+    Ok(doc)
+}
+
+/// (median, p10, p90) with the harness's index convention.
+fn percentiles(mut samples: Vec<f64>) -> (f64, f64, f64) {
+    if samples.is_empty() {
+        return (f64::NAN, f64::NAN, f64::NAN);
+    }
+    samples.sort_by(|a, b| a.total_cmp(b));
+    let n = samples.len();
+    (samples[n / 2], samples[n / 10], samples[n * 9 / 10])
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ctx_collects_rows_with_byte_axis() {
+        let mut ctx = SuiteCtx::new(true);
+        ctx.bench("unit", "noop", Some(1024), || {
+            std::hint::black_box(2u64 + 2);
+        });
+        ctx.bench("unit", "no_bytes", None, || {
+            std::hint::black_box(1u64);
+        });
+        assert_eq!(ctx.rows().len(), 2);
+        assert_eq!(ctx.rows()[0].id(), "unit/noop");
+        assert_eq!(ctx.rows()[0].bytes, Some(1024));
+        assert!(ctx.rows()[0].mib_s().is_some());
+        assert!(ctx.rows()[1].mib_s().is_none());
+    }
+
+    #[test]
+    fn registry_covers_the_cli_areas() {
+        for name in ["codec", "net", "store", "aggregate", "runtime"] {
+            assert!(area(name).is_some(), "area {name} missing");
+        }
+        assert!(area("rounds").is_none(), "rounds is a rollup, not a suite");
+        assert!(area("bogus").is_none());
+    }
+
+    #[test]
+    fn percentiles_convention_matches_harness() {
+        let (m, p10, p90) = percentiles((1..=15).map(|i| i as f64).collect());
+        assert_eq!((m, p10, p90), (8.0, 2.0, 14.0));
+        let (m, _, _) = percentiles(vec![]);
+        assert!(m.is_nan());
+    }
+
+    #[test]
+    fn rounds_rollup_aggregates_phase_events() {
+        use crate::obs::stream::{render_stream, StreamHeader, SCHEMA_VERSION};
+        let dir = std::env::temp_dir().join("fedcompress_bench_rounds_unit/events");
+        let _ = std::fs::remove_dir_all(&dir);
+        std::fs::create_dir_all(&dir).unwrap();
+        let events: Vec<StreamEvent> = (0..4)
+            .map(|r| StreamEvent::PhaseTiming {
+                round: r,
+                ns: vec![
+                    ("aggregate".to_string(), 10 + r as u64),
+                    ("train".to_string(), 100 * (r as u64 + 1)),
+                ],
+            })
+            .collect();
+        let header = StreamHeader {
+            schema: SCHEMA_VERSION,
+            run: 1,
+            fingerprint: 2,
+            strategy: "unit".to_string(),
+        };
+        std::fs::write(dir.join("ab.jsonl"), render_stream(&header, &events)).unwrap();
+        std::fs::write(dir.join("skip.txt"), "not a stream").unwrap();
+
+        let doc = rounds_rollup(&dir, true).unwrap();
+        assert_eq!(doc.bench, "rounds");
+        assert_eq!(doc.extra.get("profiled_rounds").unwrap().as_usize().unwrap(), 4);
+        let names: Vec<&str> = doc.rows.iter().map(|r| r.name.as_str()).collect();
+        assert_eq!(names, vec!["aggregate", "total", "train"]);
+        let train = doc.rows.iter().find(|r| r.name == "train").unwrap();
+        assert_eq!(train.iters, 4);
+        assert_eq!(train.median_ns, 300.0);
+        let _ = std::fs::remove_dir_all(std::env::temp_dir().join("fedcompress_bench_rounds_unit"));
+    }
+
+    #[test]
+    fn rounds_rollup_missing_dir_is_an_error() {
+        assert!(rounds_rollup(Path::new("/nonexistent/events"), true).is_err());
+    }
+}

@@ -30,6 +30,7 @@ pub enum ParsedCommand {
     Fleet,
     Sweep,
     Runs,
+    Bench,
     Lint,
     AblateC,
     Inspect,
@@ -37,14 +38,16 @@ pub enum ParsedCommand {
 }
 
 /// Flags that take no value.
-const SWITCHES: [&str; 7] = ["verbose", "csv", "smoke", "force", "json", "watch", "follow"];
+const SWITCHES: [&str; 8] = [
+    "verbose", "csv", "smoke", "force", "json", "watch", "follow", "quick",
+];
 
 /// Commands that take a subcommand positional (`runs list`, ...).
-const SUBCOMMAND_FAMILIES: [&str; 1] = ["runs"];
+const SUBCOMMAND_FAMILIES: [&str; 2] = ["runs", "bench"];
 
 /// Commands that accept free positional arguments (`lint src/net`,
-/// `runs tail <key>`).
-const POSITIONAL_COMMANDS: [&str; 2] = ["lint", "runs"];
+/// `runs tail <key>`, `bench diff <old> <new>`).
+const POSITIONAL_COMMANDS: [&str; 3] = ["lint", "runs", "bench"];
 
 impl Args {
     pub fn parse(argv: &[String]) -> Result<Args> {
@@ -107,6 +110,7 @@ impl Args {
             "fleet" => ParsedCommand::Fleet,
             "sweep" => ParsedCommand::Sweep,
             "runs" => ParsedCommand::Runs,
+            "bench" => ParsedCommand::Bench,
             "lint" => ParsedCommand::Lint,
             "ablate-c" => ParsedCommand::AblateC,
             "inspect" => ParsedCommand::Inspect,
@@ -261,6 +265,30 @@ mod tests {
         let b = Args::parse(&v(&["sweep", "--watch", "--smoke"])).unwrap();
         assert_eq!(b.flag("watch"), Some("true"));
         assert_eq!(b.flag("smoke"), Some("true"));
+    }
+
+    #[test]
+    fn bench_family_parses_run_and_diff_forms() {
+        let a = Args::parse(&v(&[
+            "bench", "run", "--area", "codec", "--quick", "--out-dir", ".",
+        ]))
+        .unwrap();
+        assert_eq!(a.command().unwrap(), ParsedCommand::Bench);
+        assert_eq!(a.sub.as_deref(), Some("run"));
+        assert_eq!(a.flag("area"), Some("codec"));
+        assert_eq!(a.flag("quick"), Some("true"));
+        let b = Args::parse(&v(&[
+            "bench", "diff", "BENCH_codec.json", "fresh/BENCH_codec.json",
+            "--threshold-pct", "30", "--json",
+        ]))
+        .unwrap();
+        assert_eq!(b.sub.as_deref(), Some("diff"));
+        assert_eq!(
+            b.positionals,
+            vec!["BENCH_codec.json", "fresh/BENCH_codec.json"]
+        );
+        assert_eq!(b.flag("threshold-pct"), Some("30"));
+        assert_eq!(b.flag("json"), Some("true"));
     }
 
     #[test]

@@ -33,11 +33,20 @@ COMMANDS:
                   runs show      per-round metrics of one record
                   runs tail      render a run's event stream as a live
                                  view (--follow refreshes; works on the
-                                 teed stream or replayed from the record)
+                                 teed stream or replayed from the
+                                 record; teed live streams add a
+                                 per-phase round-timing column group)
                   runs diff      bit-exact drift check of two records
                                  (or two whole stores via --other)
                   runs compare   grouped comparison table
                   runs export-bench  write BENCH_sweep.json
+    bench       perf trajectory:
+                  bench run      run the in-process micro-benchmark
+                                 suites headlessly and write one
+                                 BENCH_<area>.json per area
+                  bench diff     compare two BENCH_*.json files row by
+                                 row; exit 3 when any median regressed
+                                 past the threshold (CI gates on this)
     lint        run fedlint, the self-hosted determinism & wire-safety
                 linter, over the crate sources (CI runs this as a gate)
     ablate-c    ablation: dynamic-C controller vs fixed C
@@ -130,6 +139,22 @@ RUN STORE (sweep, runs, table1, fleet, table2):
     --from-run <hex>        table2: read the deployed cluster count from
                             a stored run instead of --clusters
 
+BENCH (bench run | bench diff <old> <new>):
+    --area <name>           bench run: codec|net|store|aggregate|runtime,
+                            'all' (default) for every suite, or 'rounds'
+                            to roll the store's teed phase_timing events
+                            into BENCH_rounds.json (needs --store)
+    --quick                 bench run: shorter sampling windows — same
+                            row names as a full run, so quick baselines
+                            diff against quick runs (CI uses this)
+    --out-dir <dir>         bench run: where BENCH_<area>.json files go
+                            (default: current directory)
+    --store <dir>           bench run --area rounds: run store whose
+                            events/ directory is rolled up
+    --threshold-pct <n>     bench diff: max tolerated median slowdown
+                            per row, percent (default 25)
+    --json                  bench diff: machine-readable report
+
 LINT (lint [paths...]):
     [paths...]              limit the scan to these files/directories
                             (relative to the crate root)
@@ -164,6 +189,8 @@ EXAMPLES:
     fedcompress runs diff --a 3fa9 --b 81c2
     fedcompress runs export-bench --store runs --out BENCH_sweep.json
     fedcompress table1 --store runs          # cache-hits prior runs
+    fedcompress bench run --area codec --quick
+    fedcompress bench diff BENCH_codec.json fresh/BENCH_codec.json --threshold-pct 30
     fedcompress lint                         # whole crate, text report
     fedcompress lint --json --out fedlint.json
     fedcompress lint src/net --rule no-panic-decode

@@ -18,6 +18,7 @@
 
 use super::{Codec, CodecError, CodecInput, EncodedBlob, StageBytes};
 use crate::util::rng::Rng;
+use crate::util::timer::Stopwatch;
 
 /// The intermediate stream stages transform.
 #[derive(Clone, Debug, PartialEq)]
@@ -197,6 +198,94 @@ impl Pipeline {
     pub fn stages(&self) -> &[Box<dyn Stage>] {
         &self.stages
     }
+
+    /// [`Codec::encode`] plus a per-stage wall-time profile: one
+    /// `("<idx>:<stage>", ns)` entry per stage in pipeline order (the
+    /// index prefix keeps repeated stage names distinct). The blob is
+    /// bit-identical to the untimed path — timing is observation only
+    /// and must stay out of anything canonical (live-only by the
+    /// `util::timer` contract).
+    pub fn encode_timed(
+        &self,
+        input: &CodecInput<'_>,
+        rng: &mut Rng,
+    ) -> Result<(EncodedBlob, Vec<(String, u64)>), CodecError> {
+        let mut ns = Vec::with_capacity(self.stages.len());
+        let blob = self.encode_impl(input, rng, Some(&mut ns))?;
+        Ok((blob, ns))
+    }
+
+    /// [`Codec::decode`] plus the per-stage profile, entries in
+    /// execution order: terminal deserialize first, then each
+    /// backward pass.
+    pub fn decode_timed(&self, payload: &[u8]) -> Result<(Vec<f32>, Vec<(String, u64)>), CodecError> {
+        let mut ns = Vec::with_capacity(self.stages.len());
+        let theta = self.decode_impl(payload, Some(&mut ns))?;
+        Ok((theta, ns))
+    }
+
+    fn encode_impl(
+        &self,
+        input: &CodecInput<'_>,
+        rng: &mut Rng,
+        mut timings: Option<&mut Vec<(String, u64)>>,
+    ) -> Result<EncodedBlob, CodecError> {
+        let (terminal, init) = self.stages.split_last().ok_or_else(empty_pipeline)?;
+        let mut data = StageData::Floats(input.theta.to_vec());
+        let mut stage_bytes = Vec::with_capacity(self.stages.len());
+        for (i, stage) in init.iter().enumerate() {
+            let sw = timings.is_some().then(Stopwatch::start);
+            data = stage.encode(data, input, rng)?;
+            stage_bytes.push(StageBytes {
+                stage: stage.name().to_string(),
+                bytes: stage.wire_len(&data),
+            });
+            if let (Some(t), Some(sw)) = (timings.as_deref_mut(), sw) {
+                t.push((stage_label(i, stage.name()), sw.elapsed_ns()));
+            }
+        }
+        let sw = timings.is_some().then(Stopwatch::start);
+        data = terminal.encode(data, input, rng)?;
+        let payload = terminal.serialize(&data, input)?;
+        if let (Some(t), Some(sw)) = (timings.as_deref_mut(), sw) {
+            t.push((stage_label(init.len(), terminal.name()), sw.elapsed_ns()));
+        }
+        stage_bytes.push(StageBytes {
+            stage: terminal.name().to_string(),
+            bytes: payload.len(),
+        });
+        Ok(EncodedBlob {
+            payload,
+            theta: data.to_floats(),
+            stage_bytes,
+        })
+    }
+
+    fn decode_impl(
+        &self,
+        payload: &[u8],
+        mut timings: Option<&mut Vec<(String, u64)>>,
+    ) -> Result<Vec<f32>, CodecError> {
+        let (terminal, init) = self.stages.split_last().ok_or_else(empty_pipeline)?;
+        let sw = timings.is_some().then(Stopwatch::start);
+        let mut data = terminal.deserialize(payload)?;
+        if let (Some(t), Some(sw)) = (timings.as_deref_mut(), sw) {
+            t.push((stage_label(init.len(), terminal.name()), sw.elapsed_ns()));
+        }
+        for (i, stage) in init.iter().enumerate().rev() {
+            let sw = timings.is_some().then(Stopwatch::start);
+            data = stage.backward(data)?;
+            if let (Some(t), Some(sw)) = (timings.as_deref_mut(), sw) {
+                t.push((stage_label(i, stage.name()), sw.elapsed_ns()));
+            }
+        }
+        Ok(data.to_floats())
+    }
+}
+
+/// `<idx>:<stage>` — unique even when a stage name repeats in a spec.
+fn stage_label(idx: usize, name: &str) -> String {
+    format!("{idx}:{name}")
 }
 
 /// The error for the statically-unreachable empty-stage-list case
@@ -217,35 +306,44 @@ impl Codec for Pipeline {
     }
 
     fn encode(&self, input: &CodecInput<'_>, rng: &mut Rng) -> Result<EncodedBlob, CodecError> {
-        let (terminal, init) = self.stages.split_last().ok_or_else(empty_pipeline)?;
-        let mut data = StageData::Floats(input.theta.to_vec());
-        let mut stage_bytes = Vec::with_capacity(self.stages.len());
-        for stage in init {
-            data = stage.encode(data, input, rng)?;
-            stage_bytes.push(StageBytes {
-                stage: stage.name().to_string(),
-                bytes: stage.wire_len(&data),
-            });
-        }
-        data = terminal.encode(data, input, rng)?;
-        let payload = terminal.serialize(&data, input)?;
-        stage_bytes.push(StageBytes {
-            stage: terminal.name().to_string(),
-            bytes: payload.len(),
-        });
-        Ok(EncodedBlob {
-            payload,
-            theta: data.to_floats(),
-            stage_bytes,
-        })
+        self.encode_impl(input, rng, None)
     }
 
     fn decode(&self, payload: &[u8]) -> Result<Vec<f32>, CodecError> {
-        let (terminal, init) = self.stages.split_last().ok_or_else(empty_pipeline)?;
-        let mut data = terminal.deserialize(payload)?;
-        for stage in init.iter().rev() {
-            data = stage.backward(data)?;
-        }
-        Ok(data.to_floats())
+        self.decode_impl(payload, None)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::codec::{stream, CodecRegistry};
+
+    #[test]
+    fn timed_paths_match_untimed_and_profile_every_stage() {
+        let reg = CodecRegistry::builtin();
+        let spec = "topk(keep=0.5)|kmeans(c=4,iters=5)|huffman";
+        let mut rng = Rng::new(11);
+        let theta: Vec<f32> = (0..512).map(|_| rng.normal()).collect();
+        let input = CodecInput {
+            theta: &theta,
+            centroids: None,
+            stream: stream::FINAL,
+        };
+
+        let plain = reg.build(spec).unwrap();
+        let blob = plain.encode(&input, &mut Rng::new(7)).unwrap();
+
+        let timed = reg.build(spec).unwrap();
+        let (tblob, enc_ns) = timed.encode_timed(&input, &mut Rng::new(7)).unwrap();
+        assert_eq!(tblob.payload, blob.payload, "timing must not change bytes");
+        assert_eq!(tblob.theta, blob.theta);
+        let labels: Vec<&str> = enc_ns.iter().map(|(l, _)| l.as_str()).collect();
+        assert_eq!(labels, vec!["0:topk", "1:kmeans", "2:huffman"]);
+
+        let (theta_t, dec_ns) = timed.decode_timed(&blob.payload).unwrap();
+        assert_eq!(theta_t, plain.decode(&blob.payload).unwrap());
+        let labels: Vec<&str> = dec_ns.iter().map(|(l, _)| l.as_str()).collect();
+        assert_eq!(labels, vec!["2:huffman", "1:kmeans", "0:topk"]);
     }
 }

@@ -52,6 +52,7 @@ use crate::runtime::Engine;
 use crate::sim::FleetSim;
 use crate::util::rng::Rng;
 use crate::util::threadpool::default_workers;
+use crate::util::timer::Stopwatch;
 
 /// Everything a run needs in memory: client shards, unlabeled shards,
 /// test split, server OOD set.
@@ -186,6 +187,10 @@ pub struct RoundIntake {
     pub max_reporting_s: f64,
     /// reorder-window high-water mark of the streaming accumulator
     pub peak_parked: usize,
+    /// Transport-attributed wall ns per phase (`train`, `encode_up`,
+    /// ...) — live-only observability input for the round loop's
+    /// `phase_timing` ops event, never part of any record.
+    pub phase_ns: Vec<(&'static str, u64)>,
 }
 
 /// Streaming ingest for one round. The transport resolves every
@@ -212,6 +217,9 @@ pub struct RoundIngest<'a> {
     /// evictions) stream here as they happen. Defaults to the
     /// [`NULL_SINK`]; never touches the canonical `EventLog`.
     sink: &'a dyn EventSink,
+    /// Wall ns the transport attributes to named phases (see
+    /// [`RoundIntake::phase_ns`]).
+    phase_ns: Vec<(&'static str, u64)>,
 }
 
 impl<'a> RoundIngest<'a> {
@@ -249,6 +257,20 @@ impl<'a> RoundIngest<'a> {
             accumulator: StreamAccumulator::new(fold, participants.len()),
             outcomes: (0..participants.len()).map(|_| SlotMeta::Open).collect(),
             sink: &NULL_SINK,
+            phase_ns: Vec::new(),
+        }
+    }
+
+    /// Attribute `ns` of wall time to `phase` (accumulating across
+    /// calls). Transports use this for the phases only they can see —
+    /// training vs upload-encoding — measured through `util::timer`.
+    /// Timing is live-only by contract: it leaves `finish` on
+    /// [`RoundIntake::phase_ns`] and goes nowhere but the ops stream.
+    pub fn add_phase_ns(&mut self, phase: &'static str, ns: u64) {
+        if let Some(entry) = self.phase_ns.iter_mut().find(|(p, _)| *p == phase) {
+            entry.1 = entry.1.saturating_add(ns);
+        } else {
+            self.phase_ns.push((phase, ns));
         }
     }
 
@@ -499,6 +521,7 @@ impl<'a> RoundIngest<'a> {
             up_bytes: 0,
             max_reporting_s: 0.0,
             peak_parked: self.accumulator.peak_parked(),
+            phase_ns: self.phase_ns.clone(),
         };
         for (pt, m) in self.participants.iter().zip(&self.outcomes) {
             if let SlotMeta::Dropped(phase) = m {
@@ -713,8 +736,12 @@ pub fn run_with_strategy_sink(
     };
 
     for round in start_round..cfg.rounds {
-        // fedlint:allow(no-wallclock-state) -- wall_ms is a bench field, excluded from record diffing
-        let t0 = std::time::Instant::now();
+        // wall clock only through the sanctioned timer: `wall_ms` is a
+        // bench field excluded from record diffing, and the phase laps
+        // below feed the live-only `phase_timing` ops event — neither
+        // ever reaches canonical events or records
+        let round_sw = Stopwatch::start();
+        let mut phase_sw = Stopwatch::start();
         let mut round_rng = base.fork(100 + round as u64);
         let ctx = RoundContext {
             round,
@@ -739,6 +766,7 @@ pub fn run_with_strategy_sink(
         // contract — `coordinator::accumulate` module docs)
         selected.sort_unstable();
         let fates = sim.round_fates(round, &selected);
+        let select_ns = phase_sw.lap_ns();
         let down = strategy.encode_download(&ctx, &model)?;
         down.ensure_param_count(p)?;
         let down_framed = framed_down(down.bytes);
@@ -755,6 +783,7 @@ pub fn run_with_strategy_sink(
             });
         }
         tee_events(sink, &events, &mut teed);
+        let encode_down_ns = phase_sw.lap_ns();
 
         // --- client updates via the transport -----------------------------
         let participants: Vec<Participant> = selected
@@ -792,10 +821,12 @@ pub fn run_with_strategy_sink(
         );
         ingest.attach_sink(sink);
         transport.run_round(&env, &*strategy, &round_spec, &mut ingest)?;
+        let transport_ns = phase_sw.lap_ns();
         // canonical-order replay: events + ledger byte-identical to the
         // buffered loop, survivors already folded
         let intake = ingest.finish(&mut ledger, &mut events)?;
         tee_events(sink, &events, &mut teed);
+        let finish_ns = phase_sw.lap_ns();
         let dropped = intake.fault_drops + intake.deadline_drops;
         let stragglers = fates.iter().filter(|f| f.is_straggler()).count();
         let round_sim_ms = 1e3 * sim.clock().round_time_s(intake.max_reporting_s, dropped > 0);
@@ -828,6 +859,7 @@ pub fn run_with_strategy_sink(
             strategy.post_aggregate(&ctx, &env, &mut model, score, &mut events)?;
         }
         tee_events(sink, &events, &mut teed);
+        let aggregate_ns = phase_sw.lap_ns();
 
         // --- evaluate the deliverable model --------------------------------
         let (accuracy, test_loss) = evaluate(engine, &cfg.dataset, &data.test, &model.theta)?;
@@ -837,6 +869,7 @@ pub fn run_with_strategy_sink(
             loss: test_loss,
         });
         tee_events(sink, &events, &mut teed);
+        let evaluate_ns = phase_sw.lap_ns();
         // ops-only round summary, emitted right after the round's last
         // canonical event — offline replay synthesizes RoundOps at the
         // same position, so live tee and record replay line up
@@ -846,6 +879,40 @@ pub fn run_with_strategy_sink(
             peak_parked: intake.peak_parked,
             sim_ms: round_sim_ms,
         });
+        // live-only phase profile: the transport attributes what only
+        // it can see (train vs upload-encode); everything else in its
+        // lap — wire wait, decode, slot resolution — plus the
+        // canonical-order replay in `finish` is the ingest phase
+        if sink.enabled() {
+            let attributed = |name: &str| {
+                intake
+                    .phase_ns
+                    .iter()
+                    .find(|(p, _)| *p == name)
+                    .map(|&(_, v)| v)
+                    .unwrap_or(0)
+            };
+            let train_ns = attributed("train");
+            let encode_up_ns = attributed("encode_up");
+            let ingest_ns = transport_ns
+                .saturating_sub(train_ns.saturating_add(encode_up_ns))
+                .saturating_add(finish_ns);
+            let mut ns: Vec<(String, u64)> = [
+                ("select", select_ns),
+                ("encode_down", encode_down_ns),
+                ("train", train_ns),
+                ("encode_up", encode_up_ns),
+                ("ingest", ingest_ns),
+                ("aggregate", aggregate_ns),
+                ("evaluate", evaluate_ns),
+            ]
+            .into_iter()
+            .map(|(k, v)| (k.to_string(), v))
+            .collect();
+            // stream invariant: phase names sort ascending on the wire
+            ns.sort_by(|a, b| a.0.cmp(&b.0));
+            sink.emit(&StreamEvent::PhaseTiming { round, ns });
+        }
         let m = RoundMetrics {
             round,
             accuracy,
@@ -856,7 +923,7 @@ pub fn run_with_strategy_sink(
             clusters,
             up_bytes: intake.up_bytes,
             down_bytes: down.bytes * selected.len(),
-            wall_ms: t0.elapsed().as_secs_f64() * 1e3,
+            wall_ms: round_sw.elapsed_ms(),
             round_sim_ms,
             stragglers,
             dropped,

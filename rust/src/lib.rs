@@ -167,12 +167,37 @@
 //! non-blocking [`obs::EventSink`] trait (bounded channel + drop
 //! counter — a slow disk costs events, never round latency). The
 //! stream carries the canonical run events *plus* ops-only detail
-//! (per-slot arrival order, reorder-window depth, worker evictions)
-//! that never enters the bit-exact run record. `runs tail <key>
-//! [--follow]` and `sweep --watch` render live terminal tables from
-//! the stream via a tolerant parser (per-line errors are counted, a
-//! damaged stream still replays), and the same renderer reconstructs
-//! the identical view offline from a stored [`store::RunRecord`].
+//! (per-slot arrival order, reorder-window depth, worker evictions,
+//! per-phase round timings) that never enters the bit-exact run
+//! record. `runs tail <key> [--follow]` and `sweep --watch` render
+//! live terminal tables from the stream via a tolerant parser
+//! (per-line errors are counted, a damaged stream still replays), and
+//! the same renderer reconstructs the identical view offline from a
+//! stored [`store::RunRecord`] — minus the live-only timing columns,
+//! which only a teed stream carries.
+//!
+//! # Perf trajectory (bench)
+//!
+//! Performance is a committed artifact, not a side effect: `bench run
+//! [--area codec|net|store|aggregate|runtime|all] [--quick]` drives
+//! the same suite functions the `cargo bench` targets wrap
+//! ([`bench::suite`]) headlessly and writes one versioned
+//! `BENCH_<area>.json` per area ([`bench::schema::BenchDoc`], format
+//! 2: median/p10/p90 ns per row plus derived MiB/s wherever a byte
+//! count exists). `bench diff <old> <new> [--threshold-pct N]`
+//! compares two documents row by row and exits 3 on any regression
+//! past the threshold — CI runs quick suites against the committed
+//! baselines at the repo root and flags drifts; an intentional speedup
+//! is ratified by refreshing the baseline JSON in the same PR.
+//! In-run profiling feeds the same trajectory: the round loop times
+//! each phase (select, encode_down, train, encode_up, ingest,
+//! aggregate, evaluate) through the sanctioned [`util::timer`]
+//! monotonic API — the *only* wall-clock read site fedlint's
+//! `no-wallclock-state` rule tolerates — and emits live-only
+//! `phase_timing` ops events that `runs tail` renders as a timing
+//! column group and `bench run --area rounds` rolls into
+//! `BENCH_rounds.json`. Canonical records stay byte-identical: every
+//! timing is observability, never state.
 //!
 //! # Invariants as lint rules (fedlint)
 //!

@@ -6,6 +6,9 @@ use std::time::Duration;
 use anyhow::{Context, Result};
 
 use fedcompress::baselines::StrategyRegistry;
+use fedcompress::bench::diff::{diff_docs, DEFAULT_THRESHOLD_PCT};
+use fedcompress::bench::schema::BenchDoc;
+use fedcompress::bench::suite::{self, AREAS};
 use fedcompress::cli::{Args, ParsedCommand, USAGE};
 use fedcompress::clustering::ControllerConfig;
 use fedcompress::codec::CodecRegistry;
@@ -754,6 +757,95 @@ fn cmd_inspect(args: &Args) -> Result<()> {
     Ok(())
 }
 
+/// Exit code for a `bench diff` perf regression — distinct from `1`
+/// (schema/usage error) so CI can soft-fail regressions on noisy
+/// runners while hard-failing malformed baselines.
+const BENCH_REGRESSION_EXIT: i32 = 3;
+
+fn cmd_bench(args: &Args) -> Result<()> {
+    match args.sub.as_deref() {
+        Some("run") => cmd_bench_run(args),
+        Some("diff") => cmd_bench_diff(args),
+        other => anyhow::bail!(
+            "unknown bench subcommand '{}' (run|diff)",
+            other.unwrap_or("<none>")
+        ),
+    }
+}
+
+/// `bench run [--area <name>|all|rounds] [--quick] [--out-dir d]
+/// [--store dir]`: run the in-process suites headlessly and write one
+/// `BENCH_<area>.json` per area (the committed perf-trajectory
+/// baselines come from exactly this path).
+fn cmd_bench_run(args: &Args) -> Result<()> {
+    args.restrict(&["area", "quick", "out-dir", "store", "verbose"])?;
+    anyhow::ensure!(
+        args.positionals.is_empty(),
+        "bench run takes no positionals (areas go through --area)"
+    );
+    let quick = args.flag("quick").is_some();
+    let out_dir = PathBuf::from(args.flag_or("out-dir", "."));
+    let names: Vec<&str> = match args.flag_or("area", "all") {
+        // `rounds` is store-derived, not a suite — only explicit
+        "all" => AREAS.iter().map(|a| a.name).collect(),
+        one => vec![one],
+    };
+    for name in names {
+        let doc = if name == "rounds" {
+            let store = Path::new(args.flag_or("store", "runs"));
+            suite::rounds_rollup(&store.join("events"), quick)?
+        } else {
+            suite::run_area(name, quick)?
+        };
+        let out = out_dir.join(format!("BENCH_{name}.json"));
+        doc.write(&out)?;
+        println!(
+            "bench: wrote {} ({} row(s), quick={quick})",
+            out.display(),
+            doc.rows.len()
+        );
+    }
+    Ok(())
+}
+
+/// `bench diff <old.json> <new.json> [--threshold-pct N] [--json]`:
+/// name-wise median comparison. Exit 0 when clean (missing/added rows
+/// and incomparable medians are reported, never failed), exit
+/// [`BENCH_REGRESSION_EXIT`] when any row regressed past the
+/// threshold; schema errors exit 1 through the normal error path.
+fn cmd_bench_diff(args: &Args) -> Result<()> {
+    args.restrict(&["threshold-pct", "json", "verbose"])?;
+    anyhow::ensure!(
+        args.positionals.len() == 2,
+        "bench diff needs exactly two positionals: <old.json> <new.json>"
+    );
+    let threshold = match args.flag("threshold-pct") {
+        Some(t) => {
+            let v: f64 = t
+                .parse()
+                .with_context(|| format!("parsing --threshold-pct '{t}'"))?;
+            anyhow::ensure!(
+                v.is_finite() && v >= 0.0,
+                "--threshold-pct must be a finite non-negative percentage, got {t}"
+            );
+            v
+        }
+        None => DEFAULT_THRESHOLD_PCT,
+    };
+    let old = BenchDoc::load(Path::new(&args.positionals[0]))?;
+    let new = BenchDoc::load(Path::new(&args.positionals[1]))?;
+    let d = diff_docs(&old, &new, threshold);
+    if args.flag("json").is_some() {
+        println!("{}", d.to_json());
+    } else {
+        print!("{}", d.render());
+    }
+    if d.regressions() > 0 {
+        std::process::exit(BENCH_REGRESSION_EXIT);
+    }
+    Ok(())
+}
+
 fn cmd_lint(args: &Args) -> Result<()> {
     use fedcompress::lint::{self, LintConfig};
 
@@ -815,6 +907,7 @@ fn main() -> Result<()> {
         ParsedCommand::Fleet => cmd_fleet(&args),
         ParsedCommand::Sweep => cmd_sweep(&args),
         ParsedCommand::Runs => cmd_runs(&args),
+        ParsedCommand::Bench => cmd_bench(&args),
         ParsedCommand::Lint => cmd_lint(&args),
         ParsedCommand::AblateC => cmd_ablate_c(&args),
         ParsedCommand::Inspect => cmd_inspect(&args),

@@ -166,8 +166,7 @@ impl Mux {
     /// Take ownership of handshaken streams and switch them to
     /// nonblocking mode. Connection indices are positions in `streams`.
     pub fn new(streams: Vec<TcpStream>) -> std::io::Result<Mux> {
-        // fedlint:allow(no-wallclock-state) -- socket inactivity clock only, never recorded
-        let now = Instant::now();
+        let now = crate::util::timer::now();
         let mut conns = Vec::with_capacity(streams.len());
         for stream in streams {
             stream.set_nonblocking(true)?;
@@ -220,8 +219,7 @@ impl Mux {
     /// last dispatch or read*, not since connection setup.
     pub fn mark_active(&mut self, conn: usize) {
         if let Some(c) = self.conns.get_mut(conn) {
-            // fedlint:allow(no-wallclock-state) -- socket inactivity clock only, never recorded
-            c.last_rx = Instant::now();
+            c.last_rx = crate::util::timer::now();
         }
     }
 
@@ -310,8 +308,7 @@ impl Mux {
                     Ok(n) => {
                         progress = true;
                         c.reader.push(self.read_buf.get(..n).unwrap_or(&[]));
-                        // fedlint:allow(no-wallclock-state) -- socket inactivity clock only, never recorded
-                        c.last_rx = Instant::now();
+                        c.last_rx = crate::util::timer::now();
                         if n < self.read_buf.len() {
                             break;
                         }

@@ -40,6 +40,7 @@ use crate::runtime::Engine;
 use crate::sim::ClientFate;
 use crate::util::rng::Rng;
 use crate::util::threadpool::parallel_map;
+use crate::util::timer::Stopwatch;
 
 /// Which transport a run used — recorded in checkpoints so a resume
 /// under a different backend can warn (`Event::ResumeMismatch`).
@@ -178,6 +179,7 @@ impl Transport for InProcess {
         };
 
         // --- client updates (engine-bound, coordinator thread) ------------
+        let mut phase_sw = Stopwatch::start();
         let mut trained = Vec::with_capacity(spec.participants.len());
         for (slot, part) in spec.participants.iter().enumerate() {
             let phase = match part.fate {
@@ -208,6 +210,7 @@ impl Transport for InProcess {
                 rng: client_rng,
             });
         }
+        ingest.add_phase_ns("train", phase_sw.lap_ns());
 
         // --- upload encoding (pure CPU, worker pool) ----------------------
         let blobs: Vec<Result<WireBlob>> = {
@@ -230,6 +233,7 @@ impl Transport for InProcess {
                 )
             })
         };
+        ingest.add_phase_ns("encode_up", phase_sw.lap_ns());
 
         // slot order here is already canonical, so the streaming fold
         // never needs to park an in-process upload

@@ -19,7 +19,7 @@
 
 use std::net::TcpStream;
 use std::path::Path;
-use std::time::{Duration, Instant};
+use std::time::Duration;
 
 use anyhow::{bail, Context, Result};
 
@@ -47,8 +47,9 @@ use super::{ProtoError, PROTO_VERSION};
 
 /// Connect with retry so `worker` can be launched before `serve`.
 fn connect(addr: &str, patience: Duration) -> Result<TcpStream> {
-    // fedlint:allow(no-wallclock-state) -- connect retry pacing only, never recorded
-    let t0 = Instant::now();
+    // connect retry pacing only, never recorded; clock from the
+    // sanctioned timer
+    let t0 = crate::util::timer::now();
     loop {
         match TcpStream::connect(addr) {
             Ok(s) => return Ok(s),

@@ -15,7 +15,10 @@
 //! bit-exact config image, so a stream can be matched to its record
 //! without parsing a single event. Every event line carries a
 //! monotonic `seq` stamped by the sink — gaps mean a bounded sink
-//! dropped events, and no line ever encodes wall-clock time.
+//! dropped events. Canonical (`Run`) lines never encode wall-clock
+//! time; ops lines may carry monotonic *durations* (`wall_s`,
+//! `phase_timing` ns), which is why ops events are live-only and never
+//! enter a record.
 //!
 //! Reading is tolerant end to end: [`parse_stream`] turns every
 //! unreadable line into a counted [`EventParseError`] and keeps going,
@@ -137,6 +140,15 @@ pub enum StreamEvent {
         peak_parked: usize,
         sim_ms: f64,
     },
+    /// Live-only per-phase wall durations for one round, in
+    /// nanoseconds, sorted by phase name (`util::timer` is the only
+    /// clock behind them). Emitted right after `round_ops`; never
+    /// synthesized on replay — the record keeps no wall time — so a
+    /// cached tee legitimately has none of these lines.
+    PhaseTiming {
+        round: usize,
+        ns: Vec<(String, u64)>,
+    },
     /// A worker connection was evicted mid-round and why.
     Evicted {
         round: usize,
@@ -173,6 +185,7 @@ impl StreamEvent {
             StreamEvent::Run(e) => e.kind(),
             StreamEvent::Slot { .. } => "slot",
             StreamEvent::RoundOps { .. } => "round_ops",
+            StreamEvent::PhaseTiming { .. } => "phase_timing",
             StreamEvent::Evicted { .. } => "evicted",
             StreamEvent::SweepPlanned { .. } => "sweep_planned",
             StreamEvent::SweepJobStart { .. } => "sweep_job_start",
@@ -205,6 +218,18 @@ impl StreamEvent {
                 ("stragglers", Json::from(*stragglers)),
                 ("peak_parked", Json::from(*peak_parked)),
                 ("sim_ms", Json::num(*sim_ms)),
+            ]),
+            StreamEvent::PhaseTiming { round, ns } => Json::obj(vec![
+                ("kind", Json::str("phase_timing")),
+                ("round", Json::from(*round)),
+                (
+                    "ns",
+                    Json::Obj(
+                        ns.iter()
+                            .map(|(phase, v)| (phase.clone(), Json::from(*v as usize)))
+                            .collect(),
+                    ),
+                ),
             ]),
             StreamEvent::Evicted {
                 round,
@@ -276,6 +301,17 @@ impl StreamEvent {
                 stragglers: j.get("stragglers")?.as_usize()?,
                 peak_parked: j.get("peak_parked")?.as_usize()?,
                 sim_ms: j.get("sim_ms")?.as_f64()?,
+            },
+            "phase_timing" => StreamEvent::PhaseTiming {
+                round: j.get("round")?.as_usize()?,
+                // object keys are BTreeMap-ordered, so the vec comes
+                // back sorted by phase name — the writer's invariant
+                ns: j
+                    .get("ns")?
+                    .as_obj()?
+                    .iter()
+                    .map(|(phase, v)| Ok((phase.clone(), v.as_usize()? as u64)))
+                    .collect::<Result<Vec<_>>>()?,
             },
             "evicted" => StreamEvent::Evicted {
                 round: j.get("round")?.as_usize()?,
@@ -472,6 +508,13 @@ mod tests {
                 stragglers: 2,
                 peak_parked: 5,
                 sim_ms: 1500.25,
+            },
+            StreamEvent::PhaseTiming {
+                round: 2,
+                ns: vec![
+                    ("aggregate".to_string(), 188_021),
+                    ("train".to_string(), 52_000_913),
+                ],
             },
             StreamEvent::Evicted {
                 round: 1,

@@ -42,6 +42,33 @@ struct RoundRow {
     up_bytes: usize,
     down_bytes: usize,
     framed_bytes: usize,
+    /// live-only per-phase wall ns (`phase_timing` ops events); absent
+    /// on replayed record streams, so the timing column group only
+    /// renders for teed live runs
+    phase_ns: Option<Vec<(String, u64)>>,
+}
+
+/// Canonical phase column order for the timing group: (column header,
+/// phase key as emitted by the coordinator round loop).
+const PHASE_COLUMNS: [(&str, &str); 7] = [
+    ("sel_ms", "select"),
+    ("dn_ms", "encode_down"),
+    ("tr_ms", "train"),
+    ("up_ms", "encode_up"),
+    ("ing_ms", "ingest"),
+    ("agg_ms", "aggregate"),
+    ("ev_ms", "evaluate"),
+];
+
+fn fmt_phase_ms(row: &RoundRow, phase: &str) -> String {
+    match &row.phase_ns {
+        Some(ns) => ns
+            .iter()
+            .find(|(p, _)| p == phase)
+            .map(|&(_, v)| format!("{:.2}", v as f64 / 1e6))
+            .unwrap_or_else(|| "-".to_string()),
+        None => "-".to_string(),
+    }
 }
 
 /// Per-round view of one run's event stream. Fold events in with
@@ -82,6 +109,9 @@ impl RunView {
                 row.stragglers = Some(*stragglers);
                 row.peak_parked = Some(*peak_parked);
                 row.sim_ms = Some(*sim_ms);
+            }
+            StreamEvent::PhaseTiming { round, ns } => {
+                self.rows.entry(*round).or_default().phase_ns = Some(ns.clone());
             }
             StreamEvent::Evicted { .. } => self.evictions += 1,
             // per-slot arrival order is forensic detail (grep the
@@ -138,15 +168,22 @@ impl RunView {
                 key_hex(h.fingerprint)
             ));
         }
-        let header = [
+        // the timing column group renders only when the stream carried
+        // `phase_timing` ops events (live tees); replayed record
+        // streams never have them, so replay output stays byte-stable
+        let timed = self.rows.values().any(|r| r.phase_ns.is_some());
+        let mut header = vec![
             "round", "acc", "loss", "C", "ok", "drop", "cut", "strag", "park", "up_B", "down_B",
             "framed_B", "sim_s",
         ];
+        if timed {
+            header.extend(PHASE_COLUMNS.iter().map(|&(col, _)| col));
+        }
         let rows: Vec<Vec<String>> = self
             .rows
             .iter()
             .map(|(round, r)| {
-                vec![
+                let mut cells = vec![
                     round.to_string(),
                     fmt_opt_f64(r.accuracy, 4),
                     fmt_opt_f64(r.loss, 4),
@@ -160,7 +197,11 @@ impl RunView {
                     r.down_bytes.to_string(),
                     r.framed_bytes.to_string(),
                     fmt_opt_f64(r.sim_ms.map(|ms| ms / 1e3), 1),
-                ]
+                ];
+                if timed {
+                    cells.extend(PHASE_COLUMNS.iter().map(|&(_, phase)| fmt_phase_ms(r, phase)));
+                }
+                cells
             })
             .collect();
         out.push_str(&table::render(&header, &rows, &[]));
@@ -200,6 +241,10 @@ pub struct SweepView {
     total: usize,
     planned_cached: usize,
     rows: BTreeMap<usize, JobRow>,
+    /// summed live-only `phase_timing` ns across every profiled round
+    /// of every job (cached jobs replay record streams and carry none)
+    phase_ns: BTreeMap<String, u64>,
+    profiled_rounds: usize,
 }
 
 impl SweepView {
@@ -238,6 +283,13 @@ impl SweepView {
                 row.label = label.clone();
                 row.status = "FAILED".to_string();
                 row.note = error.clone();
+            }
+            StreamEvent::PhaseTiming { ns, .. } => {
+                for (phase, v) in ns {
+                    let slot = self.phase_ns.entry(phase.clone()).or_insert(0);
+                    *slot = slot.saturating_add(*v);
+                }
+                self.profiled_rounds += 1;
             }
             _ => {}
         }
@@ -281,6 +333,22 @@ impl SweepView {
             })
             .collect();
         out.push_str(&table::render(&header, &rows, &aligns));
+        // mean per-round phase profile (live runs only — cached jobs
+        // replay record streams, which carry no phase_timing events)
+        if self.profiled_rounds > 0 {
+            let parts: Vec<String> = self
+                .phase_ns
+                .iter()
+                .map(|(phase, ns)| {
+                    format!("{phase}={:.2}ms", *ns as f64 / self.profiled_rounds as f64 / 1e6)
+                })
+                .collect();
+            out.push_str(&format!(
+                "phase profile (mean over {} live round(s)): {}\n",
+                self.profiled_rounds,
+                parts.join(" ")
+            ));
+        }
         out
     }
 }
@@ -412,6 +480,33 @@ mod tests {
     }
 
     #[test]
+    fn timing_columns_render_only_when_phase_events_are_present() {
+        let plain = RunView::from_replay(&demo_replay()).render();
+        assert!(!plain.contains("tr_ms"), "{plain}");
+
+        let mut replay = demo_replay();
+        replay.events.push(StreamEvent::PhaseTiming {
+            round: 0,
+            ns: vec![
+                ("aggregate".to_string(), 2_500_000),
+                ("train".to_string(), 750_000_000),
+            ],
+        });
+        replay.events.push(StreamEvent::Run(Event::RoundStart {
+            round: 1,
+            clusters: 16,
+        }));
+        let timed = RunView::from_replay(&replay).render();
+        assert!(timed.contains("tr_ms"), "{timed}");
+        assert!(timed.contains("750.00"), "{timed}");
+        assert!(timed.contains("2.50"), "{timed}");
+        // round 1 has no phase event: its timing cells are dashes
+        assert!(timed.contains("sel_ms"), "{timed}");
+        // the footer greps CI relies on survive the extra columns
+        assert!(timed.contains("final round 1"), "{timed}");
+    }
+
+    #[test]
     fn sweep_view_tracks_job_lifecycle() {
         let mut view = SweepView::new();
         view.apply(&StreamEvent::SweepPlanned { total: 2, cached: 0 });
@@ -437,6 +532,21 @@ mod tests {
         assert!(text.contains("1 failed"), "{text}");
         assert!(text.contains("boom"), "{text}");
         assert!(text.contains(&key_hex(7)), "{text}");
+        assert!(!text.contains("phase profile"), "{text}");
+
+        view.apply(&StreamEvent::PhaseTiming {
+            round: 0,
+            ns: vec![("train".to_string(), 4_000_000)],
+        });
+        view.apply(&StreamEvent::PhaseTiming {
+            round: 1,
+            ns: vec![("train".to_string(), 2_000_000)],
+        });
+        let text = view.render();
+        assert!(
+            text.contains("phase profile (mean over 2 live round(s)): train=3.00ms"),
+            "{text}"
+        );
     }
 
     #[test]

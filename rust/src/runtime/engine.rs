@@ -56,14 +56,14 @@ impl Engine {
             .get(entry)
             .with_context(|| format!("no artifact for entry '{entry}'"))?;
         let path = self.manifest.dir.join(fname);
-        let t0 = std::time::Instant::now();
+        let sw = crate::util::timer::Stopwatch::start();
         let proto = HloModuleProto::from_text_file(path.to_str().unwrap())
             .with_context(|| format!("parsing HLO text {path:?}"))?;
         let comp = XlaComputation::from_proto(&proto);
         let exe = Rc::new(self.client.compile(&comp)?);
         info!(
             "runtime: compiled {dataset}.{entry} in {:.0} ms",
-            t0.elapsed().as_secs_f64() * 1e3
+            sw.elapsed_ms()
         );
         self.cache.borrow_mut().insert(key, Rc::clone(&exe));
         Ok(exe)

@@ -5,6 +5,7 @@
 
 use std::path::Path;
 
+use crate::bench::schema::{BenchDoc, BenchError, BenchRow};
 use crate::util::json::Json;
 
 use super::index::{RunMeta, RunStore};
@@ -126,11 +127,48 @@ pub fn rounds_rows(rec: &RunRecord) -> Vec<Vec<String>> {
         .collect()
 }
 
-/// The `BENCH_sweep.json` document: every (latest) record as one run
-/// entry plus per-strategy aggregates — the machine-readable summary
-/// the perf trajectory tracks across commits.
-pub fn bench_summary(store: &RunStore) -> Json {
+/// The `BENCH_sweep.json` document as a [`BenchDoc`] (shared format-2
+/// envelope with the headless bench runner): every (latest) record
+/// becomes one row (`suite` = strategy, `median_ns` = total sim time,
+/// `bytes` = total uplink payload, so MiB/s derives the simulated
+/// communication rate), and the pre-format-2 `records` / `runs` /
+/// `by_strategy` keys ride along in the extra map for existing
+/// consumers.
+pub fn bench_doc(store: &RunStore) -> BenchDoc {
     let latest = store.latest();
+    let mut doc = BenchDoc::new("sweep", false);
+    for m in &latest {
+        doc.rows.push(BenchRow {
+            suite: m.strategy.clone(),
+            name: format!("{}/{}/{}/s{}", m.dataset, m.fleet, m.codec, m.seed),
+            median_ns: m.total_sim_ms * 1e6,
+            p10_ns: m.total_sim_ms * 1e6,
+            p90_ns: m.total_sim_ms * 1e6,
+            iters: m.rounds,
+            bytes: Some(m.total_bytes),
+        });
+    }
+    doc.rows
+        .sort_by(|a, b| (&a.suite, &a.name).cmp(&(&b.suite, &b.name)));
+    let legacy = legacy_summary(&latest);
+    doc.extra
+        .insert("records".to_string(), Json::from(latest.len()));
+    for key in ["runs", "by_strategy"] {
+        if let Some(v) = legacy.opt(key) {
+            doc.extra.insert(key.to_string(), v.clone());
+        }
+    }
+    doc
+}
+
+/// Full rendered `BENCH_sweep.json` (envelope + legacy keys merged).
+pub fn bench_summary(store: &RunStore) -> Json {
+    bench_doc(store).to_json()
+}
+
+/// The pre-format-2 summary body (`runs` array + per-strategy
+/// aggregates), kept verbatim under the format-2 envelope.
+fn legacy_summary(latest: &[&RunMeta]) -> Json {
     let runs: Vec<Json> = latest
         .iter()
         .map(|m| {
@@ -189,23 +227,19 @@ pub fn bench_summary(store: &RunStore) -> Json {
         .collect();
 
     Json::obj(vec![
-        ("bench", Json::str("sweep")),
-        ("format", Json::from(1usize)),
-        ("records", Json::from(latest.len())),
         ("runs", Json::Arr(runs)),
         ("by_strategy", Json::obj(by_strategy)),
     ])
 }
 
-/// Write the bench summary to `path` (`runs export-bench`).
+/// Write the bench summary to `path` (`runs export-bench`) through the
+/// shared [`BenchDoc`] writer.
 pub fn write_bench_json(store: &RunStore, path: &Path) -> Result<(), StoreError> {
-    if let Some(parent) = path.parent() {
-        if !parent.as_os_str().is_empty() {
-            std::fs::create_dir_all(parent)?;
-        }
+    match bench_doc(store).write(path) {
+        Ok(()) => Ok(()),
+        Err(BenchError::Io(_, e)) => Err(StoreError::Io(e)),
+        Err(e) => Err(StoreError::Malformed { what: e.to_string() }),
     }
-    std::fs::write(path, format!("{}\n", bench_summary(store)))?;
-    Ok(())
 }
 
 #[cfg(test)]
@@ -222,6 +256,10 @@ mod tests {
         store.append(&demo_record(2, "fedavg")).unwrap();
         store.append(&demo_record(1, "fedcompress")).unwrap();
         let doc = bench_summary(&store);
+        // format-2 envelope from the shared bench schema...
+        assert_eq!(doc.get("format").unwrap().as_usize().unwrap(), 2);
+        assert_eq!(doc.get("rows").unwrap().as_arr().unwrap().len(), 3);
+        // ...with the legacy summary keys still present for consumers
         assert_eq!(doc.get("records").unwrap().as_usize().unwrap(), 3);
         assert_eq!(doc.get("runs").unwrap().as_arr().unwrap().len(), 3);
         let by = doc.get("by_strategy").unwrap();

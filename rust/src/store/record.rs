@@ -82,11 +82,9 @@ impl RunRecord {
     /// Convert a finished run into its persistent record. `cfg` must
     /// be the config the run executed under.
     pub fn from_result(cfg: &FedConfig, result: &RunResult) -> RunRecord {
-        // fedlint:allow(no-wallclock-state) -- created_unix is an environment field, excluded from content keys and diffs
-        let created_unix = std::time::SystemTime::now()
-            .duration_since(std::time::UNIX_EPOCH)
-            .map(|d| d.as_secs())
-            .unwrap_or(0);
+        // created_unix is an environment field, excluded from content
+        // keys and diffs; the read goes through the sanctioned timer
+        let created_unix = crate::util::timer::unix_now_s();
         RunRecord {
             key: run_key(result.strategy, cfg),
             created_unix,

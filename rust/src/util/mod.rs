@@ -11,4 +11,5 @@ pub mod rng;
 pub mod stats;
 pub mod suggest;
 pub mod table;
+pub mod timer;
 pub mod threadpool;

@@ -1,0 +1,92 @@
+//! The sanctioned wall-clock boundary. Every monotonic or calendar
+//! clock read in `src/` goes through this module — fedlint's
+//! `no-wallclock-state` rule covers the whole source tree, so the two
+//! `::now` calls below carry the only standing allows outside tests.
+//!
+//! Centralising the reads keeps the determinism contract reviewable:
+//! timer values may feed *live-only* surfaces (phase-timing ops
+//! events, bench rows, log lines) and the environment fields that
+//! `diff_records` already excludes (`wall_ms`, `wall_s`,
+//! `created_unix`). They must never reach canonical events, round
+//! metrics content, records, or anything hashed into a run key. The
+//! lint cannot check that flow transitively — the narrow waist plus
+//! review does.
+
+use std::time::Instant;
+
+/// Monotonic clock read — the only `Instant::now` site in `src/`.
+///
+/// Callers that need an `Instant` value (e.g. the mux's per-connection
+/// inactivity clock) take it from here; callers that just measure a
+/// span should prefer [`Stopwatch`].
+pub fn now() -> Instant {
+    // fedlint:allow(no-wallclock-state) -- the sanctioned monotonic read; values are live-only by contract
+    Instant::now()
+}
+
+/// Calendar clock read in whole seconds since the Unix epoch — the
+/// only `SystemTime::now` site in `src/`. Feeds `created_unix`-style
+/// environment fields only.
+pub fn unix_now_s() -> u64 {
+    // fedlint:allow(no-wallclock-state) -- the sanctioned calendar read; feeds excluded environment fields only
+    std::time::SystemTime::now()
+        .duration_since(std::time::UNIX_EPOCH)
+        .map(|d| d.as_secs())
+        .unwrap_or(0)
+}
+
+/// Span measurement over the sanctioned monotonic clock. `start()`,
+/// then read an elapsed view; `lap_ns()` additionally resets the
+/// origin so consecutive laps tile a timeline into phases.
+#[derive(Clone, Copy, Debug)]
+pub struct Stopwatch {
+    t0: Instant,
+}
+
+impl Stopwatch {
+    pub fn start() -> Stopwatch {
+        Stopwatch { t0: now() }
+    }
+
+    pub fn elapsed_ns(&self) -> u64 {
+        let ns = self.t0.elapsed().as_nanos();
+        u64::try_from(ns).unwrap_or(u64::MAX)
+    }
+
+    pub fn elapsed_s(&self) -> f64 {
+        self.t0.elapsed().as_secs_f64()
+    }
+
+    pub fn elapsed_ms(&self) -> f64 {
+        self.elapsed_s() * 1e3
+    }
+
+    /// Nanoseconds since start (or the previous lap), then restart.
+    pub fn lap_ns(&mut self) -> u64 {
+        let ns = self.elapsed_ns();
+        self.t0 = now();
+        ns
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stopwatch_is_monotone() {
+        let mut sw = Stopwatch::start();
+        let a = sw.elapsed_ns();
+        let b = sw.elapsed_ns();
+        assert!(b >= a);
+        let lap = sw.lap_ns();
+        assert!(lap >= b);
+        // origin reset: the next reading restarts near zero
+        assert!(sw.elapsed_ns() <= lap.max(1_000_000_000));
+    }
+
+    #[test]
+    fn unix_now_is_after_2020() {
+        assert!(unix_now_s() > 1_577_836_800);
+    }
+}

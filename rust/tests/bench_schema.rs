@@ -1,0 +1,201 @@
+//! Integration tests for the perf-trajectory surface: the versioned
+//! `BENCH_*.json` schema round-trips through real files, the
+//! `bench diff` gate handles its edge cases (threshold boundary,
+//! degenerate medians, missing/added rows, malformed baselines), a
+//! quick headless area run self-diffs clean, and fedlint's
+//! `no-wallclock-state` rule holds over `src/` with `util::timer` as
+//! the only sanctioned allow site.
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+use fedcompress::bench::diff::{diff_docs, RowStatus, DEFAULT_THRESHOLD_PCT};
+use fedcompress::bench::schema::{BenchDoc, BenchError, BenchRow, BENCH_FORMAT};
+use fedcompress::bench::suite::run_area;
+use fedcompress::lint::config::LintConfig;
+use fedcompress::lint::lint_root;
+use fedcompress::util::json::Json;
+
+fn scratch(name: &str) -> PathBuf {
+    let dir = std::env::temp_dir().join(format!("fedcompress_bench_it_{name}"));
+    let _ = std::fs::remove_dir_all(&dir);
+    std::fs::create_dir_all(&dir).unwrap();
+    dir
+}
+
+fn doc_with(rows: Vec<(&str, &str, f64)>) -> BenchDoc {
+    let mut doc = BenchDoc::new("codec", true);
+    for (suite, name, median_ns) in rows {
+        doc.rows.push(BenchRow {
+            suite: suite.to_string(),
+            name: name.to_string(),
+            median_ns,
+            p10_ns: median_ns * 0.9,
+            p90_ns: median_ns * 1.2,
+            iters: 10,
+            bytes: None,
+        });
+    }
+    doc
+}
+
+#[test]
+fn documents_round_trip_through_files_with_extra_keys() {
+    let dir = scratch("roundtrip");
+    let mut doc = doc_with(vec![("pipelines", "pipe_encode[dense]", 81_234.0)]);
+    doc.rows[0].bytes = Some(78_696);
+    doc.extra
+        .insert("records".to_string(), Json::from(6usize));
+    doc.extra.insert(
+        "by_strategy".to_string(),
+        Json::obj(vec![("fedavg", Json::from(3usize))]),
+    );
+
+    let path = dir.join("nested/BENCH_codec.json");
+    doc.write(&path).unwrap();
+    let text = std::fs::read_to_string(&path).unwrap();
+    assert!(text.ends_with('\n'), "writer emits a trailing newline");
+
+    let back = BenchDoc::load(&path).unwrap();
+    assert_eq!(back, doc);
+    assert_eq!(back.format, BENCH_FORMAT);
+    assert_eq!(back.extra.len(), 2, "producer keys survive the trip");
+    // derived throughput is recomputed from bytes/median, never stored
+    // as truth: byte-carrying rows expose it, bare rows do not
+    assert!(back.rows[0].mib_s().unwrap() > 0.0);
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn diff_gate_edges_through_the_file_api() {
+    let dir = scratch("diffedges");
+    // zero is the degenerate median that can survive a JSON trip (the
+    // writer has no NaN literal); NaN is covered in-memory below
+    let old = doc_with(vec![
+        ("s", "boundary", 100.0),
+        ("s", "zero", 0.0),
+        ("s", "gone", 100.0),
+    ]);
+    let new = doc_with(vec![
+        ("s", "boundary", 125.0),
+        ("s", "zero", 90.0),
+        ("s", "fresh", 50.0),
+    ]);
+    let (op, np) = (dir.join("old.json"), dir.join("new.json"));
+    old.write(&op).unwrap();
+    new.write(&np).unwrap();
+    let (old, new) = (BenchDoc::load(&op).unwrap(), BenchDoc::load(&np).unwrap());
+
+    let d = diff_docs(&old, &new, DEFAULT_THRESHOLD_PCT);
+    let by_id: BTreeMap<&str, RowStatus> =
+        d.rows.iter().map(|r| (r.id.as_str(), r.status)).collect();
+    assert_eq!(by_id["s/boundary"], RowStatus::Ok, "exact threshold passes");
+    assert_eq!(by_id["s/zero"], RowStatus::Incomparable);
+    assert_eq!(d.missing, vec!["s/gone".to_string()]);
+    assert_eq!(d.added, vec!["s/fresh".to_string()]);
+    assert_eq!(d.regressions(), 0, "nothing above fails the gate");
+
+    // NaN medians (in-memory only — not representable in JSON) are
+    // Incomparable too, never a gate failure
+    let nan_new = doc_with(vec![("s", "boundary", f64::NAN)]);
+    let d = diff_docs(&old, &nan_new, DEFAULT_THRESHOLD_PCT);
+    assert_eq!(d.rows[0].status, RowStatus::Incomparable);
+    assert_eq!(d.regressions(), 0);
+
+    // one tick past the boundary is a regression
+    let worse = doc_with(vec![("s", "boundary", 125.1)]);
+    let d = diff_docs(&old, &worse, DEFAULT_THRESHOLD_PCT);
+    assert_eq!(d.regressions(), 1);
+    assert!(d.render().contains("REGRESSED"));
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn malformed_baselines_are_typed_errors_not_panics() {
+    let dir = scratch("malformed");
+
+    let garbage = dir.join("garbage.json");
+    std::fs::write(&garbage, "}{ not json").unwrap();
+    assert!(matches!(BenchDoc::load(&garbage), Err(BenchError::Json(_))));
+
+    let shape = dir.join("shape.json");
+    std::fs::write(&shape, "{\"format\":2,\"rows\":[]}").unwrap();
+    assert!(matches!(BenchDoc::load(&shape), Err(BenchError::Schema(_))));
+
+    let old_format = dir.join("format1.json");
+    let mut doc = doc_with(vec![("s", "a", 1.0)]);
+    doc.format = 1;
+    std::fs::write(&old_format, format!("{}\n", doc.to_json())).unwrap();
+    match BenchDoc::load(&old_format) {
+        Err(BenchError::Schema(m)) => assert!(m.contains("format 1"), "{m}"),
+        other => panic!("expected schema error, got {other:?}"),
+    }
+
+    assert!(matches!(
+        BenchDoc::load(&dir.join("does_not_exist.json")),
+        Err(BenchError::Io(_, _))
+    ));
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn quick_store_area_runs_headless_and_self_diffs_clean() {
+    // The cheapest real area end-to-end: suite registry -> sampled
+    // rows -> document -> file -> gate. Mirrors what CI's bench job
+    // does with `bench run --quick` + `bench diff`.
+    let doc = run_area("store", true).unwrap();
+    assert_eq!(doc.bench, "store");
+    assert!(doc.quick);
+    assert!(!doc.rows.is_empty());
+    assert!(
+        doc.rows.iter().any(|r| r.name == "store_append_batch"),
+        "expected the append row, got {:?}",
+        doc.rows.iter().map(|r| r.id()).collect::<Vec<_>>()
+    );
+    for r in &doc.rows {
+        assert!(r.median_ns.is_finite() && r.median_ns > 0.0, "{}", r.id());
+    }
+
+    let dir = scratch("selfdiff");
+    let path = dir.join("BENCH_store.json");
+    doc.write(&path).unwrap();
+    let loaded = BenchDoc::load(&path).unwrap();
+    let d = diff_docs(&loaded, &doc, DEFAULT_THRESHOLD_PCT);
+    assert_eq!(d.regressions(), 0, "a run never regresses against itself");
+    assert_eq!(d.missing.len() + d.added.len(), 0);
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn wallclock_lint_is_clean_and_timer_is_the_only_allow_site() {
+    // Self-check of the PR's contract: `no-wallclock-state` now covers
+    // all of src/, and the only honored allows for it are the two
+    // sanctioned reads in util::timer. A new Instant::now() anywhere
+    // else in src/ fails this test before CI's fedlint job sees it.
+    let root = Path::new(env!("CARGO_MANIFEST_DIR"));
+    let cfg = LintConfig::builtin();
+    let report = lint_root(root, &cfg, Some("no-wallclock-state"), &[]).unwrap();
+
+    let denials: Vec<String> = report
+        .violations
+        .iter()
+        .filter(|v| v.rule == "no-wallclock-state")
+        .map(|v| format!("{}:{} {}", v.file, v.line, v.excerpt))
+        .collect();
+    assert!(denials.is_empty(), "unsanctioned wall-clock reads: {denials:?}");
+
+    let allow_files: Vec<&str> = report
+        .allowed
+        .iter()
+        .filter(|a| a.rules.iter().any(|r| r == "no-wallclock-state"))
+        .map(|a| a.file.as_str())
+        .collect();
+    assert_eq!(
+        allow_files,
+        vec!["src/util/timer.rs", "src/util/timer.rs"],
+        "timer.rs must stay the narrow waist: one allow for now(), one for unix_now_s()"
+    );
+    for a in &report.allowed {
+        assert!(a.uses >= 1, "stale allow at {}:{}", a.file, a.line);
+    }
+}

@@ -286,14 +286,20 @@ fn live_tee_equals_record_replay_for_a_real_run() {
     let live_text = std::fs::read_to_string(&live_path).unwrap();
     let live = parse_stream(&live_text);
     assert!(live.errors.is_empty());
-    // the live stream additionally carries per-slot arrival lines, and
-    // its round_ops report the reorder window's real high-water mark
-    // (≥ 1 whenever anything uploaded); everything else — order,
+    // the live stream additionally carries per-slot arrival lines and
+    // per-round phase_timing profiles (both live-only by contract),
+    // and its round_ops report the reorder window's real high-water
+    // mark (≥ 1 whenever anything uploaded); everything else — order,
     // values, round_ops placement — matches
     let canonical: Vec<StreamEvent> = live
         .events
         .iter()
-        .filter(|e| !matches!(e, StreamEvent::Slot { .. }))
+        .filter(|e| {
+            !matches!(
+                e,
+                StreamEvent::Slot { .. } | StreamEvent::PhaseTiming { .. }
+            )
+        })
         .map(|e| match e {
             StreamEvent::RoundOps {
                 round,
