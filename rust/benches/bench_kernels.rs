@@ -1,0 +1,12 @@
+//! SIMD kernel throughput — thin wrapper over the shared suite
+//! function in `fedcompress::bench::suite`: every kernel of the
+//! `fedcompress::kernels` dispatch layer, scalar vs detected backend,
+//! across payload sizes from 1 KiB to 100 MiB. Same rows as
+//! `bench run --area kernels`.
+
+use fedcompress::bench::suite::{kernels, SuiteCtx};
+
+fn main() {
+    let mut ctx = SuiteCtx::new(false);
+    kernels(&mut ctx).unwrap();
+}

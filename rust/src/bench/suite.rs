@@ -104,7 +104,7 @@ pub struct Area {
 /// The registry `bench run --area <name>|all` resolves against.
 /// (`rounds` is not here: it rolls up teed phase-timing events from a
 /// run store instead of measuring code, see [`rounds_rollup`].)
-pub const AREAS: [Area; 5] = [
+pub const AREAS: [Area; 6] = [
     Area {
         name: "codec",
         summary: "pipeline encode/decode, quantize, huffman, k-means",
@@ -133,6 +133,11 @@ pub const AREAS: [Area; 5] = [
         name: "runtime",
         summary: "PJRT entry-point latency (skips without artifacts)",
         run: runtime,
+    },
+    Area {
+        name: "kernels",
+        summary: "SIMD kernel throughput, scalar vs detected backend",
+        run: kernels,
     },
 ];
 
@@ -339,6 +344,82 @@ pub fn aggregate(ctx: &mut SuiteCtx) -> Result<()> {
             let s = representation_score(black_box(&emb), n, d);
             black_box(s);
         });
+    }
+    Ok(())
+}
+
+// --- kernels --------------------------------------------------------------
+
+/// Comparative throughput of every SIMD kernel: one row per kernel x
+/// available backend x payload size (1 KiB to 100 MiB of f32 input),
+/// `{kernel}_{backend}_{size}`. Scalar always runs; on SIMD hardware
+/// the detected backend's rows print side by side, so the MiB/s table
+/// is the speedup report. Row set is identical in quick and full mode.
+pub fn kernels(ctx: &mut SuiteCtx) -> Result<()> {
+    use crate::kernels as k;
+    use std::hint::black_box;
+
+    const SIZES: [(usize, &str); 4] =
+        [(1 << 10, "1KiB"), (64 << 10, "64KiB"), (1 << 20, "1MiB"), (100 << 20, "100MiB")];
+    const CODEBOOK_C: usize = 16;
+    const PACK_BITS: u32 = 11; // odd width: exercises straddled bytes
+
+    let backends = k::available_backends();
+    ctx.note(
+        "backends",
+        Json::Arr(backends.iter().map(|b| Json::Str(b.name().to_string())).collect()),
+    );
+    ctx.note("detected", Json::Str(k::detect().name().to_string()));
+
+    let mut rng = Rng::new(11);
+    for (bytes, label) in SIZES {
+        let n = bytes / 4;
+        let xs: Vec<f32> = (0..n).map(|_| rng.normal()).collect();
+        let keys = k::magnitude_keys(&xs);
+        let threshold = keys[n / 2];
+        let mut codebook: Vec<f32> = (0..CODEBOOK_C).map(|i| i as f32 * 0.25 - 2.0).collect();
+        codebook.sort_by(f32::total_cmp);
+        let symbols: Vec<u32> = (0..n).map(|_| rng.below(256) as u32).collect();
+        let values: Vec<u32> = (0..n).map(|_| rng.below(1 << PACK_BITS) as u32).collect();
+        let packed = k::pack_bits_on(k::Backend::Scalar, &values, PACK_BITS);
+
+        for &b in &backends {
+            let name = |kernel: &str| format!("{kernel}_{}_{label}", b.name());
+            let mut out = vec![0u32; n];
+            ctx.bench("kernels", &name("magnitude_keys"), Some(bytes), || {
+                k::magnitude_keys_on(b, black_box(&xs), &mut out);
+                black_box(out[0]);
+            });
+            ctx.bench("kernels", &name("abs_max"), Some(bytes), || {
+                black_box(k::abs_max_on(b, black_box(&xs)));
+            });
+            ctx.bench("kernels", &name("threshold_count"), Some(bytes), || {
+                black_box(k::threshold_count_on(b, black_box(&keys), threshold));
+            });
+            ctx.bench("kernels", &name("assign_nearest"), Some(bytes), || {
+                k::assign_nearest_on(b, black_box(&xs), &codebook, &mut out);
+                black_box(out[0]);
+            });
+            let mut snap_buf = xs.clone();
+            ctx.bench("kernels", &name("snap_to_codebook"), Some(bytes), || {
+                snap_buf.copy_from_slice(&xs);
+                black_box(k::snap_to_codebook_on(b, &mut snap_buf, &codebook).len());
+            });
+            ctx.bench("kernels", &name("histogram_u32"), Some(bytes), || {
+                black_box(k::histogram_u32_on(b, black_box(&symbols), 256)[0]);
+            });
+            ctx.bench("kernels", &name("pack_bits"), Some(bytes), || {
+                black_box(k::pack_bits_on(b, black_box(&values), PACK_BITS).len());
+            });
+            ctx.bench("kernels", &name("unpack_bits"), Some(bytes), || {
+                black_box(k::unpack_bits_on(b, black_box(&packed), PACK_BITS, n));
+            });
+            let mut acc = vec![0.0f64; n];
+            ctx.bench("kernels", &name("axpy_f64"), Some(bytes), || {
+                k::axpy_f64_on(b, &mut acc, black_box(&xs), 0.125);
+                black_box(acc[0]);
+            });
+        }
     }
     Ok(())
 }
@@ -716,7 +797,7 @@ mod tests {
 
     #[test]
     fn registry_covers_the_cli_areas() {
-        for name in ["codec", "net", "store", "aggregate", "runtime"] {
+        for name in ["codec", "net", "store", "aggregate", "runtime", "kernels"] {
             assert!(area(name).is_some(), "area {name} missing");
         }
         assert!(area("rounds").is_none(), "rounds is a rollup, not a suite");

@@ -28,7 +28,6 @@ use crate::compression::codec::{
 use crate::compression::delta::{delta_decode, delta_encode};
 use crate::compression::kmeans::{kmeans_1d, snap};
 use crate::compression::sparsify::magnitude_prune;
-use crate::util::bitio::{BitReader, BitWriter};
 use crate::util::cursor::ByteCursor;
 use crate::util::rng::Rng;
 
@@ -154,11 +153,8 @@ pub fn sparse_encode(pruned: &[f32]) -> Vec<u8> {
     out.extend_from_slice(&(n as u32).to_le_bytes());
     out.extend_from_slice(&(survivors.len() as u32).to_le_bytes());
     out.push(bits as u8);
-    let mut w = BitWriter::new();
-    for (pos, _) in &survivors {
-        w.write(*pos as u32, bits);
-    }
-    out.extend_from_slice(w.as_bytes());
+    let positions: Vec<u32> = survivors.iter().map(|&(pos, _)| pos as u32).collect();
+    out.extend_from_slice(&crate::kernels::pack_bits(&positions, bits));
     for (_, v) in &survivors {
         out.extend_from_slice(&v.to_le_bytes());
     }
@@ -191,23 +187,19 @@ pub fn sparse_decode(bytes: &[u8]) -> Result<Vec<f32>, CodecError> {
         )));
     }
     let pos_bytes = (k * bits as usize).div_ceil(8);
-    let mut r = BitReader::new(cur.take(pos_bytes).ok_or(short("sparse blob"))?);
-    let mut positions = Vec::with_capacity(k);
-    for _ in 0..k {
-        match r.read(bits) {
-            Some(p) if (p as usize) < n => positions.push(p as usize),
-            Some(p) => return Err(malformed(format!("position {p} out of range {n}"))),
-            None => {
-                return Err(CodecError::Truncated {
-                    what: "sparse position stream",
-                })
-            }
+    let packed = cur.take(pos_bytes).ok_or(short("sparse blob"))?;
+    let positions = crate::kernels::unpack_bits(packed, bits, k).ok_or(CodecError::Truncated {
+        what: "sparse position stream",
+    })?;
+    for &p in &positions {
+        if p as usize >= n {
+            return Err(malformed(format!("position {p} out of range {n}")));
         }
     }
     let mut theta = vec![0.0f32; n];
     for &pos in &positions {
         let v = cur.f32().ok_or(short("sparse blob"))?;
-        if let Some(slot) = theta.get_mut(pos) {
+        if let Some(slot) = theta.get_mut(pos as usize) {
             *slot = v;
         }
     }
@@ -560,11 +552,7 @@ impl Stage for DeltaStage {
             None => {
                 out.push(DELTA_MODE_FLAT);
                 let bits = index_bits(c);
-                let mut w = BitWriter::new();
-                for &i in indices {
-                    w.write(i, bits);
-                }
-                out.extend_from_slice(w.as_bytes());
+                out.extend_from_slice(&crate::kernels::pack_bits(indices, bits));
             }
         }
         state.insert(input.stream, (c, indices.clone()));
@@ -597,19 +585,13 @@ impl Stage for DeltaStage {
         let indices = match mode {
             DELTA_MODE_FLAT => {
                 let bits = index_bits(c);
-                let mut r = BitReader::new(body);
-                let mut v = Vec::with_capacity(n);
-                for _ in 0..n {
-                    match r.read(bits) {
-                        Some(x) if (x as usize) < c => v.push(x),
-                        Some(x) => {
-                            return Err(malformed(format!("index {x} out of codebook range {c}")))
-                        }
-                        None => {
-                            return Err(CodecError::Truncated {
-                                what: "delta flat index stream",
-                            })
-                        }
+                let v =
+                    crate::kernels::unpack_bits(body, bits, n).ok_or(CodecError::Truncated {
+                        what: "delta flat index stream",
+                    })?;
+                for &x in &v {
+                    if x as usize >= c {
+                        return Err(malformed(format!("index {x} out of codebook range {c}")));
                     }
                 }
                 v

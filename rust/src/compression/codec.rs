@@ -11,7 +11,6 @@
 //! bit-packing otherwise — both are counted byte-exactly for CCR.
 
 use super::huffman::{huffman_decode, huffman_encode, HuffmanEncoded};
-use crate::util::bitio::{BitReader, BitWriter};
 use anyhow::{bail, Result};
 
 const MAGIC: u32 = 0x4643_5731; // "FCW1"
@@ -125,13 +124,11 @@ fn encode_inner(codebook: &[f32], indices: &[u32], force_flat: bool) -> EncodedM
         put_u64(&mut out, huff.payload_bits as u64);
         out.extend_from_slice(&huff.payload);
     } else {
-        let mut w = BitWriter::new();
         for &i in indices {
             debug_assert!((i as usize) < c);
-            w.write(i, bits);
         }
         put_u64(&mut out, flat_bits as u64);
-        out.extend_from_slice(w.as_bytes());
+        out.extend_from_slice(&crate::kernels::pack_bits(indices, bits));
     }
     EncodedModel {
         bytes: out,
@@ -171,13 +168,12 @@ pub fn decode(bytes: &[u8]) -> Result<(Vec<f32>, Vec<u32>, Vec<f32>)> {
             bail!("bit count mismatch");
         }
         let payload = cur.take(payload_bits.div_ceil(8))?;
-        let mut r = BitReader::new(payload);
-        let mut v = Vec::with_capacity(n);
-        for _ in 0..n {
-            match r.read(bits) {
-                Some(x) if (x as usize) < c => v.push(x),
-                Some(x) => bail!("index {x} out of codebook range {c}"),
-                None => bail!("truncated index stream"),
+        let Some(v) = crate::kernels::unpack_bits(payload, bits, n) else {
+            bail!("truncated index stream");
+        };
+        for &x in &v {
+            if x as usize >= c {
+                bail!("index {x} out of codebook range {c}");
             }
         }
         v

@@ -105,10 +105,9 @@ impl HuffmanEncoded {
 }
 
 pub fn huffman_encode(symbols: &[u32], alphabet: usize) -> HuffmanEncoded {
-    let mut freqs = vec![0u64; alphabet];
-    for &s in symbols {
-        freqs[s as usize] += 1;
-    }
+    // frequency pass through the kernel waist; the variable-width bit
+    // emission below is order-dependent and stays scalar
+    let freqs = crate::kernels::histogram_u32(symbols, alphabet);
     let lengths = code_lengths(&freqs);
     let codes = canonical_codes(&lengths);
     // Precompute bit-reversed codes so each symbol is ONE BitWriter

@@ -48,6 +48,10 @@ pub fn kmeans_pp_init(weights: &[f32], c: usize, rng: &mut crate::util::rng::Rng
 }
 
 /// Assign each weight to the nearest centroid of a *sorted* codebook.
+///
+/// Single-element form; batch call sites go through
+/// [`crate::kernels::assign_nearest`], which is bit-identical to this
+/// search on every backend (see the kernels module docs).
 #[inline]
 pub fn assign_sorted(w: f32, sorted: &[f32]) -> usize {
     // binary search over centroid midpoints
@@ -127,11 +131,10 @@ pub fn kmeans_1d(
 
     // final assignment of the ORIGINAL (unsorted) weights
     let mut assignments = vec![0u32; p];
+    crate::kernels::assign_nearest(weights, &centroids, &mut assignments);
     let mut final_inertia = 0.0;
-    for (i, &w) in weights.iter().enumerate() {
-        let j = assign_sorted(w, &centroids);
-        assignments[i] = j as u32;
-        let d = (w - centroids[j]) as f64;
+    for (&w, &j) in weights.iter().zip(&assignments) {
+        let d = (w - centroids[j as usize]) as f64;
         final_inertia += d * d;
     }
     (centroids, assignments, final_inertia)
@@ -139,14 +142,7 @@ pub fn kmeans_1d(
 
 /// Quantize weights in place against a sorted codebook; returns indices.
 pub fn snap(weights: &mut [f32], sorted_codebook: &[f32]) -> Vec<u32> {
-    weights
-        .iter_mut()
-        .map(|w| {
-            let j = assign_sorted(*w, sorted_codebook);
-            *w = sorted_codebook[j];
-            j as u32
-        })
-        .collect()
+    crate::kernels::snap_to_codebook(weights, sorted_codebook)
 }
 
 #[cfg(test)]

@@ -1,8 +1,17 @@
 //! Magnitude sparsification — FedZip's first stage (Malekijoo 2021
 //! prunes with top-z magnitude selection before clustering).
 
+use crate::kernels;
+
 /// Zero out all but the top `keep_fraction` of weights by |magnitude|.
 /// Returns the number of survivors. Deterministic tie handling.
+///
+/// Magnitudes are ordered by [`kernels::magnitude_key`] — the total
+/// order `f32::total_cmp` induces on `|w|` — so non-finite input never
+/// panics: infinities and NaNs rank as the largest magnitudes and
+/// survive pruning. For finite weights the order (and therefore the
+/// survivor set and wire bytes) is identical to the old
+/// `partial_cmp`-based selection.
 pub fn magnitude_prune(weights: &mut [f32], keep_fraction: f64) -> usize {
     assert!((0.0..=1.0).contains(&keep_fraction));
     let n = weights.len();
@@ -14,26 +23,21 @@ pub fn magnitude_prune(weights: &mut [f32], keep_fraction: f64) -> usize {
         weights.iter_mut().for_each(|w| *w = 0.0);
         return 0;
     }
-    // threshold = keep-th largest |w| via select_nth on a copy
-    let mut mags: Vec<f32> = weights.iter().map(|w| w.abs()).collect();
+    // threshold = keep-th largest magnitude key via select_nth on a copy
+    let keys = kernels::magnitude_keys(weights);
+    let mut sorted_keys = keys.clone();
     let kth = n - keep;
-    mags.select_nth_unstable_by(kth, |a, b| a.partial_cmp(b).unwrap());
-    let threshold = mags[kth];
+    sorted_keys.select_nth_unstable(kth);
+    let threshold = sorted_keys[kth];
 
     // keep strictly-above first, then fill ties deterministically
-    let mut survivors = 0usize;
-    for w in weights.iter() {
-        if w.abs() > threshold {
-            survivors += 1;
-        }
-    }
+    let survivors = kernels::threshold_count(&keys, threshold);
     let mut ties_to_keep = keep.saturating_sub(survivors);
-    for w in weights.iter_mut() {
-        let m = w.abs();
-        if m > threshold {
+    for (w, &k) in weights.iter_mut().zip(&keys) {
+        if k > threshold {
             continue;
         }
-        if m == threshold && ties_to_keep > 0 {
+        if k == threshold && ties_to_keep > 0 {
             ties_to_keep -= 1;
             continue;
         }
@@ -79,5 +83,41 @@ mod tests {
         let kept = magnitude_prune(&mut w, 0.5);
         assert_eq!(kept, 5);
         assert_eq!(w.iter().filter(|x| **x != 0.0).count(), 5);
+    }
+
+    #[test]
+    fn all_equal_magnitudes_keep_the_budget_exactly() {
+        // mixed signs, same |w|: the whole slice is one tie class
+        let mut w: Vec<f32> = (0..12).map(|i| if i % 2 == 0 { 2.5 } else { -2.5 }).collect();
+        let kept = magnitude_prune(&mut w, 0.25);
+        assert_eq!(kept, 3);
+        // survivors keep their original signed values
+        assert!(w.iter().filter(|x| **x != 0.0).all(|x| x.abs() == 2.5));
+    }
+
+    #[test]
+    fn empty_and_exact_fraction_boundaries() {
+        let mut empty: Vec<f32> = vec![];
+        assert_eq!(magnitude_prune(&mut empty, 0.5), 0);
+        let mut w = vec![3.0f32, 1.0, 2.0, 4.0];
+        assert_eq!(magnitude_prune(&mut w, 1.0), 4);
+        assert_eq!(w, vec![3.0, 1.0, 2.0, 4.0]);
+    }
+
+    #[test]
+    fn non_finite_weights_never_panic_and_rank_largest() {
+        // total_cmp magnitude order: NaN and inf outrank every finite
+        // weight, so they survive; the smallest finite ones are cut
+        let mut w = vec![1.0f32, f32::NAN, -2.0, f32::INFINITY, 0.5, -0.25];
+        let kept = magnitude_prune(&mut w, 0.5);
+        assert_eq!(kept, 3);
+        assert!(w[1].is_nan());
+        assert_eq!(w[3], f32::INFINITY);
+        assert_eq!(w[2], -2.0);
+        assert_eq!((w[0], w[4], w[5]), (0.0, 0.0, 0.0));
+
+        let mut all_nan = vec![f32::NAN; 4];
+        assert_eq!(magnitude_prune(&mut all_nan, 0.5), 2);
+        assert_eq!(all_nan.iter().filter(|x| x.is_nan()).count(), 2);
     }
 }

@@ -204,6 +204,7 @@ impl FedConfig {
             "fleet" => self.fleet.preset = FleetPreset::from_name(value)?,
             "dropout" => self.fleet.dropout = value.parse().with_context(e)?,
             "deadline_s" => self.fleet.deadline_s = value.parse().with_context(e)?,
+            "edge_of" => self.fleet.edge_of = value.parse().with_context(e)?,
             "seed" => self.seed = value.parse().with_context(e)?,
             "handshake_timeout_s" => {
                 self.handshake_timeout_s = value.parse().with_context(e)?
@@ -298,10 +299,14 @@ mod tests {
         c.set("fleet", "mobile").unwrap();
         c.set("dropout", "0.1").unwrap();
         c.set("deadline_s", "30").unwrap();
+        c.set("edge_of", "8").unwrap();
         assert_eq!(c.fleet.preset, FleetPreset::Mobile);
         assert_eq!(c.fleet.dropout, 0.1);
         assert_eq!(c.fleet.deadline_s, 30.0);
+        assert_eq!(c.fleet.edge_of, 8);
+        assert!(!c.fleet.is_ideal());
         c.validate().unwrap();
+        assert!(c.set("edge_of", "-3").is_err(), "edge_of is a count");
         let err = c.set("fleet", "marsnet").unwrap_err().to_string();
         assert!(err.contains("marsnet"), "{err}");
         c.fleet.dropout = 1.0;

@@ -104,9 +104,9 @@ impl WeightedSum {
                 got: xs.len(),
             });
         }
-        for (a, &x) in self.acc.iter_mut().zip(xs) {
-            *a += w * f64::from(x);
-        }
+        // lengths validated above; every kernel backend performs the
+        // same two-rounding `acc[i] += w * f64::from(x)` per element
+        crate::kernels::axpy_f64(&mut self.acc, xs, w);
         self.total += w;
         self.folds += 1;
         Ok(())

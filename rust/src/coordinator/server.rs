@@ -506,6 +506,14 @@ impl<'a> RoundIngest<'a> {
         )
     }
 
+    /// The deadline verdict [`RoundIngest::resolve_edge`] will recompute
+    /// for `slot` uploading `up_bytes` — public so an in-process edge
+    /// tier cuts exactly the members the coordinator's own clock would,
+    /// instead of guessing and being rejected as a liar.
+    pub fn member_over_deadline(&self, slot: usize, up_bytes: usize) -> bool {
+        self.sim.clock().over_deadline(self.member_sim_s(slot, up_bytes))
+    }
+
     /// Replay the resolved slots in canonical order — first every
     /// fault dropout, then deadlines/uploads with their ledger records
     /// — exactly the event and ledger sequence the buffered loop

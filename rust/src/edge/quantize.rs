@@ -6,9 +6,12 @@
 //! codebook (not the weights) is quantized, so the two compressions
 //! compose losslessly with respect to the cluster structure.
 
-/// Per-tensor symmetric scale for int8.
+/// Per-tensor symmetric scale for int8. `max|w|` runs through
+/// [`crate::kernels::abs_max`] — identical to a float fold for finite
+/// weights; a NaN weight yields a NaN scale (the fold skipped NaNs),
+/// which the downstream error analysis surfaces rather than hides.
 pub fn scale_for(weights: &[f32]) -> f32 {
-    let max = weights.iter().fold(0.0f32, |a, &w| a.max(w.abs()));
+    let max = crate::kernels::abs_max(weights);
     if max == 0.0 {
         1.0
     } else {

@@ -1,0 +1,175 @@
+//! AVX2 backend: 8-lane f32/i32 and 4-lane f64 kernels for x86-64.
+//!
+//! Safety model: every public function here is *safe* — it asserts
+//! AVX2 support (cheap: `is_x86_feature_detected!` caches in an
+//! atomic) before entering the `#[target_feature]` inner function, so
+//! the only unsafety left is the CPU-feature contract, which the
+//! assert discharges. Raw pointer arithmetic stays inside the proven
+//! `i + LANES <= len` main loops; tails run the scalar reference.
+//!
+//! Bit-exactness notes (see `kernels::` module docs for the contract):
+//! * integer kernels (keys, counts, max, histogram) are exact by
+//!   commutativity;
+//! * `axpy_f64` uses `_mm256_mul_pd` + `_mm256_add_pd` — two roundings
+//!   per element like the scalar loop. Never replace with an FMA.
+//! * `assign_nearest` counts `w <= boundary` with `_CMP_LE_OQ`
+//!   (unordered compares false, so NaN counts zero boundaries and
+//!   lands on the last centroid, exactly like the binary search).
+
+use std::arch::x86_64::{
+    __m256i, _mm256_add_pd, _mm256_and_si256, _mm256_castps_si256, _mm256_castsi256_ps,
+    _mm256_cmp_ps, _mm256_cmpgt_epi32, _mm256_cvtps_pd, _mm256_loadu_pd, _mm256_loadu_ps,
+    _mm256_loadu_si256, _mm256_max_epu32, _mm256_movemask_ps, _mm256_mul_pd, _mm256_set1_epi32,
+    _mm256_set1_pd, _mm256_set1_ps, _mm256_setzero_si256, _mm256_storeu_pd, _mm256_storeu_si256,
+    _mm256_sub_epi32, _CMP_LE_OQ,
+};
+
+use super::backend_scalar;
+use super::magnitude_key;
+
+/// Boundary count above which the O(n·c) lane-counting assignment
+/// loses to the scalar O(n log c) binary search; measured crossover is
+/// well past typical codebooks (C_max = 64 in the paper's controller).
+const ASSIGN_MAX_BOUNDS: usize = 64;
+
+#[inline]
+fn have_avx2() -> bool {
+    std::arch::is_x86_feature_detected!("avx2")
+}
+
+pub fn magnitude_keys(xs: &[f32], out: &mut [u32]) {
+    assert!(have_avx2(), "avx2 backend selected without avx2");
+    // fedlint:allow(unsafe-scope) -- CPU-feature contract asserted on the line above
+    unsafe { magnitude_keys_impl(xs, out) }
+}
+
+#[target_feature(enable = "avx2")]
+// fedlint:allow(unsafe-scope) -- target_feature fn; sole caller asserts avx2 first
+unsafe fn magnitude_keys_impl(xs: &[f32], out: &mut [u32]) {
+    let n = xs.len().min(out.len());
+    let mask = _mm256_set1_epi32(0x7FFF_FFFF);
+    let mut i = 0;
+    while i + 8 <= n {
+        let v = _mm256_loadu_si256(xs.as_ptr().add(i).cast::<__m256i>());
+        let k = _mm256_and_si256(v, mask);
+        _mm256_storeu_si256(out.as_mut_ptr().add(i).cast::<__m256i>(), k);
+        i += 8;
+    }
+    backend_scalar::magnitude_keys(&xs[i..n], &mut out[i..n]);
+}
+
+pub fn abs_max_key(xs: &[f32]) -> u32 {
+    assert!(have_avx2(), "avx2 backend selected without avx2");
+    // fedlint:allow(unsafe-scope) -- CPU-feature contract asserted on the line above
+    unsafe { abs_max_key_impl(xs) }
+}
+
+#[target_feature(enable = "avx2")]
+// fedlint:allow(unsafe-scope) -- target_feature fn; sole caller asserts avx2 first
+unsafe fn abs_max_key_impl(xs: &[f32]) -> u32 {
+    let mask = _mm256_set1_epi32(0x7FFF_FFFF);
+    let mut best8 = _mm256_setzero_si256();
+    let mut i = 0;
+    while i + 8 <= xs.len() {
+        let v = _mm256_loadu_si256(xs.as_ptr().add(i).cast::<__m256i>());
+        best8 = _mm256_max_epu32(best8, _mm256_and_si256(v, mask));
+        i += 8;
+    }
+    let mut lanes = [0u32; 8];
+    _mm256_storeu_si256(lanes.as_mut_ptr().cast::<__m256i>(), best8);
+    let mut best = lanes.iter().copied().max().unwrap_or(0);
+    for &x in &xs[i..] {
+        best = best.max(magnitude_key(x));
+    }
+    best
+}
+
+pub fn threshold_count(keys: &[u32], threshold: u32) -> usize {
+    assert!(have_avx2(), "avx2 backend selected without avx2");
+    // fedlint:allow(unsafe-scope) -- CPU-feature contract asserted on the line above
+    unsafe { threshold_count_impl(keys, threshold) }
+}
+
+#[target_feature(enable = "avx2")]
+// fedlint:allow(unsafe-scope) -- target_feature fn; sole caller asserts avx2 first
+unsafe fn threshold_count_impl(keys: &[u32], threshold: u32) -> usize {
+    // magnitude keys never set bit 31, so the signed lane compare
+    // orders them exactly like u32 comparison
+    let t = _mm256_set1_epi32(threshold as i32);
+    let mut count = 0usize;
+    let mut i = 0;
+    while i + 8 <= keys.len() {
+        let k = _mm256_loadu_si256(keys.as_ptr().add(i).cast::<__m256i>());
+        let gt = _mm256_cmpgt_epi32(k, t);
+        count += _mm256_movemask_ps(_mm256_castsi256_ps(gt)).count_ones() as usize;
+        i += 8;
+    }
+    count + backend_scalar::threshold_count(&keys[i..], threshold)
+}
+
+pub fn assign_nearest(xs: &[f32], sorted: &[f32], out: &mut [u32]) {
+    assert!(have_avx2(), "avx2 backend selected without avx2");
+    if sorted.len() > ASSIGN_MAX_BOUNDS + 1 {
+        return backend_scalar::assign_nearest(xs, sorted, out);
+    }
+    // same f32 arithmetic as the scalar search evaluates at each probe
+    let bounds: Vec<f32> = (0..sorted.len() - 1)
+        .map(|j| 0.5 * (sorted[j] + sorted[j + 1]))
+        .collect();
+    // fedlint:allow(unsafe-scope) -- CPU-feature contract asserted on the first line
+    unsafe { assign_nearest_impl(xs, &bounds, out) }
+}
+
+/// For nondecreasing boundaries, the binary search result equals
+/// `(c-1) - #{j : w <= bounds[j]}` — including for NaN, where both
+/// sides give `c-1`. The lane loop computes that count directly.
+#[target_feature(enable = "avx2")]
+// fedlint:allow(unsafe-scope) -- target_feature fn; sole caller asserts avx2 first
+unsafe fn assign_nearest_impl(xs: &[f32], bounds: &[f32], out: &mut [u32]) {
+    let n = xs.len().min(out.len());
+    let last = _mm256_set1_epi32(bounds.len() as i32);
+    let mut i = 0;
+    while i + 8 <= n {
+        let w = _mm256_loadu_ps(xs.as_ptr().add(i));
+        let mut le = _mm256_setzero_si256();
+        for &b in bounds {
+            let cmp = _mm256_cmp_ps::<_CMP_LE_OQ>(w, _mm256_set1_ps(b));
+            // a true lane is all-ones (-1 as i32); subtracting increments
+            le = _mm256_sub_epi32(le, _mm256_castps_si256(cmp));
+        }
+        let idx = _mm256_sub_epi32(last, le);
+        _mm256_storeu_si256(out.as_mut_ptr().add(i).cast::<__m256i>(), idx);
+        i += 8;
+    }
+    for j in i..n {
+        let mut count = 0u32;
+        for &b in bounds {
+            count += u32::from(xs[j] <= b);
+        }
+        out[j] = bounds.len() as u32 - count;
+    }
+}
+
+pub fn axpy_f64(acc: &mut [f64], xs: &[f32], w: f64) {
+    assert!(have_avx2(), "avx2 backend selected without avx2");
+    // fedlint:allow(unsafe-scope) -- CPU-feature contract asserted on the line above
+    unsafe { axpy_f64_impl(acc, xs, w) }
+}
+
+#[target_feature(enable = "avx2")]
+// fedlint:allow(unsafe-scope) -- target_feature fn; sole caller asserts avx2 first
+unsafe fn axpy_f64_impl(acc: &mut [f64], xs: &[f32], w: f64) {
+    let n = acc.len().min(xs.len());
+    let wv = _mm256_set1_pd(w);
+    let mut i = 0;
+    while i + 4 <= n {
+        let x4 = std::arch::x86_64::_mm_loadu_ps(xs.as_ptr().add(i));
+        let xd = _mm256_cvtps_pd(x4); // f32 -> f64 is exact
+        let prod = _mm256_mul_pd(xd, wv); // rounding 1, as in `w * f64::from(x)`
+        let a = _mm256_loadu_pd(acc.as_ptr().add(i));
+        let sum = _mm256_add_pd(a, prod); // rounding 2, as in `+=`
+        _mm256_storeu_pd(acc.as_mut_ptr().add(i), sum);
+        i += 4;
+    }
+    backend_scalar::axpy_f64(&mut acc[i..n], &xs[i..n], w);
+}

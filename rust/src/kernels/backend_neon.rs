@@ -1,0 +1,147 @@
+//! NEON backend: 4-lane f32/u32 and 2-lane f64 kernels for aarch64.
+//!
+//! NEON is part of the aarch64 baseline, so unlike AVX2 there is no
+//! runtime feature probe — `Backend::Neon` is unconditionally
+//! available on this arch and the only unsafety is the raw-pointer
+//! loads/stores inside the proven `i + LANES <= len` loops.
+//!
+//! The bit-exactness arguments mirror `backend_avx2`: integer kernels
+//! are exact, `vcleq_f32` treats NaN as false like the scalar `<=`,
+//! and `axpy_f64` uses separate `vmulq_f64` + `vaddq_f64` (never a
+//! fused `vfmaq_f64`) to reproduce the scalar two-rounding sequence.
+
+use core::arch::aarch64::{
+    vaddq_f64, vaddvq_u32, vandq_u32, vcgtq_u32, vcleq_f32, vcvt_f64_f32, vdupq_n_f32,
+    vdupq_n_f64, vdupq_n_u32, vld1_f32, vld1q_f32, vld1q_f64, vld1q_u32, vmaxq_u32, vmaxvq_u32,
+    vmulq_f64, vst1q_f64, vst1q_u32, vsubq_u32,
+};
+
+use super::backend_scalar;
+use super::magnitude_key;
+
+/// Same crossover heuristic as the AVX2 backend: past this many
+/// boundaries the O(n·c) counting loop loses to the scalar search.
+const ASSIGN_MAX_BOUNDS: usize = 64;
+
+pub fn magnitude_keys(xs: &[f32], out: &mut [u32]) {
+    // fedlint:allow(unsafe-scope) -- NEON is aarch64 baseline; bounds proven in the loop
+    unsafe { magnitude_keys_impl(xs, out) }
+}
+
+// fedlint:allow(unsafe-scope) -- raw-pointer lane loads; callers stay in-bounds
+unsafe fn magnitude_keys_impl(xs: &[f32], out: &mut [u32]) {
+    let n = xs.len().min(out.len());
+    let mask = vdupq_n_u32(0x7FFF_FFFF);
+    let mut i = 0;
+    while i + 4 <= n {
+        let v = vld1q_u32(xs.as_ptr().add(i).cast::<u32>());
+        vst1q_u32(out.as_mut_ptr().add(i), vandq_u32(v, mask));
+        i += 4;
+    }
+    backend_scalar::magnitude_keys(&xs[i..n], &mut out[i..n]);
+}
+
+pub fn abs_max_key(xs: &[f32]) -> u32 {
+    // fedlint:allow(unsafe-scope) -- NEON is aarch64 baseline; bounds proven in the loop
+    unsafe { abs_max_key_impl(xs) }
+}
+
+// fedlint:allow(unsafe-scope) -- raw-pointer lane loads; callers stay in-bounds
+unsafe fn abs_max_key_impl(xs: &[f32]) -> u32 {
+    let mask = vdupq_n_u32(0x7FFF_FFFF);
+    let mut best4 = vdupq_n_u32(0);
+    let mut i = 0;
+    while i + 4 <= xs.len() {
+        let v = vld1q_u32(xs.as_ptr().add(i).cast::<u32>());
+        best4 = vmaxq_u32(best4, vandq_u32(v, mask));
+        i += 4;
+    }
+    let mut best = vmaxvq_u32(best4);
+    for &x in &xs[i..] {
+        best = best.max(magnitude_key(x));
+    }
+    best
+}
+
+pub fn threshold_count(keys: &[u32], threshold: u32) -> usize {
+    // fedlint:allow(unsafe-scope) -- NEON is aarch64 baseline; bounds proven in the loop
+    unsafe { threshold_count_impl(keys, threshold) }
+}
+
+// fedlint:allow(unsafe-scope) -- raw-pointer lane loads; callers stay in-bounds
+unsafe fn threshold_count_impl(keys: &[u32], threshold: u32) -> usize {
+    let t = vdupq_n_u32(threshold);
+    let mut count = 0usize;
+    let mut i = 0;
+    while i + 4 <= keys.len() {
+        // a true lane is all-ones; subtracting it increments. Lane
+        // counters reach at most 2^28, so the 4-lane horizontal sum
+        // stays below 2^30 — no u32 wrap.
+        let mut acc = vdupq_n_u32(0);
+        let block_end = keys.len().min(i + 4 * (1usize << 28));
+        while i + 4 <= block_end {
+            let k = vld1q_u32(keys.as_ptr().add(i));
+            acc = vsubq_u32(acc, vcgtq_u32(k, t));
+            i += 4;
+        }
+        count += vaddvq_u32(acc) as usize;
+    }
+    count + backend_scalar::threshold_count(&keys[i..], threshold)
+}
+
+pub fn assign_nearest(xs: &[f32], sorted: &[f32], out: &mut [u32]) {
+    if sorted.len() > ASSIGN_MAX_BOUNDS + 1 {
+        return backend_scalar::assign_nearest(xs, sorted, out);
+    }
+    // same f32 arithmetic as the scalar search evaluates at each probe
+    let bounds: Vec<f32> = (0..sorted.len() - 1)
+        .map(|j| 0.5 * (sorted[j] + sorted[j + 1]))
+        .collect();
+    // fedlint:allow(unsafe-scope) -- NEON is aarch64 baseline; bounds proven in the loop
+    unsafe { assign_nearest_impl(xs, &bounds, out) }
+}
+
+/// Count formulation, as in the AVX2 backend: the binary search result
+/// equals `(c-1) - #{j : w <= bounds[j]}`, including for NaN.
+// fedlint:allow(unsafe-scope) -- raw-pointer lane loads; callers stay in-bounds
+unsafe fn assign_nearest_impl(xs: &[f32], bounds: &[f32], out: &mut [u32]) {
+    let n = xs.len().min(out.len());
+    let last = vdupq_n_u32(bounds.len() as u32);
+    let mut i = 0;
+    while i + 4 <= n {
+        let w = vld1q_f32(xs.as_ptr().add(i));
+        let mut le = vdupq_n_u32(0);
+        for &b in bounds {
+            le = vsubq_u32(le, vcleq_f32(w, vdupq_n_f32(b)));
+        }
+        vst1q_u32(out.as_mut_ptr().add(i), vsubq_u32(last, le));
+        i += 4;
+    }
+    for j in i..n {
+        let mut count = 0u32;
+        for &b in bounds {
+            count += u32::from(xs[j] <= b);
+        }
+        out[j] = bounds.len() as u32 - count;
+    }
+}
+
+pub fn axpy_f64(acc: &mut [f64], xs: &[f32], w: f64) {
+    // fedlint:allow(unsafe-scope) -- NEON is aarch64 baseline; bounds proven in the loop
+    unsafe { axpy_f64_impl(acc, xs, w) }
+}
+
+// fedlint:allow(unsafe-scope) -- raw-pointer lane loads; callers stay in-bounds
+unsafe fn axpy_f64_impl(acc: &mut [f64], xs: &[f32], w: f64) {
+    let n = acc.len().min(xs.len());
+    let wv = vdupq_n_f64(w);
+    let mut i = 0;
+    while i + 2 <= n {
+        let xd = vcvt_f64_f32(vld1_f32(xs.as_ptr().add(i))); // f32 -> f64 is exact
+        let prod = vmulq_f64(xd, wv); // rounding 1, as in `w * f64::from(x)`
+        let sum = vaddq_f64(vld1q_f64(acc.as_ptr().add(i)), prod); // rounding 2
+        vst1q_f64(acc.as_mut_ptr().add(i), sum);
+        i += 2;
+    }
+    backend_scalar::axpy_f64(&mut acc[i..n], &xs[i..n], w);
+}

@@ -1,0 +1,120 @@
+//! The scalar reference backend — the semantic source of truth.
+//!
+//! Every function here is a plain portable loop; the SIMD backends are
+//! tested bit-identical against these (`tests/kernels_equiv.rs`). Keep
+//! them boring: no manual unrolling, no word tricks — when a reference
+//! and an optimized implementation disagree, the reference wins, so it
+//! must be easy to audit against the call sites it replaced
+//! (`util::bitio`, `compression::kmeans::assign_sorted`, the
+//! `coordinator::accumulate` fold loop).
+
+use super::magnitude_key;
+
+pub fn magnitude_keys(xs: &[f32], out: &mut [u32]) {
+    for (o, &x) in out.iter_mut().zip(xs) {
+        *o = magnitude_key(x);
+    }
+}
+
+/// Magnitude key of the largest `|x|` (0 for empty input).
+pub fn abs_max_key(xs: &[f32]) -> u32 {
+    let mut best = 0u32;
+    for &x in xs {
+        best = best.max(magnitude_key(x));
+    }
+    best
+}
+
+pub fn threshold_count(keys: &[u32], threshold: u32) -> usize {
+    let mut count = 0usize;
+    for &k in keys {
+        count += usize::from(k > threshold);
+    }
+    count
+}
+
+/// Midpoint binary search per element — the exact loop
+/// `compression::kmeans::assign_sorted` has always run. NaN compares
+/// false against every boundary, so it lands on the last centroid.
+pub fn assign_nearest(xs: &[f32], sorted: &[f32], out: &mut [u32]) {
+    for (o, &w) in out.iter_mut().zip(xs) {
+        let mut lo = 0usize;
+        let mut hi = sorted.len() - 1;
+        while lo < hi {
+            let mid = (lo + hi) / 2;
+            let boundary = 0.5 * (sorted[mid] + sorted[mid + 1]);
+            if w <= boundary {
+                hi = mid;
+            } else {
+                lo = mid + 1;
+            }
+        }
+        *o = lo as u32;
+    }
+}
+
+pub fn histogram_u32(symbols: &[u32], alphabet: usize) -> Vec<u64> {
+    let mut freqs = vec![0u64; alphabet];
+    for &s in symbols {
+        freqs[s as usize] += 1;
+    }
+    freqs
+}
+
+/// Fixed-width LSB-first packing: a verbatim port of feeding
+/// `util::bitio::BitWriter::write(v, bits)` per value.
+pub fn pack_bits(values: &[u32], bits: u32) -> Vec<u8> {
+    let mut buf: Vec<u8> = Vec::new();
+    let mut used: u32 = 0;
+    for &value in values {
+        let mut v = value as u64;
+        let mut n = bits;
+        while n > 0 {
+            if used == 0 {
+                buf.push(0);
+            }
+            let free = 8 - used;
+            let take = free.min(n);
+            let last = buf.len() - 1;
+            buf[last] |= ((v & ((1u64 << take) - 1)) as u8) << used;
+            used = (used + take) % 8;
+            v >>= take;
+            n -= take;
+        }
+    }
+    buf
+}
+
+/// Fixed-width LSB-first unpacking: a verbatim port of calling
+/// `util::bitio::BitReader::read(bits)` `n` times, with the same
+/// None-past-the-end contract.
+pub fn unpack_bits(bytes: &[u8], bits: u32, n: usize) -> Option<Vec<u32>> {
+    let mut out = Vec::with_capacity(n);
+    let mut pos = 0usize; // absolute bit position
+    for _ in 0..n {
+        if pos + bits as usize > bytes.len() * 8 {
+            return None;
+        }
+        let mut v: u64 = 0;
+        let mut got = 0;
+        while got < bits {
+            let byte = bytes[pos / 8];
+            let off = (pos % 8) as u32;
+            let take = (8 - off).min(bits - got);
+            v |= (((byte >> off) as u64) & ((1u64 << take) - 1)) << got;
+            got += take;
+            pos += take as usize;
+        }
+        out.push(v as u32);
+    }
+    Some(out)
+}
+
+/// `acc[i] += w * f64::from(xs[i])` — two roundings per element, in
+/// this order. This is the association the aggregate run keys were
+/// produced under; every backend must reproduce it exactly.
+pub fn axpy_f64(acc: &mut [f64], xs: &[f32], w: f64) {
+    for (a, &x) in acc.iter_mut().zip(xs) {
+        *a += w * f64::from(x);
+    }
+}

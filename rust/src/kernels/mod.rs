@@ -1,0 +1,543 @@
+//! Runtime-dispatched SIMD kernels for the codec and aggregation hot
+//! paths (ROADMAP item 2).
+//!
+//! Every round, every client runs topk selection, k-means assignment,
+//! and entropy coding over the full weight vector, and the coordinator
+//! folds uploads — all inner loops over flat arrays. This module is the
+//! narrow waist those loops go through: a small kernel API with three
+//! backends, selected once at startup:
+//!
+//! * `scalar` — portable reference loops, the **semantic source of
+//!   truth**. Every other backend must be bit-identical to it on every
+//!   input (`tests/kernels_equiv.rs` is the gate).
+//! * `avx2`   — x86-64, used when `is_x86_feature_detected!("avx2")`
+//!   reports support at startup.
+//! * `neon`   — aarch64 baseline SIMD.
+//!
+//! `FEDCOMPRESS_KERNELS=scalar|avx2|neon` overrides detection (CI runs
+//! the full suite once with `scalar` forced); an unavailable or unknown
+//! value warns on stderr and falls back to detection, so a bad override
+//! can never change results — only speed.
+//!
+//! # Bit-exactness contract
+//!
+//! Wire bytes and aggregates are content-addressed (run keys, golden
+//! loopback, record caches), so backends are **not allowed to change
+//! results**, ever. That restricts SIMD to order-independent lanes:
+//!
+//! * magnitude keys (`|x|` bit patterns), compares, selects, integer
+//!   histograms, and bit manipulation are elementwise or commutative —
+//!   freely vectorizable;
+//! * the weighted-sum fold (`axpy_f64`) is elementwise over independent
+//!   accumulator slots: each lane performs the same two IEEE roundings
+//!   (`mul` then `add`) as the scalar loop. Backends must NOT fuse them
+//!   (no FMA) — a single-rounding fused lane would diverge;
+//! * `assign_nearest` replaces the scalar binary search with a
+//!   count-of-boundaries formulation that is provably identical for a
+//!   sorted codebook (including NaN inputs, which land on the last
+//!   centroid under both); both evaluate boundaries as
+//!   `0.5 * (c[j] + c[j+1])` in f32.
+//!
+//! Anything order-dependent (the tie budget in `magnitude_prune`, the
+//! variable-width Huffman bit stream) stays scalar at the call site.
+//!
+//! # Magnitude keys
+//!
+//! `|x|` comparisons run on `x.to_bits() & 0x7FFF_FFFF`: for
+//! non-negative floats the IEEE bit pattern is monotone, so integer
+//! compares on keys order exactly like `f32::total_cmp` on `|x|` —
+//! finite magnitudes in numeric order, then infinity, then NaN. This
+//! buys panic-free selection on non-finite input and lets the SIMD
+//! backends use integer compares (keys never set bit 31, so signed
+//! lane compares are safe).
+//!
+//! # Adding a backend
+//!
+//! 1. `src/kernels/backend_<name>.rs`, `#[cfg(target_arch = ...)]`
+//!    gated, exposing the same function set as `backend_scalar` —
+//!    delegating any kernel it does not accelerate back to the shared
+//!    implementations is fine (NEON does this for `histogram_u32`).
+//! 2. A `Backend` variant + arms in `available`, `from_name`,
+//!    `detect`, and each `*_on` dispatch below (the `_ => scalar`
+//!    catch-alls keep other arches compiling).
+//! 3. `unsafe` is allowed only in `src/kernels/backend_*.rs`, and each
+//!    block carries `// fedlint:allow(unsafe-scope) -- <why sound>`
+//!    (the `unsafe-scope` lint rule gates this).
+//! 4. Run `cargo test --test kernels_equiv` on the target hardware —
+//!    the property suite must pass before the backend can ship.
+
+pub mod backend_scalar;
+
+#[cfg(target_arch = "x86_64")]
+pub mod backend_avx2;
+
+#[cfg(target_arch = "aarch64")]
+pub mod backend_neon;
+
+use std::sync::OnceLock;
+
+/// One kernel implementation set. `Scalar` is always available and is
+/// the reference the others are tested against.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Backend {
+    Scalar,
+    Avx2,
+    Neon,
+}
+
+impl Backend {
+    pub fn name(self) -> &'static str {
+        match self {
+            Backend::Scalar => "scalar",
+            Backend::Avx2 => "avx2",
+            Backend::Neon => "neon",
+        }
+    }
+
+    pub fn from_name(name: &str) -> Option<Backend> {
+        match name {
+            "scalar" => Some(Backend::Scalar),
+            "avx2" => Some(Backend::Avx2),
+            "neon" => Some(Backend::Neon),
+            _ => None,
+        }
+    }
+
+    /// Can this backend run on the current machine?
+    pub fn available(self) -> bool {
+        match self {
+            Backend::Scalar => true,
+            #[cfg(target_arch = "x86_64")]
+            Backend::Avx2 => std::arch::is_x86_feature_detected!("avx2"),
+            #[cfg(target_arch = "aarch64")]
+            Backend::Neon => true,
+            _ => false,
+        }
+    }
+}
+
+/// Best available backend for this machine (ignores the env override).
+pub fn detect() -> Backend {
+    if Backend::Avx2.available() {
+        Backend::Avx2
+    } else if Backend::Neon.available() {
+        Backend::Neon
+    } else {
+        Backend::Scalar
+    }
+}
+
+/// Every backend that can run here, scalar first — the iteration set
+/// for the equivalence suite and the comparative bench tables.
+pub fn available_backends() -> Vec<Backend> {
+    [Backend::Scalar, Backend::Avx2, Backend::Neon]
+        .into_iter()
+        .filter(|b| b.available())
+        .collect()
+}
+
+/// The process-wide backend: `FEDCOMPRESS_KERNELS` when set and
+/// available, detection otherwise. Resolved once, on first use.
+pub fn active() -> Backend {
+    static ACTIVE: OnceLock<Backend> = OnceLock::new();
+    *ACTIVE.get_or_init(|| match std::env::var("FEDCOMPRESS_KERNELS") {
+        Ok(name) => match Backend::from_name(name.trim()) {
+            Some(b) if b.available() => b,
+            Some(b) => {
+                eprintln!(
+                    "fedcompress: FEDCOMPRESS_KERNELS={} unavailable on this cpu; \
+                     using {}",
+                    b.name(),
+                    detect().name()
+                );
+                detect()
+            }
+            None => {
+                eprintln!(
+                    "fedcompress: FEDCOMPRESS_KERNELS={name:?} unknown \
+                     (expected scalar|avx2|neon); using {}",
+                    detect().name()
+                );
+                detect()
+            }
+        },
+        Err(_) => detect(),
+    })
+}
+
+/// Clamp an explicit backend request to something runnable.
+fn resolve(b: Backend) -> Backend {
+    if b.available() {
+        b
+    } else {
+        Backend::Scalar
+    }
+}
+
+// --- the kernel API ---------------------------------------------------------
+//
+// Each kernel has an `*_on(backend, ...)` form (the equivalence suite
+// and the bench tables pick backends explicitly) and a plain form that
+// dispatches through [`active`]. An unavailable backend silently runs
+// scalar — results are identical by contract, so this is safe.
+
+/// Magnitude key of one f32: the bit pattern of `|x|`. Monotone with
+/// `f32::total_cmp` on `|x|`; never sets bit 31.
+#[inline]
+pub fn magnitude_key(x: f32) -> u32 {
+    x.to_bits() & 0x7FFF_FFFF
+}
+
+/// Fill `out[i] = magnitude_key(xs[i])`.
+pub fn magnitude_keys_on(b: Backend, xs: &[f32], out: &mut [u32]) {
+    debug_assert_eq!(xs.len(), out.len());
+    match resolve(b) {
+        #[cfg(target_arch = "x86_64")]
+        Backend::Avx2 => backend_avx2::magnitude_keys(xs, out),
+        #[cfg(target_arch = "aarch64")]
+        Backend::Neon => backend_neon::magnitude_keys(xs, out),
+        _ => backend_scalar::magnitude_keys(xs, out),
+    }
+}
+
+/// Magnitude keys of `xs` as a fresh vector.
+pub fn magnitude_keys(xs: &[f32]) -> Vec<u32> {
+    let mut out = vec![0u32; xs.len()];
+    magnitude_keys_on(active(), xs, &mut out);
+    out
+}
+
+/// Largest `|x|` in `xs` under the magnitude-key order (0.0 for empty
+/// input; NaN wins over everything when present).
+pub fn abs_max_on(b: Backend, xs: &[f32]) -> f32 {
+    let key = match resolve(b) {
+        #[cfg(target_arch = "x86_64")]
+        Backend::Avx2 => backend_avx2::abs_max_key(xs),
+        #[cfg(target_arch = "aarch64")]
+        Backend::Neon => backend_neon::abs_max_key(xs),
+        _ => backend_scalar::abs_max_key(xs),
+    };
+    f32::from_bits(key)
+}
+
+pub fn abs_max(xs: &[f32]) -> f32 {
+    abs_max_on(active(), xs)
+}
+
+/// Count of `keys[i] > threshold`. Both sides must be magnitude keys
+/// (bit 31 clear) — the SIMD backends rely on that for signed lane
+/// compares.
+pub fn threshold_count_on(b: Backend, keys: &[u32], threshold: u32) -> usize {
+    debug_assert!(threshold <= 0x7FFF_FFFF);
+    match resolve(b) {
+        #[cfg(target_arch = "x86_64")]
+        Backend::Avx2 => backend_avx2::threshold_count(keys, threshold),
+        #[cfg(target_arch = "aarch64")]
+        Backend::Neon => backend_neon::threshold_count(keys, threshold),
+        _ => backend_scalar::threshold_count(keys, threshold),
+    }
+}
+
+pub fn threshold_count(keys: &[u32], threshold: u32) -> usize {
+    threshold_count_on(active(), keys, threshold)
+}
+
+/// Nearest-centroid assignment against a *sorted* codebook:
+/// `out[i] = argmin_j |xs[i] - sorted[j]|`, ties to the lower index,
+/// NaN to the last. Identical to a midpoint binary search.
+pub fn assign_nearest_on(b: Backend, xs: &[f32], sorted: &[f32], out: &mut [u32]) {
+    assert!(!sorted.is_empty(), "assign_nearest needs a codebook");
+    debug_assert_eq!(xs.len(), out.len());
+    match resolve(b) {
+        #[cfg(target_arch = "x86_64")]
+        Backend::Avx2 => backend_avx2::assign_nearest(xs, sorted, out),
+        #[cfg(target_arch = "aarch64")]
+        Backend::Neon => backend_neon::assign_nearest(xs, sorted, out),
+        _ => backend_scalar::assign_nearest(xs, sorted, out),
+    }
+}
+
+pub fn assign_nearest(xs: &[f32], sorted: &[f32], out: &mut [u32]) {
+    assign_nearest_on(active(), xs, sorted, out)
+}
+
+/// Quantize `xs` in place against a sorted codebook; returns the index
+/// stream. Composition of [`assign_nearest`] and a gather — the gather
+/// is the same loop on every backend.
+pub fn snap_to_codebook_on(b: Backend, xs: &mut [f32], sorted: &[f32]) -> Vec<u32> {
+    let mut idx = vec![0u32; xs.len()];
+    assign_nearest_on(b, xs, sorted, &mut idx);
+    for (x, &j) in xs.iter_mut().zip(&idx) {
+        *x = sorted[j as usize];
+    }
+    idx
+}
+
+pub fn snap_to_codebook(xs: &mut [f32], sorted: &[f32]) -> Vec<u32> {
+    snap_to_codebook_on(active(), xs, sorted)
+}
+
+/// Frequency count of `symbols` over `0..alphabet`. Panics (like the
+/// plain indexing loop it replaces) on an out-of-range symbol — the
+/// Huffman encoder owns the alphabet it counts.
+pub fn histogram_u32_on(b: Backend, symbols: &[u32], alphabet: usize) -> Vec<u64> {
+    match resolve(b) {
+        Backend::Scalar => backend_scalar::histogram_u32(symbols, alphabet),
+        // integer adds are commutative: the unrolled multi-table count
+        // is exact on every backend
+        _ => fast::histogram_u32(symbols, alphabet),
+    }
+}
+
+pub fn histogram_u32(symbols: &[u32], alphabet: usize) -> Vec<u64> {
+    histogram_u32_on(active(), symbols, alphabet)
+}
+
+/// Pack the low `bits` bits of each value, LSB-first — byte-identical
+/// to `util::bitio::BitWriter` fed the same stream. Values must fit in
+/// `bits` (1..=32), as the bitio writer also requires.
+pub fn pack_bits_on(b: Backend, values: &[u32], bits: u32) -> Vec<u8> {
+    debug_assert!((1..=32).contains(&bits));
+    match resolve(b) {
+        Backend::Scalar => backend_scalar::pack_bits(values, bits),
+        _ => fast::pack_bits(values, bits),
+    }
+}
+
+pub fn pack_bits(values: &[u32], bits: u32) -> Vec<u8> {
+    pack_bits_on(active(), values, bits)
+}
+
+/// Unpack `n` fixed-width values (LSB-first) — the inverse of
+/// [`pack_bits`], matching `util::bitio::BitReader`. `None` when
+/// `bytes` holds fewer than `n * bits` bits; range checks stay with
+/// the caller, which knows the domain.
+pub fn unpack_bits_on(b: Backend, bytes: &[u8], bits: u32, n: usize) -> Option<Vec<u32>> {
+    debug_assert!((1..=32).contains(&bits));
+    match resolve(b) {
+        Backend::Scalar => backend_scalar::unpack_bits(bytes, bits, n),
+        _ => fast::unpack_bits(bytes, bits, n),
+    }
+}
+
+pub fn unpack_bits(bytes: &[u8], bits: u32, n: usize) -> Option<Vec<u32>> {
+    unpack_bits_on(active(), bytes, bits, n)
+}
+
+/// The weighted-sum fold: `acc[i] += w * f64::from(xs[i])` — exactly
+/// two IEEE roundings per element, never fused. Slices must be the
+/// same length (the accumulator validates before calling).
+pub fn axpy_f64_on(b: Backend, acc: &mut [f64], xs: &[f32], w: f64) {
+    debug_assert_eq!(acc.len(), xs.len());
+    match resolve(b) {
+        #[cfg(target_arch = "x86_64")]
+        Backend::Avx2 => backend_avx2::axpy_f64(acc, xs, w),
+        #[cfg(target_arch = "aarch64")]
+        Backend::Neon => backend_neon::axpy_f64(acc, xs, w),
+        _ => backend_scalar::axpy_f64(acc, xs, w),
+    }
+}
+
+pub fn axpy_f64(acc: &mut [f64], xs: &[f32], w: f64) {
+    axpy_f64_on(active(), acc, xs, w)
+}
+
+// --- shared word-level implementations --------------------------------------
+
+/// Safe, word-parallel bit packing and unrolled histogram shared by
+/// the SIMD backends: no lane intrinsics, but a u64 bit accumulator
+/// (one store per 8 output bytes instead of bit-twiddling per byte)
+/// and a 4-way table split that breaks the store-to-load dependency
+/// chain. Byte- and count-identical to the scalar reference.
+mod fast {
+    pub fn pack_bits(values: &[u32], bits: u32) -> Vec<u8> {
+        let total_bits = values.len() * bits as usize;
+        let mut out = Vec::with_capacity(total_bits.div_ceil(8));
+        let mut acc: u64 = 0;
+        let mut used: u32 = 0;
+        let mask: u64 = if bits == 32 { u32::MAX as u64 } else { (1u64 << bits) - 1 };
+        for &v in values {
+            acc |= (v as u64 & mask) << used;
+            used += bits;
+            while used >= 8 {
+                out.push((acc & 0xFF) as u8);
+                acc >>= 8;
+                used -= 8;
+            }
+        }
+        if used > 0 {
+            out.push((acc & 0xFF) as u8);
+        }
+        out
+    }
+
+    pub fn unpack_bits(bytes: &[u8], bits: u32, n: usize) -> Option<Vec<u32>> {
+        if n.checked_mul(bits as usize)? > bytes.len().checked_mul(8)? {
+            return None;
+        }
+        let mask: u64 = if bits == 32 { u32::MAX as u64 } else { (1u64 << bits) - 1 };
+        let mut out = Vec::with_capacity(n);
+        let mut acc: u64 = 0;
+        let mut have: u32 = 0;
+        let mut pos = 0usize;
+        for _ in 0..n {
+            while have < bits {
+                // the upfront bit-count check guarantees the byte
+                acc |= (bytes[pos] as u64) << have;
+                pos += 1;
+                have += 8;
+            }
+            out.push((acc & mask) as u32);
+            acc >>= bits;
+            have -= bits;
+        }
+        Some(out)
+    }
+
+    pub fn histogram_u32(symbols: &[u32], alphabet: usize) -> Vec<u64> {
+        let mut t0 = vec![0u64; alphabet];
+        let mut t1 = vec![0u64; alphabet];
+        let mut t2 = vec![0u64; alphabet];
+        let mut t3 = vec![0u64; alphabet];
+        let mut quads = symbols.chunks_exact(4);
+        for q in &mut quads {
+            t0[q[0] as usize] += 1;
+            t1[q[1] as usize] += 1;
+            t2[q[2] as usize] += 1;
+            t3[q[3] as usize] += 1;
+        }
+        for &s in quads.remainder() {
+            t0[s as usize] += 1;
+        }
+        for i in 0..alphabet {
+            t0[i] += t1[i] + t2[i] + t3[i];
+        }
+        t0
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn backend_names_round_trip() {
+        for b in [Backend::Scalar, Backend::Avx2, Backend::Neon] {
+            assert_eq!(Backend::from_name(b.name()), Some(b));
+        }
+        assert_eq!(Backend::from_name("sse9"), None);
+    }
+
+    #[test]
+    fn scalar_is_always_available_and_detection_is_runnable() {
+        assert!(Backend::Scalar.available());
+        assert!(detect().available());
+        let avail = available_backends();
+        assert_eq!(avail[0], Backend::Scalar);
+        assert!(avail.contains(&detect()));
+        // the active backend is runnable whatever the env said
+        assert!(active().available());
+    }
+
+    #[test]
+    fn unavailable_backend_requests_resolve_to_scalar_results() {
+        // on any one machine at most one SIMD set is available; the
+        // other must silently produce scalar (= identical) results
+        let xs = [1.5f32, -2.0, 0.0, 3.25];
+        for b in [Backend::Avx2, Backend::Neon] {
+            assert_eq!(abs_max_on(b, &xs), abs_max_on(Backend::Scalar, &xs));
+        }
+    }
+
+    #[test]
+    fn magnitude_keys_order_like_total_cmp_on_abs() {
+        let vals = [0.0f32, -0.0, 1.0, -1.0, 1.5, f32::INFINITY, f32::NAN, 1e-30];
+        for &a in &vals {
+            for &b in &vals {
+                let key_ord = magnitude_key(a).cmp(&magnitude_key(b));
+                let cmp_ord = a.abs().total_cmp(&b.abs());
+                assert_eq!(key_ord, cmp_ord, "{a} vs {b}");
+            }
+        }
+    }
+
+    #[test]
+    fn abs_max_matches_float_fold_on_finite_input() {
+        let xs = [0.5f32, -3.25, 2.0, -0.0, 1.0];
+        assert_eq!(abs_max(&xs), 3.25);
+        assert_eq!(abs_max(&[]), 0.0);
+        assert!(abs_max(&[f32::NAN, 1.0]).is_nan());
+    }
+
+    #[test]
+    fn pack_bits_is_byte_identical_to_bitwriter() {
+        use crate::util::bitio::BitWriter;
+        let vals: Vec<u32> = (0..257).map(|i| (i * 37) as u32 % 2048).collect();
+        for bits in [1u32, 3, 8, 11, 16, 31, 32] {
+            let capped: Vec<u32> = vals
+                .iter()
+                .map(|&v| if bits == 32 { v } else { v & ((1u32 << bits) - 1) })
+                .collect();
+            let mut w = BitWriter::new();
+            for &v in &capped {
+                w.write(v, bits);
+            }
+            let reference = w.into_bytes();
+            for b in available_backends() {
+                assert_eq!(pack_bits_on(b, &capped, bits), reference, "bits={bits} {b:?}");
+            }
+        }
+    }
+
+    #[test]
+    fn unpack_bits_inverts_pack_and_detects_truncation() {
+        let vals: Vec<u32> = (0..100).map(|i| i * 7 % 512).collect();
+        for bits in [9u32, 10, 16] {
+            let bytes = pack_bits(&vals, bits);
+            for b in available_backends() {
+                assert_eq!(
+                    unpack_bits_on(b, &bytes, bits, vals.len()).as_deref(),
+                    Some(vals.as_slice())
+                );
+                assert_eq!(unpack_bits_on(b, &bytes[..bytes.len() - 1], bits, vals.len()), None);
+            }
+        }
+        assert_eq!(unpack_bits(&[], 8, 0).as_deref(), Some(&[][..]));
+        assert_eq!(unpack_bits(&[], 8, 1), None);
+    }
+
+    #[test]
+    fn snap_matches_the_kmeans_reference() {
+        let cb = [-1.0f32, 0.0, 2.0];
+        let mut xs = [-3.0f32, -0.6, -0.49, -0.4, 0.9, 1.1, 9.0];
+        let idx = snap_to_codebook(&mut xs, &cb);
+        assert_eq!(idx, [0, 0, 1, 1, 1, 2, 2]);
+        assert_eq!(xs, [-1.0, -1.0, 0.0, 0.0, 0.0, 2.0, 2.0]);
+    }
+
+    #[test]
+    fn histogram_counts_every_symbol_once() {
+        let symbols: Vec<u32> = (0..1000).map(|i| (i % 7) as u32).collect();
+        for b in available_backends() {
+            let h = histogram_u32_on(b, &symbols, 7);
+            assert_eq!(h.iter().sum::<u64>(), 1000);
+            assert_eq!(h[0], 143);
+            assert_eq!(h[6], 142);
+        }
+    }
+
+    #[test]
+    fn axpy_accumulates_like_the_scalar_loop() {
+        let xs: Vec<f32> = (0..37).map(|i| (i as f32) * 0.37 - 5.0).collect();
+        let w = 0.12345f64;
+        let mut want = vec![0.25f64; xs.len()];
+        for (a, &x) in want.iter_mut().zip(&xs) {
+            *a += w * f64::from(x);
+        }
+        for b in available_backends() {
+            let mut acc = vec![0.25f64; xs.len()];
+            axpy_f64_on(b, &mut acc, &xs, w);
+            assert_eq!(acc, want, "{b:?}");
+        }
+    }
+}

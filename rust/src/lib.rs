@@ -91,6 +91,10 @@
 //! * `--deadline-s <s>` — simulated round reporting deadline in
 //!   seconds; clients that cannot report in time are cut
 //!   (`--set deadline_s=<s>`; 0 disables);
+//! * `--edge-of <N>` — emulate the edge aggregation tier in-process:
+//!   every `N` consecutive participants pre-fold behind one aggregator
+//!   through the same `resolve_edge` path a `worker --edge-of N` uses
+//!   (`--set edge_of=<N>`, sweep axis `edge_of`; 0 disables);
 //! * `fedcompress fleet [--fleet <name>] [--dropout p] [--deadline-s s]`
 //!   — the scenario table: every registered strategy under the fleet
 //!   presets, comparing rounds-to-accuracy and simulated
@@ -199,6 +203,22 @@
 //! `BENCH_rounds.json`. Canonical records stay byte-identical: every
 //! timing is observability, never state.
 //!
+//! # SIMD kernels
+//!
+//! The codec hot paths (magnitude pruning, k-means assignment, Huffman
+//! frequency counting, fixed-width bit packing, the aggregation fold)
+//! run through the [`kernels`] narrow waist: one scalar reference
+//! backend that is the semantic source of truth, plus runtime-detected
+//! AVX2 (x86-64) and NEON (aarch64) backends that are **bit-identical**
+//! to it — SIMD is restricted to order-independent lanes and float
+//! reductions reproduce the scalar association order, so wire bytes,
+//! run keys, and aggregates never depend on the machine. The backend is
+//! selected once at startup (`kernels::active()`); set
+//! `FEDCOMPRESS_KERNELS=scalar|avx2|neon` to override detection (an
+//! unavailable choice warns and falls back). `bench run --area kernels`
+//! prints per-kernel MiB/s, scalar vs detected-SIMD side by side, and
+//! `tests/kernels_equiv.rs` holds the cross-backend equivalence suite.
+//!
 //! # Invariants as lint rules (fedlint)
 //!
 //! Everything above rests on invariants the compiler cannot check:
@@ -232,6 +252,7 @@ pub mod coordinator;
 pub mod data;
 pub mod edge;
 pub mod exp;
+pub mod kernels;
 pub mod linalg;
 pub mod lint;
 pub mod models;

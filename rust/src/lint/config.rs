@@ -241,6 +241,7 @@ mod tests {
             "no-wallclock-state",
             "rng-discipline",
             "float-order",
+            "unsafe-scope",
         ] {
             let rule = cfg.rule(name).unwrap_or_else(|| panic!("missing rule {name}"));
             assert!(!rule.paths.is_empty(), "{name} has no scope");

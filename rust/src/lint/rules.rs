@@ -42,7 +42,7 @@ pub struct RuleDef {
 
 /// The rule registry. Adding a rule = one entry here + a section in
 /// `fedlint.toml` + a fixture under `tests/lint_fixtures/`.
-pub const RULES: [RuleDef; 5] = [
+pub const RULES: [RuleDef; 6] = [
     RuleDef {
         name: "det-map-iter",
         summary: "no HashMap/HashSet where iteration order can cross the wire or land in records",
@@ -67,6 +67,11 @@ pub const RULES: [RuleDef; 5] = [
         name: "float-order",
         summary: "no unannotated f32 narrowing or f32 reductions in codec hot paths",
         check: check_float_order,
+    },
+    RuleDef {
+        name: "unsafe-scope",
+        summary: "unsafe only in src/kernels/backend_*.rs, each site with a safety argument",
+        check: check_unsafe_scope,
     },
 ];
 
@@ -242,6 +247,36 @@ fn check_float_order(ctx: &FileCtx<'_>, out: &mut Vec<RawViolation>) {
     }
 }
 
+/// Files where `unsafe` is sanctioned — the SIMD kernel backends. Even
+/// there, every site must carry a reasoned allow: the rule fires on
+/// each `unsafe` keyword and only a `fedlint:allow(unsafe-scope) --
+/// <safety argument>` suppresses it.
+fn is_kernel_backend(rel: &str) -> bool {
+    rel.starts_with("src/kernels/backend_") && rel.ends_with(".rs")
+}
+
+fn check_unsafe_scope(ctx: &FileCtx<'_>, out: &mut Vec<RawViolation>) {
+    let backend = is_kernel_backend(ctx.rel);
+    for t in ctx.toks {
+        if t.kind == TokKind::Ident && t.text == "unsafe" && !in_ranges(ctx.test_ranges, t.line) {
+            let message = if backend {
+                "unsafe in a kernel backend — sanctioned, but every site must state \
+                 its safety argument in a fedlint:allow(unsafe-scope) comment"
+                    .to_string()
+            } else {
+                "unsafe outside src/kernels/backend_*.rs — the SIMD kernel backends \
+                 are the only sanctioned unsafe scope in this crate"
+                    .to_string()
+            };
+            out.push(RawViolation {
+                rule: "unsafe-scope",
+                line: t.line,
+                message,
+            });
+        }
+    }
+}
+
 /// `toks[i]` starts a `Name::method` path call: `Name :: method`.
 fn path_call(toks: &[Tok], i: usize, method: &str) -> bool {
     let p = |k: usize, text: &str| {
@@ -270,9 +305,22 @@ pub struct Allow {
 
 const MARKER: &str = "fedlint:allow";
 
+/// Doc comments (`///`, `//!`, `/**`, `/*!`) *describe* the allow
+/// contract — module and rule docs quote the syntax verbatim, as this
+/// file's own header does — they never carry it. Treating them as
+/// suppressions would turn every explanation of the contract into a
+/// `bad-allow` or a stale allow.
+fn is_doc_comment(text: &str) -> bool {
+    text.starts_with("///")
+        || text.starts_with("//!")
+        || text.starts_with("/**")
+        || text.starts_with("/*!")
+}
+
 /// Extract allow comments; malformed ones (missing rule list, unknown
 /// rule, missing `-- reason`) become `bad-allow` violations — a broken
-/// suppression must never silently suppress.
+/// suppression must never silently suppress. Doc comments are ignored:
+/// only a plain `//` (or `/* */`) comment can suppress.
 pub fn parse_allows(
     comments: &[Comment],
     test_ranges: &[(u32, u32)],
@@ -287,6 +335,9 @@ pub fn parse_allows(
         });
     };
     for c in comments {
+        if is_doc_comment(&c.text) {
+            continue;
+        }
         let Some(pos) = c.text.find(MARKER) else {
             continue;
         };
@@ -427,6 +478,32 @@ mod tests {
     }
 
     #[test]
+    fn unsafe_scope_flags_every_site_and_distinguishes_backends() {
+        let src = "pub fn f() { unsafe { g() } }\n\
+                   unsafe fn g() {}\n\
+                   #[cfg(test)]\nmod tests { fn t() { unsafe { h() } } }\n";
+        let hits = run("unsafe-scope", src);
+        assert_eq!(hits.iter().map(|v| v.line).collect::<Vec<_>>(), vec![1, 2]);
+        assert!(hits[0].message.contains("only sanctioned unsafe scope"));
+
+        // same tokens under a backend path: still flagged (the allow
+        // comment is what discharges it), but with the backend message
+        let lexed = lex(src);
+        let ranges = test_line_ranges(&lexed.toks);
+        let ctx = FileCtx {
+            rel: "src/kernels/backend_avx2.rs",
+            toks: &lexed.toks,
+            test_ranges: &ranges,
+        };
+        let mut out = Vec::new();
+        check_unsafe_scope(&ctx, &mut out);
+        assert_eq!(out.len(), 2);
+        assert!(out[0].message.contains("safety argument"));
+
+        assert!(run("unsafe-scope", "let s = \"unsafe\"; // unsafe in a str").is_empty());
+    }
+
+    #[test]
     fn allow_comments_parse_and_malformed_ones_are_violations() {
         let lexed = lex(
             "let a = 1; // fedlint:allow(det-map-iter) -- keyed iteration is sorted first\n\
@@ -443,5 +520,23 @@ mod tests {
         assert_eq!(allows[1].rules.len(), 2);
         let bad_lines: Vec<u32> = bad.iter().map(|v| v.line).collect();
         assert_eq!(bad_lines, vec![4, 5, 6], "{bad:?}");
+    }
+
+    #[test]
+    fn doc_comments_quoting_the_contract_are_not_allows() {
+        // rule/module docs spell out the syntax — `// fedlint:allow(rule)
+        // -- why` — and must parse as documentation, not as malformed or
+        // stale suppressions
+        let lexed = lex(
+            "//! Suppress with `// fedlint:allow(rule) -- reason`.\n\
+             /// the `fedlint:allow` contract\n\
+             /** fedlint:allow(det-map-iter) -- quoted in a block doc */\n\
+             /*! fedlint:allow -- inner block doc */\n\
+             let a = 1; // fedlint:allow(det-map-iter) -- real, trailing\n",
+        );
+        let (allows, bad) = parse_allows(&lexed.comments, &[]);
+        assert!(bad.is_empty(), "{bad:?}");
+        assert_eq!(allows.len(), 1, "{allows:?}");
+        assert_eq!(allows[0].line, 5);
     }
 }

@@ -66,6 +66,9 @@ fn build_config(args: &Args) -> Result<FedConfig> {
     if let Some(s) = args.flag("deadline-s") {
         cfg.set("deadline_s", s)?;
     }
+    if let Some(n) = args.flag("edge-of") {
+        cfg.set("edge_of", n)?;
+    }
     // transport handshake guard (sugar over --set handshake_timeout_s=)
     if let Some(s) = args.flag("handshake-timeout-s") {
         cfg.set("handshake_timeout_s", s)?;

@@ -735,6 +735,7 @@ fn put_cfg(v: &mut Vec<u8>, cfg: &FedConfig) {
     put_str(v, cfg.fleet.preset.name());
     put_f64(v, cfg.fleet.dropout);
     put_f64(v, cfg.fleet.deadline_s);
+    put_u64(v, cfg.fleet.edge_of as u64);
     put_u64(v, cfg.seed);
     put_f64(v, cfg.handshake_timeout_s);
 }
@@ -776,6 +777,7 @@ fn read_cfg(c: &mut Cur<'_>) -> Result<FedConfig, ProtoError> {
                 .map_err(|e| malformed(e.to_string()))?,
             dropout: c.f64(w)?,
             deadline_s: c.f64(w)?,
+            edge_of: c.u64(w)? as usize,
         },
         seed: c.u64(w)?,
         handshake_timeout_s: c.f64(w)?,

@@ -33,9 +33,14 @@ use crate::baselines::wire::WireBlob;
 use crate::client::trainer::{train_local, ClientOutcome};
 use crate::clustering::CentroidState;
 use crate::config::FedConfig;
+use crate::coordinator::accumulate::{AggError, AggFold, FedAvgFold};
 use crate::coordinator::events::DropPhase;
-use crate::coordinator::server::{client_stream, FederatedData, RoundIngest};
-use crate::coordinator::strategy::{ClientTrainOpts, FedStrategy, RoundContext, UploadInput};
+use crate::coordinator::server::{
+    client_stream, EdgeCutMember, EdgeMember, EdgePartial, FederatedData, RoundIngest,
+};
+use crate::coordinator::strategy::{
+    ClientTrainOpts, ClientUpdate, FedStrategy, RoundContext, UploadInput,
+};
 use crate::runtime::Engine;
 use crate::sim::ClientFate;
 use crate::util::rng::Rng;
@@ -235,6 +240,10 @@ impl Transport for InProcess {
         };
         ingest.add_phase_ns("encode_up", phase_sw.lap_ns());
 
+        if cfg.fleet.edge_of > 0 {
+            return resolve_edge_groups(cfg.fleet.edge_of, trained, blobs, ingest);
+        }
+
         // slot order here is already canonical, so the streaming fold
         // never needs to park an in-process upload
         for (t, blob) in trained.into_iter().zip(blobs) {
@@ -249,5 +258,107 @@ impl Transport for InProcess {
             ingest.resolve(t.slot, ClientResult::Upload(Box::new(up)))?;
         }
         Ok(())
+    }
+}
+
+/// In-process emulation of the edge tier (`fleet.edge_of > 0`): every
+/// `edge_of` consecutive participant slots share one aggregator, which
+/// deadline-cuts each member with the same pure clock
+/// [`RoundIngest::resolve_edge`] re-derives, folds the survivors into
+/// one sample-weighted partial, and commits the group through a single
+/// `resolve_edge` call — the semantics `net::worker::serve_round_edge`
+/// ships over TCP, so a sweep over `edge_of` agrees with a real edge
+/// fleet. Fault-dropped slots were resolved individually before
+/// training and never reach their group; a group losing every member
+/// that way has nothing to say and is skipped.
+fn resolve_edge_groups(
+    edge_of: usize,
+    trained: Vec<TrainedClient>,
+    blobs: Vec<Result<WireBlob>>,
+    ingest: &mut RoundIngest<'_>,
+) -> Result<()> {
+    let n_groups = ingest.slots().div_ceil(edge_of);
+    let mut groups: Vec<Vec<(TrainedClient, WireBlob)>> =
+        (0..n_groups).map(|_| Vec::new()).collect();
+    for (t, blob) in trained.into_iter().zip(blobs) {
+        let g = t.slot / edge_of;
+        groups[g].push((t, blob?));
+    }
+    for group in groups {
+        if group.is_empty() {
+            continue;
+        }
+        let partial = fold_edge_group(group, ingest)?;
+        ingest.resolve_edge(partial).map_err(|e| anyhow::anyhow!("in-process edge: {e}"))?;
+    }
+    Ok(())
+}
+
+/// Deadline-cut and fold one edge group into the partial its aggregator
+/// would ship. Mirrors `serve_round_edge` exactly, including the
+/// zero-weight case: survivors whose sample counts sum to zero fold to
+/// a zero vector with zero weight, which aggregates to nothing.
+fn fold_edge_group(
+    group: Vec<(TrainedClient, WireBlob)>,
+    ingest: &RoundIngest<'_>,
+) -> Result<EdgePartial> {
+    let mut fold: Box<dyn AggFold> = Box::new(FedAvgFold::new());
+    let mut members = Vec::new();
+    let mut cut = Vec::new();
+    for (t, blob) in group {
+        let up_bytes = blob.bytes;
+        if ingest.member_over_deadline(t.slot, up_bytes) {
+            cut.push(EdgeCutMember {
+                client: t.client,
+                up_bytes,
+            });
+            continue;
+        }
+        fold.fold(&ClientUpdate {
+            client: t.client,
+            theta: blob.theta,
+            mu: t.outcome.mu,
+            score: t.outcome.score,
+            n: t.outcome.n,
+        })
+        .map_err(|e| anyhow::anyhow!("edge fold: {e}"))?;
+        members.push(EdgeMember {
+            client: t.client,
+            n: t.outcome.n,
+            up_bytes,
+            score: t.outcome.score,
+            mean_ce: t.outcome.mean_ce,
+        });
+    }
+    if members.is_empty() {
+        // every member cut: the coordinator only needs the cut report
+        return Ok(EdgePartial {
+            theta: Vec::new(),
+            mu: Vec::new(),
+            score: 0.0,
+            total_n: 0,
+            members,
+            cut,
+        });
+    }
+    match fold.finish() {
+        Ok(agg) => Ok(EdgePartial {
+            theta: agg.theta,
+            mu: agg.mu,
+            score: agg.score,
+            total_n: agg.total_n,
+            members,
+            cut,
+        }),
+        // survivors with zero total sample weight fold to nothing
+        Err(AggError::ZeroWeight) => Ok(EdgePartial {
+            theta: vec![0.0; ingest.expected_params()],
+            mu: vec![0.0; ingest.expected_mu()],
+            score: 0.0,
+            total_n: 0,
+            members,
+            cut,
+        }),
+        Err(e) => anyhow::bail!("edge fold finish: {e}"),
     }
 }

@@ -132,14 +132,24 @@ pub struct FleetConfig {
     /// Round reporting deadline in simulated seconds; clients that
     /// cannot report in time are cut (`--deadline-s`). 0 disables it.
     pub deadline_s: f64,
+    /// Edge-tier aggregation: group every `edge_of` consecutive
+    /// selected clients behind one edge aggregator that pre-folds their
+    /// uploads before the coordinator sees them (`--edge-of`, sweep
+    /// axis `edge_of`). 0 disables the tier — every client uploads
+    /// directly, the pre-sim semantics.
+    pub edge_of: usize,
 }
 
 impl FleetConfig {
     /// True when the config cannot perturb a run: ideal fleet, no extra
-    /// dropout. (A deadline on an ideal gigabit fleet can still cut
-    /// clients, so it keeps the config non-trivial.)
+    /// dropout, no edge tier. (A deadline on an ideal gigabit fleet can
+    /// still cut clients, so it keeps the config non-trivial; an edge
+    /// tier reorders the aggregation tree, so it is never trivial.)
     pub fn is_ideal(&self) -> bool {
-        self.preset == FleetPreset::Ideal && self.dropout == 0.0 && self.deadline_s == 0.0
+        self.preset == FleetPreset::Ideal
+            && self.dropout == 0.0
+            && self.deadline_s == 0.0
+            && self.edge_of == 0
     }
 }
 
@@ -251,6 +261,11 @@ mod tests {
             ..FleetConfig::default()
         };
         assert!(!perturbed.is_ideal());
+        let edged = FleetConfig {
+            edge_of: 8,
+            ..FleetConfig::default()
+        };
+        assert!(!edged.is_ideal(), "an edge tier reorders aggregation");
     }
 
     #[test]

@@ -108,6 +108,7 @@ mod tests {
             preset: FleetPreset::Mobile,
             dropout: 0.1,
             deadline_s: 30.0,
+            edge_of: 0,
         };
         let sim = FleetSim::new(&cfg, 8, 42, 3.0e6);
         assert_eq!(sim.profile().clients.len(), 8);

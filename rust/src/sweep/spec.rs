@@ -396,6 +396,28 @@ mod tests {
         );
     }
 
+    /// The edge tier sweeps like any other fleet knob: `edge_of` routes
+    /// through `FedConfig::set`, lands in the fleet config, and — being
+    /// part of the wire config image — separates the content keys, so a
+    /// flat run and its edge-tiered siblings never collide in the store.
+    #[test]
+    fn edge_of_axis_expands_with_distinct_keys() {
+        let mut spec = SweepSpec {
+            strategies: vec!["fedavg".into()],
+            ..SweepSpec::default()
+        };
+        spec.push_axis("edge_of", "0,8,64").unwrap();
+        let base = FedConfig::quick("cifar10");
+        let jobs = spec.expand(&base, &StrategyRegistry::builtin()).unwrap();
+        assert_eq!(jobs.len(), 3);
+        let keys: std::collections::BTreeSet<u64> = jobs.iter().map(|j| j.key).collect();
+        assert_eq!(keys.len(), 3, "edge_of must be content-addressed");
+        for (job, want) in jobs.iter().zip([0usize, 8, 64]) {
+            assert_eq!(job.cfg.fleet.edge_of, want);
+            assert_eq!(job.cfg.fleet.is_ideal(), want == 0);
+        }
+    }
+
     #[test]
     fn bad_axis_key_fails_at_expansion() {
         let mut spec = SweepSpec::default();

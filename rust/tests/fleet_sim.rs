@@ -79,6 +79,7 @@ fn ideal_sim_never_perturbs_and_faulty_sim_is_reproducible() {
         preset: FleetPreset::Mobile,
         dropout: 0.3,
         deadline_s: 0.0,
+        edge_of: 0,
     };
     let a = FleetSim::new(&faulty_cfg, 6, 42, 1.0);
     let b = FleetSim::new(&faulty_cfg, 6, 42, 1.0);
@@ -219,6 +220,52 @@ fn impossible_deadline_stalls_training() {
         assert!((m.round_sim_ms - 1e3 * cfg.fleet.deadline_s).abs() < 1e-9);
         // the model the server evaluates never changes
         assert_eq!(m.accuracy, r.rounds[0].accuracy);
+    }
+}
+
+// ---------------------------------------------------------------------------
+// engine-gated: the in-process edge tier
+// ---------------------------------------------------------------------------
+
+/// `edge_of > 0` routes the in-process transport through the same
+/// pre-fold/`resolve_edge` path a TCP edge worker uses. The run stays
+/// deterministic, and — because members ship the same dense blobs
+/// either way — a `fedavg` edge run's byte accounting matches the flat
+/// run exactly; only the fold tree (and hence theta) changes.
+#[test]
+fn edge_tier_runs_are_deterministic_and_ledger_flat_comparable() {
+    let Some(engine) = engine() else { return };
+    let flat_cfg = tiny_cfg("cifar10");
+    let mut edge_cfg = flat_cfg.clone();
+    edge_cfg.set("edge_of", "2").unwrap(); // 3 clients -> groups of 2 + 1
+    assert!(!edge_cfg.fleet.is_ideal());
+
+    let data = build_data(&engine, &edge_cfg).unwrap();
+    let e1 = run_federated_with_data(&engine, &edge_cfg, "fedavg", &data).unwrap();
+    let e2 = run_federated_with_data(&engine, &edge_cfg, "fedavg", &data).unwrap();
+    assert_eq!(e1.final_theta, e2.final_theta);
+    assert_eq!(e1.events.to_jsonl(), e2.events.to_jsonl());
+    assert_eq!(e1.total_bytes(), e2.total_bytes());
+
+    let flat = run_federated_with_data(&engine, &flat_cfg, "fedavg", &data).unwrap();
+    assert_eq!(
+        e1.ledger.bytes_in(Direction::Up),
+        flat.ledger.bytes_in(Direction::Up),
+        "dense uploads are size-constant, so the ledger is tier-invariant"
+    );
+    assert_eq!(
+        e1.ledger.bytes_in(Direction::Down),
+        flat.ledger.bytes_in(Direction::Down)
+    );
+    assert_eq!(
+        e1.events.of_kind("upload").count(),
+        flat.events.of_kind("upload").count(),
+        "an ideal fleet loses nobody, tiered or not"
+    );
+    for m in &e1.rounds {
+        assert_eq!(m.dropped, 0);
+        assert_eq!(m.stragglers, 0);
+        assert!(m.round_sim_ms > 0.0);
     }
 }
 

@@ -1,0 +1,267 @@
+//! Backend equivalence: every available kernel backend must be
+//! **bit-identical** to the scalar reference on every input — wire
+//! bytes and run keys are content-addressed, so a single diverging
+//! lane would fork the whole experiment record space.
+//!
+//! Sizes sweep 0..=17 plus 64+r for r in 0..8 and a few larger ones,
+//! so every vector width in use (8-lane f32, 4-lane f64, 2-lane
+//! converts) sees every possible remainder tail. Inputs are seeded
+//! random floats salted with the unfriendly cases: NaN, infinities,
+//! signed zeros, and denormals.
+
+use fedcompress::kernels::{
+    abs_max_on, assign_nearest_on, available_backends, axpy_f64_on, histogram_u32_on,
+    magnitude_keys_on, pack_bits_on, snap_to_codebook_on, threshold_count_on, unpack_bits_on,
+    Backend,
+};
+use fedcompress::util::rng::Rng;
+
+/// Every size in 0..=17 (all 8-lane and 4-lane tails at small n),
+/// every remainder class around 64, and a few larger payloads.
+fn sizes() -> Vec<usize> {
+    let mut v: Vec<usize> = (0..=17).collect();
+    v.extend((0..8).map(|r| 64 + r));
+    v.extend([255, 1000, 4096, 4097]);
+    v
+}
+
+/// Random weights with the special values sprinkled deterministically.
+fn weights(rng: &mut Rng, n: usize, specials: bool) -> Vec<f32> {
+    let mut xs: Vec<f32> = (0..n).map(|_| rng.normal() * 2.0).collect();
+    if specials {
+        let table = [
+            f32::NAN,
+            f32::INFINITY,
+            f32::NEG_INFINITY,
+            0.0,
+            -0.0,
+            f32::MIN_POSITIVE / 2.0, // denormal
+            -1.0e-42,
+            f32::MAX,
+        ];
+        for (i, x) in xs.iter_mut().enumerate() {
+            if i % 7 == 3 {
+                *x = table[i % table.len()];
+            }
+        }
+    }
+    xs
+}
+
+fn simd_backends() -> Vec<Backend> {
+    available_backends()
+        .into_iter()
+        .filter(|&b| b != Backend::Scalar)
+        .collect()
+}
+
+fn bits_of(v: &[f32]) -> Vec<u32> {
+    v.iter().map(|x| x.to_bits()).collect()
+}
+
+#[test]
+fn magnitude_keys_match_scalar_on_every_tail() {
+    let mut rng = Rng::new(21);
+    for n in sizes() {
+        let xs = weights(&mut rng, n, true);
+        let mut want = vec![0u32; n];
+        magnitude_keys_on(Backend::Scalar, &xs, &mut want);
+        for b in simd_backends() {
+            let mut got = vec![0u32; n];
+            magnitude_keys_on(b, &xs, &mut got);
+            assert_eq!(got, want, "{b:?} n={n}");
+        }
+    }
+}
+
+#[test]
+fn abs_max_matches_scalar_bit_for_bit() {
+    let mut rng = Rng::new(22);
+    for n in sizes() {
+        for specials in [false, true] {
+            let xs = weights(&mut rng, n, specials);
+            let want = abs_max_on(Backend::Scalar, &xs);
+            for b in simd_backends() {
+                let got = abs_max_on(b, &xs);
+                assert_eq!(got.to_bits(), want.to_bits(), "{b:?} n={n} specials={specials}");
+            }
+        }
+    }
+}
+
+#[test]
+fn threshold_count_matches_scalar_at_every_threshold_class() {
+    let mut rng = Rng::new(23);
+    for n in sizes() {
+        let xs = weights(&mut rng, n, true);
+        let mut keys = vec![0u32; n];
+        magnitude_keys_on(Backend::Scalar, &xs, &mut keys);
+        let mut thresholds = vec![0u32, 0x7FFF_FFFF];
+        if n > 0 {
+            thresholds.push(keys[n / 2]);
+            thresholds.push(keys[0]);
+        }
+        for t in thresholds {
+            let want = threshold_count_on(Backend::Scalar, &keys, t);
+            for b in simd_backends() {
+                assert_eq!(threshold_count_on(b, &keys, t), want, "{b:?} n={n} t={t:#x}");
+            }
+        }
+    }
+}
+
+#[test]
+fn assign_nearest_matches_the_binary_search_everywhere() {
+    let mut rng = Rng::new(24);
+    // codebook sizes: 1 (degenerate), paper range, the >64+1 scalar-
+    // delegation threshold on both sides, and equal-centroid ties
+    for c in [1usize, 2, 3, 15, 16, 64, 65, 66, 100] {
+        let mut cb: Vec<f32> = (0..c).map(|_| rng.normal()).collect();
+        cb.sort_by(f32::total_cmp);
+        for n in sizes() {
+            let xs = weights(&mut rng, n, true);
+            let mut want = vec![0u32; n];
+            assign_nearest_on(Backend::Scalar, &xs, &cb, &mut want);
+            for b in simd_backends() {
+                let mut got = vec![0u32; n];
+                assign_nearest_on(b, &xs, &cb, &mut got);
+                assert_eq!(got, want, "{b:?} c={c} n={n}");
+            }
+        }
+    }
+    // repeated centroids: boundary ties must break identically
+    let cb = [-1.0f32, 0.0, 0.0, 0.0, 2.0];
+    let xs = weights(&mut rng, 129, true);
+    let mut want = vec![0u32; xs.len()];
+    assign_nearest_on(Backend::Scalar, &xs, &cb, &mut want);
+    for b in simd_backends() {
+        let mut got = vec![0u32; xs.len()];
+        assign_nearest_on(b, &xs, &cb, &mut got);
+        assert_eq!(got, want, "{b:?} tied codebook");
+    }
+}
+
+#[test]
+fn snap_matches_scalar_indices_and_weights() {
+    let mut rng = Rng::new(25);
+    let mut cb: Vec<f32> = (0..16).map(|_| rng.normal()).collect();
+    cb.sort_by(f32::total_cmp);
+    for n in sizes() {
+        let xs = weights(&mut rng, n, true);
+        let mut want_w = xs.clone();
+        let want_idx = snap_to_codebook_on(Backend::Scalar, &mut want_w, &cb);
+        for b in simd_backends() {
+            let mut got_w = xs.clone();
+            let got_idx = snap_to_codebook_on(b, &mut got_w, &cb);
+            assert_eq!(got_idx, want_idx, "{b:?} n={n}");
+            assert_eq!(bits_of(&got_w), bits_of(&want_w), "{b:?} n={n}");
+        }
+    }
+}
+
+#[test]
+fn histogram_matches_scalar_counts() {
+    let mut rng = Rng::new(26);
+    for n in sizes() {
+        for alphabet in [1usize, 2, 17, 256] {
+            let symbols: Vec<u32> = (0..n).map(|_| rng.below(alphabet) as u32).collect();
+            let want = histogram_u32_on(Backend::Scalar, &symbols, alphabet);
+            for b in simd_backends() {
+                assert_eq!(
+                    histogram_u32_on(b, &symbols, alphabet),
+                    want,
+                    "{b:?} n={n} alphabet={alphabet}"
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn pack_bits_bytes_match_scalar_for_every_width() {
+    let mut rng = Rng::new(27);
+    for n in sizes() {
+        for bits in [1u32, 2, 3, 7, 8, 9, 11, 13, 16, 17, 24, 31, 32] {
+            let values: Vec<u32> = (0..n)
+                .map(|_| {
+                    let v = rng.next_u64() as u32;
+                    if bits == 32 {
+                        v
+                    } else {
+                        v & ((1u32 << bits) - 1)
+                    }
+                })
+                .collect();
+            let want = pack_bits_on(Backend::Scalar, &values, bits);
+            for b in simd_backends() {
+                assert_eq!(pack_bits_on(b, &values, bits), want, "{b:?} n={n} bits={bits}");
+            }
+        }
+    }
+}
+
+#[test]
+fn unpack_bits_matches_scalar_including_truncation_verdicts() {
+    let mut rng = Rng::new(28);
+    for n in sizes() {
+        for bits in [1u32, 3, 8, 11, 16, 31, 32] {
+            let values: Vec<u32> = (0..n)
+                .map(|_| {
+                    let v = rng.next_u64() as u32;
+                    if bits == 32 {
+                        v
+                    } else {
+                        v & ((1u32 << bits) - 1)
+                    }
+                })
+                .collect();
+            let bytes = pack_bits_on(Backend::Scalar, &values, bits);
+            // exact, truncated-by-one, padded-by-one: all must agree
+            let mut padded = bytes.clone();
+            padded.push(0xAB);
+            let mut cases: Vec<&[u8]> = vec![&bytes, &padded];
+            if !bytes.is_empty() {
+                cases.push(&bytes[..bytes.len() - 1]);
+            }
+            for case in cases {
+                let want = unpack_bits_on(Backend::Scalar, case, bits, n);
+                for b in simd_backends() {
+                    assert_eq!(unpack_bits_on(b, case, bits, n), want, "{b:?} n={n} bits={bits}");
+                }
+                if case.len() >= bytes.len() {
+                    assert_eq!(want.as_deref(), Some(values.as_slice()));
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn axpy_reproduces_the_scalar_rounding_sequence() {
+    let mut rng = Rng::new(29);
+    for n in sizes() {
+        for specials in [false, true] {
+            let xs = weights(&mut rng, n, specials);
+            let init: Vec<f64> = (0..n).map(|_| f64::from(rng.normal())).collect();
+            for w in [0.0f64, 1.0, 0.1234567, -3.75, 1e-300] {
+                let mut want = init.clone();
+                axpy_f64_on(Backend::Scalar, &mut want, &xs, w);
+                let want_bits: Vec<u64> = want.iter().map(|x| x.to_bits()).collect();
+                for b in simd_backends() {
+                    let mut got = init.clone();
+                    axpy_f64_on(b, &mut got, &xs, w);
+                    let got_bits: Vec<u64> = got.iter().map(|x| x.to_bits()).collect();
+                    assert_eq!(got_bits, want_bits, "{b:?} n={n} w={w}");
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn explicitly_requested_scalar_env_value_is_honored() {
+    // `active()` latches on first use, so we only assert the latched
+    // value is a backend this machine can actually run — the CI matrix
+    // forces FEDCOMPRESS_KERNELS=scalar for a full-suite pass.
+    assert!(fedcompress::kernels::active().available());
+}

@@ -1,0 +1,21 @@
+//! unsafe-scope fixture. Expected (scoped as src/fake/):
+//!   deny hits on lines 6 and 9; line 13 suppressed by line 12.
+//!   String literals and #[cfg(test)] modules never trip the rule.
+
+pub fn raw_read(p: *const u32) -> u32 {
+    unsafe { p.read() }
+}
+
+pub unsafe fn lane_load(p: *const u32) -> u32 {
+    p.read()
+}
+
+// fedlint:allow(unsafe-scope) -- pointer proven in-bounds by the caller's loop
+pub fn sanctioned(p: *const u32) -> u32 { unsafe { p.read() } }
+
+pub fn named() -> &'static str { "unsafe" }
+
+#[cfg(test)]
+mod tests {
+    pub fn t(p: *const u32) -> u32 { unsafe { p.read() } }
+}

@@ -21,8 +21,8 @@ fn fixture(name: &str) -> String {
     std::fs::read_to_string(&p).unwrap_or_else(|e| panic!("reading {}: {e}", p.display()))
 }
 
-/// All five rules at deny over `src/` — fixtures are linted as if they
-/// lived at `src/fake/<name>`.
+/// Every registered rule at deny over `src/` — fixtures are linted as
+/// if they lived at `src/fake/<name>`.
 fn deny_all() -> LintConfig {
     let rules = lint::rule_names()
         .iter()
@@ -81,6 +81,36 @@ fn float_order_fixture_hits_expected_lines() {
 }
 
 #[test]
+fn unsafe_scope_fixture_hits_expected_lines() {
+    let (v, allowed) = lint_fixture("unsafe_scope.rs");
+    assert_eq!(hits(&v, "unsafe-scope"), vec![6, 9], "{v:?}");
+    assert_eq!(allowed.len(), 1, "{allowed:?}");
+    assert_eq!((allowed[0].line, allowed[0].uses), (12, 1));
+    // outside the backend carve-out the message names the sanctioned scope
+    assert!(
+        v.iter().all(|x| x.message.contains("backend")),
+        "{v:?}"
+    );
+}
+
+#[test]
+fn unsafe_scope_backend_files_still_require_reasoned_allows() {
+    // the same source under src/kernels/backend_*.rs: the rule still
+    // fires per site (only the allow discharges it), with the backend
+    // wording; a properly argued allow suppresses exactly one site
+    let src = "pub fn f(p: *const u32) -> u32 {\n\
+               // fedlint:allow(unsafe-scope) -- caller keeps p in bounds\n\
+               unsafe { p.read() }\n\
+               }\n\
+               pub fn g(p: *const u32) -> u32 { unsafe { p.read() } }\n";
+    let (v, allowed) = lint::lint_source("src/kernels/backend_avx2.rs", src, &deny_all(), None);
+    assert_eq!(hits(&v, "unsafe-scope"), vec![5], "{v:?}");
+    assert!(v[0].message.contains("safety argument"), "{v:?}");
+    assert_eq!(allowed.len(), 1, "{allowed:?}");
+    assert_eq!((allowed[0].line, allowed[0].uses), (2, 1));
+}
+
+#[test]
 fn clean_fixture_is_clean() {
     let (v, allowed) = lint_fixture("clean.rs");
     assert!(v.is_empty(), "{v:?}");
@@ -112,6 +142,7 @@ fn scope_boundaries_gate_every_fixture() {
         "no_wallclock.rs",
         "rng_discipline.rs",
         "float_order.rs",
+        "unsafe_scope.rs",
         "bad_allow.rs",
     ] {
         let src = fixture(name);
